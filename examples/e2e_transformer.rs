@@ -1,0 +1,281 @@
+//! End-to-end driver (DESIGN.md §6): a full transformer block executed
+//! across a simulated multi-GPU mesh with REAL numerics, plus the
+//! paper-scale performance comparison for the same layer.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_transformer
+//! ```
+//!
+//! Stage 1 (validation scale, real compute): one fused plan per rank that
+//!   * ring-rotates K/V shards and folds each arrival with the online-
+//!     softmax Pallas kernel (RingAttention),
+//!   * finalizes the attention output,
+//!   * computes a tensor-parallel FFN shard with the fused
+//!     gelu(x@W1+b1)@W2 artifact, and
+//!   * AllReduces the partial FFN outputs with the partition schedule
+//!     (Fig. 4d) — all inside ONE executable plan with chunk-level overlap.
+//!   Every rank's outputs are verified against host oracles.
+//!
+//! Stage 2 (paper scale): the same layer (RingAttention + GEMM-AR FFN,
+//!   Llama-3-8B dimensions, 8 GPUs) through the autotuner vs the
+//!   kernel-level and sequential baselines on the calibrated model. These
+//!   numbers are the ones recorded in EXPERIMENTS.md §E2E.
+
+use std::collections::HashMap;
+
+use syncopate::autotune::{self, Budget};
+use syncopate::baselines::{self, Baseline};
+use syncopate::chunk::{DType, TensorTable};
+use syncopate::codegen::{compile, CallSpec, RankComputeInput, Realization};
+use syncopate::coordinator::execases::{run_and_verify, Check, ExecCase};
+use syncopate::depgraph::{plan_rank_sync, ChunkTileMap};
+use syncopate::exec::verify::{host_attention, host_gelu, host_gemm, host_sum};
+use syncopate::exec::BufferStore;
+use syncopate::kernel::grid::{Axis, TileGrid};
+use syncopate::kernel::scheduler::{IntraOrder, TileScheduler};
+use syncopate::runtime::Runtime;
+use syncopate::schedule::{templates, OpRef};
+use syncopate::sim::engine::simulate;
+use syncopate::topo::Topology;
+use syncopate::util::fmt_us;
+use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_8B};
+
+const SQ: usize = 64; // per-rank query shard
+const D: usize = 64; // head dim
+const FM: usize = 64; // FFN rows
+const FD: usize = 128; // FFN hidden
+const FF: usize = 64; // per-rank FFN intermediate shard
+
+/// Build the fused transformer-block exec case for `world` ranks.
+fn transformer_block_case(world: usize, seed: u64) -> syncopate::Result<ExecCase> {
+    let topo = Topology::h100_node(world)?;
+    let s_total = world * SQ;
+
+    // --- tensors ---------------------------------------------------------
+    let mut table = TensorTable::new();
+    let k = table.declare("k", &[s_total, D], DType::F32)?;
+    let v = table.declare("v", &[s_total, D], DType::F32)?;
+    for (name, shape) in [
+        ("q", vec![SQ, D]),
+        ("acc", vec![SQ, D]),
+        ("m", vec![SQ]),
+        ("l", vec![SQ]),
+        ("o", vec![SQ, D]),
+        ("x", vec![FM, FD]),
+        ("w1", vec![FD, FF]),
+        ("b1", vec![FF]),
+        ("w2", vec![FF, FD]),
+    ] {
+        table.declare(name, &shape, DType::F32)?;
+    }
+    let y = table.declare("y", &[FM, FD], DType::F32)?;
+
+    // --- communication schedule: KV rings + partition-AllReduce(y) -------
+    let mut sched = templates::all_gather_ring(&table, k, 0, world)?;
+    sched.append(&templates::all_gather_ring(&table, v, 0, world)?)?;
+    sched.append(&templates::all_reduce_partition(&table, y, 0, world)?)?;
+
+    // --- grid: w attention-step tiles + 1 FFN tile ------------------------
+    let grid = TileGrid::new(vec![Axis::new("T", (world + 1) * SQ, SQ)?])?;
+    let ffn_tile = world; // last tile id
+
+    // --- deterministic data + oracles -------------------------------------
+    let mut rng = syncopate::util::Rng::new(seed);
+    let qs: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(SQ * D)).collect();
+    let k_glob = rng.vec_f32(s_total * D);
+    let v_glob = rng.vec_f32(s_total * D);
+    let x_glob = rng.vec_f32(FM * FD);
+    let w1s: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(FD * FF)).collect();
+    let b1s: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(FF)).collect();
+    let w2s: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(FF * FD)).collect();
+
+    let mut store = BufferStore::new(world);
+    for (id, decl) in table.iter() {
+        let _ = id;
+        store.declare(&decl.name, &decl.shape)?;
+    }
+    for r in 0..world {
+        let mut kr = vec![0.0f32; s_total * D];
+        let mut vr = vec![0.0f32; s_total * D];
+        let a = r * SQ * D;
+        kr[a..a + SQ * D].copy_from_slice(&k_glob[a..a + SQ * D]);
+        vr[a..a + SQ * D].copy_from_slice(&v_glob[a..a + SQ * D]);
+        store.set(r, "k", &kr)?;
+        store.set(r, "v", &vr)?;
+        store.set(r, "q", &qs[r])?;
+        store.set(r, "m", &vec![-1e30f32; SQ])?;
+        store.set(r, "x", &x_glob)?;
+        store.set(r, "w1", &w1s[r])?;
+        store.set(r, "b1", &b1s[r])?;
+        store.set(r, "w2", &w2s[r])?;
+    }
+
+    // --- per-rank compute inputs ------------------------------------------
+    let mut inputs = Vec::new();
+    for rank in 0..world {
+        let mut map = ChunkTileMap::default();
+        for (r, ops) in sched.per_rank.iter().enumerate() {
+            for (index, op) in ops.iter().enumerate() {
+                let opref = OpRef { rank: r, index };
+                let tensor = &sched.tensors.get(op.produced_chunk().tensor)?.name;
+                if (tensor == "k" || tensor == "v") && op.dst_rank(r) == rank {
+                    // KV arrival feeds the attention tile of those rows
+                    let reg = &op.produced_chunk().region;
+                    let tiles = grid.tiles_intersecting(&[Some((
+                        reg.offset[0],
+                        reg.offset[0] + reg.sizes[0],
+                    ))])?;
+                    map.consumers.entry(opref).or_default().extend(tiles);
+                }
+                if tensor == "y" && op.src_rank(r) == rank {
+                    // every outgoing y chunk is produced by the FFN tile
+                    map.producers.entry(opref).or_default().push(ffn_tile);
+                }
+            }
+        }
+        // chunk-major order: FFN tile is "local" (no incoming chunk) and
+        // runs first, overlapping with the first KV hop in flight
+        let groups = map.consumer_groups(rank);
+        let arrival: Vec<usize> = (0..groups.len()).collect();
+        let order =
+            TileScheduler::chunk_major(&grid, &groups, &arrival, IntraOrder::RowMajor)?;
+        let sync = plan_rank_sync(rank, &sched, &order, &map)?;
+
+        let mut tile_calls: HashMap<usize, Vec<CallSpec>> = HashMap::new();
+        for t in 0..world {
+            let (k0, k1) = grid.axis_span(0, t);
+            tile_calls.insert(
+                t,
+                vec![CallSpec::AttnStep {
+                    artifact: format!("attn_step_q{SQ}d{D}k{SQ}"),
+                    q: "q".into(),
+                    k: "k".into(),
+                    v: "v".into(),
+                    kv_rows: (k0, k1),
+                    acc: "acc".into(),
+                    m: "m".into(),
+                    l: "l".into(),
+                }],
+            );
+        }
+        tile_calls.insert(
+            ffn_tile,
+            vec![CallSpec::FfnShard {
+                artifact: format!("ffn_shard_{FM}x{FD}x{FF}"),
+                x: "x".into(),
+                w1: "w1".into(),
+                b1: "b1".into(),
+                w2: "w2".into(),
+                out: "y".into(),
+                accumulate: true,
+            }],
+        );
+        // finalize after the LAST attention step in visit order
+        let last_attn = *order.order.iter().rev().find(|&&t| t < world).unwrap();
+        tile_calls.get_mut(&last_attn).unwrap().push(CallSpec::AttnFinalize {
+            artifact: format!("attn_finalize_q{SQ}d{D}"),
+            acc: "acc".into(),
+            l: "l".into(),
+            out: "o".into(),
+        });
+
+        let mut tile_flops = vec![4.0 * SQ as f64 * SQ as f64 * D as f64; world + 1];
+        tile_flops[ffn_tile] = 4.0 * FM as f64 * FD as f64 * FF as f64;
+        inputs.push(RankComputeInput { grid: grid.clone(), order, sync, tile_flops, tile_calls });
+    }
+    let plan = compile(
+        &sched,
+        &inputs,
+        Realization::new(syncopate::backend::BackendKind::LdStSpecialized, 16),
+        &topo,
+    )?;
+    let _ = v;
+
+    // --- oracles -----------------------------------------------------------
+    let scale = 1.0 / (D as f32).sqrt();
+    let partials: Vec<Vec<f32>> = (0..world)
+        .map(|r| {
+            let mut h = host_gemm(&x_glob, &w1s[r], FM, FD, FF);
+            for (i, hv) in h.iter_mut().enumerate() {
+                *hv += b1s[r][i % FF];
+            }
+            host_gelu(&mut h);
+            host_gemm(&h, &w2s[r], FM, FF, FD)
+        })
+        .collect();
+    let prefs: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+    let y_full = host_sum(&prefs);
+
+    let mut checks = Vec::new();
+    for r in 0..world {
+        checks.push(Check {
+            rank: r,
+            tensor: "o".into(),
+            expected: host_attention(&qs[r], &k_glob, &v_glob, SQ, s_total, D, scale),
+            what: format!("ring attention @rank{r}"),
+        });
+        checks.push(Check {
+            rank: r,
+            tensor: "y".into(),
+            expected: y_full.clone(),
+            what: format!("tensor-parallel FFN AllReduce @rank{r}"),
+        });
+    }
+    Ok(ExecCase { name: format!("transformer-block-w{world}"), sched, plan, store, checks })
+}
+
+fn main() -> syncopate::Result<()> {
+    println!("== E2E: transformer block (RingAttention + TP-FFN + AllReduce) ==\n");
+
+    // Stage 1: real numerics across 2, 4, 8 simulated ranks
+    let rt = Runtime::open_default()?;
+    for world in [2usize, 4, 8] {
+        let case = transformer_block_case(world, 1234 + world as u64)?;
+        let name = case.name.clone();
+        let transfers = case.plan.total_transfers();
+        let stats = run_and_verify(case, &rt)?;
+        println!(
+            "{name}: VERIFIED  ({transfers} chunk transfers, {} kernel calls, {} moved)",
+            stats.compute_calls,
+            syncopate::util::fmt_bytes(stats.bytes_moved as u64),
+        );
+    }
+
+    // Stage 2: paper-scale layer performance (Llama-3-8B, 8 GPUs)
+    println!("\n-- paper-scale layer (llama3-8b, seq 16k, 8 GPU) --");
+    let world = 8;
+    let topo = Topology::h100_node(world)?;
+    let attn = OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 16384, world);
+    let ffn = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_8B, 16384, world);
+
+    let mut layer_ours = 0.0;
+    let mut layer_kl = 0.0;
+    let mut layer_seq = 0.0;
+    for (label, op) in [("ring-attention", attn), ("ffn gemm-ar", ffn)] {
+        let tuned = autotune::tune(&op, &topo, Budget::Quick)?;
+        let (kp, kpar) = baselines::plan(Baseline::KernelLevel, &op, &topo)?;
+        let kl = simulate(&kp, &topo, kpar)?.makespan_us;
+        let (sp, spar) = baselines::plan(Baseline::TritonNccl, &op, &topo)?;
+        let seq = simulate(&sp, &topo, spar)?.makespan_us;
+        println!(
+            "  {label:15} syncopate {:>10} ({})   kernel-level {:>10}   sequential {:>10}",
+            fmt_us(tuned.makespan_us),
+            tuned.cfg.label(),
+            fmt_us(kl),
+            fmt_us(seq)
+        );
+        layer_ours += tuned.makespan_us;
+        layer_kl += kl;
+        layer_seq += seq;
+    }
+    println!(
+        "  layer total     syncopate {:>10}   kernel-level {:>10} ({:.2}x)   sequential {:>10} ({:.2}x)",
+        fmt_us(layer_ours),
+        fmt_us(layer_kl),
+        layer_kl / layer_ours,
+        fmt_us(layer_seq),
+        layer_seq / layer_ours
+    );
+    println!("\n(record these in EXPERIMENTS.md §E2E)");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla_extension
+0.5.1 the Rust `xla` crate links against rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_desc(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": {}}
+    for name, (fn, example_args) in model.entry_points().items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *example_args)
+        manifest["entries"][name] = {
+            "file": path,
+            "inputs": [_spec_desc(s) for s in example_args],
+            "outputs": [_spec_desc(s) for s in out_specs],
+        }
+        print(f"  aot: {name} -> {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin of the manifest for the Rust runtime (offline build has no
+    # JSON dependency): name \t file \t in specs \t out specs, where a spec
+    # list is `;`-joined `dimxdim,dtype` entries.
+    def _tsv_specs(specs):
+        return ";".join(
+            "x".join(str(d) for d in e["shape"]) + "," + e["dtype"] for e in specs
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for name, ent in manifest["entries"].items():
+            f.write(
+                f"{name}\t{ent['file']}\t{_tsv_specs(ent['inputs'])}\t"
+                f"{_tsv_specs(ent['outputs'])}\n"
+            )
+    print(f"  aot: manifest.json + manifest.tsv ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""L1 Pallas attention kernels: flash-attention block step + finalize.
+
+These implement the online-softmax block update that Ring-Attention [18]
+passes around the device ring. Each rank holds a local Q shard and receives
+K/V *chunks* from its ring peer; one `attn_step` consumes one K/V chunk and
+folds it into the running (acc, m, l) state. `attn_finalize` divides the
+accumulator by the softmax denominator.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * the CUDA warp-level QK^T / PV matmuls map to MXU `jnp.dot`s;
+  * one (Bq, d) Q block + (Bk, d) K/V blocks + (Bq, d) acc + (Bq,) m/l all
+    live in VMEM for the duration of the step;
+  * the grid iterates over Q blocks; K/V-chunk iteration is the *ring*,
+    i.e. Syncopate's communication schedule, not the kernel grid.
+
+# @sy.axis_count Q block=BLOCK_Q
+# @sy.tile_id grid
+# @sy.dispatch begin
+# @sy.pid_map Q=0
+# @sy.dispatch end
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 64
+
+NEG_INF = -1e30
+
+
+def _attn_step_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                      acc_out, m_out, l_out, *, scale):
+    """Online-softmax update for one K/V chunk against one Q block."""
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    acc = acc_ref[...].astype(jnp.float32)
+    m_prev = m_ref[...].astype(jnp.float32)
+    l_prev = l_ref[...].astype(jnp.float32)
+
+    # MXU: scores[qb, kb] = (Q @ K^T) * scale
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rescale previous accumulator/denominator to the new max.
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    acc_out[...] = acc_new
+    m_out[...] = m_new
+    l_out[...] = l_new
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def attn_step(q, k, v, acc, m, l, *, scale: float):
+    """One ring-attention step: fold K/V chunk (k, v) into (acc, m, l).
+
+    Shapes: q/acc (Sq, d), k/v (Sk, d), m/l (Sq,). Returns (acc', m', l').
+    """
+    sq, d = q.shape
+    bq = min(BLOCK_Q, sq)
+    assert sq % bq == 0
+    grid = (sq // bq,)
+    qspec = pl.BlockSpec((bq, d), lambda i: (i, 0))
+    kvspec = pl.BlockSpec(k.shape, lambda i: (0, 0))
+    vecspec = pl.BlockSpec((bq,), lambda i: (i,))
+    kern = functools.partial(_attn_step_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[qspec, kvspec, kvspec, qspec, vecspec, vecspec],
+        out_specs=[qspec, vecspec, vecspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((sq,), jnp.float32),
+            jax.ShapeDtypeStruct((sq,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, acc, m, l)
+
+
+def _finalize_kernel(acc_ref, l_ref, o_ref):
+    o_ref[...] = acc_ref[...] / l_ref[...][:, None]
+
+
+@jax.jit
+def attn_finalize(acc, l):
+    """Divide accumulator by softmax denominator: o = acc / l."""
+    sq, d = acc.shape
+    bq = min(BLOCK_Q, sq)
+    grid = (sq // bq,)
+    return pl.pallas_call(
+        _finalize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), jnp.float32),
+        interpret=True,
+    )(acc, l)
+
+
+def init_state(sq: int, d: int):
+    """Initial (acc, m, l) online-softmax state for a Q shard."""
+    return (
+        jnp.zeros((sq, d), jnp.float32),
+        jnp.full((sq,), NEG_INF, jnp.float32),
+        jnp.zeros((sq,), jnp.float32),
+    )
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int, itemsize: int = 4) -> int:
+    """VMEM per attn_step grid step: Q, K, V, acc blocks + m/l vectors."""
+    mats = (block_q * d) * 2 + (block_k * d) * 2  # q, acc, k, v
+    vecs = block_q * 4  # m, l in and out
+    scores = block_q * block_k  # s / p intermediate
+    return (mats + vecs + scores) * itemsize

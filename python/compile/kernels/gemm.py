@@ -1,0 +1,139 @@
+"""L1 Pallas GEMM kernel — the compute hot-spot of every GEMM-family operator.
+
+This is the TPU adaptation of the paper's Listing-1 persistent Triton GEMM:
+
+  * threadblock tiles            -> Pallas grid blocks (BlockSpec)
+  * shared-memory staging        -> VMEM blocks (BlockSpec index maps)
+  * tensor-core `tl.dot`         -> MXU `jnp.dot` (blocks are multiples of
+                                    the 128x128 systolic array where shapes
+                                    allow; small test shapes use 16+)
+  * persistent `tile_id` loop    -> the (m, n, k) grid; Syncopate's L3
+                                    tile-scheduler swizzle permutes the
+                                    traversal of this grid.
+
+The `@sy.*` comments below follow the paper's structured directive format
+(Listing 1). They carry no Python semantics, but the Rust frontend
+(`rust/src/kernel/annotations.rs`) parses this very file to recover the tile
+structure, so keep them in sync with the BlockSpecs.
+
+Run with interpret=True only: real TPU lowering emits a Mosaic custom call
+that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned block sizes for "paper scale" shapes; the AOT entry
+# points for the small real-numerics shapes override these.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (m, n, k) grid step: o[m, n] += a[m, k] @ b[k, n].
+
+    # @sy.axis_count M block=BLOCK_M
+    # @sy.axis_count N block=BLOCK_N
+    # @sy.axis_count K block=BLOCK_K
+    # @sy.tile_id grid
+    # @sy.dispatch begin
+    # @sy.pid_map M=0 N=1 K=2
+    # @sy.dispatch end
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU path: accumulate in f32 regardless of input dtype.
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def gemm(a, b, *, block_m=None, block_n=None, block_k=None):
+    """Tiled Pallas GEMM: (M, K) @ (K, N) -> (M, N).
+
+    Blocks default to the largest of {BLOCK_*, dim} that divides the dim, so
+    small test shapes stay valid while big shapes hit MXU-aligned 128s.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+
+    bm = block_m or _pick_block(m, BLOCK_M)
+    bn = block_n or _pick_block(n, BLOCK_N)
+    bk = block_k or _pick_block(k, BLOCK_K)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"blocks ({bm},{bn},{bk}) must divide shape ({m},{n},{k})"
+    )
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest block <= pref that divides dim (falls back to dim itself)."""
+    if dim <= pref:
+        return dim
+    for cand in range(pref, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def gemm_bias_gelu(a, b, bias):
+    """Fused GEMM + bias + tanh-GELU epilogue (FFN first projection)."""
+    y = gemm(a, b)
+    y = y + bias[None, :]
+    return _gelu(y)
+
+
+def _gelu(x):
+    # tanh approximation, matches the reference oracle exactly.
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU accounting (structure-level; interpret mode has no real timing).
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, itemsize: int = 4,
+               double_buffered: bool = True) -> int:
+    """VMEM footprint of one grid step: A block + B block + O block.
+
+    With the Pallas pipeline's default double buffering the input blocks are
+    resident twice. This is the number DESIGN.md §8 reports.
+    """
+    a = block_m * block_k * itemsize
+    b = block_k * block_n * itemsize
+    o = block_m * block_n * itemsize
+    bufs = 2 if double_buffered else 1
+    return bufs * (a + b) + o
+
+
+def mxu_utilization_estimate(block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of the 128x128 MXU each dot fills (systolic-array occupancy)."""
+    fill = (min(block_m, 128) / 128.0) * (min(block_n, 128) / 128.0)
+    # K chains shorter than 128 under-utilize the pipeline ramp.
+    ramp = min(block_k, 128) / 128.0
+    return fill * (0.5 + 0.5 * ramp)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 kernel. No Pallas here by construction —
+this file is the correctness ground truth the pytest suite compares against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm(a, b):
+    """(M, K) @ (K, N) in f32."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def gemm_bias_gelu(a, b, bias):
+    return gelu(gemm(a, b) + bias[None, :])
+
+
+def attention(q, k, v, scale: float):
+    """Full (unchunked) softmax attention — oracle for the ring composition."""
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.dot(p, v.astype(jnp.float32))
+
+
+def attn_step(q, k, v, acc, m, l, scale: float):
+    """Online-softmax block update, identical math to the Pallas kernel."""
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m, m_cur)
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = alpha * l + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[:, None] + jnp.dot(p, v.astype(jnp.float32))
+    return acc_new, m_new, l_new
+
+
+def attn_finalize(acc, l):
+    return acc / l[:, None]
+
+
+def ffn_shard(x, w1, b1, w2):
+    """Per-rank FFN shard: gelu(x @ w1 + b1) @ w2 (partial sum over shards)."""
+    return gemm(gemm_bias_gelu(x, w1, b1), w2)

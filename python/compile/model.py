@@ -1,0 +1,103 @@
+"""L2: per-rank JAX compute graphs for Syncopate's distributed operators.
+
+Each entry point here is the *local* compute a rank performs between chunk
+arrivals; the L3 Rust coordinator sequences these (per its compiled
+ExecutablePlan) and moves the chunks. All entry points call the L1 Pallas
+kernels, so the AOT artifacts exercise the full three-layer stack.
+
+Entry points are pure functions over fixed shapes; `aot.py` lowers each to
+one HLO-text artifact. The canonical real-numerics shapes are small (CPU
+interpret mode); paper-scale shapes are handled analytically by `sim::`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_k
+from compile.kernels import gemm as gemm_k
+
+# Canonical real-numerics shapes (see DESIGN.md §6).
+GEMM_K = 128          # contraction dim of the GEMM family
+GEMM_N = 128          # output columns (per-rank weight shard width)
+GEMM_TMS = (8, 16, 32, 64, 128)  # chunk row-counts (split-factor variants)
+
+ATTN_SQ = 64          # per-rank query shard length
+ATTN_D = 64           # head dim
+ATTN_SKS = (16, 32, 64)  # K/V chunk lengths (split-factor variants)
+ATTN_SCALE = 1.0 / (ATTN_D ** 0.5)
+
+FFN_M, FFN_D, FFN_F = 64, 128, 64  # per-rank FFN shard shapes
+
+
+def gemm_chunk(a, b):
+    """Chunk-granular GEMM: one communicated chunk of rows x local weights.
+
+    This is what a rank runs each time an AG-GEMM / A2A-GEMM input chunk
+    lands, and each time GEMM-RS / GEMM-AR produces an output chunk.
+    """
+    return (gemm_k.gemm(a, b),)
+
+
+def attn_ring_step(q, k, v, acc, m, l):
+    """One Ring-Attention step: fold the K/V chunk from the ring peer."""
+    acc2, m2, l2 = attn_k.attn_step(q, k, v, acc, m, l, scale=ATTN_SCALE)
+    return (acc2, m2, l2)
+
+
+def attn_finalize(acc, l):
+    """Final o = acc / l once all ring chunks are folded."""
+    return (attn_k.attn_finalize(acc, l),)
+
+
+def ffn_shard(x, w1, b1, w2):
+    """Tensor-parallel FFN shard: gelu(x @ w1 + b1) @ w2 (partial sum)."""
+    h = gemm_k.gemm_bias_gelu(x, w1, b1)
+    return (gemm_k.gemm(h, w2),)
+
+
+def add(x, y):
+    """Reduction combiner (the switch/fibre accumulate of Fig. 4d)."""
+    return (x + y,)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """name -> (fn, example_args). One AOT artifact per entry."""
+    eps = {}
+    for tm in GEMM_TMS:
+        eps[f"gemm_{tm}x{GEMM_K}x{GEMM_N}"] = (
+            gemm_chunk,
+            (_f32(tm, GEMM_K), _f32(GEMM_K, GEMM_N)),
+        )
+    for sk in ATTN_SKS:
+        eps[f"attn_step_q{ATTN_SQ}d{ATTN_D}k{sk}"] = (
+            attn_ring_step,
+            (
+                _f32(ATTN_SQ, ATTN_D),
+                _f32(sk, ATTN_D),
+                _f32(sk, ATTN_D),
+                _f32(ATTN_SQ, ATTN_D),
+                _f32(ATTN_SQ),
+                _f32(ATTN_SQ),
+            ),
+        )
+    eps[f"attn_finalize_q{ATTN_SQ}d{ATTN_D}"] = (
+        attn_finalize,
+        (_f32(ATTN_SQ, ATTN_D), _f32(ATTN_SQ)),
+    )
+    eps[f"ffn_shard_{FFN_M}x{FFN_D}x{FFN_F}"] = (
+        ffn_shard,
+        (_f32(FFN_M, FFN_D), _f32(FFN_D, FFN_F), _f32(FFN_F), _f32(FFN_F, FFN_D)),
+    )
+    eps[f"add_{ATTN_SQ}x{ATTN_D}"] = (add, (_f32(ATTN_SQ, ATTN_D), _f32(ATTN_SQ, ATTN_D)))
+    eps[f"add_{FFN_M}x{FFN_D}"] = (add, (_f32(FFN_M, FFN_D), _f32(FFN_M, FFN_D)))
+    eps[f"add_{GEMM_TMS[-1]}x{GEMM_N}"] = (
+        add,
+        (_f32(GEMM_TMS[-1], GEMM_N), _f32(GEMM_TMS[-1], GEMM_N)),
+    )
+    return eps

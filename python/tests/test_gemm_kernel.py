@@ -1,0 +1,125 @@
+"""L1 GEMM Pallas kernel vs pure-jnp oracle (the core correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm as gemm_k
+from compile.kernels import ref
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 128, 128),
+        (16, 128, 128),
+        (32, 128, 128),
+        (64, 128, 128),
+        (128, 128, 128),
+        (128, 256, 128),
+        (256, 128, 256),
+    ],
+)
+def test_gemm_matches_ref_canonical(m, k, n):
+    a, b = _rand((m, k), 0), _rand((k, n), 1)
+    got = gemm_k.gemm(a, b)
+    want = ref.gemm(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 16, 32), (16, 16, 16), (32, 64, 128)])
+def test_gemm_block_override(bm, bn, bk):
+    """All legal block decompositions produce identical results."""
+    a, b = _rand((64, 128), 2), _rand((128, 64), 3)
+    got = gemm_k.gemm(a, b, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.gemm(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 8),
+    ki=st.integers(1, 8),
+    ni=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_shape_sweep(mi, ki, ni, seed):
+    """Hypothesis sweep over block-multiple shapes."""
+    m, k, n = 8 * mi, 8 * ki, 8 * ni
+    a, b = _rand((m, k), seed), _rand((k, n), seed + 1)
+    got = gemm_k.gemm(a, b, block_m=8, block_n=8, block_k=8)
+    want = ref.gemm(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gemm_bf16_inputs(seed):
+    """bf16 inputs accumulate in f32 (MXU semantics)."""
+    a = _rand((32, 64), seed, jnp.bfloat16)
+    b = _rand((64, 32), seed + 1, jnp.bfloat16)
+    got = gemm_k.gemm(a, b)
+    want = ref.gemm(a, b)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_gemm_rejects_mismatched_contraction():
+    a, b = _rand((16, 32), 0), _rand((64, 16), 1)
+    with pytest.raises(AssertionError):
+        gemm_k.gemm(a, b)
+
+
+def test_gemm_rejects_nondividing_blocks():
+    a, b = _rand((24, 24), 0), _rand((24, 24), 1)
+    with pytest.raises(AssertionError):
+        gemm_k.gemm(a, b, block_m=16, block_n=8, block_k=8)
+
+
+def test_gemm_bias_gelu_matches_ref():
+    a, b = _rand((32, 64), 4), _rand((64, 32), 5)
+    bias = _rand((32,), 6)
+    got = gemm_k.gemm_bias_gelu(a, b, bias)
+    want = ref.gemm_bias_gelu(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_zero_inputs():
+    a = jnp.zeros((16, 16), jnp.float32)
+    b = jnp.zeros((16, 16), jnp.float32)
+    np.testing.assert_array_equal(gemm_k.gemm(a, b), jnp.zeros((16, 16)))
+
+
+def test_gemm_identity():
+    a = _rand((32, 32), 7)
+    eye = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(gemm_k.gemm(a, eye), a, rtol=1e-6, atol=1e-6)
+
+
+def test_pick_block():
+    assert gemm_k._pick_block(64, 128) == 64
+    assert gemm_k._pick_block(256, 128) == 128
+    assert gemm_k._pick_block(192, 128) == 96
+    assert gemm_k._pick_block(7, 128) == 7
+
+
+def test_vmem_budget():
+    """Canonical 128^3 f32 block set fits well under the 16 MiB VMEM budget."""
+    vb = gemm_k.vmem_bytes(128, 128, 128)
+    assert vb == 2 * (2 * 128 * 128 * 4) + 128 * 128 * 4
+    assert vb < 16 * 1024 * 1024
+
+
+def test_mxu_estimate_monotone():
+    full = gemm_k.mxu_utilization_estimate(128, 128, 128)
+    half = gemm_k.mxu_utilization_estimate(64, 128, 128)
+    tiny = gemm_k.mxu_utilization_estimate(8, 8, 8)
+    assert full == 1.0
+    assert tiny < half < full

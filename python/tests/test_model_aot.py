@@ -1,0 +1,110 @@
+"""L2 model graphs + AOT lowering: shapes, numerics, HLO-text validity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def test_entry_points_cover_all_split_variants():
+    eps = model.entry_points()
+    for tm in model.GEMM_TMS:
+        assert f"gemm_{tm}x{model.GEMM_K}x{model.GEMM_N}" in eps
+    for sk in model.ATTN_SKS:
+        assert f"attn_step_q{model.ATTN_SQ}d{model.ATTN_D}k{sk}" in eps
+    assert any(k.startswith("ffn_shard_") for k in eps)
+    assert any(k.startswith("attn_finalize_") for k in eps)
+    assert sum(k.startswith("add_") for k in eps) == 3
+
+
+def test_entry_point_shapes_consistent():
+    """eval_shape of each entry matches its declared example args."""
+    for name, (fn, args) in model.entry_points().items():
+        outs = jax.eval_shape(fn, *args)
+        assert isinstance(outs, tuple) and len(outs) >= 1, name
+        for o in outs:
+            assert all(d > 0 for d in o.shape), name
+
+
+def test_ffn_shard_matches_ref():
+    x, w1 = _rand((model.FFN_M, model.FFN_D), 0), _rand((model.FFN_D, model.FFN_F), 1)
+    b1, w2 = _rand((model.FFN_F,), 2), _rand((model.FFN_F, model.FFN_D), 3)
+    (got,) = model.ffn_shard(x, w1, b1, w2)
+    want = ref.ffn_shard(x, w1, b1, w2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_tensor_parallel_ffn_composition():
+    """Sum of per-rank FFN shards == unsharded FFN (the GEMM-AR identity)."""
+    world, f_total = 4, 4 * model.FFN_F
+    x = _rand((model.FFN_M, model.FFN_D), 10)
+    w1 = _rand((model.FFN_D, f_total), 11)
+    b1 = _rand((f_total,), 12)
+    w2 = _rand((f_total, model.FFN_D), 13)
+    want = ref.ffn_shard(x, w1, b1, w2)
+
+    acc = jnp.zeros((model.FFN_M, model.FFN_D), jnp.float32)
+    for r in range(world):
+        sl = slice(r * model.FFN_F, (r + 1) * model.FFN_F)
+        (part,) = model.ffn_shard(x, w1[:, sl], b1[sl], w2[sl, :])
+        acc = acc + part
+    np.testing.assert_allclose(acc, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_chunk_row_decomposition():
+    """Concatenated chunk GEMMs == full GEMM (AG-GEMM chunk identity)."""
+    a = _rand((128, model.GEMM_K), 20)
+    b = _rand((model.GEMM_K, model.GEMM_N), 21)
+    want = ref.gemm(a, b)
+    rows = []
+    for c in range(4):
+        (y,) = model.gemm_chunk(a[c * 32:(c + 1) * 32], b)
+        rows.append(y)
+    np.testing.assert_allclose(jnp.concatenate(rows, 0), want, rtol=1e-5, atol=1e-5)
+
+
+def test_hlo_text_lowering_valid():
+    """Every entry lowers to HLO text with an ENTRY computation."""
+    eps = model.entry_points()
+    # lowering all 13 is slow; spot-check one of each family
+    picks = [
+        f"gemm_{model.GEMM_TMS[0]}x{model.GEMM_K}x{model.GEMM_N}",
+        f"attn_step_q{model.ATTN_SQ}d{model.ATTN_D}k{model.ATTN_SKS[0]}",
+        f"add_{model.ATTN_SQ}x{model.ATTN_D}",
+    ]
+    for name in picks:
+        fn, args = eps[name]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert "ENTRY" in text and "HloModule" in text, name
+
+
+def test_artifacts_manifest_consistent():
+    """If `make artifacts` has run, manifest must match entry_points()."""
+    mpath = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    eps = model.entry_points()
+    assert set(manifest["entries"]) == set(eps)
+    for name, ent in manifest["entries"].items():
+        hlo = os.path.join(os.path.dirname(mpath), ent["file"])
+        assert os.path.exists(hlo), name
+        _, args = eps[name]
+        assert [list(a.shape) for a in args] == [e["shape"] for e in ent["inputs"]]
+
+
+def test_add_combiner_is_reduction():
+    x, y = _rand((64, 64), 30), _rand((64, 64), 31)
+    (z,) = model.add(x, y)
+    np.testing.assert_allclose(z, x + y)

@@ -1,0 +1,18 @@
+//! Bench: regenerate **Fig. 10** — integration with higher-level
+//! distributed compilers: Domino/Alpa partition IRs and Mercury's loop IR
+//! lowered through Syncopate's chunk representation, native kernel-level
+//! execution vs fine-grained regeneration, plus the three collective
+//! lowering paths (direct | template | synth).
+//!
+//! Run: `cargo bench --bench fig10_integration`
+
+use syncopate::autotune::Budget;
+use syncopate::reports;
+
+fn main() {
+    let t = reports::fig10(Budget::Quick).expect("fig10");
+    println!("{}", t.render());
+    for (label, row) in &t.rows {
+        println!("  {label}: +syncopate speedup {:.2}x over native", row[0] / row[1]);
+    }
+}

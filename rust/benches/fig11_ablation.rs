@@ -1,0 +1,67 @@
+//! Bench: regenerate **Fig. 11** — ablation and sensitivity studies over
+//! Syncopate's tuning space, plus the two extra design-choice ablations
+//! DESIGN.md §10 calls out (swizzle-vs-reorder and minimal-vs-barrier sync).
+//!
+//! (a) communication backend selection for a fixed logical schedule
+//! (b) chunk size (split factor) sensitivity — non-monotone, interior peak
+//! (c) SM allocation sweet spot
+//! (d) intra-tile scheduling spread
+//!
+//! Run: `cargo bench --bench fig11_ablation`
+
+use syncopate::baselines::{self, Baseline};
+use syncopate::coordinator::operators::{compile_operator, compile_operator_barrier_sync};
+use syncopate::coordinator::TuneConfig;
+use syncopate::metrics::Table;
+use syncopate::reports;
+use syncopate::sim::engine::simulate;
+use syncopate::topo::Topology;
+use syncopate::util::fmt_us;
+use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B, LLAMA3_8B};
+
+fn main() {
+    println!("{}", reports::fig11a().expect("11a").render());
+    println!("{}", reports::fig11b().expect("11b").render());
+    println!("{}", reports::fig11c().expect("11c").render());
+    println!("{}", reports::fig11d().expect("11d").render());
+
+    // --- ablation: scheduler swizzle vs explicit reorder pass (Fig. 6) ----
+    let topo = Topology::h100_node(8).unwrap();
+    let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8);
+    let mut t = Table::new(
+        "Ablation: swizzle-in-scheduler (Fig 6c) vs reorder pass (Fig 6b)",
+        &["latency us"],
+        "us",
+    );
+    let (sp, spar) = compile_operator(&op, &TuneConfig::default(), &topo).unwrap();
+    t.push_row("syncopate swizzle", vec![simulate(&sp, &topo, spar).unwrap().makespan_us]);
+    let (fp, fpar) = baselines::plan(Baseline::FlashOverlap, &op, &topo).unwrap();
+    t.push_row("reorder pass (flashoverlap-style)", vec![
+        simulate(&fp, &topo, fpar).unwrap().makespan_us,
+    ]);
+    println!("{}", t.render());
+
+    // --- ablation: minimal sync insertion vs conservative barrier ---------
+    let mut t2 = Table::new(
+        "Ablation: minimal sync vs barrier-per-kernel",
+        &["makespan us", "exposed comm us"],
+        "us",
+    );
+    for (label, op) in [
+        ("ag-gemm-70b", OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8)),
+        ("ring-attn-8b", OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 16384, 8)),
+    ] {
+        let cfg = TuneConfig { split: 1, ..TuneConfig::default() };
+        let (p1, params) = compile_operator(&op, &cfg, &topo).unwrap();
+        let r1 = simulate(&p1, &topo, params).unwrap();
+        let (p2, _) = compile_operator_barrier_sync(&op, &cfg, &topo).unwrap();
+        let r2 = simulate(&p2, &topo, params).unwrap();
+        t2.push_row(&format!("{label} minimal"), vec![r1.makespan_us, r1.exposed_wait_us]);
+        t2.push_row(&format!("{label} barrier"), vec![r2.makespan_us, r2.exposed_wait_us]);
+        println!(
+            "  {label}: minimal sync hides {} more communication",
+            fmt_us(r2.exposed_wait_us - r1.exposed_wait_us)
+        );
+    }
+    println!("{}", t2.render());
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate **Fig. 2** — the motivation microbenchmarks.
+//!
+//! (a) SM utilization vs GEMM size × tile config (wave quantization)
+//! (b) streamed persistent kernel vs kernel-partitioned launches
+//! (c) bandwidth vs transfer size per backend
+//! (d) bandwidth vs #communication SMs per backend
+//!
+//! Run: `cargo bench --bench fig2_motivation`
+
+use syncopate::reports;
+
+fn main() {
+    println!("{}", reports::fig2a().render());
+    println!("{}", reports::fig2b().expect("fig2b").render());
+    println!("{}", reports::fig2c().render());
+    println!("{}", reports::fig2d().render());
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate **Fig. 8** — distributed GEMM operators (AG-GEMM,
+//! GEMM-RS, GEMM-AR) across Llama-3/Qwen shapes on 4- and 8-GPU meshes,
+//! Syncopate (autotuned) vs all baselines.
+//!
+//! Run: `cargo bench --bench fig8_gemm` (add `--full` via env FIG_FULL=1 for
+//! the full tuning budget)
+
+use std::time::Instant;
+
+use syncopate::autotune::Budget;
+use syncopate::reports;
+
+fn main() {
+    let budget =
+        if std::env::var("FIG_FULL").is_ok() { Budget::Full } else { Budget::Quick };
+    let t0 = Instant::now();
+    let t = reports::fig8(budget).expect("fig8");
+    println!("{}", t.render());
+    for base in reports::SYSTEMS.iter().skip(1) {
+        if let (Some(avg), Some(max)) =
+            (t.geomean_ratio("syncopate", base), t.max_ratio("syncopate", base))
+        {
+            println!("  syncopate vs {base:15} avg {avg:.2}x  max {max:.2}x");
+        }
+    }
+    // supplement: scalability/portability sweep (§6.1 device-count study)
+    let s = reports::scalability(budget).expect("scalability");
+    println!("\n{}", s.render());
+    println!("[fig8 + scalability regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate **Fig. 9** — distributed attention operators (HP, SP,
+//! RingAttention) across sequence lengths, Syncopate vs baselines.
+//!
+//! Run: `cargo bench --bench fig9_attention`
+
+use std::time::Instant;
+
+use syncopate::autotune::Budget;
+use syncopate::reports;
+
+fn main() {
+    let budget =
+        if std::env::var("FIG_FULL").is_ok() { Budget::Full } else { Budget::Quick };
+    let t0 = Instant::now();
+    let t = reports::fig9(budget).expect("fig9");
+    println!("{}", t.render());
+    for base in reports::SYSTEMS.iter().skip(1) {
+        if let (Some(avg), Some(max)) =
+            (t.geomean_ratio("syncopate", base), t.max_ratio("syncopate", base))
+        {
+            println!("  syncopate vs {base:15} avg {avg:.2}x  max {max:.2}x");
+        }
+    }
+    println!("\n[fig9 regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,75 @@
+//! Bench: L3 hot-path microbenchmarks (the §Perf numbers of EXPERIMENTS.md).
+//!
+//! Measures the throughput of the request-path components the coordinator
+//! exercises per served operator: compilation, sync planning, simulation
+//! (event engine), and a full quick autotune. Targets (DESIGN.md §9):
+//! simulate a full 8-rank fig8 config in <10 ms; autotune an operator <1 s.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Instant;
+
+use syncopate::autotune::{self, Budget};
+use syncopate::coordinator::operators::compile_operator;
+use syncopate::coordinator::TuneConfig;
+use syncopate::sim::engine::simulate;
+use syncopate::topo::Topology;
+use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "{label:48} {:>10.3} ms/iter   {:>8.1} iters/s",
+        per * 1e3,
+        1.0 / per
+    );
+    per
+}
+
+fn main() {
+    let topo = Topology::h100_node(8).unwrap();
+    let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8);
+    let cfg = TuneConfig::default();
+
+    println!("== L3 hot paths (8-rank llama3-70b AG-GEMM) ==");
+    let compile_ms = bench("compile_operator (schedule+sync+codegen)", 50, || {
+        let _ = compile_operator(&op, &cfg, &topo).unwrap();
+    });
+
+    let (plan, params) = compile_operator(&op, &cfg, &topo).unwrap();
+    let sim_ms = bench("simulate (event engine, full plan)", 200, || {
+        let _ = simulate(&plan, &topo, params).unwrap();
+    });
+
+    let split8 = TuneConfig { split: 8, ..cfg.clone() };
+    let (plan8, params8) = compile_operator(&op, &split8, &topo).unwrap();
+    println!(
+        "  plan sizes: split2 {} transfers, split8 {} transfers",
+        plan.total_transfers(),
+        plan8.total_transfers()
+    );
+    bench("simulate (split 8: 4x transfers)", 200, || {
+        let _ = simulate(&plan8, &topo, params8).unwrap();
+    });
+
+    let tune_s = bench("autotune quick (full knob sweep)", 3, || {
+        let _ = autotune::tune(&op, &topo, Budget::Quick).unwrap();
+    });
+
+    let attn = OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_70B, 32768, 8);
+    bench("autotune quick (ring attention 32k)", 3, || {
+        let _ = autotune::tune(&attn, &topo, Budget::Quick).unwrap();
+    });
+
+    println!("\ntargets: simulate < 10 ms ({}), tune < 1 s ({})",
+        if sim_ms * 1e3 < 10.0 { "MET" } else { "MISSED" },
+        if tune_s < 1.0 { "MET" } else { "MISSED" },
+    );
+    let _ = compile_ms;
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate **Table 2** (communication mechanism comparison) and
+//! microbenchmark the backend model itself.
+//!
+//! Run: `cargo bench --bench table2_backends`
+
+use std::time::Instant;
+
+use syncopate::backend::{self, BackendKind};
+use syncopate::reports;
+use syncopate::topo::Topology;
+
+fn main() {
+    println!("{}", reports::table2().render());
+
+    // model-throughput microbench: transfer_time_us evaluations/sec (the
+    // autotuner calls this in its inner loop)
+    let topo = Topology::h100_node(8).unwrap();
+    let t0 = Instant::now();
+    let mut acc = 0.0f64;
+    let n = 2_000_000usize;
+    for i in 0..n {
+        let bytes = 1024 << (i % 18);
+        acc += backend::transfer_time_us(BackendKind::CopyEngine, bytes, 1, 0, topo.intra);
+        acc += backend::transfer_time_us(BackendKind::TmaSpecialized, bytes, 1, 16, topo.intra);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "model microbench: {:.1}M transfer_time evals/sec (checksum {acc:.1})",
+        2.0 * n as f64 / dt / 1e6
+    );
+}

@@ -1,0 +1,356 @@
+//! Communication-centric auto-tuning (paper §5.3).
+//!
+//! The search space is the chunk abstraction's knob set: inter-chunk (split
+//! factor) × intra-chunk (backend realization, SM allocation, tile shape,
+//! tile order). Candidates violating hardware limits are pruned before
+//! simulation (backend capability matrix, minimum efficient transfer size,
+//! divisibility); the rest are scored on the calibrated model. Because every
+//! candidate reuses the same chunk-level dependence structure, changing a
+//! knob never re-derives the global plan — `compile_operator` re-lowers the
+//! same schedule under the new realization, exactly as §5.3 describes.
+
+use crate::backend::{self, BackendKind};
+use crate::codegen::Realization;
+use crate::coordinator::operators::compile_operator;
+use crate::coordinator::TuneConfig;
+use crate::error::{Error, Result};
+use crate::kernel::scheduler::{IntraOrder, SwizzlePolicy};
+use crate::sim::engine::simulate;
+use crate::topo::Topology;
+use crate::workload::{OpKind, OperatorInstance};
+
+/// Search-space size control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Budget {
+    /// Coarse sweep (fast; used inside larger benchmark loops).
+    Quick,
+    /// Full factorial sweep of the documented knobs.
+    Full,
+}
+
+/// Outcome of a tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub cfg: TuneConfig,
+    pub makespan_us: f64,
+    pub tflops: f64,
+    /// Candidates actually simulated.
+    pub evaluated: usize,
+    /// Candidates pruned by hardware limits before simulation.
+    pub pruned: usize,
+    /// (config label, makespan) for every evaluated candidate.
+    pub log: Vec<(String, f64)>,
+}
+
+/// Minimum transfer size below which the copy engine's launch overhead
+/// dominates (the "minimum efficient transfer size" prune of §5.3).
+pub const MIN_CE_CHUNK_BYTES: usize = 64 * 1024;
+
+/// Enumerate the candidate configurations for an operator.
+pub fn search_space(op: &OperatorInstance, budget: Budget) -> Vec<TuneConfig> {
+    let splits: &[usize] = match budget {
+        Budget::Quick => &[1, 2, 4],
+        Budget::Full => &[1, 2, 4, 8, 16],
+    };
+    let sms: &[usize] = match budget {
+        Budget::Quick => &[16, 32],
+        Budget::Full => &[8, 16, 32, 64],
+    };
+    let blocks: &[(usize, usize, usize)] = match budget {
+        Budget::Quick => &[(128, 128, 128)],
+        Budget::Full => &[(128, 128, 128), (64, 128, 128), (128, 256, 64), (256, 128, 128)],
+    };
+    let swizzles = [
+        SwizzlePolicy::ChunkMajor { intra: IntraOrder::Snake },
+        SwizzlePolicy::ChunkMajor { intra: IntraOrder::RowMajor },
+        SwizzlePolicy::RowMajor,
+    ];
+    let mut out = Vec::new();
+    for &split in splits {
+        for backend in BackendKind::TUNABLE {
+            let sm_choices: Vec<usize> = if backend::curve(backend).sms_for_peak == 0 {
+                vec![0]
+            } else {
+                sms.to_vec()
+            };
+            for &comm_sms in &sm_choices {
+                for swizzle in &swizzles {
+                    for &(bm, bn, bk) in blocks {
+                        out.push(TuneConfig {
+                            split,
+                            real: Realization::new(backend, comm_sms),
+                            swizzle: swizzle.clone(),
+                            block_m: bm,
+                            block_n: bn,
+                            block_k: bk,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // attention operators ignore block_n/k variation; dedupe by label
+    if !op.kind.is_gemm() {
+        out.dedup_by(|a, b| a.label() == b.label());
+    }
+    out
+}
+
+/// Hardware-limit pre-pruning (no simulation needed to reject these).
+pub fn prune(op: &OperatorInstance, cfg: &TuneConfig, topo: &Topology) -> Result<()> {
+    let needs_reduce = matches!(op.kind, OpKind::GemmRs | OpKind::GemmAr);
+    let multi_node = topo.ranks_per_node < topo.world;
+    let level = if multi_node {
+        crate::topo::LinkLevel::InterNode
+    } else {
+        crate::topo::LinkLevel::IntraNode
+    };
+    backend::check_feasible(cfg.real.backend, needs_reduce, level, cfg.real.comm_sms)?;
+    // minimum efficient transfer size for the copy engine
+    if cfg.real.backend == BackendKind::CopyEngine {
+        let shard_bytes = op.comm_bytes() / op.world.max(1) / (op.world.max(2) - 1).max(1);
+        let chunk_bytes = shard_bytes / cfg.split.max(1);
+        if chunk_bytes < MIN_CE_CHUNK_BYTES {
+            return Err(Error::Autotune(format!(
+                "chunk {} B below copy-engine minimum {}",
+                chunk_bytes, MIN_CE_CHUNK_BYTES
+            )));
+        }
+    }
+    // reserving more SMs than the device has is nonsense
+    if cfg.real.comm_sms >= topo.sms_per_device {
+        return Err(Error::Autotune("comm SMs exceed device".into()));
+    }
+    Ok(())
+}
+
+/// Tune one operator: enumerate, prune, simulate, keep the best.
+pub fn tune(op: &OperatorInstance, topo: &Topology, budget: Budget) -> Result<TuneResult> {
+    let mut best: Option<(TuneConfig, f64, f64)> = None;
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    let mut log = Vec::new();
+    for cfg in search_space(op, budget) {
+        if prune(op, &cfg, topo).is_err() {
+            pruned += 1;
+            continue;
+        }
+        // divisibility and similar structural failures also count as pruned
+        let (plan, params) = match compile_operator(op, &cfg, topo) {
+            Ok(x) => x,
+            Err(_) => {
+                pruned += 1;
+                continue;
+            }
+        };
+        let r = match simulate(&plan, topo, params) {
+            Ok(r) => r,
+            Err(_) => {
+                pruned += 1;
+                continue;
+            }
+        };
+        evaluated += 1;
+        log.push((cfg.label(), r.makespan_us));
+        let better = best.as_ref().map(|(_, t, _)| r.makespan_us < *t).unwrap_or(true);
+        if better {
+            best = Some((cfg, r.makespan_us, r.tflops()));
+        }
+    }
+    let (cfg, makespan_us, tflops) = best.ok_or_else(|| {
+        Error::Autotune(format!(
+            "no feasible configuration for {} ({} pruned)",
+            op.label(),
+            pruned
+        ))
+    })?;
+    Ok(TuneResult { cfg, makespan_us, tflops, evaluated, pruned, log })
+}
+
+// ---------------------------------------------------------------------------
+// Tuned-configuration persistence: tune once, reuse across processes.
+// TSV format: operator label \t config label \t makespan_us \t tflops
+// (the offline build has no serde; config labels round-trip via `parse_label`).
+// ---------------------------------------------------------------------------
+
+/// On-disk tuning cache.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneCache {
+    entries: Vec<(String, String, f64, f64)>,
+}
+
+impl TuneCache {
+    /// Record a result for an operator.
+    pub fn insert(&mut self, op: &OperatorInstance, r: &TuneResult) {
+        self.entries.retain(|(l, ..)| l != &op.label());
+        self.entries.push((op.label(), r.cfg.label(), r.makespan_us, r.tflops));
+    }
+
+    /// Look up a cached config label for an operator.
+    pub fn get(&self, op: &OperatorInstance) -> Option<(&str, f64, f64)> {
+        self.entries
+            .iter()
+            .find(|(l, ..)| l == &op.label())
+            .map(|(_, c, m, t)| (c.as_str(), *m, *t))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to TSV.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        for (op, cfg, m, t) in &self.entries {
+            // `{}` prints the shortest representation that round-trips f64
+            out.push_str(&format!("{op}\t{cfg}\t{m}\t{t}\n"));
+        }
+        out
+    }
+
+    /// Parse from TSV.
+    pub fn from_tsv(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(Error::Autotune(format!("cache line {}: need 4 cols", i + 1)));
+            }
+            let m: f64 = cols[2]
+                .parse()
+                .map_err(|_| Error::Autotune(format!("cache line {}: bad makespan", i + 1)))?;
+            let t: f64 = cols[3]
+                .parse()
+                .map_err(|_| Error::Autotune(format!("cache line {}: bad tflops", i + 1)))?;
+            entries.push((cols[0].to_string(), cols[1].to_string(), m, t));
+        }
+        Ok(TuneCache { entries })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_tsv())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_tsv(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{OperatorInstance, LLAMA3_8B, LLAMA3_70B};
+
+    fn topo() -> Topology {
+        Topology::h100_node(4).unwrap()
+    }
+
+    #[test]
+    fn space_enumerates_and_scales_with_budget() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let q = search_space(&op, Budget::Quick).len();
+        let f = search_space(&op, Budget::Full).len();
+        assert!(q >= 20, "{q}");
+        assert!(f > 4 * q, "{f} vs {q}");
+    }
+
+    #[test]
+    fn prune_rejects_reduce_on_tma() {
+        let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 4096, 4);
+        let cfg = TuneConfig {
+            real: Realization::new(BackendKind::TmaSpecialized, 16),
+            ..Default::default()
+        };
+        assert!(prune(&op, &cfg, &topo()).is_err());
+        let ok = TuneConfig {
+            real: Realization::new(BackendKind::LdStSpecialized, 16),
+            ..Default::default()
+        };
+        assert!(prune(&op, &ok, &topo()).is_ok());
+    }
+
+    #[test]
+    fn prune_rejects_tiny_ce_chunks() {
+        // tiny operator: shards far below the CE minimum once split
+        let mut op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        op.m = 64;
+        op.k = 64;
+        let cfg = TuneConfig { split: 16, ..Default::default() };
+        assert!(prune(&op, &cfg, &topo()).is_err());
+    }
+
+    #[test]
+    fn tune_finds_feasible_best_quick() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        assert!(r.evaluated > 0);
+        assert!(r.tflops > 10.0, "{}", r.tflops);
+        // best is the min of the log
+        let min = r.log.iter().map(|(_, t)| *t).fold(f64::INFINITY, f64::min);
+        assert_eq!(min, r.makespan_us);
+    }
+
+    #[test]
+    fn tuned_beats_median_candidate() {
+        // §5.3: suboptimal settings can leave >2x on the table; the tuned
+        // config must at least beat the median of the space.
+        let op = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 4);
+        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        let mut times: Vec<f64> = r.log.iter().map(|(_, t)| *t).collect();
+        times.sort_by(f64::total_cmp);
+        let median = times[times.len() / 2];
+        assert!(r.makespan_us < median, "best {} median {median}", r.makespan_us);
+    }
+
+    #[test]
+    fn cache_roundtrip_and_replace() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        let mut c = TuneCache::default();
+        assert!(c.is_empty());
+        c.insert(&op, &r);
+        assert_eq!(c.len(), 1);
+        let (cfg, m, t) = c.get(&op).unwrap();
+        assert_eq!(cfg, r.cfg.label());
+        assert_eq!(m, r.makespan_us);
+        assert_eq!(t, r.tflops);
+        // TSV round trip
+        let c2 = TuneCache::from_tsv(&c.to_tsv()).unwrap();
+        assert_eq!(c, c2);
+        // replacing an entry keeps the cache deduped
+        c.insert(&op, &r);
+        assert_eq!(c.len(), 1);
+        // parse errors
+        assert!(TuneCache::from_tsv("a\tb\tc\n").is_err());
+        assert!(TuneCache::from_tsv("a\tb\tx\t1\n").is_err());
+        assert!(TuneCache::from_tsv("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn cache_save_load_file() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        let mut c = TuneCache::default();
+        c.insert(&op, &r);
+        let path = std::env::temp_dir().join("syncopate_tune_cache_test.tsv");
+        c.save(&path).unwrap();
+        let loaded = TuneCache::load(&path).unwrap();
+        assert_eq!(c, loaded);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tune_reduce_op_never_picks_nonreduce_backend() {
+        let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 4096, 4);
+        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        assert!(backend::caps(r.cfg.real.backend).supports_reduce);
+        assert!(r.pruned > 0);
+    }
+}

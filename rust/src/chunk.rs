@@ -1,0 +1,419 @@
+//! The chunk abstraction (§5.1 of the paper).
+//!
+//! A *chunk* is a logical block of data communicated as a unit: an
+//! intermediate layout between the global logical tensor and the local
+//! compute tiles. Chunks are defined over logical tensor *regions*, never
+//! concrete buffers, so the same schedule can be reused across kernels and
+//! shapes and specialized late (backend choice, split factor) without
+//! re-deriving the plan.
+
+
+use crate::error::{Error, Result};
+
+/// Element type of a tensor. The real-numerics path is f32-only (CPU PJRT);
+/// bf16 participates in the analytic performance models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::BF16 | DType::F16 => 2,
+        }
+    }
+}
+
+/// Index of a tensor within a [`TensorTable`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+/// A logical tensor participating in a schedule (global shape, not a shard).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDecl {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorDecl {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+}
+
+/// Registry of tensors referenced by a communication schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TensorTable {
+    tensors: Vec<TensorDecl>,
+}
+
+impl TensorTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a tensor; returns its id. Names must be unique.
+    pub fn declare(&mut self, name: &str, shape: &[usize], dtype: DType) -> Result<TensorId> {
+        if self.tensors.iter().any(|t| t.name == name) {
+            return Err(Error::Region(format!("tensor `{name}` already declared")));
+        }
+        if shape.is_empty() || shape.contains(&0) {
+            return Err(Error::Region(format!("tensor `{name}` has empty shape {shape:?}")));
+        }
+        self.tensors.push(TensorDecl { name: name.into(), shape: shape.to_vec(), dtype });
+        Ok(TensorId(self.tensors.len() as u32 - 1))
+    }
+
+    pub fn get(&self, id: TensorId) -> Result<&TensorDecl> {
+        self.tensors
+            .get(id.0 as usize)
+            .ok_or_else(|| Error::Region(format!("unknown tensor id {id:?}")))
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<TensorId> {
+        self.tensors.iter().position(|t| t.name == name).map(|i| TensorId(i as u32))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (TensorId, &TensorDecl)> {
+        self.tensors.iter().enumerate().map(|(i, t)| (TensorId(i as u32), t))
+    }
+}
+
+/// A rectangular (hyper-rectangle) region of a tensor: `offset + sizes`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Region {
+    pub offset: Vec<usize>,
+    pub sizes: Vec<usize>,
+}
+
+impl Region {
+    pub fn new(offset: Vec<usize>, sizes: Vec<usize>) -> Self {
+        assert_eq!(offset.len(), sizes.len(), "rank mismatch");
+        Region { offset, sizes }
+    }
+
+    /// Whole-tensor region for a shape.
+    pub fn full(shape: &[usize]) -> Self {
+        Region { offset: vec![0; shape.len()], sizes: shape.to_vec() }
+    }
+
+    /// Region covering rows `[r0, r0+n)` of a 2-D tensor.
+    pub fn rows(r0: usize, n: usize, cols: usize) -> Self {
+        Region { offset: vec![r0, 0], sizes: vec![n, cols] }
+    }
+
+    /// Region covering columns `[c0, c0+n)` of a 2-D `rows x ?` tensor.
+    pub fn cols(c0: usize, n: usize, rows: usize) -> Self {
+        Region { offset: vec![0, c0], sizes: vec![rows, n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.sizes.iter().product()
+    }
+
+    /// True if this region lies inside `shape`.
+    pub fn fits(&self, shape: &[usize]) -> bool {
+        self.rank() == shape.len()
+            && self
+                .offset
+                .iter()
+                .zip(&self.sizes)
+                .zip(shape)
+                .all(|((o, s), d)| o + s <= *d && *s > 0)
+    }
+
+    /// True if the two regions overlap in every dimension.
+    pub fn intersects(&self, other: &Region) -> bool {
+        if self.rank() != other.rank() {
+            return false;
+        }
+        self.offset
+            .iter()
+            .zip(&self.sizes)
+            .zip(other.offset.iter().zip(&other.sizes))
+            .all(|((ao, asz), (bo, bsz))| ao < &(bo + bsz) && bo < &(ao + asz))
+    }
+
+    /// True if `other` is entirely contained in `self`.
+    pub fn contains(&self, other: &Region) -> bool {
+        if self.rank() != other.rank() {
+            return false;
+        }
+        self.offset
+            .iter()
+            .zip(&self.sizes)
+            .zip(other.offset.iter().zip(&other.sizes))
+            .all(|((ao, asz), (bo, bsz))| bo >= ao && bo + bsz <= ao + asz)
+    }
+
+    /// Is this region contiguous in a row-major layout of `shape`?
+    ///
+    /// True iff all dims before the first partial dim are size-1 and all dims
+    /// after it are full. Copy engines require contiguity per transfer; a
+    /// non-contiguous region decomposes into [`Region::contiguous_pieces`].
+    pub fn is_contiguous(&self, shape: &[usize]) -> bool {
+        self.contiguous_pieces(shape) == 1
+    }
+
+    /// Number of maximal contiguous row-major pieces this region splits into.
+    ///
+    /// This drives the copy-engine launch-count cost model (each piece is a
+    /// separate host-launched transfer, §2.3).
+    pub fn contiguous_pieces(&self, shape: &[usize]) -> usize {
+        assert_eq!(self.rank(), shape.len());
+        // Find the last dimension d such that the region spans dims d+1.. fully;
+        // everything up to d multiplies into the piece count, except one
+        // trailing "free" dim that can vary within a piece.
+        let mut pieces = 1usize;
+        let mut suffix_full = true;
+        for d in (0..self.rank()).rev() {
+            if suffix_full {
+                if self.sizes[d] == shape[d] {
+                    continue; // still inside the contiguous suffix
+                }
+                // first partial dim from the right: it is free (varies inside
+                // one piece); everything left of it multiplies piece count.
+                suffix_full = false;
+            } else {
+                pieces *= self.sizes[d];
+            }
+        }
+        pieces
+    }
+
+    /// Row-major linear offsets of every element (for buffer copies).
+    ///
+    /// Only used by the real-numerics executor at small shapes.
+    pub fn linear_offsets(&self, shape: &[usize]) -> Vec<usize> {
+        assert_eq!(self.rank(), shape.len());
+        let mut strides = vec![1usize; shape.len()];
+        for d in (0..shape.len().saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        let mut out = Vec::with_capacity(self.elems());
+        let mut idx = vec![0usize; self.rank()];
+        loop {
+            let lin: usize = idx
+                .iter()
+                .zip(&self.offset)
+                .zip(&strides)
+                .map(|((i, o), s)| (i + o) * s)
+                .sum();
+            out.push(lin);
+            // odometer increment
+            let mut d = self.rank();
+            loop {
+                if d == 0 {
+                    return out;
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < self.sizes[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Split along `axis` into `n` equal sub-regions (the split factor knob).
+    pub fn split(&self, axis: usize, n: usize) -> Result<Vec<Region>> {
+        if axis >= self.rank() {
+            return Err(Error::Region(format!("axis {axis} out of rank {}", self.rank())));
+        }
+        if n == 0 || self.sizes[axis] % n != 0 {
+            return Err(Error::Region(format!(
+                "cannot split size {} on axis {axis} into {n} equal parts",
+                self.sizes[axis]
+            )));
+        }
+        let step = self.sizes[axis] / n;
+        Ok((0..n)
+            .map(|i| {
+                let mut off = self.offset.clone();
+                let mut sz = self.sizes.clone();
+                off[axis] += i * step;
+                sz[axis] = step;
+                Region { offset: off, sizes: sz }
+            })
+            .collect())
+    }
+}
+
+/// A chunk: a tensor region communicated as a unit (paper §5.1).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Chunk {
+    pub tensor: TensorId,
+    pub region: Region,
+}
+
+impl Chunk {
+    pub fn new(tensor: TensorId, region: Region) -> Self {
+        Chunk { tensor, region }
+    }
+
+    /// Bytes moved when this chunk is transferred.
+    pub fn bytes(&self, table: &TensorTable) -> Result<usize> {
+        Ok(self.region.elems() * table.get(self.tensor)?.dtype.size())
+    }
+
+    /// Check the chunk's region against its tensor's declared shape.
+    pub fn validate(&self, table: &TensorTable) -> Result<()> {
+        let t = table.get(self.tensor)?;
+        if !self.region.fits(&t.shape) {
+            return Err(Error::Region(format!(
+                "chunk region {:?} does not fit tensor `{}` shape {:?}",
+                self.region, t.name, t.shape
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> (TensorTable, TensorId) {
+        let mut t = TensorTable::new();
+        let id = t.declare("x", &[8, 16], DType::F32).unwrap();
+        (t, id)
+    }
+
+    #[test]
+    fn declare_and_lookup() {
+        let (t, id) = table();
+        assert_eq!(t.lookup("x"), Some(id));
+        assert_eq!(t.lookup("y"), None);
+        assert_eq!(t.get(id).unwrap().bytes(), 8 * 16 * 4);
+    }
+
+    #[test]
+    fn duplicate_declare_rejected() {
+        let (mut t, _) = table();
+        assert!(t.declare("x", &[2], DType::F32).is_err());
+    }
+
+    #[test]
+    fn empty_shape_rejected() {
+        let mut t = TensorTable::new();
+        assert!(t.declare("bad", &[4, 0], DType::F32).is_err());
+        assert!(t.declare("bad2", &[], DType::F32).is_err());
+    }
+
+    #[test]
+    fn region_fits_and_elems() {
+        let r = Region::rows(2, 4, 16);
+        assert!(r.fits(&[8, 16]));
+        assert!(!r.fits(&[5, 16]));
+        assert_eq!(r.elems(), 64);
+        assert!(!Region::new(vec![0], vec![4]).fits(&[8, 16])); // rank mismatch
+    }
+
+    #[test]
+    fn region_intersects_contains() {
+        let a = Region::rows(0, 4, 16);
+        let b = Region::rows(2, 4, 16);
+        let c = Region::rows(4, 4, 16);
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+        assert!(Region::full(&[8, 16]).contains(&a));
+        assert!(!a.contains(&b));
+        assert!(a.contains(&Region::rows(1, 2, 16)));
+    }
+
+    #[test]
+    fn contiguity_row_major() {
+        // full rows of a [8,16] tensor are contiguous
+        assert!(Region::rows(2, 3, 16).is_contiguous(&[8, 16]));
+        // a column slab is not: one piece per row
+        let col = Region::cols(0, 4, 8);
+        assert!(!col.is_contiguous(&[8, 16]));
+        assert_eq!(col.contiguous_pieces(&[8, 16]), 8);
+        // full tensor is a single piece
+        assert_eq!(Region::full(&[8, 16]).contiguous_pieces(&[8, 16]), 1);
+        // single element: contiguous
+        assert!(Region::new(vec![3, 7], vec![1, 1]).is_contiguous(&[8, 16]));
+    }
+
+    #[test]
+    fn contiguity_3d() {
+        let shape = [4, 8, 16];
+        // full planes
+        assert!(Region::new(vec![1, 0, 0], vec![2, 8, 16]).is_contiguous(&shape));
+        // partial middle dim: pieces = leading size
+        let r = Region::new(vec![0, 2, 0], vec![4, 3, 16]);
+        assert_eq!(r.contiguous_pieces(&shape), 4);
+        // partial last dim: pieces = product of leading sizes
+        let r2 = Region::new(vec![0, 0, 4], vec![4, 8, 8]);
+        assert_eq!(r2.contiguous_pieces(&shape), 32);
+    }
+
+    #[test]
+    fn linear_offsets_row_region() {
+        let r = Region::rows(1, 2, 4);
+        let offs = r.linear_offsets(&[4, 4]);
+        assert_eq!(offs, vec![4, 5, 6, 7, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn linear_offsets_col_region() {
+        let r = Region::cols(1, 2, 3);
+        let offs = r.linear_offsets(&[3, 4]);
+        assert_eq!(offs, vec![1, 2, 5, 6, 9, 10]);
+    }
+
+    #[test]
+    fn split_rows() {
+        let r = Region::full(&[8, 16]);
+        let parts = r.split(0, 4).unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[1], Region::rows(2, 2, 16));
+        let total: usize = parts.iter().map(|p| p.elems()).sum();
+        assert_eq!(total, r.elems());
+    }
+
+    #[test]
+    fn split_errors() {
+        let r = Region::full(&[8, 16]);
+        assert!(r.split(2, 2).is_err()); // bad axis
+        assert!(r.split(0, 3).is_err()); // non-dividing
+        assert!(r.split(0, 0).is_err()); // zero
+    }
+
+    #[test]
+    fn chunk_bytes_and_validate() {
+        let (t, id) = table();
+        let c = Chunk::new(id, Region::rows(0, 4, 16));
+        assert_eq!(c.bytes(&t).unwrap(), 4 * 16 * 4);
+        assert!(c.validate(&t).is_ok());
+        let bad = Chunk::new(id, Region::rows(6, 4, 16));
+        assert!(bad.validate(&t).is_err());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::BF16.size(), 2);
+        assert_eq!(DType::F16.size(), 2);
+    }
+}

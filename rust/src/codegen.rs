@@ -1,0 +1,732 @@
+//! Chunk-based code generation (paper §5.2): lower a communication schedule
+//! plus per-rank tile schedules and sync plans into per-rank *executable
+//! plans* — the fused-kernel analogue.
+//!
+//! A [`RankProgram`] is the straight-line body of the fused kernel on one
+//! rank: compute segments (runs of swizzled tiles) interleaved with
+//! asynchronous transfer issues and signal waits, exactly as the generated
+//! Triton kernel of Fig. 5 would interleave them. Both execution paths
+//! interpret the same plan:
+//!
+//! * `sim::` scores it on the calibrated multi-GPU model (paper-scale), and
+//! * `exec::` runs it with real numerics via PJRT (validation-scale).
+
+use std::collections::HashMap;
+
+use crate::backend::{self, BackendKind};
+use crate::chunk::Chunk;
+use crate::depgraph::RankSync;
+use crate::error::{Error, Result};
+use crate::kernel::grid::{TileGrid, TileId};
+use crate::kernel::scheduler::TileScheduler;
+use crate::schedule::{CommOp, CommSchedule, OpRef};
+use crate::topo::{Rank, Topology};
+
+/// Global signal index: one signal per comm op, set when its transfer lands.
+pub type SignalId = usize;
+
+/// What a tile actually computes on the real-numerics path. `Sim`-only plans
+/// leave calls empty. The artifact names refer to `artifacts/manifest.json`
+/// entries; tensor names refer to the exec engine's buffer store.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CallSpec {
+    /// `out[rows] = a[rows] @ b` via a GEMM artifact. With `accumulate`,
+    /// the result adds into `out` instead of overwriting — used when the
+    /// destination region also receives reduce transfers (GEMM-RS/AR), so
+    /// every contribution commutes and no ordering race exists.
+    GemmRows {
+        artifact: String,
+        a: String,
+        b: String,
+        out: String,
+        /// Row range [start, end) of `a` and `out`.
+        rows: (usize, usize),
+        accumulate: bool,
+    },
+    /// One ring-attention step folding a K/V chunk into the running state.
+    AttnStep {
+        artifact: String,
+        q: String,
+        k: String,
+        v: String,
+        /// K/V row range [start, end).
+        kv_rows: (usize, usize),
+        /// State tensors (acc, m, l), updated in place.
+        acc: String,
+        m: String,
+        l: String,
+    },
+    /// `out = acc / l` (ring-attention finalize).
+    AttnFinalize { artifact: String, acc: String, l: String, out: String },
+    /// `out[rows] += x[rows]` (host-side combine for partial sums).
+    AddRows { x: String, out: String, rows: (usize, usize) },
+    /// Tensor-parallel FFN shard: `out (+)= gelu(x @ w1 + b1) @ w2` via the
+    /// fused L2 artifact (partial sum when `accumulate`).
+    FfnShard {
+        artifact: String,
+        x: String,
+        w1: String,
+        b1: String,
+        w2: String,
+        out: String,
+        accumulate: bool,
+    },
+}
+
+/// One transfer as realized by a concrete backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferDesc {
+    /// Signal set when the data has fully landed at `dst_rank`.
+    pub signal: SignalId,
+    /// Schedule op this realizes (provenance, exec data movement).
+    pub op: OpRef,
+    pub src_rank: Rank,
+    pub dst_rank: Rank,
+    /// Region moved (same logical region on both buffers for our templates).
+    pub src_chunk: Chunk,
+    pub dst_chunk: Chunk,
+    pub bytes: usize,
+    /// Contiguous pieces the region decomposes into (copy-engine launches).
+    pub pieces: usize,
+    pub backend: BackendKind,
+    pub comm_sms: usize,
+    pub reduce: bool,
+    /// Signals that must be set before the transfer may start (the
+    /// schedule's `(rank, index)` deps, translated).
+    pub dep_signals: Vec<SignalId>,
+}
+
+/// One straight-line instruction of a rank's fused-kernel body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanOp {
+    /// Run a segment of tiles in the given (already swizzled) order.
+    Compute(ComputeSeg),
+    /// Asynchronously start a transfer (returns immediately).
+    Issue(TransferDesc),
+    /// Block until a signal is set.
+    Wait(SignalId),
+    /// Fixed overhead (kernel launches, reorder passes — baselines).
+    Overhead { us: f64, label: &'static str },
+}
+
+/// A run of tiles executed back-to-back on the compute SMs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ComputeSeg {
+    /// Tiles in visit order (a contiguous slice of the swizzled schedule).
+    pub tiles: Vec<TileId>,
+    /// FLOPs per tile (uniform within the segment is typical; per-tile
+    /// values support edge tiles).
+    pub flops: Vec<f64>,
+    /// Real-numerics calls, one per tile position (may be empty for sim).
+    pub calls: Vec<CallSpec>,
+    /// Wave-quantized execution: true for separate kernel launches
+    /// (baselines), false for segments of a persistent fused kernel, whose
+    /// tiles stream continuously across wait boundaries (§3, Insight 1).
+    pub quantized: bool,
+}
+
+impl ComputeSeg {
+    pub fn total_flops(&self) -> f64 {
+        self.flops.iter().sum()
+    }
+}
+
+/// A rank's complete fused-kernel body.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankProgram {
+    pub ops: Vec<PlanOp>,
+}
+
+impl RankProgram {
+    pub fn num_tiles(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|o| match o {
+                PlanOp::Compute(c) => c.tiles.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+    pub fn num_transfers(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, PlanOp::Issue(_))).count()
+    }
+    pub fn num_waits(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, PlanOp::Wait(_))).count()
+    }
+}
+
+/// The compiled distributed operator: one program per rank + signal count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutablePlan {
+    pub world: usize,
+    pub per_rank: Vec<RankProgram>,
+    pub num_signals: usize,
+    /// SMs statically reserved for communication per device (0 for
+    /// copy-engine / co-located realizations).
+    pub reserved_comm_sms: usize,
+}
+
+impl ExecutablePlan {
+    pub fn total_flops(&self) -> f64 {
+        self.per_rank
+            .iter()
+            .flat_map(|p| &p.ops)
+            .map(|o| match o {
+                PlanOp::Compute(c) => c.total_flops(),
+                _ => 0.0,
+            })
+            .sum()
+    }
+    pub fn total_transfers(&self) -> usize {
+        self.per_rank.iter().map(|p| p.num_transfers()).sum()
+    }
+}
+
+impl ExecutablePlan {
+    /// Structural validation: every signal index in range, transfer ranks
+    /// inside the world, waits matched by a producing transfer. Plans built
+    /// by [`compile`] satisfy this by construction; hand-built plans (tests,
+    /// external tools) are checked by the simulator and executor on entry.
+    pub fn validate(&self) -> Result<()> {
+        if self.per_rank.len() != self.world {
+            return Err(Error::Codegen(format!(
+                "plan has {} rank programs for world {}",
+                self.per_rank.len(),
+                self.world
+            )));
+        }
+        let mut produced = vec![false; self.num_signals];
+        for (rank, prog) in self.per_rank.iter().enumerate() {
+            for (i, op) in prog.ops.iter().enumerate() {
+                let at = || format!("rank {rank} op {i}");
+                match op {
+                    PlanOp::Wait(s) => {
+                        if *s >= self.num_signals {
+                            return Err(Error::Codegen(format!(
+                                "{}: wait on signal {s} >= {}",
+                                at(),
+                                self.num_signals
+                            )));
+                        }
+                    }
+                    PlanOp::Issue(d) => {
+                        if d.signal >= self.num_signals {
+                            return Err(Error::Codegen(format!(
+                                "{}: transfer signal {} out of range",
+                                at(),
+                                d.signal
+                            )));
+                        }
+                        if d.src_rank >= self.world || d.dst_rank >= self.world {
+                            return Err(Error::Codegen(format!(
+                                "{}: transfer ranks {}->{} outside world {}",
+                                at(),
+                                d.src_rank,
+                                d.dst_rank,
+                                self.world
+                            )));
+                        }
+                        if d.dep_signals.iter().any(|&s| s >= self.num_signals) {
+                            return Err(Error::Codegen(format!(
+                                "{}: dep signal out of range",
+                                at()
+                            )));
+                        }
+                        produced[d.signal] = true;
+                    }
+                    PlanOp::Compute(seg) => {
+                        if seg.flops.len() != seg.tiles.len() {
+                            return Err(Error::Codegen(format!(
+                                "{}: {} flops entries for {} tiles",
+                                at(),
+                                seg.flops.len(),
+                                seg.tiles.len()
+                            )));
+                        }
+                    }
+                    PlanOp::Overhead { us, .. } => {
+                        if !us.is_finite() || *us < 0.0 {
+                            return Err(Error::Codegen(format!(
+                                "{}: bad overhead {us}",
+                                at()
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        // a wait on a signal no transfer ever sets = guaranteed deadlock
+        for (rank, prog) in self.per_rank.iter().enumerate() {
+            for op in &prog.ops {
+                if let PlanOp::Wait(s) = op {
+                    if !produced[*s] {
+                        return Err(Error::Codegen(format!(
+                            "rank {rank} waits on signal {s} that no transfer \
+                             produces (deadlock)"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Stable global signal numbering for a schedule's ops.
+pub fn signal_ids(sched: &CommSchedule) -> (HashMap<OpRef, SignalId>, usize) {
+    let mut map = HashMap::new();
+    let mut next = 0usize;
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for index in 0..ops.len() {
+            map.insert(OpRef { rank, index }, next);
+            next += 1;
+        }
+    }
+    (map, next)
+}
+
+/// Per-rank compute-side inputs to codegen.
+#[derive(Debug, Clone)]
+pub struct RankComputeInput {
+    pub grid: TileGrid,
+    /// Swizzled visiting order (must be a permutation of the grid).
+    pub order: TileScheduler,
+    /// Minimal (or barrier) sync plan for this rank.
+    pub sync: RankSync,
+    /// FLOPs per tile id (len == grid.num_tiles()).
+    pub tile_flops: Vec<f64>,
+    /// Real-numerics calls per tile id (empty map = sim-only plan). A tile
+    /// may carry several calls (e.g. the last ring-attention step plus the
+    /// finalize), executed in order.
+    pub tile_calls: HashMap<TileId, Vec<CallSpec>>,
+}
+
+/// Backend realization choice for the plan (one knob set of the autotuner).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Realization {
+    pub backend: BackendKind,
+    /// SMs driving communication (must satisfy backend feasibility).
+    pub comm_sms: usize,
+}
+
+impl Realization {
+    pub fn new(backend: BackendKind, comm_sms: usize) -> Self {
+        Realization { backend, comm_sms }
+    }
+}
+
+/// Compile a communication schedule + per-rank compute inputs into an
+/// executable plan under one backend realization.
+///
+/// Interleaving rule (the tile-scheduler alignment of §5.2): walking the
+/// swizzled tile order, at each position emit first the waits registered
+/// *before* that tile, then the tile; transfer issues triggered *after* a
+/// tile are emitted right behind it. Triggers with no producing tiles issue
+/// up front, before any compute.
+pub fn compile(
+    sched: &CommSchedule,
+    inputs: &[RankComputeInput],
+    real: Realization,
+    topo: &Topology,
+) -> Result<ExecutablePlan> {
+    if inputs.len() != sched.world {
+        return Err(Error::Codegen(format!(
+            "{} rank inputs for world {}",
+            inputs.len(),
+            sched.world
+        )));
+    }
+    let (sig, num_signals) = signal_ids(sched);
+    let mut per_rank = Vec::with_capacity(sched.world);
+    for (rank, input) in inputs.iter().enumerate() {
+        per_rank.push(compile_rank(rank, sched, input, real, topo, &sig)?);
+    }
+    let reserved = if backend::caps(real.backend).dedicated_sms { real.comm_sms } else { 0 };
+    Ok(ExecutablePlan { world: sched.world, per_rank, num_signals, reserved_comm_sms: reserved })
+}
+
+fn make_transfer(
+    owner: Rank,
+    opref: OpRef,
+    op: &CommOp,
+    sched: &CommSchedule,
+    real: Realization,
+    topo: &Topology,
+    sig: &HashMap<OpRef, SignalId>,
+) -> Result<TransferDesc> {
+    let (src_chunk, dst_chunk, reduce) = match op {
+        CommOp::P2p { src, dst, reduce, .. } => (src.clone(), dst.clone(), *reduce),
+        CommOp::LocalCopy { src, dst, .. } => (src.clone(), dst.clone(), false),
+        CommOp::Collective { .. } => {
+            return Err(Error::Codegen(
+                "collective ops must be lowered to P2P before codegen \
+                 (see lowering::collective) or realized via baselines::nccl"
+                    .into(),
+            ))
+        }
+    };
+    let src_rank = op.src_rank(owner);
+    let dst_rank = op.dst_rank(owner);
+    let link = topo.link(src_rank, dst_rank)?;
+    backend::check_feasible(real.backend, reduce, link.level, real.comm_sms)?;
+    let bytes = src_chunk.bytes(&sched.tensors)?;
+    let shape = sched.tensors.get(src_chunk.tensor)?.shape.clone();
+    let pieces = src_chunk.region.contiguous_pieces(&shape);
+    let dep_signals = op
+        .deps()
+        .iter()
+        .map(|d| {
+            sig.get(&OpRef { rank: d.rank, index: d.index })
+                .copied()
+                .ok_or_else(|| Error::Codegen(format!("unmapped dep {d:?}")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TransferDesc {
+        signal: sig[&opref],
+        op: opref,
+        src_rank,
+        dst_rank,
+        src_chunk,
+        dst_chunk,
+        bytes,
+        pieces,
+        backend: real.backend,
+        comm_sms: real.comm_sms,
+        reduce,
+        dep_signals,
+    })
+}
+
+fn compile_rank(
+    rank: Rank,
+    sched: &CommSchedule,
+    input: &RankComputeInput,
+    real: Realization,
+    topo: &Topology,
+    sig: &HashMap<OpRef, SignalId>,
+) -> Result<RankProgram> {
+    let n = input.grid.num_tiles();
+    if !input.order.is_permutation(n) {
+        return Err(Error::Codegen(format!(
+            "rank {rank}: tile order is not a permutation of {n} tiles"
+        )));
+    }
+    if input.tile_flops.len() != n {
+        return Err(Error::Codegen(format!(
+            "rank {rank}: tile_flops has {} entries for {n} tiles",
+            input.tile_flops.len()
+        )));
+    }
+    // Waits/triggers grouped by position — position-indexed vectors, not
+    // hash maps: this loop runs once per tile and dominated the compile
+    // profile under SipHash (perf pass, EXPERIMENTS §Perf).
+    let mut waits_at: Vec<Vec<SignalId>> = vec![Vec::new(); n];
+    for w in &input.sync.waits {
+        if w.before_pos >= n && n > 0 {
+            return Err(Error::Codegen(format!(
+                "rank {rank}: wait position {} out of {n} tiles",
+                w.before_pos
+            )));
+        }
+        let s = *sig
+            .get(&w.op)
+            .ok_or_else(|| Error::Codegen(format!("rank {rank}: unmapped wait op {:?}", w.op)))?;
+        waits_at[w.before_pos.min(n.saturating_sub(1))].push(s);
+    }
+    let mut issue_immediate: Vec<usize> = Vec::new();
+    let mut issue_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for t in &input.sync.triggers {
+        if t.op_index >= sched.per_rank[rank].len() {
+            return Err(Error::Codegen(format!(
+                "rank {rank}: trigger references op {} of {}",
+                t.op_index,
+                sched.per_rank[rank].len()
+            )));
+        }
+        match t.after_pos {
+            None => issue_immediate.push(t.op_index),
+            Some(p) => {
+                if p >= n {
+                    return Err(Error::Codegen(format!(
+                        "rank {rank}: trigger position {p} out of {n} tiles"
+                    )));
+                }
+                issue_at[p].push(t.op_index);
+            }
+        }
+    }
+
+    let mut ops: Vec<PlanOp> = Vec::new();
+    let emit_issues = |ops: &mut Vec<PlanOp>, idxs: &[usize]| -> Result<()> {
+        for &op_index in idxs {
+            let opref = OpRef { rank, index: op_index };
+            let op = &sched.per_rank[rank][op_index];
+            ops.push(PlanOp::Issue(make_transfer(rank, opref, op, sched, real, topo, sig)?));
+        }
+        Ok(())
+    };
+    emit_issues(&mut ops, &issue_immediate)?;
+
+    let mut seg =
+        ComputeSeg { tiles: Vec::new(), flops: Vec::new(), calls: Vec::new(), quantized: false };
+    let flush = |ops: &mut Vec<PlanOp>, seg: &mut ComputeSeg| {
+        if !seg.tiles.is_empty() {
+            ops.push(PlanOp::Compute(std::mem::take(seg)));
+        }
+    };
+    let has_calls = !input.tile_calls.is_empty();
+    for (pos, &tile) in input.order.order.iter().enumerate() {
+        if !waits_at[pos].is_empty() {
+            flush(&mut ops, &mut seg);
+            for &s in &waits_at[pos] {
+                ops.push(PlanOp::Wait(s));
+            }
+        }
+        seg.tiles.push(tile);
+        seg.flops.push(input.tile_flops[tile]);
+        if has_calls {
+            if let Some(calls) = input.tile_calls.get(&tile) {
+                seg.calls.extend(calls.iter().cloned());
+            }
+        }
+        if !issue_at[pos].is_empty() {
+            flush(&mut ops, &mut seg);
+            let idxs = std::mem::take(&mut issue_at[pos]);
+            emit_issues(&mut ops, &idxs)?;
+        }
+    }
+    flush(&mut ops, &mut seg);
+    Ok(RankProgram { ops })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{DType, Region, TensorTable};
+    use crate::depgraph::{Trigger, Wait};
+    use crate::schedule::{Dep, TransferKind};
+
+    /// 2 ranks, rank1 pushes 2 chunks to rank0 (second dep on first);
+    /// rank0's grid: 4 M-tiles; tiles 2,3 consume the chunks.
+    fn setup() -> (CommSchedule, Vec<RankComputeInput>, Topology) {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let mut s = CommSchedule::new(2, t);
+        for (i, r0) in [(0usize, 0usize), (1, 2)] {
+            let c = Chunk::new(x, Region::rows(r0, 2, 16));
+            let deps = if i == 0 { vec![] } else { vec![Dep::on(1, 0)] };
+            s.add_op(
+                1,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: 0,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps,
+                },
+            )
+            .unwrap();
+        }
+        let grid = TileGrid::gemm(8, 16, 2, 16).unwrap();
+        let mk_input = |sync: RankSync| RankComputeInput {
+            grid: grid.clone(),
+            order: TileScheduler::row_major(&grid),
+            sync,
+            tile_flops: vec![100.0; 4],
+            tile_calls: HashMap::new(),
+        };
+        let sync0 = RankSync {
+            waits: vec![
+                Wait { before_pos: 2, op: OpRef { rank: 1, index: 0 } },
+                Wait { before_pos: 3, op: OpRef { rank: 1, index: 1 } },
+            ],
+            triggers: vec![],
+        };
+        let sync1 = RankSync {
+            waits: vec![],
+            triggers: vec![
+                Trigger { after_pos: None, op_index: 0 },
+                Trigger { after_pos: Some(1), op_index: 1 },
+            ],
+        };
+        let topo = Topology::h100_node(2).unwrap();
+        (s, vec![mk_input(sync0), mk_input(sync1)], topo)
+    }
+
+    #[test]
+    fn compiles_interleaved_program() {
+        let (s, inputs, topo) = setup();
+        let plan =
+            compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo).unwrap();
+        assert_eq!(plan.world, 2);
+        assert_eq!(plan.num_signals, 2);
+        assert_eq!(plan.reserved_comm_sms, 0);
+        // rank0: compute [t0,t1], wait s0, compute [t2], wait s1, compute [t3]
+        let r0 = &plan.per_rank[0];
+        assert_eq!(r0.num_tiles(), 4);
+        assert_eq!(r0.num_waits(), 2);
+        match &r0.ops[0] {
+            PlanOp::Compute(c) => assert_eq!(c.tiles, vec![0, 1]),
+            o => panic!("expected compute, got {o:?}"),
+        }
+        assert!(matches!(r0.ops[1], PlanOp::Wait(0)));
+        // rank1: issue s0 up front; compute t0,t1; issue s1; compute t2,t3
+        let r1 = &plan.per_rank[1];
+        assert_eq!(r1.num_transfers(), 2);
+        assert!(matches!(&r1.ops[0], PlanOp::Issue(d) if d.signal == 0));
+        match &r1.ops[1] {
+            PlanOp::Compute(c) => assert_eq!(c.tiles, vec![0, 1]),
+            o => panic!("{o:?}"),
+        }
+        assert!(matches!(&r1.ops[2], PlanOp::Issue(d) if d.signal == 1));
+    }
+
+    #[test]
+    fn transfer_desc_fields() {
+        let (s, inputs, topo) = setup();
+        let plan =
+            compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo).unwrap();
+        let PlanOp::Issue(d) = &plan.per_rank[1].ops[0] else { panic!() };
+        assert_eq!(d.src_rank, 1);
+        assert_eq!(d.dst_rank, 0);
+        assert_eq!(d.bytes, 2 * 16 * 4);
+        assert_eq!(d.pieces, 1); // full rows are contiguous
+        assert!(d.dep_signals.is_empty());
+        let PlanOp::Issue(d2) = &plan.per_rank[1].ops[2] else { panic!() };
+        assert_eq!(d2.dep_signals, vec![0]); // dep on first push
+    }
+
+    #[test]
+    fn dedicated_backend_reserves_sms() {
+        let (s, inputs, topo) = setup();
+        let plan = compile(
+            &s,
+            &inputs,
+            Realization::new(BackendKind::TmaSpecialized, 16),
+            &topo,
+        )
+        .unwrap();
+        assert_eq!(plan.reserved_comm_sms, 16);
+        let plan2 = compile(
+            &s,
+            &inputs,
+            Realization::new(BackendKind::TmaColocated, 16),
+            &topo,
+        )
+        .unwrap();
+        assert_eq!(plan2.reserved_comm_sms, 0); // borrowed, not reserved
+    }
+
+    #[test]
+    fn infeasible_backend_rejected() {
+        let (mut s, inputs, topo) = setup();
+        // add a reduce op: TMA must be rejected
+        let x = s.tensors.lookup("x").unwrap();
+        let c = Chunk::new(x, Region::rows(4, 2, 16));
+        s.add_op(
+            1,
+            CommOp::P2p {
+                kind: TransferKind::Push,
+                peer: 0,
+                src: c.clone(),
+                dst: c,
+                reduce: true,
+                deps: vec![],
+            },
+        )
+        .unwrap();
+        let mut inputs = inputs;
+        inputs[1].sync.triggers.push(Trigger { after_pos: None, op_index: 2 });
+        let r = compile(&s, &inputs, Realization::new(BackendKind::TmaSpecialized, 16), &topo);
+        assert!(r.is_err());
+        let ok = compile(&s, &inputs, Realization::new(BackendKind::LdStSpecialized, 16), &topo);
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let (s, mut inputs, topo) = setup();
+        // non-permutation order
+        inputs[0].order = TileScheduler { order: vec![0, 0, 1, 2] };
+        assert!(compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo)
+            .is_err());
+        let (s, mut inputs, topo) = setup();
+        inputs[0].tile_flops = vec![1.0; 2];
+        assert!(compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo)
+            .is_err());
+        let (s, inputs, topo) = setup();
+        assert!(compile(&s, &inputs[..1], Realization::new(BackendKind::CopyEngine, 0), &topo)
+            .is_err());
+    }
+
+    #[test]
+    fn collective_must_be_lowered_first() {
+        let (mut s, mut inputs, topo) = setup();
+        let x = s.tensors.lookup("x").unwrap();
+        let full = Chunk::new(x, Region::full(&[8, 16]));
+        s.add_op(
+            0,
+            CommOp::Collective {
+                kind: crate::schedule::CollectiveKind::AllGather,
+                src: full.clone(),
+                dst: full,
+                ranks: vec![0, 1],
+                deps: vec![],
+            },
+        )
+        .unwrap();
+        inputs[0].sync.triggers.push(Trigger { after_pos: None, op_index: 0 });
+        let e = compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo)
+            .unwrap_err();
+        assert!(e.to_string().contains("lowered"));
+    }
+
+    #[test]
+    fn plan_stats() {
+        let (s, inputs, topo) = setup();
+        let plan =
+            compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo).unwrap();
+        assert_eq!(plan.total_transfers(), 2);
+        assert_eq!(plan.total_flops(), 8.0 * 100.0);
+    }
+
+    #[test]
+    fn plan_validation_catches_corruption() {
+        let (s, inputs, topo) = setup();
+        let mut plan =
+            compile(&s, &inputs, Realization::new(BackendKind::CopyEngine, 0), &topo).unwrap();
+        plan.validate().unwrap();
+        // wait on out-of-range signal
+        let mut bad = plan.clone();
+        bad.per_rank[0].ops.push(PlanOp::Wait(99));
+        assert!(bad.validate().is_err());
+        // wait on a signal no transfer produces
+        let mut bad2 = plan.clone();
+        bad2.num_signals = 3;
+        bad2.per_rank[0].ops.push(PlanOp::Wait(2));
+        let e = bad2.validate().unwrap_err();
+        assert!(e.to_string().contains("deadlock"), "{e}");
+        // negative overhead
+        let mut bad3 = plan.clone();
+        bad3.per_rank[0].ops.push(PlanOp::Overhead { us: -1.0, label: "x" });
+        assert!(bad3.validate().is_err());
+        // transfer rank out of world
+        if let Some(PlanOp::Issue(d)) =
+            plan.per_rank[1].ops.iter_mut().find(|o| matches!(o, PlanOp::Issue(_)))
+        {
+            d.dst_rank = 9;
+        }
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn signal_ids_stable_and_dense() {
+        let (s, _, _) = setup();
+        let (map, n) = signal_ids(&s);
+        assert_eq!(n, 2);
+        let mut vals: Vec<_> = map.values().copied().collect();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![0, 1]);
+    }
+}

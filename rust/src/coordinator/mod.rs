@@ -1,0 +1,97 @@
+//! The Syncopate coordinator: operator registry, compilation entry points,
+//! and the request-serving loop.
+//!
+//! This is L3's integration layer. It owns the two compilation paths:
+//!
+//! * [`operators`] — paper-scale operator compilation for the performance
+//!   model (`sim::`): schedules from templates, grids from the annotated L1
+//!   kernel sources, chunk-major swizzles, minimal sync, one plan per
+//!   [`crate::workload::OperatorInstance`] × [`TuneConfig`].
+//! * [`execases`] — validation-scale cases with real buffers, AOT artifacts
+//!   and numeric verification against host oracles (`exec::`).
+//! * [`service`] — a threaded request loop that serves compiled operators
+//!   (tune-once, run-many), the "runtime" half of the paper's compiler +
+//!   runtime framework.
+
+pub mod execases;
+pub mod operators;
+pub mod service;
+
+use crate::backend::BackendKind;
+use crate::codegen::Realization;
+use crate::kernel::scheduler::{IntraOrder, SwizzlePolicy};
+
+/// One point in the communication-centric tuning space (§5.3):
+/// inter-chunk (split factor) + intra-chunk (backend, SM allocation, tile
+/// shape, tile order) knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneConfig {
+    /// Chunk split factor: each logical transfer splits into this many
+    /// sub-chunks (1 = one chunk per shard).
+    pub split: usize,
+    /// Backend + communication SM allocation.
+    pub real: Realization,
+    /// Tile visiting order policy.
+    pub swizzle: SwizzlePolicy,
+    /// Compute tile shape (GEMM blocks; attention uses block_m as Bq).
+    pub block_m: usize,
+    pub block_n: usize,
+    pub block_k: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            split: 2,
+            real: Realization::new(BackendKind::CopyEngine, 0),
+            swizzle: SwizzlePolicy::ChunkMajor { intra: IntraOrder::Snake },
+            block_m: 128,
+            block_n: 128,
+            block_k: 128,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// Compact label for reports.
+    pub fn label(&self) -> String {
+        let sw = match &self.swizzle {
+            SwizzlePolicy::RowMajor => "row",
+            SwizzlePolicy::ColMajor => "col",
+            SwizzlePolicy::ChunkMajor { intra: IntraOrder::RowMajor } => "chunk",
+            SwizzlePolicy::ChunkMajor { intra: IntraOrder::Snake } => "chunk-snake",
+            SwizzlePolicy::ChunkMajor { intra: IntraOrder::GroupedCols { .. } } => "chunk-group",
+        };
+        format!(
+            "s{}-{}-sm{}-{}x{}x{}-{}",
+            self.split,
+            self.real.backend.name(),
+            self.real.comm_sms,
+            self.block_m,
+            self.block_n,
+            self.block_k,
+            sw
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = TuneConfig::default();
+        assert!(c.split >= 1);
+        assert_eq!(c.block_m, 128);
+        assert!(c.label().contains("copy-engine"));
+    }
+
+    #[test]
+    fn labels_distinguish_configs() {
+        let a = TuneConfig::default();
+        let mut b = a.clone();
+        b.split = 4;
+        assert_ne!(a.label(), b.label());
+    }
+}

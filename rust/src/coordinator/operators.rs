@@ -1,0 +1,434 @@
+//! Paper-scale operator compilation: workload instance + tuning config →
+//! executable plan for the performance model.
+//!
+//! For each operator kind this module picks the schedule template, derives
+//! the per-rank tile grid (blocks come from the annotated L1 kernel source
+//! unless the config overrides them), maps chunks to tiles, applies the
+//! scheduler swizzle, inserts minimal sync, and hands everything to
+//! [`crate::codegen::compile`].
+
+use std::collections::HashMap;
+
+use crate::chunk::TensorTable;
+use crate::codegen::{compile, ExecutablePlan, RankComputeInput};
+use crate::coordinator::TuneConfig;
+use crate::depgraph::{plan_rank_sync, plan_rank_sync_barrier, ChunkTileMap};
+use crate::error::{Error, Result};
+use crate::kernel::grid::{Axis, TileGrid};
+use crate::kernel::scheduler::{SwizzlePolicy, TileScheduler};
+use crate::schedule::{templates, CommSchedule, OpRef};
+use crate::sim::engine::SimParams;
+use crate::sim::waves;
+use crate::topo::{Rank, Topology};
+use crate::workload::{OpKind, OperatorInstance};
+
+/// How an operator's chunks relate to its tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ChunkRole {
+    /// Incoming chunks are read by tiles (AG-style inputs).
+    ConsumedByTiles,
+    /// Outgoing chunks are written by tiles (RS/AR-style outputs).
+    ProducedByTiles,
+}
+
+/// Compile a paper-scale operator under one tuning configuration.
+pub fn compile_operator(
+    op: &OperatorInstance,
+    cfg: &TuneConfig,
+    topo: &Topology,
+) -> Result<(ExecutablePlan, SimParams)> {
+    compile_operator_inner(op, cfg, topo, false)
+}
+
+/// Same, but with conservative barrier sync (the `ablation_sync` study).
+pub fn compile_operator_barrier_sync(
+    op: &OperatorInstance,
+    cfg: &TuneConfig,
+    topo: &Topology,
+) -> Result<(ExecutablePlan, SimParams)> {
+    compile_operator_inner(op, cfg, topo, true)
+}
+
+fn compile_operator_inner(
+    op: &OperatorInstance,
+    cfg: &TuneConfig,
+    topo: &Topology,
+    barrier: bool,
+) -> Result<(ExecutablePlan, SimParams)> {
+    if op.world != topo.world {
+        return Err(Error::Coordinator(format!(
+            "operator world {} != topology {}",
+            op.world, topo.world
+        )));
+    }
+    let (sched, grid, role, row_map) = build_schedule_and_grid(op, cfg, topo)?;
+    let flops_per_rank = op.flops() / op.world as f64;
+    let n_tiles = grid.num_tiles();
+    let tile_flops = vec![flops_per_rank / n_tiles as f64; n_tiles];
+
+    let mut inputs = Vec::with_capacity(op.world);
+    for rank in 0..op.world {
+        let map = chunk_tile_map(&sched, rank, &grid, role, &row_map)?;
+        let order = match (&cfg.swizzle, role) {
+            (SwizzlePolicy::ChunkMajor { .. }, ChunkRole::ConsumedByTiles) => {
+                let groups = map.consumer_groups(rank);
+                let arrival: Vec<usize> = (0..groups.len()).collect();
+                if groups.is_empty() {
+                    TileScheduler::row_major(&grid)
+                } else {
+                    TileScheduler::from_policy(&grid, &cfg.swizzle, Some((&groups, &arrival)))?
+                }
+            }
+            (SwizzlePolicy::ChunkMajor { .. }, ChunkRole::ProducedByTiles) => {
+                // producer side: visit tiles in the order their chunks must
+                // depart (issue order of this rank's ops)
+                producer_order(&sched, rank, &grid, &map)?
+            }
+            (policy, _) => TileScheduler::from_policy(&grid, policy, None)?,
+        };
+        let sync = if barrier {
+            plan_rank_sync_barrier(rank, &sched, &map, grid.num_tiles())?
+        } else {
+            plan_rank_sync(rank, &sched, &order, &map)?
+        };
+        inputs.push(RankComputeInput {
+            grid: grid.clone(),
+            order,
+            sync,
+            tile_flops: tile_flops.clone(),
+            tile_calls: HashMap::new(),
+        });
+    }
+    let plan = compile(&sched, &inputs, cfg.real, topo)?;
+    // Achieved efficiency = MXU fill for the tile shape × a cache-locality
+    // term from the visiting order (Fig. 11d: tile order changes operand
+    // reuse in L2/VMEM; orders that revisit operands back-to-back run
+    // closer to peak). Calibrated small: order explains ~10%, shape the rest.
+    let locality = inputs
+        .first()
+        .map(|i| i.order.locality_score(&i.grid))
+        .unwrap_or(1.0);
+    let params = SimParams {
+        mxu_eff: waves::mxu_efficiency(cfg.block_m, cfg.block_n, cfg.block_k)
+            * (0.90 + 0.10 * locality),
+    };
+    Ok((plan, params))
+}
+
+/// Row-range mapping from a chunk's global rows to grid rows (identity for
+/// most operators; A2A maps global block positions to local token rows).
+type RowMap = fn(world: usize, m_global: usize, row: usize, rank: Rank) -> usize;
+
+fn identity_rows(_w: usize, _m: usize, row: usize, _r: Rank) -> usize {
+    row
+}
+
+/// A2A: global row of block (i, j) maps to local row i*blk + offset on rank j.
+fn a2a_rows(w: usize, m_global: usize, row: usize, _r: Rank) -> usize {
+    let blk = m_global / (w * w);
+    let i = row / (w * blk);
+    let a = row % blk;
+    i * blk + a
+}
+
+fn build_schedule_and_grid(
+    op: &OperatorInstance,
+    cfg: &TuneConfig,
+    topo: &Topology,
+) -> Result<(CommSchedule, TileGrid, ChunkRole, RowMap)> {
+    let w = op.world;
+    let mut table = TensorTable::new();
+    let (sched, grid, role, rmap): (CommSchedule, TileGrid, ChunkRole, RowMap) = match op.kind {
+        OpKind::AgGemm => {
+            let x = table.declare("x", &[op.m, op.k], op.dtype)?;
+            let s = if topo.ranks_per_node < w {
+                templates::all_gather_hierarchical(&table, x, 0, topo)?
+            } else {
+                templates::all_gather_swizzle(&table, x, 0, w)?
+            };
+            let grid = TileGrid::gemm(op.m, op.n, cfg.block_m, cfg.block_n)?;
+            (s, grid, ChunkRole::ConsumedByTiles, identity_rows as RowMap)
+        }
+        OpKind::GemmRs => {
+            let y = table.declare("y", &[op.m, op.n], op.dtype)?;
+            let s = templates::reduce_scatter_direct(&table, y, 0, w)?;
+            let grid = TileGrid::gemm(op.m, op.n, cfg.block_m, cfg.block_n)?;
+            (s, grid, ChunkRole::ProducedByTiles, identity_rows as RowMap)
+        }
+        OpKind::GemmAr => {
+            let y = table.declare("y", &[op.m, op.n], op.dtype)?;
+            let s = templates::all_reduce_partition(&table, y, 0, w)?;
+            let grid = TileGrid::gemm(op.m, op.n, cfg.block_m, cfg.block_n)?;
+            (s, grid, ChunkRole::ProducedByTiles, identity_rows as RowMap)
+        }
+        OpKind::A2aGemm => {
+            let rows = op.m - op.m % (w * w); // align to w^2 blocks
+            let x = table.declare("x", &[rows, op.k], op.dtype)?;
+            let s = templates::all_to_all(&table, x, 0, w)?;
+            let grid = TileGrid::gemm(rows / w, op.n, cfg.block_m, cfg.block_n)?;
+            (s, grid, ChunkRole::ConsumedByTiles, a2a_rows as RowMap)
+        }
+        OpKind::RingAttn | OpKind::AttnSp => {
+            // K and V move; grid is Q-blocks x KV-rows.
+            let cols = op.n * op.k; // heads * head_dim
+            let k = table.declare("k", &[op.m, cols], op.dtype)?;
+            let v = table.declare("v", &[op.m, cols], op.dtype)?;
+            let (mut s, s2) = if op.kind == OpKind::RingAttn {
+                (
+                    templates::all_gather_ring(&table, k, 0, w)?,
+                    templates::all_gather_ring(&table, v, 0, w)?,
+                )
+            } else {
+                (
+                    templates::all_gather_swizzle(&table, k, 0, w)?,
+                    templates::all_gather_swizzle(&table, v, 0, w)?,
+                )
+            };
+            s.append(&s2)?;
+            let grid = TileGrid::new(vec![
+                Axis::new("Q", op.m / w, cfg.block_m)?,
+                Axis::new("S", op.m, op.m / w)?, // one S-tile per KV shard
+            ])?;
+            (s, grid, ChunkRole::ConsumedByTiles, identity_rows as RowMap)
+        }
+        OpKind::AttnHp => {
+            // Ulysses: A2A(qkv) in, A2A(out) back; local full attention.
+            let cols = op.n * op.k;
+            let rows = op.m - op.m % (w * w);
+            let qkv = table.declare("qkv", &[rows, 3 * cols], op.dtype)?;
+            let out = table.declare("out", &[rows, cols], op.dtype)?;
+            let mut s = templates::all_to_all(&table, qkv, 0, w)?;
+            let s2 = templates::all_to_all(&table, out, 0, w)?;
+            s.append(&s2)?;
+            let grid = TileGrid::new(vec![
+                Axis::new("Q", rows / w, cfg.block_m)?,
+                Axis::new("S", rows, rows / w)?,
+            ])?;
+            // chunks of qkv are consumed; chunks of out are produced — we
+            // approximate with the dominant (consumed) role and let the out
+            // A2A trail the kernel (its producers are mapped below).
+            (s, grid, ChunkRole::ConsumedByTiles, a2a_rows as RowMap)
+        }
+    };
+    let sched = sched.split_p2p(0, cfg.split).map_err(|e| {
+        Error::Coordinator(format!("split {} infeasible for {}: {e}", cfg.split, op.label()))
+    })?;
+    Ok((sched, grid, role, rmap))
+}
+
+/// Build the chunk↔tile map for one rank by intersecting each op's region
+/// rows with the grid's row axis.
+fn chunk_tile_map(
+    sched: &CommSchedule,
+    rank: Rank,
+    grid: &TileGrid,
+    role: ChunkRole,
+    row_map: &RowMap,
+) -> Result<ChunkTileMap> {
+    let mut map = ChunkTileMap::default();
+    let m_local = grid.axes[0].size;
+    let free_axes = grid.rank() - 1;
+    for (r, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            let opref = OpRef { rank: r, index };
+            match role {
+                ChunkRole::ConsumedByTiles => {
+                    if op.dst_rank(r) != rank {
+                        continue;
+                    }
+                    let reg = &op.produced_chunk().region;
+                    let m_glob = sched.tensors.get(op.produced_chunk().tensor)?.shape[0];
+                    let a = row_map(sched.world, m_glob, reg.offset[0], rank);
+                    let b = a + reg.sizes[0];
+                    // grid axis 0 may be the KV axis (attention) or local
+                    // token rows; clamp to grid size
+                    let (axis_idx, span) = if grid.axes.len() > 1 && grid.axes[1].name == "S" {
+                        (1usize, (reg.offset[0], reg.offset[0] + reg.sizes[0]))
+                    } else {
+                        (0usize, (a, b.min(m_local)))
+                    };
+                    if span.0 >= span.1 {
+                        continue;
+                    }
+                    let mut ranges: Vec<Option<(usize, usize)>> = vec![None; grid.rank()];
+                    ranges[axis_idx] = Some(span);
+                    let tiles = grid.tiles_intersecting(&ranges)?;
+                    map.consumers.entry(opref).or_default().extend(tiles);
+                }
+                ChunkRole::ProducedByTiles => {
+                    if op.src_rank(r) != rank {
+                        continue;
+                    }
+                    let reg = &op.consumed_chunk().region;
+                    let span = (reg.offset[0], reg.offset[0] + reg.sizes[0]);
+                    let mut ranges: Vec<Option<(usize, usize)>> = vec![None; grid.rank()];
+                    ranges[0] = Some(span);
+                    let _ = free_axes;
+                    let tiles = grid.tiles_intersecting(&ranges)?;
+                    map.producers.entry(opref).or_default().extend(tiles);
+                }
+            }
+        }
+    }
+    Ok(map)
+}
+
+/// Producer-side swizzle: visit tiles so that chunks depart in this rank's
+/// op issue order — tiles feeding op 0 first, then op 1, remainder last.
+fn producer_order(
+    sched: &CommSchedule,
+    rank: Rank,
+    grid: &TileGrid,
+    map: &ChunkTileMap,
+) -> Result<TileScheduler> {
+    let n = grid.num_tiles();
+    let mut order = Vec::with_capacity(n);
+    let mut placed = vec![false; n];
+    for index in 0..sched.per_rank[rank].len() {
+        if let Some(tiles) = map.producers.get(&OpRef { rank, index }) {
+            let mut ts = tiles.clone();
+            ts.sort_unstable();
+            for t in ts {
+                if !placed[t] {
+                    placed[t] = true;
+                    order.push(t);
+                }
+            }
+        }
+    }
+    for t in 0..n {
+        if !placed[t] {
+            order.push(t);
+        }
+    }
+    Ok(TileScheduler { order })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::simulate;
+    use crate::workload::{OperatorInstance, LLAMA3_8B};
+
+    fn topo(w: usize) -> Topology {
+        Topology::h100_node(w).unwrap()
+    }
+
+    #[test]
+    fn all_gemm_kinds_compile_and_simulate() {
+        for kind in [OpKind::AgGemm, OpKind::GemmRs, OpKind::GemmAr, OpKind::A2aGemm] {
+            let op = OperatorInstance::gemm(kind, &LLAMA3_8B, 4096, 4);
+            let cfg = TuneConfig::default();
+            let cfg = match kind {
+                // reduce ops need a reduce-capable backend
+                OpKind::GemmRs | OpKind::GemmAr => TuneConfig {
+                    real: crate::codegen::Realization::new(
+                        crate::backend::BackendKind::LdStSpecialized,
+                        16,
+                    ),
+                    ..cfg
+                },
+                _ => cfg,
+            };
+            let (plan, params) = compile_operator(&op, &cfg, &topo(4))
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            assert_eq!(plan.world, 4);
+            assert!(plan.total_transfers() > 0, "{kind:?}");
+            let r = simulate(&plan, &topo(4), params).unwrap();
+            assert!(r.makespan_us > 0.0, "{kind:?}");
+            assert!(r.tflops() > 1.0, "{kind:?}: {}", r.tflops());
+        }
+    }
+
+    #[test]
+    fn attention_kinds_compile_and_simulate() {
+        for kind in [OpKind::RingAttn, OpKind::AttnSp, OpKind::AttnHp] {
+            let op = OperatorInstance::attention(kind, &LLAMA3_8B, 8192, 4);
+            let cfg = TuneConfig { split: 1, ..TuneConfig::default() };
+            let (plan, params) =
+                compile_operator(&op, &cfg, &topo(4)).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            let r = simulate(&plan, &topo(4), params).unwrap();
+            assert!(r.makespan_us > 0.0);
+            assert!(r.tflops() > 1.0, "{kind:?}: {}", r.tflops());
+        }
+    }
+
+    #[test]
+    fn split_factor_changes_transfer_count() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let t = topo(4);
+        let p1 = compile_operator(&op, &TuneConfig { split: 1, ..Default::default() }, &t)
+            .unwrap()
+            .0;
+        let p4 = compile_operator(&op, &TuneConfig { split: 4, ..Default::default() }, &t)
+            .unwrap()
+            .0;
+        assert_eq!(p4.total_transfers(), 4 * p1.total_transfers());
+    }
+
+    #[test]
+    fn overlap_beats_barrier_sync() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 8192, 8);
+        let t = topo(8);
+        let cfg = TuneConfig::default();
+        let (p_min, params) = compile_operator(&op, &cfg, &t).unwrap();
+        let (p_bar, _) = compile_operator_barrier_sync(&op, &cfg, &t).unwrap();
+        let r_min = simulate(&p_min, &t, params).unwrap();
+        let r_bar = simulate(&p_bar, &t, params).unwrap();
+        assert!(
+            r_min.makespan_us <= r_bar.makespan_us * 1.001,
+            "minimal sync {} vs barrier {}",
+            r_min.makespan_us,
+            r_bar.makespan_us
+        );
+        // fine-grained overlap should hide strictly more communication
+        assert!(r_min.exposed_wait_us <= r_bar.exposed_wait_us);
+    }
+
+    #[test]
+    fn world_mismatch_rejected() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        assert!(compile_operator(&op, &TuneConfig::default(), &topo(8)).is_err());
+    }
+
+    #[test]
+    fn infeasible_split_rejected() {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        // shard = 1024 rows; split 7 does not divide
+        let cfg = TuneConfig { split: 7, ..Default::default() };
+        assert!(compile_operator(&op, &cfg, &topo(4)).is_err());
+    }
+
+    #[test]
+    fn reduce_on_copy_engine_rejected() {
+        let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 4096, 4);
+        // default config uses the copy engine, which cannot reduce
+        let e = compile_operator(&op, &TuneConfig::default(), &topo(4)).unwrap_err();
+        assert_eq!(e.subsystem(), "backend");
+    }
+
+    #[test]
+    fn hierarchical_template_on_multinode() {
+        let t = Topology::h100_multinode(2, 4).unwrap();
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 8);
+        // TMA can't cross nodes; ldst can
+        let cfg = TuneConfig {
+            real: crate::codegen::Realization::new(
+                crate::backend::BackendKind::LdStSpecialized,
+                16,
+            ),
+            ..Default::default()
+        };
+        let (plan, params) = compile_operator(&op, &cfg, &t).unwrap();
+        let r = simulate(&plan, &t, params).unwrap();
+        assert!(r.makespan_us > 0.0);
+    }
+
+    #[test]
+    fn a2a_row_map() {
+        // w=2, m=8: blk=2; block (1,0) starts at global row 4 -> local row 2
+        assert_eq!(a2a_rows(2, 8, 4, 0), 2);
+        assert_eq!(a2a_rows(2, 8, 5, 0), 3);
+        assert_eq!(a2a_rows(2, 8, 0, 0), 0);
+    }
+}

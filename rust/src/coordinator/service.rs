@@ -1,0 +1,185 @@
+//! The serving half of the framework: a threaded coordinator that owns the
+//! topology, compiles operators on demand (tune-once, cached), and answers
+//! simulation/estimation requests.
+//!
+//! The offline build has no tokio; the loop is a std thread draining an
+//! mpsc queue, which is all the request path needs (requests are CPU-bound
+//! compilations/simulations, not I/O).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
+
+use crate::coordinator::operators::compile_operator;
+use crate::coordinator::TuneConfig;
+use crate::error::{Error, Result};
+use crate::sim::engine::simulate;
+use crate::topo::Topology;
+use crate::workload::{OpKind, OperatorInstance};
+
+/// Parse an operator kind by its report name (the CLI's registry).
+pub fn opkind_by_name(name: &str) -> Result<OpKind> {
+    let all = [
+        OpKind::AgGemm,
+        OpKind::GemmRs,
+        OpKind::GemmAr,
+        OpKind::A2aGemm,
+        OpKind::AttnHp,
+        OpKind::AttnSp,
+        OpKind::RingAttn,
+    ];
+    all.into_iter().find(|k| k.name() == name).ok_or_else(|| {
+        Error::Coordinator(format!(
+            "unknown operator `{name}` (known: {})",
+            all.map(|k| k.name()).join(", ")
+        ))
+    })
+}
+
+/// One request to the coordinator.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Compile (cached) and simulate one operator configuration.
+    Run { op: OperatorInstance, cfg: TuneConfig },
+}
+
+/// Simulation outcome returned to the caller.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub label: String,
+    pub makespan_us: f64,
+    pub tflops: f64,
+    pub exposed_wait_us: f64,
+    /// True when the compiled plan came from the coordinator's cache.
+    pub cache_hit: bool,
+}
+
+enum Envelope {
+    Req(Request, mpsc::Sender<Result<Response>>),
+    Shutdown,
+}
+
+/// A running coordinator service.
+pub struct Coordinator {
+    tx: mpsc::Sender<Envelope>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread.
+    pub fn spawn(topo: Topology) -> Self {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let handle = thread::spawn(move || worker(topo, rx));
+        Coordinator { tx, handle: Some(handle) }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Envelope::Req(req, rtx))
+            .map_err(|_| Error::Coordinator("coordinator thread is gone".into()))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit and block for the answer.
+    pub fn run(&self, op: OperatorInstance, cfg: TuneConfig) -> Result<Response> {
+        self.submit(Request::Run { op, cfg })?
+            .recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Envelope::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(topo: Topology, rx: mpsc::Receiver<Envelope>) {
+    // plan cache: same (operator, config) never recompiles
+    let mut cache: HashMap<String, (crate::codegen::ExecutablePlan, crate::sim::SimParams)> =
+        HashMap::new();
+    while let Ok(env) = rx.recv() {
+        match env {
+            Envelope::Shutdown => break,
+            Envelope::Req(Request::Run { op, cfg }, reply) => {
+                let key = format!("{}|{}", op.label(), cfg.label());
+                let cache_hit = cache.contains_key(&key);
+                let compiled = if cache_hit {
+                    Ok(cache[&key].clone())
+                } else {
+                    compile_operator(&op, &cfg, &topo)
+                };
+                let resp = compiled.and_then(|(plan, params)| {
+                    if !cache_hit {
+                        cache.insert(key.clone(), (plan.clone(), params));
+                    }
+                    let r = simulate(&plan, &topo, params)?;
+                    Ok(Response {
+                        label: key.clone(),
+                        makespan_us: r.makespan_us,
+                        tflops: r.tflops(),
+                        exposed_wait_us: r.exposed_wait_us,
+                        cache_hit,
+                    })
+                });
+                let _ = reply.send(resp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LLAMA3_8B;
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(opkind_by_name("ag-gemm").unwrap(), OpKind::AgGemm);
+        assert_eq!(opkind_by_name("ring-attn").unwrap(), OpKind::RingAttn);
+        assert!(opkind_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn serve_and_cache() {
+        let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let r1 = coord.run(op, TuneConfig::default()).unwrap();
+        assert!(r1.tflops > 0.0);
+        assert!(!r1.cache_hit);
+        let r2 = coord.run(op, TuneConfig::default()).unwrap();
+        assert!(r2.cache_hit);
+        assert_eq!(r1.makespan_us, r2.makespan_us); // deterministic
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+        // world mismatch: operator says 8, topo is 4
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 8);
+        assert!(coord.run(op, TuneConfig::default()).is_err());
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+        let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 4096, 4);
+        let cfg = TuneConfig {
+            real: crate::codegen::Realization::new(
+                crate::backend::BackendKind::LdStSpecialized,
+                16,
+            ),
+            ..Default::default()
+        };
+        let rxs: Vec<_> =
+            (0..4).map(|_| coord.submit(Request::Run { op, cfg: cfg.clone() }).unwrap()).collect();
+        let times: Vec<f64> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().makespan_us).collect();
+        assert!(times.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,381 @@
+//! Chunk↔tile dependence graph and minimal synchronization insertion
+//! (paper §5.2, "Dependency Parsing").
+//!
+//! For each chunk we track its producer(s) and consumer(s): which comm op
+//! materializes it on a rank, which tiles read it, and which tiles must
+//! finish before an outgoing op may read its source region. From this the
+//! compiler derives the *minimal* set of wait points — a tile consuming a
+//! chunk cannot start before the chunk's transfer completes, and a transfer
+//! reading kernel output cannot issue before its producing tiles finish —
+//! and nothing more. The conservative alternative (barrier per wave /
+//! kernel boundary) is also provided for the `ablation_sync` study.
+
+use std::collections::HashMap;
+
+
+use crate::error::{Error, Result};
+use crate::kernel::grid::TileId;
+use crate::kernel::scheduler::TileScheduler;
+use crate::schedule::{CommSchedule, OpRef};
+use crate::topo::Rank;
+
+/// Chunk↔tile containment for one rank's view of a schedule.
+///
+/// Built by the operator layer (it knows how tensor regions map to grid
+/// axes); consumed by sync planning, the scheduler swizzle and codegen.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChunkTileMap {
+    /// Comm op -> tiles (on the op's destination rank) that READ the chunk
+    /// the op delivers.
+    pub consumers: HashMap<OpRef, Vec<TileId>>,
+    /// Comm op -> tiles (on the op's source rank) that WRITE the region the
+    /// op sends. Empty = the source data pre-exists (weights, inputs).
+    pub producers: HashMap<OpRef, Vec<TileId>>,
+}
+
+impl ChunkTileMap {
+    /// Tiles feeding from any comm op, grouped per op — the chunk groups the
+    /// scheduler swizzle consumes.
+    ///
+    /// Grouping is keyed on the op's position in the *arrival* list (see
+    /// [`ChunkTileMap::arrival_order`]); the `rank` argument is currently
+    /// informational (maps are already built per-rank) but kept for API
+    /// stability with multi-rank maps.
+    /// A tile fed by several ops (e.g. both the K and the V chunk of the
+    /// same rows) is assigned to its LAST-arriving op's group — it cannot
+    /// start earlier anyway. Group keys are compacted to `0..n` in arrival
+    /// order, matching the `arrival` list expected by
+    /// [`crate::kernel::scheduler::TileScheduler::chunk_major`].
+    pub fn consumer_groups(&self, _rank: Rank) -> HashMap<usize, Vec<TileId>> {
+        let order = self.arrival_order();
+        // tile -> latest arrival index among its feeding ops, dense vectors
+        // (this runs once per rank per compile; hashed maps dominated the
+        // profile — perf pass, EXPERIMENTS §Perf)
+        let max_tile = self
+            .consumers
+            .values()
+            .flat_map(|ts| ts.iter().copied())
+            .max()
+            .map(|t| t + 1)
+            .unwrap_or(0);
+        let mut latest: Vec<Option<usize>> = vec![None; max_tile];
+        for (k, op) in order.iter().enumerate() {
+            if let Some(tiles) = self.consumers.get(op) {
+                for &t in tiles {
+                    latest[t] = Some(latest[t].map_or(k, |e| e.max(k)));
+                }
+            }
+        }
+        let mut by_arrival: Vec<Vec<TileId>> = vec![Vec::new(); order.len()];
+        for (t, k) in latest.into_iter().enumerate() {
+            if let Some(k) = k {
+                by_arrival[k].push(t); // ascending t by construction
+            }
+        }
+        let mut g = HashMap::new();
+        let mut compact = 0usize;
+        for tiles in by_arrival {
+            if !tiles.is_empty() {
+                g.insert(compact, tiles);
+                compact += 1;
+            }
+        }
+        g
+    }
+
+    /// Deterministic arrival order of consumed ops: ops sorted by
+    /// (rank, index) — the issue order of the schedule. The simulator may
+    /// refine this with measured completion times; for planning, issue order
+    /// is the canonical estimate.
+    pub fn arrival_order(&self) -> Vec<OpRef> {
+        let mut ops: Vec<OpRef> = self.consumers.keys().copied().collect();
+        ops.sort();
+        ops
+    }
+}
+
+/// A wait inserted before the tile at `before_pos` in the visiting order:
+/// the tile must not start until `op`'s transfer signal is set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Wait {
+    pub before_pos: usize,
+    pub op: OpRef,
+}
+
+/// An outgoing-op trigger: the rank's comm op at `op_index` may issue only
+/// after the tile at `after_pos` completes (`None` = issue immediately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Trigger {
+    pub after_pos: Option<usize>,
+    pub op_index: usize,
+}
+
+/// Synchronization plan for one rank: minimal waits + issue triggers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankSync {
+    pub waits: Vec<Wait>,
+    pub triggers: Vec<Trigger>,
+}
+
+impl RankSync {
+    /// Number of distinct wait points (the §Perf/ablation metric).
+    pub fn num_waits(&self) -> usize {
+        self.waits.len()
+    }
+}
+
+/// Compute the minimal synchronization plan for `rank`.
+///
+/// * For every op delivering a chunk consumed by this rank's tiles, one wait
+///   is placed before the *earliest* consuming tile in `order` — later
+///   consumers are covered transitively (signals are sticky).
+/// * For every op this rank issues whose source region is written by tiles,
+///   a trigger is placed after the *latest* producing tile.
+pub fn plan_rank_sync(
+    rank: Rank,
+    sched: &CommSchedule,
+    order: &TileScheduler,
+    map: &ChunkTileMap,
+) -> Result<RankSync> {
+    let pos = order.positions();
+    let n = order.order.len();
+    let mut waits = Vec::new();
+    for (op, tiles) in &map.consumers {
+        // the wait belongs on the rank whose buffer receives the chunk
+        let dst = sched.op(*op)?.dst_rank(op.rank);
+        if dst != rank || tiles.is_empty() {
+            continue;
+        }
+        let earliest = tiles
+            .iter()
+            .map(|&t| {
+                if t >= n {
+                    Err(Error::DepGraph(format!("consumer tile {t} out of range {n}")))
+                } else {
+                    Ok(pos[t])
+                }
+            })
+            .collect::<Result<Vec<_>>>()?
+            .into_iter()
+            .min()
+            .unwrap();
+        waits.push(Wait { before_pos: earliest, op: *op });
+    }
+    waits.sort_by_key(|w| (w.before_pos, w.op));
+
+    let mut triggers = Vec::new();
+    for (op_index, _op) in sched.per_rank[rank].iter().enumerate() {
+        let opref = OpRef { rank, index: op_index };
+        let after_pos = match map.producers.get(&opref) {
+            None => None,
+            Some(tiles) if tiles.is_empty() => None,
+            Some(tiles) => {
+                let latest = tiles
+                    .iter()
+                    .map(|&t| {
+                        if t >= n {
+                            Err(Error::DepGraph(format!(
+                                "producer tile {t} out of range {n}"
+                            )))
+                        } else {
+                            Ok(pos[t])
+                        }
+                    })
+                    .collect::<Result<Vec<_>>>()?
+                    .into_iter()
+                    .max()
+                    .unwrap();
+                Some(latest)
+            }
+        };
+        triggers.push(Trigger { after_pos, op_index });
+    }
+    Ok(RankSync { waits, triggers })
+}
+
+/// Conservative baseline: wait for ALL incoming chunks before the first tile
+/// that consumes anything, and issue producer-fed transfers only after the
+/// LAST tile (the kernel-boundary sync of kernel-level overlap —
+/// `total_tiles` is the rank's tile count).
+pub fn plan_rank_sync_barrier(
+    rank: Rank,
+    sched: &CommSchedule,
+    map: &ChunkTileMap,
+    total_tiles: usize,
+) -> Result<RankSync> {
+    let mut waits = Vec::new();
+    for (op, tiles) in &map.consumers {
+        let dst = sched.op(*op)?.dst_rank(op.rank);
+        if dst != rank || tiles.is_empty() {
+            continue;
+        }
+        waits.push(Wait { before_pos: 0, op: *op });
+    }
+    waits.sort_by_key(|w| (w.before_pos, w.op));
+    let triggers = (0..sched.per_rank[rank].len())
+        .map(|op_index| {
+            let opref = OpRef { rank, index: op_index };
+            let fed_by_tiles =
+                map.producers.get(&opref).map(|t| !t.is_empty()).unwrap_or(false);
+            Trigger {
+                after_pos: if fed_by_tiles && total_tiles > 0 {
+                    Some(total_tiles - 1)
+                } else {
+                    None
+                },
+                op_index,
+            }
+        })
+        .collect();
+    Ok(RankSync { waits, triggers })
+}
+
+/// Exposure analysis used by ablations: with minimal sync, how many tiles
+/// can run before the first wait (pipeline fill), vs zero under a barrier.
+pub fn tiles_before_first_wait(sync: &RankSync, total_tiles: usize) -> usize {
+    sync.waits.iter().map(|w| w.before_pos).min().unwrap_or(total_tiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{Chunk, DType, Region, TensorTable};
+    use crate::kernel::grid::TileGrid;
+    use crate::schedule::{CommOp, TransferKind};
+
+    /// 2-rank schedule: rank1 pushes two chunks into rank0; rank0 pushes one
+    /// chunk out whose region rank0's tiles produce.
+    fn setup() -> (CommSchedule, TileGrid, ChunkTileMap) {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let mut s = CommSchedule::new(2, t);
+        let c0 = Chunk::new(x, Region::rows(0, 2, 16));
+        let c1 = Chunk::new(x, Region::rows(2, 2, 16));
+        let c2 = Chunk::new(x, Region::rows(4, 2, 16));
+        // rank 1 pushes c0 then c1 into rank 0
+        for c in [&c0, &c1] {
+            s.add_op(
+                1,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: 0,
+                    src: c.clone(),
+                    dst: c.clone(),
+                    reduce: false,
+                    deps: vec![],
+                },
+            )
+            .unwrap();
+        }
+        // rank 0 pushes c2 (produced by its tiles) to rank 1
+        s.add_op(
+            0,
+            CommOp::P2p {
+                kind: TransferKind::Push,
+                peer: 1,
+                src: c2.clone(),
+                dst: c2,
+                reduce: false,
+                deps: vec![],
+            },
+        )
+        .unwrap();
+
+        let grid = TileGrid::gemm(8, 16, 2, 16).unwrap(); // 4 tiles (M rows)
+        let mut map = ChunkTileMap::default();
+        // tiles 0,1 consume the two incoming chunks
+        map.consumers.insert(OpRef { rank: 1, index: 0 }, vec![0]);
+        map.consumers.insert(OpRef { rank: 1, index: 1 }, vec![1]);
+        // outgoing op reads region produced by tiles 2 and 3
+        map.producers.insert(OpRef { rank: 0, index: 0 }, vec![2, 3]);
+        (s, grid, map)
+    }
+
+    #[test]
+    fn minimal_waits_at_earliest_consumer() {
+        let (s, grid, map) = setup();
+        let order = TileScheduler::row_major(&grid);
+        let sync = plan_rank_sync(0, &s, &order, &map).unwrap();
+        assert_eq!(sync.num_waits(), 2);
+        assert_eq!(sync.waits[0], Wait { before_pos: 0, op: OpRef { rank: 1, index: 0 } });
+        assert_eq!(sync.waits[1], Wait { before_pos: 1, op: OpRef { rank: 1, index: 1 } });
+    }
+
+    #[test]
+    fn trigger_after_latest_producer() {
+        let (s, grid, map) = setup();
+        let order = TileScheduler::row_major(&grid);
+        let sync = plan_rank_sync(0, &s, &order, &map).unwrap();
+        assert_eq!(sync.triggers.len(), 1);
+        assert_eq!(sync.triggers[0], Trigger { after_pos: Some(3), op_index: 0 });
+    }
+
+    #[test]
+    fn waits_follow_swizzled_order() {
+        let (s, grid, map) = setup();
+        // reversed order: tile 1 now earlier than tile 0
+        let order = TileScheduler { order: vec![3, 2, 1, 0] };
+        assert!(order.is_permutation(grid.num_tiles()));
+        let sync = plan_rank_sync(0, &s, &order, &map).unwrap();
+        // op1's consumer (tile 1) now at pos 2; op0's (tile 0) at pos 3
+        assert_eq!(sync.waits[0].before_pos, 2);
+        assert_eq!(sync.waits[0].op, OpRef { rank: 1, index: 1 });
+        assert_eq!(sync.waits[1].before_pos, 3);
+        // producer tiles 2,3 now at positions 1,0 -> trigger after pos 1
+        assert_eq!(sync.triggers[0].after_pos, Some(1));
+    }
+
+    #[test]
+    fn rank1_sees_no_waits_but_gets_triggers() {
+        let (s, grid, map) = setup();
+        let order = TileScheduler::row_major(&grid);
+        let sync = plan_rank_sync(1, &s, &order, &map).unwrap();
+        // rank 1 receives c2 but no tile consumes it in the map -> no waits
+        assert_eq!(sync.num_waits(), 0);
+        // both of rank 1's ops trigger immediately (no producing tiles)
+        assert_eq!(sync.triggers.len(), 2);
+        assert!(sync.triggers.iter().all(|t| t.after_pos.is_none()));
+    }
+
+    #[test]
+    fn barrier_plan_waits_everything_at_zero() {
+        let (s, _grid, map) = setup();
+        let sync = plan_rank_sync_barrier(0, &s, &map, 4).unwrap();
+        // producer-fed op 0 waits for the last tile under a barrier
+        assert_eq!(sync.triggers[0].after_pos, Some(3));
+        assert_eq!(sync.num_waits(), 2);
+        assert!(sync.waits.iter().all(|w| w.before_pos == 0));
+        assert_eq!(tiles_before_first_wait(&sync, 4), 0);
+    }
+
+    #[test]
+    fn pipeline_fill_metric() {
+        let (s, grid, map) = setup();
+        // order local tiles (2,3) first: waits move later -> bigger fill
+        let order = TileScheduler { order: vec![2, 3, 0, 1] };
+        let sync = plan_rank_sync(0, &s, &order, &map).unwrap();
+        assert_eq!(tiles_before_first_wait(&sync, grid.num_tiles()), 2);
+        let none = RankSync::default();
+        assert_eq!(tiles_before_first_wait(&none, 4), 4);
+    }
+
+    #[test]
+    fn out_of_range_tiles_rejected() {
+        let (s, grid, mut map) = setup();
+        map.consumers.insert(OpRef { rank: 1, index: 0 }, vec![99]);
+        let order = TileScheduler::row_major(&grid);
+        assert!(plan_rank_sync(0, &s, &order, &map).is_err());
+    }
+
+    #[test]
+    fn consumer_groups_and_arrival() {
+        let (_s, _grid, map) = setup();
+        let arrival = map.arrival_order();
+        assert_eq!(arrival.len(), 2);
+        assert!(arrival[0] < arrival[1]);
+        let groups = map.consumer_groups(0);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[&0], vec![0]);
+        assert_eq!(groups[&1], vec![1]);
+    }
+}

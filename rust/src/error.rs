@@ -1,0 +1,110 @@
+//! Library-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`]. Variants are
+//! grouped by subsystem so callers (and tests) can match on failure class
+//! without string-parsing.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Failure classes across the Syncopate stack.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Error {
+    /// Chunk/region arithmetic out of bounds or shape mismatch.
+    Region(String),
+    /// Communication schedule is malformed (bad deps, uncovered regions, ...).
+    Schedule(String),
+    /// Kernel annotation parsing / tile-grid construction failure.
+    Kernel(String),
+    /// Dependence-graph construction found a cycle or unresolved reference.
+    DepGraph(String),
+    /// Backend capability violation (e.g. collective reduce on TMA).
+    Backend(String),
+    /// Lowering from a higher-level compiler IR failed.
+    Lowering(String),
+    /// Code generation could not realize the schedule.
+    Codegen(String),
+    /// Discrete-event simulation error (resource misuse, deadlock).
+    Sim(String),
+    /// Real-numerics execution error (missing artifact, deadlock, mismatch).
+    Exec(String),
+    /// PJRT runtime failure (wraps the `xla` crate error text).
+    Runtime(String),
+    /// Autotuner found no feasible configuration.
+    Autotune(String),
+    /// Coordinator / service error.
+    Coordinator(String),
+    /// I/O error (artifact files, manifests, exports).
+    Io(String),
+}
+
+impl Error {
+    /// Short subsystem tag, used in log lines and test assertions.
+    pub fn subsystem(&self) -> &'static str {
+        match self {
+            Error::Region(_) => "region",
+            Error::Schedule(_) => "schedule",
+            Error::Kernel(_) => "kernel",
+            Error::DepGraph(_) => "depgraph",
+            Error::Backend(_) => "backend",
+            Error::Lowering(_) => "lowering",
+            Error::Codegen(_) => "codegen",
+            Error::Sim(_) => "sim",
+            Error::Exec(_) => "exec",
+            Error::Runtime(_) => "runtime",
+            Error::Autotune(_) => "autotune",
+            Error::Coordinator(_) => "coordinator",
+            Error::Io(_) => "io",
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msg = match self {
+            Error::Region(m)
+            | Error::Schedule(m)
+            | Error::Kernel(m)
+            | Error::DepGraph(m)
+            | Error::Backend(m)
+            | Error::Lowering(m)
+            | Error::Codegen(m)
+            | Error::Sim(m)
+            | Error::Exec(m)
+            | Error::Runtime(m)
+            | Error::Autotune(m)
+            | Error::Coordinator(m)
+            | Error::Io(m) => m,
+        };
+        write!(f, "[{}] {}", self.subsystem(), msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_subsystem_tag() {
+        let e = Error::Schedule("bad dep".into());
+        assert_eq!(e.to_string(), "[schedule] bad dep");
+        assert_eq!(e.subsystem(), "schedule");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert_eq!(e.subsystem(), "io");
+    }
+}

@@ -1,0 +1,222 @@
+//! Per-rank tensor buffers with region-level read/write/reduce.
+//!
+//! Each rank holds a full-size buffer for every declared tensor; schedules
+//! determine which regions are valid when. Region copies use row-major
+//! linear offsets from [`Region::linear_offsets`] — fine at validation
+//! scale (tensors are a few thousand elements).
+
+use std::collections::HashMap;
+
+use crate::chunk::Region;
+use crate::error::{Error, Result};
+use crate::topo::Rank;
+
+/// Per-rank named tensor buffers.
+#[derive(Debug, Clone)]
+pub struct BufferStore {
+    world: usize,
+    shapes: HashMap<String, Vec<usize>>,
+    data: Vec<HashMap<String, Vec<f32>>>,
+}
+
+impl BufferStore {
+    pub fn new(world: usize) -> Self {
+        BufferStore { world, shapes: HashMap::new(), data: vec![HashMap::new(); world] }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Declare a tensor on every rank (zero-initialized).
+    pub fn declare(&mut self, name: &str, shape: &[usize]) -> Result<()> {
+        if self.shapes.contains_key(name) {
+            return Err(Error::Exec(format!("buffer `{name}` already declared")));
+        }
+        let n: usize = shape.iter().product();
+        if n == 0 {
+            return Err(Error::Exec(format!("buffer `{name}` has empty shape {shape:?}")));
+        }
+        self.shapes.insert(name.to_string(), shape.to_vec());
+        for r in 0..self.world {
+            self.data[r].insert(name.to_string(), vec![0.0; n]);
+        }
+        Ok(())
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        self.shapes
+            .get(name)
+            .map(|s| s.as_slice())
+            .ok_or_else(|| Error::Exec(format!("unknown buffer `{name}`")))
+    }
+
+    fn check(&self, rank: Rank, name: &str) -> Result<()> {
+        if rank >= self.world {
+            return Err(Error::Exec(format!("rank {rank} out of world {}", self.world)));
+        }
+        self.shape(name).map(|_| ())
+    }
+
+    /// Whole-buffer read.
+    pub fn get(&self, rank: Rank, name: &str) -> Result<&[f32]> {
+        self.check(rank, name)?;
+        Ok(self.data[rank][name].as_slice())
+    }
+
+    /// Whole-buffer write (length-checked).
+    pub fn set(&mut self, rank: Rank, name: &str, values: &[f32]) -> Result<()> {
+        self.check(rank, name)?;
+        let buf = self.data[rank].get_mut(name).unwrap();
+        if buf.len() != values.len() {
+            return Err(Error::Exec(format!(
+                "set `{name}`: {} values for buffer of {}",
+                values.len(),
+                buf.len()
+            )));
+        }
+        buf.copy_from_slice(values);
+        Ok(())
+    }
+
+    /// Read a region (row-major element order within the region).
+    pub fn read_region(&self, rank: Rank, name: &str, region: &Region) -> Result<Vec<f32>> {
+        self.check(rank, name)?;
+        let shape = &self.shapes[name];
+        if !region.fits(shape) {
+            return Err(Error::Exec(format!(
+                "read `{name}`: region {region:?} does not fit {shape:?}"
+            )));
+        }
+        let buf = &self.data[rank][name];
+        Ok(region.linear_offsets(shape).into_iter().map(|o| buf[o]).collect())
+    }
+
+    /// Write (or reduce-add into) a region.
+    pub fn write_region(
+        &mut self,
+        rank: Rank,
+        name: &str,
+        region: &Region,
+        values: &[f32],
+        reduce: bool,
+    ) -> Result<()> {
+        self.check(rank, name)?;
+        let shape = self.shapes[name].clone();
+        if !region.fits(&shape) {
+            return Err(Error::Exec(format!(
+                "write `{name}`: region {region:?} does not fit {shape:?}"
+            )));
+        }
+        if values.len() != region.elems() {
+            return Err(Error::Exec(format!(
+                "write `{name}`: {} values for region of {}",
+                values.len(),
+                region.elems()
+            )));
+        }
+        let buf = self.data[rank].get_mut(name).unwrap();
+        for (o, &v) in region.linear_offsets(&shape).into_iter().zip(values) {
+            if reduce {
+                buf[o] += v;
+            } else {
+                buf[o] = v;
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy a region between ranks/tensors (the chunk-transfer primitive).
+    pub fn transfer(
+        &mut self,
+        src_rank: Rank,
+        src_name: &str,
+        src_region: &Region,
+        dst_rank: Rank,
+        dst_name: &str,
+        dst_region: &Region,
+        reduce: bool,
+    ) -> Result<usize> {
+        if src_region.elems() != dst_region.elems() {
+            return Err(Error::Exec(format!(
+                "transfer: src {} elems != dst {} elems",
+                src_region.elems(),
+                dst_region.elems()
+            )));
+        }
+        let values = self.read_region(src_rank, src_name, src_region)?;
+        self.write_region(dst_rank, dst_name, dst_region, &values, reduce)?;
+        Ok(values.len() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> BufferStore {
+        let mut s = BufferStore::new(2);
+        s.declare("x", &[4, 4]).unwrap();
+        s
+    }
+
+    #[test]
+    fn declare_and_rw() {
+        let mut s = store();
+        assert_eq!(s.shape("x").unwrap(), &[4, 4]);
+        assert!(s.declare("x", &[2]).is_err());
+        assert!(s.declare("bad", &[0]).is_err());
+        s.set(0, "x", &[1.0; 16]).unwrap();
+        assert_eq!(s.get(0, "x").unwrap()[5], 1.0);
+        assert_eq!(s.get(1, "x").unwrap()[5], 0.0); // ranks are independent
+        assert!(s.set(0, "x", &[1.0; 3]).is_err());
+        assert!(s.get(5, "x").is_err());
+        assert!(s.get(0, "nope").is_err());
+    }
+
+    #[test]
+    fn region_read_write() {
+        let mut s = store();
+        let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        s.set(0, "x", &vals).unwrap();
+        let r = Region::rows(1, 2, 4);
+        assert_eq!(s.read_region(0, "x", &r).unwrap(), vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        s.write_region(0, "x", &Region::rows(0, 1, 4), &[9.0; 4], false).unwrap();
+        assert_eq!(&s.get(0, "x").unwrap()[..4], &[9.0; 4]);
+        // reduce accumulates
+        s.write_region(0, "x", &Region::rows(0, 1, 4), &[1.0; 4], true).unwrap();
+        assert_eq!(&s.get(0, "x").unwrap()[..4], &[10.0; 4]);
+        // bounds errors
+        assert!(s.read_region(0, "x", &Region::rows(3, 2, 4)).is_err());
+        assert!(s
+            .write_region(0, "x", &Region::rows(0, 1, 4), &[0.0; 3], false)
+            .is_err());
+    }
+
+    #[test]
+    fn column_region_strided() {
+        let mut s = store();
+        let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        s.set(0, "x", &vals).unwrap();
+        let col = Region::cols(1, 1, 4);
+        assert_eq!(s.read_region(0, "x", &col).unwrap(), vec![1.0, 5.0, 9.0, 13.0]);
+    }
+
+    #[test]
+    fn transfer_between_ranks() {
+        let mut s = store();
+        s.set(0, "x", &[2.0; 16]).unwrap();
+        let r = Region::rows(0, 2, 4);
+        let bytes = s.transfer(0, "x", &r, 1, "x", &r, false).unwrap();
+        assert_eq!(bytes, 8 * 4);
+        assert_eq!(&s.get(1, "x").unwrap()[..8], &[2.0; 8]);
+        assert_eq!(&s.get(1, "x").unwrap()[8..], &[0.0; 8]);
+        // reduce transfer
+        s.transfer(0, "x", &r, 1, "x", &r, true).unwrap();
+        assert_eq!(&s.get(1, "x").unwrap()[..8], &[4.0; 8]);
+        // mismatched sizes
+        assert!(s
+            .transfer(0, "x", &Region::rows(0, 1, 4), 1, "x", &r, false)
+            .is_err());
+    }
+}

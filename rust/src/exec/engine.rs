@@ -1,0 +1,355 @@
+//! Cooperative plan interpreter with real numerics.
+//!
+//! Semantics match the simulator exactly (same plan, same signal protocol),
+//! minus time: transfers complete as soon as their dependency signals are
+//! set; compute calls run through the PJRT runtime. Ranks are stepped
+//! round-robin; a full pass with no progress is a deadlock (and reported
+//! with the stuck op).
+
+use crate::chunk::TensorTable;
+use crate::codegen::{CallSpec, ExecutablePlan, PlanOp, TransferDesc};
+use crate::error::{Error, Result};
+use crate::exec::buffers::BufferStore;
+use crate::runtime::Runtime;
+
+/// Execution statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExecStats {
+    pub transfers: usize,
+    pub bytes_moved: usize,
+    pub compute_calls: usize,
+    pub waits_hit: usize,
+}
+
+/// Run a plan to completion over real buffers.
+pub fn run(
+    plan: &ExecutablePlan,
+    table: &TensorTable,
+    store: &mut BufferStore,
+    runtime: &Runtime,
+) -> Result<ExecStats> {
+    if store.world() != plan.world {
+        return Err(Error::Exec(format!(
+            "store world {} != plan world {}",
+            store.world(),
+            plan.world
+        )));
+    }
+    plan.validate().map_err(|e| Error::Exec(format!("invalid plan: {e}")))?;
+    let mut stats = ExecStats::default();
+    let mut signals = vec![false; plan.num_signals];
+    let mut pcs = vec![0usize; plan.world];
+    // Transfers issued but blocked on dep signals.
+    let mut pending: Vec<TransferDesc> = Vec::new();
+
+    let tensor_name = |id| -> Result<String> { Ok(table.get(id)?.name.clone()) };
+
+    let apply_transfer =
+        |d: &TransferDesc, store: &mut BufferStore, stats: &mut ExecStats| -> Result<()> {
+            let src_name = tensor_name(d.src_chunk.tensor)?;
+            let dst_name = tensor_name(d.dst_chunk.tensor)?;
+            let bytes = store.transfer(
+                d.src_rank,
+                &src_name,
+                &d.src_chunk.region,
+                d.dst_rank,
+                &dst_name,
+                &d.dst_chunk.region,
+                d.reduce,
+            )?;
+            stats.transfers += 1;
+            stats.bytes_moved += bytes;
+            Ok(())
+        };
+
+    loop {
+        let mut progress = false;
+
+        // 1. retry pending transfers
+        let mut still = Vec::new();
+        for d in pending.drain(..) {
+            if d.dep_signals.iter().all(|&s| signals[s]) {
+                apply_transfer(&d, store, &mut stats)?;
+                signals[d.signal] = true;
+                progress = true;
+            } else {
+                still.push(d);
+            }
+        }
+        pending = still;
+
+        // 2. step each rank as far as it can go
+        for rank in 0..plan.world {
+            let prog = &plan.per_rank[rank];
+            while pcs[rank] < prog.ops.len() {
+                match &prog.ops[pcs[rank]] {
+                    PlanOp::Overhead { .. } => {
+                        pcs[rank] += 1;
+                        progress = true;
+                    }
+                    PlanOp::Wait(sig) => {
+                        if signals[*sig] {
+                            stats.waits_hit += 1;
+                            pcs[rank] += 1;
+                            progress = true;
+                        } else {
+                            break; // blocked; try other ranks
+                        }
+                    }
+                    PlanOp::Issue(d) => {
+                        if d.dep_signals.iter().all(|&s| signals[s]) {
+                            apply_transfer(d, store, &mut stats)?;
+                            signals[d.signal] = true;
+                        } else {
+                            pending.push(d.clone());
+                        }
+                        pcs[rank] += 1;
+                        progress = true;
+                    }
+                    PlanOp::Compute(seg) => {
+                        for call in &seg.calls {
+                            exec_call(call, rank, store, runtime)?;
+                            stats.compute_calls += 1;
+                        }
+                        pcs[rank] += 1;
+                        progress = true;
+                    }
+                }
+            }
+        }
+
+        let all_done =
+            pending.is_empty() && pcs.iter().enumerate().all(|(r, &pc)| pc >= plan.per_rank[r].ops.len());
+        if all_done {
+            return Ok(stats);
+        }
+        if !progress {
+            let stuck: Vec<String> = (0..plan.world)
+                .filter(|&r| pcs[r] < plan.per_rank[r].ops.len())
+                .map(|r| format!("rank {r} at op {} ({:?})", pcs[r], plan.per_rank[r].ops[pcs[r]]))
+                .collect();
+            return Err(Error::Exec(format!(
+                "deadlock: no progress; {} pending transfers; stuck: {}",
+                pending.len(),
+                stuck.join("; ")
+            )));
+        }
+    }
+}
+
+/// Execute one compute call against the buffers.
+fn exec_call(call: &CallSpec, rank: usize, store: &mut BufferStore, rt: &Runtime) -> Result<()> {
+    use crate::chunk::Region;
+    match call {
+        CallSpec::GemmRows { artifact, a, b, out, rows, accumulate } => {
+            let (r0, r1) = *rows;
+            let k = store.shape(a)?[1];
+            let n = store.shape(b)?[1];
+            let a_rows = store.read_region(rank, a, &Region::rows(r0, r1 - r0, k))?;
+            let b_full = store.get(rank, b)?.to_vec();
+            let outs = rt.execute(
+                artifact,
+                &[(&a_rows, &[r1 - r0, k]), (&b_full, &[k, n])],
+            )?;
+            store.write_region(rank, out, &Region::rows(r0, r1 - r0, n), &outs[0], *accumulate)
+        }
+        CallSpec::AttnStep { artifact, q, k, v, kv_rows, acc, m, l } => {
+            let (k0, k1) = *kv_rows;
+            let d = store.shape(q)?[1];
+            let sq = store.shape(q)?[0];
+            let qv = store.get(rank, q)?.to_vec();
+            let kv = store.read_region(rank, k, &Region::rows(k0, k1 - k0, d))?;
+            let vv = store.read_region(rank, v, &Region::rows(k0, k1 - k0, d))?;
+            let accv = store.get(rank, acc)?.to_vec();
+            let mv = store.get(rank, m)?.to_vec();
+            let lv = store.get(rank, l)?.to_vec();
+            let outs = rt.execute(
+                artifact,
+                &[
+                    (&qv, &[sq, d]),
+                    (&kv, &[k1 - k0, d]),
+                    (&vv, &[k1 - k0, d]),
+                    (&accv, &[sq, d]),
+                    (&mv, &[sq]),
+                    (&lv, &[sq]),
+                ],
+            )?;
+            store.set(rank, acc, &outs[0])?;
+            store.set(rank, m, &outs[1])?;
+            store.set(rank, l, &outs[2])
+        }
+        CallSpec::AttnFinalize { artifact, acc, l, out } => {
+            let sq = store.shape(acc)?[0];
+            let d = store.shape(acc)?[1];
+            let accv = store.get(rank, acc)?.to_vec();
+            let lv = store.get(rank, l)?.to_vec();
+            let outs = rt.execute(artifact, &[(&accv, &[sq, d]), (&lv, &[sq])])?;
+            store.set(rank, out, &outs[0])
+        }
+        CallSpec::FfnShard { artifact, x, w1, b1, w2, out, accumulate } => {
+            let (m, d) = {
+                let s = store.shape(x)?;
+                (s[0], s[1])
+            };
+            let f = store.shape(w1)?[1];
+            let xv = store.get(rank, x)?.to_vec();
+            let w1v = store.get(rank, w1)?.to_vec();
+            let b1v = store.get(rank, b1)?.to_vec();
+            let w2v = store.get(rank, w2)?.to_vec();
+            let outs = rt.execute(
+                artifact,
+                &[(&xv, &[m, d]), (&w1v, &[d, f]), (&b1v, &[f]), (&w2v, &[f, d])],
+            )?;
+            store.write_region(
+                rank,
+                out,
+                &Region::rows(0, m, d),
+                &outs[0],
+                *accumulate,
+            )
+        }
+        CallSpec::AddRows { x, out, rows } => {
+            let (r0, r1) = *rows;
+            let cols = store.shape(x)?[1];
+            let xs = store.read_region(rank, x, &Region::rows(r0, r1 - r0, cols))?;
+            store.write_region(rank, out, &Region::rows(r0, r1 - r0, cols), &xs, true)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The engine needs real PJRT artifacts; full coverage lives in
+    // rust/tests/integration_exec.rs. Here we test the pure parts:
+    // deadlock detection and transfer/signal mechanics with call-free plans.
+    use super::*;
+    use crate::chunk::{Chunk, DType, Region, TensorTable};
+    use crate::codegen::{ComputeSeg, RankProgram};
+    use crate::schedule::OpRef;
+
+    fn table_and_store() -> (TensorTable, BufferStore) {
+        let mut t = TensorTable::new();
+        t.declare("x", &[4, 4], DType::F32).unwrap();
+        let mut s = BufferStore::new(2);
+        s.declare("x", &[4, 4]).unwrap();
+        (t, s)
+    }
+
+    fn xfer(table: &TensorTable, signal: usize, src: usize, dst: usize, deps: Vec<usize>, reduce: bool) -> TransferDesc {
+        let id = table.lookup("x").unwrap();
+        let c = Chunk::new(id, Region::rows(0, 2, 4));
+        TransferDesc {
+            signal,
+            op: OpRef { rank: src, index: signal },
+            src_rank: src,
+            dst_rank: dst,
+            src_chunk: c.clone(),
+            dst_chunk: c,
+            bytes: 32,
+            pieces: 1,
+            backend: crate::backend::BackendKind::CopyEngine,
+            comm_sms: 0,
+            reduce,
+            dep_signals: deps,
+        }
+    }
+
+    fn fake_runtime() -> Runtime {
+        // a Runtime pointing at an empty temp dir would fail; these tests
+        // never exec compute calls, so build one lazily only if artifacts
+        // exist. Otherwise skip via the caller.
+        Runtime::open_default().expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn transfer_and_signal_flow() {
+        let (t, mut store) = table_and_store();
+        store.set(0, "x", &[7.0; 16]).unwrap();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Issue(xfer(&t, 0, 0, 1, vec![], false))] },
+                RankProgram { ops: vec![PlanOp::Wait(0)] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let rt = fake_runtime();
+        let stats = run(&plan, &t, &mut store, &rt).unwrap();
+        assert_eq!(stats.transfers, 1);
+        assert_eq!(stats.bytes_moved, 32);
+        assert_eq!(stats.waits_hit, 1);
+        assert_eq!(&store.get(1, "x").unwrap()[..8], &[7.0; 8]);
+    }
+
+    #[test]
+    fn dep_signals_order_transfers() {
+        let (t, mut store) = table_and_store();
+        store.set(0, "x", &[1.0; 16]).unwrap();
+        store.set(1, "x", &[1.0; 16]).unwrap();
+        // rank0 push (reduce) into rank1 depends on rank1's push into rank0.
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Issue(xfer(&t, 0, 0, 1, vec![1], true)), PlanOp::Wait(1)] },
+                RankProgram { ops: vec![PlanOp::Issue(xfer(&t, 1, 1, 0, vec![], true)), PlanOp::Wait(0)] },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let rt = fake_runtime();
+        let stats = run(&plan, &t, &mut store, &rt).unwrap();
+        assert_eq!(stats.transfers, 2);
+        // rank0 received 1.0+1.0 = 2.0 in first rows; rank1 then 1+2=3
+        assert_eq!(store.get(0, "x").unwrap()[0], 2.0);
+        assert_eq!(store.get(1, "x").unwrap()[0], 3.0);
+    }
+
+    #[test]
+    fn deadlock_reported_with_stuck_rank() {
+        let (t, mut store) = table_and_store();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Wait(0)] },
+                RankProgram { ops: vec![] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let rt = fake_runtime();
+        let e = run(&plan, &t, &mut store, &rt).unwrap_err();
+        assert!(e.to_string().contains("deadlock"), "{e}");
+        assert!(e.to_string().contains("rank 0"), "{e}");
+    }
+
+    #[test]
+    fn world_mismatch_rejected() {
+        let (t, mut store) = table_and_store();
+        let plan = ExecutablePlan {
+            world: 3,
+            per_rank: vec![RankProgram::default(); 3],
+            num_signals: 0,
+            reserved_comm_sms: 0,
+        };
+        let rt = fake_runtime();
+        assert!(run(&plan, &t, &mut store, &rt).is_err());
+    }
+
+    #[test]
+    fn empty_compute_segments_ok() {
+        let (t, mut store) = table_and_store();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Compute(ComputeSeg::default())] },
+                RankProgram::default(),
+            ],
+            num_signals: 0,
+            reserved_comm_sms: 0,
+        };
+        let rt = fake_runtime();
+        let stats = run(&plan, &t, &mut store, &rt).unwrap();
+        assert_eq!(stats.compute_calls, 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Real-numerics distributed execution (validation-scale).
+//!
+//! Runs the *same* [`crate::codegen::ExecutablePlan`]s the simulator scores,
+//! but with real data: every rank holds buffers, chunk transfers copy (or
+//! reduce into) buffer regions, signals gate execution, and compute segments
+//! call the AOT-compiled Pallas/JAX artifacts through PJRT.
+//!
+//! The engine is a deterministic single-threaded cooperative interpreter:
+//! ranks are stepped round-robin, transfers complete as soon as their
+//! dependencies allow. This makes failures reproducible and lets property
+//! tests assert that *any* valid schedule/backend/split produces identical
+//! numerics (DESIGN.md §6).
+
+pub mod buffers;
+pub mod engine;
+pub mod verify;
+
+pub use buffers::BufferStore;
+pub use engine::{run, ExecStats};

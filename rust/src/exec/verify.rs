@@ -1,0 +1,197 @@
+//! Host-side numeric oracles and comparison helpers.
+//!
+//! Pure-Rust reference math (f64 accumulation) used to verify the
+//! distributed execution engine against single-device ground truth. These
+//! mirror `python/compile/kernels/ref.py`.
+
+use crate::error::{Error, Result};
+
+/// `C[m,n] = A[m,k] @ B[k,n]`, f64 accumulation.
+pub fn host_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+/// tanh-GELU, matching the L1 kernel's approximation.
+pub fn host_gelu(x: &mut [f32]) {
+    let c = (2.0f64 / std::f64::consts::PI).sqrt();
+    for v in x.iter_mut() {
+        let xf = *v as f64;
+        *v = (0.5 * xf * (1.0 + (c * (xf + 0.044715 * xf * xf * xf)).tanh())) as f32;
+    }
+}
+
+/// Full softmax attention: `softmax(Q K^T * scale) V`.
+/// Q: [sq, d], K/V: [sk, d]; returns [sq, d].
+pub fn host_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sq: usize,
+    sk: usize,
+    d: usize,
+    scale: f32,
+) -> Vec<f32> {
+    assert_eq!(q.len(), sq * d);
+    assert_eq!(k.len(), sk * d);
+    assert_eq!(v.len(), sk * d);
+    let mut out = vec![0.0f32; sq * d];
+    for i in 0..sq {
+        // scores
+        let mut s = vec![0.0f64; sk];
+        let mut mx = f64::NEG_INFINITY;
+        for (j, sj) in s.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for p in 0..d {
+                acc += q[i * d + p] as f64 * k[j * d + p] as f64;
+            }
+            *sj = acc * scale as f64;
+            mx = mx.max(*sj);
+        }
+        let mut denom = 0.0f64;
+        for sj in s.iter_mut() {
+            *sj = (*sj - mx).exp();
+            denom += *sj;
+        }
+        for p in 0..d {
+            let mut acc = 0.0f64;
+            for j in 0..sk {
+                acc += s[j] * v[j * d + p] as f64;
+            }
+            out[i * d + p] = (acc / denom) as f32;
+        }
+    }
+    out
+}
+
+/// Elementwise sum of several slices.
+pub fn host_sum(parts: &[&[f32]]) -> Vec<f32> {
+    assert!(!parts.is_empty());
+    let n = parts[0].len();
+    let mut out = vec![0.0f32; n];
+    for p in parts {
+        assert_eq!(p.len(), n);
+        for (o, x) in out.iter_mut().zip(p.iter()) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// Assert element-wise closeness with combined absolute/relative tolerance.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32, what: &str) -> Result<()> {
+    if got.len() != want.len() {
+        return Err(Error::Exec(format!(
+            "{what}: length mismatch {} vs {}",
+            got.len(),
+            want.len()
+        )));
+    }
+    let mut worst = 0.0f32;
+    let mut worst_i = 0usize;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        let d = (g - w).abs();
+        if d > tol && d > worst {
+            worst = d;
+            worst_i = i;
+        }
+    }
+    if worst > 0.0 {
+        return Err(Error::Exec(format!(
+            "{what}: mismatch at [{worst_i}]: got {} want {} (|d|={worst})",
+            got[worst_i], want[worst_i]
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gemm_identity() {
+        let a: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 3x4
+        let mut eye = vec![0.0f32; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1.0;
+        }
+        let c = host_gemm(&a, &eye, 3, 4, 4);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn gemm_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let c = host_gemm(&[1.0, 2.0, 3.0, 4.0], &[1.0; 4], 2, 2, 2);
+        assert_eq!(c, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gemm_block_additivity() {
+        // C = A1@B + A2@B row-wise concatenation (the chunk identity)
+        let mut rng = Rng::new(3);
+        let a = rng.vec_f32(4 * 6);
+        let b = rng.vec_f32(6 * 5);
+        let full = host_gemm(&a, &b, 4, 6, 5);
+        let top = host_gemm(&a[..2 * 6], &b, 2, 6, 5);
+        let bot = host_gemm(&a[2 * 6..], &b, 2, 6, 5);
+        let mut cat = top;
+        cat.extend(bot);
+        assert_allclose(&cat, &full, 1e-6, 1e-6, "cat").unwrap();
+    }
+
+    #[test]
+    fn attention_uniform_scores_average_v() {
+        let sq = 2;
+        let sk = 3;
+        let d = 2;
+        let q = vec![0.0f32; sq * d]; // zero queries -> uniform softmax
+        let k = vec![1.0f32; sk * d];
+        let v: Vec<f32> = (0..sk * d).map(|i| i as f32).collect();
+        let out = host_attention(&q, &k, &v, sq, sk, d, 1.0);
+        // mean of v rows: [(0+2+4)/3, (1+3+5)/3] = [2, 3]
+        assert_allclose(&out, &[2.0, 3.0, 2.0, 3.0], 1e-6, 1e-6, "attn").unwrap();
+    }
+
+    #[test]
+    fn attention_large_logits_stable() {
+        let q = vec![30.0f32; 4];
+        let k = vec![30.0f32; 4];
+        let v = vec![1.0f32, 2.0, 3.0, 4.0];
+        let out = host_attention(&q, &k, &v, 2, 2, 2, 1.0);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sum_and_gelu() {
+        let s = host_sum(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(s, vec![9.0, 12.0]);
+        let mut x = vec![0.0f32, 100.0, -100.0];
+        host_gelu(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 100.0).abs() < 1e-3);
+        assert!(x[2].abs() < 1e-3);
+    }
+
+    #[test]
+    fn allclose_reports_worst() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6, "ok").is_ok());
+        let e = assert_allclose(&[1.0, 9.0], &[1.0, 2.0], 1e-3, 1e-3, "bad").unwrap_err();
+        assert!(e.to_string().contains("[1]"), "{e}");
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, 1e-3, "len").is_err());
+    }
+}

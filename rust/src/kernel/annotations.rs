@@ -1,0 +1,320 @@
+//! Parser for the paper's `@sy.*` kernel annotations (Listing 1).
+//!
+//! Annotations are structured comments in the local kernel source — Python
+//! comments with OpenMP-pragma-like directives. They expose three things
+//! (§5.2): tile sizes, the tile index identifier, and the tile scheduler.
+//! We parse the same directive grammar from our Pallas kernels (which is
+//! what `python/compile/kernels/*.py` carries), so the Rust compiler's view
+//! of the kernel's tile structure comes from the *actual* kernel source.
+//!
+//! Grammar (one directive per comment line; `#` or `//` prefix):
+//! ```text
+//! @sy.axis_count <AXIS> block=<IDENT|INT>
+//! @sy.tile_id <persistent|grid>
+//! @sy.dispatch begin | @sy.dispatch end
+//! @sy.pid_map <AXIS>=<IDENT|INT> ...
+//! ```
+//! `block=<IDENT>` references a constant assignment (`BLOCK_M = 128`)
+//! elsewhere in the same source, which we resolve.
+
+use std::collections::HashMap;
+
+
+use crate::error::{Error, Result};
+use crate::kernel::grid::{Axis, TileGrid};
+
+/// How the kernel advances its tile index (Listing 1's scheduler structure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileIdKind {
+    /// Persistent kernel: `tile_id += NUM_SMS` loop (Triton streamed GEMM).
+    Persistent,
+    /// One tile per grid step (Pallas grid).
+    Grid,
+}
+
+/// Block size reference: literal or named constant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BlockRef {
+    Lit(usize),
+    Ident(String),
+}
+
+/// Parsed kernel annotations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelAnnotations {
+    /// Axis name -> block reference, in declaration order.
+    pub axes: Vec<(String, BlockRef)>,
+    pub tile_id: TileIdKind,
+    /// Axis name -> pid variable (or literal grid dim index).
+    pub pid_map: Vec<(String, String)>,
+    /// Constants found in the source (`BLOCK_M = 128`).
+    pub constants: HashMap<String, usize>,
+    /// Whether a dispatch region was delimited.
+    pub has_dispatch_region: bool,
+}
+
+impl KernelAnnotations {
+    /// Resolve a block reference against source constants / overrides.
+    pub fn resolve_block(&self, b: &BlockRef, overrides: &HashMap<String, usize>) -> Result<usize> {
+        match b {
+            BlockRef::Lit(v) => Ok(*v),
+            BlockRef::Ident(name) => overrides
+                .get(name)
+                .or_else(|| self.constants.get(name))
+                .copied()
+                .ok_or_else(|| {
+                    Error::Kernel(format!("unresolved block constant `{name}`"))
+                }),
+        }
+    }
+
+    /// Build a [`TileGrid`] by pairing annotated axes with problem sizes.
+    ///
+    /// `sizes` maps axis name -> problem size; `overrides` can re-bind block
+    /// constants (the autotuner's tile-shape knob).
+    pub fn to_grid(
+        &self,
+        sizes: &HashMap<String, usize>,
+        overrides: &HashMap<String, usize>,
+    ) -> Result<TileGrid> {
+        let mut axes = Vec::with_capacity(self.axes.len());
+        for (name, bref) in &self.axes {
+            let size = *sizes.get(name).ok_or_else(|| {
+                Error::Kernel(format!("no problem size given for axis `{name}`"))
+            })?;
+            let block = self.resolve_block(bref, overrides)?;
+            axes.push(Axis::new(name, size, block)?);
+        }
+        TileGrid::new(axes)
+    }
+}
+
+/// Parse annotations out of kernel source text.
+pub fn parse_annotations(source: &str) -> Result<KernelAnnotations> {
+    let mut axes = Vec::new();
+    let mut tile_id = None;
+    let mut pid_map = Vec::new();
+    let mut constants = HashMap::new();
+    let mut dispatch_depth = 0i32;
+    let mut saw_dispatch = false;
+
+    for (lineno, raw) in source.lines().enumerate() {
+        let line = raw.trim();
+        // constants: NAME = <int>  (module-level or in-kernel)
+        if let Some((lhs, rhs)) = line.split_once('=') {
+            let name = lhs.trim();
+            let val = rhs.trim();
+            if !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                && name.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+            {
+                if let Ok(v) = val.parse::<usize>() {
+                    constants.insert(name.to_string(), v);
+                }
+            }
+        }
+        // directives live in comments
+        let Some(at) = line.find("@sy.") else { continue };
+        let directive = &line[at + 4..];
+        let mut parts = directive.split_whitespace();
+        let head = parts.next().unwrap_or("");
+        let err = |m: &str| Error::Kernel(format!("line {}: {m}", lineno + 1));
+        match head {
+            "axis_count" => {
+                let axis = parts
+                    .next()
+                    .ok_or_else(|| err("axis_count needs an axis name"))?;
+                let blk = parts
+                    .next()
+                    .and_then(|t| t.strip_prefix("block="))
+                    .ok_or_else(|| err("axis_count needs block=<ref>"))?;
+                let bref = match blk.parse::<usize>() {
+                    Ok(v) => BlockRef::Lit(v),
+                    Err(_) => BlockRef::Ident(blk.to_string()),
+                };
+                if axes.iter().any(|(a, _): &(String, _)| a == axis) {
+                    return Err(err(&format!("duplicate axis `{axis}`")));
+                }
+                axes.push((axis.to_string(), bref));
+            }
+            "tile_id" => {
+                let kind = match parts.next() {
+                    Some("persistent") => TileIdKind::Persistent,
+                    Some("grid") => TileIdKind::Grid,
+                    other => {
+                        return Err(err(&format!(
+                            "tile_id must be persistent|grid, got {other:?}"
+                        )))
+                    }
+                };
+                if tile_id.is_some() {
+                    return Err(err("duplicate tile_id directive"));
+                }
+                tile_id = Some(kind);
+            }
+            "dispatch" => match parts.next() {
+                Some("begin") => {
+                    dispatch_depth += 1;
+                    saw_dispatch = true;
+                }
+                Some("end") => {
+                    dispatch_depth -= 1;
+                    if dispatch_depth < 0 {
+                        return Err(err("dispatch end without begin"));
+                    }
+                }
+                other => return Err(err(&format!("dispatch must be begin|end, got {other:?}"))),
+            },
+            "pid_map" => {
+                for kv in parts {
+                    let (axis, var) = kv
+                        .split_once('=')
+                        .ok_or_else(|| err(&format!("bad pid_map entry `{kv}`")))?;
+                    pid_map.push((axis.to_string(), var.to_string()));
+                }
+            }
+            other => {
+                // Only flag identifiers as unknown directives; prose that
+                // merely mentions "@sy.*" (docstrings) is skipped.
+                if !other.is_empty()
+                    && other.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+                {
+                    return Err(Error::Kernel(format!(
+                        "line {}: unknown directive @sy.{other}",
+                        lineno + 1
+                    )));
+                }
+            }
+        }
+    }
+    if dispatch_depth != 0 {
+        return Err(Error::Kernel("unbalanced @sy.dispatch begin/end".into()));
+    }
+    if axes.is_empty() {
+        return Err(Error::Kernel("no @sy.axis_count directives found".into()));
+    }
+    // every pid_map axis must be declared
+    for (a, _) in &pid_map {
+        if !axes.iter().any(|(n, _)| n == a) {
+            return Err(Error::Kernel(format!("pid_map references unknown axis `{a}`")));
+        }
+    }
+    Ok(KernelAnnotations {
+        axes,
+        tile_id: tile_id.unwrap_or(TileIdKind::Grid),
+        pid_map,
+        constants,
+        has_dispatch_region: saw_dispatch,
+    })
+}
+
+/// Parse annotations from a kernel source file on disk.
+pub fn parse_annotations_file(path: &std::path::Path) -> Result<KernelAnnotations> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| Error::Kernel(format!("read {}: {e}", path.display())))?;
+    parse_annotations(&src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LISTING1: &str = r#"
+BLOCK_SIZE_M = 128
+BLOCK_SIZE_N = 256
+
+@triton.jit
+def kernel_gemm(a_ptr, b_ptr):
+    start_pid = tl.program_id(axis=0)
+    # @sy.axis_count M block=BLOCK_SIZE_M
+    num_pid_m = tl.cdiv(M, BLOCK_SIZE_M)
+    # @sy.axis_count N block=BLOCK_SIZE_N
+    # @sy.tile_id persistent
+    tile_id = start_pid - NUM_SMS
+    # @sy.dispatch begin
+    # @sy.pid_map M=pid_m N=pid_n
+    pid_m, pid_n = get_pid_mn(tile_id)
+    # @sy.dispatch end
+"#;
+
+    #[test]
+    fn parses_listing1_style() {
+        let a = parse_annotations(LISTING1).unwrap();
+        assert_eq!(a.axes.len(), 2);
+        assert_eq!(a.axes[0], ("M".into(), BlockRef::Ident("BLOCK_SIZE_M".into())));
+        assert_eq!(a.tile_id, TileIdKind::Persistent);
+        assert!(a.has_dispatch_region);
+        assert_eq!(a.pid_map, vec![("M".into(), "pid_m".into()), ("N".into(), "pid_n".into())]);
+        assert_eq!(a.constants["BLOCK_SIZE_M"], 128);
+    }
+
+    #[test]
+    fn to_grid_resolves_constants_and_overrides() {
+        let a = parse_annotations(LISTING1).unwrap();
+        let sizes: HashMap<String, usize> =
+            [("M".to_string(), 1024), ("N".to_string(), 512)].into();
+        let g = a.to_grid(&sizes, &HashMap::new()).unwrap();
+        assert_eq!(g.axes[0].block, 128);
+        assert_eq!(g.axes[1].block, 256);
+        assert_eq!(g.num_tiles(), 8 * 2);
+        // autotuner override wins
+        let ov: HashMap<String, usize> = [("BLOCK_SIZE_M".to_string(), 64)].into();
+        let g2 = a.to_grid(&sizes, &ov).unwrap();
+        assert_eq!(g2.axes[0].block, 64);
+    }
+
+    #[test]
+    fn missing_size_errors() {
+        let a = parse_annotations(LISTING1).unwrap();
+        let sizes: HashMap<String, usize> = [("M".to_string(), 1024)].into();
+        assert!(a.to_grid(&sizes, &HashMap::new()).is_err());
+    }
+
+    #[test]
+    fn literal_block() {
+        let a = parse_annotations("# @sy.axis_count Q block=64\n").unwrap();
+        assert_eq!(a.axes[0].1, BlockRef::Lit(64));
+        assert_eq!(a.tile_id, TileIdKind::Grid); // default
+    }
+
+    #[test]
+    fn unresolved_constant_errors() {
+        let a = parse_annotations("# @sy.axis_count M block=NOPE\n").unwrap();
+        let sizes: HashMap<String, usize> = [("M".to_string(), 64)].into();
+        let e = a.to_grid(&sizes, &HashMap::new()).unwrap_err();
+        assert!(e.to_string().contains("NOPE"));
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse_annotations("x = 1\n").is_err()); // no axes
+        assert!(parse_annotations("# @sy.axis_count M\n").is_err()); // no block
+        assert!(parse_annotations("# @sy.tile_id bogus\n# @sy.axis_count M block=8\n").is_err());
+        assert!(parse_annotations("# @sy.dispatch end\n# @sy.axis_count M block=8\n").is_err());
+        assert!(parse_annotations("# @sy.dispatch begin\n# @sy.axis_count M block=8\n").is_err());
+        assert!(parse_annotations("# @sy.bogus\n# @sy.axis_count M block=8\n").is_err());
+        assert!(parse_annotations(
+            "# @sy.axis_count M block=8\n# @sy.axis_count M block=8\n"
+        )
+        .is_err()); // duplicate axis
+        assert!(parse_annotations(
+            "# @sy.axis_count M block=8\n# @sy.pid_map Z=pid_z\n"
+        )
+        .is_err()); // unknown pid_map axis
+    }
+
+    #[test]
+    fn parses_real_pallas_gemm_source() {
+        // The shipped Pallas kernel carries the same directives; parsing it
+        // ties the Rust compiler's view to the real L1 source.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("python/compile/kernels/gemm.py");
+        if !path.exists() {
+            return; // layout changed; covered by integration tests
+        }
+        let a = parse_annotations_file(&path).unwrap();
+        let names: Vec<&str> = a.axes.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["M", "N", "K"]);
+        assert_eq!(a.constants["BLOCK_M"], 128);
+    }
+}

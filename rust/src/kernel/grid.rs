@@ -1,0 +1,280 @@
+//! Tile grids: the iteration space of an annotated local kernel.
+//!
+//! A [`TileGrid`] is the cross product of named axes, each covered by
+//! fixed-size blocks — the Pallas/Triton grid. Tiles are identified by a
+//! linear [`TileId`] in row-major axis order; Syncopate's scheduler swizzle
+//! permutes the order in which they are *visited*, never the grid itself.
+
+
+use crate::error::{Error, Result};
+use crate::util::ceil_div;
+
+/// Linear tile index within a grid (row-major over axes).
+pub type TileId = usize;
+
+/// One grid axis: a named problem dimension covered by `block`-sized tiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Axis {
+    pub name: String,
+    /// Problem size along this axis (elements).
+    pub size: usize,
+    /// Tile (block) size along this axis (elements).
+    pub block: usize,
+}
+
+impl Axis {
+    pub fn new(name: &str, size: usize, block: usize) -> Result<Self> {
+        if size == 0 || block == 0 {
+            return Err(Error::Kernel(format!(
+                "axis `{name}`: size and block must be > 0 (got {size}, {block})"
+            )));
+        }
+        Ok(Axis { name: name.into(), size, block })
+    }
+
+    /// Number of tiles along this axis.
+    pub fn tiles(&self) -> usize {
+        ceil_div(self.size, self.block)
+    }
+}
+
+/// The full tile iteration space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileGrid {
+    pub axes: Vec<Axis>,
+}
+
+impl TileGrid {
+    pub fn new(axes: Vec<Axis>) -> Result<Self> {
+        if axes.is_empty() {
+            return Err(Error::Kernel("grid needs at least one axis".into()));
+        }
+        let mut names: Vec<&str> = axes.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != axes.len() {
+            return Err(Error::Kernel("duplicate axis names".into()));
+        }
+        Ok(TileGrid { axes })
+    }
+
+    /// Convenience 2-D GEMM-style grid.
+    pub fn gemm(m: usize, n: usize, block_m: usize, block_n: usize) -> Result<Self> {
+        TileGrid::new(vec![Axis::new("M", m, block_m)?, Axis::new("N", n, block_n)?])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.axes.len()
+    }
+
+    pub fn axis(&self, name: &str) -> Option<(usize, &Axis)> {
+        self.axes.iter().enumerate().find(|(_, a)| a.name == name)
+    }
+
+    /// Total tile count.
+    pub fn num_tiles(&self) -> usize {
+        self.axes.iter().map(|a| a.tiles()).product()
+    }
+
+    /// Per-axis tile counts.
+    pub fn tile_counts(&self) -> Vec<usize> {
+        self.axes.iter().map(|a| a.tiles()).collect()
+    }
+
+    /// Tile coordinates of a linear id (row-major). Hot path: no
+    /// intermediate `tile_counts` allocation (perf pass, EXPERIMENTS §Perf).
+    pub fn coords(&self, id: TileId) -> Result<Vec<usize>> {
+        if id >= self.num_tiles() {
+            return Err(Error::Kernel(format!(
+                "tile id {id} out of {} tiles",
+                self.num_tiles()
+            )));
+        }
+        let mut rem = id;
+        let mut c = vec![0usize; self.axes.len()];
+        for d in (0..self.axes.len()).rev() {
+            let n = self.axes[d].tiles();
+            c[d] = rem % n;
+            rem /= n;
+        }
+        Ok(c)
+    }
+
+    /// Linear id from tile coordinates (row-major).
+    pub fn linear(&self, coords: &[usize]) -> Result<TileId> {
+        if coords.len() != self.rank() {
+            return Err(Error::Kernel("coordinate rank mismatch".into()));
+        }
+        let mut id = 0usize;
+        for (d, &c) in coords.iter().enumerate() {
+            let n = self.axes[d].tiles();
+            if c >= n {
+                return Err(Error::Kernel(format!(
+                    "coord {c} out of {n} tiles on axis {}",
+                    self.axes[d].name
+                )));
+            }
+            id = id * n + c;
+        }
+        Ok(id)
+    }
+
+    /// Element range `[start, end)` covered by tile coordinate `c` on axis `d`
+    /// (the last tile may be partial).
+    pub fn axis_span(&self, d: usize, c: usize) -> (usize, usize) {
+        let a = &self.axes[d];
+        let start = c * a.block;
+        (start, (start + a.block).min(a.size))
+    }
+
+    /// All tiles whose element footprint intersects the per-axis ranges
+    /// `[(start, end)); one entry per axis, `None` = full axis.
+    ///
+    /// This is the chunk→tiles containment query of §5.2: a chunk's region,
+    /// expressed in grid-axis element coordinates, selects the tiles that
+    /// consume or produce it.
+    pub fn tiles_intersecting(&self, ranges: &[Option<(usize, usize)>]) -> Result<Vec<TileId>> {
+        if ranges.len() != self.rank() {
+            return Err(Error::Kernel("range rank mismatch".into()));
+        }
+        // per-axis tile index ranges
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(self.rank());
+        for (d, r) in ranges.iter().enumerate() {
+            let a = &self.axes[d];
+            match r {
+                None => spans.push((0, a.tiles())),
+                Some((s, e)) => {
+                    if s >= e || *e > a.size {
+                        return Err(Error::Kernel(format!(
+                            "bad range [{s},{e}) on axis `{}` size {}",
+                            a.name, a.size
+                        )));
+                    }
+                    spans.push((s / a.block, ceil_div(*e, a.block)));
+                }
+            }
+        }
+        // cross product in row-major order; linear ids computed via
+        // precomputed strides instead of per-tile `linear()` calls (hot in
+        // the compile profile — perf pass, EXPERIMENTS §Perf)
+        let mut strides = vec![1usize; self.rank()];
+        for d in (0..self.rank().saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * self.axes[d + 1].tiles();
+        }
+        let count: usize = spans.iter().map(|(s, e)| e - s).product();
+        let mut out = Vec::with_capacity(count);
+        let mut c: Vec<usize> = spans.iter().map(|(s, _)| *s).collect();
+        let mut id: usize = c.iter().zip(&strides).map(|(x, s)| x * s).sum();
+        loop {
+            out.push(id);
+            let mut d = self.rank();
+            loop {
+                if d == 0 {
+                    return Ok(out);
+                }
+                d -= 1;
+                c[d] += 1;
+                id += strides[d];
+                if c[d] < spans[d].1 {
+                    break;
+                }
+                id -= (c[d] - spans[d].0) * strides[d];
+                c[d] = spans[d].0;
+            }
+        }
+    }
+
+    /// FLOPs of one tile of a GEMM grid with contraction depth `k` —
+    /// 2·bm·bn·k, accounting for partial edge tiles at coordinates `c`.
+    pub fn gemm_tile_flops(&self, id: TileId, k: usize) -> Result<f64> {
+        let c = self.coords(id)?;
+        let (m0, m1) = self.axis_span(0, c[0]);
+        let (n0, n1) = self.axis_span(1, c[1]);
+        Ok(2.0 * (m1 - m0) as f64 * (n1 - n0) as f64 * k as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> TileGrid {
+        TileGrid::gemm(256, 128, 64, 64).unwrap() // 4 x 2 tiles
+    }
+
+    #[test]
+    fn axis_tiles() {
+        assert_eq!(Axis::new("M", 256, 64).unwrap().tiles(), 4);
+        assert_eq!(Axis::new("M", 100, 64).unwrap().tiles(), 2); // partial last
+        assert!(Axis::new("M", 0, 64).is_err());
+        assert!(Axis::new("M", 64, 0).is_err());
+    }
+
+    #[test]
+    fn grid_construction_checks() {
+        assert!(TileGrid::new(vec![]).is_err());
+        let dup = TileGrid::new(vec![
+            Axis::new("M", 8, 2).unwrap(),
+            Axis::new("M", 8, 2).unwrap(),
+        ]);
+        assert!(dup.is_err());
+    }
+
+    #[test]
+    fn coords_linear_roundtrip() {
+        let g = grid();
+        assert_eq!(g.num_tiles(), 8);
+        for id in 0..g.num_tiles() {
+            let c = g.coords(id).unwrap();
+            assert_eq!(g.linear(&c).unwrap(), id);
+        }
+        assert_eq!(g.coords(0).unwrap(), vec![0, 0]);
+        assert_eq!(g.coords(1).unwrap(), vec![0, 1]);
+        assert_eq!(g.coords(2).unwrap(), vec![1, 0]);
+        assert!(g.coords(8).is_err());
+        assert!(g.linear(&[4, 0]).is_err());
+        assert!(g.linear(&[0]).is_err());
+    }
+
+    #[test]
+    fn axis_span_partial_tail() {
+        let g = TileGrid::gemm(100, 64, 64, 64).unwrap();
+        assert_eq!(g.axis_span(0, 0), (0, 64));
+        assert_eq!(g.axis_span(0, 1), (64, 100)); // partial
+    }
+
+    #[test]
+    fn tiles_intersecting_rows() {
+        let g = grid(); // M: 4 tiles of 64, N: 2 tiles of 64
+        // rows [64, 192) -> M tiles 1,2; all N
+        let t = g.tiles_intersecting(&[Some((64, 192)), None]).unwrap();
+        assert_eq!(t, vec![2, 3, 4, 5]);
+        // unaligned range [32, 96) spans M tiles 0 and 1
+        let t2 = g.tiles_intersecting(&[Some((32, 96)), None]).unwrap();
+        assert_eq!(t2, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn tiles_intersecting_full() {
+        let g = grid();
+        let all = g.tiles_intersecting(&[None, None]).unwrap();
+        assert_eq!(all.len(), g.num_tiles());
+    }
+
+    #[test]
+    fn tiles_intersecting_bad_range() {
+        let g = grid();
+        assert!(g.tiles_intersecting(&[Some((10, 10)), None]).is_err());
+        assert!(g.tiles_intersecting(&[Some((0, 999)), None]).is_err());
+        assert!(g.tiles_intersecting(&[None]).is_err());
+    }
+
+    #[test]
+    fn gemm_tile_flops_partial_edges() {
+        let g = TileGrid::gemm(100, 64, 64, 64).unwrap();
+        let full = g.gemm_tile_flops(0, 128).unwrap();
+        assert_eq!(full, 2.0 * 64.0 * 64.0 * 128.0);
+        let partial = g.gemm_tile_flops(1, 128).unwrap(); // M tile 1: 36 rows
+        assert_eq!(partial, 2.0 * 36.0 * 64.0 * 128.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Local-kernel model: tile grids, `@sy.*` annotations, tile schedulers.
+//!
+//! The paper's compute side (§5.2): a local kernel exposes its tiling
+//! structure via lightweight annotations — tile size, tile index identifier,
+//! and tile scheduler — which Syncopate parses and then *swizzles* so tiles
+//! execute in chunk-arrival order (Fig. 6c) without any data reordering.
+
+pub mod annotations;
+pub mod grid;
+pub mod scheduler;
+
+pub use annotations::{parse_annotations, KernelAnnotations};
+pub use grid::{Axis, TileGrid, TileId};
+pub use scheduler::{IntraOrder, SwizzlePolicy, TileScheduler};

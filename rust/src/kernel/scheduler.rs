@@ -1,0 +1,377 @@
+//! Tile schedulers and the scheduler swizzle (paper §5.2, Fig. 6).
+//!
+//! A [`TileScheduler`] is a visiting order — a permutation of the grid's
+//! tiles. Prior systems reconcile the communication layout with the compute
+//! layout by physically reordering data (Fig. 6b); Syncopate instead
+//! *swizzles the scheduler*: waves are reordered so each chunk is consumed
+//! as soon as it arrives, with an intra-chunk order that preserves locality
+//! (Fig. 6c).
+
+use std::collections::HashMap;
+
+
+use crate::error::{Error, Result};
+use crate::kernel::grid::{TileGrid, TileId};
+
+/// Order in which tiles *within* one chunk group are visited.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntraOrder {
+    /// Plain row-major within the group.
+    RowMajor,
+    /// Boustrophedon (snake) order: alternate direction every row — adjacent
+    /// tiles share an operand block, preserving cache/VMEM locality.
+    Snake,
+    /// Group columns in pairs before advancing rows (L2-friendly for GEMM B).
+    GroupedCols { group: usize },
+}
+
+/// Top-level swizzle policy — one of the autotuner's intra-chunk knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SwizzlePolicy {
+    /// The kernel's native order (whatever the local kernel did).
+    RowMajor,
+    /// Column-major traversal.
+    ColMajor,
+    /// Follow chunk arrival order; `intra` orders tiles inside each chunk.
+    ChunkMajor { intra: IntraOrder },
+}
+
+/// A concrete visiting order over a grid's tiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileScheduler {
+    pub order: Vec<TileId>,
+}
+
+impl TileScheduler {
+    /// Native row-major order.
+    pub fn row_major(grid: &TileGrid) -> Self {
+        TileScheduler { order: (0..grid.num_tiles()).collect() }
+    }
+
+    /// Column-major order (last axis outermost) for 2-D grids; falls back to
+    /// row-major otherwise.
+    pub fn col_major(grid: &TileGrid) -> Self {
+        if grid.rank() != 2 {
+            return Self::row_major(grid);
+        }
+        let counts = grid.tile_counts();
+        let mut order = Vec::with_capacity(grid.num_tiles());
+        for j in 0..counts[1] {
+            for i in 0..counts[0] {
+                order.push(grid.linear(&[i, j]).expect("in range"));
+            }
+        }
+        TileScheduler { order }
+    }
+
+    /// Chunk-major swizzle: visit chunk groups in `arrival` order, applying
+    /// `intra` within each group. Tiles not covered by any group (pure-local
+    /// tiles) are scheduled FIRST — they need no communication and fill the
+    /// pipeline while the first chunk is in flight.
+    ///
+    /// `groups` maps group key -> tiles; `arrival` is the ordered list of
+    /// group keys. Every tile must appear in at most one group.
+    pub fn chunk_major(
+        grid: &TileGrid,
+        groups: &HashMap<usize, Vec<TileId>>,
+        arrival: &[usize],
+        intra: IntraOrder,
+    ) -> Result<Self> {
+        let n = grid.num_tiles();
+        let mut seen = vec![false; n];
+        let mut order = Vec::with_capacity(n);
+        // membership check + duplicate detection
+        for (k, tiles) in groups {
+            for &t in tiles {
+                if t >= n {
+                    return Err(Error::Kernel(format!("group {k}: tile {t} out of range")));
+                }
+            }
+        }
+        let mut grouped = vec![false; n];
+        for tiles in groups.values() {
+            for &t in tiles {
+                if grouped[t] {
+                    return Err(Error::Kernel(format!("tile {t} in multiple chunk groups")));
+                }
+                grouped[t] = true;
+            }
+        }
+        // local tiles first
+        for t in 0..n {
+            if !grouped[t] {
+                order.push(t);
+                seen[t] = true;
+            }
+        }
+        // then chunks in arrival order
+        for k in arrival {
+            let Some(tiles) = groups.get(k) else {
+                return Err(Error::Kernel(format!("arrival references unknown group {k}")));
+            };
+            let mut tiles = tiles.clone();
+            apply_intra(grid, &mut tiles, intra)?;
+            for t in tiles {
+                if seen[t] {
+                    return Err(Error::Kernel(format!("tile {t} scheduled twice")));
+                }
+                seen[t] = true;
+                order.push(t);
+            }
+        }
+        if order.len() != n {
+            return Err(Error::Kernel(format!(
+                "swizzle covers {}/{} tiles (arrival list missing groups?)",
+                order.len(),
+                n
+            )));
+        }
+        Ok(TileScheduler { order })
+    }
+
+    /// Build from a policy (ChunkMajor requires groups + arrival).
+    pub fn from_policy(
+        grid: &TileGrid,
+        policy: &SwizzlePolicy,
+        groups: Option<(&HashMap<usize, Vec<TileId>>, &[usize])>,
+    ) -> Result<Self> {
+        match policy {
+            SwizzlePolicy::RowMajor => Ok(Self::row_major(grid)),
+            SwizzlePolicy::ColMajor => Ok(Self::col_major(grid)),
+            SwizzlePolicy::ChunkMajor { intra } => {
+                let (g, a) = groups.ok_or_else(|| {
+                    Error::Kernel("ChunkMajor policy needs chunk groups".into())
+                })?;
+                Self::chunk_major(grid, g, a, *intra)
+            }
+        }
+    }
+
+    /// Is this a valid permutation of `n` tiles? (Swizzle invariant: the
+    /// transformation never drops or duplicates work.)
+    pub fn is_permutation(&self, n: usize) -> bool {
+        if self.order.len() != n {
+            return false;
+        }
+        let mut seen = vec![false; n];
+        for &t in &self.order {
+            if t >= n || seen[t] {
+                return false;
+            }
+            seen[t] = true;
+        }
+        true
+    }
+
+    /// Position of each tile in the visiting order (inverse permutation).
+    pub fn positions(&self) -> Vec<usize> {
+        let mut pos = vec![0usize; self.order.len()];
+        for (p, &t) in self.order.iter().enumerate() {
+            pos[t] = p;
+        }
+        pos
+    }
+
+    /// Locality score: mean #shared axis coordinates between consecutive
+    /// tiles (higher = better operand reuse). Used by Fig. 11(d).
+    pub fn locality_score(&self, grid: &TileGrid) -> f64 {
+        if self.order.len() < 2 {
+            return 1.0;
+        }
+        let mut shared = 0usize;
+        for w in self.order.windows(2) {
+            let a = grid.coords(w[0]).unwrap();
+            let b = grid.coords(w[1]).unwrap();
+            shared += a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        }
+        shared as f64 / ((self.order.len() - 1) as f64 * grid.rank() as f64)
+    }
+}
+
+fn apply_intra(grid: &TileGrid, tiles: &mut [TileId], intra: IntraOrder) -> Result<()> {
+    match intra {
+        IntraOrder::RowMajor => {
+            tiles.sort_unstable();
+            Ok(())
+        }
+        IntraOrder::Snake => {
+            if grid.rank() < 2 {
+                tiles.sort_unstable();
+                return Ok(());
+            }
+            // sort by (row, col or reversed col on odd rows)
+            let mut keyed: Vec<(Vec<usize>, TileId)> = tiles
+                .iter()
+                .map(|&t| (grid.coords(t).unwrap(), t))
+                .collect();
+            let ncols = grid.tile_counts()[1];
+            keyed.sort_by_key(|(c, _)| {
+                let col = if c[0] % 2 == 0 { c[1] } else { ncols - 1 - c[1] };
+                (c[0], col)
+            });
+            for (i, (_, t)) in keyed.into_iter().enumerate() {
+                tiles[i] = t;
+            }
+            Ok(())
+        }
+        IntraOrder::GroupedCols { group } => {
+            if group == 0 {
+                return Err(Error::Kernel("GroupedCols group must be > 0".into()));
+            }
+            let mut keyed: Vec<(Vec<usize>, TileId)> = tiles
+                .iter()
+                .map(|&t| (grid.coords(t).unwrap(), t))
+                .collect();
+            keyed.sort_by_key(|(c, _)| {
+                let col_group = if c.len() > 1 { c[1] / group } else { 0 };
+                (col_group, c[0], c.get(1).copied().unwrap_or(0))
+            });
+            for (i, (_, t)) in keyed.into_iter().enumerate() {
+                tiles[i] = t;
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> TileGrid {
+        TileGrid::gemm(256, 192, 64, 64).unwrap() // 4 x 3 tiles
+    }
+
+    #[test]
+    fn row_major_is_identity_permutation() {
+        let g = grid();
+        let s = TileScheduler::row_major(&g);
+        assert!(s.is_permutation(g.num_tiles()));
+        assert_eq!(s.order, (0..12).collect::<Vec<_>>());
+        assert!((s.locality_score(&g) - 0.5).abs() < 0.2);
+    }
+
+    #[test]
+    fn col_major_transposes() {
+        let g = grid();
+        let s = TileScheduler::col_major(&g);
+        assert!(s.is_permutation(g.num_tiles()));
+        // first column of tiles first: ids 0, 3, 6, 9
+        assert_eq!(&s.order[..4], &[0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn chunk_major_orders_by_arrival_locals_first() {
+        let g = grid();
+        // chunks over M tiles: group k covers M-tile-row k (3 tiles each);
+        // row 0 is local (no group), rows 1..3 arrive in order 3, 1, 2.
+        let mut groups = HashMap::new();
+        for k in 1..4usize {
+            groups.insert(k, vec![k * 3, k * 3 + 1, k * 3 + 2]);
+        }
+        let arrival = vec![3, 1, 2];
+        let s = TileScheduler::chunk_major(&g, &groups, &arrival, IntraOrder::RowMajor).unwrap();
+        assert!(s.is_permutation(12));
+        assert_eq!(&s.order[..3], &[0, 1, 2]); // local row first
+        assert_eq!(&s.order[3..6], &[9, 10, 11]); // chunk 3 next
+        assert_eq!(&s.order[6..9], &[3, 4, 5]);
+        assert_eq!(&s.order[9..], &[6, 7, 8]);
+    }
+
+    #[test]
+    fn chunk_major_snake_reverses_odd_rows() {
+        let g = grid();
+        let mut groups = HashMap::new();
+        groups.insert(0usize, (0..12).collect::<Vec<_>>());
+        let s =
+            TileScheduler::chunk_major(&g, &groups, &[0], IntraOrder::Snake).unwrap();
+        assert!(s.is_permutation(12));
+        // row 0 forward (0,1,2), row 1 backward (5,4,3)
+        assert_eq!(&s.order[..6], &[0, 1, 2, 5, 4, 3]);
+        // snake beats row-major on locality
+        let rm = TileScheduler::row_major(&g);
+        assert!(s.locality_score(&g) >= rm.locality_score(&g));
+    }
+
+    #[test]
+    fn chunk_major_error_cases() {
+        let g = grid();
+        let mut groups = HashMap::new();
+        groups.insert(0usize, vec![0, 1]);
+        // arrival references unknown group
+        assert!(
+            TileScheduler::chunk_major(&g, &groups, &[1], IntraOrder::RowMajor).is_err()
+        );
+        // missing groups -> incomplete cover
+        assert!(
+            TileScheduler::chunk_major(&g, &groups, &[], IntraOrder::RowMajor).is_err()
+        );
+        // duplicate tile across groups
+        groups.insert(1usize, vec![1, 2]);
+        assert!(
+            TileScheduler::chunk_major(&g, &groups, &[0, 1], IntraOrder::RowMajor).is_err()
+        );
+        // tile out of range
+        let mut g2 = HashMap::new();
+        g2.insert(0usize, vec![99]);
+        assert!(TileScheduler::chunk_major(&g, &g2, &[0], IntraOrder::RowMajor).is_err());
+    }
+
+    #[test]
+    fn from_policy_dispatch() {
+        let g = grid();
+        assert_eq!(
+            TileScheduler::from_policy(&g, &SwizzlePolicy::RowMajor, None).unwrap(),
+            TileScheduler::row_major(&g)
+        );
+        assert!(TileScheduler::from_policy(
+            &g,
+            &SwizzlePolicy::ChunkMajor { intra: IntraOrder::RowMajor },
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn grouped_cols_intra() {
+        let g = grid();
+        let mut groups = HashMap::new();
+        groups.insert(0usize, (0..12).collect::<Vec<_>>());
+        let s = TileScheduler::chunk_major(
+            &g,
+            &groups,
+            &[0],
+            IntraOrder::GroupedCols { group: 2 },
+        )
+        .unwrap();
+        assert!(s.is_permutation(12));
+        // first 8 tiles stay within column group {0,1}
+        for &t in &s.order[..8] {
+            assert!(g.coords(t).unwrap()[1] < 2);
+        }
+        // group = 0 rejected
+        assert!(TileScheduler::chunk_major(
+            &g,
+            &groups,
+            &[0],
+            IntraOrder::GroupedCols { group: 0 }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn permutation_detects_corruption() {
+        let s = TileScheduler { order: vec![0, 1, 1] };
+        assert!(!s.is_permutation(3));
+        let s2 = TileScheduler { order: vec![0, 1] };
+        assert!(!s2.is_permutation(3));
+        let s3 = TileScheduler { order: vec![0, 1, 5] };
+        assert!(!s3.is_permutation(3));
+    }
+
+    #[test]
+    fn positions_inverse() {
+        let s = TileScheduler { order: vec![2, 0, 1] };
+        assert_eq!(s.positions(), vec![1, 2, 0]);
+    }
+}

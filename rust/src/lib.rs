@@ -1,0 +1,39 @@
+//! # Syncopate
+//!
+//! Reproduction of *Syncopate: Efficient Multi-GPU AI Kernels via Automatic
+//! Chunk-Centric Compute-Communication Overlap* as a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! * **L3 (this crate)** — the paper's contribution: chunk abstraction,
+//!   communication schedules, annotated-kernel frontend, dependence-graph
+//!   sync insertion, backend selection, tile-scheduler swizzling, codegen
+//!   to per-rank executable plans, a communication-centric autotuner, a
+//!   calibrated multi-GPU discrete-event simulator, and a real-numerics
+//!   multi-rank executor backed by PJRT.
+//! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
+//!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//!
+//! Python never runs on the request path: the Rust binary loads the HLO
+//! artifacts through the `xla` crate's PJRT CPU client and is self-contained.
+
+pub mod autotune;
+pub mod backend;
+pub mod baselines;
+pub mod chunk;
+pub mod codegen;
+pub mod coordinator;
+pub mod depgraph;
+pub mod error;
+pub mod kernel;
+pub mod lowering;
+pub mod exec;
+pub mod metrics;
+pub mod reports;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod topo;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,259 @@
+//! Loop-based IR frontend (Mercury style; paper Listing 3, `lower_loop_ir`).
+//!
+//! Mercury-like compilers express ring and double-ring attention as loop
+//! nests whose bodies contain communication intents (rotate the K/V shard to
+//! the ring successor) and compute statements. We walk the loop nest,
+//! collect the per-step send/recv intents (`parse_comm_intents`), group the
+//! communicated regions into chunks at the chosen granularity, and emit a
+//! dependency-chained chunk schedule.
+
+use crate::chunk::{Chunk, DType, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::templates::shard_region;
+use crate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
+use crate::topo::Topology;
+
+/// A communication intent inside a loop body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoopNode {
+    /// `for step in 0..steps { body }` — the ring loop.
+    ForStep { steps: usize, body: Vec<LoopNode> },
+    /// Rotate `tensor`'s current shard to the ring successor each step.
+    RotateShard { tensor: String, axis: usize },
+    /// Compute statement (opaque to the comm plan; marks granularity).
+    Compute { label: String },
+}
+
+/// A loop-based compiler's view of one operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopIR {
+    pub world: usize,
+    /// (name, global shape, dtype) of tensors referenced by the loop.
+    pub tensors: Vec<(String, Vec<usize>, DType)>,
+    pub nodes: Vec<LoopNode>,
+}
+
+/// Walk the loop nest and collect (tensor, axis, steps) rotation intents
+/// (the `parse_comm_intents` of Listing 3).
+pub fn parse_comm_intents(ir: &LoopIR) -> Vec<(String, usize, usize)> {
+    fn walk(nodes: &[LoopNode], steps: usize, out: &mut Vec<(String, usize, usize)>) {
+        for n in nodes {
+            match n {
+                LoopNode::ForStep { steps: s, body } => walk(body, *s, out),
+                LoopNode::RotateShard { tensor, axis } => {
+                    out.push((tensor.clone(), *axis, steps))
+                }
+                LoopNode::Compute { .. } => {}
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(&ir.nodes, 1, &mut out);
+    out
+}
+
+/// Lower a loop IR to a chunk schedule.
+///
+/// Each `RotateShard` inside a `steps`-iteration loop becomes a pipelined
+/// ring: at step `s`, rank `r` pushes the shard it currently holds —
+/// `(r - s) mod w` — to its successor, depending on the predecessor's
+/// previous-step push (the shard has to arrive before it can be forwarded).
+pub fn lower_loop_ir(ir: &LoopIR, topo: &Topology) -> Result<CommSchedule> {
+    if ir.world != topo.world {
+        return Err(Error::Lowering(format!(
+            "IR world {} != topology world {}",
+            ir.world, topo.world
+        )));
+    }
+    let world = ir.world;
+    let mut table = TensorTable::new();
+    for (name, shape, dtype) in &ir.tensors {
+        table.declare(name, shape, *dtype)?;
+    }
+    let intents = parse_comm_intents(ir);
+    if intents.is_empty() {
+        return Ok(CommSchedule::new(world, table));
+    }
+    let mut sched = CommSchedule::new(world, table.clone());
+    for (tensor, axis, steps) in intents {
+        let id = table
+            .lookup(&tensor)
+            .ok_or_else(|| Error::Lowering(format!("loop rotates undeclared tensor `{tensor}`")))?;
+        if steps > world {
+            return Err(Error::Lowering(format!(
+                "ring loop of {steps} steps exceeds world {world}"
+            )));
+        }
+        let shape = table.get(id)?.shape.clone();
+        let base: Vec<usize> = (0..world).map(|r| sched.per_rank[r].len()).collect();
+        for r in 0..world {
+            for s in 0..steps.saturating_sub(1) {
+                let shard = (r + world - s) % world;
+                let c = Chunk::new(id, shard_region(&shape, axis, world, shard)?);
+                let deps = if s == 0 {
+                    vec![]
+                } else {
+                    vec![Dep::on((r + world - 1) % world, base[(r + world - 1) % world] + s - 1)]
+                };
+                sched.add_op(
+                    r,
+                    CommOp::P2p {
+                        kind: TransferKind::Push,
+                        peer: (r + 1) % world,
+                        src: c.clone(),
+                        dst: c,
+                        reduce: false,
+                        deps,
+                    },
+                )?;
+            }
+        }
+    }
+    Ok(sched)
+}
+
+/// Representative loop IRs for the Fig. 10 integration study.
+pub mod presets {
+    use super::*;
+
+    /// Mercury-style RingAttention: rotate K and V around the full ring,
+    /// computing one block-attention step per arrival.
+    pub fn mercury_ring_attention(
+        world: usize,
+        seq: usize,
+        heads_dim: usize,
+    ) -> LoopIR {
+        LoopIR {
+            world,
+            tensors: vec![
+                ("k".into(), vec![seq, heads_dim], DType::BF16),
+                ("v".into(), vec![seq, heads_dim], DType::BF16),
+            ],
+            nodes: vec![LoopNode::ForStep {
+                steps: world,
+                body: vec![
+                    LoopNode::RotateShard { tensor: "k".into(), axis: 0 },
+                    LoopNode::RotateShard { tensor: "v".into(), axis: 0 },
+                    LoopNode::Compute { label: "attn_step".into() },
+                ],
+            }],
+        }
+    }
+
+    /// Double-ring (LoongTrain-style): outer ring over node groups, inner
+    /// ring within — expressed as two nested rotate loops.
+    pub fn mercury_double_ring(world: usize, seq: usize, heads_dim: usize) -> LoopIR {
+        let inner = world / 2;
+        LoopIR {
+            world,
+            tensors: vec![
+                ("k".into(), vec![seq, heads_dim], DType::BF16),
+                ("v".into(), vec![seq, heads_dim], DType::BF16),
+            ],
+            nodes: vec![LoopNode::ForStep {
+                steps: 2,
+                body: vec![LoopNode::ForStep {
+                    steps: inner,
+                    body: vec![
+                        LoopNode::RotateShard { tensor: "k".into(), axis: 0 },
+                        LoopNode::RotateShard { tensor: "v".into(), axis: 0 },
+                        LoopNode::Compute { label: "attn_step".into() },
+                    ],
+                }],
+            }],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::validate;
+
+    #[test]
+    fn parse_intents_nested() {
+        let ir = presets::mercury_ring_attention(4, 64, 32);
+        let intents = parse_comm_intents(&ir);
+        assert_eq!(intents.len(), 2);
+        assert_eq!(intents[0], ("k".to_string(), 0, 4));
+    }
+
+    #[test]
+    fn ring_attention_lowers_and_validates() {
+        let topo = Topology::h100_node(4).unwrap();
+        let ir = presets::mercury_ring_attention(4, 64, 32);
+        let s = lower_loop_ir(&ir, &topo).unwrap();
+        validate(&s).unwrap();
+        // two tensors x (world-1) pushes per rank
+        assert_eq!(s.num_ops(), 2 * 4 * 3);
+        // pipelined: later steps carry deps
+        assert!(s.per_rank.iter().flatten().any(|o| !o.deps().is_empty()));
+    }
+
+    #[test]
+    fn double_ring_lowers() {
+        let topo = Topology::h100_node(4).unwrap();
+        let ir = presets::mercury_double_ring(4, 64, 32);
+        let s = lower_loop_ir(&ir, &topo).unwrap();
+        validate(&s).unwrap();
+        // inner ring of 2 steps -> 1 push per tensor per rank per outer iter
+        assert!(s.num_ops() > 0);
+    }
+
+    #[test]
+    fn empty_loop_ir_is_empty_schedule() {
+        let topo = Topology::h100_node(2).unwrap();
+        let ir = LoopIR { world: 2, tensors: vec![], nodes: vec![] };
+        let s = lower_loop_ir(&ir, &topo).unwrap();
+        assert_eq!(s.num_ops(), 0);
+    }
+
+    #[test]
+    fn error_cases() {
+        let topo = Topology::h100_node(4).unwrap();
+        // undeclared tensor
+        let ir = LoopIR {
+            world: 4,
+            tensors: vec![],
+            nodes: vec![LoopNode::ForStep {
+                steps: 4,
+                body: vec![LoopNode::RotateShard { tensor: "ghost".into(), axis: 0 }],
+            }],
+        };
+        assert!(lower_loop_ir(&ir, &topo).is_err());
+        // world mismatch
+        let ir2 = presets::mercury_ring_attention(8, 64, 32);
+        assert!(lower_loop_ir(&ir2, &topo).is_err());
+        // steps exceed world
+        let ir3 = LoopIR {
+            world: 4,
+            tensors: vec![("k".into(), vec![64, 32], DType::BF16)],
+            nodes: vec![LoopNode::ForStep {
+                steps: 9,
+                body: vec![LoopNode::RotateShard { tensor: "k".into(), axis: 0 }],
+            }],
+        };
+        assert!(lower_loop_ir(&ir3, &topo).is_err());
+    }
+
+    #[test]
+    fn shard_rotation_covers_all_shards_at_each_rank() {
+        // after the ring completes, every rank has pushed/received w-1
+        // distinct shards of each tensor
+        let topo = Topology::h100_node(4).unwrap();
+        let ir = presets::mercury_ring_attention(4, 64, 32);
+        let s = lower_loop_ir(&ir, &topo).unwrap();
+        for r in 0..4 {
+            let mut shards: Vec<usize> = s.per_rank[r]
+                .iter()
+                .filter(|o| {
+                    s.tensors.get(o.produced_chunk().tensor).unwrap().name == "k"
+                })
+                .map(|o| o.produced_chunk().region.offset[0] / 16)
+                .collect();
+            shards.sort_unstable();
+            shards.dedup();
+            assert_eq!(shards.len(), 3, "rank {r} pushes 3 distinct k shards");
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Frontends from higher-level distributed-compiler IRs (paper §5.1,
+//! Listing 3, Fig. 10).
+//!
+//! Two IR families are supported, mirroring the systems integrated in the
+//! paper's evaluation:
+//!
+//! * [`partition`] — partition-based IRs (Domino-, Alpa-style): tensors carry
+//!   source/destination placements; the implied resharding collectives are
+//!   inferred and lowered onto chunk schedules.
+//! * [`loops`] — loop-based IRs (Mercury-style): explicit ring/step loops
+//!   with per-step send/recv intents, grouped into chunks.
+//!
+//! Both funnel through [`collective`], which realizes abstract collectives
+//! via one of three paths: `direct` (library-style bulk ring), `template`
+//! (this crate's swizzle templates), or `synth` (TACOS-like greedy
+//! synthesis over the topology).
+
+pub mod collective;
+pub mod loops;
+pub mod partition;
+
+pub use collective::LowerPath;

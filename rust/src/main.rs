@@ -1,0 +1,331 @@
+//! Syncopate CLI: the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser — the offline build carries no clap):
+//!
+//! ```text
+//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|headline|all> [--full] [--csv]
+//! syncopate simulate --op <kind> [--model <name>] [--world N] [--tokens N|--seq N]
+//!                    [--split K] [--backend <name>] [--sms N] [--timeline]
+//! syncopate tune --op <kind> [--model <name>] [--world N] [--full]
+//! syncopate exec --case <ag-gemm|gemm-rs|gemm-ar|a2a-gemm|ring-attn> [--world N] [--split K]
+//! syncopate plan --op <kind> [--world N] [--split K]
+//! syncopate serve-demo
+//! ```
+
+use std::collections::HashMap;
+
+use syncopate::autotune::{self, Budget};
+use syncopate::backend::BackendKind;
+use syncopate::codegen::Realization;
+use syncopate::coordinator::execases::{self, run_and_verify};
+use syncopate::coordinator::operators::compile_operator;
+use syncopate::coordinator::service::{opkind_by_name, Coordinator};
+use syncopate::coordinator::TuneConfig;
+use syncopate::error::{Error, Result};
+use syncopate::reports;
+use syncopate::runtime::Runtime;
+use syncopate::sim::engine::simulate;
+use syncopate::topo::Topology;
+use syncopate::workload::{ModelCfg, OperatorInstance, DEFAULT_TOKENS, MODELS};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs and bare flags after the subcommand.
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut bare = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            bare.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, bare)
+}
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::Coordinator(format!("--{key} expects an integer, got `{v}`"))),
+    }
+}
+
+fn model_by_name(name: &str) -> Result<ModelCfg> {
+    MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .copied()
+        .ok_or_else(|| {
+            Error::Coordinator(format!(
+                "unknown model `{name}` (known: {})",
+                MODELS.map(|m| m.name).join(", ")
+            ))
+        })
+}
+
+fn backend_by_name(name: &str) -> Result<BackendKind> {
+    BackendKind::TUNABLE
+        .into_iter()
+        .chain([BackendKind::NcclBulk])
+        .find(|b| b.name() == name)
+        .ok_or_else(|| Error::Coordinator(format!("unknown backend `{name}`")))
+}
+
+fn build_op(flags: &HashMap<String, String>) -> Result<OperatorInstance> {
+    let kind = opkind_by_name(flags.get("op").map(String::as_str).unwrap_or("ag-gemm"))?;
+    let model = model_by_name(flags.get("model").map(String::as_str).unwrap_or("llama3-8b"))?;
+    let world = get_usize(flags, "world", 8)?;
+    Ok(if kind.is_gemm() {
+        OperatorInstance::gemm(kind, &model, get_usize(flags, "tokens", DEFAULT_TOKENS)?, world)
+    } else {
+        OperatorInstance::attention(kind, &model, get_usize(flags, "seq", 16384)?, world)
+    })
+}
+
+fn build_cfg(flags: &HashMap<String, String>) -> Result<TuneConfig> {
+    let mut cfg = TuneConfig::default();
+    cfg.split = get_usize(flags, "split", cfg.split)?;
+    if let Some(b) = flags.get("backend") {
+        let backend = backend_by_name(b)?;
+        let sms = get_usize(
+            flags,
+            "sms",
+            if syncopate::backend::curve(backend).sms_for_peak == 0 { 0 } else { 16 },
+        )?;
+        cfg.real = Realization::new(backend, sms);
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let (flags, bare) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "report" => report(&bare, &flags),
+        "simulate" => {
+            let op = build_op(&flags)?;
+            let cfg = build_cfg(&flags)?;
+            let topo = Topology::h100_node(op.world)?;
+            let (plan, params) = compile_operator(&op, &cfg, &topo)?;
+            let r = simulate(&plan, &topo, params)?;
+            println!("operator : {}", op.label());
+            println!("config   : {}", cfg.label());
+            println!("makespan : {}", syncopate::util::fmt_us(r.makespan_us));
+            println!("tflops   : {:.1}", r.tflops());
+            println!("exposed  : {}", syncopate::util::fmt_us(r.exposed_wait_us));
+            if flags.contains_key("timeline") {
+                println!("{}", r.timeline.ascii(op.world, 100));
+            }
+            if let Some(path) = flags.get("timeline-json") {
+                std::fs::write(path, r.timeline.to_json())?;
+                println!("timeline JSON -> {path}");
+            }
+            Ok(())
+        }
+        "tune" => {
+            let op = build_op(&flags)?;
+            let topo = Topology::h100_node(op.world)?;
+            let budget = if flags.contains_key("full") { Budget::Full } else { Budget::Quick };
+            // tune-once persistence: `--cache FILE` reuses prior results
+            if let Some(path) = flags.get("cache") {
+                let p = std::path::Path::new(path);
+                if p.exists() {
+                    let cache = autotune::TuneCache::load(p)?;
+                    if let Some((cfg, m, t)) = cache.get(&op) {
+                        println!("operator : {} (cached)", op.label());
+                        println!("best     : {cfg}");
+                        println!("makespan : {}", syncopate::util::fmt_us(m));
+                        println!("tflops   : {t:.1}");
+                        return Ok(());
+                    }
+                }
+            }
+            let r = autotune::tune(&op, &topo, budget)?;
+            println!("operator : {}", op.label());
+            println!("best     : {}", r.cfg.label());
+            println!("makespan : {}", syncopate::util::fmt_us(r.makespan_us));
+            println!("tflops   : {:.1}", r.tflops);
+            println!("evaluated: {} (pruned {})", r.evaluated, r.pruned);
+            if let Some(path) = flags.get("cache") {
+                let p = std::path::Path::new(path);
+                let mut cache = if p.exists() {
+                    autotune::TuneCache::load(p)?
+                } else {
+                    autotune::TuneCache::default()
+                };
+                cache.insert(&op, &r);
+                cache.save(p)?;
+                println!("cached   : {path} ({} entries)", cache.len());
+            }
+            Ok(())
+        }
+        "exec" => {
+            let world = get_usize(&flags, "world", 4)?;
+            let split = get_usize(&flags, "split", 1)?;
+            let seed = get_usize(&flags, "seed", 42)? as u64;
+            let case_name =
+                flags.get("case").cloned().unwrap_or_else(|| "ag-gemm".to_string());
+            let case = match case_name.as_str() {
+                "ag-gemm" => execases::ag_gemm(world, split, seed)?,
+                "gemm-rs" => execases::gemm_rs(world, seed)?,
+                "gemm-ar" => execases::gemm_ar(world, seed)?,
+                "a2a-gemm" => execases::a2a_gemm(world, seed)?,
+                "ring-attn" => execases::ring_attention(world, split, seed)?,
+                "attn-sp" => execases::attn_sp(world, seed)?,
+                "ag-gemm-hier" => {
+                    let nodes = get_usize(&flags, "nodes", 2)?;
+                    execases::ag_gemm_hierarchical(nodes, world / nodes, seed)?
+                }
+                other => {
+                    return Err(Error::Coordinator(format!("unknown exec case `{other}`")))
+                }
+            };
+            let name = case.name.clone();
+            let rt = Runtime::open_default()?;
+            let stats = run_and_verify(case, &rt)?;
+            println!(
+                "{name}: VERIFIED ({} transfers, {} moved, {} kernel calls)",
+                stats.transfers,
+                syncopate::util::fmt_bytes(stats.bytes_moved as u64),
+                stats.compute_calls
+            );
+            Ok(())
+        }
+        "plan" => {
+            let op = build_op(&flags)?;
+            let cfg = build_cfg(&flags)?;
+            let topo = Topology::h100_node(op.world)?;
+            let (plan, _) = compile_operator(&op, &cfg, &topo)?;
+            println!("operator  : {}", op.label());
+            println!("transfers : {}", plan.total_transfers());
+            println!("signals   : {}", plan.num_signals);
+            println!("flops     : {:.3e}", plan.total_flops());
+            for (r, prog) in plan.per_rank.iter().enumerate() {
+                println!(
+                    "rank {r}: {} ops ({} tiles, {} transfers, {} waits)",
+                    prog.ops.len(),
+                    prog.num_tiles(),
+                    prog.num_transfers(),
+                    prog.num_waits()
+                );
+            }
+            Ok(())
+        }
+        "serve-demo" => {
+            let world = get_usize(&flags, "world", 8)?;
+            let coord = Coordinator::spawn(Topology::h100_node(world)?);
+            println!("coordinator up (world {world}); submitting demo batch...");
+            for m in &MODELS[..2] {
+                let op = OperatorInstance::gemm(
+                    syncopate::workload::OpKind::AgGemm,
+                    m,
+                    DEFAULT_TOKENS,
+                    world,
+                );
+                let r = coord.run(op, TuneConfig::default())?;
+                println!(
+                    "  {:50} {:>10} {:>8.1} TFLOPS (cache {})",
+                    r.label,
+                    syncopate::util::fmt_us(r.makespan_us),
+                    r.tflops,
+                    r.cache_hit
+                );
+            }
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(Error::Coordinator(format!("unknown subcommand `{other}`")))
+        }
+    }
+}
+
+fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let which = bare.first().map(String::as_str).unwrap_or("all");
+    let budget = if flags.contains_key("full") { Budget::Full } else { Budget::Quick };
+    let csv = flags.contains_key("csv");
+    let emit = |t: &syncopate::metrics::Table| {
+        if csv {
+            println!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    };
+    match which {
+        "table2" => emit(&reports::table2()),
+        "fig2" => {
+            emit(&reports::fig2a());
+            emit(&reports::fig2b()?);
+            emit(&reports::fig2c());
+            emit(&reports::fig2d());
+        }
+        "fig8" => {
+            let t = reports::fig8(budget)?;
+            emit(&t);
+            print_ratios(&t);
+        }
+        "fig9" => {
+            let t = reports::fig9(budget)?;
+            emit(&t);
+            print_ratios(&t);
+        }
+        "fig10" => emit(&reports::fig10(budget)?),
+        "scale" => emit(&reports::scalability(budget)?),
+        "fig11" => {
+            emit(&reports::fig11a()?);
+            emit(&reports::fig11b()?);
+            emit(&reports::fig11c()?);
+            emit(&reports::fig11d()?);
+        }
+        "headline" => {
+            let (avg, max) = reports::headline(budget)?;
+            println!("headline: avg {avg:.2}x, up to {max:.2}x over automatic baselines\n");
+        }
+        "all" => {
+            for w in ["table2", "fig2", "fig8", "fig9", "fig10", "fig11", "scale", "headline"] {
+                report(&[w.to_string()], flags)?;
+            }
+        }
+        other => return Err(Error::Coordinator(format!("unknown report `{other}`"))),
+    }
+    Ok(())
+}
+
+fn print_ratios(t: &syncopate::metrics::Table) {
+    for base in ["triton+nccl", "kernel-level", "flux", "triton-dist"] {
+        if let (Some(avg), Some(max)) =
+            (t.geomean_ratio("syncopate", base), t.max_ratio("syncopate", base))
+        {
+            println!("  vs {base:14} avg {avg:.2}x  max {max:.2}x");
+        }
+    }
+    println!();
+}
+
+fn print_usage() {
+    println!(
+        "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
+         usage: syncopate <report|simulate|tune|exec|plan|serve-demo> [flags]\n\
+         see rust/src/main.rs header for the full flag list"
+    );
+}

@@ -1,0 +1,206 @@
+//! Metrics accounting and report rendering.
+//!
+//! The report binaries print paper-style tables: one row per configuration,
+//! one column per system, TFLOPS or latency. This module owns the shared
+//! formatting, speedup math, and CSV/markdown export so every bench renders
+//! identically.
+
+use std::fmt::Write as _;
+
+use crate::util::geomean;
+
+/// Achieved TFLOP/s from total FLOPs and wall-clock microseconds.
+pub fn tflops(flops: f64, us: f64) -> f64 {
+    if us <= 0.0 {
+        return 0.0;
+    }
+    flops / (us * 1e6)
+}
+
+/// Speedup of `ours` over `baseline` (latencies, lower is better).
+pub fn speedup(baseline_us: f64, ours_us: f64) -> f64 {
+    if ours_us <= 0.0 {
+        return 0.0;
+    }
+    baseline_us / ours_us
+}
+
+/// One rendered comparison table (a paper figure's data).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    /// Column headers (systems).
+    pub columns: Vec<String>,
+    /// (row label, value per column). NaN renders as "-" (unsupported combo,
+    /// e.g. ThunderKittens on 4 GPUs in Fig. 8).
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Unit label for values.
+    pub unit: &'static str,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str], unit: &'static str) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            unit,
+        }
+    }
+
+    pub fn push_row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.into(), values));
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Geomean ratio of column `a` over column `b` across rows where both
+    /// are finite (the "average speedup" headline).
+    pub fn geomean_ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let (ia, ib) = (self.col(a)?, self.col(b)?);
+        let ratios: Vec<f64> = self
+            .rows
+            .iter()
+            .filter_map(|(_, v)| {
+                let (x, y) = (v[ia], v[ib]);
+                (x.is_finite() && y.is_finite() && y > 0.0).then_some(x / y)
+            })
+            .collect();
+        if ratios.is_empty() {
+            None
+        } else {
+            Some(geomean(&ratios))
+        }
+    }
+
+    /// Max ratio of column `a` over `b` (the "up to N×" headline).
+    pub fn max_ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let (ia, ib) = (self.col(a)?, self.col(b)?);
+        self.rows
+            .iter()
+            .filter_map(|(_, v)| {
+                let (x, y) = (v[ia], v[ib]);
+                (x.is_finite() && y.is_finite() && y > 0.0).then_some(x / y)
+            })
+            .fold(None, |m, r| Some(m.map_or(r, |mm: f64| mm.max(r))))
+    }
+
+    /// Pretty-print with aligned columns.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {} [{}]", self.title, self.unit);
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([8])
+            .max()
+            .unwrap();
+        let col_w = self.columns.iter().map(|c| c.len().max(9)).collect::<Vec<_>>();
+        let _ = write!(out, "{:label_w$}", "");
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            let _ = write!(out, "  {c:>w$}");
+        }
+        let _ = writeln!(out);
+        for (label, vals) in &self.rows {
+            let _ = write!(out, "{label:label_w$}");
+            for (v, w) in vals.iter().zip(&col_w) {
+                if v.is_finite() {
+                    let _ = write!(out, "  {v:>w$.2}");
+                } else {
+                    let _ = write!(out, "  {:>w$}", "-");
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// CSV export (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "label,{}", self.columns.join(","));
+        for (label, vals) in &self.rows {
+            let cells: Vec<String> = vals
+                .iter()
+                .map(|v| if v.is_finite() { format!("{v:.4}") } else { String::new() })
+                .collect();
+            let _ = writeln!(out, "{label},{}", cells.join(","));
+        }
+        out
+    }
+
+    /// Markdown export (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} | {} |", "config", self.columns.join(" | "));
+        let _ = writeln!(out, "|{}|", vec!["---"; self.columns.len() + 1].join("|"));
+        for (label, vals) in &self.rows {
+            let cells: Vec<String> = vals
+                .iter()
+                .map(|v| if v.is_finite() { format!("{v:.2}") } else { "-".into() })
+                .collect();
+            let _ = writeln!(out, "| {label} | {} |", cells.join(" | "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        let mut t = Table::new("fig", &["ours", "base"], "TFLOPS");
+        t.push_row("a", vec![4.0, 2.0]);
+        t.push_row("b", vec![9.0, 3.0]);
+        t.push_row("c", vec![5.0, f64::NAN]);
+        t
+    }
+
+    #[test]
+    fn tflops_and_speedup() {
+        assert!((tflops(1e12, 1e6) - 1.0).abs() < 1e-12);
+        assert_eq!(tflops(1.0, 0.0), 0.0);
+        assert_eq!(speedup(10.0, 5.0), 2.0);
+        assert_eq!(speedup(10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ratios_skip_nan_rows() {
+        let t = table();
+        // geomean(2, 3) = sqrt(6)
+        assert!((t.geomean_ratio("ours", "base").unwrap() - 6.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(t.max_ratio("ours", "base").unwrap(), 3.0);
+        assert!(t.geomean_ratio("nope", "base").is_none());
+    }
+
+    #[test]
+    fn render_marks_missing() {
+        let r = table().render();
+        assert!(r.contains("fig"));
+        assert!(r.contains('-'), "{r}");
+        assert!(r.contains("4.00"));
+    }
+
+    #[test]
+    fn csv_and_markdown() {
+        let c = table().to_csv();
+        assert!(c.starts_with("label,ours,base"));
+        assert!(c.contains("c,5.0000,\n"), "{c}");
+        let m = table().to_markdown();
+        assert!(m.contains("| a | 4.00 | 2.00 |"));
+        assert!(m.contains("| c | 5.00 | - |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a"], "u");
+        t.push_row("r", vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,259 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only place the Rust side touches XLA. Artifacts are produced
+//! once by `make artifacts` (python/compile/aot.py) and listed in
+//! `artifacts/manifest.tsv`; at startup we parse the manifest, and compile
+//! each HLO module lazily on first use (compiled executables are cached).
+//!
+//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Spec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+}
+
+/// Parse `manifest.tsv` (written by aot.py alongside manifest.json).
+pub fn parse_manifest(text: &str) -> Result<Vec<Entry>> {
+    let parse_specs = |s: &str| -> Result<Vec<Spec>> {
+        if s.is_empty() {
+            return Ok(vec![]);
+        }
+        s.split(';')
+            .map(|item| {
+                let (dims, dtype) = item
+                    .split_once(',')
+                    .ok_or_else(|| Error::Io(format!("bad spec `{item}`")))?;
+                let shape = dims
+                    .split('x')
+                    .map(|d| {
+                        d.parse::<usize>()
+                            .map_err(|_| Error::Io(format!("bad dim `{d}` in `{item}`")))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Spec { shape, dtype: dtype.to_string() })
+            })
+            .collect()
+    };
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            return Err(Error::Io(format!("manifest line {}: need 4 columns", i + 1)));
+        }
+        out.push(Entry {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            inputs: parse_specs(cols[2])?,
+            outputs: parse_specs(cols[3])?,
+        });
+    }
+    Ok(out)
+}
+
+/// The PJRT-backed artifact runtime.
+///
+/// Not `Sync`: the exec engine is a single-threaded cooperative interpreter
+/// by design (deterministic; see `exec::`), so one runtime per process is
+/// enough. The PJRT CPU client itself multithreads the compute internally.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    entries: HashMap<String, Entry>,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative number of artifact executions (perf accounting).
+    calls: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (expects `manifest.tsv`).
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.tsv")).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {}/manifest.tsv ({e}); run `make artifacts` first",
+                dir.display()
+            ))
+        })?;
+        let entries = parse_manifest(&manifest)?
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e:?}")))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            entries,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(0),
+        })
+    }
+
+    /// Default artifacts location relative to the crate root.
+    pub fn open_default() -> Result<Self> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Self::new(&dir)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "no artifact `{name}` in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn num_calls(&self) -> u64 {
+        *self.calls.borrow()
+    }
+
+    fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.entry(name)?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e:?}")))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns one Vec per output.
+    ///
+    /// Inputs are (data, shape) pairs validated against the manifest.
+    pub fn execute(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.entry(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                entry.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, ((data, shape), spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if *shape != spec.shape.as_slice() {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} shape {shape:?} != manifest {:?}",
+                    spec.shape
+                )));
+            }
+            if data.len() != spec.elems() {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} has {} elems for shape {shape:?}",
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("{name}: reshape input {i}: {e:?}")))?;
+            literals.push(lit);
+        }
+        let exe = self.load(name)?;
+        *self.calls.borrow_mut() += 1;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("{name}: execute: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{name}: fetch: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("{name}: untuple: {e:?}")))?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} outputs returned, {} expected",
+                parts.len(),
+                entry.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("{name}: output {i}: {e:?}")))?;
+                if v.len() != entry.outputs[i].elems() {
+                    return Err(Error::Runtime(format!(
+                        "{name}: output {i} has {} elems, expected {}",
+                        v.len(),
+                        entry.outputs[i].elems()
+                    )));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "gemm\tgemm.hlo.txt\t8x128,float32;128x128,float32\t8x128,float32\n\
+                    fin\tfin.hlo.txt\t64x64,float32;64,float32\t64x64,float32\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "gemm");
+        assert_eq!(entries[0].inputs[0].shape, vec![8, 128]);
+        assert_eq!(entries[0].inputs[0].elems(), 1024);
+        assert_eq!(entries[1].inputs[1].shape, vec![64]);
+    }
+
+    #[test]
+    fn manifest_errors() {
+        assert!(parse_manifest("only\tthree\tcolumns\n").is_err());
+        assert!(parse_manifest("a\tb\tbadspec\t8,f32\n").is_err());
+        assert!(parse_manifest("a\tb\t8xZ,f32\t8,f32\n").is_err());
+        assert!(parse_manifest("").unwrap().is_empty());
+    }
+
+    // Executing real artifacts requires `make artifacts` + the PJRT client;
+    // covered by rust/tests/integration_runtime.rs so `cargo test --lib`
+    // stays artifact-free.
+}

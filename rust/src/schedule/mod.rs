@@ -1,0 +1,499 @@
+//! Communication schedules over chunks (paper §5.1).
+//!
+//! A schedule is `[rank, operations: List<CommOp>]: List` — per-rank ordered
+//! lists of chunk-level operators with explicit `(rank, index)` dependencies.
+//! There is no restriction that ranks perform the same ops: heterogeneous
+//! patterns (Fig. 4e) are first-class.
+//!
+//! One generalization over the paper's Listing-2 API: the `dependency` field
+//! is a *list* of `(rank, index)` tuples rather than a single tuple. Ring
+//! patterns need only one; partition-based AllReduce (Fig. 4d) needs the
+//! owner's re-broadcast to wait on all w-1 incoming partials, which a single
+//! tuple cannot express without artificial chaining.
+//!
+//! Submodules:
+//! * [`templates`] — reusable plans: ring/swizzle AllGather, ReduceScatter,
+//!   partition AllReduce, AllToAll, hierarchical swizzles.
+//! * [`validate`] — structural validation: bounds, dep resolvability,
+//!   deadlock-freedom (global acyclicity), coverage helpers.
+
+pub mod templates;
+pub mod validate;
+
+
+use crate::chunk::{Chunk, TensorTable};
+use crate::error::{Error, Result};
+use crate::topo::Rank;
+
+/// Dependency on another rank's operation: `(rank, index)` per the paper —
+/// "the current operation cannot start until the specified operation on the
+/// given rank has completed".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dep {
+    pub rank: Rank,
+    pub index: usize,
+}
+
+impl Dep {
+    pub fn on(rank: Rank, index: usize) -> Self {
+        Dep { rank, index }
+    }
+}
+
+/// Which side defines a P2P transfer (paper: "If the P2P operation is defined
+/// on the source side, it represents a push operation; otherwise a pull").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransferKind {
+    Push,
+    Pull,
+}
+
+/// Collective operator classes the schedule can request directly; when kept
+/// "direct" the lowering maps them onto optimized backend collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+    AllToAll,
+    Broadcast,
+}
+
+/// One chunk-level communication operation on a rank's list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommOp {
+    /// Point-to-point chunk transfer. Defined on ONE side only (see
+    /// [`TransferKind`]): for `Push`, this op lives on the source rank and
+    /// `peer` is the destination; for `Pull` it lives on the destination and
+    /// `peer` is the source.
+    P2p {
+        kind: TransferKind,
+        peer: Rank,
+        /// Chunk read on the source rank's buffer.
+        src: Chunk,
+        /// Chunk written on the destination rank's buffer.
+        dst: Chunk,
+        /// If true, the transfer accumulates into the destination region
+        /// (the in-network / fibre reduction of Fig. 4d) instead of
+        /// overwriting it.
+        reduce: bool,
+        deps: Vec<Dep>,
+    },
+    /// Collective over a rank group, kept abstract until lowering.
+    Collective {
+        kind: CollectiveKind,
+        src: Chunk,
+        dst: Chunk,
+        ranks: Vec<Rank>,
+        deps: Vec<Dep>,
+    },
+    /// Rank-local region copy (layout staging).
+    LocalCopy { src: Chunk, dst: Chunk, deps: Vec<Dep> },
+}
+
+impl CommOp {
+    pub fn deps(&self) -> &[Dep] {
+        match self {
+            CommOp::P2p { deps, .. }
+            | CommOp::Collective { deps, .. }
+            | CommOp::LocalCopy { deps, .. } => deps,
+        }
+    }
+
+    /// The chunk written at the *destination* of this op (what consumers of
+    /// the op wait for).
+    pub fn produced_chunk(&self) -> &Chunk {
+        match self {
+            CommOp::P2p { dst, .. }
+            | CommOp::Collective { dst, .. }
+            | CommOp::LocalCopy { dst, .. } => dst,
+        }
+    }
+
+    /// The chunk read at the source.
+    pub fn consumed_chunk(&self) -> &Chunk {
+        match self {
+            CommOp::P2p { src, .. }
+            | CommOp::Collective { src, .. }
+            | CommOp::LocalCopy { src, .. } => src,
+        }
+    }
+
+    /// Is this a reduction-carrying op (needs a reduce-capable backend)?
+    pub fn reduces(&self) -> bool {
+        match self {
+            CommOp::P2p { reduce, .. } => *reduce,
+            CommOp::Collective { kind, .. } => matches!(
+                kind,
+                CollectiveKind::ReduceScatter | CollectiveKind::AllReduce
+            ),
+            CommOp::LocalCopy { .. } => false,
+        }
+    }
+
+    /// The rank whose buffer receives data, given the rank owning this op.
+    pub fn dst_rank(&self, owner: Rank) -> Rank {
+        match self {
+            CommOp::P2p { kind: TransferKind::Push, peer, .. } => *peer,
+            CommOp::P2p { kind: TransferKind::Pull, .. } => owner,
+            _ => owner,
+        }
+    }
+
+    /// The rank whose buffer sources the data, given the rank owning this op.
+    pub fn src_rank(&self, owner: Rank) -> Rank {
+        match self {
+            CommOp::P2p { kind: TransferKind::Push, .. } => owner,
+            CommOp::P2p { kind: TransferKind::Pull, peer, .. } => *peer,
+            _ => owner,
+        }
+    }
+}
+
+/// Reference to an op in a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpRef {
+    pub rank: Rank,
+    pub index: usize,
+}
+
+/// A complete chunk-level communication schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommSchedule {
+    pub world: usize,
+    pub tensors: TensorTable,
+    pub per_rank: Vec<Vec<CommOp>>,
+}
+
+impl CommSchedule {
+    pub fn new(world: usize, tensors: TensorTable) -> Self {
+        CommSchedule { world, tensors, per_rank: vec![Vec::new(); world] }
+    }
+
+    /// Append an op to `rank`'s list; returns its index.
+    pub fn add_op(&mut self, rank: Rank, op: CommOp) -> Result<usize> {
+        if rank >= self.world {
+            return Err(Error::Schedule(format!(
+                "rank {rank} out of world {}",
+                self.world
+            )));
+        }
+        self.per_rank[rank].push(op);
+        Ok(self.per_rank[rank].len() - 1)
+    }
+
+    pub fn op(&self, r: OpRef) -> Result<&CommOp> {
+        self.per_rank
+            .get(r.rank)
+            .and_then(|ops| ops.get(r.index))
+            .ok_or_else(|| Error::Schedule(format!("no op at {r:?}")))
+    }
+
+    /// All op references in (rank, index) order.
+    pub fn op_refs(&self) -> Vec<OpRef> {
+        let mut v = Vec::new();
+        for (rank, ops) in self.per_rank.iter().enumerate() {
+            for index in 0..ops.len() {
+                v.push(OpRef { rank, index });
+            }
+        }
+        v
+    }
+
+    /// Total number of ops across all ranks.
+    pub fn num_ops(&self) -> usize {
+        self.per_rank.iter().map(|v| v.len()).sum()
+    }
+
+    /// Total bytes moved across *links* (excludes rank-local copies).
+    pub fn total_link_bytes(&self) -> Result<usize> {
+        let mut total = 0usize;
+        for ops in &self.per_rank {
+            for op in ops {
+                match op {
+                    CommOp::P2p { dst, .. } => total += dst.bytes(&self.tensors)?,
+                    CommOp::Collective { kind, src, dst, ranks, .. } => {
+                        // Standard cost model: ring AG/RS move (n-1)/n of the
+                        // gathered size; AR moves 2x that; A2A moves (n-1)/n.
+                        let n = ranks.len().max(1);
+                        let moved = match kind {
+                            CollectiveKind::AllGather | CollectiveKind::Broadcast => {
+                                dst.bytes(&self.tensors)? * (n - 1) / n
+                            }
+                            CollectiveKind::ReduceScatter | CollectiveKind::AllToAll => {
+                                src.bytes(&self.tensors)? * (n - 1) / n
+                            }
+                            CollectiveKind::AllReduce => {
+                                2 * src.bytes(&self.tensors)? * (n - 1) / n
+                            }
+                        };
+                        total += moved;
+                    }
+                    CommOp::LocalCopy { .. } => {}
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// Append another schedule's ops after this one's (program order), with
+    /// the appended ops' dep indices shifted past the existing per-rank
+    /// lists. Both schedules must share the same tensor table and world —
+    /// used to sequence multi-tensor plans (e.g. K and V rings).
+    pub fn append(&mut self, other: &CommSchedule) -> Result<()> {
+        if other.world != self.world {
+            return Err(Error::Schedule("append: world mismatch".into()));
+        }
+        if other.tensors != self.tensors {
+            return Err(Error::Schedule("append: tensor tables differ".into()));
+        }
+        let offsets: Vec<usize> = (0..self.world).map(|r| self.per_rank[r].len()).collect();
+        for (rank, ops) in other.per_rank.iter().enumerate() {
+            for op in ops {
+                let mut op = op.clone();
+                let deps = match &mut op {
+                    CommOp::P2p { deps, .. }
+                    | CommOp::Collective { deps, .. }
+                    | CommOp::LocalCopy { deps, .. } => deps,
+                };
+                for d in deps.iter_mut() {
+                    d.index += offsets[d.rank];
+                }
+                self.per_rank[rank].push(op);
+            }
+        }
+        Ok(())
+    }
+
+    /// Refine the schedule by splitting every P2P op's chunks `n`-ways along
+    /// `axis` — the **split factor** knob of the autotuner (§5.3). Deps are
+    /// remapped so that sub-op k depends on the dep op's sub-op k (pipelined),
+    /// preserving the original op's semantics.
+    pub fn split_p2p(&self, axis: usize, n: usize) -> Result<CommSchedule> {
+        if n == 0 {
+            return Err(Error::Schedule("split factor must be >= 1".into()));
+        }
+        if n == 1 {
+            return Ok(self.clone());
+        }
+        // Precompute the index map: old (rank, index) -> new base index.
+        // Every P2P op expands to n ops; others stay single.
+        let mut base: Vec<Vec<usize>> = Vec::with_capacity(self.world);
+        for ops in &self.per_rank {
+            let mut cur = 0usize;
+            let mut row = Vec::with_capacity(ops.len());
+            for op in ops {
+                row.push(cur);
+                cur += match op {
+                    CommOp::P2p { .. } => n,
+                    _ => 1,
+                };
+            }
+            base.push(row);
+        }
+        let remap = |deps: &[Dep], k: usize| -> Result<Vec<Dep>> {
+            deps.iter()
+                .map(|d| {
+                    let row = base
+                        .get(d.rank)
+                        .ok_or_else(|| Error::Schedule(format!("dep rank {} oob", d.rank)))?;
+                    let b = *row
+                        .get(d.index)
+                        .ok_or_else(|| Error::Schedule(format!("dep index {} oob", d.index)))?;
+                    // If the dep target was split, depend on its k-th sub-op;
+                    // otherwise on the single lowered op.
+                    let was_p2p =
+                        matches!(self.per_rank[d.rank][d.index], CommOp::P2p { .. });
+                    Ok(Dep { rank: d.rank, index: if was_p2p { b + k } else { b } })
+                })
+                .collect()
+        };
+
+        let mut out = CommSchedule::new(self.world, self.tensors.clone());
+        for (rank, ops) in self.per_rank.iter().enumerate() {
+            for op in ops {
+                match op {
+                    CommOp::P2p { kind, peer, src, dst, reduce, deps } => {
+                        let srcs = src.region.split(axis, n)?;
+                        let dsts = dst.region.split(axis, n)?;
+                        for (k, (s, d)) in srcs.into_iter().zip(dsts).enumerate() {
+                            out.add_op(
+                                rank,
+                                CommOp::P2p {
+                                    kind: *kind,
+                                    peer: *peer,
+                                    src: Chunk::new(src.tensor, s),
+                                    dst: Chunk::new(dst.tensor, d),
+                                    reduce: *reduce,
+                                    deps: remap(deps, k)?,
+                                },
+                            )?;
+                        }
+                    }
+                    CommOp::Collective { kind, src, dst, ranks, deps } => {
+                        out.add_op(
+                            rank,
+                            CommOp::Collective {
+                                kind: *kind,
+                                src: src.clone(),
+                                dst: dst.clone(),
+                                ranks: ranks.clone(),
+                                deps: remap(deps, 0)?,
+                            },
+                        )?;
+                    }
+                    CommOp::LocalCopy { src, dst, deps } => {
+                        out.add_op(
+                            rank,
+                            CommOp::LocalCopy {
+                                src: src.clone(),
+                                dst: dst.clone(),
+                                deps: remap(deps, 0)?,
+                            },
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{DType, Region};
+
+    fn mk() -> (CommSchedule, Chunk, Chunk) {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let sched = CommSchedule::new(2, t);
+        let a = Chunk::new(x, Region::rows(0, 4, 16));
+        let b = Chunk::new(x, Region::rows(4, 4, 16));
+        (sched, a, b)
+    }
+
+    fn push(peer: Rank, src: &Chunk, dst: &Chunk, deps: Vec<Dep>) -> CommOp {
+        CommOp::P2p {
+            kind: TransferKind::Push,
+            peer,
+            src: src.clone(),
+            dst: dst.clone(),
+            reduce: false,
+            deps,
+        }
+    }
+
+    #[test]
+    fn add_and_lookup_op() {
+        let (mut s, a, b) = mk();
+        let i = s.add_op(0, push(1, &a, &b, vec![])).unwrap();
+        assert_eq!(i, 0);
+        assert_eq!(s.num_ops(), 1);
+        let op = s.op(OpRef { rank: 0, index: 0 }).unwrap();
+        assert_eq!(op.produced_chunk(), &b);
+        assert_eq!(op.consumed_chunk(), &a);
+        assert!(!op.reduces());
+        assert_eq!(op.dst_rank(0), 1);
+        assert_eq!(op.src_rank(0), 0);
+    }
+
+    #[test]
+    fn pull_src_dst_ranks() {
+        let (mut s, a, b) = mk();
+        s.add_op(
+            1,
+            CommOp::P2p {
+                kind: TransferKind::Pull,
+                peer: 0,
+                src: a,
+                dst: b,
+                reduce: false,
+                deps: vec![],
+            },
+        )
+        .unwrap();
+        let op = s.op(OpRef { rank: 1, index: 0 }).unwrap();
+        assert_eq!(op.src_rank(1), 0);
+        assert_eq!(op.dst_rank(1), 1);
+    }
+
+    #[test]
+    fn rank_out_of_world_rejected() {
+        let (mut s, a, b) = mk();
+        let op = CommOp::LocalCopy { src: a, dst: b, deps: vec![] };
+        assert!(s.add_op(2, op).is_err());
+    }
+
+    #[test]
+    fn total_link_bytes_p2p() {
+        let (mut s, a, b) = mk();
+        s.add_op(0, push(1, &a, &b, vec![])).unwrap();
+        s.add_op(1, CommOp::LocalCopy { src: a, dst: b, deps: vec![] }).unwrap();
+        // only the P2P counts: 4*16 f32
+        assert_eq!(s.total_link_bytes().unwrap(), 4 * 16 * 4);
+    }
+
+    #[test]
+    fn collective_bytes_model() {
+        let (mut s, a, _) = mk();
+        let full = Chunk::new(a.tensor, Region::full(&[8, 16]));
+        s.add_op(
+            0,
+            CommOp::Collective {
+                kind: CollectiveKind::AllReduce,
+                src: full.clone(),
+                dst: full.clone(),
+                ranks: vec![0, 1],
+                deps: vec![],
+            },
+        )
+        .unwrap();
+        // AR over 2 ranks: 2 * B * 1/2 = B
+        assert_eq!(s.total_link_bytes().unwrap(), 8 * 16 * 4);
+        assert!(s.op(OpRef { rank: 0, index: 0 }).unwrap().reduces());
+    }
+
+    #[test]
+    fn split_p2p_expands_and_remaps_deps() {
+        let (mut s, a, b) = mk();
+        s.add_op(0, push(1, &a, &b, vec![])).unwrap();
+        // rank 1 op depends on rank 0 op 0
+        s.add_op(1, push(0, &b, &a, vec![Dep::on(0, 0)])).unwrap();
+        let s2 = s.split_p2p(0, 2).unwrap();
+        assert_eq!(s2.per_rank[0].len(), 2);
+        assert_eq!(s2.per_rank[1].len(), 2);
+        // pipelined dep remap: rank1 sub-op k depends on rank0 sub-op k
+        assert_eq!(s2.per_rank[1][0].deps(), &[Dep::on(0, 0)]);
+        assert_eq!(s2.per_rank[1][1].deps(), &[Dep::on(0, 1)]);
+        // bytes preserved
+        assert_eq!(s.total_link_bytes().unwrap(), s2.total_link_bytes().unwrap());
+    }
+
+    #[test]
+    fn split_factor_one_is_identity() {
+        let (mut s, a, b) = mk();
+        s.add_op(0, push(1, &a, &b, vec![])).unwrap();
+        assert_eq!(s.split_p2p(0, 1).unwrap(), s);
+        assert!(s.split_p2p(0, 0).is_err());
+    }
+
+    #[test]
+    fn split_nondividing_fails() {
+        let (mut s, a, b) = mk();
+        s.add_op(0, push(1, &a, &b, vec![])).unwrap();
+        assert!(s.split_p2p(0, 3).is_err());
+    }
+
+    #[test]
+    fn op_refs_enumerates_all() {
+        let (mut s, a, b) = mk();
+        s.add_op(0, CommOp::LocalCopy { src: a.clone(), dst: b.clone(), deps: vec![] })
+            .unwrap();
+        s.add_op(1, CommOp::LocalCopy { src: a, dst: b, deps: vec![] }).unwrap();
+        let refs = s.op_refs();
+        assert_eq!(refs.len(), 2);
+        assert_eq!(refs[0], OpRef { rank: 0, index: 0 });
+        assert_eq!(refs[1], OpRef { rank: 1, index: 0 });
+    }
+}

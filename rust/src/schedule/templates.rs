@@ -1,0 +1,713 @@
+//! Reusable chunk-schedule templates (paper §4, §5.1, Fig. 4).
+//!
+//! Users instantiate these with chunk sizes, mesh topologies, communication
+//! axes and pipeline depths; distributed compilers lower their collectives
+//! onto them (`lowering::collective`, path = "template").
+//!
+//! Conventions shared with `exec::`:
+//! * every tensor is declared at its *global* logical shape; each rank holds
+//!   a full-size buffer of which only its shard is initially valid;
+//! * AllGather over axis `a`: rank `r` initially owns shard `r` (the r-th of
+//!   `world` equal slabs along `a`) and finishes owning the full tensor;
+//! * ReduceScatter: every rank starts with a full *partial* tensor and rank
+//!   `r` finishes owning the fully-reduced shard `r`;
+//! * AllToAll: the tensor is a `world × world` block grid along the axis;
+//!   rank `i` starts owning block row `i` and finishes owning block column
+//!   `i` (blocks land at their global positions).
+
+use crate::chunk::{Chunk, Region, TensorId, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
+use crate::topo::{Rank, Topology};
+
+/// The `i`-th of `world` equal slabs of `shape` along `axis`.
+pub fn shard_region(shape: &[usize], axis: usize, world: usize, i: usize) -> Result<Region> {
+    if axis >= shape.len() {
+        return Err(Error::Schedule(format!("axis {axis} out of rank {}", shape.len())));
+    }
+    if world == 0 || shape[axis] % world != 0 {
+        return Err(Error::Schedule(format!(
+            "dim {} on axis {axis} not divisible by world {world}",
+            shape[axis]
+        )));
+    }
+    if i >= world {
+        return Err(Error::Schedule(format!("shard index {i} >= world {world}")));
+    }
+    let step = shape[axis] / world;
+    let mut offset = vec![0; shape.len()];
+    let mut sizes = shape.to_vec();
+    offset[axis] = i * step;
+    sizes[axis] = step;
+    Ok(Region { offset, sizes })
+}
+
+fn shard_chunk(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+    i: usize,
+) -> Result<Chunk> {
+    let shape = table.get(tensor)?.shape.clone();
+    Ok(Chunk::new(tensor, shard_region(&shape, axis, world, i)?))
+}
+
+/// Ring AllGather (Fig. 4c): at step `s`, rank `r` pushes shard
+/// `(r - s) mod w` to its ring successor; step `s >= 1` depends on the
+/// predecessor's step `s-1` push (which delivered that shard here).
+pub fn all_gather_ring(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let mut sched = CommSchedule::new(world, table.clone());
+    for r in 0..world {
+        for s in 0..world.saturating_sub(1) {
+            let idx = (r + world - s) % world;
+            let c = shard_chunk(table, tensor, axis, world, idx)?;
+            let deps = if s == 0 {
+                vec![]
+            } else {
+                vec![Dep::on((r + world - 1) % world, s - 1)]
+            };
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: (r + 1) % world,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps,
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// 1-D swizzled AllGather (Listing 2): rank `r` pulls the shard of peer
+/// `(r + i) mod w` at step `i`. No dependencies — every shard is pulled
+/// straight from its owner, and the swizzle staggers link usage so no two
+/// ranks hit the same peer at the same step.
+pub fn all_gather_swizzle(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let mut sched = CommSchedule::new(world, table.clone());
+    for r in 0..world {
+        for i in 1..world {
+            let peer = (r + i) % world;
+            let c = shard_chunk(table, tensor, axis, world, peer)?;
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Pull,
+                    peer,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// Direct (push-based) AllGather: every rank pushes its own shard to every
+/// peer. Maximum parallelism, maximum link contention — the naive plan
+/// kernel-level compilers emit per partition.
+pub fn all_gather_direct(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let mut sched = CommSchedule::new(world, table.clone());
+    for r in 0..world {
+        let own = shard_chunk(table, tensor, axis, world, r)?;
+        for i in 1..world {
+            let peer = (r + i) % world;
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer,
+                    src: own.clone(),
+                    dst: own.clone(),
+                    reduce: false,
+                    deps: vec![],
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// Ring ReduceScatter: at step `s`, rank `r` pushes-with-reduce shard
+/// `(r - 1 - s) mod w` to its successor. After `w-1` steps rank `r` owns the
+/// fully reduced shard `r`.
+pub fn reduce_scatter_ring(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let mut sched = CommSchedule::new(world, table.clone());
+    for r in 0..world {
+        for s in 0..world.saturating_sub(1) {
+            let idx = (r + 2 * world - 1 - s) % world;
+            let c = shard_chunk(table, tensor, axis, world, idx)?;
+            let deps = if s == 0 {
+                vec![]
+            } else {
+                vec![Dep::on((r + world - 1) % world, s - 1)]
+            };
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: (r + 1) % world,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: true,
+                    deps,
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// Direct ReduceScatter: rank `r` pushes-with-reduce its partial of shard `j`
+/// straight to owner `j`, for every `j != r`. Order-free (reduction is
+/// commutative); shard `r`'s own partial is already in place.
+pub fn reduce_scatter_direct(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let mut sched = CommSchedule::new(world, table.clone());
+    for r in 0..world {
+        for j in 0..world {
+            if j == r {
+                continue;
+            }
+            let c = shard_chunk(table, tensor, axis, world, j)?;
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: j,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: true,
+                    deps: vec![],
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// Partition-based AllReduce (Fig. 4d): each rank pushes its partial of
+/// shard `j` to owner `j` (reduction on the fibre), then each owner
+/// re-broadcasts its reduced shard, waiting on **all** `w-1` incoming
+/// partials (this is where the multi-dep generalization is required).
+pub fn all_reduce_partition(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let mut sched = reduce_scatter_direct(table, tensor, axis, world)?;
+    // In rank q's op list, the push targeting rank j sits at index
+    // j - (j > q): targets ascend with q's own index skipped.
+    let incoming_idx = |q: Rank, target: Rank| -> usize {
+        if target > q {
+            target - 1
+        } else {
+            target
+        }
+    };
+    for r in 0..world {
+        let own = shard_chunk(table, tensor, axis, world, r)?;
+        let deps: Vec<Dep> = (0..world)
+            .filter(|&q| q != r)
+            .map(|q| Dep::on(q, incoming_idx(q, r)))
+            .collect();
+        for i in 1..world {
+            let peer = (r + i) % world;
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer,
+                    src: own.clone(),
+                    dst: own.clone(),
+                    reduce: false,
+                    deps: deps.clone(),
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// AllReduce as ring ReduceScatter followed by ring AllGather, with the AG
+/// phase's first push depending on the RS phase's completion of the local
+/// reduced shard (delivered by the predecessor's last RS push).
+pub fn all_reduce_rs_ag(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    if world < 2 {
+        return Ok(CommSchedule::new(world, table.clone()));
+    }
+    let mut sched = reduce_scatter_ring(table, tensor, axis, world)?;
+    let rs_ops = world - 1;
+    for r in 0..world {
+        for s in 0..world - 1 {
+            let idx = (r + world - s) % world;
+            let c = shard_chunk(table, tensor, axis, world, idx)?;
+            let deps = if s == 0 {
+                // own reduced shard landed with predecessor's last RS push
+                vec![Dep::on((r + world - 1) % world, rs_ops - 1)]
+            } else {
+                vec![Dep::on((r + world - 1) % world, rs_ops + s - 1)]
+            };
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: (r + 1) % world,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps,
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// AllToAll over a `world x world` block grid along `axis`: rank `i` pushes
+/// block `(i, j)` to rank `j`. Block `(i, j)` is the `(i*w + j)`-th of
+/// `w*w` slabs.
+pub fn all_to_all(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let shape = table.get(tensor)?.shape.clone();
+    let blocks = world * world;
+    if shape[axis] % blocks != 0 {
+        return Err(Error::Schedule(format!(
+            "A2A needs axis dim {} divisible by world^2 = {blocks}",
+            shape[axis]
+        )));
+    }
+    let mut sched = CommSchedule::new(world, table.clone());
+    for i in 0..world {
+        for jj in 1..world {
+            // swizzle target order to stagger link usage, like the AG swizzle
+            let j = (i + jj) % world;
+            let c = Chunk::new(tensor, shard_region(&shape, axis, blocks, i * world + j)?);
+            sched.add_op(
+                i,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: j,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
+/// Heterogeneous hierarchical swizzled AllGather (Fig. 4e): pipelines the
+/// intra-node ring with cross-node shard exchange at per-shard granularity.
+///
+/// Phase A: ring AllGather of local shards within each node.
+/// Phase B: each rank pushes its *own* shard to its mirror rank in every
+///          other node (starts immediately — no deps).
+/// Phase C: each rank forwards the remote shards it received in phase B
+///          around its node ring, each hop depending on the shard's arrival
+///          (phase B push or previous hop).
+pub fn all_gather_hierarchical(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    topo: &Topology,
+) -> Result<CommSchedule> {
+    let world = topo.world;
+    let rpn = topo.ranks_per_node;
+    let nodes = world / rpn;
+    if nodes * rpn != world {
+        return Err(Error::Schedule("world not divisible by ranks_per_node".into()));
+    }
+    if nodes == 1 {
+        return all_gather_ring(table, tensor, axis, world);
+    }
+    let mut sched = CommSchedule::new(world, table.clone());
+    let node_of = |r: Rank| r / rpn;
+    let local_next = |r: Rank| node_of(r) * rpn + (r % rpn + 1) % rpn;
+    let local_prev = |r: Rank| node_of(r) * rpn + (r % rpn + rpn - 1) % rpn;
+
+    // Phase A: intra-node ring AG of local shards (rpn-1 ops per rank).
+    for r in 0..world {
+        let base = node_of(r) * rpn;
+        for s in 0..rpn - 1 {
+            let idx = base + (r % rpn + rpn - s) % rpn;
+            let c = shard_chunk(table, tensor, axis, world, idx)?;
+            let deps = if s == 0 { vec![] } else { vec![Dep::on(local_prev(r), s - 1)] };
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: local_next(r),
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps,
+                },
+            )?;
+        }
+    }
+    // Phase B: cross-node push of own shard to the mirror rank of each other
+    // node (nodes-1 ops per rank). Op indices: (rpn-1) .. (rpn-1)+(nodes-2).
+    let phase_b_base = rpn - 1;
+    for r in 0..world {
+        let own = shard_chunk(table, tensor, axis, world, r)?;
+        for dn in 1..nodes {
+            let peer = ((node_of(r) + dn) % nodes) * rpn + (r % rpn);
+            sched.add_op(
+                r,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer,
+                    src: own.clone(),
+                    dst: own.clone(),
+                    reduce: false,
+                    deps: vec![],
+                },
+            )?;
+        }
+    }
+    // Phase C: forward each received remote shard around the local ring.
+    // For remote node delta dn (1..nodes), the shard of my mirror in that
+    // node hops rpn-1 times. Hop s of shard group dn at rank r depends on:
+    //   s == 0: the mirror's phase-B push that delivered it here;
+    //   s >  0: the local predecessor's previous hop of the same group.
+    let phase_c_base = phase_b_base + (nodes - 1);
+    for r in 0..world {
+        for dn in 1..nodes {
+            let src_node = (node_of(r) + nodes - dn) % nodes;
+            for s in 0..rpn - 1 {
+                // shard that arrived at local offset (r%rpn - s) steps back
+                let origin_off = (r % rpn + rpn - s) % rpn;
+                let shard_idx = src_node * rpn + origin_off;
+                let c = shard_chunk(table, tensor, axis, world, shard_idx)?;
+                let deps = if s == 0 {
+                    // mirror's phase-B push toward my node: in the mirror's
+                    // op list, the push to node delta d sits at phase_b_base
+                    // + (d-1), where d = (my_node - src_node) mod nodes = dn.
+                    vec![Dep::on(shard_idx, phase_b_base + dn - 1)]
+                } else {
+                    vec![Dep::on(
+                        local_prev(r),
+                        phase_c_base + (dn - 1) * (rpn - 1) + s - 1,
+                    )]
+                };
+                sched.add_op(
+                    r,
+                    CommOp::P2p {
+                        kind: TransferKind::Push,
+                        peer: local_next(r),
+                        src: c.clone(),
+                        dst: c,
+                        reduce: false,
+                        deps,
+                    },
+                )?;
+            }
+        }
+    }
+    Ok(sched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::DType;
+    use crate::schedule::validate::{check_covers, validate};
+
+    fn table(rows: usize) -> (TensorTable, TensorId) {
+        let mut t = TensorTable::new();
+        let id = t.declare("x", &[rows, 16], DType::F32).unwrap();
+        (t, id)
+    }
+
+    /// Replay a schedule's data movement at region granularity: per-rank set
+    /// of valid shard indices, ops fire when deps are done and (for pushes)
+    /// the source shard is present at the owner.
+    fn replay_valid_shards(
+        sched: &CommSchedule,
+        axis: usize,
+        nshards: usize,
+        initial: impl Fn(Rank) -> Vec<usize>,
+    ) -> Vec<std::collections::HashSet<usize>> {
+        use std::collections::HashSet;
+        let shape = {
+            let (id, decl) = sched.tensors.iter().next().unwrap();
+            let _ = id;
+            decl.shape.clone()
+        };
+        let shard_of = |c: &Chunk| -> usize {
+            let step = shape[axis] / nshards;
+            c.region.offset[axis] / step
+        };
+        let mut valid: Vec<HashSet<usize>> =
+            (0..sched.world).map(|r| initial(r).into_iter().collect()).collect();
+        let mut done: Vec<Vec<bool>> =
+            sched.per_rank.iter().map(|ops| vec![false; ops.len()]).collect();
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for r in 0..sched.world {
+                for (i, op) in sched.per_rank[r].iter().enumerate() {
+                    if done[r][i] {
+                        continue;
+                    }
+                    if !op.deps().iter().all(|d| done[d.rank][d.index]) {
+                        continue;
+                    }
+                    let srcr = op.src_rank(r);
+                    let dstr = op.dst_rank(r);
+                    let sh = shard_of(op.consumed_chunk());
+                    if !valid[srcr].contains(&sh) {
+                        continue; // data not yet present at source
+                    }
+                    valid[dstr].insert(shard_of(op.produced_chunk()));
+                    done[r][i] = true;
+                    progressed = true;
+                }
+            }
+        }
+        assert!(
+            done.iter().all(|v| v.iter().all(|&b| b)),
+            "schedule did not complete: stuck ops remain"
+        );
+        valid
+    }
+
+    #[test]
+    fn shard_region_basics() {
+        let r = shard_region(&[8, 16], 0, 4, 2).unwrap();
+        assert_eq!(r, Region::rows(4, 2, 16));
+        assert!(shard_region(&[8, 16], 0, 3, 0).is_err());
+        assert!(shard_region(&[8, 16], 2, 2, 0).is_err());
+        assert!(shard_region(&[8, 16], 0, 4, 4).is_err());
+    }
+
+    #[test]
+    fn ring_ag_validates_and_gathers() {
+        for world in [2, 4, 8] {
+            let (t, x) = table(world * 2);
+            let s = all_gather_ring(&t, x, 0, world).unwrap();
+            validate(&s).unwrap();
+            assert_eq!(s.num_ops(), world * (world - 1));
+            let valid = replay_valid_shards(&s, 0, world, |r| vec![r]);
+            for v in valid {
+                assert_eq!(v.len(), world, "rank missing shards after ring AG");
+            }
+        }
+    }
+
+    #[test]
+    fn swizzle_ag_gathers_without_deps() {
+        let (t, x) = table(8);
+        let s = all_gather_swizzle(&t, x, 0, 4).unwrap();
+        validate(&s).unwrap();
+        assert!(s.per_rank.iter().flatten().all(|o| o.deps().is_empty()));
+        let valid = replay_valid_shards(&s, 0, 4, |r| vec![r]);
+        for v in valid {
+            assert_eq!(v.len(), 4);
+        }
+    }
+
+    #[test]
+    fn swizzle_staggers_peers() {
+        let (t, x) = table(8);
+        let s = all_gather_swizzle(&t, x, 0, 4).unwrap();
+        // at step i, the set of pulled peers across ranks is a permutation
+        for i in 0..3 {
+            let peers: std::collections::HashSet<_> = (0..4)
+                .map(|r| match &s.per_rank[r][i] {
+                    CommOp::P2p { peer, .. } => *peer,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(peers.len(), 4, "step {i} collides on a peer");
+        }
+    }
+
+    #[test]
+    fn direct_ag_gathers() {
+        let (t, x) = table(8);
+        let s = all_gather_direct(&t, x, 0, 4).unwrap();
+        validate(&s).unwrap();
+        let valid = replay_valid_shards(&s, 0, 4, |r| vec![r]);
+        for v in valid {
+            assert_eq!(v.len(), 4);
+        }
+    }
+
+    #[test]
+    fn ring_rs_validates_and_counts_reduces() {
+        for world in [2, 4, 8] {
+            let (t, x) = table(world * 2);
+            let s = reduce_scatter_ring(&t, x, 0, world).unwrap();
+            validate(&s).unwrap();
+            assert!(s.per_rank.iter().flatten().all(|o| o.reduces()));
+            // each shard is pushed exactly w-1 times
+            let mut counts = vec![0usize; world];
+            let step = (world * 2) / world;
+            for op in s.per_rank.iter().flatten() {
+                counts[op.produced_chunk().region.offset[0] / step] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == world - 1), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn ring_rs_final_hop_lands_at_owner() {
+        // the LAST push of shard k must target rank k
+        let world = 4;
+        let (t, x) = table(8);
+        let s = reduce_scatter_ring(&t, x, 0, world).unwrap();
+        // shard k's hops in dep order: find op with no *later* op pushing k
+        for k in 0..world {
+            let mut last_dst = None;
+            // hops are rank r step s with shard (r-1-s) == k; the final hop
+            // has s = world-2... 0-indexed: s from 0..w-1; find s_max
+            for r in 0..world {
+                for (s, op) in s.per_rank[r].iter().enumerate() {
+                    let sh = op.produced_chunk().region.offset[0] / 2;
+                    if sh == k && s == world - 2 {
+                        last_dst = Some(op.dst_rank(r));
+                    }
+                }
+            }
+            assert_eq!(last_dst, Some(k), "shard {k} must end at rank {k}");
+        }
+    }
+
+    #[test]
+    fn partition_ar_multi_deps() {
+        let world = 4;
+        let (t, x) = table(8);
+        let s = all_reduce_partition(&t, x, 0, world).unwrap();
+        validate(&s).unwrap();
+        // broadcast ops carry w-1 deps each
+        for r in 0..world {
+            for op in &s.per_rank[r][world - 1..] {
+                assert_eq!(op.deps().len(), world - 1);
+                assert!(!op.reduces());
+            }
+        }
+        // full replay: everyone ends with every shard
+        let valid = replay_valid_shards(&s, 0, world, |_| (0..world).collect());
+        for v in valid {
+            assert_eq!(v.len(), world);
+        }
+    }
+
+    #[test]
+    fn ar_rs_ag_validates() {
+        for world in [2, 4] {
+            let (t, x) = table(world * 2);
+            let s = all_reduce_rs_ag(&t, x, 0, world).unwrap();
+            validate(&s).unwrap();
+            assert_eq!(s.num_ops(), world * 2 * (world - 1));
+        }
+    }
+
+    #[test]
+    fn a2a_block_exchange() {
+        let world = 4;
+        let (t, x) = table(world * world * 2); // 32 rows = 16 blocks of 2
+        let s = all_to_all(&t, x, 0, world).unwrap();
+        validate(&s).unwrap();
+        // rank i pushes w-1 blocks, all from its own block row
+        for i in 0..world {
+            assert_eq!(s.per_rank[i].len(), world - 1);
+            for op in &s.per_rank[i] {
+                let blk = op.consumed_chunk().region.offset[0] / 2;
+                assert_eq!(blk / world, i, "rank {i} must send its own row blocks");
+            }
+        }
+    }
+
+    #[test]
+    fn a2a_requires_divisibility() {
+        let (t, x) = table(6);
+        assert!(all_to_all(&t, x, 0, 4).is_err());
+    }
+
+    #[test]
+    fn hierarchical_ag_gathers_two_nodes() {
+        let topo = Topology::h100_multinode(2, 4).unwrap();
+        let (t, x) = table(16); // 8 shards of 2 rows
+        let s = all_gather_hierarchical(&t, x, 0, &topo).unwrap();
+        validate(&s).unwrap();
+        let valid = replay_valid_shards(&s, 0, 8, |r| vec![r]);
+        for (r, v) in valid.iter().enumerate() {
+            assert_eq!(v.len(), 8, "rank {r} missing shards: {v:?}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_ag_single_node_falls_back_to_ring() {
+        let topo = Topology::h100_node(4).unwrap();
+        let (t, x) = table(8);
+        let a = all_gather_hierarchical(&t, x, 0, &topo).unwrap();
+        let b = all_gather_ring(&t, x, 0, 4).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hierarchical_ag_three_nodes() {
+        let topo = Topology::h100_multinode(3, 2).unwrap();
+        let (t, x) = table(12); // 6 shards of 2
+        let s = all_gather_hierarchical(&t, x, 0, &topo).unwrap();
+        validate(&s).unwrap();
+        let valid = replay_valid_shards(&s, 0, 6, |r| vec![r]);
+        for (r, v) in valid.iter().enumerate() {
+            assert_eq!(v.len(), 6, "rank {r}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn ag_shards_cover_tensor() {
+        let (t, x) = table(8);
+        let shape = t.get(x).unwrap().shape.clone();
+        let regions: Vec<Region> =
+            (0..4).map(|i| shard_region(&shape, 0, 4, i).unwrap()).collect();
+        assert!(check_covers(&shape, &regions));
+    }
+}

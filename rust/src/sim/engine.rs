@@ -1,0 +1,657 @@
+//! Event-driven executor for [`ExecutablePlan`]s over the calibrated
+//! hardware model.
+//!
+//! Modeled resources, per device: the compute SM pool (minus any statically
+//! reserved communication SMs), `copy_engines_per_device` DMA queues, one
+//! specialized-communication SM group, one co-located issue queue (whose SM
+//! time is charged back to compute as "debt"), and directed links with
+//! serialization per (src, dst) pair.
+//!
+//! Determinism: the event heap is ordered by (time, sequence number); equal
+//! times resolve in creation order, so repeated runs are bit-identical.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::backend::{self, BackendKind};
+use crate::codegen::{ExecutablePlan, PlanOp, SignalId};
+use crate::error::{Error, Result};
+use crate::sim::timeline::{Span, SpanKind, Timeline};
+use crate::sim::waves;
+use crate::topo::Topology;
+
+/// Simulation knobs beyond the plan itself.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// Achieved fraction of per-SM peak for this operator's tile shape
+    /// (from [`waves::mxu_efficiency`] of the tile config).
+    pub mxu_eff: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams { mxu_eff: 0.85 }
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan_us: f64,
+    pub rank_end_us: Vec<f64>,
+    pub total_flops: f64,
+    pub exposed_wait_us: f64,
+    pub timeline: Timeline,
+}
+
+impl SimResult {
+    /// Aggregate achieved TFLOP/s across the whole mesh.
+    pub fn tflops(&self) -> f64 {
+        if self.makespan_us <= 0.0 {
+            return 0.0;
+        }
+        self.total_flops / (self.makespan_us * 1e6)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    Resume { rank: usize },
+    TryIssue { tid: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Key {
+    t: f64,
+    seq: u64,
+}
+
+impl PartialEq for Key {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&o.t).then(self.seq.cmp(&o.seq))
+    }
+}
+
+struct Engine<'a> {
+    plan: &'a ExecutablePlan,
+    topo: &'a Topology,
+    params: SimParams,
+    heap: BinaryHeap<Reverse<(Key, usize)>>,
+    events: Vec<Event>,
+    seq: u64,
+    // rank state
+    pc: Vec<usize>,
+    debt_sm_us: Vec<f64>,
+    done: Vec<bool>,
+    rank_end: Vec<f64>,
+    exposed_wait: f64,
+    // transfers & signals
+    xfers: Vec<Xfer>,
+    signal_time: Vec<Option<f64>>,
+    blocked_xfers: HashMap<SignalId, Vec<usize>>,
+    waiting_ranks: HashMap<SignalId, Vec<(usize, f64)>>,
+    // resources
+    ce_free: Vec<Vec<f64>>,
+    commsm_free: Vec<f64>,
+    coloc_free: Vec<f64>,
+    link_free: HashMap<(usize, usize), f64>,
+    timeline: Timeline,
+}
+
+struct Xfer {
+    /// Index into per_rank program: (rank, op position) for provenance only.
+    owner: usize,
+    desc: crate::codegen::TransferDesc,
+    created_at: f64,
+    scheduled: bool,
+}
+
+/// Simulate one plan on one topology.
+pub fn simulate(plan: &ExecutablePlan, topo: &Topology, params: SimParams) -> Result<SimResult> {
+    if plan.world != topo.world {
+        return Err(Error::Sim(format!(
+            "plan world {} != topology world {}",
+            plan.world, topo.world
+        )));
+    }
+    plan.validate().map_err(|e| Error::Sim(format!("invalid plan: {e}")))?;
+    let compute_sms = topo
+        .sms_per_device
+        .checked_sub(plan.reserved_comm_sms)
+        .filter(|&s| s > 0)
+        .ok_or_else(|| {
+            Error::Sim(format!(
+                "reserved comm SMs {} leave no compute SMs (device has {})",
+                plan.reserved_comm_sms, topo.sms_per_device
+            ))
+        })?;
+    let _ = compute_sms;
+
+    let mut eng = Engine {
+        plan,
+        topo,
+        params,
+        heap: BinaryHeap::new(),
+        events: Vec::new(),
+        seq: 0,
+        pc: vec![0; plan.world],
+        debt_sm_us: vec![0.0; plan.world],
+        done: vec![false; plan.world],
+        rank_end: vec![0.0; plan.world],
+        exposed_wait: 0.0,
+        xfers: Vec::new(),
+        signal_time: vec![None; plan.num_signals],
+        blocked_xfers: HashMap::new(),
+        waiting_ranks: HashMap::new(),
+        ce_free: vec![vec![0.0; topo.copy_engines_per_device.max(1)]; plan.world],
+        commsm_free: vec![0.0; plan.world],
+        coloc_free: vec![0.0; plan.world],
+        link_free: HashMap::new(),
+        timeline: Timeline::default(),
+    };
+    for r in 0..plan.world {
+        eng.push(0.0, Event::Resume { rank: r });
+    }
+    eng.run()?;
+
+    // an operator is not complete until its last transfer lands (e.g. the
+    // tail reductions of GEMM-RS finish after the producing rank's program)
+    let makespan = eng
+        .rank_end
+        .iter()
+        .copied()
+        .fold(0.0, f64::max)
+        .max(eng.timeline.makespan_us());
+    Ok(SimResult {
+        makespan_us: makespan,
+        rank_end_us: eng.rank_end,
+        total_flops: plan.total_flops(),
+        exposed_wait_us: eng.exposed_wait,
+        timeline: eng.timeline,
+    })
+}
+
+impl<'a> Engine<'a> {
+    fn push(&mut self, t: f64, ev: Event) {
+        let id = self.events.len();
+        self.events.push(ev);
+        self.heap.push(Reverse((Key { t, seq: self.seq }, id)));
+        self.seq += 1;
+    }
+
+    fn run(&mut self) -> Result<()> {
+        while let Some(Reverse((key, id))) = self.heap.pop() {
+            match self.events[id] {
+                Event::Resume { rank } => self.resume(rank, key.t)?,
+                Event::TryIssue { tid } => self.try_issue(tid, key.t)?,
+            }
+        }
+        // deadlock check
+        for r in 0..self.plan.world {
+            if !self.done[r] {
+                let op = self
+                    .plan
+                    .per_rank[r]
+                    .ops
+                    .get(self.pc[r])
+                    .map(|o| format!("{o:?}"))
+                    .unwrap_or_else(|| "<end>".into());
+                return Err(Error::Sim(format!(
+                    "deadlock: rank {r} stuck at op {} ({op})",
+                    self.pc[r]
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn compute_sms(&self) -> usize {
+        self.topo.sms_per_device - self.plan.reserved_comm_sms
+    }
+
+    fn resume(&mut self, rank: usize, mut t: f64) -> Result<()> {
+        let prog = &self.plan.per_rank[rank];
+        while self.pc[rank] < prog.ops.len() {
+            let pc = self.pc[rank];
+            match &prog.ops[pc] {
+                PlanOp::Overhead { us, label } => {
+                    self.timeline.push(Span {
+                        rank,
+                        kind: SpanKind::Overhead,
+                        start_us: t,
+                        end_us: t + us,
+                        label: (*label).into(),
+                    });
+                    t += us;
+                    self.pc[rank] += 1;
+                }
+                PlanOp::Compute(seg) => {
+                    let n = seg.tiles.len();
+                    let sms = self.compute_sms();
+                    let mean_flops = if n == 0 { 0.0 } else { seg.total_flops() / n as f64 };
+                    let tile_us =
+                        mean_flops / (self.topo.sm_tflops * 1e6 * self.params.mxu_eff.max(1e-3));
+                    let dur = if seg.quantized {
+                        waves::segment_duration_us(n, tile_us, sms, self.debt_sm_us[rank])
+                    } else {
+                        waves::streaming_duration_us(n, tile_us, sms, self.debt_sm_us[rank])
+                    };
+                    self.debt_sm_us[rank] = 0.0;
+                    if dur > 0.0 {
+                        self.timeline.push(Span {
+                            rank,
+                            kind: SpanKind::Compute,
+                            start_us: t,
+                            end_us: t + dur,
+                            label: format!("{n} tiles"),
+                        });
+                    }
+                    t += dur;
+                    self.pc[rank] += 1;
+                }
+                PlanOp::Issue(desc) => {
+                    let tid = self.xfers.len();
+                    self.xfers.push(Xfer {
+                        owner: rank,
+                        desc: desc.clone(),
+                        created_at: t,
+                        scheduled: false,
+                    });
+                    self.pc[rank] += 1;
+                    // Issue inline (not via the heap) so co-located SM debt
+                    // lands before this rank's next compute segment — the
+                    // issuing SMs are borrowed from exactly that segment.
+                    self.try_issue(tid, t)?;
+                }
+                PlanOp::Wait(sig) => {
+                    let sig = *sig;
+                    self.pc[rank] += 1;
+                    match self.signal_time[sig] {
+                        Some(ts) if ts <= t => {} // already landed, fall through
+                        Some(ts) => {
+                            self.stall(rank, t, ts, sig);
+                            self.push(ts, Event::Resume { rank });
+                            return Ok(());
+                        }
+                        None => {
+                            self.waiting_ranks.entry(sig).or_default().push((rank, t));
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+        self.done[rank] = true;
+        self.rank_end[rank] = self.rank_end[rank].max(t);
+        Ok(())
+    }
+
+    fn stall(&mut self, rank: usize, from: f64, to: f64, sig: SignalId) {
+        if to > from {
+            self.exposed_wait += to - from;
+            self.timeline.push(Span {
+                rank,
+                kind: SpanKind::WaitStall,
+                start_us: from,
+                end_us: to,
+                label: format!("sig{sig}"),
+            });
+        }
+    }
+
+    fn try_issue(&mut self, tid: usize, t: f64) -> Result<()> {
+        if self.xfers[tid].scheduled {
+            return Ok(());
+        }
+        // resolve deps: all signal times must be known
+        let mut ready = self.xfers[tid].created_at.max(t);
+        for &d in &self.xfers[tid].desc.dep_signals.clone() {
+            match self.signal_time[d] {
+                Some(ts) => ready = ready.max(ts),
+                None => {
+                    self.blocked_xfers.entry(d).or_default().push(tid);
+                    return Ok(());
+                }
+            }
+        }
+        let (owner, desc) = (self.xfers[tid].owner, self.xfers[tid].desc.clone());
+        let link = self.topo.link(desc.src_rank, desc.dst_rank)?;
+        let dur = backend::transfer_time_us(
+            desc.backend,
+            desc.bytes,
+            desc.pieces,
+            desc.comm_sms,
+            link,
+        );
+        // engine queue on the issuing device
+        let queue_free = match desc.backend {
+            BackendKind::CopyEngine => {
+                let q = self.ce_free[desc.src_rank]
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                self.ce_free[desc.src_rank][q]
+            }
+            BackendKind::TmaSpecialized | BackendKind::LdStSpecialized | BackendKind::NcclBulk => {
+                self.commsm_free[owner]
+            }
+            BackendKind::TmaColocated | BackendKind::LdStColocated => self.coloc_free[owner],
+        };
+        let lf = *self.link_free.entry((desc.src_rank, desc.dst_rank)).or_insert(0.0);
+        let start = ready.max(queue_free).max(lf);
+        let done = start + dur;
+        // commit resources
+        match desc.backend {
+            BackendKind::CopyEngine => {
+                let q = self.ce_free[desc.src_rank]
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                self.ce_free[desc.src_rank][q] = done;
+            }
+            BackendKind::TmaSpecialized | BackendKind::LdStSpecialized | BackendKind::NcclBulk => {
+                self.commsm_free[owner] = done;
+            }
+            BackendKind::TmaColocated | BackendKind::LdStColocated => {
+                self.coloc_free[owner] = done;
+                // borrowed SM time charged back to this rank's compute
+                self.debt_sm_us[owner] += dur * desc.comm_sms as f64;
+            }
+        }
+        self.link_free.insert((desc.src_rank, desc.dst_rank), done);
+        self.signal_time[desc.signal] = Some(done);
+        self.xfers[tid].scheduled = true;
+        self.timeline.push(Span {
+            rank: owner,
+            kind: SpanKind::Transfer,
+            start_us: start,
+            end_us: done,
+            label: format!(
+                "{}->{} {}B {}",
+                desc.src_rank,
+                desc.dst_rank,
+                desc.bytes,
+                desc.backend.name()
+            ),
+        });
+        // wake blocked transfers and waiting ranks
+        if let Some(blocked) = self.blocked_xfers.remove(&desc.signal) {
+            for b in blocked {
+                self.push(t, Event::TryIssue { tid: b });
+            }
+        }
+        if let Some(waiters) = self.waiting_ranks.remove(&desc.signal) {
+            for (rank, floor) in waiters {
+                let resume_at = done.max(floor);
+                self.stall(rank, floor, resume_at, desc.signal);
+                self.push(resume_at, Event::Resume { rank });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{ComputeSeg, PlanOp, RankProgram, TransferDesc};
+    use crate::chunk::{Chunk, Region, TensorId};
+    use crate::schedule::OpRef;
+
+    fn chunk() -> Chunk {
+        Chunk::new(TensorId(0), Region::rows(0, 4, 16))
+    }
+
+    fn xfer(signal: usize, src: usize, dst: usize, bytes: usize, deps: Vec<usize>) -> TransferDesc {
+        TransferDesc {
+            signal,
+            op: OpRef { rank: src, index: signal },
+            src_rank: src,
+            dst_rank: dst,
+            src_chunk: chunk(),
+            dst_chunk: chunk(),
+            bytes,
+            pieces: 1,
+            backend: BackendKind::CopyEngine,
+            comm_sms: 0,
+            reduce: false,
+            dep_signals: deps,
+        }
+    }
+
+    fn seg(tiles: usize, flops_per_tile: f64) -> ComputeSeg {
+        ComputeSeg {
+            tiles: (0..tiles).collect(),
+            flops: vec![flops_per_tile; tiles],
+            calls: vec![],
+            quantized: true, // unit tests check the wave model directly
+        }
+    }
+
+    fn plan(world: usize, progs: Vec<Vec<PlanOp>>, signals: usize) -> ExecutablePlan {
+        ExecutablePlan {
+            world,
+            per_rank: progs.into_iter().map(|ops| RankProgram { ops }).collect(),
+            num_signals: signals,
+            reserved_comm_sms: 0,
+        }
+    }
+
+    #[test]
+    fn compute_only_plan_times_by_waves() {
+        let topo = Topology::h100_node(1).unwrap();
+        // 264 tiles of 2*128^3 flops on 132 SMs = 2 waves
+        let p = plan(1, vec![vec![PlanOp::Compute(seg(264, 2.0 * 128.0_f64.powi(3)))]], 0);
+        let r = simulate(&p, &topo, SimParams { mxu_eff: 1.0 }).unwrap();
+        let tile_us = 2.0 * 128.0_f64.powi(3) / (7.5 * 1e6);
+        assert!((r.makespan_us - 2.0 * tile_us).abs() < 1e-9);
+        assert!(r.tflops() > 0.0);
+    }
+
+    #[test]
+    fn transfer_then_wait_exposes_comm() {
+        let topo = Topology::h100_node(2).unwrap();
+        // rank1 issues a big transfer; rank0 waits for it with no compute.
+        let p = plan(
+            2,
+            vec![
+                vec![PlanOp::Wait(0)],
+                vec![PlanOp::Issue(xfer(0, 1, 0, 64 << 20, vec![]))],
+            ],
+            1,
+        );
+        let r = simulate(&p, &topo, SimParams::default()).unwrap();
+        assert!(r.makespan_us > 100.0, "64MiB over ~400GB/s ≈ 170µs: {}", r.makespan_us);
+        assert!(r.exposed_wait_us > 100.0);
+    }
+
+    #[test]
+    fn overlap_hides_comm_behind_compute() {
+        let topo = Topology::h100_node(2).unwrap();
+        // 100 waves of 128^3 tiles ≈ 66µs compute vs ~52µs transfer
+        let big_seg = seg(264 * 50, 2.0 * 128.0_f64.powi(3));
+        let t = xfer(0, 1, 0, 16 << 20, vec![]);
+        // rank0: compute, then wait (transfer long done) -> no stall
+        let p = plan(
+            2,
+            vec![
+                vec![PlanOp::Compute(big_seg.clone()), PlanOp::Wait(0)],
+                vec![PlanOp::Issue(t), PlanOp::Compute(big_seg)],
+            ],
+            1,
+        );
+        let r = simulate(&p, &topo, SimParams::default()).unwrap();
+        assert!(r.exposed_wait_us < 1.0, "exposed {}", r.exposed_wait_us);
+    }
+
+    #[test]
+    fn dep_signals_serialize_transfers() {
+        let topo = Topology::h100_node(3).unwrap();
+        let bytes = 8 << 20;
+        // t1 (rank1->0) deps on t0 (rank2->1): must start after t0 completes.
+        let p = plan(
+            3,
+            vec![
+                vec![PlanOp::Wait(1)],
+                vec![PlanOp::Issue(xfer(1, 1, 0, bytes, vec![0]))],
+                vec![PlanOp::Issue(xfer(0, 2, 1, bytes, vec![]))],
+            ],
+            2,
+        );
+        let r = simulate(&p, &topo, SimParams::default()).unwrap();
+        let single = {
+            let p1 = plan(
+                2,
+                vec![
+                    vec![PlanOp::Wait(0)],
+                    vec![PlanOp::Issue(xfer(0, 1, 0, bytes, vec![]))],
+                ],
+                1,
+            );
+            simulate(&p1, &Topology::h100_node(2).unwrap(), SimParams::default())
+                .unwrap()
+                .makespan_us
+        };
+        // chained: roughly 2x one transfer
+        assert!(r.makespan_us > 1.8 * single, "{} vs {single}", r.makespan_us);
+    }
+
+    #[test]
+    fn link_contention_serializes_same_pair() {
+        let topo = Topology::h100_node(2).unwrap();
+        let bytes = 32 << 20;
+        // two transfers on the same (1 -> 0) link, independent
+        let p = plan(
+            2,
+            vec![
+                vec![PlanOp::Wait(0), PlanOp::Wait(1)],
+                vec![
+                    PlanOp::Issue(xfer(0, 1, 0, bytes, vec![])),
+                    PlanOp::Issue(xfer(1, 1, 0, bytes, vec![])),
+                ],
+            ],
+            2,
+        );
+        let two = simulate(&p, &topo, SimParams::default()).unwrap().makespan_us;
+        let p1 = plan(
+            2,
+            vec![
+                vec![PlanOp::Wait(0)],
+                vec![PlanOp::Issue(xfer(0, 1, 0, bytes, vec![]))],
+            ],
+            1,
+        );
+        let one = simulate(&p1, &topo, SimParams::default()).unwrap().makespan_us;
+        assert!(two > 1.8 * one, "{two} vs {one}");
+    }
+
+    #[test]
+    fn colocated_charges_debt_to_compute() {
+        let topo = Topology::h100_node(2).unwrap();
+        let mut t = xfer(0, 1, 0, 32 << 20, vec![]);
+        t.backend = BackendKind::LdStColocated;
+        t.comm_sms = 32;
+        let cseg = seg(264, 2.0 * 128.0_f64.powi(3));
+        let p_coloc = plan(
+            2,
+            vec![
+                vec![PlanOp::Wait(0)],
+                vec![PlanOp::Issue(t), PlanOp::Compute(cseg.clone())],
+            ],
+            1,
+        );
+        let r_coloc = simulate(&p_coloc, &topo, SimParams::default()).unwrap();
+        let mut t2 = xfer(0, 1, 0, 32 << 20, vec![]);
+        t2.backend = BackendKind::CopyEngine;
+        let p_ce = plan(
+            2,
+            vec![
+                vec![PlanOp::Wait(0)],
+                vec![PlanOp::Issue(t2), PlanOp::Compute(cseg)],
+            ],
+            1,
+        );
+        let r_ce = simulate(&p_ce, &topo, SimParams::default()).unwrap();
+        // rank1 compute is slower under co-located issue (debt)
+        assert!(r_coloc.rank_end_us[1] > r_ce.rank_end_us[1]);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let topo = Topology::h100_node(1).unwrap();
+        // wait on a signal nobody sets
+        let p = plan(1, vec![vec![PlanOp::Wait(0)]], 1);
+        let e = simulate(&p, &topo, SimParams::default()).unwrap_err();
+        assert!(e.to_string().contains("deadlock"), "{e}");
+    }
+
+    #[test]
+    fn world_mismatch_rejected() {
+        let topo = Topology::h100_node(2).unwrap();
+        let p = plan(1, vec![vec![]], 0);
+        assert!(simulate(&p, &topo, SimParams::default()).is_err());
+    }
+
+    #[test]
+    fn reserved_sms_slow_compute() {
+        let topo = Topology::h100_node(1).unwrap();
+        let mk = |reserved| {
+            let mut p = plan(1, vec![vec![PlanOp::Compute(seg(264, 2.0 * 128.0_f64.powi(3)))]], 0);
+            p.reserved_comm_sms = reserved;
+            simulate(&p, &topo, SimParams::default()).unwrap().makespan_us
+        };
+        assert!(mk(66) > mk(0)); // half the SMs -> more waves
+        // all SMs reserved is invalid
+        let mut p = plan(1, vec![vec![]], 0);
+        p.reserved_comm_sms = 132;
+        assert!(simulate(&p, &topo, SimParams::default()).is_err());
+    }
+
+    #[test]
+    fn overhead_spans_accumulate() {
+        let topo = Topology::h100_node(1).unwrap();
+        let p = plan(
+            1,
+            vec![vec![
+                PlanOp::Overhead { us: 5.0, label: "launch" },
+                PlanOp::Overhead { us: 3.0, label: "sync" },
+            ]],
+            0,
+        );
+        let r = simulate(&p, &topo, SimParams::default()).unwrap();
+        assert!((r.makespan_us - 8.0).abs() < 1e-12);
+        assert_eq!(r.timeline.spans.len(), 2);
+    }
+
+    #[test]
+    fn determinism() {
+        let topo = Topology::h100_node(2).unwrap();
+        let p = plan(
+            2,
+            vec![
+                vec![PlanOp::Compute(seg(100, 1e6)), PlanOp::Wait(0)],
+                vec![PlanOp::Issue(xfer(0, 1, 0, 4 << 20, vec![])), PlanOp::Compute(seg(50, 1e6))],
+            ],
+            1,
+        );
+        let a = simulate(&p, &topo, SimParams::default()).unwrap();
+        let b = simulate(&p, &topo, SimParams::default()).unwrap();
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.timeline.spans.len(), b.timeline.spans.len());
+    }
+}

@@ -1,0 +1,18 @@
+//! Calibrated multi-GPU performance model.
+//!
+//! The paper's testbed (8×H100 + NVLink) is not available here; this module
+//! is the substitute substrate (DESIGN.md §1): a discrete-event simulator
+//! that executes [`crate::codegen::ExecutablePlan`]s against per-device SM
+//! pools, copy-engine queues, link contention, wave quantization, and the
+//! per-backend transfer curves of [`crate::backend`].
+//!
+//! * [`waves`] — the SM-utilization / wave-quantization model (Fig. 2a).
+//! * [`engine`] — the event-driven plan executor.
+//! * [`timeline`] — span recording, utilization metrics, JSON export.
+
+pub mod engine;
+pub mod timeline;
+pub mod waves;
+
+pub use engine::{simulate, SimParams, SimResult};
+pub use timeline::{Span, SpanKind, Timeline};

@@ -1,0 +1,190 @@
+//! Execution timelines: spans, utilization metrics, JSON export.
+//!
+//! Every simulated run records what each resource did and when; the report
+//! binaries and EXPERIMENTS.md numbers are derived from these spans.
+
+use std::fmt::Write as _;
+
+use crate::topo::Rank;
+
+/// What a span represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Tiles running on a rank's compute SMs.
+    Compute,
+    /// A chunk transfer on a link.
+    Transfer,
+    /// A rank blocked waiting on a signal (exposed communication).
+    WaitStall,
+    /// Fixed overhead (kernel launch, reorder pass).
+    Overhead,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Transfer => "transfer",
+            SpanKind::WaitStall => "wait",
+            SpanKind::Overhead => "overhead",
+        }
+    }
+}
+
+/// One timed interval on a rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub rank: Rank,
+    pub kind: SpanKind,
+    pub start_us: f64,
+    pub end_us: f64,
+    /// Free-form detail: tile count, backend name, signal id...
+    pub label: String,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// A complete run timeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn push(&mut self, span: Span) {
+        debug_assert!(span.end_us >= span.start_us - 1e-9, "negative span {span:?}");
+        self.spans.push(span);
+    }
+
+    /// Latest end time across all spans.
+    pub fn makespan_us(&self) -> f64 {
+        self.spans.iter().map(|s| s.end_us).fold(0.0, f64::max)
+    }
+
+    /// Total duration of spans of `kind` on `rank`.
+    pub fn total_us(&self, rank: Rank, kind: SpanKind) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.rank == rank && s.kind == kind)
+            .map(|s| s.dur_us())
+            .sum()
+    }
+
+    /// Fraction of the makespan `rank` spent computing.
+    pub fn compute_fraction(&self, rank: Rank) -> f64 {
+        let m = self.makespan_us();
+        if m <= 0.0 {
+            return 0.0;
+        }
+        self.total_us(rank, SpanKind::Compute) / m
+    }
+
+    /// Communication time not hidden behind compute, across all ranks.
+    pub fn exposed_comm_us(&self, world: usize) -> f64 {
+        (0..world).map(|r| self.total_us(r, SpanKind::WaitStall)).sum()
+    }
+
+    /// Hand-rolled JSON export (the vendored build has no serde_json).
+    /// Schema: `[{"rank":0,"kind":"compute","start":0.0,"end":1.0,"label":".."}]`
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[");
+        for (i, s) in self.spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"rank\":{},\"kind\":\"{}\",\"start\":{:.3},\"end\":{:.3},\"label\":\"{}\"}}",
+                s.rank,
+                s.kind.name(),
+                s.start_us,
+                s.end_us,
+                s.label.replace('"', "'"),
+            );
+        }
+        out.push(']');
+        out
+    }
+
+    /// Compact per-rank ASCII rendering for CLI debugging.
+    pub fn ascii(&self, world: usize, width: usize) -> String {
+        let m = self.makespan_us().max(1e-9);
+        let mut out = String::new();
+        for r in 0..world {
+            let mut row = vec!['.'; width];
+            for s in self.spans.iter().filter(|s| s.rank == r) {
+                let a = ((s.start_us / m) * width as f64) as usize;
+                let b = (((s.end_us / m) * width as f64).ceil() as usize).min(width);
+                let ch = match s.kind {
+                    SpanKind::Compute => '#',
+                    SpanKind::Transfer => '~',
+                    SpanKind::WaitStall => 'w',
+                    SpanKind::Overhead => 'o',
+                };
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    // compute wins rendering conflicts
+                    if *c == '.' || ch == '#' {
+                        *c = ch;
+                    }
+                }
+            }
+            let _ = writeln!(out, "r{r}: {}", row.iter().collect::<String>());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl() -> Timeline {
+        let mut t = Timeline::default();
+        t.push(Span { rank: 0, kind: SpanKind::Compute, start_us: 0.0, end_us: 10.0, label: "a".into() });
+        t.push(Span { rank: 0, kind: SpanKind::WaitStall, start_us: 10.0, end_us: 12.0, label: "w".into() });
+        t.push(Span { rank: 1, kind: SpanKind::Transfer, start_us: 2.0, end_us: 8.0, label: "x".into() });
+        t
+    }
+
+    #[test]
+    fn makespan_and_totals() {
+        let t = tl();
+        assert_eq!(t.makespan_us(), 12.0);
+        assert_eq!(t.total_us(0, SpanKind::Compute), 10.0);
+        assert_eq!(t.total_us(0, SpanKind::WaitStall), 2.0);
+        assert_eq!(t.total_us(1, SpanKind::Transfer), 6.0);
+        assert_eq!(t.exposed_comm_us(2), 2.0);
+    }
+
+    #[test]
+    fn compute_fraction() {
+        let t = tl();
+        assert!((t.compute_fraction(0) - 10.0 / 12.0).abs() < 1e-12);
+        assert_eq!(Timeline::default().compute_fraction(0), 0.0);
+    }
+
+    #[test]
+    fn json_schema() {
+        let j = tl().to_json();
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\"kind\":\"compute\""));
+        assert!(j.contains("\"start\":0.000"));
+        // quotes in labels are sanitized
+        let mut t = Timeline::default();
+        t.push(Span { rank: 0, kind: SpanKind::Compute, start_us: 0.0, end_us: 1.0, label: "a\"b".into() });
+        assert!(t.to_json().contains("a'b"));
+    }
+
+    #[test]
+    fn ascii_renders_rows() {
+        let s = tl().ascii(2, 24);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains('#'));
+        assert!(lines[1].contains('~'));
+    }
+}

@@ -1,0 +1,155 @@
+//! Wave quantization and SM utilization (paper Fig. 2a, Insight 1).
+//!
+//! A kernel launch with `T` tiles on `S` SMs executes in `ceil(T/S)` waves;
+//! the partially-filled last wave idles `waves*S - T` SM-slots. Large GEMMs
+//! amortize this; partitioning a GEMM into many small launches (kernel-level
+//! overlap) pushes every launch into the low-utilization regime.
+
+use crate::util::ceil_div;
+
+/// Number of tile waves for `tiles` tiles on `sms` SMs.
+pub fn wave_count(tiles: usize, sms: usize) -> usize {
+    if tiles == 0 {
+        return 0;
+    }
+    ceil_div(tiles, sms.max(1))
+}
+
+/// SM utilization of a launch: occupied SM-slots / total SM-slots.
+pub fn sm_utilization(tiles: usize, sms: usize) -> f64 {
+    if tiles == 0 {
+        return 0.0;
+    }
+    let waves = wave_count(tiles, sms);
+    tiles as f64 / (waves * sms.max(1)) as f64
+}
+
+/// Duration of a compute segment: `waves * mean tile time`, plus any
+/// borrowed-SM debt (co-located communication) spread across the pool.
+pub fn segment_duration_us(
+    tiles: usize,
+    mean_tile_us: f64,
+    sms: usize,
+    debt_sm_us: f64,
+) -> f64 {
+    let base = wave_count(tiles, sms) as f64 * mean_tile_us;
+    base + debt_sm_us / sms.max(1) as f64
+}
+
+/// Duration of a segment of a *persistent fused kernel*: tiles stream
+/// continuously across wait boundaries, so segments are modeled at
+/// throughput granularity (`n·τ/S`) with no per-segment wave
+/// re-quantization — consecutive segments pipeline into each other's idle
+/// SMs. This is exactly the advantage the streamed kernel of Fig. 2(b) has
+/// over kernel-partitioned launches, which pay [`segment_duration_us`]'s
+/// full wave quantization on every launch.
+pub fn streaming_duration_us(
+    tiles: usize,
+    mean_tile_us: f64,
+    sms: usize,
+    debt_sm_us: f64,
+) -> f64 {
+    (tiles as f64 * mean_tile_us + debt_sm_us) / sms.max(1) as f64
+}
+
+/// Time for one GEMM tile of `bm x bn x k` on one SM, microseconds.
+///
+/// `sm_tflops` is the per-SM dense throughput; `eff` the achieved fraction
+/// (MXU/tensor-core occupancy for this tile shape, see
+/// [`mxu_efficiency`]).
+pub fn gemm_tile_time_us(bm: usize, bn: usize, k: usize, sm_tflops: f64, eff: f64) -> f64 {
+    let flops = 2.0 * bm as f64 * bn as f64 * k as f64;
+    flops / (sm_tflops * 1e6 * eff.max(1e-3))
+}
+
+/// Fraction of peak the tensor pipeline achieves for a tile shape — small
+/// tiles under-fill the MXU/tensor cores (mirrors the L1 kernel's
+/// `mxu_utilization_estimate`).
+pub fn mxu_efficiency(bm: usize, bn: usize, bk: usize) -> f64 {
+    let fill = (bm.min(128) as f64 / 128.0) * (bn.min(128) as f64 / 128.0);
+    let ramp = bk.min(128) as f64 / 128.0;
+    fill * (0.5 + 0.5 * ramp)
+}
+
+/// End-to-end utilization of an M×N GEMM with given tile config on `sms`
+/// SMs — the quantity plotted in Fig. 2(a).
+pub fn gemm_sm_utilization(m: usize, n: usize, bm: usize, bn: usize, sms: usize) -> f64 {
+    let tiles = ceil_div(m, bm) * ceil_div(n, bn);
+    sm_utilization(tiles, sms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wave_count_basics() {
+        assert_eq!(wave_count(0, 132), 0);
+        assert_eq!(wave_count(1, 132), 1);
+        assert_eq!(wave_count(132, 132), 1);
+        assert_eq!(wave_count(133, 132), 2);
+        assert_eq!(wave_count(10, 0), 10); // degenerate SM count clamped to 1
+    }
+
+    #[test]
+    fn utilization_full_and_partial() {
+        assert_eq!(sm_utilization(264, 132), 1.0);
+        assert!((sm_utilization(133, 132) - 133.0 / 264.0).abs() < 1e-12);
+        assert_eq!(sm_utilization(0, 132), 0.0);
+    }
+
+    #[test]
+    fn fig2a_large_gemm_saturates_small_does_not() {
+        // 16384^2 with 128-tiles: 16k tiles >> 132 SMs -> ~1.0
+        let big = gemm_sm_utilization(16384, 16384, 128, 128, 132);
+        assert!(big > 0.95, "{big}");
+        // 512^2 with 256-tiles: 4 tiles on 132 SMs -> tiny
+        let small = gemm_sm_utilization(512, 512, 256, 256, 132);
+        assert!(small < 0.05, "{small}");
+        // utilization decreases as GEMM shrinks (fixed tile size)
+        let mut prev = 1.1;
+        for m in [16384usize, 4096, 1024, 512] {
+            let u = gemm_sm_utilization(m, m, 128, 128, 132);
+            assert!(u <= prev + 1e-9, "m={m}: {u} > {prev}");
+            prev = u;
+        }
+    }
+
+    #[test]
+    fn partition_hurts_utilization() {
+        // Insight 1: splitting one launch into 8 sub-launches lowers
+        // aggregate utilization via extra partial waves.
+        let m = 4096;
+        let whole = gemm_sm_utilization(m, 3072, 128, 128, 132);
+        let split = gemm_sm_utilization(m / 8, 3072, 128, 128, 132);
+        assert!(split < whole, "split={split} whole={whole}");
+    }
+
+    #[test]
+    fn segment_duration_waves_and_debt() {
+        let d0 = segment_duration_us(132, 10.0, 132, 0.0);
+        assert!((d0 - 10.0).abs() < 1e-9);
+        let d1 = segment_duration_us(133, 10.0, 132, 0.0);
+        assert!((d1 - 20.0).abs() < 1e-9);
+        // 132 SM-µs of debt on 132 SMs adds 1 µs
+        let d2 = segment_duration_us(132, 10.0, 132, 132.0);
+        assert!((d2 - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tile_time_scale() {
+        // 128^3 tile at 7.5 TFLOP/s/SM, eff 1: 2*128^3 / 7.5e6 ≈ 0.56 µs
+        let t = gemm_tile_time_us(128, 128, 128, 7.5, 1.0);
+        assert!((t - 0.559).abs() < 0.01, "{t}");
+        // lower efficiency -> longer
+        assert!(gemm_tile_time_us(128, 128, 128, 7.5, 0.5) > t * 1.9);
+    }
+
+    #[test]
+    fn mxu_efficiency_shape() {
+        assert_eq!(mxu_efficiency(128, 128, 128), 1.0);
+        assert!(mxu_efficiency(64, 128, 128) < 1.0);
+        assert!(mxu_efficiency(8, 8, 8) < 0.01);
+        assert!(mxu_efficiency(256, 256, 256) <= 1.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Device mesh and interconnect topology.
+//!
+//! Models the paper's testbed (8×H100, NVLink/NVSwitch, 900 GB/s aggregate)
+//! plus a two-level hierarchy (intra-node NVLink, inter-node IB) used by the
+//! heterogeneous swizzled schedules of Fig. 4(e).
+
+
+use crate::error::{Error, Result};
+
+/// Rank index within the mesh.
+pub type Rank = usize;
+
+/// Hierarchy level of a link (Fig. 4e pipelines across levels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkLevel {
+    /// Same device (local copy; effectively SOL bandwidth).
+    Local,
+    /// Intra-node NVLink/NVSwitch.
+    IntraNode,
+    /// Inter-node fabric (IB/RoCE).
+    InterNode,
+}
+
+/// Point-to-point link characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub level: LinkLevel,
+    /// Peak unidirectional bandwidth, GB/s.
+    pub bw_gbps: f64,
+    /// Base propagation latency, microseconds.
+    pub lat_us: f64,
+}
+
+/// A (possibly multi-node) device mesh with link specs between ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub world: usize,
+    pub ranks_per_node: usize,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+    /// SMs per device (H100 SXM: 132).
+    pub sms_per_device: usize,
+    /// Copy engines per device usable for P2P (H100: ~3 usable DMA engines).
+    pub copy_engines_per_device: usize,
+    /// Per-SM dense f32-accumulate throughput, TFLOP/s (H100 bf16 tensor core
+    /// ≈ 990 TFLOPS / 132 SMs ≈ 7.5).
+    pub sm_tflops: f64,
+    /// Whether the switch supports in-network reduction (NVLS/SHARP).
+    pub switch_reduce: bool,
+}
+
+impl Topology {
+    /// Single NVLink node of `world` H100s (the paper's testbed for world<=8).
+    pub fn h100_node(world: usize) -> Result<Self> {
+        if world == 0 {
+            return Err(Error::Schedule("world must be > 0".into()));
+        }
+        Ok(Topology {
+            world,
+            ranks_per_node: world,
+            // 900 GB/s aggregate bidirectional -> 450 GB/s per direction;
+            // a single P2P stream peaks near 400 GB/s on the copy engine
+            // (§2.3), the remainder is protocol overhead.
+            intra: LinkSpec { level: LinkLevel::IntraNode, bw_gbps: 400.0, lat_us: 1.5 },
+            inter: LinkSpec { level: LinkLevel::InterNode, bw_gbps: 50.0, lat_us: 5.0 },
+            sms_per_device: 132,
+            copy_engines_per_device: 3,
+            sm_tflops: 7.5,
+            switch_reduce: true,
+        })
+    }
+
+    /// Multi-node mesh: `nodes` × `ranks_per_node` H100s with IB between nodes.
+    pub fn h100_multinode(nodes: usize, ranks_per_node: usize) -> Result<Self> {
+        let mut t = Self::h100_node(ranks_per_node)?;
+        t.world = nodes * ranks_per_node;
+        t.ranks_per_node = ranks_per_node;
+        Ok(t)
+    }
+
+    /// Node index of a rank.
+    pub fn node_of(&self, r: Rank) -> usize {
+        r / self.ranks_per_node
+    }
+
+    /// Link spec between two ranks.
+    pub fn link(&self, src: Rank, dst: Rank) -> Result<LinkSpec> {
+        if src >= self.world || dst >= self.world {
+            return Err(Error::Schedule(format!(
+                "rank out of range: {src}->{dst} (world {})",
+                self.world
+            )));
+        }
+        if src == dst {
+            return Ok(LinkSpec { level: LinkLevel::Local, bw_gbps: 2000.0, lat_us: 0.2 });
+        }
+        if self.node_of(src) == self.node_of(dst) {
+            Ok(self.intra)
+        } else {
+            Ok(self.inter)
+        }
+    }
+
+    /// Ranks on the same node as `r` (Fig. 4e intra-level port group).
+    pub fn node_peers(&self, r: Rank) -> Vec<Rank> {
+        let n = self.node_of(r);
+        (0..self.world).filter(|&x| self.node_of(x) == n && x != r).collect()
+    }
+
+    /// Device peak TFLOP/s (all SMs).
+    pub fn device_tflops(&self) -> f64 {
+        self.sm_tflops * self.sms_per_device as f64
+    }
+
+    /// Ring successor / predecessor (the canonical ring order of Fig. 4c).
+    pub fn ring_next(&self, r: Rank) -> Rank {
+        (r + 1) % self.world
+    }
+    pub fn ring_prev(&self, r: Rank) -> Rank {
+        (r + self.world - 1) % self.world
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_links() {
+        let t = Topology::h100_node(8).unwrap();
+        assert_eq!(t.world, 8);
+        let l = t.link(0, 5).unwrap();
+        assert_eq!(l.level, LinkLevel::IntraNode);
+        assert!(l.bw_gbps > 100.0);
+        assert_eq!(t.link(3, 3).unwrap().level, LinkLevel::Local);
+    }
+
+    #[test]
+    fn zero_world_rejected() {
+        assert!(Topology::h100_node(0).is_err());
+    }
+
+    #[test]
+    fn rank_bounds_checked() {
+        let t = Topology::h100_node(4).unwrap();
+        assert!(t.link(0, 4).is_err());
+        assert!(t.link(9, 0).is_err());
+    }
+
+    #[test]
+    fn multinode_levels() {
+        let t = Topology::h100_multinode(2, 4).unwrap();
+        assert_eq!(t.world, 8);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.link(0, 3).unwrap().level, LinkLevel::IntraNode);
+        assert_eq!(t.link(0, 4).unwrap().level, LinkLevel::InterNode);
+        assert!(t.link(0, 4).unwrap().bw_gbps < t.link(0, 1).unwrap().bw_gbps);
+    }
+
+    #[test]
+    fn node_peers() {
+        let t = Topology::h100_multinode(2, 4).unwrap();
+        assert_eq!(t.node_peers(1), vec![0, 2, 3]);
+        assert_eq!(t.node_peers(5), vec![4, 6, 7]);
+    }
+
+    #[test]
+    fn ring_order() {
+        let t = Topology::h100_node(4).unwrap();
+        assert_eq!(t.ring_next(3), 0);
+        assert_eq!(t.ring_prev(0), 3);
+        // ring_next and ring_prev are inverses
+        for r in 0..4 {
+            assert_eq!(t.ring_prev(t.ring_next(r)), r);
+        }
+    }
+
+    #[test]
+    fn device_tflops_scale() {
+        let t = Topology::h100_node(8).unwrap();
+        // H100 ballpark: ~990 TFLOPS
+        assert!((t.device_tflops() - 990.0).abs() < 50.0);
+    }
+}

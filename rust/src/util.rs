@@ -1,0 +1,173 @@
+//! Small shared utilities: deterministic RNG, math helpers, formatting.
+//!
+//! We deliberately avoid external RNG crates: workload generation and the
+//! autotuner's sampling must be bit-reproducible across runs so EXPERIMENTS.md
+//! numbers regenerate exactly.
+
+/// SplitMix64 — tiny, high-quality, deterministic PRNG.
+///
+/// Used for synthetic tensor data and tie-breaking in the autotuner. Not
+/// cryptographic; never used for anything security-relevant.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded construction; the same seed always yields the same stream.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f32 in [-1, 1) — matches the scale of normal-ish activations.
+    pub fn f32_unit(&mut self) -> f32 {
+        // 24 mantissa-ish bits -> [0,1), then shift to [-1,1)
+        let u = (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        2.0 * u - 1.0
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fill a fresh Vec<f32> with unit-uniform values.
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_unit()).collect()
+    }
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Geometric mean of positive values (0.0 for empty input).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Human-readable byte count (KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.1} GiB", b / K / K / K)
+    } else if b >= K * K {
+        format!("{:.1} MiB", b / K / K)
+    } else if b >= K {
+        format!("{:.1} KiB", b / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Human-readable duration from microseconds.
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{:.2} s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.2} ms", us / 1e3)
+    } else {
+        format!("{us:.2} us")
+    }
+}
+
+/// Max absolute difference between two slices (for numerics checks).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Relative L2 error ||a-b|| / max(||b||, eps).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = b.iter().map(|y| y * y).sum();
+    (num.sqrt()) / den.sqrt().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_unit_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.f32_unit();
+            assert!((-1.0..1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn geomean_cases() {
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(fmt_us(0.5), "0.50 us");
+        assert_eq!(fmt_us(1500.0), "1.50 ms");
+        assert_eq!(fmt_us(2_000_000.0), "2.00 s");
+    }
+
+    #[test]
+    fn diff_helpers() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.5, 3.0];
+        assert_eq!(max_abs_diff(&a, &b), 0.5);
+        assert!(rel_l2(&a, &a) < 1e-12);
+        assert!(rel_l2(&a, &b) > 0.0);
+    }
+}

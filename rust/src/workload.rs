@@ -1,0 +1,275 @@
+//! Workload suite: model configurations and distributed-operator shapes
+//! (paper §6.1).
+//!
+//! Operator shapes derive from the FFN and attention layers of open-source
+//! Llama-3 and Qwen models, exactly as the evaluation does, across the
+//! tensor-parallel / sequence-parallel patterns: AG-GEMM, GEMM-RS, GEMM-AR,
+//! A2A-GEMM, head-parallel (HP) and sequence-parallel (SP) attention, and
+//! RingAttention.
+
+use crate::chunk::DType;
+
+/// A model family member (decoder layer dimensions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    /// Hidden size (d_model).
+    pub hidden: usize,
+    /// FFN intermediate size.
+    pub inter: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+}
+
+/// Llama-3 8B.
+pub const LLAMA3_8B: ModelCfg =
+    ModelCfg { name: "llama3-8b", hidden: 4096, inter: 14336, heads: 32, head_dim: 128 };
+/// Llama-3 70B.
+pub const LLAMA3_70B: ModelCfg =
+    ModelCfg { name: "llama3-70b", hidden: 8192, inter: 28672, heads: 64, head_dim: 128 };
+/// Llama-3 405B.
+pub const LLAMA3_405B: ModelCfg =
+    ModelCfg { name: "llama3-405b", hidden: 16384, inter: 53248, heads: 128, head_dim: 128 };
+/// Qwen2.5 7B.
+pub const QWEN_7B: ModelCfg =
+    ModelCfg { name: "qwen-7b", hidden: 3584, inter: 18944, heads: 28, head_dim: 128 };
+/// Qwen2.5 72B.
+pub const QWEN_72B: ModelCfg =
+    ModelCfg { name: "qwen-72b", hidden: 8192, inter: 29568, heads: 64, head_dim: 128 };
+
+/// The models swept in Fig. 8 / Fig. 9.
+pub const MODELS: [ModelCfg; 5] = [LLAMA3_8B, LLAMA3_70B, LLAMA3_405B, QWEN_7B, QWEN_72B];
+
+/// Distributed operator kinds under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// AllGather(X) then X @ W (tensor-parallel FFN up-projection).
+    AgGemm,
+    /// X @ W then ReduceScatter (sequence-parallel FFN down-projection).
+    GemmRs,
+    /// X @ W then AllReduce (tensor-parallel FFN down-projection).
+    GemmAr,
+    /// AllToAll(X) then X @ W (MoE dispatch + expert GEMM).
+    A2aGemm,
+    /// Head-parallel (DeepSpeed-Ulysses-style) attention.
+    AttnHp,
+    /// Sequence-parallel attention (blockwise, gathered KV).
+    AttnSp,
+    /// RingAttention (rotating KV shards, online softmax).
+    RingAttn,
+}
+
+impl OpKind {
+    pub const GEMM_OPS: [OpKind; 4] =
+        [OpKind::AgGemm, OpKind::GemmRs, OpKind::GemmAr, OpKind::A2aGemm];
+    pub const ATTN_OPS: [OpKind; 3] = [OpKind::AttnHp, OpKind::AttnSp, OpKind::RingAttn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::AgGemm => "ag-gemm",
+            OpKind::GemmRs => "gemm-rs",
+            OpKind::GemmAr => "gemm-ar",
+            OpKind::A2aGemm => "a2a-gemm",
+            OpKind::AttnHp => "attn-hp",
+            OpKind::AttnSp => "attn-sp",
+            OpKind::RingAttn => "ring-attn",
+        }
+    }
+
+    pub fn is_gemm(&self) -> bool {
+        matches!(self, OpKind::AgGemm | OpKind::GemmRs | OpKind::GemmAr | OpKind::A2aGemm)
+    }
+}
+
+/// A concrete distributed-operator instance (global problem, mesh size).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatorInstance {
+    pub kind: OpKind,
+    /// Global rows (tokens) for GEMM ops; global sequence length for attn.
+    pub m: usize,
+    /// Contraction dim (GEMM) or head_dim (attention).
+    pub k: usize,
+    /// Output columns (GEMM) or heads (attention).
+    pub n: usize,
+    pub world: usize,
+    pub dtype: DType,
+}
+
+impl OperatorInstance {
+    /// GEMM-family instance from a model config (FFN layer, `tokens` rows).
+    pub fn gemm(kind: OpKind, model: &ModelCfg, tokens: usize, world: usize) -> Self {
+        debug_assert!(kind.is_gemm());
+        let (k, n) = match kind {
+            // up-projection: [tokens, hidden] @ [hidden, inter/world]
+            OpKind::AgGemm | OpKind::A2aGemm => (model.hidden, model.inter / world),
+            // down-projection: [tokens, inter/world] @ [inter/world, hidden]
+            OpKind::GemmRs | OpKind::GemmAr => (model.inter / world, model.hidden),
+            _ => unreachable!(),
+        };
+        OperatorInstance { kind, m: tokens, k, n, world, dtype: DType::BF16 }
+    }
+
+    /// Attention instance: `seq` global sequence length.
+    pub fn attention(kind: OpKind, model: &ModelCfg, seq: usize, world: usize) -> Self {
+        debug_assert!(!kind.is_gemm());
+        OperatorInstance { kind, m: seq, k: model.head_dim, n: model.heads, world, dtype: DType::BF16 }
+    }
+
+    /// Total FLOPs across the mesh.
+    pub fn flops(&self) -> f64 {
+        match self.kind {
+            // each rank multiplies the (gathered) M rows by its weight shard
+            OpKind::AgGemm | OpKind::A2aGemm => {
+                2.0 * self.m as f64 * self.k as f64 * self.n as f64 * self.world as f64
+            }
+            // each rank multiplies its partial K shard into a full output
+            OpKind::GemmRs | OpKind::GemmAr => {
+                2.0 * self.m as f64 * self.k as f64 * self.n as f64 * self.world as f64
+            }
+            // attention fwd: QK^T and PV, over all heads
+            OpKind::AttnHp | OpKind::AttnSp | OpKind::RingAttn => {
+                4.0 * (self.m as f64) * (self.m as f64) * self.k as f64 * self.n as f64
+            }
+        }
+    }
+
+    /// Bytes crossing links (sum over the mesh), using standard collective
+    /// cost models.
+    pub fn comm_bytes(&self) -> usize {
+        let e = self.dtype.size();
+        let w = self.world;
+        match self.kind {
+            // AG of [m, k]: each rank receives (w-1)/w of the tensor
+            OpKind::AgGemm => self.m * self.k * e * (w - 1),
+            // RS of [m, n*w]... output per rank [m, n]: partials move (w-1)/w
+            OpKind::GemmRs => self.m * self.n * e * (w - 1),
+            // AR moves 2x RS
+            OpKind::GemmAr => 2 * self.m * self.n * e * (w - 1),
+            // A2A: (w-1)/w of the tokens leave each rank
+            OpKind::A2aGemm => self.m * self.k * e * (w - 1) / w,
+            // HP (Ulysses): two A2As over [seq, heads*head_dim]
+            OpKind::AttnHp => 2 * self.m * self.n * self.k * e * (w - 1) / w,
+            // SP: gather KV shards: each rank receives (w-1) shards
+            OpKind::AttnSp => 2 * self.m * self.n * self.k * e * (w - 1),
+            // Ring: KV rotates w-1 hops, each hop seq/w rows
+            OpKind::RingAttn => 2 * self.m * self.n * self.k * e * (w - 1) / w * (w - 1) / w.max(1),
+        }
+    }
+
+    /// Arithmetic intensity (FLOPs per communicated byte) — predicts which
+    /// operators are communication-bound.
+    pub fn intensity(&self) -> f64 {
+        self.flops() / self.comm_bytes().max(1) as f64
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}x{}x{}-w{}", self.kind.name(), self.m, self.k, self.n, self.world)
+    }
+}
+
+/// The sequence lengths swept in Fig. 9.
+pub const SEQ_SWEEP: [usize; 5] = [4096, 8192, 16384, 32768, 65536];
+
+/// Default token count (batch x seq per microbatch) for GEMM benchmarks.
+pub const DEFAULT_TOKENS: usize = 8192;
+
+/// The full Fig. 8 GEMM suite: every model x {4, 8} GPUs x GEMM op kinds.
+pub fn fig8_suite() -> Vec<OperatorInstance> {
+    let mut v = Vec::new();
+    for model in &MODELS {
+        for &world in &[4usize, 8] {
+            for kind in [OpKind::AgGemm, OpKind::GemmRs, OpKind::GemmAr] {
+                v.push(OperatorInstance::gemm(kind, model, DEFAULT_TOKENS, world));
+            }
+        }
+    }
+    v
+}
+
+/// The Fig. 9 attention suite: Llama-3 8B/70B across sequence lengths.
+pub fn fig9_suite() -> Vec<OperatorInstance> {
+    let mut v = Vec::new();
+    for model in &[LLAMA3_8B, LLAMA3_70B] {
+        for &world in &[4usize, 8] {
+            for &seq in &SEQ_SWEEP[..3] {
+                for kind in OpKind::ATTN_OPS {
+                    v.push(OperatorInstance::attention(kind, model, seq, world));
+                }
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_configs_sane() {
+        for m in &MODELS {
+            assert!(m.hidden >= 1024 && m.inter > m.hidden);
+            assert_eq!(m.heads * m.head_dim, m.hidden, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn gemm_shapes_divide_by_world() {
+        for m in &MODELS {
+            for w in [4usize, 8] {
+                let op = OperatorInstance::gemm(OpKind::AgGemm, m, 8192, w);
+                assert_eq!(op.n * w, m.inter);
+                let op2 = OperatorInstance::gemm(OpKind::GemmRs, m, 8192, w);
+                assert_eq!(op2.k * w, m.inter);
+            }
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_world_for_tp() {
+        let a4 = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 4);
+        let a8 = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8);
+        // total math is invariant: n shrinks as world grows
+        assert_eq!(a4.flops(), a8.flops());
+    }
+
+    #[test]
+    fn ar_moves_twice_rs() {
+        let rs = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 8192, 8);
+        let ar = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_8B, 8192, 8);
+        assert_eq!(ar.comm_bytes(), 2 * rs.comm_bytes());
+        assert!(ar.intensity() < rs.intensity());
+    }
+
+    #[test]
+    fn attention_flops_quadratic_in_seq() {
+        let a = OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 4096, 8);
+        let b = OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 8192, 8);
+        assert!((b.flops() / a.flops() - 4.0).abs() < 1e-9);
+        // comm grows linearly -> intensity grows with seq (ring gets easier
+        // to hide at long sequences, Fig. 9's trend)
+        assert!(b.intensity() > a.intensity());
+    }
+
+    #[test]
+    fn suites_nonempty_and_labeled() {
+        let f8 = fig8_suite();
+        assert_eq!(f8.len(), 5 * 2 * 3);
+        let f9 = fig9_suite();
+        assert_eq!(f9.len(), 2 * 2 * 3 * 3);
+        for op in f8.iter().chain(&f9) {
+            assert!(op.flops() > 0.0);
+            assert!(op.comm_bytes() > 0);
+            assert!(!op.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn hp_cheaper_comm_than_sp() {
+        let hp = OperatorInstance::attention(OpKind::AttnHp, &LLAMA3_8B, 16384, 8);
+        let sp = OperatorInstance::attention(OpKind::AttnSp, &LLAMA3_8B, 16384, 8);
+        assert!(hp.comm_bytes() < sp.comm_bytes());
+    }
+}

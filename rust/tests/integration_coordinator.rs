@@ -1,0 +1,90 @@
+//! Integration: the coordinator service loop (tune-once, run-many) and the
+//! annotated-kernel frontend wired to the shipped Pallas sources.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use syncopate::coordinator::service::{opkind_by_name, Coordinator, Request};
+use syncopate::coordinator::TuneConfig;
+use syncopate::kernel::annotations::parse_annotations_file;
+use syncopate::topo::Topology;
+use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B, LLAMA3_8B};
+
+#[test]
+fn service_runs_the_operator_registry() {
+    let coord = Coordinator::spawn(Topology::h100_node(8).unwrap());
+    for name in ["ag-gemm", "gemm-rs", "gemm-ar"] {
+        let kind = opkind_by_name(name).unwrap();
+        let op = OperatorInstance::gemm(kind, &LLAMA3_8B, 8192, 8);
+        let cfg = match kind {
+            OpKind::GemmRs | OpKind::GemmAr => TuneConfig {
+                real: syncopate::codegen::Realization::new(
+                    syncopate::backend::BackendKind::LdStSpecialized,
+                    32,
+                ),
+                ..Default::default()
+            },
+            _ => TuneConfig::default(),
+        };
+        let r = coord.run(op, cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(r.tflops > 1.0, "{name}");
+    }
+}
+
+#[test]
+fn plan_cache_hits_on_repeat_requests() {
+    let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+    let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 4);
+    let a = coord.run(op, TuneConfig::default()).unwrap();
+    let b = coord.run(op, TuneConfig::default()).unwrap();
+    assert!(!a.cache_hit && b.cache_hit);
+    assert_eq!(a.makespan_us, b.makespan_us);
+    // a different config misses
+    let c = coord.run(op, TuneConfig { split: 4, ..Default::default() }).unwrap();
+    assert!(!c.cache_hit);
+}
+
+#[test]
+fn pipelined_submissions_all_answer() {
+    let coord = Coordinator::spawn(Topology::h100_node(8).unwrap());
+    let mut rxs = Vec::new();
+    for tokens in [2048usize, 4096, 8192] {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, tokens, 8);
+        rxs.push((tokens, coord.submit(Request::Run { op, cfg: TuneConfig::default() }).unwrap()));
+    }
+    let mut prev = 0.0;
+    for (tokens, rx) in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert!(r.makespan_us >= prev, "tokens {tokens} out of order");
+        prev = r.makespan_us;
+    }
+}
+
+#[test]
+fn annotated_pallas_sources_drive_the_grid() {
+    // the Rust frontend parses the SAME kernel files the AOT path compiles
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let gemm = parse_annotations_file(&root.join("python/compile/kernels/gemm.py")).unwrap();
+    let sizes: HashMap<String, usize> =
+        [("M".to_string(), 8192), ("N".to_string(), 1792), ("K".to_string(), 4096)].into();
+    let grid = gemm.to_grid(&sizes, &HashMap::new()).unwrap();
+    assert_eq!(grid.axes.len(), 3);
+    assert_eq!(grid.axes[0].block, 128); // BLOCK_M from the python source
+    assert_eq!(grid.num_tiles(), 64 * 14 * 32);
+
+    let attn =
+        parse_annotations_file(&root.join("python/compile/kernels/attention.py")).unwrap();
+    assert_eq!(attn.axes[0].0, "Q");
+    let sizes: HashMap<String, usize> = [("Q".to_string(), 4096)].into();
+    let agrid = attn.to_grid(&sizes, &HashMap::new()).unwrap();
+    assert_eq!(agrid.axes[0].block, 64); // BLOCK_Q
+}
+
+#[test]
+fn errors_surface_through_the_service() {
+    let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+    // reduce on the default copy-engine realization is infeasible
+    let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 8192, 4);
+    let e = coord.run(op, TuneConfig::default()).unwrap_err();
+    assert_eq!(e.subsystem(), "backend");
+}

@@ -1,0 +1,187 @@
+//! Integration: the paper-scale compilation + simulation pipeline across
+//! the full operator/world/baseline matrix, plus the report generators.
+
+use syncopate::autotune::{self, Budget};
+use syncopate::backend::BackendKind;
+use syncopate::baselines::{self, Baseline};
+use syncopate::codegen::Realization;
+use syncopate::coordinator::operators::{compile_operator, compile_operator_barrier_sync};
+use syncopate::coordinator::TuneConfig;
+use syncopate::reports;
+use syncopate::sim::engine::simulate;
+use syncopate::topo::Topology;
+use syncopate::workload::{fig8_suite, fig9_suite, OpKind, OperatorInstance, LLAMA3_70B, LLAMA3_8B};
+
+fn cfg_for(kind: OpKind) -> TuneConfig {
+    match kind {
+        OpKind::GemmRs | OpKind::GemmAr => TuneConfig {
+            real: Realization::new(BackendKind::LdStSpecialized, 32),
+            ..Default::default()
+        },
+        _ => TuneConfig::default(),
+    }
+}
+
+#[test]
+fn whole_fig8_suite_compiles_and_simulates() {
+    for op in fig8_suite() {
+        let topo = Topology::h100_node(op.world).unwrap();
+        let cfg = cfg_for(op.kind);
+        let (plan, params) =
+            compile_operator(&op, &cfg, &topo).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
+        let r = simulate(&plan, &topo, params).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
+        assert!(r.makespan_us > 0.0 && r.tflops() > 1.0, "{}", op.label());
+    }
+}
+
+#[test]
+fn whole_fig9_suite_compiles_and_simulates() {
+    for op in fig9_suite() {
+        let topo = Topology::h100_node(op.world).unwrap();
+        let cfg = TuneConfig { split: 1, ..TuneConfig::default() };
+        let (plan, params) =
+            compile_operator(&op, &cfg, &topo).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
+        let r = simulate(&plan, &topo, params).unwrap();
+        assert!(r.tflops() > 1.0, "{}: {}", op.label(), r.tflops());
+    }
+}
+
+#[test]
+fn every_baseline_covers_every_supported_operator() {
+    let ops = [
+        OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 8192, 8),
+        OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 8192, 8),
+        OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_8B, 8192, 8),
+        OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 8192, 8),
+        OperatorInstance::attention(OpKind::AttnHp, &LLAMA3_8B, 8192, 8),
+    ];
+    let topo = Topology::h100_node(8).unwrap();
+    for op in ops {
+        for b in Baseline::ALL {
+            if !b.supports(&op) {
+                continue;
+            }
+            let (p, params) = baselines::plan(b, &op, &topo)
+                .unwrap_or_else(|e| panic!("{:?} on {}: {e}", b, op.label()));
+            let r = simulate(&p, &topo, params).unwrap();
+            assert!(r.makespan_us > 0.0, "{b:?} {}", op.label());
+        }
+    }
+}
+
+#[test]
+fn tuned_beats_or_matches_every_automatic_baseline() {
+    // the paper's core claim at operator level
+    let topo = Topology::h100_node(8).unwrap();
+    for op in [
+        OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8),
+        OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 8),
+        OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 16384, 8),
+    ] {
+        let tuned = autotune::tune(&op, &topo, Budget::Quick).unwrap();
+        for b in [Baseline::TritonNccl, Baseline::KernelLevel] {
+            let (p, params) = baselines::plan(b, &op, &topo).unwrap();
+            let base = simulate(&p, &topo, params).unwrap().makespan_us;
+            assert!(
+                tuned.makespan_us <= base * 1.02,
+                "{} vs {:?}: {} > {}",
+                op.label(),
+                b,
+                tuned.makespan_us,
+                base
+            );
+        }
+    }
+}
+
+#[test]
+fn minimal_sync_never_loses_to_barrier() {
+    let topo = Topology::h100_node(8).unwrap();
+    for op in [
+        OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8),
+        OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 16384, 8),
+    ] {
+        let cfg = cfg_for(op.kind);
+        let (p1, params) = compile_operator(&op, &cfg, &topo).unwrap();
+        let (p2, _) = compile_operator_barrier_sync(&op, &cfg, &topo).unwrap();
+        let a = simulate(&p1, &topo, params).unwrap();
+        let b = simulate(&p2, &topo, params).unwrap();
+        assert!(a.makespan_us <= b.makespan_us * 1.001, "{}", op.label());
+        assert!(a.exposed_wait_us <= b.exposed_wait_us + 1e-6, "{}", op.label());
+    }
+}
+
+#[test]
+fn simulation_is_deterministic_across_runs() {
+    let topo = Topology::h100_node(8).unwrap();
+    let op = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 8);
+    let cfg = cfg_for(op.kind);
+    let (plan, params) = compile_operator(&op, &cfg, &topo).unwrap();
+    let a = simulate(&plan, &topo, params).unwrap();
+    let b = simulate(&plan, &topo, params).unwrap();
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.timeline.spans.len(), b.timeline.spans.len());
+}
+
+#[test]
+fn multinode_topology_end_to_end() {
+    let topo = Topology::h100_multinode(2, 4).unwrap();
+    let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 8192, 8);
+    let cfg = TuneConfig {
+        real: Realization::new(BackendKind::LdStSpecialized, 32),
+        ..Default::default()
+    };
+    let (plan, params) = compile_operator(&op, &cfg, &topo).unwrap();
+    let multi = simulate(&plan, &topo, params).unwrap();
+    // same operator on a single 8-GPU node is faster (no IB hops)
+    let topo1 = Topology::h100_node(8).unwrap();
+    let (plan1, params1) = compile_operator(&op, &cfg, &topo1).unwrap();
+    let single = simulate(&plan1, &topo1, params1).unwrap();
+    assert!(multi.makespan_us > single.makespan_us);
+}
+
+#[test]
+fn report_generators_produce_full_tables() {
+    // static figures are cheap; run them end-to-end
+    assert_eq!(reports::table2().rows.len(), 3);
+    assert_eq!(reports::fig2a().rows.len(), 6);
+    assert!(reports::fig2b().unwrap().rows.len() >= 4);
+    assert_eq!(reports::fig2c().rows.len(), 6);
+    assert_eq!(reports::fig2d().rows.len(), 7);
+    let f11a = reports::fig11a().unwrap();
+    assert_eq!(f11a.rows.len(), 2);
+    let f11b = reports::fig11b().unwrap();
+    assert_eq!(f11b.rows.len(), 6);
+}
+
+#[test]
+fn fig10_integration_improves_on_native() {
+    let t = reports::fig10(Budget::Quick).unwrap();
+    assert_eq!(t.rows.len(), 3);
+    for (label, row) in &t.rows {
+        let native = row[0];
+        let ours = row[1];
+        assert!(ours < native, "{label}: +syncopate {ours} vs native {native}");
+        // all three comm lowering paths produce finite latencies
+        assert!(row[2..].iter().all(|v| v.is_finite() && *v > 0.0), "{label}");
+    }
+}
+
+#[test]
+fn split_sweep_has_interior_optimum_for_ar() {
+    let topo = Topology::h100_node(8).unwrap();
+    let op = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 8);
+    let mut times = Vec::new();
+    for split in [1usize, 2, 4, 8, 16] {
+        let cfg = TuneConfig {
+            split,
+            real: Realization::new(BackendKind::LdStSpecialized, 32),
+            ..Default::default()
+        };
+        let (p, params) = compile_operator(&op, &cfg, &topo).unwrap();
+        times.push(simulate(&p, &topo, params).unwrap().makespan_us);
+    }
+    let best = times.iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(times[0] > best, "split=1 should not be optimal: {times:?}");
+    assert!(*times.last().unwrap() > best, "max split should not be optimal: {times:?}");
+}

@@ -1,0 +1,189 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts`. Each test loads HLO text produced by the L1/L2
+//! Python layer and checks the numerics against host oracles — this is the
+//! cross-language contract test of the three-layer stack.
+
+use syncopate::exec::verify::{assert_allclose, host_attention, host_gelu, host_gemm};
+use syncopate::runtime::Runtime;
+use syncopate::util::Rng;
+
+fn rt() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_kernel_families() {
+    let rt = rt();
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("gemm_")));
+    assert!(names.iter().any(|n| n.starts_with("attn_step_")));
+    assert!(names.iter().any(|n| n.starts_with("attn_finalize_")));
+    assert!(names.iter().any(|n| n.starts_with("ffn_shard_")));
+    assert!(names.iter().any(|n| n.starts_with("add_")));
+    assert!(names.len() >= 13, "{names:?}");
+}
+
+#[test]
+fn gemm_artifacts_match_host_oracle() {
+    let rt = rt();
+    let mut rng = Rng::new(11);
+    for tm in [8usize, 16, 32, 64, 128] {
+        let name = format!("gemm_{tm}x128x128");
+        let a = rng.vec_f32(tm * 128);
+        let b = rng.vec_f32(128 * 128);
+        let outs = rt.execute(&name, &[(&a, &[tm, 128]), (&b, &[128, 128])]).unwrap();
+        let want = host_gemm(&a, &b, tm, 128, 128);
+        assert_allclose(&outs[0], &want, 1e-4, 1e-4, &name).unwrap();
+    }
+}
+
+#[test]
+fn attn_step_chain_matches_full_attention() {
+    let rt = rt();
+    let mut rng = Rng::new(21);
+    let (sq, d, world) = (64usize, 64usize, 4usize);
+    let q = rng.vec_f32(sq * d);
+    let k: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(sq * d)).collect();
+    let v: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(sq * d)).collect();
+
+    let mut acc = vec![0.0f32; sq * d];
+    let mut m = vec![-1e30f32; sq];
+    let mut l = vec![0.0f32; sq];
+    for step in 0..world {
+        let outs = rt
+            .execute(
+                "attn_step_q64d64k64",
+                &[
+                    (&q, &[sq, d]),
+                    (&k[step], &[sq, d]),
+                    (&v[step], &[sq, d]),
+                    (&acc, &[sq, d]),
+                    (&m, &[sq]),
+                    (&l, &[sq]),
+                ],
+            )
+            .unwrap();
+        acc = outs[0].clone();
+        m = outs[1].clone();
+        l = outs[2].clone();
+    }
+    let outs = rt
+        .execute("attn_finalize_q64d64", &[(&acc, &[sq, d]), (&l, &[sq])])
+        .unwrap();
+    let k_full: Vec<f32> = k.concat();
+    let v_full: Vec<f32> = v.concat();
+    let want = host_attention(&q, &k_full, &v_full, sq, world * sq, d, 1.0 / (d as f32).sqrt());
+    assert_allclose(&outs[0], &want, 5e-4, 5e-4, "ring chain").unwrap();
+}
+
+#[test]
+fn attn_step_split_chunk_artifacts() {
+    // the k16/k32 variants fold smaller chunks but compose identically
+    let rt = rt();
+    let mut rng = Rng::new(31);
+    let (sq, d) = (64usize, 64usize);
+    let q = rng.vec_f32(sq * d);
+    let k = rng.vec_f32(sq * d);
+    let v = rng.vec_f32(sq * d);
+
+    let run = |chunk: usize| {
+        let name = format!("attn_step_q64d64k{chunk}");
+        let mut acc = vec![0.0f32; sq * d];
+        let mut m = vec![-1e30f32; sq];
+        let mut l = vec![0.0f32; sq];
+        for c in 0..(sq / chunk) {
+            let ks = &k[c * chunk * d..(c + 1) * chunk * d];
+            let vs = &v[c * chunk * d..(c + 1) * chunk * d];
+            let outs = rt
+                .execute(
+                    &name,
+                    &[
+                        (&q, &[sq, d]),
+                        (ks, &[chunk, d]),
+                        (vs, &[chunk, d]),
+                        (&acc, &[sq, d]),
+                        (&m, &[sq]),
+                        (&l, &[sq]),
+                    ],
+                )
+                .unwrap();
+            acc = outs[0].clone();
+            m = outs[1].clone();
+            l = outs[2].clone();
+        }
+        let o = rt
+            .execute("attn_finalize_q64d64", &[(&acc, &[sq, d]), (&l, &[sq])])
+            .unwrap();
+        o[0].clone()
+    };
+    let o64 = run(64);
+    let o32 = run(32);
+    let o16 = run(16);
+    assert_allclose(&o32, &o64, 1e-4, 1e-4, "k32 vs k64").unwrap();
+    assert_allclose(&o16, &o64, 1e-4, 1e-4, "k16 vs k64").unwrap();
+}
+
+#[test]
+fn ffn_shard_matches_host_oracle() {
+    let rt = rt();
+    let mut rng = Rng::new(41);
+    let (m, d, f) = (64usize, 128usize, 64usize);
+    let x = rng.vec_f32(m * d);
+    let w1 = rng.vec_f32(d * f);
+    let b1 = rng.vec_f32(f);
+    let w2 = rng.vec_f32(f * d);
+    let outs = rt
+        .execute(
+            "ffn_shard_64x128x64",
+            &[(&x, &[m, d]), (&w1, &[d, f]), (&b1, &[f]), (&w2, &[f, d])],
+        )
+        .unwrap();
+    let mut h = host_gemm(&x, &w1, m, d, f);
+    for (i, hv) in h.iter_mut().enumerate() {
+        *hv += b1[i % f];
+    }
+    host_gelu(&mut h);
+    let want = host_gemm(&h, &w2, m, f, d);
+    assert_allclose(&outs[0], &want, 5e-4, 5e-4, "ffn").unwrap();
+}
+
+#[test]
+fn add_artifact() {
+    let rt = rt();
+    let mut rng = Rng::new(51);
+    let x = rng.vec_f32(64 * 64);
+    let y = rng.vec_f32(64 * 64);
+    let outs = rt.execute("add_64x64", &[(&x, &[64, 64]), (&y, &[64, 64])]).unwrap();
+    let want: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+    assert_allclose(&outs[0], &want, 1e-6, 1e-6, "add").unwrap();
+}
+
+#[test]
+fn shape_and_arity_validation() {
+    let rt = rt();
+    let a = vec![0.0f32; 8 * 128];
+    let b = vec![0.0f32; 128 * 128];
+    // wrong arity
+    assert!(rt.execute("gemm_8x128x128", &[(&a, &[8, 128])]).is_err());
+    // wrong shape
+    assert!(rt
+        .execute("gemm_8x128x128", &[(&a, &[128, 8]), (&b, &[128, 128])])
+        .is_err());
+    // wrong data length
+    assert!(rt
+        .execute("gemm_8x128x128", &[(&a[..10], &[8, 128]), (&b, &[128, 128])])
+        .is_err());
+    // unknown artifact
+    assert!(rt.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn executable_cache_counts_calls() {
+    let rt = rt();
+    let x = vec![1.0f32; 64 * 64];
+    assert_eq!(rt.num_calls(), 0);
+    rt.execute("add_64x64", &[(&x, &[64, 64]), (&x, &[64, 64])]).unwrap();
+    rt.execute("add_64x64", &[(&x, &[64, 64]), (&x, &[64, 64])]).unwrap();
+    assert_eq!(rt.num_calls(), 2);
+}

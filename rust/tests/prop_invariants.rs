@@ -1,0 +1,257 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The offline build has no proptest; properties are exercised with the
+//! crate's deterministic [`Rng`] over many seeded iterations, with the seed
+//! printed on failure so any counterexample reproduces exactly.
+
+use std::collections::HashSet;
+
+use syncopate::chunk::{Chunk, DType, Region, TensorTable};
+use syncopate::codegen::Realization;
+use syncopate::coordinator::execases::{self, run_and_verify};
+use syncopate::coordinator::operators::compile_operator;
+use syncopate::coordinator::TuneConfig;
+use syncopate::backend::BackendKind;
+use syncopate::kernel::grid::{Axis, TileGrid};
+use syncopate::kernel::scheduler::{IntraOrder, TileScheduler};
+use syncopate::runtime::Runtime;
+use syncopate::schedule::validate::{check_covers, topo_order, validate};
+use syncopate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
+use syncopate::sim::engine::simulate;
+use syncopate::topo::Topology;
+use syncopate::util::Rng;
+use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_8B};
+
+const ITERS: usize = 60;
+
+/// Property: Region::split partitions exactly — coverage + element count.
+#[test]
+fn prop_region_split_partitions() {
+    let mut rng = Rng::new(0xA11CE);
+    for it in 0..ITERS {
+        let rows = (rng.below(16) + 1) * 4;
+        let cols = rng.below(64) + 1;
+        let r = Region::full(&[rows, cols]);
+        let n = [1usize, 2, 4][rng.below(3)];
+        let parts = r.split(0, n).unwrap_or_else(|e| panic!("iter {it}: {e}"));
+        assert!(check_covers(&[rows, cols], &parts), "iter {it}");
+        assert_eq!(parts.iter().map(|p| p.elems()).sum::<usize>(), r.elems(), "iter {it}");
+    }
+}
+
+/// Property: linear_offsets are unique, in-bounds, and count == elems.
+#[test]
+fn prop_region_offsets_bijective() {
+    let mut rng = Rng::new(0xB0B);
+    for it in 0..ITERS {
+        let shape = [rng.below(6) + 2, rng.below(6) + 2, rng.below(4) + 1];
+        let off = [rng.below(shape[0]), rng.below(shape[1]), rng.below(shape[2])];
+        let sz = [
+            rng.below(shape[0] - off[0]) + 1,
+            rng.below(shape[1] - off[1]) + 1,
+            rng.below(shape[2] - off[2]) + 1,
+        ];
+        let r = Region::new(off.to_vec(), sz.to_vec());
+        let offs = r.linear_offsets(&shape);
+        assert_eq!(offs.len(), r.elems(), "iter {it}");
+        let set: HashSet<usize> = offs.iter().copied().collect();
+        assert_eq!(set.len(), offs.len(), "iter {it}: duplicate offsets");
+        let total: usize = shape.iter().product();
+        assert!(offs.iter().all(|&o| o < total), "iter {it}");
+    }
+}
+
+/// Property: grid coords <-> linear are mutually inverse for random grids.
+#[test]
+fn prop_grid_coords_roundtrip() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for it in 0..ITERS {
+        let axes = (0..rng.below(3) + 1)
+            .map(|i| {
+                Axis::new(
+                    &format!("A{i}"),
+                    rng.below(200) + 1,
+                    rng.below(32) + 1,
+                )
+                .unwrap()
+            })
+            .collect();
+        let g = TileGrid::new(axes).unwrap();
+        for _ in 0..10 {
+            let id = rng.below(g.num_tiles());
+            let c = g.coords(id).unwrap();
+            assert_eq!(g.linear(&c).unwrap(), id, "iter {it}");
+        }
+    }
+}
+
+/// Property: every random valid push/pull schedule is accepted by validate
+/// and its topo order respects all deps.
+#[test]
+fn prop_random_schedules_validate_and_order() {
+    let mut rng = Rng::new(0xDEAD);
+    for it in 0..ITERS {
+        let world = rng.below(6) + 2;
+        let mut table = TensorTable::new();
+        let rows = world * (rng.below(4) + 1) * 2;
+        let x = table.declare("x", &[rows, 8], DType::F32).unwrap();
+        let mut s = CommSchedule::new(world, table);
+        // random ops with deps only on already-added ops (guarantees DAG)
+        let mut added: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..rng.below(20) + 1 {
+            let rank = rng.below(world);
+            let mut peer = rng.below(world);
+            if peer == rank {
+                peer = (peer + 1) % world;
+            }
+            let shard = rng.below(world);
+            let region =
+                Region::rows(shard * (rows / world), rows / world, 8);
+            let c = Chunk::new(x, region);
+            let deps = if !added.is_empty() && rng.below(2) == 1 {
+                let (dr, di) = added[rng.below(added.len())];
+                vec![Dep::on(dr, di)]
+            } else {
+                vec![]
+            };
+            let kind = if rng.below(2) == 0 { TransferKind::Push } else { TransferKind::Pull };
+            let idx = s
+                .add_op(rank, CommOp::P2p { kind, peer, src: c.clone(), dst: c, reduce: false, deps })
+                .unwrap();
+            added.push((rank, idx));
+        }
+        validate(&s).unwrap_or_else(|e| panic!("iter {it}: {e}"));
+        let order = topo_order(&s).unwrap();
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, o)| (*o, i)).collect();
+        for (rank, ops) in s.per_rank.iter().enumerate() {
+            for (index, op) in ops.iter().enumerate() {
+                let me = pos[&syncopate::schedule::OpRef { rank, index }];
+                for d in op.deps() {
+                    let dep =
+                        pos[&syncopate::schedule::OpRef { rank: d.rank, index: d.index }];
+                    assert!(dep < me, "iter {it}: dep ordered after dependent");
+                }
+            }
+        }
+    }
+}
+
+/// Property: split_p2p preserves total link bytes and validity.
+#[test]
+fn prop_split_preserves_bytes_and_validity() {
+    let mut rng = Rng::new(0xFACE);
+    for it in 0..ITERS {
+        let world = rng.below(5) + 2;
+        let mut table = TensorTable::new();
+        let rows = world * 8;
+        let x = table.declare("x", &[rows, 16], DType::F32).unwrap();
+        let s = syncopate::schedule::templates::all_gather_ring(&table, x, 0, world).unwrap();
+        let n = [1usize, 2, 4, 8][rng.below(4)];
+        let s2 = s.split_p2p(0, n).unwrap_or_else(|e| panic!("iter {it}: {e}"));
+        validate(&s2).unwrap_or_else(|e| panic!("iter {it}: {e}"));
+        assert_eq!(
+            s.total_link_bytes().unwrap(),
+            s2.total_link_bytes().unwrap(),
+            "iter {it}"
+        );
+        assert_eq!(s2.num_ops(), s.num_ops() * n, "iter {it}");
+    }
+}
+
+/// Property: chunk-major swizzles are always permutations, for random
+/// disjoint chunk groupings.
+#[test]
+fn prop_swizzle_is_permutation() {
+    let mut rng = Rng::new(0x5EED);
+    for it in 0..ITERS {
+        let g = TileGrid::gemm(
+            (rng.below(8) + 1) * 32,
+            (rng.below(4) + 1) * 32,
+            32,
+            32,
+        )
+        .unwrap();
+        let n = g.num_tiles();
+        // random disjoint groups over a random subset of tiles
+        let mut tiles: Vec<usize> = (0..n).collect();
+        // Fisher-Yates with our rng
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            tiles.swap(i, j);
+        }
+        let grouped = rng.below(n + 1);
+        let ngroups = if grouped == 0 { 0 } else { rng.below(grouped) + 1 };
+        let mut groups = std::collections::HashMap::new();
+        if ngroups > 0 {
+            for (i, &t) in tiles[..grouped].iter().enumerate() {
+                groups.entry(i % ngroups).or_insert_with(Vec::new).push(t);
+            }
+        }
+        let arrival: Vec<usize> = (0..groups.len()).collect();
+        let intra = [IntraOrder::RowMajor, IntraOrder::Snake][rng.below(2)];
+        let s = TileScheduler::chunk_major(&g, &groups, &arrival, intra)
+            .unwrap_or_else(|e| panic!("iter {it}: {e}"));
+        assert!(s.is_permutation(n), "iter {it}");
+    }
+}
+
+/// Property: simulated makespan is monotone in communication volume
+/// (same plan shape, larger tensors == no faster).
+#[test]
+fn prop_sim_monotone_in_bytes() {
+    let topo = Topology::h100_node(4).unwrap();
+    let mut prev = 0.0;
+    for tokens in [2048usize, 4096, 8192, 16384] {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, tokens, 4);
+        let (p, params) = compile_operator(&op, &TuneConfig::default(), &topo).unwrap();
+        let t = simulate(&p, &topo, params).unwrap().makespan_us;
+        assert!(t >= prev, "tokens {tokens}: {t} < {prev}");
+        prev = t;
+    }
+}
+
+/// Property (real numerics): random seeds, splits and worlds all verify
+/// against the oracle — the distributed execution is value-correct for any
+/// valid configuration.
+#[test]
+fn prop_exec_numerics_random_configs() {
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let mut rng = Rng::new(0xE0E0);
+    for it in 0..8 {
+        let world = [2usize, 4][rng.below(2)];
+        let split = [1usize, 2, 4][rng.below(3)];
+        let seed = rng.next_u64();
+        let case = execases::ag_gemm(world, split, seed).unwrap();
+        run_and_verify(case, &rt).unwrap_or_else(|e| panic!("iter {it} seed {seed}: {e}"));
+    }
+    for it in 0..4 {
+        let world = [2usize, 4][rng.below(2)];
+        let seed = rng.next_u64();
+        let case = execases::gemm_ar(world, seed).unwrap();
+        run_and_verify(case, &rt).unwrap_or_else(|e| panic!("iter {it} seed {seed}: {e}"));
+    }
+}
+
+/// Property: backend feasibility — the autotuner never returns an
+/// infeasible realization across random operators.
+#[test]
+fn prop_autotune_respects_feasibility() {
+    let mut rng = Rng::new(0xFEA5);
+    let topo = Topology::h100_node(4).unwrap();
+    for _ in 0..6 {
+        let kind = [OpKind::AgGemm, OpKind::GemmRs, OpKind::GemmAr][rng.below(3)];
+        let tokens = (rng.below(3) + 1) * 4096;
+        let op = OperatorInstance::gemm(kind, &LLAMA3_8B, tokens, 4);
+        let r = syncopate::autotune::tune(&op, &topo, syncopate::autotune::Budget::Quick)
+            .unwrap();
+        let needs_reduce = matches!(kind, OpKind::GemmRs | OpKind::GemmAr);
+        if needs_reduce {
+            assert!(syncopate::backend::caps(r.cfg.real.backend).supports_reduce);
+        }
+        if r.cfg.real.backend == BackendKind::CopyEngine {
+            assert_eq!(r.cfg.real.comm_sms, 0);
+        }
+        let _ = Realization::new(r.cfg.real.backend, r.cfg.real.comm_sms);
+    }
+}
