@@ -1,0 +1,27 @@
+# Build-time artifact pipeline + convenience wrappers.
+
+.PHONY: artifacts build test bench fmt clippy clean
+
+# AOT-lower every L2 entry point to HLO text + manifest (needs jax).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+build:
+	cd rust && cargo build --release
+
+# Tier-1 verification. Clean on a bare checkout: tests that need the AOT
+# artifacts skip with a message until `make artifacts` has run.
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench hotpath
+
+fmt:
+	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+clean:
+	cd rust && cargo clean

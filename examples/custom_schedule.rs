@@ -85,6 +85,11 @@ fn main() -> syncopate::Result<()> {
     let split = 2;
     let sched = sched.split_p2p(0, split)?;
     println!("after split_p2p(axis 0, {split}): {} ops", sched.num_ops());
+    // signal numbering is rank-major and dense: each rank owns a
+    // contiguous id block of the executors' shared signal board
+    for (r, (lo, hi)) in syncopate::codegen::signal_ranges(&sched).iter().enumerate() {
+        println!("  rank {r} owns signals [{lo}, {hi})");
+    }
 
     // 3. align compute: chunk-major swizzle + minimal sync + codegen
     let cfg = TuneConfig::default();

@@ -10,8 +10,11 @@
 use std::time::Instant;
 
 use syncopate::autotune::{self, Budget};
+use syncopate::coordinator::execases;
 use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::TuneConfig;
+use syncopate::exec::{prepare, run_prepared, ExecOptions};
+use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
 use syncopate::topo::Topology;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
@@ -72,4 +75,37 @@ fn main() {
         if tune_s < 1.0 { "MET" } else { "MISSED" },
     );
     let _ = compile_ms;
+
+    // -- executor engines: sequential reference vs parallel per-rank ------
+    // Real-numerics AG-GEMM (split 2) per world size. The case is built
+    // once outside the timed region (AG-GEMM execution is idempotent over
+    // the store: gathers and outputs are plain overwrites), so the loop
+    // times exactly the engine: transfers, signals, kernel calls.
+    let rt = Runtime::open_default().expect("host-ref fallback cannot fail");
+    println!("\n== exec engine: sequential vs parallel (runtime backend: {}) ==",
+        rt.backend_name());
+    for world in [2usize, 4, 8] {
+        let case = execases::ag_gemm(world, 2, 7).unwrap();
+        // tune-once, run-many: prepare the plan once, time only execution
+        let prep = prepare(&case.plan, &case.sched.tensors).unwrap();
+        let mut per_mode = [0.0f64; 2];
+        for (mi, opts) in [ExecOptions::sequential(), ExecOptions::parallel()]
+            .into_iter()
+            .enumerate()
+        {
+            let label = format!(
+                "exec ag-gemm w{world} s2 ({})",
+                if mi == 0 { "sequential" } else { "parallel" }
+            );
+            per_mode[mi] = bench(&label, 5, || {
+                let _ = run_prepared(&prep, &case.store, &rt, &opts).unwrap();
+            });
+        }
+        println!(
+            "  world {world}: parallel speedup over sequential {:.2}x (seq {:.3} ms, par {:.3} ms)",
+            per_mode[0] / per_mode[1],
+            per_mode[0] * 1e3,
+            per_mode[1] * 1e3
+        );
+    }
 }

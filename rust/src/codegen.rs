@@ -273,6 +273,13 @@ impl ExecutablePlan {
 }
 
 /// Stable global signal numbering for a schedule's ops.
+///
+/// Rank-major and dense: rank `r` owns the contiguous id block returned by
+/// [`signal_ranges`], and ascending-id order within one rank is schedule
+/// order. `exec::plan_prep` leans on the stability of this numbering when
+/// it serializes intersecting reduce transfers in ascending signal order;
+/// [`signal_ranges`] itself is an introspection helper (CLI/debugging),
+/// not consulted by the engines.
 pub fn signal_ids(sched: &CommSchedule) -> (HashMap<OpRef, SignalId>, usize) {
     let mut map = HashMap::new();
     let mut next = 0usize;
@@ -283,6 +290,18 @@ pub fn signal_ids(sched: &CommSchedule) -> (HashMap<OpRef, SignalId>, usize) {
         }
     }
     (map, next)
+}
+
+/// Per-rank signal id ranges under the [`signal_ids`] numbering: rank `r`
+/// owns signals `[ranges[r].0, ranges[r].1)`.
+pub fn signal_ranges(sched: &CommSchedule) -> Vec<(SignalId, SignalId)> {
+    let mut out = Vec::with_capacity(sched.world);
+    let mut next = 0usize;
+    for ops in &sched.per_rank {
+        out.push((next, next + ops.len()));
+        next += ops.len();
+    }
+    out
 }
 
 /// Per-rank compute-side inputs to codegen.
@@ -728,5 +747,20 @@ mod tests {
         let mut vals: Vec<_> = map.values().copied().collect();
         vals.sort_unstable();
         assert_eq!(vals, vec![0, 1]);
+    }
+
+    #[test]
+    fn signal_ranges_partition_the_id_space() {
+        let (s, _, _) = setup();
+        let ranges = signal_ranges(&s);
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0], (0, 0)); // rank0 owns no ops in the setup
+        assert_eq!(ranges[1], (0, 2));
+        let (map, n) = signal_ids(&s);
+        for (op, sig) in &map {
+            let (lo, hi) = ranges[op.rank];
+            assert!(*sig >= lo && *sig < hi, "signal {sig} outside rank {} range", op.rank);
+        }
+        assert_eq!(ranges.last().unwrap().1, n);
     }
 }

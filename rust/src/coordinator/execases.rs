@@ -15,8 +15,10 @@ use crate::chunk::TensorTable;
 use crate::codegen::{compile, CallSpec, ExecutablePlan, RankComputeInput, Realization};
 use crate::depgraph::{plan_rank_sync, ChunkTileMap};
 use crate::error::{Error, Result};
-use crate::exec::verify::{assert_allclose, host_attention, host_gemm, host_sum};
-use crate::exec::{run, BufferStore, ExecStats};
+use crate::exec::verify::{
+    assert_allclose, assert_bit_identical, host_attention, host_gemm, host_sum,
+};
+use crate::exec::{run_with, BufferStore, ExecOptions, ExecStats};
 use crate::kernel::grid::{Axis, TileGrid};
 use crate::kernel::scheduler::TileScheduler;
 use crate::runtime::Runtime;
@@ -24,11 +26,9 @@ use crate::schedule::{templates, CommSchedule, OpRef};
 use crate::topo::Topology;
 use crate::util::Rng;
 
-/// Canonical exec shapes (must match python/compile/model.py).
-pub const GEMM_K: usize = 128;
-pub const GEMM_N: usize = 128;
-pub const ATTN_SQ: usize = 64;
-pub const ATTN_D: usize = 64;
+/// Canonical exec shapes — single-sourced from [`crate::runtime::canonical`]
+/// (the Rust mirror of python/compile/model.py).
+pub use crate::runtime::canonical::{ATTN_D, ATTN_SQ, GEMM_K, GEMM_N};
 
 /// One expected-value check after execution.
 #[derive(Debug, Clone)]
@@ -49,12 +49,102 @@ pub struct ExecCase {
 }
 
 /// Execute a case and verify every check (consumes the case's store).
-pub fn run_and_verify(mut case: ExecCase, runtime: &Runtime) -> Result<ExecStats> {
-    let stats = run(&case.plan, &case.sched.tensors, &mut case.store, runtime)?;
-    for c in &case.checks {
-        let got = case.store.get(c.rank, &c.tensor)?;
-        assert_allclose(got, &c.expected, 5e-4, 5e-4, &format!("{}: {}", case.name, c.what))?;
+/// Runs the sequential reference engine; see [`run_and_verify_with`].
+pub fn run_and_verify(case: ExecCase, runtime: &Runtime) -> Result<ExecStats> {
+    run_and_verify_with(case, runtime, &ExecOptions::sequential())
+}
+
+/// Execute a case under an explicit [`ExecOptions`] and verify every check.
+pub fn run_and_verify_with(
+    case: ExecCase,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+) -> Result<ExecStats> {
+    let stats = run_with(&case.plan, &case.sched.tensors, &case.store, runtime, opts)?;
+    verify_checks(&case.name, "", &case.store, &case.checks)?;
+    Ok(stats)
+}
+
+/// Assert every expected-value check against the post-run store; `tag`
+/// distinguishes which engine produced the state in error messages.
+fn verify_checks(name: &str, tag: &str, store: &BufferStore, checks: &[Check]) -> Result<()> {
+    for c in checks {
+        let got = store.get(c.rank, &c.tensor)?;
+        let what = format!("{name}{tag}: {}", c.what);
+        assert_allclose(&got, &c.expected, 5e-4, 5e-4, &what)?;
     }
+    Ok(())
+}
+
+/// Run one case under BOTH engines and require bit-identical f32 state.
+///
+/// `build` must return the same deterministic case on every call (same
+/// seed); the first instance runs sequentially, the second in parallel, and
+/// every declared tensor on every rank is compared bitwise afterwards —
+/// the DESIGN.md §6 cross-mode equivalence check. Oracle checks run on both
+/// instances too, so a template that is wrong in *both* engines still fails.
+pub fn verify_modes_bit_identical(
+    build: &dyn Fn() -> Result<ExecCase>,
+    runtime: &Runtime,
+) -> Result<(ExecStats, ExecStats)> {
+    let seq_case = build()?;
+    let name = seq_case.name.clone();
+    let tensors: Vec<String> =
+        seq_case.store.names().into_iter().map(|s| s.to_string()).collect();
+    let world = seq_case.store.world();
+
+    let par_case = build()?;
+    // sanity: the builder must be deterministic for the comparison to mean
+    // anything — inputs must already match bitwise
+    for t in &tensors {
+        for r in 0..world {
+            assert_bit_identical(
+                &par_case.store.get(r, t)?,
+                &seq_case.store.get(r, t)?,
+                &format!("{name}: builder not deterministic for `{t}`@rank{r}"),
+            )?;
+        }
+    }
+
+    let seq_stats = run_with(
+        &seq_case.plan,
+        &seq_case.sched.tensors,
+        &seq_case.store,
+        runtime,
+        &ExecOptions::sequential(),
+    )?;
+    verify_checks(&name, " (seq)", &seq_case.store, &seq_case.checks)?;
+    let par_stats = run_and_verify_stats(&par_case, runtime)?;
+
+    for t in &tensors {
+        for r in 0..world {
+            assert_bit_identical(
+                &par_case.store.get(r, t)?,
+                &seq_case.store.get(r, t)?,
+                &format!("{name}: parallel vs sequential `{t}`@rank{r}"),
+            )?;
+        }
+    }
+    if seq_stats.transfers != par_stats.transfers
+        || seq_stats.bytes_moved != par_stats.bytes_moved
+        || seq_stats.compute_calls != par_stats.compute_calls
+    {
+        return Err(Error::Exec(format!(
+            "{name}: stats diverge between modes: seq {seq_stats:?} vs par {par_stats:?}"
+        )));
+    }
+    Ok((seq_stats, par_stats))
+}
+
+fn run_and_verify_stats(case: &ExecCase, runtime: &Runtime) -> Result<ExecStats> {
+    let stats = run_with(
+        &case.plan,
+        &case.sched.tensors,
+        &case.store,
+        runtime,
+        &ExecOptions::parallel(),
+    )?;
+    verify_checks(&case.name, " (par)", &case.store, &case.checks)?;
     Ok(stats)
 }
 

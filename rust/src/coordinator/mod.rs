@@ -7,11 +7,12 @@
 //!   model (`sim::`): schedules from templates, grids from the annotated L1
 //!   kernel sources, chunk-major swizzles, minimal sync, one plan per
 //!   [`crate::workload::OperatorInstance`] × [`TuneConfig`].
-//! * [`execases`] — validation-scale cases with real buffers, AOT artifacts
-//!   and numeric verification against host oracles (`exec::`).
-//! * [`service`] — a threaded request loop that serves compiled operators
-//!   (tune-once, run-many), the "runtime" half of the paper's compiler +
-//!   runtime framework.
+//! * [`execases`] — validation-scale cases with real buffers, real kernel
+//!   execution (PJRT artifacts or the host-reference backend) and numeric
+//!   verification against host oracles (`exec::`).
+//! * [`service`] — a multi-worker request pool that serves compiled
+//!   operators (tune-once, run-many) from a shared `RwLock` plan cache,
+//!   the "runtime" half of the paper's compiler + runtime framework.
 
 pub mod execases;
 pub mod operators;

@@ -1,13 +1,19 @@
-//! The serving half of the framework: a threaded coordinator that owns the
-//! topology, compiles operators on demand (tune-once, cached), and answers
-//! simulation/estimation requests.
+//! The serving half of the framework: a multi-worker coordinator that owns
+//! the topology, compiles operators on demand (tune-once, cached), and
+//! answers simulation/estimation requests.
 //!
-//! The offline build has no tokio; the loop is a std thread draining an
-//! mpsc queue, which is all the request path needs (requests are CPU-bound
-//! compilations/simulations, not I/O).
+//! The offline build has no tokio; the service is a configurable pool of
+//! std worker threads draining one shared mpsc queue (dequeue serialized
+//! behind a mutex, processing fully parallel), which is all the request
+//! path needs — requests are CPU-bound compilations/simulations, not I/O.
+//! Compiled plans land in a process-wide cache behind an `RwLock`: reads
+//! (cache hits) never block each other, and a key is compiled at most a
+//! handful of times under race but inserted once (first writer wins, so
+//! responses stay deterministic).
 
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
 
 use crate::coordinator::operators::compile_operator;
@@ -59,26 +65,27 @@ enum Envelope {
     Shutdown,
 }
 
-/// A running coordinator service.
+type PlanCache = HashMap<String, (crate::codegen::ExecutablePlan, crate::sim::SimParams)>;
+
+/// A running coordinator service (worker pool).
 pub struct Coordinator {
     tx: mpsc::Sender<Envelope>,
-    handle: Option<thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
-impl Coordinator {
-    /// Spawn the worker thread.
-    pub fn spawn(topo: Topology) -> Self {
-        let (tx, rx) = mpsc::channel::<Envelope>();
-        let handle = thread::spawn(move || worker(topo, rx));
-        Coordinator { tx, handle: Some(handle) }
-    }
+/// A cloneable submission handle; hand one to each client thread.
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx: mpsc::Sender<Envelope>,
+}
 
+impl CoordinatorClient {
     /// Submit a request; returns a receiver for the response.
     pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Envelope::Req(req, rtx))
-            .map_err(|_| Error::Coordinator("coordinator thread is gone".into()))?;
+            .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
         Ok(rrx)
     }
 
@@ -90,35 +97,89 @@ impl Coordinator {
     }
 }
 
+impl Coordinator {
+    /// Spawn a single-worker coordinator (back-compat entry point).
+    pub fn spawn(topo: Topology) -> Self {
+        Self::spawn_pool(topo, 1)
+    }
+
+    /// Spawn a pool of `workers` threads sharing one request queue and one
+    /// plan cache.
+    pub fn spawn_pool(topo: Topology, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let rx = Arc::new(Mutex::new(rx));
+        let cache: Arc<RwLock<PlanCache>> = Arc::new(RwLock::new(HashMap::new()));
+        let topo = Arc::new(topo);
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = rx.clone();
+                let cache = cache.clone();
+                let topo = topo.clone();
+                thread::spawn(move || worker(&topo, &rx, &cache))
+            })
+            .collect();
+        Coordinator { tx, handles }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// A cloneable handle for submitting from other threads.
+    pub fn client(&self) -> CoordinatorClient {
+        CoordinatorClient { tx: self.tx.clone() }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.client().submit(req)
+    }
+
+    /// Convenience: submit and block for the answer.
+    pub fn run(&self, op: OperatorInstance, cfg: TuneConfig) -> Result<Response> {
+        self.client().run(op, cfg)
+    }
+}
+
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Envelope::Shutdown);
-        if let Some(h) = self.handle.take() {
+        for _ in &self.handles {
+            let _ = self.tx.send(Envelope::Shutdown);
+        }
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker(topo: Topology, rx: mpsc::Receiver<Envelope>) {
-    // plan cache: same (operator, config) never recompiles
-    let mut cache: HashMap<String, (crate::codegen::ExecutablePlan, crate::sim::SimParams)> =
-        HashMap::new();
-    while let Ok(env) = rx.recv() {
+fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<PlanCache>) {
+    loop {
+        // Serialize only the dequeue; processing runs in parallel.
+        let env = { rx.lock().unwrap().recv() };
+        let Ok(env) = env else { break };
         match env {
             Envelope::Shutdown => break,
             Envelope::Req(Request::Run { op, cfg }, reply) => {
                 let key = format!("{}|{}", op.label(), cfg.label());
-                let cache_hit = cache.contains_key(&key);
-                let compiled = if cache_hit {
-                    Ok(cache[&key].clone())
-                } else {
-                    compile_operator(&op, &cfg, &topo)
+                let cached = cache.read().unwrap().get(&key).cloned();
+                let cache_hit = cached.is_some();
+                let compiled = match cached {
+                    Some(c) => Ok(c),
+                    None => compile_operator(&op, &cfg, topo),
                 };
                 let resp = compiled.and_then(|(plan, params)| {
                     if !cache_hit {
-                        cache.insert(key.clone(), (plan.clone(), params));
+                        // first writer wins; racing workers agree anyway
+                        // (compilation is deterministic)
+                        cache
+                            .write()
+                            .unwrap()
+                            .entry(key.clone())
+                            .or_insert_with(|| (plan.clone(), params));
                     }
-                    let r = simulate(&plan, &topo, params)?;
+                    let r = simulate(&plan, topo, params)?;
                     Ok(Response {
                         label: key.clone(),
                         makespan_us: r.makespan_us,
@@ -181,5 +242,36 @@ mod tests {
         let times: Vec<f64> =
             rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().makespan_us).collect();
         assert!(times.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn pool_answers_from_multiple_workers() {
+        let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), 4);
+        assert_eq!(coord.workers(), 4);
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let rxs: Vec<_> = (0..8)
+            .map(|_| coord.submit(Request::Run { op, cfg: TuneConfig::default() }).unwrap())
+            .collect();
+        let times: Vec<f64> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().makespan_us).collect();
+        assert!(times.windows(2).all(|w| w[0] == w[1]), "pool must stay deterministic");
+        // warm cache: a fresh request is a hit no matter which worker serves it
+        let r = coord.run(op, TuneConfig::default()).unwrap();
+        assert!(r.cache_hit);
+    }
+
+    #[test]
+    fn clients_submit_from_other_threads() {
+        let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), 2);
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let client = coord.client();
+                s.spawn(move || {
+                    let r = client.run(op, TuneConfig::default()).unwrap();
+                    assert!(r.tflops > 0.0);
+                });
+            }
+        });
     }
 }

@@ -4,31 +4,65 @@
 //! determine which regions are valid when. Region copies use row-major
 //! linear offsets from [`Region::linear_offsets`] — fine at validation
 //! scale (tensors are a few thousand elements).
+//!
+//! The store is sharded per `(rank, tensor)` behind interior mutability so
+//! the parallel executor's rank threads can read/write/transfer without
+//! serializing the world: every buffer sits in its own `RwLock` (readers —
+//! kernel-call inputs — never block each other), mutating operations take
+//! `&self`, and a cross-rank transfer holds at most one buffer lock at a
+//! time (read the source region out, release, then lock the destination),
+//! so writers never hold-and-wait and the store itself cannot deadlock.
+//! Zero-copy kernel input reads go through [`BufferStore::read_guard`].
 
 use std::collections::HashMap;
+use std::sync::{RwLock, RwLockReadGuard};
 
 use crate::chunk::Region;
 use crate::error::{Error, Result};
 use crate::topo::Rank;
 
-/// Per-rank named tensor buffers.
-#[derive(Debug, Clone)]
+/// Per-rank named tensor buffers (sharded, `Send + Sync`).
+#[derive(Debug)]
 pub struct BufferStore {
     world: usize,
     shapes: HashMap<String, Vec<usize>>,
-    data: Vec<HashMap<String, Vec<f32>>>,
+    data: Vec<HashMap<String, RwLock<Vec<f32>>>>,
+}
+
+impl Clone for BufferStore {
+    fn clone(&self) -> Self {
+        BufferStore {
+            world: self.world,
+            shapes: self.shapes.clone(),
+            data: self
+                .data
+                .iter()
+                .map(|rank| {
+                    rank.iter()
+                        .map(|(k, v)| (k.clone(), RwLock::new(v.read().unwrap().clone())))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
 }
 
 impl BufferStore {
     pub fn new(world: usize) -> Self {
-        BufferStore { world, shapes: HashMap::new(), data: vec![HashMap::new(); world] }
+        let mut data = Vec::with_capacity(world);
+        for _ in 0..world {
+            data.push(HashMap::new());
+        }
+        BufferStore { world, shapes: HashMap::new(), data }
     }
 
     pub fn world(&self) -> usize {
         self.world
     }
 
-    /// Declare a tensor on every rank (zero-initialized).
+    /// Declare a tensor on every rank (zero-initialized). Declaration is a
+    /// setup-phase operation and keeps `&mut self`; everything else takes
+    /// `&self`.
     pub fn declare(&mut self, name: &str, shape: &[usize]) -> Result<()> {
         if self.shapes.contains_key(name) {
             return Err(Error::Exec(format!("buffer `{name}` already declared")));
@@ -39,7 +73,7 @@ impl BufferStore {
         }
         self.shapes.insert(name.to_string(), shape.to_vec());
         for r in 0..self.world {
-            self.data[r].insert(name.to_string(), vec![0.0; n]);
+            self.data[r].insert(name.to_string(), RwLock::new(vec![0.0; n]));
         }
         Ok(())
     }
@@ -51,23 +85,44 @@ impl BufferStore {
             .ok_or_else(|| Error::Exec(format!("unknown buffer `{name}`")))
     }
 
-    fn check(&self, rank: Rank, name: &str) -> Result<()> {
+    /// All declared tensor names (sorted, for deterministic iteration).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.shapes.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn buf(&self, rank: Rank, name: &str) -> Result<&RwLock<Vec<f32>>> {
         if rank >= self.world {
             return Err(Error::Exec(format!("rank {rank} out of world {}", self.world)));
         }
-        self.shape(name).map(|_| ())
+        self.data[rank]
+            .get(name)
+            .ok_or_else(|| Error::Exec(format!("unknown buffer `{name}`")))
     }
 
-    /// Whole-buffer read.
-    pub fn get(&self, rank: Rank, name: &str) -> Result<&[f32]> {
-        self.check(rank, name)?;
-        Ok(self.data[rank][name].as_slice())
+    /// Whole-buffer read (snapshot copy). For the engine hot path prefer
+    /// [`BufferStore::read_guard`], which copies nothing.
+    pub fn get(&self, rank: Rank, name: &str) -> Result<Vec<f32>> {
+        Ok(self.buf(rank, name)?.read().unwrap().clone())
+    }
+
+    /// Zero-copy whole-buffer read: a shared guard. Hold it only for the
+    /// duration of a kernel call, and drop it before writing the same
+    /// tensor from the same thread (re-entering the `RwLock` for write
+    /// while holding its read guard deadlocks).
+    pub fn read_guard(
+        &self,
+        rank: Rank,
+        name: &str,
+    ) -> Result<RwLockReadGuard<'_, Vec<f32>>> {
+        Ok(self.buf(rank, name)?.read().unwrap())
     }
 
     /// Whole-buffer write (length-checked).
-    pub fn set(&mut self, rank: Rank, name: &str, values: &[f32]) -> Result<()> {
-        self.check(rank, name)?;
-        let buf = self.data[rank].get_mut(name).unwrap();
+    pub fn set(&self, rank: Rank, name: &str, values: &[f32]) -> Result<()> {
+        let buf = self.buf(rank, name)?;
+        let mut buf = buf.write().unwrap();
         if buf.len() != values.len() {
             return Err(Error::Exec(format!(
                 "set `{name}`: {} values for buffer of {}",
@@ -81,29 +136,29 @@ impl BufferStore {
 
     /// Read a region (row-major element order within the region).
     pub fn read_region(&self, rank: Rank, name: &str, region: &Region) -> Result<Vec<f32>> {
-        self.check(rank, name)?;
+        let buf = self.buf(rank, name)?;
         let shape = &self.shapes[name];
         if !region.fits(shape) {
             return Err(Error::Exec(format!(
                 "read `{name}`: region {region:?} does not fit {shape:?}"
             )));
         }
-        let buf = &self.data[rank][name];
+        let buf = buf.read().unwrap();
         Ok(region.linear_offsets(shape).into_iter().map(|o| buf[o]).collect())
     }
 
     /// Write (or reduce-add into) a region.
     pub fn write_region(
-        &mut self,
+        &self,
         rank: Rank,
         name: &str,
         region: &Region,
         values: &[f32],
         reduce: bool,
     ) -> Result<()> {
-        self.check(rank, name)?;
-        let shape = self.shapes[name].clone();
-        if !region.fits(&shape) {
+        let buf = self.buf(rank, name)?;
+        let shape = &self.shapes[name];
+        if !region.fits(shape) {
             return Err(Error::Exec(format!(
                 "write `{name}`: region {region:?} does not fit {shape:?}"
             )));
@@ -115,8 +170,8 @@ impl BufferStore {
                 region.elems()
             )));
         }
-        let buf = self.data[rank].get_mut(name).unwrap();
-        for (o, &v) in region.linear_offsets(&shape).into_iter().zip(values) {
+        let mut buf = buf.write().unwrap();
+        for (o, &v) in region.linear_offsets(shape).into_iter().zip(values) {
             if reduce {
                 buf[o] += v;
             } else {
@@ -127,8 +182,11 @@ impl BufferStore {
     }
 
     /// Copy a region between ranks/tensors (the chunk-transfer primitive).
+    ///
+    /// Holds one buffer lock at a time: the source region is snapshotted,
+    /// then written under the destination lock.
     pub fn transfer(
-        &mut self,
+        &self,
         src_rank: Rank,
         src_name: &str,
         src_region: &Region,
@@ -176,11 +234,12 @@ mod tests {
 
     #[test]
     fn region_read_write() {
-        let mut s = store();
+        let s = store();
         let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
         s.set(0, "x", &vals).unwrap();
         let r = Region::rows(1, 2, 4);
-        assert_eq!(s.read_region(0, "x", &r).unwrap(), vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        let want = vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0];
+        assert_eq!(s.read_region(0, "x", &r).unwrap(), want);
         s.write_region(0, "x", &Region::rows(0, 1, 4), &[9.0; 4], false).unwrap();
         assert_eq!(&s.get(0, "x").unwrap()[..4], &[9.0; 4]);
         // reduce accumulates
@@ -195,7 +254,7 @@ mod tests {
 
     #[test]
     fn column_region_strided() {
-        let mut s = store();
+        let s = store();
         let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
         s.set(0, "x", &vals).unwrap();
         let col = Region::cols(1, 1, 4);
@@ -204,7 +263,7 @@ mod tests {
 
     #[test]
     fn transfer_between_ranks() {
-        let mut s = store();
+        let s = store();
         s.set(0, "x", &[2.0; 16]).unwrap();
         let r = Region::rows(0, 2, 4);
         let bytes = s.transfer(0, "x", &r, 1, "x", &r, false).unwrap();
@@ -218,5 +277,71 @@ mod tests {
         assert!(s
             .transfer(0, "x", &Region::rows(0, 1, 4), 1, "x", &r, false)
             .is_err());
+    }
+
+    #[test]
+    fn self_transfer_within_rank() {
+        let s = store();
+        let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        s.set(0, "x", &vals).unwrap();
+        // copy rows 0..2 onto rows 2..4 of the SAME buffer: the one-lock-at-
+        // a-time discipline must not self-deadlock
+        s.transfer(0, "x", &Region::rows(0, 2, 4), 0, "x", &Region::rows(2, 2, 4), false)
+            .unwrap();
+        assert_eq!(&s.get(0, "x").unwrap()[8..12], &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn concurrent_disjoint_writes() {
+        let mut s = BufferStore::new(4);
+        s.declare("x", &[8, 8]).unwrap();
+        std::thread::scope(|scope| {
+            for r in 0..4usize {
+                let s = &s;
+                scope.spawn(move || {
+                    for i in 0..8 {
+                        s.write_region(
+                            r,
+                            "x",
+                            &Region::rows(i, 1, 8),
+                            &[(r * 10 + i) as f32; 8],
+                            false,
+                        )
+                        .unwrap();
+                    }
+                });
+            }
+        });
+        for r in 0..4 {
+            let v = s.get(r, "x").unwrap();
+            for i in 0..8 {
+                assert_eq!(v[i * 8], (r * 10 + i) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn read_guard_is_zero_copy_and_shared() {
+        let s = store();
+        s.set(0, "x", &[6.0; 16]).unwrap();
+        let g1 = s.read_guard(0, "x").unwrap();
+        let g2 = s.read_guard(0, "x").unwrap(); // readers don't block readers
+        assert_eq!(g1[0], 6.0);
+        assert_eq!(&g2[..4], &[6.0; 4]);
+        drop(g1);
+        drop(g2);
+        // write proceeds after guards drop
+        s.set(0, "x", &[1.0; 16]).unwrap();
+        assert!(s.read_guard(0, "nope").is_err());
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let s = store();
+        s.set(0, "x", &[3.0; 16]).unwrap();
+        let c = s.clone();
+        s.set(0, "x", &[7.0; 16]).unwrap();
+        assert_eq!(c.get(0, "x").unwrap()[0], 3.0);
+        assert_eq!(s.get(0, "x").unwrap()[0], 7.0);
     }
 }

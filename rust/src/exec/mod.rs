@@ -3,17 +3,102 @@
 //! Runs the *same* [`crate::codegen::ExecutablePlan`]s the simulator scores,
 //! but with real data: every rank holds buffers, chunk transfers copy (or
 //! reduce into) buffer regions, signals gate execution, and compute segments
-//! call the AOT-compiled Pallas/JAX artifacts through PJRT.
+//! call the AOT-compiled Pallas/JAX artifacts through the runtime.
 //!
-//! The engine is a deterministic single-threaded cooperative interpreter:
-//! ranks are stepped round-robin, transfers complete as soon as their
-//! dependencies allow. This makes failures reproducible and lets property
-//! tests assert that *any* valid schedule/backend/split produces identical
-//! numerics (DESIGN.md §6).
+//! Two engines interpret every plan (selected by [`ExecMode`]):
+//!
+//! * **Parallel** — the production path: one worker thread per rank over a
+//!   shared condvar-backed [`signals::SignalBoard`] and a sharded,
+//!   interior-mutable [`buffers::BufferStore`], so chunks genuinely land
+//!   while other ranks compute. Bounded waits turn cyclic schedules into
+//!   errors instead of hangs.
+//! * **Sequential** — the deterministic single-threaded cooperative
+//!   interpreter kept as the *reference semantics*: ranks step round-robin,
+//!   failures are exactly reproducible.
+//!
+//! [`plan_prep::prepare`] grafts a canonical ordering over all accumulating
+//! writers into each plan, so the two modes produce bit-identical f32
+//! results — property tests assert this for every schedule template and
+//! world size (DESIGN.md §6).
 
 pub mod buffers;
 pub mod engine;
+pub mod parallel;
+pub mod plan_prep;
+pub mod signals;
 pub mod verify;
 
+use std::time::Duration;
+
 pub use buffers::BufferStore;
-pub use engine::{run, ExecStats};
+pub use engine::{run, run_prepared, run_with, ExecStats};
+pub use plan_prep::{prepare, PreparedPlan};
+pub use signals::SignalBoard;
+
+/// Which engine interprets the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Deterministic single-threaded round-robin reference interpreter.
+    Sequential,
+    /// One worker thread per rank; signal-driven, bounded-wait.
+    Parallel,
+}
+
+impl std::str::FromStr for ExecMode {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "sequential" | "seq" => Ok(ExecMode::Sequential),
+            "parallel" | "par" => Ok(ExecMode::Parallel),
+            other => Err(crate::error::Error::Exec(format!(
+                "unknown exec mode `{other}` (expected `sequential` or `parallel`)"
+            ))),
+        }
+    }
+}
+
+/// Engine selection + bounded-wait budget for the parallel engine.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    pub mode: ExecMode,
+    /// Parallel engine only: a blocking wait errors out as a deadlock after
+    /// this long with *no* execution progress anywhere — the bound resets
+    /// on every signal set, and a rank inside a kernel call counts as
+    /// progress however long the call runs. The sequential engine detects
+    /// stalls exactly and ignores this.
+    pub wait_timeout: Duration,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { mode: ExecMode::Sequential, wait_timeout: Duration::from_secs(10) }
+    }
+}
+
+impl ExecOptions {
+    pub fn sequential() -> Self {
+        Self::default()
+    }
+
+    pub fn parallel() -> Self {
+        ExecOptions { mode: ExecMode::Parallel, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!("sequential".parse::<ExecMode>().unwrap(), ExecMode::Sequential);
+        assert_eq!("par".parse::<ExecMode>().unwrap(), ExecMode::Parallel);
+        assert!("turbo".parse::<ExecMode>().is_err());
+    }
+
+    #[test]
+    fn default_options_are_sequential_reference() {
+        assert_eq!(ExecOptions::default().mode, ExecMode::Sequential);
+        assert_eq!(ExecOptions::parallel().mode, ExecMode::Parallel);
+    }
+}

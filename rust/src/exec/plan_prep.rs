@@ -1,0 +1,538 @@
+//! Plan preparation shared by both execution engines.
+//!
+//! Two jobs, done once per `run` instead of per operation:
+//!
+//! 1. **Name interning** — the engines address [`BufferStore`] tensors by
+//!    name; resolving a [`TensorId`] used to clone a `String` per transfer
+//!    on the hot path. [`PreparedPlan`] precomputes one `TensorId -> name`
+//!    table and threads `&str` through every buffer call.
+//!
+//! 2. **Deterministic reduction order** — f32 addition is not associative,
+//!    so the *apply order* of accumulating writers (reduce transfers and
+//!    `accumulate` compute calls) into overlapping regions decides the
+//!    output bits. The sequential interpreter orders them by its
+//!    round-robin walk; free-running rank threads would order them by the
+//!    scheduler's mood. `prepare` therefore augments the plan with a
+//!    canonical order — for each destination `(rank, tensor)`: the
+//!    destination rank's own accumulating compute calls first (they are
+//!    program-ordered on one thread already), then intersecting reduce
+//!    transfers along one total order (topological over the orderings the
+//!    plan itself already expresses, ascending signal id as tiebreak) —
+//!    expressed through the plan's
+//!    existing dependency machinery: extra `dep_signals` entries plus
+//!    *internal* signals set when a compute call completes
+//!    ([`PreparedPlan::call_signals`]). Both engines interpret the same
+//!    augmented plan, which is what makes `ExecMode::Parallel` and
+//!    `ExecMode::Sequential` produce bit-identical f32 results
+//!    (DESIGN.md §6).
+//!
+//! Plain (non-reduce) writes racing accumulating writers are *not*
+//! reordered here: the schedule templates already order them through real
+//! dependencies (e.g. the AllReduce broadcast phase depends on every
+//! reduce landing). A plan that races plain writes is nondeterministic by
+//! construction and will be caught by the cross-mode verifier.
+//!
+//! Note: `AttnStep` state tensors (acc/m/l) are rank-private in every
+//! template — they are never transfer destinations — so they need no
+//! ordering and are intentionally not treated as accumulating writers.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use crate::chunk::{Region, TensorId, TensorTable};
+use crate::codegen::{CallSpec, ExecutablePlan, PlanOp, SignalId};
+use crate::error::{Error, Result};
+
+/// Location of one compute call: (rank, op index, call index).
+pub type CallLoc = (usize, usize, usize);
+
+/// A plan plus everything the engines derive from it up front.
+#[derive(Debug, Clone)]
+pub struct PreparedPlan {
+    /// The (possibly augmented) plan both engines interpret.
+    pub plan: ExecutablePlan,
+    /// Signal count of the original plan; ids `>= base_signals` are
+    /// engine-internal ordering signals invented by [`prepare`].
+    pub base_signals: usize,
+    /// Internal signal to set when the call at a [`CallLoc`] completes.
+    pub call_signals: HashMap<CallLoc, SignalId>,
+    names: Vec<String>,
+}
+
+impl PreparedPlan {
+    /// Tensor name for a [`TensorId`] (no allocation on the hot path).
+    pub fn name(&self, id: TensorId) -> Result<&str> {
+        self.names
+            .get(id.0 as usize)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Exec(format!("plan references unknown tensor id {id:?}")))
+    }
+}
+
+/// One accumulating writer into a destination tensor.
+#[derive(Debug)]
+enum Writer {
+    /// Reduce transfer: (plan location, destination region, its signal).
+    Transfer { rank: usize, op_index: usize, region: Region, signal: SignalId },
+    /// `accumulate` compute call on the destination rank, in program order.
+    Call { loc: CallLoc, region: Region },
+}
+
+/// Destination region of an accumulating compute call, if the call
+/// accumulates and its output tensor is known to the table. 2-D outputs
+/// only — which covers every accumulate-capable [`CallSpec`].
+fn accumulate_region(call: &CallSpec, table: &TensorTable) -> Option<(TensorId, Region)> {
+    let (out, rows) = match call {
+        CallSpec::GemmRows { out, rows, accumulate: true, .. } => (out, Some(*rows)),
+        CallSpec::FfnShard { out, accumulate: true, .. } => (out, None),
+        CallSpec::AddRows { out, rows, .. } => (out, Some(*rows)),
+        _ => return None,
+    };
+    let id = table.lookup(out)?;
+    let shape = &table.get(id).ok()?.shape;
+    if shape.len() != 2 {
+        return None;
+    }
+    let region = match rows {
+        Some((r0, r1)) => Region::rows(r0, r1 - r0, shape[1]),
+        None => Region::full(shape),
+    };
+    Some((id, region))
+}
+
+/// True if the plan itself already orders `signal`'s transfer before the
+/// op at `(rank, upto_op)`: either rank `rank` explicitly `Wait`s on
+/// `signal` at/before that op, or the op is an `Issue` whose own
+/// `dep_signals` (the primary ordering mechanism between transfers)
+/// include it. Grafting the reverse edge there would manufacture a
+/// dependency cycle, so the graft is skipped — the plan's own edge already
+/// makes the apply order deterministic in both engines. (Transitive
+/// orderings through third ops are not traced; a plan exotic enough to
+/// hit that surfaces as a bounded-wait deadlock `Error`, never a hang.)
+fn ordered_before(plan: &ExecutablePlan, rank: usize, upto_op: usize, signal: SignalId) -> bool {
+    let ops = &plan.per_rank[rank].ops;
+    let waits = ops
+        .iter()
+        .take(upto_op + 1)
+        .any(|op| matches!(op, PlanOp::Wait(s) if *s == signal));
+    if waits {
+        return true;
+    }
+    matches!(&ops[upto_op], PlanOp::Issue(d) if d.dep_signals.contains(&signal))
+}
+
+/// Build the [`PreparedPlan`] for a validated plan.
+pub fn prepare(plan: &ExecutablePlan, table: &TensorTable) -> Result<PreparedPlan> {
+    let names: Vec<String> = table.iter().map(|(_, decl)| decl.name.clone()).collect();
+    let mut plan = plan.clone();
+    let base_signals = plan.num_signals;
+
+    // Accumulating writers grouped by destination (rank, tensor). BTreeMap
+    // keeps internal-signal numbering deterministic across calls.
+    let mut groups: BTreeMap<(usize, TensorId), Vec<Writer>> = BTreeMap::new();
+    for (rank, prog) in plan.per_rank.iter().enumerate() {
+        for (op_index, op) in prog.ops.iter().enumerate() {
+            match op {
+                PlanOp::Issue(d) if d.reduce => {
+                    groups.entry((d.dst_rank, d.dst_chunk.tensor)).or_default().push(
+                        Writer::Transfer {
+                            rank,
+                            op_index,
+                            region: d.dst_chunk.region.clone(),
+                            signal: d.signal,
+                        },
+                    );
+                }
+                PlanOp::Compute(seg) => {
+                    for (ci, call) in seg.calls.iter().enumerate() {
+                        if let Some((id, region)) = accumulate_region(call, table) {
+                            groups
+                                .entry((rank, id))
+                                .or_default()
+                                .push(Writer::Call { loc: (rank, op_index, ci), region });
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Extra deps to graft onto Issue ops, keyed by plan location.
+    let mut extra_deps: HashMap<(usize, usize), Vec<SignalId>> = HashMap::new();
+    let mut call_signals: HashMap<CallLoc, SignalId> = HashMap::new();
+
+    for writers in groups.values() {
+        let mut transfers: Vec<(&Writer, usize, usize, &Region, SignalId)> = writers
+            .iter()
+            .filter_map(|w| match w {
+                Writer::Transfer { rank, op_index, region, signal } => {
+                    Some((w, *rank, *op_index, region, *signal))
+                }
+                Writer::Call { .. } => None,
+            })
+            .collect();
+        if transfers.is_empty() {
+            continue; // rank-local accumulation order is program order already
+        }
+        transfers.sort_by_key(|t| t.4);
+
+        // (a) chain intersecting reduce transfers along ONE canonical total
+        // order: topological over the ordering edges the plan itself
+        // already expresses (Wait / dep_signals), with ascending-signal
+        // tiebreak. Grafting only consistently with a single total order
+        // guarantees the grafted edges can never compose with a detected
+        // plan edge into a manufactured cycle.
+        let n = transfers.len();
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j
+                    && ordered_before(&plan, transfers[j].1, transfers[j].2, transfers[i].4)
+                {
+                    preds[j].push(i); // the plan orders transfer i before j
+                }
+            }
+        }
+        let mut placed = vec![false; n];
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        while order.len() < n {
+            let next = (0..n)
+                .filter(|&k| !placed[k] && preds[k].iter().all(|&p| placed[p]))
+                .min_by_key(|&k| transfers[k].4);
+            // a cycle among the plan's OWN edges: leave the group alone —
+            // the plan deadlocks with a bounded-wait Error regardless
+            let Some(k) = next else { break };
+            placed[k] = true;
+            order.push(k);
+        }
+        if order.len() == n {
+            for bi in 1..n {
+                for ai in 0..bi {
+                    let a = order[ai];
+                    let b = order[bi];
+                    if transfers[a].3.intersects(transfers[b].3)
+                        && !ordered_before(
+                            &plan,
+                            transfers[b].1,
+                            transfers[b].2,
+                            transfers[a].4,
+                        )
+                    {
+                        let (_, rank, op_index, _, _) = transfers[b];
+                        extra_deps.entry((rank, op_index)).or_default().push(transfers[a].4);
+                    }
+                }
+            }
+        }
+
+        // (b) every intersecting destination-rank accumulate call that the
+        // plan does not already order AFTER the transfer must precede it;
+        // it suffices to depend on the LAST such call in program order
+        // (same thread runs them in order, and any call the plan orders
+        // after the transfer — reduce-then-combine via an explicit Wait —
+        // is excluded so the graft cannot invert the plan's own edge into
+        // a cycle).
+        for &(_, rank, op_index, region, signal) in &transfers {
+            let last_unordered_call = writers
+                .iter()
+                .filter_map(|w| match w {
+                    Writer::Call { loc, region: cr } if cr.intersects(region) => Some(*loc),
+                    _ => None,
+                })
+                .filter(|loc| !ordered_before(&plan, loc.0, loc.1, signal))
+                .max_by_key(|&(_, op, ci)| (op, ci));
+            if let Some(loc) = last_unordered_call {
+                let sig = *call_signals.entry(loc).or_insert_with(|| {
+                    let s = plan.num_signals;
+                    plan.num_signals += 1;
+                    s
+                });
+                extra_deps.entry((rank, op_index)).or_default().push(sig);
+            }
+        }
+    }
+
+    // Graft the extra deps into the plan clone (deduplicated).
+    for ((rank, op_index), deps) in extra_deps {
+        if let PlanOp::Issue(d) = &mut plan.per_rank[rank].ops[op_index] {
+            for s in deps {
+                if !d.dep_signals.contains(&s) {
+                    d.dep_signals.push(s);
+                }
+            }
+        }
+    }
+
+    Ok(PreparedPlan { plan, base_signals, call_signals, names })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::DType;
+    use crate::codegen::{ComputeSeg, RankProgram, TransferDesc};
+
+    fn table() -> TensorTable {
+        let mut t = TensorTable::new();
+        t.declare("y", &[8, 4], DType::F32).unwrap();
+        t
+    }
+
+    fn reduce_xfer(
+        t: &TensorTable,
+        signal: usize,
+        src: usize,
+        dst: usize,
+        r0: usize,
+    ) -> TransferDesc {
+        let id = t.lookup("y").unwrap();
+        crate::testutil::transfer_desc(id, Region::rows(r0, 2, 4), signal, src, dst, vec![], true)
+    }
+
+    fn accumulate_call(rows: (usize, usize)) -> CallSpec {
+        CallSpec::GemmRows {
+            artifact: "gemm_2x4x4".into(),
+            a: "y".into(),
+            b: "y".into(),
+            out: "y".into(),
+            rows,
+            accumulate: true,
+        }
+    }
+
+    #[test]
+    fn names_resolve_without_cloning_per_call() {
+        let t = table();
+        let plan = ExecutablePlan {
+            world: 1,
+            per_rank: vec![RankProgram::default()],
+            num_signals: 0,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        assert_eq!(prep.name(t.lookup("y").unwrap()).unwrap(), "y");
+        assert!(prep.name(crate::chunk::TensorId(9)).is_err());
+    }
+
+    #[test]
+    fn intersecting_reduces_are_chained_by_signal_order() {
+        let t = table();
+        // ranks 1 and 2 both reduce into rank 0's rows 0..2 of y
+        let plan = ExecutablePlan {
+            world: 3,
+            per_rank: vec![
+                RankProgram::default(),
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 1, 2, 0, 0))] },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let PlanOp::Issue(d1) = &prep.plan.per_rank[2].ops[0] else { panic!() };
+        assert_eq!(d1.dep_signals, vec![0], "higher signal depends on lower");
+        let PlanOp::Issue(d0) = &prep.plan.per_rank[1].ops[0] else { panic!() };
+        assert!(d0.dep_signals.is_empty());
+        assert_eq!(prep.plan.num_signals, 2); // no compute writers => no internal signals
+    }
+
+    #[test]
+    fn disjoint_reduces_stay_unordered() {
+        let t = table();
+        let plan = ExecutablePlan {
+            world: 3,
+            per_rank: vec![
+                RankProgram::default(),
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 1, 2, 0, 4))] },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let PlanOp::Issue(d1) = &prep.plan.per_rank[2].ops[0] else { panic!() };
+        assert!(d1.dep_signals.is_empty(), "disjoint regions need no ordering");
+    }
+
+    #[test]
+    fn local_accumulate_precedes_incoming_reduce() {
+        let t = table();
+        // rank 0 accumulates into y rows 0..2 itself; rank 1 reduce-pushes
+        // the same region: the transfer must gain a dep on the internal
+        // signal of rank 0's call.
+        let seg = ComputeSeg {
+            tiles: vec![0],
+            flops: vec![1.0],
+            calls: vec![accumulate_call((0, 2))],
+            quantized: false,
+        };
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Compute(seg)] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        assert_eq!(prep.base_signals, 1);
+        assert_eq!(prep.plan.num_signals, 2, "one internal signal allocated");
+        assert_eq!(prep.call_signals.get(&(0, 0, 0)), Some(&1));
+        let PlanOp::Issue(d) = &prep.plan.per_rank[1].ops[0] else { panic!() };
+        assert_eq!(d.dep_signals, vec![1]);
+    }
+
+    #[test]
+    fn dep_ordered_reduces_are_not_reversed() {
+        // the plan orders the SAME-region reduces against ascending signal
+        // order via dep_signals (t0 waits for t1): the ascending chain
+        // would be a manufactured cycle and must be skipped
+        let t = table();
+        let mut t0 = reduce_xfer(&t, 0, 1, 0, 0);
+        t0.dep_signals = vec![1];
+        let plan = ExecutablePlan {
+            world: 3,
+            per_rank: vec![
+                RankProgram::default(),
+                RankProgram { ops: vec![PlanOp::Issue(t0)] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 1, 2, 0, 0))] },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let PlanOp::Issue(d1) = &prep.plan.per_rank[2].ops[0] else { panic!() };
+        assert!(d1.dep_signals.is_empty(), "no reverse edge grafted: {:?}", d1.dep_signals);
+        let PlanOp::Issue(d0) = &prep.plan.per_rank[1].ops[0] else { panic!() };
+        assert_eq!(d0.dep_signals, vec![1], "plan's own ordering preserved");
+    }
+
+    #[test]
+    fn grafts_never_compose_into_a_cycle_with_plan_edges() {
+        // three mutually intersecting reduces where the plan orders t2
+        // BEFORE t0 via a Wait: naive ascending-signal chaining would
+        // graft 0->1 and 1->2, composing with the plan's 2->0 into a
+        // cycle. The topological graft must instead produce an acyclic
+        // total order (t1, t2, t0).
+        let t = table();
+        let plan = ExecutablePlan {
+            world: 4,
+            per_rank: vec![
+                RankProgram::default(),
+                RankProgram {
+                    ops: vec![PlanOp::Wait(2), PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))],
+                },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 1, 2, 0, 0))] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 2, 3, 0, 0))] },
+            ],
+            num_signals: 3,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let dep_of = |rank: usize, op: usize| -> Vec<usize> {
+            let PlanOp::Issue(d) = &prep.plan.per_rank[rank].ops[op] else { panic!() };
+            d.dep_signals.clone()
+        };
+        assert!(dep_of(2, 0).is_empty(), "t1 runs first");
+        assert_eq!(dep_of(3, 0), vec![1], "t2 after t1");
+        assert_eq!(dep_of(1, 1), vec![1], "t0 after t1 (plus its plan Wait(2))");
+        // acyclic by construction: t1 -> t2 -> (Wait) t0
+    }
+
+    #[test]
+    fn reduce_then_combine_plans_are_not_inverted() {
+        // rank 0 explicitly WAITS for the incoming reduce before its own
+        // accumulate (reduce-then-combine): the plan already orders the
+        // writers, and grafting call->transfer here would be a cycle.
+        let t = table();
+        let seg = ComputeSeg {
+            tiles: vec![0],
+            flops: vec![1.0],
+            calls: vec![accumulate_call((0, 2))],
+            quantized: false,
+        };
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Wait(0), PlanOp::Compute(seg)] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        assert!(prep.call_signals.is_empty(), "graft must be skipped");
+        let PlanOp::Issue(d) = &prep.plan.per_rank[1].ops[0] else { panic!() };
+        assert!(d.dep_signals.is_empty());
+        assert_eq!(prep.plan.num_signals, 1);
+    }
+
+    #[test]
+    fn earlier_call_still_ordered_when_last_call_follows_the_transfer() {
+        // combine-reduce-combine: A accumulates, the rank Waits for the
+        // incoming reduce, then B accumulates. B is plan-ordered after the
+        // transfer and must be excluded — but the transfer still has to
+        // wait for A, or A races it in parallel mode.
+        let t = table();
+        let seg = |_tag: usize| ComputeSeg {
+            tiles: vec![0],
+            flops: vec![1.0],
+            calls: vec![accumulate_call((0, 2))],
+            quantized: false,
+        };
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram {
+                    ops: vec![
+                        PlanOp::Compute(seg(0)),
+                        PlanOp::Wait(0),
+                        PlanOp::Compute(seg(1)),
+                    ],
+                },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        // A (op 0) gets the internal signal; B (op 2) does not
+        assert_eq!(prep.call_signals.get(&(0, 0, 0)), Some(&1));
+        assert!(!prep.call_signals.contains_key(&(0, 2, 0)));
+        let PlanOp::Issue(d) = &prep.plan.per_rank[1].ops[0] else { panic!() };
+        assert_eq!(d.dep_signals, vec![1], "transfer must wait for call A");
+    }
+
+    #[test]
+    fn non_accumulating_calls_are_ignored() {
+        let t = table();
+        let seg = ComputeSeg {
+            tiles: vec![0],
+            flops: vec![1.0],
+            calls: vec![CallSpec::GemmRows {
+                artifact: "g".into(),
+                a: "y".into(),
+                b: "y".into(),
+                out: "y".into(),
+                rows: (0, 2),
+                accumulate: false,
+            }],
+            quantized: false,
+        };
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Compute(seg)] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        assert!(prep.call_signals.is_empty());
+        let PlanOp::Issue(d) = &prep.plan.per_rank[1].ops[0] else { panic!() };
+        assert!(d.dep_signals.is_empty());
+    }
+}

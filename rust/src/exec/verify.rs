@@ -1,8 +1,20 @@
 //! Host-side numeric oracles and comparison helpers.
 //!
 //! Pure-Rust reference math (f64 accumulation) used to verify the
-//! distributed execution engine against single-device ground truth. These
-//! mirror `python/compile/kernels/ref.py`.
+//! distributed execution engines against single-device ground truth. These
+//! mirror `python/compile/kernels/ref.py`; the blockwise online-softmax
+//! step/finalize pair additionally mirrors the L1 Pallas kernels
+//! (`python/compile/kernels/attention.py`) so the host-reference runtime
+//! backend can stand in for the AOT artifacts on a bare checkout.
+//!
+//! Two comparison regimes:
+//! * [`assert_allclose`] — tolerance-based, for checking either engine
+//!   against an oracle (kernel vs reference math legitimately differ in
+//!   rounding);
+//! * [`assert_bit_identical`] — exact f32 bit equality, for cross-checking
+//!   `ExecMode::Parallel` against `ExecMode::Sequential`, which must agree
+//!   on every bit thanks to the deterministic reduction order
+//!   (`exec::plan_prep`).
 
 use crate::error::{Error, Result};
 
@@ -75,6 +87,95 @@ pub fn host_attention(
     out
 }
 
+/// One online-softmax (flash-attention) step folding a K/V chunk into the
+/// running `(acc, m, l)` state — the host twin of the Pallas `attn_step`
+/// kernel. Q/acc: `[sq, d]`, K/V chunk: `[sk, d]`, m/l: `[sq]`.
+/// Returns `(acc', m', l')`.
+#[allow(clippy::too_many_arguments)]
+pub fn host_attn_step(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    acc: &[f32],
+    m: &[f32],
+    l: &[f32],
+    sq: usize,
+    sk: usize,
+    d: usize,
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(q.len(), sq * d);
+    assert_eq!(k.len(), sk * d);
+    assert_eq!(v.len(), sk * d);
+    assert_eq!(acc.len(), sq * d);
+    assert_eq!(m.len(), sq);
+    assert_eq!(l.len(), sq);
+    let mut acc2 = vec![0.0f32; sq * d];
+    let mut m2 = vec![0.0f32; sq];
+    let mut l2 = vec![0.0f32; sq];
+    for i in 0..sq {
+        let mut s = vec![0.0f64; sk];
+        let mut m_cur = f64::NEG_INFINITY;
+        for (j, sj) in s.iter_mut().enumerate() {
+            let mut dot = 0.0f64;
+            for p in 0..d {
+                dot += q[i * d + p] as f64 * k[j * d + p] as f64;
+            }
+            *sj = dot * scale as f64;
+            m_cur = m_cur.max(*sj);
+        }
+        let m_new = (m[i] as f64).max(m_cur);
+        let alpha = (m[i] as f64 - m_new).exp();
+        let mut p_sum = 0.0f64;
+        for sj in s.iter_mut() {
+            *sj = (*sj - m_new).exp();
+            p_sum += *sj;
+        }
+        for pidx in 0..d {
+            let mut pv = 0.0f64;
+            for j in 0..sk {
+                pv += s[j] * v[j * d + pidx] as f64;
+            }
+            acc2[i * d + pidx] = (acc[i * d + pidx] as f64 * alpha + pv) as f32;
+        }
+        m2[i] = m_new as f32;
+        l2[i] = (l[i] as f64 * alpha + p_sum) as f32;
+    }
+    (acc2, m2, l2)
+}
+
+/// `o = acc / l` rowwise (the Pallas `attn_finalize` twin).
+pub fn host_attn_finalize(acc: &[f32], l: &[f32], sq: usize, d: usize) -> Vec<f32> {
+    assert_eq!(acc.len(), sq * d);
+    assert_eq!(l.len(), sq);
+    let mut o = vec![0.0f32; sq * d];
+    for i in 0..sq {
+        for p in 0..d {
+            o[i * d + p] = (acc[i * d + p] as f64 / l[i] as f64) as f32;
+        }
+    }
+    o
+}
+
+/// Fused FFN shard: `gelu(x @ w1 + b1) @ w2` (the `ffn_shard` twin).
+/// x: `[m, d]`, w1: `[d, f]`, b1: `[f]`, w2: `[f, d]`.
+pub fn host_ffn_shard(
+    x: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    m: usize,
+    d: usize,
+    f: usize,
+) -> Vec<f32> {
+    let mut h = host_gemm(x, w1, m, d, f);
+    for (i, hv) in h.iter_mut().enumerate() {
+        *hv += b1[i % f];
+    }
+    host_gelu(&mut h);
+    host_gemm(&h, w2, m, f, d)
+}
+
 /// Elementwise sum of several slices.
 pub fn host_sum(parts: &[&[f32]]) -> Vec<f32> {
     assert!(!parts.is_empty());
@@ -113,6 +214,30 @@ pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32, what: &s
             "{what}: mismatch at [{worst_i}]: got {} want {} (|d|={worst})",
             got[worst_i], want[worst_i]
         )));
+    }
+    Ok(())
+}
+
+/// Assert exact f32 bit equality (NaN-safe: compares bit patterns).
+///
+/// Used by the cross-mode verifier: `ExecMode::Parallel` must reproduce the
+/// sequential reference engine's output *bits*, not just its values.
+pub fn assert_bit_identical(got: &[f32], want: &[f32], what: &str) -> Result<()> {
+    if got.len() != want.len() {
+        return Err(Error::Exec(format!(
+            "{what}: length mismatch {} vs {}",
+            got.len(),
+            want.len()
+        )));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(Error::Exec(format!(
+                "{what}: bit mismatch at [{i}]: got {g} ({:#010x}) want {w} ({:#010x})",
+                g.to_bits(),
+                w.to_bits()
+            )));
+        }
     }
     Ok(())
 }
@@ -185,6 +310,78 @@ mod tests {
         assert_eq!(x[0], 0.0);
         assert!((x[1] - 100.0).abs() < 1e-3);
         assert!(x[2].abs() < 1e-3);
+    }
+
+    #[test]
+    fn attn_step_chain_matches_full_attention() {
+        // folding chunk-by-chunk with the online-softmax step and then
+        // finalizing must reproduce full softmax attention
+        let mut rng = Rng::new(77);
+        let (sq, d, chunks, sk) = (4usize, 8usize, 3usize, 4usize);
+        let q = rng.vec_f32(sq * d);
+        let k = rng.vec_f32(chunks * sk * d);
+        let v = rng.vec_f32(chunks * sk * d);
+        let scale = 0.5f32;
+        let mut acc = vec![0.0f32; sq * d];
+        let mut m = vec![-1e30f32; sq];
+        let mut l = vec![0.0f32; sq];
+        for c in 0..chunks {
+            let ks = &k[c * sk * d..(c + 1) * sk * d];
+            let vs = &v[c * sk * d..(c + 1) * sk * d];
+            let (a2, m2, l2) = host_attn_step(&q, ks, vs, &acc, &m, &l, sq, sk, d, scale);
+            acc = a2;
+            m = m2;
+            l = l2;
+        }
+        let o = host_attn_finalize(&acc, &l, sq, d);
+        let want = host_attention(&q, &k, &v, sq, chunks * sk, d, scale);
+        assert_allclose(&o, &want, 1e-5, 1e-5, "chain").unwrap();
+    }
+
+    #[test]
+    fn ffn_shard_matches_independent_scalar_reference() {
+        // independent naive loops (not host_gemm/host_gelu) so composition
+        // bugs in host_ffn_shard (bias layout, gelu placement, operand
+        // order) cannot cancel out
+        let mut rng = Rng::new(88);
+        let (m, d, f) = (3usize, 4usize, 5usize);
+        let x = rng.vec_f32(m * d);
+        let w1 = rng.vec_f32(d * f);
+        let b1 = rng.vec_f32(f);
+        let w2 = rng.vec_f32(f * d);
+        let got = host_ffn_shard(&x, &w1, &b1, &w2, m, d, f);
+        let c = (2.0f64 / std::f64::consts::PI).sqrt();
+        let mut want = vec![0.0f32; m * d];
+        for i in 0..m {
+            let mut g = vec![0.0f64; f];
+            for (j, gj) in g.iter_mut().enumerate() {
+                let mut acc = b1[j] as f64;
+                for p in 0..d {
+                    acc += x[i * d + p] as f64 * w1[p * f + j] as f64;
+                }
+                // tanh-GELU, written out once more from the formula
+                *gj = 0.5 * acc * (1.0 + (c * (acc + 0.044715 * acc * acc * acc)).tanh());
+            }
+            for q in 0..d {
+                let mut acc = 0.0f64;
+                for (j, gj) in g.iter().enumerate() {
+                    acc += gj * w2[j * d + q] as f64;
+                }
+                want[i * d + q] = acc as f32;
+            }
+        }
+        assert_allclose(&got, &want, 1e-5, 1e-5, "ffn vs scalar reference").unwrap();
+    }
+
+    #[test]
+    fn bit_identical_is_exact() {
+        assert!(assert_bit_identical(&[1.0, -0.0], &[1.0, -0.0], "ok").is_ok());
+        // -0.0 and 0.0 compare equal numerically but differ bitwise
+        let e = assert_bit_identical(&[0.0], &[-0.0], "signed zero").unwrap_err();
+        assert!(e.to_string().contains("bit mismatch"), "{e}");
+        assert!(assert_bit_identical(&[1.0], &[1.0, 2.0], "len").is_err());
+        // NaN equals itself bitwise
+        assert!(assert_bit_identical(&[f32::NAN], &[f32::NAN], "nan").is_ok());
     }
 
     #[test]

@@ -9,12 +9,19 @@
 //!   sync insertion, backend selection, tile-scheduler swizzling, codegen
 //!   to per-rank executable plans, a communication-centric autotuner, a
 //!   calibrated multi-GPU discrete-event simulator, and a real-numerics
-//!   multi-rank executor backed by PJRT.
+//!   multi-rank executor with two engines: a **parallel per-rank engine**
+//!   (one worker thread per rank over a shared signal board — the
+//!   production path) and the deterministic sequential interpreter kept as
+//!   the reference semantics, cross-checked bit-for-bit (`exec::`).
+//!   Request serving is a multi-worker [`coordinator`] pool sharing a plan
+//!   cache.
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
-//! Python never runs on the request path: the Rust binary loads the HLO
-//! artifacts through the `xla` crate's PJRT CPU client and is self-contained.
+//! Python never runs on the request path: the Rust binary executes kernels
+//! through [`runtime::Runtime`] — the PJRT CPU client over the AOT HLO
+//! artifacts when built with `--features xla`, or the dependency-free
+//! host-reference backend otherwise — and is self-contained either way.
 
 pub mod autotune;
 pub mod backend;
@@ -32,6 +39,8 @@ pub mod reports;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+#[doc(hidden)]
+pub mod testutil;
 pub mod topo;
 pub mod util;
 pub mod workload;

@@ -8,8 +8,9 @@
 //!                    [--split K] [--backend <name>] [--sms N] [--timeline]
 //! syncopate tune --op <kind> [--model <name>] [--world N] [--full]
 //! syncopate exec --case <ag-gemm|gemm-rs|gemm-ar|a2a-gemm|ring-attn> [--world N] [--split K]
+//!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
 //! syncopate plan --op <kind> [--world N] [--split K]
-//! syncopate serve-demo
+//! syncopate serve-demo [--workers N]
 //! ```
 
 use std::collections::HashMap;
@@ -17,11 +18,12 @@ use std::collections::HashMap;
 use syncopate::autotune::{self, Budget};
 use syncopate::backend::BackendKind;
 use syncopate::codegen::Realization;
-use syncopate::coordinator::execases::{self, run_and_verify};
+use syncopate::coordinator::execases::{self, run_and_verify_with};
 use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::service::{opkind_by_name, Coordinator};
 use syncopate::coordinator::TuneConfig;
 use syncopate::error::{Error, Result};
+use syncopate::exec::{ExecMode, ExecOptions};
 use syncopate::reports;
 use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
@@ -201,10 +203,22 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
             };
             let name = case.name.clone();
+            let mode: ExecMode = flags
+                .get("exec-mode")
+                .map(String::as_str)
+                .unwrap_or("parallel")
+                .parse()?;
+            // clamp: a zero bound would verdict "deadlock" on any wait
+            let timeout_ms = get_usize(&flags, "timeout-ms", 10_000)?.max(1) as u64;
+            let opts = ExecOptions {
+                mode,
+                wait_timeout: std::time::Duration::from_millis(timeout_ms),
+            };
             let rt = Runtime::open_default()?;
-            let stats = run_and_verify(case, &rt)?;
+            let backend = rt.backend_name();
+            let stats = run_and_verify_with(case, &rt, &opts)?;
             println!(
-                "{name}: VERIFIED ({} transfers, {} moved, {} kernel calls)",
+                "{name}: VERIFIED [{mode:?}/{backend}] ({} transfers, {} moved, {} kernel calls)",
                 stats.transfers,
                 syncopate::util::fmt_bytes(stats.bytes_moved as u64),
                 stats.compute_calls
@@ -233,8 +247,12 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         "serve-demo" => {
             let world = get_usize(&flags, "world", 8)?;
-            let coord = Coordinator::spawn(Topology::h100_node(world)?);
-            println!("coordinator up (world {world}); submitting demo batch...");
+            let workers = get_usize(&flags, "workers", 2)?;
+            let coord = Coordinator::spawn_pool(Topology::h100_node(world)?, workers);
+            println!(
+                "coordinator up (world {world}, {} workers); submitting demo batch...",
+                coord.workers()
+            );
             for m in &MODELS[..2] {
                 let op = OperatorInstance::gemm(
                     syncopate::workload::OpKind::AgGemm,

@@ -1,19 +1,31 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Artifact runtime: execute the L1/L2 compute kernels from Rust.
 //!
-//! This is the only place the Rust side touches XLA. Artifacts are produced
-//! once by `make artifacts` (python/compile/aot.py) and listed in
-//! `artifacts/manifest.tsv`; at startup we parse the manifest, and compile
-//! each HLO module lazily on first use (compiled executables are cached).
+//! Two interchangeable backends sit behind one `Runtime` type:
 //!
-//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
-//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! * **PJRT** (feature `xla`) — load the AOT artifacts (HLO text) produced
+//!   by `make artifacts` (python/compile/aot.py, listed in
+//!   `artifacts/manifest.tsv`) and execute them through the `xla` crate's
+//!   PJRT CPU client. Interchange is HLO *text*, not serialized protos:
+//!   jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! * **Host reference** (always available, default) — a pure-Rust
+//!   interpreter of the canonical kernel families
+//!   (`gemm_*`, `attn_step_*`, `attn_finalize_*`, `ffn_shard_*`, `add_*`)
+//!   backed by the `exec::verify` oracles, which mirror the Pallas kernels.
+//!   It needs no artifacts and no external dependencies, so a bare checkout
+//!   builds and tests the full execution stack.
+//!
+//! The runtime is `Send + Sync`: the parallel executor's rank threads share
+//! one instance (executable caching behind a `Mutex`, call accounting in an
+//! `AtomicU64`). Both backends are deterministic per call, which the
+//! cross-mode bit-identity verifier relies on.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
+use crate::exec::verify::{host_attn_finalize, host_attn_step, host_ffn_shard, host_gemm};
 
 /// Shape + dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -25,6 +37,10 @@ pub struct Spec {
 impl Spec {
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    fn f32(shape: &[usize]) -> Spec {
+        Spec { shape: shape.to_vec(), dtype: "float32".into() }
     }
 }
 
@@ -78,22 +94,100 @@ pub fn parse_manifest(text: &str) -> Result<Vec<Entry>> {
     Ok(out)
 }
 
-/// The PJRT-backed artifact runtime.
-///
-/// Not `Sync`: the exec engine is a single-threaded cooperative interpreter
-/// by design (deterministic; see `exec::`), so one runtime per process is
-/// enough. The PJRT CPU client itself multithreads the compute internally.
+/// Canonical real-numerics shapes: the crate's single Rust mirror of
+/// `python/compile/model.py` (execases re-exports from here; change the
+/// Python side and this module together).
+pub mod canonical {
+    pub const GEMM_K: usize = 128;
+    pub const GEMM_N: usize = 128;
+    pub const GEMM_TMS: [usize; 5] = [8, 16, 32, 64, 128];
+    pub const ATTN_SQ: usize = 64;
+    pub const ATTN_D: usize = 64;
+    pub const ATTN_SKS: [usize; 3] = [16, 32, 64];
+    pub const FFN_M: usize = 64;
+    pub const FFN_D: usize = 128;
+    pub const FFN_F: usize = 64;
+}
+
+/// The canonical entry set of `python/compile/model.py::entry_points`,
+/// synthesized without a manifest (one entry per AOT artifact).
+fn canonical_entries() -> Vec<Entry> {
+    use canonical::*;
+    let mut out = Vec::new();
+    let mut push = |name: String, inputs: Vec<Spec>, outputs: Vec<Spec>| {
+        let file = format!("{name}.hlo.txt");
+        out.push(Entry { name, file, inputs, outputs });
+    };
+    for tm in GEMM_TMS {
+        push(
+            format!("gemm_{tm}x{GEMM_K}x{GEMM_N}"),
+            vec![Spec::f32(&[tm, GEMM_K]), Spec::f32(&[GEMM_K, GEMM_N])],
+            vec![Spec::f32(&[tm, GEMM_N])],
+        );
+    }
+    for sk in ATTN_SKS {
+        push(
+            format!("attn_step_q{ATTN_SQ}d{ATTN_D}k{sk}"),
+            vec![
+                Spec::f32(&[ATTN_SQ, ATTN_D]),
+                Spec::f32(&[sk, ATTN_D]),
+                Spec::f32(&[sk, ATTN_D]),
+                Spec::f32(&[ATTN_SQ, ATTN_D]),
+                Spec::f32(&[ATTN_SQ]),
+                Spec::f32(&[ATTN_SQ]),
+            ],
+            vec![
+                Spec::f32(&[ATTN_SQ, ATTN_D]),
+                Spec::f32(&[ATTN_SQ]),
+                Spec::f32(&[ATTN_SQ]),
+            ],
+        );
+    }
+    push(
+        format!("attn_finalize_q{ATTN_SQ}d{ATTN_D}"),
+        vec![Spec::f32(&[ATTN_SQ, ATTN_D]), Spec::f32(&[ATTN_SQ])],
+        vec![Spec::f32(&[ATTN_SQ, ATTN_D])],
+    );
+    push(
+        format!("ffn_shard_{FFN_M}x{FFN_D}x{FFN_F}"),
+        vec![
+            Spec::f32(&[FFN_M, FFN_D]),
+            Spec::f32(&[FFN_D, FFN_F]),
+            Spec::f32(&[FFN_F]),
+            Spec::f32(&[FFN_F, FFN_D]),
+        ],
+        vec![Spec::f32(&[FFN_M, FFN_D])],
+    );
+    for (r, c) in [(ATTN_SQ, ATTN_D), (FFN_M, FFN_D), (GEMM_TMS[4], GEMM_N)] {
+        push(
+            format!("add_{r}x{c}"),
+            vec![Spec::f32(&[r, c]), Spec::f32(&[r, c])],
+            vec![Spec::f32(&[r, c])],
+        );
+    }
+    out
+}
+
+enum Backend {
+    /// Pure-Rust interpreter of the canonical kernel families.
+    HostRef,
+    #[cfg(feature = "xla")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+/// The artifact runtime (`Send + Sync`; share one per process).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
     entries: HashMap<String, Entry>,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Backend,
     /// Cumulative number of artifact executions (perf accounting).
-    calls: RefCell<u64>,
+    calls: AtomicU64,
 }
 
 impl Runtime {
-    /// Open the artifacts directory (expects `manifest.tsv`).
+    /// Open an artifacts directory (expects `manifest.tsv`). Executes via
+    /// PJRT when the crate is built with the `xla` feature, and via the
+    /// host-reference interpreter (validated against the same manifest
+    /// specs) otherwise.
     pub fn new(dir: &Path) -> Result<Self> {
         let manifest = std::fs::read_to_string(dir.join("manifest.tsv")).map_err(|e| {
             Error::Runtime(format!(
@@ -101,32 +195,61 @@ impl Runtime {
                 dir.display()
             ))
         })?;
-        let entries = parse_manifest(&manifest)?
+        let entries: HashMap<String, Entry> = parse_manifest(&manifest)?
             .into_iter()
             .map(|e| (e.name.clone(), e))
             .collect();
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e:?}")))?;
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            entries,
-            cache: RefCell::new(HashMap::new()),
-            calls: RefCell::new(0),
-        })
+        #[cfg(feature = "xla")]
+        let backend = Backend::Pjrt(pjrt::PjrtBackend::new(dir)?);
+        #[cfg(not(feature = "xla"))]
+        let backend = Backend::HostRef;
+        Ok(Runtime { entries, backend, calls: AtomicU64::new(0) })
+    }
+
+    /// The host-reference runtime: canonical entries, no artifacts needed.
+    pub fn host_reference() -> Self {
+        Runtime {
+            entries: canonical_entries().into_iter().map(|e| (e.name.clone(), e)).collect(),
+            backend: Backend::HostRef,
+            calls: AtomicU64::new(0),
+        }
     }
 
     /// Default artifacts location relative to the crate root.
+    pub fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// True when `make artifacts` has produced a manifest.
+    pub fn artifacts_available() -> bool {
+        Self::artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    /// Open the default artifacts directory when present; otherwise fall
+    /// back to the host-reference backend so a bare checkout still runs
+    /// the full execution stack.
     pub fn open_default() -> Result<Self> {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Self::new(&dir)
+        if Self::artifacts_available() {
+            Self::new(&Self::artifacts_dir())
+        } else {
+            Ok(Self::host_reference())
+        }
+    }
+
+    /// Which backend executes calls: `"pjrt"` or `"host-ref"`.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::HostRef => "host-ref",
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(_) => "pjrt",
+        }
     }
 
     pub fn entry(&self, name: &str) -> Result<&Entry> {
         self.entries.get(name).ok_or_else(|| {
             Error::Runtime(format!(
                 "no artifact `{name}` in manifest (have: {:?})",
-                self.entries.keys().collect::<Vec<_>>()
+                self.names()
             ))
         })
     }
@@ -138,32 +261,14 @@ impl Runtime {
     }
 
     pub fn num_calls(&self) -> u64 {
-        *self.calls.borrow()
-    }
-
-    fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let entry = self.entry(name)?;
-        let path = self.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| Error::Runtime(format!("parse {}: {e:?}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {name}: {e:?}")))?;
-        let rc = std::rc::Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
-        Ok(rc)
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Execute artifact `name` on f32 inputs; returns one Vec per output.
     ///
     /// Inputs are (data, shape) pairs validated against the manifest.
     pub fn execute(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let entry = self.entry(name)?.clone();
+        let entry = self.entry(name)?;
         if inputs.len() != entry.inputs.len() {
             return Err(Error::Runtime(format!(
                 "{name}: {} inputs given, {} expected",
@@ -171,7 +276,6 @@ impl Runtime {
                 entry.inputs.len()
             )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, ((data, shape), spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
             if *shape != spec.shape.as_slice() {
                 return Err(Error::Runtime(format!(
@@ -185,53 +289,190 @@ impl Runtime {
                     data.len()
                 )));
             }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("{name}: reshape input {i}: {e:?}")))?;
-            literals.push(lit);
         }
-        let exe = self.load(name)?;
-        *self.calls.borrow_mut() += 1;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("{name}: execute: {e:?}")))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("{name}: fetch: {e:?}")))?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
-        let parts = result
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("{name}: untuple: {e:?}")))?;
-        if parts.len() != entry.outputs.len() {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let outputs = match &self.backend {
+            Backend::HostRef => host_execute(name, inputs)?,
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(p) => p.execute(entry, inputs)?,
+        };
+        if outputs.len() != entry.outputs.len() {
             return Err(Error::Runtime(format!(
                 "{name}: {} outputs returned, {} expected",
-                parts.len(),
+                outputs.len(),
                 entry.outputs.len()
             )));
         }
-        parts
-            .into_iter()
-            .enumerate()
-            .map(|(i, lit)| {
-                let v = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| Error::Runtime(format!("{name}: output {i}: {e:?}")))?;
-                if v.len() != entry.outputs[i].elems() {
-                    return Err(Error::Runtime(format!(
-                        "{name}: output {i} has {} elems, expected {}",
-                        v.len(),
-                        entry.outputs[i].elems()
-                    )));
-                }
-                Ok(v)
+        for (i, (out, spec)) in outputs.iter().zip(&entry.outputs).enumerate() {
+            if out.len() != spec.elems() {
+                return Err(Error::Runtime(format!(
+                    "{name}: output {i} has {} elems, expected {}",
+                    out.len(),
+                    spec.elems()
+                )));
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+/// Evaluate one canonical kernel family on the host (shapes are taken from
+/// the already-validated inputs, the family from the name prefix).
+fn host_execute(name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+    let arity = |n: usize| -> Result<()> {
+        if inputs.len() != n {
+            return Err(Error::Runtime(format!(
+                "{name}: host backend expected {n} inputs, got {}",
+                inputs.len()
+            )));
+        }
+        Ok(())
+    };
+    if name.starts_with("gemm_") {
+        arity(2)?;
+        let (a, ash) = inputs[0];
+        let (b, bsh) = inputs[1];
+        let (m, k, n) = (ash[0], ash[1], bsh[1]);
+        Ok(vec![host_gemm(a, b, m, k, n)])
+    } else if name.starts_with("attn_step_") {
+        arity(6)?;
+        let (q, qsh) = inputs[0];
+        let (k, ksh) = inputs[1];
+        let (v, _) = inputs[2];
+        let (acc, _) = inputs[3];
+        let (m, _) = inputs[4];
+        let (l, _) = inputs[5];
+        let (sq, d, sk) = (qsh[0], qsh[1], ksh[0]);
+        let scale = 1.0 / (d as f32).sqrt();
+        let (a2, m2, l2) = host_attn_step(q, k, v, acc, m, l, sq, sk, d, scale);
+        Ok(vec![a2, m2, l2])
+    } else if name.starts_with("attn_finalize_") {
+        arity(2)?;
+        let (acc, ash) = inputs[0];
+        let (l, _) = inputs[1];
+        Ok(vec![host_attn_finalize(acc, l, ash[0], ash[1])])
+    } else if name.starts_with("ffn_shard_") {
+        arity(4)?;
+        let (x, xsh) = inputs[0];
+        let (w1, w1sh) = inputs[1];
+        let (b1, _) = inputs[2];
+        let (w2, _) = inputs[3];
+        Ok(vec![host_ffn_shard(x, w1, b1, w2, xsh[0], xsh[1], w1sh[1])])
+    } else if name.starts_with("add_") {
+        arity(2)?;
+        let (x, _) = inputs[0];
+        let (y, _) = inputs[1];
+        Ok(vec![x.iter().zip(y).map(|(a, b)| a + b).collect()])
+    } else {
+        Err(Error::Runtime(format!(
+            "host reference backend has no rule for artifact `{name}`"
+        )))
+    }
+}
+
+/// PJRT backend (feature `xla`): compile HLO-text artifacts lazily and
+/// cache the loaded executables. ALL PJRT access — compile, literal
+/// conversion, execute — is serialized behind one `Mutex`: the `xla`
+/// crate's wrappers are not documented thread-safe (the pre-refactor
+/// runtime kept them behind `Rc`/`RefCell` for a reason), so only one
+/// thread touches them at a time. Throughput is unaffected at validation
+/// scale because the PJRT CPU client multithreads each computation
+/// internally.
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
+    use std::sync::Mutex;
+
+    struct State {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    }
+
+    pub(super) struct PjrtBackend {
+        state: Mutex<State>,
+    }
+
+    // SAFETY: `State` is only ever reached through the Mutex, so every
+    // PJRT call is fully serialized — cross-thread access is strictly
+    // sequential, never concurrent, and the `Rc`s never leave the guard.
+    // This asserts only that the xla wrappers are not thread-AFFINE
+    // (usable from a thread other than the creating one), not that they
+    // are thread-safe.
+    unsafe impl Send for PjrtBackend {}
+    unsafe impl Sync for PjrtBackend {}
+
+    impl PjrtBackend {
+        pub(super) fn new(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e:?}")))?;
+            Ok(PjrtBackend {
+                state: Mutex::new(State {
+                    client,
+                    dir: dir.to_path_buf(),
+                    cache: HashMap::new(),
+                }),
             })
-            .collect()
+        }
+
+        pub(super) fn execute(
+            &self,
+            entry: &Entry,
+            inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let name = &entry.name;
+            let mut state = self.state.lock().unwrap();
+            let exe = match state.cache.get(&entry.name) {
+                Some(exe) => exe.clone(),
+                None => {
+                    let path = state.dir.join(&entry.file);
+                    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                        Error::Runtime(format!("parse {}: {e:?}", path.display()))
+                    })?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = state
+                        .client
+                        .compile(&comp)
+                        .map_err(|e| Error::Runtime(format!("compile {name}: {e:?}")))?;
+                    let rc = std::rc::Rc::new(exe);
+                    state.cache.insert(entry.name.clone(), rc.clone());
+                    rc
+                }
+            };
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, (data, shape)) in inputs.iter().enumerate() {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("{name}: reshape input {i}: {e:?}")))?;
+                literals.push(lit);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("{name}: execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("{name}: fetch: {e:?}")))?;
+            // aot.py lowers with return_tuple=True: output is always a tuple.
+            let parts = result
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("{name}: untuple: {e:?}")))?;
+            parts
+                .into_iter()
+                .enumerate()
+                .map(|(i, lit)| {
+                    lit.to_vec::<f32>()
+                        .map_err(|e| Error::Runtime(format!("{name}: output {i}: {e:?}")))
+                })
+                .collect()
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::verify::{assert_allclose, host_attention};
+    use crate::util::Rng;
 
     #[test]
     fn manifest_parsing() {
@@ -253,7 +494,110 @@ mod tests {
         assert!(parse_manifest("").unwrap().is_empty());
     }
 
-    // Executing real artifacts requires `make artifacts` + the PJRT client;
-    // covered by rust/tests/integration_runtime.rs so `cargo test --lib`
-    // stays artifact-free.
+    #[test]
+    fn host_reference_lists_all_kernel_families() {
+        let rt = Runtime::host_reference();
+        assert_eq!(rt.backend_name(), "host-ref");
+        let names = rt.names();
+        assert!(names.iter().any(|n| n.starts_with("gemm_")));
+        assert!(names.iter().any(|n| n.starts_with("attn_step_")));
+        assert!(names.iter().any(|n| n.starts_with("attn_finalize_")));
+        assert!(names.iter().any(|n| n.starts_with("ffn_shard_")));
+        assert!(names.iter().any(|n| n.starts_with("add_")));
+        assert_eq!(names.len(), 13, "{names:?}"); // mirror of model.py entry_points
+    }
+
+    #[test]
+    fn host_reference_gemm_matches_oracle() {
+        let rt = Runtime::host_reference();
+        let mut rng = Rng::new(11);
+        let a = rng.vec_f32(8 * 128);
+        let b = rng.vec_f32(128 * 128);
+        let outs = rt.execute("gemm_8x128x128", &[(&a, &[8, 128]), (&b, &[128, 128])]).unwrap();
+        let want = crate::exec::verify::host_gemm(&a, &b, 8, 128, 128);
+        assert_eq!(outs[0], want);
+    }
+
+    #[test]
+    fn host_reference_attention_chain() {
+        // chain attn_step over 2 chunks + finalize == full attention
+        let rt = Runtime::host_reference();
+        let mut rng = Rng::new(21);
+        let (sq, d) = (64usize, 64usize);
+        let q = rng.vec_f32(sq * d);
+        let k = rng.vec_f32(2 * sq * d);
+        let v = rng.vec_f32(2 * sq * d);
+        let mut acc = vec![0.0f32; sq * d];
+        let mut m = vec![-1e30f32; sq];
+        let mut l = vec![0.0f32; sq];
+        for c in 0..2 {
+            let ks = &k[c * sq * d..(c + 1) * sq * d];
+            let vs = &v[c * sq * d..(c + 1) * sq * d];
+            let outs = rt
+                .execute(
+                    "attn_step_q64d64k64",
+                    &[
+                        (&q, &[sq, d]),
+                        (ks, &[sq, d]),
+                        (vs, &[sq, d]),
+                        (&acc, &[sq, d]),
+                        (&m, &[sq]),
+                        (&l, &[sq]),
+                    ],
+                )
+                .unwrap();
+            acc = outs[0].clone();
+            m = outs[1].clone();
+            l = outs[2].clone();
+        }
+        let o = rt.execute("attn_finalize_q64d64", &[(&acc, &[sq, d]), (&l, &[sq])]).unwrap();
+        let want = host_attention(&q, &k, &v, sq, 2 * sq, d, 1.0 / (d as f32).sqrt());
+        assert_allclose(&o[0], &want, 1e-4, 1e-4, "host chain").unwrap();
+    }
+
+    #[test]
+    fn shape_and_arity_validation() {
+        let rt = Runtime::host_reference();
+        let a = vec![0.0f32; 8 * 128];
+        let b = vec![0.0f32; 128 * 128];
+        // wrong arity
+        assert!(rt.execute("gemm_8x128x128", &[(&a, &[8, 128])]).is_err());
+        // wrong shape
+        assert!(rt
+            .execute("gemm_8x128x128", &[(&a, &[128, 8]), (&b, &[128, 128])])
+            .is_err());
+        // wrong data length
+        assert!(rt
+            .execute("gemm_8x128x128", &[(&a[..10], &[8, 128]), (&b, &[128, 128])])
+            .is_err());
+        // unknown artifact
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn call_accounting_is_atomic() {
+        let rt = Runtime::host_reference();
+        assert_eq!(rt.num_calls(), 0);
+        let x = vec![1.0f32; 64 * 64];
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let rt = &rt;
+                let x = &x;
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        rt.execute("add_64x64", &[(x, &[64, 64]), (x, &[64, 64])]).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(rt.num_calls(), 20);
+    }
+
+    #[test]
+    fn open_default_never_fails_on_bare_checkout() {
+        // with artifacts: manifest-backed; without: host reference — either
+        // way the execution stack has a working runtime
+        let rt = Runtime::open_default().unwrap();
+        assert!(!rt.names().is_empty());
+    }
 }

@@ -1,0 +1,45 @@
+//! Test-support constructors shared by unit and integration tests.
+//!
+//! `#[doc(hidden)]` — not part of the stable API; exists so the
+//! hand-built-plan fixtures in `exec::engine`, `exec::parallel`,
+//! `exec::plan_prep`, and `tests/integration_parallel.rs` stay in
+//! lockstep when [`TransferDesc`] grows a field.
+
+use crate::backend::BackendKind;
+use crate::chunk::{Chunk, Region, TensorId};
+use crate::codegen::TransferDesc;
+use crate::schedule::OpRef;
+
+/// A minimal [`TransferDesc`] between ranks over one region: copy-engine
+/// for plain copies, ld/st for reduces; `bytes` derived from the region.
+pub fn transfer_desc(
+    tensor: TensorId,
+    region: Region,
+    signal: usize,
+    src: usize,
+    dst: usize,
+    deps: Vec<usize>,
+    reduce: bool,
+) -> TransferDesc {
+    let bytes = region.elems() * 4;
+    let c = Chunk::new(tensor, region);
+    let (backend, comm_sms) = if reduce {
+        (BackendKind::LdStSpecialized, 16)
+    } else {
+        (BackendKind::CopyEngine, 0)
+    };
+    TransferDesc {
+        signal,
+        op: OpRef { rank: src, index: signal },
+        src_rank: src,
+        dst_rank: dst,
+        src_chunk: c.clone(),
+        dst_chunk: c,
+        bytes,
+        pieces: 1,
+        backend,
+        comm_sms,
+        reduce,
+        dep_signals: deps,
+    }
+}

@@ -81,6 +81,58 @@ fn annotated_pallas_sources_drive_the_grid() {
 }
 
 #[test]
+fn pool_stress_concurrent_clients_cache_accounting_consistent() {
+    // N client threads x M requests against a 4-worker pool over a small
+    // set of distinct configurations. Checks: every request answers, answers
+    // are deterministic per key, and cache-hit accounting stays consistent
+    // (hits + misses == total; per key at least one miss, and never more
+    // misses than workers — the bounded compile race).
+    use std::sync::Mutex;
+
+    let workers = 4usize;
+    let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), workers);
+    let tokens_keys = [2048usize, 4096, 8192, 16384];
+    let results: Mutex<Vec<(usize, bool, f64)>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        for t in 0..6usize {
+            let client = coord.client();
+            let results = &results;
+            s.spawn(move || {
+                for i in 0..12usize {
+                    let tokens = tokens_keys[(t + i) % tokens_keys.len()];
+                    let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, tokens, 4);
+                    let r = client.run(op, TuneConfig::default()).unwrap();
+                    results.lock().unwrap().push((tokens, r.cache_hit, r.makespan_us));
+                }
+            });
+        }
+    });
+
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), 6 * 12);
+    for &tokens in &tokens_keys {
+        let per_key: Vec<_> = results.iter().filter(|r| r.0 == tokens).collect();
+        let misses = per_key.iter().filter(|r| !r.1).count();
+        assert!(misses >= 1, "tokens {tokens}: someone must have compiled it");
+        assert!(
+            misses <= workers,
+            "tokens {tokens}: {misses} misses > {workers} workers — cache is not shared"
+        );
+        let t0 = per_key[0].2;
+        assert!(
+            per_key.iter().all(|r| r.2 == t0),
+            "tokens {tokens}: answers diverge across workers"
+        );
+    }
+    // cache is warm: a fresh request on any key must hit
+    for &tokens in &tokens_keys {
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, tokens, 4);
+        assert!(coord.run(op, TuneConfig::default()).unwrap().cache_hit);
+    }
+}
+
+#[test]
 fn errors_surface_through_the_service() {
     let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
     // reduce on the default copy-engine realization is infeasible

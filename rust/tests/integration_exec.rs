@@ -1,12 +1,18 @@
 //! Integration: every distributed operator executed with REAL numerics
-//! through the full stack (schedule -> codegen -> exec engine -> PJRT
-//! Pallas kernels), verified against host oracles (DESIGN.md §6).
+//! through the full stack (schedule -> codegen -> exec engine -> kernel
+//! runtime), verified against host oracles (DESIGN.md §6). Runs on the AOT
+//! artifacts when `make artifacts` has produced them, and on the
+//! host-reference runtime backend otherwise — either way the whole
+//! execution stack is exercised on a bare checkout.
+//!
+//! This file drives the sequential reference engine; the parallel engine
+//! (and its bit-identity to this one) is covered by integration_parallel.rs.
 
 use syncopate::coordinator::execases::{self, run_and_verify};
 use syncopate::runtime::Runtime;
 
 fn rt() -> Runtime {
-    Runtime::open_default().expect("run `make artifacts` first")
+    Runtime::open_default().expect("open_default falls back to host-ref; cannot fail")
 }
 
 #[test]

@@ -216,7 +216,7 @@ fn prop_sim_monotone_in_bytes() {
 /// valid configuration.
 #[test]
 fn prop_exec_numerics_random_configs() {
-    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let rt = Runtime::open_default().expect("open_default falls back to host-ref; cannot fail");
     let mut rng = Rng::new(0xE0E0);
     for it in 0..8 {
         let world = [2usize, 4][rng.below(2)];
