@@ -1,6 +1,6 @@
 # Build-time artifact pipeline + convenience wrappers.
 
-.PHONY: artifacts build test bench fmt clippy clean
+.PHONY: artifacts build test bench fmt clippy clean examples lint-plans
 
 # AOT-lower every L2 entry point to HLO text + manifest (needs jax).
 artifacts:
@@ -16,6 +16,14 @@ test:
 
 bench:
 	cd rust && cargo bench --bench hotpath
+
+# Run the example binaries (living documentation; also exercised in CI).
+examples:
+	cd rust && cargo run --release --example custom_schedule && cargo run --release --example quickstart
+
+# Lint the shipped .sched plan corpus (parse + validate + round-trip).
+lint-plans:
+	cd rust && cargo run --release -- plan lint ../examples/plans/*.sched
 
 fmt:
 	cd rust && cargo fmt --check

@@ -1,167 +1,159 @@
-//! Authoring a custom communication schedule with the chunk API
-//! (the paper's Listing-2 workflow) and comparing it against the built-in
-//! templates on the calibrated model.
+//! Authoring a heterogeneous (Fig. 4e-style) chunk schedule **in the
+//! `.sched` DSL**, validating it, and running it through BOTH execution
+//! engines with real numerics — the full user-plan workflow without
+//! writing a line of schedule-construction Rust.
 //!
 //! ```bash
 //! cargo run --release --example custom_schedule
 //! ```
 //!
-//! We hand-write a "neighbor-first" AllGather: each rank first pulls from
-//! its immediate ring neighbors (cheapest to overlap early), then from
-//! progressively farther peers — a plausible schedule an expert might try —
-//! validate it, lower it under several backends, and let the tile-scheduler
-//! swizzle align compute with it. Then we show what the autotuner finds.
+//! The plan below is a hand-written two-level AllGather over 4 ranks in 2
+//! nodes: each rank (a) forwards its shard around its local ring, (b)
+//! pushes its shard to its mirror rank in the other node, and (c) forwards
+//! the mirror's shard locally once it lands — intra-node and cross-node
+//! traffic pipelined at per-shard granularity. It is byte-for-byte the
+//! plan `schedule::templates::all_gather_hierarchical` generates, which
+//! this example *proves* by comparing the parsed schedule against the
+//! template — schedules really are an interchange format, not an API.
 
-use syncopate::autotune::{self, Budget};
-use syncopate::chunk::{Chunk, DType, TensorTable};
-use syncopate::codegen::{compile, RankComputeInput, Realization};
-use syncopate::coordinator::TuneConfig;
-use syncopate::depgraph::{plan_rank_sync, ChunkTileMap};
-use syncopate::backend::BackendKind;
-use syncopate::kernel::grid::TileGrid;
-use syncopate::kernel::scheduler::{IntraOrder, TileScheduler};
-use syncopate::schedule::templates::shard_region;
+use syncopate::autotune;
+use syncopate::codegen::compile_comm_only;
+use syncopate::exec::{run_with, BufferStore, ExecOptions};
+use syncopate::plan_io::{content_hash, parse_schedule, print_schedule};
+use syncopate::runtime::Runtime;
+use syncopate::schedule::templates::all_gather_hierarchical;
 use syncopate::schedule::validate::validate;
-use syncopate::schedule::{CommOp, CommSchedule, OpRef, TransferKind};
-use syncopate::sim::engine::{simulate, SimParams};
-use syncopate::sim::waves;
 use syncopate::topo::Topology;
-use syncopate::util::fmt_us;
-use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
+use syncopate::util::{fmt_us, Rng};
 
-/// Hand-written pull schedule: nearest ring neighbors first.
-fn neighbor_first_all_gather(
-    table: &TensorTable,
-    tensor: syncopate::chunk::TensorId,
-    world: usize,
-) -> syncopate::Result<CommSchedule> {
-    let shape = table.get(tensor)?.shape.clone();
-    let mut sched = CommSchedule::new(world, table.clone());
-    for r in 0..world {
-        // distance order: 1, -1, 2, -2, ...
-        let mut peers = Vec::new();
-        for d in 1..=world / 2 {
-            peers.push((r + d) % world);
-            if d != world - d {
-                peers.push((r + world - d) % world);
-            }
-        }
-        for peer in peers {
-            let c = Chunk::new(tensor, shard_region(&shape, 0, world, peer)?);
-            sched.add_op(
-                r,
-                CommOp::P2p {
-                    kind: TransferKind::Pull,
-                    peer,
-                    src: c.clone(),
-                    dst: c,
-                    reduce: false,
-                    deps: vec![],
-                },
-            )?;
-        }
-    }
-    Ok(sched)
-}
+/// Fig. 4e for 4 ranks in 2 nodes, written by hand in the schedule DSL.
+/// Tensor `x` is 8x16 f32; rank r owns shard r = rows [2r, 2r+2).
+const HETERO_FIG4E: &str = "\
+# two-level AllGather: local ring + mirror exchange + pipelined forward
+plan v1 world 4
+tensor x f32 8x16
+
+rank 0:
+  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1            # A: local ring
+  push x[0:2, 0:16] -> x[0:2, 0:16] peer 2            # B: cross-node mirror
+  push x[4:6, 0:16] -> x[4:6, 0:16] peer 1 deps (2,1) # C: forward mirror's shard
+rank 1:
+  push x[2:4, 0:16] -> x[2:4, 0:16] peer 0
+  push x[2:4, 0:16] -> x[2:4, 0:16] peer 3
+  push x[6:8, 0:16] -> x[6:8, 0:16] peer 0 deps (3,1)
+rank 2:
+  push x[4:6, 0:16] -> x[4:6, 0:16] peer 3
+  push x[4:6, 0:16] -> x[4:6, 0:16] peer 0
+  push x[0:2, 0:16] -> x[0:2, 0:16] peer 3 deps (0,1)
+rank 3:
+  push x[6:8, 0:16] -> x[6:8, 0:16] peer 2
+  push x[6:8, 0:16] -> x[6:8, 0:16] peer 1
+  push x[2:4, 0:16] -> x[2:4, 0:16] peer 2 deps (1,1)
+";
+
+const ROWS: usize = 8;
+const COLS: usize = 16;
+const WORLD: usize = 4;
+const SHARD: usize = ROWS / WORLD;
 
 fn main() -> syncopate::Result<()> {
-    let world = 8;
-    let topo = Topology::h100_node(world)?;
-    let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, world);
-    println!("== custom chunk schedule: neighbor-first AllGather ({}) ==\n", op.label());
+    println!("== user-authored heterogeneous schedule (Fig. 4e, 2 nodes x 2 ranks) ==\n");
 
-    // 1. author + validate the schedule
-    let mut table = TensorTable::new();
-    let x = table.declare("x", &[op.m, op.k], op.dtype)?;
-    let sched = neighbor_first_all_gather(&table, x, world)?;
+    // 1. parse + validate the textual plan
+    let sched = parse_schedule(HETERO_FIG4E)?;
     validate(&sched)?;
+    let canonical = print_schedule(&sched)?;
     println!(
-        "schedule: {} ops, {} moved over links",
+        "parsed: world {}, {} ops, {} over links, hash {}",
+        sched.world,
         sched.num_ops(),
-        syncopate::util::fmt_bytes(sched.total_link_bytes()? as u64)
+        syncopate::util::fmt_bytes(sched.total_link_bytes()? as u64),
+        content_hash(&canonical)
     );
 
-    // 2. split-factor refinement through the same API the autotuner uses
-    let split = 2;
-    let sched = sched.split_p2p(0, split)?;
-    println!("after split_p2p(axis 0, {split}): {} ops", sched.num_ops());
-    // signal numbering is rank-major and dense: each rank owns a
-    // contiguous id block of the executors' shared signal board
-    for (r, (lo, hi)) in syncopate::codegen::signal_ranges(&sched).iter().enumerate() {
-        println!("  rank {r} owns signals [{lo}, {hi})");
-    }
+    // 2. round-trip guarantee: parse(print(s)) == s, bit-stable text
+    assert_eq!(parse_schedule(&canonical)?, sched, "round-trip must be exact");
+    assert_eq!(print_schedule(&parse_schedule(&canonical)?)?, canonical);
 
-    // 3. align compute: chunk-major swizzle + minimal sync + codegen
-    let cfg = TuneConfig::default();
-    let grid = TileGrid::gemm(op.m, op.n, cfg.block_m, cfg.block_n)?;
-    let mut inputs = Vec::new();
-    for rank in 0..world {
-        let mut map = ChunkTileMap::default();
-        for (r, ops) in sched.per_rank.iter().enumerate() {
-            for (index, o) in ops.iter().enumerate() {
-                if o.dst_rank(r) != rank {
-                    continue;
-                }
-                let reg = &o.produced_chunk().region;
-                let tiles = grid.tiles_intersecting(&[
-                    Some((reg.offset[0], reg.offset[0] + reg.sizes[0])),
-                    None,
-                ])?;
-                map.consumers.entry(OpRef { rank: r, index }).or_default().extend(tiles);
-            }
-        }
-        let groups = map.consumer_groups(rank);
-        let arrival: Vec<usize> = (0..groups.len()).collect();
-        let order = TileScheduler::chunk_major(&grid, &groups, &arrival, IntraOrder::Snake)?;
-        let sync = plan_rank_sync(rank, &sched, &order, &map)?;
-        println!(
-            "  rank {rank}: {} waits, first wait after {} tiles (pipeline fill)",
-            sync.num_waits(),
-            syncopate::depgraph::tiles_before_first_wait(&sync, grid.num_tiles())
-        );
-        let tile_flops = op.flops() / world as f64 / grid.num_tiles() as f64;
-        inputs.push(RankComputeInput {
-            grid: grid.clone(),
-            order,
-            sync,
-            tile_flops: vec![tile_flops; grid.num_tiles()],
-            tile_calls: Default::default(),
-        });
-        if rank == 0 {
-            continue; // only print rank 0's stats verbosely below
-        }
-    }
+    // 3. the hand-written text IS the library template, structurally —
+    //    schedules are an interchange artifact, not Rust-only state
+    let topo2x2 = Topology::h100_multinode(2, 2)?;
+    let tmpl = all_gather_hierarchical(
+        &sched.tensors,
+        sched.tensors.lookup("x").expect("declared"),
+        0,
+        &topo2x2,
+    )?;
+    assert_eq!(sched, tmpl, "hand-authored DSL == all_gather_hierarchical");
+    println!("matches schedule::templates::all_gather_hierarchical exactly\n");
 
-    // 4. realize under each feasible backend
-    println!("\nbackend realizations of the SAME logical schedule:");
-    for backend in BackendKind::TUNABLE {
-        let sms = if syncopate::backend::curve(backend).sms_for_peak == 0 { 0 } else { 16 };
-        let real = Realization::new(backend, sms);
-        match compile(&sched, &inputs, real, &topo) {
-            Ok(plan) => {
-                let params = SimParams {
-                    mxu_eff: waves::mxu_efficiency(cfg.block_m, cfg.block_n, cfg.block_k),
-                };
-                let r = simulate(&plan, &topo, params)?;
-                println!(
-                    "  {:18} {:>10}  {:.0} TFLOPS  exposed {:>9}",
-                    backend.name(),
-                    fmt_us(r.makespan_us),
-                    r.tflops(),
-                    fmt_us(r.exposed_wait_us)
-                );
-            }
-            Err(e) => println!("  {:18} infeasible: {e}", backend.name()),
-        }
-    }
-
-    // 5. what the autotuner would pick instead
-    let tuned = autotune::tune(&op, &topo, Budget::Quick)?;
+    // 4. restricted autotune: backend + comm SMs only, split fixed by plan
+    let tuned = autotune::tune_user_plan(&sched, &topo2x2)?;
     println!(
-        "\nautotuner's pick over the template space: {} -> {} ({:.0} TFLOPS)",
-        tuned.cfg.label(),
+        "restricted autotune: best backend {:?}/sm{} -> {} simulated \
+         ({} evaluated, {} pruned)",
+        tuned.real.backend,
+        tuned.real.comm_sms,
         fmt_us(tuned.makespan_us),
-        tuned.tflops
+        tuned.evaluated,
+        tuned.pruned
+    );
+
+    // 5. execute under BOTH engines with real numerics and compare bits
+    let plan = compile_comm_only(&sched, tuned.real, &topo2x2)?;
+    let rt = Runtime::host_reference();
+    let x_global = Rng::new(7).vec_f32(ROWS * COLS);
+    let mk_store = || -> syncopate::Result<BufferStore> {
+        let mut store = BufferStore::new(WORLD);
+        store.declare("x", &[ROWS, COLS])?;
+        for r in 0..WORLD {
+            // only rank r's shard is valid initially
+            let mut xr = vec![0.0f32; ROWS * COLS];
+            let a = r * SHARD * COLS;
+            xr[a..a + SHARD * COLS].copy_from_slice(&x_global[a..a + SHARD * COLS]);
+            store.set(r, "x", &xr)?;
+        }
+        Ok(store)
+    };
+
+    let mut final_states: Vec<Vec<Vec<f32>>> = Vec::new();
+    for opts in [ExecOptions::sequential(), ExecOptions::parallel()] {
+        let store = mk_store()?;
+        let stats = run_with(&plan, &sched.tensors, &store, &rt, &opts)?;
+        println!(
+            "exec [{:?}]: {} transfers, {} moved, {} waits",
+            opts.mode,
+            stats.transfers,
+            syncopate::util::fmt_bytes(stats.bytes_moved as u64),
+            stats.waits_hit
+        );
+        let state: Vec<Vec<f32>> =
+            (0..WORLD).map(|r| store.get(r, "x")).collect::<syncopate::Result<_>>()?;
+        final_states.push(state);
+    }
+    for r in 0..WORLD {
+        assert_eq!(
+            final_states[0][r], final_states[1][r],
+            "engines must agree bitwise on rank {r}"
+        );
+        assert_eq!(final_states[0][r], x_global, "rank {r} must gather the full tensor");
+    }
+    println!("both engines gathered the full tensor bit-identically on every rank\n");
+
+    // 6. the split-factor knob applies to user plans like any template:
+    //    1-row sub-chunks, deps re-pipelined, same final state
+    let split = sched.split_p2p(0, 2)?;
+    validate(&split)?;
+    let split_plan = compile_comm_only(&split, tuned.real, &topo2x2)?;
+    let store = mk_store()?;
+    let stats = run_with(&split_plan, &split.tensors, &store, &rt, &ExecOptions::parallel())?;
+    for r in 0..WORLD {
+        assert_eq!(store.get(r, "x")?, x_global, "split plan diverged on rank {r}");
+    }
+    println!(
+        "split_p2p(axis 0, 2): {} ops ({} transfers executed), still exact",
+        split.num_ops(),
+        stats.transfers
     );
     Ok(())
 }

@@ -167,6 +167,85 @@ pub fn tune(op: &OperatorInstance, topo: &Topology, budget: Budget) -> Result<Tu
     Ok(TuneResult { cfg, makespan_us, tflops, evaluated, pruned, log })
 }
 
+/// Outcome of restricted user-plan tuning.
+#[derive(Debug, Clone)]
+pub struct PlanTuneResult {
+    /// Best backend realization found.
+    pub real: Realization,
+    /// Simulated comm-only makespan under it.
+    pub makespan_us: f64,
+    pub evaluated: usize,
+    pub pruned: usize,
+}
+
+/// Restricted autotune for user-submitted plans (DESIGN.md §11): only the
+/// *intra-chunk* knobs — backend and communication-SM allocation — are
+/// searched. The inter-chunk split factor is FIXED by the plan itself: a
+/// user or a foreign compiler who wrote explicit chunk regions meant them,
+/// and re-splitting would silently change the artifact being served.
+pub fn tune_user_plan(
+    sched: &crate::schedule::CommSchedule,
+    topo: &Topology,
+) -> Result<PlanTuneResult> {
+    // Abstract collectives fail for EVERY realization at codegen; name the
+    // real cause instead of reporting a misleading exhausted search.
+    if sched
+        .per_rank
+        .iter()
+        .flatten()
+        .any(|op| matches!(op, crate::schedule::CommOp::Collective { .. }))
+    {
+        return Err(Error::Autotune(
+            "plan contains abstract collective ops; lower them to P2P \
+             (lowering::collective) before serving"
+                .into(),
+        ));
+    }
+    let mut best: Option<(Realization, f64)> = None;
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    let mut last_err: Option<Error> = None;
+    for backend in BackendKind::TUNABLE {
+        let sm_choices: &[usize] = if backend::curve(backend).sms_for_peak == 0 {
+            &[0]
+        } else {
+            &[8, 16, 32]
+        };
+        for &comm_sms in sm_choices {
+            if comm_sms >= topo.sms_per_device {
+                pruned += 1;
+                continue;
+            }
+            let real = Realization::new(backend, comm_sms);
+            // capability violations (reduce on TMA, copy engine across
+            // nodes, ...) surface as compile errors per transfer
+            let r = crate::codegen::compile_comm_only(sched, real, topo)
+                .and_then(|plan| simulate(&plan, topo, crate::sim::SimParams::default()));
+            match r {
+                Ok(r) => {
+                    evaluated += 1;
+                    if best.as_ref().map(|(_, t)| r.makespan_us < *t).unwrap_or(true) {
+                        best = Some((real, r.makespan_us));
+                    }
+                }
+                Err(e) => {
+                    pruned += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+    }
+    let (real, makespan_us) = best.ok_or_else(|| {
+        let cause = last_err
+            .map(|e| format!("; last failure: {e}"))
+            .unwrap_or_default();
+        Error::Autotune(format!(
+            "no feasible realization for the submitted plan ({pruned} pruned{cause})"
+        ))
+    })?;
+    Ok(PlanTuneResult { real, makespan_us, evaluated, pruned })
+}
+
 // ---------------------------------------------------------------------------
 // Tuned-configuration persistence: tune once, reuse across processes.
 // TSV format: operator label \t config label \t makespan_us \t tflops
@@ -344,6 +423,31 @@ mod tests {
         let loaded = TuneCache::load(&path).unwrap();
         assert_eq!(c, loaded);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn user_plan_tuning_is_restricted_to_intra_chunk_knobs() {
+        use crate::chunk::{DType, TensorTable};
+        use crate::schedule::templates;
+        let topo = topo();
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[64, 64], DType::F32).unwrap();
+
+        // non-reduce plan: something feasible must be found
+        let ag = templates::all_gather_swizzle(&t, x, 0, 4).unwrap();
+        let r = tune_user_plan(&ag, &topo).unwrap();
+        assert!(r.evaluated > 0);
+        assert!(r.makespan_us > 0.0);
+
+        // reduce plan: only reduce-capable backends may win
+        let rs = templates::reduce_scatter_direct(&t, x, 0, 4).unwrap();
+        let r = tune_user_plan(&rs, &topo).unwrap();
+        assert!(backend::caps(r.real.backend).supports_reduce);
+        assert!(r.pruned > 0, "reduce-incapable realizations must be pruned");
+
+        // the plan's chunking is untouched: tuning consumes the schedule
+        // read-only (split factor is whatever the author wrote)
+        assert_eq!(rs.num_ops(), templates::reduce_scatter_direct(&t, x, 0, 4).unwrap().num_ops());
     }
 
     #[test]

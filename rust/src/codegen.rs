@@ -364,6 +364,38 @@ pub fn compile(
     Ok(ExecutablePlan { world: sched.world, per_rank, num_signals, reserved_comm_sms: reserved })
 }
 
+/// Compile a schedule with NO attached compute: a trivial 1-tile,
+/// zero-FLOP grid per rank, every transfer issued up front, ordering left
+/// entirely to the schedule's own dependency signals.
+///
+/// This is how comm-only artifacts run: `reports::comm_only_latency_us`
+/// scores lowering paths on it, and the user-plan serving path
+/// (`coordinator::service`, `plan run`) executes parsed `.sched` files
+/// through it — both engines drain all transfers before returning, so no
+/// trailing waits are needed for completeness.
+pub fn compile_comm_only(
+    sched: &CommSchedule,
+    real: Realization,
+    topo: &Topology,
+) -> Result<ExecutablePlan> {
+    let grid = TileGrid::gemm(1, 1, 1, 1)?;
+    let inputs: Vec<RankComputeInput> = (0..sched.world)
+        .map(|rank| RankComputeInput {
+            grid: grid.clone(),
+            order: TileScheduler::row_major(&grid),
+            sync: crate::depgraph::RankSync {
+                waits: vec![],
+                triggers: (0..sched.per_rank[rank].len())
+                    .map(|op_index| crate::depgraph::Trigger { after_pos: None, op_index })
+                    .collect(),
+            },
+            tile_flops: vec![0.0; 1],
+            tile_calls: HashMap::new(),
+        })
+        .collect();
+    compile(sched, &inputs, real, topo)
+}
+
 fn make_transfer(
     owner: Rank,
     opref: OpRef,

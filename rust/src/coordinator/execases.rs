@@ -227,6 +227,13 @@ pub enum AgVariant {
     PushRing,
     /// Push-based direct broadcast of the own shard.
     PushDirect,
+    /// Flux-style plan lifted from a stream-level description
+    /// (`plan_io::import::flux_ag`) — the "ported from existing distributed
+    /// compilers" path executed with real numerics.
+    ImportedFlux,
+    /// Triton-distributed-style plan lifted from its single ld/st stream
+    /// (`plan_io::import::triton_dist_ag`).
+    ImportedTritonDist,
 }
 
 /// AG-GEMM at validation scale: gather row-sharded X, multiply by each
@@ -259,6 +266,13 @@ pub fn ag_gemm_variant(
         AgVariant::PullSwizzle => templates::all_gather_swizzle(&table, x, 0, world)?,
         AgVariant::PushRing => templates::all_gather_ring(&table, x, 0, world)?,
         AgVariant::PushDirect => templates::all_gather_direct(&table, x, 0, world)?,
+        // imported plans arrive pre-chunked by the foreign system (4
+        // tile-pieces per shard for Flux, one chunk per shard for
+        // Triton-dist); split_p2p refines them further like any template
+        AgVariant::ImportedFlux => crate::plan_io::import::flux_ag(&table, x, 0, world, 4)?,
+        AgVariant::ImportedTritonDist => {
+            crate::plan_io::import::triton_dist_ag(&table, x, 0, world)?
+        }
     };
     let sched = base.split_p2p(0, split)?;
 
@@ -874,6 +888,115 @@ pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
     Ok(ExecCase { name: format!("attn-sp-w{world}"), sched, plan, store, checks })
 }
 
+// ---------------------------------------------------------------------------
+// Case registry: the single source of truth for named exec cases, shared by
+// the CLI (`exec --case NAME`, `exec --case list`) and tests. Adding a case
+// here makes it reachable everywhere; unknown-case errors list the registry.
+// ---------------------------------------------------------------------------
+
+/// Parameters a registry case may consume (unused fields are ignored by
+/// cases that don't take them).
+#[derive(Debug, Clone)]
+pub struct CaseParams {
+    pub world: usize,
+    pub split: usize,
+    pub seed: u64,
+    /// Node count for hierarchical cases (`world` must divide evenly).
+    pub nodes: usize,
+}
+
+impl Default for CaseParams {
+    fn default() -> Self {
+        CaseParams { world: 4, split: 1, seed: 42, nodes: 2 }
+    }
+}
+
+/// One registered validation case.
+pub struct CaseSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    build: fn(&CaseParams) -> Result<ExecCase>,
+}
+
+impl CaseSpec {
+    pub fn build(&self, p: &CaseParams) -> Result<ExecCase> {
+        (self.build)(p)
+    }
+}
+
+/// The registry, in listing order.
+pub const CASES: &[CaseSpec] = &[
+    CaseSpec {
+        name: "ag-gemm",
+        about: "AllGather (pull swizzle) overlapped with row-sharded GEMM",
+        build: |p| ag_gemm(p.world, p.split, p.seed),
+    },
+    CaseSpec {
+        name: "gemm-rs",
+        about: "GEMM with direct ReduceScatter of output shards",
+        build: |p| gemm_rs(p.world, p.seed),
+    },
+    CaseSpec {
+        name: "gemm-ar",
+        about: "GEMM with partition-based AllReduce (Fig. 4d)",
+        build: |p| gemm_ar(p.world, p.seed),
+    },
+    CaseSpec {
+        name: "a2a-gemm",
+        about: "AllToAll block exchange feeding per-block GEMMs",
+        build: |p| a2a_gemm(p.world, p.seed),
+    },
+    CaseSpec {
+        name: "ring-attn",
+        about: "RingAttention: rotate K/V, fold with online softmax",
+        build: |p| ring_attention(p.world, p.split, p.seed),
+    },
+    CaseSpec {
+        name: "attn-sp",
+        about: "sequence-parallel attention over a pull-swizzle K/V gather",
+        build: |p| attn_sp(p.world, p.seed),
+    },
+    CaseSpec {
+        name: "ag-gemm-hier",
+        about: "AG-GEMM on a two-level mesh (Fig. 4e heterogeneous swizzle)",
+        build: |p| {
+            if p.nodes == 0 || p.world % p.nodes != 0 {
+                return Err(Error::Coordinator(format!(
+                    "ag-gemm-hier: world {} not divisible by nodes {}",
+                    p.world, p.nodes
+                )));
+            }
+            ag_gemm_hierarchical(p.nodes, p.world / p.nodes, p.seed)
+        },
+    },
+    CaseSpec {
+        name: "ag-gemm-flux",
+        about: "AG-GEMM over a Flux-style plan imported via plan_io",
+        build: |p| ag_gemm_variant(p.world, p.split, p.seed, AgVariant::ImportedFlux),
+    },
+    CaseSpec {
+        name: "ag-gemm-tdist",
+        about: "AG-GEMM over a Triton-distributed-style imported plan",
+        build: |p| ag_gemm_variant(p.world, p.split, p.seed, AgVariant::ImportedTritonDist),
+    },
+];
+
+/// Registered case names, in listing order.
+pub fn case_names() -> Vec<&'static str> {
+    CASES.iter().map(|c| c.name).collect()
+}
+
+/// Build a registered case by name; unknown names list the registry.
+pub fn build_case(name: &str, params: &CaseParams) -> Result<ExecCase> {
+    let Some(spec) = CASES.iter().find(|c| c.name == name) else {
+        return Err(Error::Coordinator(format!(
+            "unknown exec case `{name}` (registry: {})",
+            case_names().join(", ")
+        )));
+    };
+    spec.build(params)
+}
+
 #[cfg(test)]
 mod tests {
     // These builders are exercised with the real PJRT runtime in
@@ -930,5 +1053,33 @@ mod tests {
         let case = a2a_gemm(2, 5).unwrap();
         assert_eq!(case.plan.total_transfers(), 2);
         assert_eq!(case.checks.len(), 2);
+    }
+
+    #[test]
+    fn registry_builds_every_case() {
+        let p = CaseParams::default();
+        for spec in CASES {
+            let case = spec.build(&p).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert_eq!(case.plan.world, p.world, "{}", spec.name);
+            assert!(!case.checks.is_empty(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown_case_naming_the_registry() {
+        let e = build_case("warp-speed", &CaseParams::default()).unwrap_err().to_string();
+        assert!(e.contains("unknown exec case `warp-speed`"), "{e}");
+        assert!(e.contains("ag-gemm") && e.contains("ring-attn") && e.contains("ag-gemm-flux"), "{e}");
+    }
+
+    #[test]
+    fn imported_variant_structure() {
+        // Flux: 4 pieces per remote shard, pulls only
+        let case = ag_gemm_variant(2, 1, 3, AgVariant::ImportedFlux).unwrap();
+        assert_eq!(case.plan.total_transfers(), 2 * 1 * 4);
+        // Triton-dist: one push per peer
+        let case = ag_gemm_variant(4, 1, 3, AgVariant::ImportedTritonDist).unwrap();
+        assert_eq!(case.plan.total_transfers(), 4 * 3);
+        assert!(case.name.contains("ImportedTritonDist"), "{}", case.name);
     }
 }

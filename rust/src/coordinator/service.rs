@@ -19,8 +19,11 @@ use std::thread;
 use crate::coordinator::operators::compile_operator;
 use crate::coordinator::TuneConfig;
 use crate::error::{Error, Result};
+use crate::exec::{BufferStore, ExecOptions, ExecStats};
+use crate::runtime::Runtime;
 use crate::sim::engine::simulate;
 use crate::topo::Topology;
+use crate::util::Rng;
 use crate::workload::{OpKind, OperatorInstance};
 
 /// Parse an operator kind by its report name (the CLI's registry).
@@ -49,6 +52,24 @@ pub enum Request {
     Run { op: OperatorInstance, cfg: TuneConfig },
 }
 
+/// Outcome of serving one user-submitted schedule (see
+/// [`CoordinatorClient::run_user_plan`]).
+#[derive(Debug, Clone)]
+pub struct UserPlanResponse {
+    /// Content hash of the plan's canonical printed form — the cache key.
+    pub hash: String,
+    pub world: usize,
+    pub ops: usize,
+    /// Winning restricted-autotune realization, e.g. `copy-engine/sm0`.
+    pub backend_label: String,
+    /// Simulated comm-only makespan under that realization.
+    pub sim_makespan_us: f64,
+    /// Real-numerics execution statistics.
+    pub stats: ExecStats,
+    /// True when the compiled plan came from the coordinator's cache.
+    pub cache_hit: bool,
+}
+
 /// Simulation outcome returned to the caller.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -62,10 +83,21 @@ pub struct Response {
 
 enum Envelope {
     Req(Request, mpsc::Sender<Result<Response>>),
+    UserPlan(String, ExecOptions, mpsc::Sender<Result<UserPlanResponse>>),
     Shutdown,
 }
 
-type PlanCache = HashMap<String, (crate::codegen::ExecutablePlan, crate::sim::SimParams)>;
+/// One cached compiled plan. `user_meta` is populated only for user-plan
+/// entries — (simulated comm-only makespan, winning realization label) —
+/// so warm requests skip re-simulation entirely.
+#[derive(Clone)]
+struct CachedPlan {
+    plan: crate::codegen::ExecutablePlan,
+    params: crate::sim::SimParams,
+    user_meta: Option<(f64, String)>,
+}
+
+type PlanCache = HashMap<String, CachedPlan>;
 
 /// A running coordinator service (worker pool).
 pub struct Coordinator {
@@ -92,6 +124,29 @@ impl CoordinatorClient {
     /// Convenience: submit and block for the answer.
     pub fn run(&self, op: OperatorInstance, cfg: TuneConfig) -> Result<Response> {
         self.submit(Request::Run { op, cfg })?
+            .recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
+    }
+
+    /// Submit a user-authored `.sched` plan (DSL text); returns a receiver
+    /// for the outcome. The plan flows through validate → restricted
+    /// autotune → comm-only codegen → real-numerics exec, with the
+    /// compiled plan cached under the content hash of its canonical form.
+    pub fn submit_user_plan(
+        &self,
+        text: &str,
+        opts: ExecOptions,
+    ) -> Result<mpsc::Receiver<Result<UserPlanResponse>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Envelope::UserPlan(text.to_string(), opts, rtx))
+            .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit a user plan and block for the outcome.
+    pub fn run_user_plan(&self, text: &str, opts: ExecOptions) -> Result<UserPlanResponse> {
+        self.submit_user_plan(text, opts)?
             .recv()
             .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
     }
@@ -141,6 +196,12 @@ impl Coordinator {
     pub fn run(&self, op: OperatorInstance, cfg: TuneConfig) -> Result<Response> {
         self.client().run(op, cfg)
     }
+
+    /// Serve a user-authored `.sched` plan (see
+    /// [`CoordinatorClient::run_user_plan`]).
+    pub fn run_user_plan(&self, text: &str, opts: ExecOptions) -> Result<UserPlanResponse> {
+        self.client().run_user_plan(text, opts)
+    }
 }
 
 impl Drop for Coordinator {
@@ -155,29 +216,34 @@ impl Drop for Coordinator {
 }
 
 fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<PlanCache>) {
+    // Lazily opened on the first user-plan request: operator requests are
+    // sim-only and never touch the artifact runtime.
+    let mut runtime: Option<Runtime> = None;
     loop {
         // Serialize only the dequeue; processing runs in parallel.
         let env = { rx.lock().unwrap().recv() };
         let Ok(env) = env else { break };
         match env {
             Envelope::Shutdown => break,
+            Envelope::UserPlan(text, opts, reply) => {
+                let resp = serve_user_plan(&text, &opts, topo, cache, &mut runtime);
+                let _ = reply.send(resp);
+            }
             Envelope::Req(Request::Run { op, cfg }, reply) => {
                 let key = format!("{}|{}", op.label(), cfg.label());
                 let cached = cache.read().unwrap().get(&key).cloned();
                 let cache_hit = cached.is_some();
                 let compiled = match cached {
-                    Some(c) => Ok(c),
+                    Some(c) => Ok((c.plan, c.params)),
                     None => compile_operator(&op, &cfg, topo),
                 };
                 let resp = compiled.and_then(|(plan, params)| {
                     if !cache_hit {
                         // first writer wins; racing workers agree anyway
                         // (compilation is deterministic)
-                        cache
-                            .write()
-                            .unwrap()
-                            .entry(key.clone())
-                            .or_insert_with(|| (plan.clone(), params));
+                        cache.write().unwrap().entry(key.clone()).or_insert_with(|| {
+                            CachedPlan { plan: plan.clone(), params, user_meta: None }
+                        });
                     }
                     let r = simulate(&plan, topo, params)?;
                     Ok(Response {
@@ -192,6 +258,109 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<
             }
         }
     }
+}
+
+/// The user-plan serving path (DESIGN.md §11): parse → validate →
+/// restricted autotune (split fixed by the plan) → comm-only codegen →
+/// real-numerics exec, with the tuned compiled plan cached under the
+/// content hash of the canonical printed form.
+fn serve_user_plan(
+    text: &str,
+    opts: &crate::exec::ExecOptions,
+    topo: &Topology,
+    cache: &RwLock<PlanCache>,
+    runtime: &mut Option<Runtime>,
+) -> Result<UserPlanResponse> {
+    let sched = crate::plan_io::parse_schedule(text)?;
+    if sched.world != topo.world {
+        return Err(Error::Coordinator(format!(
+            "plan world {} != coordinator world {}",
+            sched.world, topo.world
+        )));
+    }
+    crate::schedule::validate::validate(&sched)?;
+    // hash the CANONICAL form: formatting differences between authors of
+    // the same plan still hit the same cache entry
+    let hash = crate::plan_io::content_hash(&crate::plan_io::print_schedule(&sched)?);
+    let key = format!("user-plan|{hash}");
+
+    let cached = cache.read().unwrap().get(&key).cloned();
+    let cache_hit = cached.is_some();
+    let (plan, sim_makespan_us, backend_label) = match cached {
+        Some(CachedPlan { plan, user_meta: Some((makespan, label)), .. }) => {
+            (plan, makespan, label)
+        }
+        Some(CachedPlan { plan, params, user_meta: None }) => {
+            // only reachable if an operator entry ever shared a key, which
+            // the "user-plan|" prefix prevents; handle it anyway
+            let sim = simulate(&plan, topo, params)?;
+            let label = realization_label(&plan);
+            (plan, sim.makespan_us, label)
+        }
+        None => {
+            let tuned = crate::autotune::tune_user_plan(&sched, topo)?;
+            let plan = crate::codegen::compile_comm_only(&sched, tuned.real, topo)?;
+            let params = crate::sim::SimParams::default();
+            let sim = simulate(&plan, topo, params)?;
+            let label = realization_label(&plan);
+            // first writer wins; racing workers compiled the same bits
+            cache.write().unwrap().entry(key).or_insert_with(|| CachedPlan {
+                plan: plan.clone(),
+                params,
+                user_meta: Some((sim.makespan_us, label.clone())),
+            });
+            (plan, sim.makespan_us, label)
+        }
+    };
+
+    if runtime.is_none() {
+        *runtime = Some(Runtime::open_default()?);
+    }
+    let rt = runtime.as_ref().expect("just initialized");
+    let store = seeded_store(&sched)?;
+    let stats = crate::exec::run_with(&plan, &sched.tensors, &store, rt, opts)?;
+    Ok(UserPlanResponse {
+        hash,
+        world: sched.world,
+        ops: sched.num_ops(),
+        backend_label,
+        sim_makespan_us,
+        stats,
+        cache_hit,
+    })
+}
+
+/// Human-readable realization of a compiled plan's transfers (they all
+/// share one backend/SM choice by construction).
+fn realization_label(plan: &crate::codegen::ExecutablePlan) -> String {
+    plan.per_rank
+        .iter()
+        .flat_map(|p| &p.ops)
+        .find_map(|o| match o {
+            crate::codegen::PlanOp::Issue(d) => {
+                Some(format!("{}/sm{}", d.backend.name(), d.comm_sms))
+            }
+            _ => None,
+        })
+        .unwrap_or_else(|| "n/a".into())
+}
+
+/// Deterministic per-rank buffer contents for user-plan execution: the
+/// same plan always executes over the same bits, so repeated requests (and
+/// both exec engines) are comparable.
+fn seeded_store(sched: &crate::schedule::CommSchedule) -> Result<BufferStore> {
+    let mut store = BufferStore::new(sched.world);
+    for (_, decl) in sched.tensors.iter() {
+        store.declare(&decl.name, &decl.shape)?;
+    }
+    for rank in 0..sched.world {
+        for (id, decl) in sched.tensors.iter() {
+            let seed = 0x9E37_79B9_7F4A_7C15u64 ^ ((rank as u64) << 32) ^ id.0 as u64;
+            let data = Rng::new(seed).vec_f32(decl.elems());
+            store.set(rank, &decl.name, &data)?;
+        }
+    }
+    Ok(store)
 }
 
 #[cfg(test)]
@@ -258,6 +427,52 @@ mod tests {
         // warm cache: a fresh request is a hit no matter which worker serves it
         let r = coord.run(op, TuneConfig::default()).unwrap();
         assert!(r.cache_hit);
+    }
+
+    #[test]
+    fn user_plans_serve_and_cache_by_content_hash() {
+        let coord = Coordinator::spawn_pool(Topology::h100_node(2).unwrap(), 2);
+        let text = "plan v1 world 2\n\
+                    tensor x f32 4x16\n\
+                    rank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n\
+                    rank 1:\n  push x[2:4, 0:16] -> x[2:4, 0:16] peer 0\n";
+        let opts = ExecOptions::sequential();
+        let r1 = coord.run_user_plan(text, opts.clone()).unwrap();
+        assert!(!r1.cache_hit);
+        assert_eq!(r1.world, 2);
+        assert_eq!(r1.ops, 2);
+        assert_eq!(r1.stats.transfers, 2);
+        assert!(r1.sim_makespan_us > 0.0);
+        assert!(r1.backend_label.contains("/sm"), "{}", r1.backend_label);
+        // differently formatted text of the SAME plan hits the same entry
+        let messy = text.replace("  push", "    push  ");
+        let r2 = coord.run_user_plan(&messy, opts.clone()).unwrap();
+        assert!(r2.cache_hit, "canonical-form hashing must dedupe formatting");
+        assert_eq!(r1.hash, r2.hash);
+        assert_eq!(r1.sim_makespan_us, r2.sim_makespan_us);
+        // parallel mode serves the same plan too
+        let r3 = coord.run_user_plan(text, ExecOptions::parallel()).unwrap();
+        assert!(r3.cache_hit);
+        assert_eq!(r3.stats.transfers, 2);
+    }
+
+    #[test]
+    fn bad_user_plans_are_rejected_not_served() {
+        let coord = Coordinator::spawn(Topology::h100_node(2).unwrap());
+        let opts = ExecOptions::sequential();
+        // parse error (carries line/col)
+        let e = coord.run_user_plan("plan v9 world 2\n", opts.clone()).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        // world mismatch against the coordinator's topology
+        let four = "plan v1 world 4\ntensor x f32 8x16\nrank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n";
+        let e = coord.run_user_plan(four, opts.clone()).unwrap_err();
+        assert!(e.to_string().contains("world"), "{e}");
+        // structural failure: dependency cycle
+        let cyc = "plan v1 world 2\ntensor x f32 4x16\n\
+                   rank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1 deps (1,0)\n\
+                   rank 1:\n  push x[2:4, 0:16] -> x[2:4, 0:16] peer 0 deps (0,0)\n";
+        let e = coord.run_user_plan(cyc, opts).unwrap_err();
+        assert!(e.to_string().contains("cycle"), "{e}");
     }
 
     #[test]

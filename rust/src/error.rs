@@ -36,6 +36,9 @@ pub enum Error {
     Autotune(String),
     /// Coordinator / service error.
     Coordinator(String),
+    /// Plan interchange failure (DSL parse/print, importer lifting). Parse
+    /// errors carry `line L, col C:` prefixes for editor jump-to.
+    PlanIo(String),
     /// I/O error (artifact files, manifests, exports).
     Io(String),
 }
@@ -56,6 +59,7 @@ impl Error {
             Error::Runtime(_) => "runtime",
             Error::Autotune(_) => "autotune",
             Error::Coordinator(_) => "coordinator",
+            Error::PlanIo(_) => "plan-io",
             Error::Io(_) => "io",
         }
     }
@@ -76,6 +80,7 @@ impl fmt::Display for Error {
             | Error::Runtime(m)
             | Error::Autotune(m)
             | Error::Coordinator(m)
+            | Error::PlanIo(m)
             | Error::Io(m) => m,
         };
         write!(f, "[{}] {}", self.subsystem(), msg)

@@ -14,7 +14,11 @@
 //!   production path) and the deterministic sequential interpreter kept as
 //!   the reference semantics, cross-checked bit-for-bit (`exec::`).
 //!   Request serving is a multi-worker [`coordinator`] pool sharing a plan
-//!   cache.
+//!   cache. Chunk schedules are a first-class interchange artifact
+//!   ([`plan_io`]): a textual `.sched` DSL with guaranteed round-trip,
+//!   importers lifting stream-level plans from existing distributed
+//!   runtimes, and a user-plan serving path (validate → restricted
+//!   autotune → codegen → exec) cached by content hash.
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
@@ -35,6 +39,7 @@ pub mod kernel;
 pub mod lowering;
 pub mod exec;
 pub mod metrics;
+pub mod plan_io;
 pub mod reports;
 pub mod runtime;
 pub mod schedule;

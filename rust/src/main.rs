@@ -3,13 +3,17 @@
 //! Subcommands (hand-rolled parser — the offline build carries no clap):
 //!
 //! ```text
-//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|headline|all> [--full] [--csv]
+//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|ported|headline|all> [--full] [--csv]
 //! syncopate simulate --op <kind> [--model <name>] [--world N] [--tokens N|--seq N]
 //!                    [--split K] [--backend <name>] [--sms N] [--timeline]
 //! syncopate tune --op <kind> [--model <name>] [--world N] [--full]
-//! syncopate exec --case <ag-gemm|gemm-rs|gemm-ar|a2a-gemm|ring-attn> [--world N] [--split K]
+//! syncopate exec --case <NAME|list> [--world N] [--split K] [--nodes N]
 //!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
-//! syncopate plan --op <kind> [--world N] [--split K]
+//! syncopate plan import --from <SOURCE> [--world N] [--out FILE.sched]
+//! syncopate plan show <FILE.sched>
+//! syncopate plan lint <FILE.sched>...
+//! syncopate plan run <FILE.sched> [--workers N] [--exec-mode M] [--timeout-ms N]
+//! syncopate plan --op <kind> [--world N] [--split K]      (operator plan stats)
 //! syncopate serve-demo [--workers N]
 //! ```
 
@@ -18,12 +22,13 @@ use std::collections::HashMap;
 use syncopate::autotune::{self, Budget};
 use syncopate::backend::BackendKind;
 use syncopate::codegen::Realization;
-use syncopate::coordinator::execases::{self, run_and_verify_with};
+use syncopate::coordinator::execases::{self, run_and_verify_with, CaseParams};
 use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::service::{opkind_by_name, Coordinator};
 use syncopate::coordinator::TuneConfig;
 use syncopate::error::{Error, Result};
 use syncopate::exec::{ExecMode, ExecOptions};
+use syncopate::plan_io;
 use syncopate::reports;
 use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
@@ -182,26 +187,22 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "exec" => {
-            let world = get_usize(&flags, "world", 4)?;
-            let split = get_usize(&flags, "split", 1)?;
-            let seed = get_usize(&flags, "seed", 42)? as u64;
             let case_name =
                 flags.get("case").cloned().unwrap_or_else(|| "ag-gemm".to_string());
-            let case = match case_name.as_str() {
-                "ag-gemm" => execases::ag_gemm(world, split, seed)?,
-                "gemm-rs" => execases::gemm_rs(world, seed)?,
-                "gemm-ar" => execases::gemm_ar(world, seed)?,
-                "a2a-gemm" => execases::a2a_gemm(world, seed)?,
-                "ring-attn" => execases::ring_attention(world, split, seed)?,
-                "attn-sp" => execases::attn_sp(world, seed)?,
-                "ag-gemm-hier" => {
-                    let nodes = get_usize(&flags, "nodes", 2)?;
-                    execases::ag_gemm_hierarchical(nodes, world / nodes, seed)?
+            if case_name == "list" {
+                println!("registered exec cases:");
+                for spec in execases::CASES {
+                    println!("  {:14} {}", spec.name, spec.about);
                 }
-                other => {
-                    return Err(Error::Coordinator(format!("unknown exec case `{other}`")))
-                }
+                return Ok(());
+            }
+            let params = CaseParams {
+                world: get_usize(&flags, "world", 4)?,
+                split: get_usize(&flags, "split", 1)?,
+                seed: get_usize(&flags, "seed", 42)? as u64,
+                nodes: get_usize(&flags, "nodes", 2)?,
             };
+            let case = execases::build_case(&case_name, &params)?;
             let name = case.name.clone();
             let mode: ExecMode = flags
                 .get("exec-mode")
@@ -225,26 +226,36 @@ fn dispatch(args: &[String]) -> Result<()> {
             );
             Ok(())
         }
-        "plan" => {
-            let op = build_op(&flags)?;
-            let cfg = build_cfg(&flags)?;
-            let topo = Topology::h100_node(op.world)?;
-            let (plan, _) = compile_operator(&op, &cfg, &topo)?;
-            println!("operator  : {}", op.label());
-            println!("transfers : {}", plan.total_transfers());
-            println!("signals   : {}", plan.num_signals);
-            println!("flops     : {:.3e}", plan.total_flops());
-            for (r, prog) in plan.per_rank.iter().enumerate() {
-                println!(
-                    "rank {r}: {} ops ({} tiles, {} transfers, {} waits)",
-                    prog.ops.len(),
-                    prog.num_tiles(),
-                    prog.num_transfers(),
-                    prog.num_waits()
-                );
+        "plan" => match bare.first().map(String::as_str) {
+            Some("import") => plan_import(&flags),
+            Some("show") => plan_show(&bare[1..]),
+            Some("lint") => plan_lint(&bare[1..]),
+            Some("run") => plan_run(&bare[1..], &flags),
+            Some(other) => Err(Error::Coordinator(format!(
+                "unknown plan verb `{other}` (import|show|lint|run, or `plan --op ...` \
+                 for operator plan stats)"
+            ))),
+            None => {
+                let op = build_op(&flags)?;
+                let cfg = build_cfg(&flags)?;
+                let topo = Topology::h100_node(op.world)?;
+                let (plan, _) = compile_operator(&op, &cfg, &topo)?;
+                println!("operator  : {}", op.label());
+                println!("transfers : {}", plan.total_transfers());
+                println!("signals   : {}", plan.num_signals);
+                println!("flops     : {:.3e}", plan.total_flops());
+                for (r, prog) in plan.per_rank.iter().enumerate() {
+                    println!(
+                        "rank {r}: {} ops ({} tiles, {} transfers, {} waits)",
+                        prog.ops.len(),
+                        prog.num_tiles(),
+                        prog.num_transfers(),
+                        prog.num_waits()
+                    );
+                }
+                Ok(())
             }
-            Ok(())
-        }
+        },
         "serve-demo" => {
             let world = get_usize(&flags, "world", 8)?;
             let workers = get_usize(&flags, "workers", 2)?;
@@ -278,6 +289,124 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
+/// `plan import --from SOURCE [--world N] [--out FILE]`: instantiate a
+/// registered plan source (template or baseline importer) and emit it in
+/// the `.sched` DSL.
+fn plan_import(flags: &HashMap<String, String>) -> Result<()> {
+    let Some(from) = flags.get("from") else {
+        return Err(Error::Coordinator(format!(
+            "plan import needs --from <source> (known: {})",
+            plan_io::registry::names().join(", ")
+        )));
+    };
+    let world = get_usize(flags, "world", 4)?;
+    let sched = plan_io::registry::build(from, world)?;
+    let text = plan_io::print_schedule(&sched)?;
+    let hash = plan_io::content_hash(&text);
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!(
+                "{from} @ world {world}: {} ops, hash {hash} -> {path}",
+                sched.num_ops()
+            );
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+/// `plan show FILE`: parse, validate, summarize, and re-print canonically.
+fn plan_show(files: &[String]) -> Result<()> {
+    let Some(path) = files.first() else {
+        return Err(Error::Coordinator("plan show needs a .sched file".into()));
+    };
+    let text = std::fs::read_to_string(path)?;
+    let sched = plan_io::parse_schedule(&text)?;
+    syncopate::schedule::validate::validate(&sched)?;
+    let canonical = plan_io::print_schedule(&sched)?;
+    println!("# {path}");
+    println!("# world {}, {} tensors, {} ops, {} over links, hash {}",
+        sched.world,
+        sched.tensors.len(),
+        sched.num_ops(),
+        syncopate::util::fmt_bytes(sched.total_link_bytes()? as u64),
+        plan_io::content_hash(&canonical),
+    );
+    print!("{canonical}");
+    Ok(())
+}
+
+/// `plan lint FILE...`: parse + validate + round-trip-check each file;
+/// exits non-zero on the first violation (CI guards the shipped corpus
+/// with this).
+fn plan_lint(files: &[String]) -> Result<()> {
+    if files.is_empty() {
+        return Err(Error::Coordinator("plan lint needs at least one .sched file".into()));
+    }
+    for path in files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        let sched = plan_io::parse_schedule(&text)
+            .map_err(|e| Error::PlanIo(format!("{path}: {e}")))?;
+        syncopate::schedule::validate::validate(&sched)
+            .map_err(|e| Error::Schedule(format!("{path}: {e}")))?;
+        let canonical = plan_io::print_schedule(&sched)?;
+        let reparsed = plan_io::parse_schedule(&canonical)?;
+        if reparsed != sched {
+            return Err(Error::PlanIo(format!(
+                "{path}: print->parse round-trip changed the schedule (printer bug?)"
+            )));
+        }
+        println!(
+            "OK {path}: world {}, {} ops, hash {}",
+            sched.world,
+            sched.num_ops(),
+            plan_io::content_hash(&canonical)
+        );
+    }
+    Ok(())
+}
+
+/// `plan run FILE [--workers N] [--exec-mode M] [--timeout-ms N]`: serve a
+/// user-authored schedule through the coordinator's cached path —
+/// validate → restricted autotune → codegen → exec. Submitted twice to
+/// show the plan-cache hit on re-serving.
+fn plan_run(files: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let Some(path) = files.first() else {
+        return Err(Error::Coordinator("plan run needs a .sched file".into()));
+    };
+    let text = std::fs::read_to_string(path)?;
+    let sched = plan_io::parse_schedule(&text)?;
+    let workers = get_usize(flags, "workers", 2)?;
+    let mode: ExecMode = flags
+        .get("exec-mode")
+        .map(String::as_str)
+        .unwrap_or("parallel")
+        .parse()?;
+    let timeout_ms = get_usize(flags, "timeout-ms", 10_000)?.max(1) as u64;
+    let opts = ExecOptions {
+        mode,
+        wait_timeout: std::time::Duration::from_millis(timeout_ms),
+    };
+    let coord = Coordinator::spawn_pool(Topology::h100_node(sched.world)?, workers);
+    for attempt in ["cold", "warm"] {
+        let r = coord.run_user_plan(&text, opts.clone())?;
+        println!(
+            "{path} [{attempt}]: world {}, {} ops, backend {}, sim {}, \
+             {} transfers / {} moved [{mode:?}] (cache {})",
+            r.world,
+            r.ops,
+            r.backend_label,
+            syncopate::util::fmt_us(r.sim_makespan_us),
+            r.stats.transfers,
+            syncopate::util::fmt_bytes(r.stats.bytes_moved as u64),
+            r.cache_hit
+        );
+    }
+    Ok(())
+}
+
 fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let which = bare.first().map(String::as_str).unwrap_or("all");
     let budget = if flags.contains_key("full") { Budget::Full } else { Budget::Quick };
@@ -308,6 +437,7 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
             print_ratios(&t);
         }
         "fig10" => emit(&reports::fig10(budget)?),
+        "ported" => emit(&reports::ported()?),
         "scale" => emit(&reports::scalability(budget)?),
         "fig11" => {
             emit(&reports::fig11a()?);
@@ -320,7 +450,9 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
             println!("headline: avg {avg:.2}x, up to {max:.2}x over automatic baselines\n");
         }
         "all" => {
-            for w in ["table2", "fig2", "fig8", "fig9", "fig10", "fig11", "scale", "headline"] {
+            for w in
+                ["table2", "fig2", "fig8", "fig9", "fig10", "fig11", "ported", "scale", "headline"]
+            {
                 report(&[w.to_string()], flags)?;
             }
         }
@@ -344,6 +476,8 @@ fn print_usage() {
     println!(
         "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
          usage: syncopate <report|simulate|tune|exec|plan|serve-demo> [flags]\n\
+         plan verbs: plan import --from <src>, plan show|lint|run <file.sched>\n\
+         exec cases: syncopate exec --case list\n\
          see rust/src/main.rs header for the full flag list"
     );
 }

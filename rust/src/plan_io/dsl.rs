@@ -1,0 +1,312 @@
+//! The `.sched` schedule DSL: format constants, keyword tables shared by
+//! the parser and printer, the [`SchedBuilder`] authoring API, and content
+//! hashing of canonical text.
+//!
+//! # Format (version `v1`)
+//!
+//! Line-oriented; `#` starts a comment, blank lines are ignored. Mirrors
+//! the paper's Listing-2 API: per-rank ordered op lists with explicit
+//! `(rank, index)` dependencies, preceded by tensor declarations.
+//!
+//! ```text
+//! plan v1 world 4
+//! tensor x f32 8x16
+//!
+//! rank 0:
+//!   push x[0:2, 0:16] -> x[0:2, 0:16] peer 1
+//!   pull x[2:4, 0:16] -> x[2:4, 0:16] peer 3 deps (3,0) (1,2)
+//!   push x[4:6, 0:16] -> x[4:6, 0:16] peer 1 reduce deps (0,1)
+//!   copy x[0:2, 0:16] -> x[4:6, 0:16]
+//!   allgather x[0:8, 0:16] -> x[0:8, 0:16] ranks 0 1 2 3
+//! rank 1:
+//! ...
+//! ```
+//!
+//! * `plan v1 world N` — the header, first significant line.
+//! * `tensor NAME DTYPE D0xD1x...` — one per tensor, in id order. Dtypes:
+//!   `f32`, `bf16`, `f16`.
+//! * `rank N:` — starts rank `N`'s op list; every rank `0..world` appears
+//!   exactly once in the canonical form (empty lists included), so
+//!   `world` and `per_rank` reconstruct exactly.
+//! * Op lines (leading whitespace ignored):
+//!   * `push SRC -> DST peer P [reduce] [deps (r,i) ...]` — P2P defined on
+//!     the source side (this rank); `DST` is written on rank `P`.
+//!   * `pull SRC -> DST peer P [reduce] [deps ...]` — P2P defined on the
+//!     destination side (this rank); `SRC` is read on rank `P`.
+//!   * `copy SRC -> DST [deps ...]` — rank-local region copy.
+//!   * `allgather|reducescatter|allreduce|alltoall|broadcast SRC -> DST
+//!     ranks r0 r1 ... [deps ...]` — abstract collective (lowered before
+//!     codegen).
+//! * Chunks: `NAME[o0:e0, o1:e1, ...]` — per-dimension half-open index
+//!   ranges against the tensor's *global* logical shape.
+
+use crate::chunk::{Chunk, DType, Region, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::{CollectiveKind, CommOp, CommSchedule, Dep, TransferKind};
+use crate::topo::Rank;
+
+/// Format version accepted and emitted (`plan v1 ...`).
+pub const FORMAT_VERSION: &str = "v1";
+
+/// Conventional file extension for schedule files.
+pub const FILE_EXT: &str = "sched";
+
+/// Canonical dtype keyword.
+pub fn dtype_name(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::BF16 => "bf16",
+        DType::F16 => "f16",
+    }
+}
+
+/// Inverse of [`dtype_name`].
+pub fn dtype_by_name(s: &str) -> Option<DType> {
+    match s {
+        "f32" => Some(DType::F32),
+        "bf16" => Some(DType::BF16),
+        "f16" => Some(DType::F16),
+        _ => None,
+    }
+}
+
+/// Canonical collective keyword.
+pub fn collective_name(k: CollectiveKind) -> &'static str {
+    match k {
+        CollectiveKind::AllGather => "allgather",
+        CollectiveKind::ReduceScatter => "reducescatter",
+        CollectiveKind::AllReduce => "allreduce",
+        CollectiveKind::AllToAll => "alltoall",
+        CollectiveKind::Broadcast => "broadcast",
+    }
+}
+
+/// Inverse of [`collective_name`].
+pub fn collective_by_name(s: &str) -> Option<CollectiveKind> {
+    match s {
+        "allgather" => Some(CollectiveKind::AllGather),
+        "reducescatter" => Some(CollectiveKind::ReduceScatter),
+        "allreduce" => Some(CollectiveKind::AllReduce),
+        "alltoall" => Some(CollectiveKind::AllToAll),
+        "broadcast" => Some(CollectiveKind::Broadcast),
+        _ => None,
+    }
+}
+
+/// A tensor name the format can represent unambiguously.
+pub fn is_valid_tensor_name(s: &str) -> bool {
+    matches!(s.chars().next(), Some(c) if c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// FNV-1a 64-bit hash of a canonical printed plan, as 16 lowercase hex
+/// digits. Dependency-free stand-in for a cryptographic digest; collisions
+/// across a plan cache's working set are not a realistic concern and a
+/// collision only costs a wrong cache hit on a *validated* plan.
+pub fn content_hash(canonical: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canonical.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Content hash of a schedule's canonical printed form — the coordinator's
+/// plan-cache key for user-submitted plans.
+pub fn plan_hash(sched: &CommSchedule) -> Result<String> {
+    Ok(content_hash(&super::print::print_schedule(sched)?))
+}
+
+/// Embedded-DSL authoring API: build a [`CommSchedule`] in Rust with the
+/// same vocabulary as the textual format. Every op-adding method returns
+/// the new op's [`Dep`] handle so later ops can depend on it without index
+/// bookkeeping (see `examples/custom_schedule.rs`).
+pub struct SchedBuilder {
+    world: usize,
+    table: TensorTable,
+    per_rank: Vec<Vec<CommOp>>,
+}
+
+impl SchedBuilder {
+    pub fn new(world: usize) -> Self {
+        SchedBuilder { world, table: TensorTable::new(), per_rank: vec![Vec::new(); world] }
+    }
+
+    /// Declare a tensor at its global logical shape.
+    pub fn tensor(&mut self, name: &str, shape: &[usize], dtype: DType) -> Result<crate::chunk::TensorId> {
+        if !is_valid_tensor_name(name) {
+            return Err(Error::PlanIo(format!(
+                "tensor name `{name}` is not representable in the DSL \
+                 (want [A-Za-z_][A-Za-z0-9_]*)"
+            )));
+        }
+        self.table.declare(name, shape, dtype)
+    }
+
+    fn add(&mut self, rank: Rank, op: CommOp) -> Result<Dep> {
+        if rank >= self.world {
+            return Err(Error::PlanIo(format!("rank {rank} out of world {}", self.world)));
+        }
+        self.per_rank[rank].push(op);
+        Ok(Dep { rank, index: self.per_rank[rank].len() - 1 })
+    }
+
+    /// Push `chunk` from `rank` into the same region on `peer`.
+    pub fn push(&mut self, rank: Rank, peer: Rank, chunk: Chunk, deps: &[Dep]) -> Result<Dep> {
+        self.transfer(rank, TransferKind::Push, peer, chunk.clone(), chunk, false, deps)
+    }
+
+    /// Push-with-reduce (accumulate into the destination region).
+    pub fn push_reduce(&mut self, rank: Rank, peer: Rank, chunk: Chunk, deps: &[Dep]) -> Result<Dep> {
+        self.transfer(rank, TransferKind::Push, peer, chunk.clone(), chunk, true, deps)
+    }
+
+    /// Pull `chunk` from `peer` into the same region on `rank`.
+    pub fn pull(&mut self, rank: Rank, peer: Rank, chunk: Chunk, deps: &[Dep]) -> Result<Dep> {
+        self.transfer(rank, TransferKind::Pull, peer, chunk.clone(), chunk, false, deps)
+    }
+
+    /// Full-control P2P (distinct src/dst regions, explicit kind/reduce).
+    #[allow(clippy::too_many_arguments)]
+    pub fn transfer(
+        &mut self,
+        rank: Rank,
+        kind: TransferKind,
+        peer: Rank,
+        src: Chunk,
+        dst: Chunk,
+        reduce: bool,
+        deps: &[Dep],
+    ) -> Result<Dep> {
+        self.add(rank, CommOp::P2p { kind, peer, src, dst, reduce, deps: deps.to_vec() })
+    }
+
+    /// Rank-local region copy.
+    pub fn copy(&mut self, rank: Rank, src: Chunk, dst: Chunk, deps: &[Dep]) -> Result<Dep> {
+        self.add(rank, CommOp::LocalCopy { src, dst, deps: deps.to_vec() })
+    }
+
+    /// Abstract collective over a rank group.
+    pub fn collective(
+        &mut self,
+        rank: Rank,
+        kind: CollectiveKind,
+        src: Chunk,
+        dst: Chunk,
+        ranks: &[Rank],
+        deps: &[Dep],
+    ) -> Result<Dep> {
+        self.add(
+            rank,
+            CommOp::Collective {
+                kind,
+                src,
+                dst,
+                ranks: ranks.to_vec(),
+                deps: deps.to_vec(),
+            },
+        )
+    }
+
+    /// Region helper: the `i`-th of `world` equal slabs of the tensor.
+    pub fn shard(&self, tensor: crate::chunk::TensorId, axis: usize, i: usize) -> Result<Chunk> {
+        let shape = self.table.get(tensor)?.shape.clone();
+        Ok(Chunk::new(
+            tensor,
+            crate::schedule::templates::shard_region(&shape, axis, self.world, i)?,
+        ))
+    }
+
+    /// Finish: assemble and structurally validate the schedule.
+    pub fn build(self) -> Result<CommSchedule> {
+        let sched = CommSchedule { world: self.world, tensors: self.table, per_rank: self.per_rank };
+        crate::schedule::validate::validate(&sched)?;
+        Ok(sched)
+    }
+
+    /// Finish without validation (for tests constructing invalid plans).
+    pub fn build_unchecked(self) -> CommSchedule {
+        CommSchedule { world: self.world, tensors: self.table, per_rank: self.per_rank }
+    }
+}
+
+/// Region helper usable without a builder: rows `[r0, r1)` of a 2-D tensor
+/// with `cols` columns (the DSL's most common chunk shape).
+pub fn rows(tensor: crate::chunk::TensorId, r0: usize, r1: usize, cols: usize) -> Chunk {
+    Chunk::new(tensor, Region::rows(r0, r1 - r0, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyword_tables_are_inverse() {
+        for d in [DType::F32, DType::BF16, DType::F16] {
+            assert_eq!(dtype_by_name(dtype_name(d)), Some(d));
+        }
+        for k in [
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Broadcast,
+        ] {
+            assert_eq!(collective_by_name(collective_name(k)), Some(k));
+        }
+        assert_eq!(dtype_by_name("f64"), None);
+        assert_eq!(collective_by_name("gather"), None);
+    }
+
+    #[test]
+    fn tensor_names_validated() {
+        assert!(is_valid_tensor_name("x"));
+        assert!(is_valid_tensor_name("_kv_cache2"));
+        assert!(!is_valid_tensor_name(""));
+        assert!(!is_valid_tensor_name("2x"));
+        assert!(!is_valid_tensor_name("a b"));
+        assert!(!is_valid_tensor_name("a[0]"));
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_sensitive() {
+        let a = content_hash("plan v1 world 2\n");
+        assert_eq!(a.len(), 16);
+        assert_eq!(a, content_hash("plan v1 world 2\n"));
+        assert_ne!(a, content_hash("plan v1 world 4\n"));
+    }
+
+    #[test]
+    fn builder_roundtrips_a_ring_exchange() {
+        let mut b = SchedBuilder::new(2);
+        let x = b.tensor("x", &[4, 8], DType::F32).unwrap();
+        let d0 = b.push(0, 1, b.shard(x, 0, 0).unwrap(), &[]).unwrap();
+        b.push(1, 0, b.shard(x, 0, 1).unwrap(), &[d0]).unwrap();
+        let s = b.build().unwrap();
+        assert_eq!(s.num_ops(), 2);
+        assert_eq!(s.per_rank[1][0].deps(), &[Dep::on(0, 0)]);
+    }
+
+    #[test]
+    fn builder_rejects_bad_names_and_ranks() {
+        let mut b = SchedBuilder::new(2);
+        assert!(b.tensor("1bad", &[4], DType::F32).is_err());
+        let x = b.tensor("x", &[4, 8], DType::F32).unwrap();
+        let c = b.shard(x, 0, 0).unwrap();
+        assert!(b.push(5, 0, c, &[]).is_err());
+    }
+
+    #[test]
+    fn plan_hash_tracks_canonical_form() {
+        let mk = |world: usize| {
+            let mut b = SchedBuilder::new(world);
+            let x = b.tensor("x", &[4, 8], DType::F32).unwrap();
+            let c = b.shard(x, 0, 0).unwrap();
+            b.push(0, 1, c, &[]).unwrap();
+            b.build_unchecked()
+        };
+        assert_eq!(plan_hash(&mk(2)).unwrap(), plan_hash(&mk(2)).unwrap());
+        assert_ne!(plan_hash(&mk(2)).unwrap(), plan_hash(&mk(4)).unwrap());
+    }
+}

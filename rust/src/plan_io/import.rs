@@ -1,0 +1,299 @@
+//! Importers: lift *stream-level* communication plans — the representation
+//! existing distributed compilers and runtimes actually expose — into
+//! genuine chunk schedules (the paper's "ported from existing distributed
+//! compilers" path).
+//!
+//! A stream-level plan has no chunk dependencies: each rank owns a handful
+//! of streams (CUDA streams, copy-engine queues, a DSL kernel's ld/st
+//! warpgroup), and ordering exists only *within* a stream. [`lift`] turns
+//! that implicit ordering into explicit `(rank, index)` dependency chains,
+//! after which the plan is a first-class [`CommSchedule`]: it validates,
+//! splits, simulates, and executes exactly like a native template — which
+//! is what lets `reports::ported` and the `ag-gemm-flux` /
+//! `ag-gemm-tdist` exec cases score ported plans like-for-like.
+//!
+//! Two concrete importers mirror the baseline systems of
+//! [`crate::baselines`]:
+//!
+//! * [`flux_ag`] — Flux-style tile-granular over-decomposition: every
+//!   consumer pulls every remote shard in tile-sized pieces, one stream
+//!   per peer (Flux fuses the loads into the GEMM; the *transfer order
+//!   per peer* is the stream).
+//! * [`triton_dist_ag`] — Triton-distributed-style: one chunk per rank
+//!   shard, pushed by the owner on its single specialized ld/st stream in
+//!   swizzled peer order.
+
+use crate::chunk::{Chunk, Region, TensorId, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::templates::shard_region;
+use crate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
+use crate::topo::Rank;
+
+/// One transfer slot on a stream, as foreign runtimes describe it: source
+/// and destination are explicit, ordering is the slot position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOp {
+    pub src_rank: Rank,
+    pub dst_rank: Rank,
+    pub src: Chunk,
+    pub dst: Chunk,
+    pub reduce: bool,
+}
+
+/// A stream-level plan: per rank, an ordered list of streams, each an
+/// ordered list of [`StreamOp`]s. Ops on one stream execute in slot order;
+/// ops on different streams are unordered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamPlan {
+    pub world: usize,
+    pub tensors: TensorTable,
+    /// `streams[rank][stream][slot]`. Every op must involve `rank` as its
+    /// source (push semantics) or destination (pull semantics).
+    pub streams: Vec<Vec<Vec<StreamOp>>>,
+}
+
+/// Lift a stream-level plan into a chunk schedule: stream order becomes
+/// explicit dependency chains, slot by slot.
+pub fn lift(plan: &StreamPlan) -> Result<CommSchedule> {
+    if plan.streams.len() != plan.world {
+        return Err(Error::PlanIo(format!(
+            "stream plan has {} rank entries for world {}",
+            plan.streams.len(),
+            plan.world
+        )));
+    }
+    let mut sched = CommSchedule::new(plan.world, plan.tensors.clone());
+    for (rank, streams) in plan.streams.iter().enumerate() {
+        for (si, stream) in streams.iter().enumerate() {
+            let mut prev: Option<Dep> = None;
+            for (slot, op) in stream.iter().enumerate() {
+                let kind = if op.src_rank == rank {
+                    TransferKind::Push
+                } else if op.dst_rank == rank {
+                    TransferKind::Pull
+                } else {
+                    return Err(Error::PlanIo(format!(
+                        "stream op [rank {rank}, stream {si}, slot {slot}] moves \
+                         {} -> {} without involving its issuing rank",
+                        op.src_rank, op.dst_rank
+                    )));
+                };
+                let peer = if kind == TransferKind::Push { op.dst_rank } else { op.src_rank };
+                let deps: Vec<Dep> = prev.into_iter().collect();
+                let index = sched.add_op(
+                    rank,
+                    CommOp::P2p {
+                        kind,
+                        peer,
+                        src: op.src.clone(),
+                        dst: op.dst.clone(),
+                        reduce: op.reduce,
+                        deps,
+                    },
+                )?;
+                prev = Some(Dep { rank, index });
+            }
+        }
+    }
+    Ok(sched)
+}
+
+/// Flux-style AllGather as a stream plan: rank `r` pulls shard `p` from
+/// its owner in `pieces` tile-sized sub-chunks, on a dedicated stream per
+/// peer (maximal over-decomposition, co-located loads).
+pub fn flux_ag_stream(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+    pieces: usize,
+) -> Result<StreamPlan> {
+    if pieces == 0 {
+        return Err(Error::PlanIo("flux importer: pieces must be >= 1".into()));
+    }
+    let shape = table.get(tensor)?.shape.clone();
+    let mut streams: Vec<Vec<Vec<StreamOp>>> = Vec::with_capacity(world);
+    for r in 0..world {
+        let mut rank_streams = Vec::with_capacity(world - 1);
+        for i in 1..world {
+            let peer = (r + i) % world;
+            let shard: Region = shard_region(&shape, axis, world, peer)?;
+            let subs = shard.split(axis, pieces).map_err(|e| {
+                Error::PlanIo(format!("flux importer: shard does not split: {e}"))
+            })?;
+            let stream: Vec<StreamOp> = subs
+                .into_iter()
+                .map(|piece| StreamOp {
+                    src_rank: peer,
+                    dst_rank: r,
+                    src: Chunk::new(tensor, piece.clone()),
+                    dst: Chunk::new(tensor, piece),
+                    reduce: false,
+                })
+                .collect();
+            rank_streams.push(stream);
+        }
+        streams.push(rank_streams);
+    }
+    Ok(StreamPlan { world, tensors: table.clone(), streams })
+}
+
+/// Triton-distributed-style AllGather as a stream plan: each rank's single
+/// specialized ld/st stream pushes its own full shard to every peer in
+/// swizzled order (fixed one-chunk-per-shard decomposition).
+pub fn triton_dist_ag_stream(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<StreamPlan> {
+    let shape = table.get(tensor)?.shape.clone();
+    let mut streams: Vec<Vec<Vec<StreamOp>>> = Vec::with_capacity(world);
+    for r in 0..world {
+        let own = shard_region(&shape, axis, world, r)?;
+        let stream: Vec<StreamOp> = (1..world)
+            .map(|i| StreamOp {
+                src_rank: r,
+                dst_rank: (r + i) % world,
+                src: Chunk::new(tensor, own.clone()),
+                dst: Chunk::new(tensor, own.clone()),
+                reduce: false,
+            })
+            .collect();
+        streams.push(vec![stream]);
+    }
+    Ok(StreamPlan { world, tensors: table.clone(), streams })
+}
+
+/// Import a Flux-style AllGather straight to a validated [`CommSchedule`].
+pub fn flux_ag(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+    pieces: usize,
+) -> Result<CommSchedule> {
+    let sched = lift(&flux_ag_stream(table, tensor, axis, world, pieces)?)?;
+    crate::schedule::validate::validate(&sched)?;
+    Ok(sched)
+}
+
+/// Import a Triton-distributed-style AllGather straight to a validated
+/// [`CommSchedule`].
+pub fn triton_dist_ag(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let sched = lift(&triton_dist_ag_stream(table, tensor, axis, world)?)?;
+    crate::schedule::validate::validate(&sched)?;
+    Ok(sched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::DType;
+    use crate::schedule::validate::validate;
+
+    fn table(rows: usize) -> (TensorTable, TensorId) {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[rows, 16], DType::F32).unwrap();
+        (t, x)
+    }
+
+    #[test]
+    fn lift_chains_stream_order_only() {
+        let (t, x) = table(8);
+        let piece = |i: usize| Chunk::new(x, Region::rows(i * 2, 2, 16));
+        let plan = StreamPlan {
+            world: 2,
+            tensors: t,
+            streams: vec![
+                vec![
+                    // stream 0: two slots -> chained
+                    vec![
+                        StreamOp { src_rank: 0, dst_rank: 1, src: piece(0), dst: piece(0), reduce: false },
+                        StreamOp { src_rank: 0, dst_rank: 1, src: piece(1), dst: piece(1), reduce: false },
+                    ],
+                    // stream 1: independent
+                    vec![StreamOp { src_rank: 0, dst_rank: 1, src: piece(2), dst: piece(2), reduce: false }],
+                ],
+                vec![],
+            ],
+        };
+        let s = lift(&plan).unwrap();
+        assert_eq!(s.per_rank[0].len(), 3);
+        assert!(s.per_rank[0][0].deps().is_empty());
+        assert_eq!(s.per_rank[0][1].deps(), &[Dep::on(0, 0)]);
+        assert!(s.per_rank[0][2].deps().is_empty(), "cross-stream ops stay unordered");
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn lift_rejects_third_party_ops() {
+        let (t, x) = table(8);
+        let c = Chunk::new(x, Region::rows(0, 2, 16));
+        let plan = StreamPlan {
+            world: 3,
+            tensors: t,
+            streams: vec![
+                vec![vec![StreamOp { src_rank: 1, dst_rank: 2, src: c.clone(), dst: c, reduce: false }]],
+                vec![],
+                vec![],
+            ],
+        };
+        let e = lift(&plan).unwrap_err();
+        assert!(e.to_string().contains("issuing rank"), "{e}");
+    }
+
+    #[test]
+    fn flux_import_validates_all_worlds() {
+        for world in [2usize, 4, 8] {
+            let (t, x) = table(world * 4);
+            let s = flux_ag(&t, x, 0, world, 2).unwrap();
+            // per rank: (world-1) peers x 2 pieces, pulls only
+            assert_eq!(s.per_rank[0].len(), (world - 1) * 2);
+            assert!(s
+                .per_rank
+                .iter()
+                .flatten()
+                .all(|o| matches!(o, CommOp::P2p { kind: TransferKind::Pull, .. })));
+            // per-peer chains: piece 1 of each peer stream depends on piece 0
+            assert_eq!(s.per_rank[0][1].deps().len(), 1);
+            assert!(s.per_rank[0][0].deps().is_empty());
+        }
+    }
+
+    #[test]
+    fn triton_dist_import_validates_all_worlds() {
+        for world in [2usize, 4, 8] {
+            let (t, x) = table(world * 2);
+            let s = triton_dist_ag(&t, x, 0, world).unwrap();
+            // one push per peer, all chained on the single stream
+            assert_eq!(s.per_rank[0].len(), world - 1);
+            for (i, op) in s.per_rank[0].iter().enumerate() {
+                assert!(matches!(op, CommOp::P2p { kind: TransferKind::Push, .. }));
+                assert_eq!(op.deps().len(), usize::from(i > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn imported_plans_split_like_templates() {
+        let (t, x) = table(16);
+        let s = triton_dist_ag(&t, x, 0, 4).unwrap();
+        let s2 = s.split_p2p(0, 2).unwrap();
+        validate(&s2).unwrap();
+        assert_eq!(s2.num_ops(), s.num_ops() * 2);
+        assert_eq!(s.total_link_bytes().unwrap(), s2.total_link_bytes().unwrap());
+    }
+
+    #[test]
+    fn flux_pieces_must_divide() {
+        let (t, x) = table(8); // shards of 2 rows don't split 3 ways
+        assert!(flux_ag(&t, x, 0, 4, 3).is_err());
+        assert!(flux_ag(&t, x, 0, 4, 0).is_err());
+    }
+}

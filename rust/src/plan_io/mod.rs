@@ -1,0 +1,45 @@
+//! Plan interchange: chunk schedules as a serializable, user-authorable
+//! artifact (DESIGN.md §11).
+//!
+//! The paper claims chunk-level plans can be "ported from existing
+//! distributed compilers, written directly by users, or instantiated from
+//! reusable templates". `schedule::templates` covers the third path; this
+//! subsystem adds the first two:
+//!
+//! * [`dsl`] — the `.sched` textual format (version, keyword tables, the
+//!   [`dsl::SchedBuilder`] authoring API, content hashing of canonical
+//!   text).
+//! * [`print`] — the canonical pretty-printer. `print(parse(print(s)))`
+//!   is bit-identical to `print(s)`, and `parse(print(s)) == s`
+//!   structurally for every template and importer output (enforced by
+//!   `rust/tests/plan_io_corpus.rs`).
+//! * [`parse`] — a dependency-free hand-rolled parser (the offline build
+//!   carries no serde). Errors carry `line L, col C:` positions.
+//! * [`import`] — lifts *stream-level* plans, the representation existing
+//!   distributed runtimes actually expose (ordered per-stream transfer
+//!   lists, no chunk deps), into genuine [`crate::schedule::CommSchedule`]s
+//!   by turning stream order into explicit `(rank, index)` dependencies.
+//!   Ships Flux-style and Triton-distributed-style AllGather importers
+//!   matching the baselines of `crate::baselines`.
+//! * [`registry`] — named plan sources (every exec-capable template plus
+//!   every importer) at canonical validation-scale shapes; drives
+//!   `plan import --from NAME`, the round-trip corpus test, and
+//!   `reports::ported`.
+//!
+//! Serving: a parsed user plan flows through `schedule::validate` →
+//! restricted autotune ([`crate::autotune::tune_user_plan`]: intra-chunk
+//! knobs only, the split is fixed by the plan's own chunking) →
+//! [`crate::codegen::compile_comm_only`] → `exec::`, cached in the
+//! coordinator's plan cache under [`dsl::plan_hash`] of the canonical
+//! printed form (`coordinator::service`).
+
+pub mod dsl;
+pub mod import;
+pub mod parse;
+pub mod print;
+pub mod registry;
+
+pub use dsl::{content_hash, plan_hash, SchedBuilder, FILE_EXT, FORMAT_VERSION};
+pub use import::{lift, StreamOp, StreamPlan};
+pub use parse::parse_schedule;
+pub use print::print_schedule;

@@ -1,0 +1,544 @@
+//! Hand-rolled parser for the `.sched` format (no serde in the offline
+//! build).
+//!
+//! Accepts a superset of the canonical form — flexible whitespace, `#`
+//! comments, blank lines, rank sections in any order, spaces inside
+//! `( r , i )` dep tuples — and reconstructs the exact
+//! [`CommSchedule`] structure, so `parse(print(s)) == s` and
+//! `print(parse(text))` is canonical for any accepted `text`.
+//!
+//! Every error carries a `line L, col C:` prefix (1-based) pointing at the
+//! offending token.
+
+use crate::chunk::{Chunk, Region, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
+use crate::topo::Rank;
+
+use super::dsl::{collective_by_name, dtype_by_name, is_valid_tensor_name, FORMAT_VERSION};
+
+/// Parse `.sched` text into a schedule. Structural validity (dep
+/// resolvability, bounds, acyclicity) is *not* checked here — run
+/// [`crate::schedule::validate::validate`] on the result.
+pub fn parse_schedule(text: &str) -> Result<CommSchedule> {
+    let mut header: Option<usize> = None;
+    let mut table = TensorTable::new();
+    let mut per_rank: Vec<Vec<CommOp>> = Vec::new();
+    let mut seen_rank: Vec<bool> = Vec::new();
+    let mut cur_rank: Option<Rank> = None;
+
+    for (i, raw) in text.lines().enumerate() {
+        let mut cur = Cur::new(raw, i + 1);
+        cur.skip_ws();
+        if cur.done() {
+            continue; // blank or comment-only line
+        }
+        let kw_col = cur.col();
+        let kw = cur.word()?;
+        match (kw.as_str(), header) {
+            ("plan", None) => {
+                let ver = cur.word()?;
+                if ver != FORMAT_VERSION {
+                    return Err(cur.err_at(
+                        kw_col,
+                        &format!("unsupported plan version `{ver}` (expected {FORMAT_VERSION})"),
+                    ));
+                }
+                cur.keyword("world")?;
+                let world = cur.number()?;
+                if world == 0 {
+                    return Err(cur.err_at(kw_col, "world must be > 0"));
+                }
+                cur.end_of_line()?;
+                per_rank = vec![Vec::new(); world];
+                seen_rank = vec![false; world];
+                header = Some(world);
+            }
+            (_, None) => {
+                return Err(cur.err_at(
+                    kw_col,
+                    &format!("expected `plan {FORMAT_VERSION} world N` header, found `{kw}`"),
+                ));
+            }
+            ("plan", Some(_)) => {
+                return Err(cur.err_at(kw_col, "duplicate `plan` header"));
+            }
+            ("tensor", Some(_)) => {
+                if cur_rank.is_some() {
+                    return Err(cur.err_at(
+                        kw_col,
+                        "tensor declarations must precede rank sections",
+                    ));
+                }
+                let name_col = cur.col_after_ws();
+                let name = cur.word()?;
+                if !is_valid_tensor_name(&name) {
+                    return Err(cur.err_at(
+                        name_col,
+                        &format!("invalid tensor name `{name}` (want [A-Za-z_][A-Za-z0-9_]*)"),
+                    ));
+                }
+                let dt_col = cur.col_after_ws();
+                let dt = cur.word()?;
+                let dtype = dtype_by_name(&dt).ok_or_else(|| {
+                    cur.err_at(dt_col, &format!("unknown dtype `{dt}` (f32|bf16|f16)"))
+                })?;
+                let shape = cur.shape()?;
+                cur.end_of_line()?;
+                table
+                    .declare(&name, &shape, dtype)
+                    .map_err(|e| cur.err_at(name_col, &e.to_string()))?;
+            }
+            ("rank", Some(world)) => {
+                let n_col = cur.col_after_ws();
+                let r = cur.number()?;
+                if r >= world {
+                    return Err(cur.err_at(n_col, &format!("rank {r} out of world {world}")));
+                }
+                if seen_rank[r] {
+                    return Err(cur.err_at(n_col, &format!("rank {r} declared twice")));
+                }
+                seen_rank[r] = true;
+                cur.expect(':')?;
+                cur.end_of_line()?;
+                cur_rank = Some(r);
+            }
+            (_, Some(world)) => {
+                let Some(rank) = cur_rank else {
+                    return Err(cur.err_at(
+                        kw_col,
+                        &format!("op line `{kw} ...` outside any `rank N:` section"),
+                    ));
+                };
+                let op = parse_op(&mut cur, &kw, kw_col, world, &table)?;
+                cur.end_of_line()?;
+                per_rank[rank].push(op);
+            }
+        }
+    }
+
+    let Some(world) = header else {
+        return Err(Error::PlanIo(
+            "line 1, col 1: empty input (expected `plan v1 world N` header)".into(),
+        ));
+    };
+    Ok(CommSchedule { world, tensors: table, per_rank })
+}
+
+fn parse_op(
+    cur: &mut Cur<'_>,
+    kw: &str,
+    kw_col: usize,
+    world: usize,
+    table: &TensorTable,
+) -> Result<CommOp> {
+    match kw {
+        "push" | "pull" => {
+            let src = cur.chunk(table)?;
+            cur.arrow()?;
+            let dst = cur.chunk(table)?;
+            cur.keyword("peer")?;
+            let p_col = cur.col_after_ws();
+            let peer = cur.number()?;
+            if peer >= world {
+                return Err(cur.err_at(p_col, &format!("peer {peer} out of world {world}")));
+            }
+            let reduce = cur.opt_keyword("reduce");
+            let deps = cur.deps()?;
+            let kind = if kw == "push" { TransferKind::Push } else { TransferKind::Pull };
+            Ok(CommOp::P2p { kind, peer, src, dst, reduce, deps })
+        }
+        "copy" => {
+            let src = cur.chunk(table)?;
+            cur.arrow()?;
+            let dst = cur.chunk(table)?;
+            let deps = cur.deps()?;
+            Ok(CommOp::LocalCopy { src, dst, deps })
+        }
+        _ => {
+            let Some(kind) = collective_by_name(kw) else {
+                return Err(cur.err_at(
+                    kw_col,
+                    &format!(
+                        "unknown op `{kw}` (push|pull|copy|allgather|reducescatter|\
+                         allreduce|alltoall|broadcast)"
+                    ),
+                ));
+            };
+            let src = cur.chunk(table)?;
+            cur.arrow()?;
+            let dst = cur.chunk(table)?;
+            cur.keyword("ranks")?;
+            let mut ranks = Vec::new();
+            loop {
+                let c = cur.col_after_ws();
+                match cur.try_number() {
+                    Some(r) => {
+                        if r >= world {
+                            return Err(
+                                cur.err_at(c, &format!("group rank {r} out of world {world}"))
+                            );
+                        }
+                        ranks.push(r);
+                    }
+                    None => break,
+                }
+            }
+            if ranks.is_empty() {
+                return Err(cur.err_here("expected at least one group rank after `ranks`"));
+            }
+            let deps = cur.deps()?;
+            Ok(CommOp::Collective { kind, src, dst, ranks, deps })
+        }
+    }
+}
+
+/// Single-line cursor with 1-based line/col error positions.
+struct Cur<'a> {
+    chars: Vec<char>,
+    pos: usize,
+    line_no: usize,
+    raw: &'a str,
+}
+
+impl<'a> Cur<'a> {
+    fn new(raw: &'a str, line_no: usize) -> Self {
+        // strip trailing comment (no string literals in the grammar)
+        let body = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        };
+        Cur { chars: body.chars().collect(), pos: 0, line_no, raw }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.chars.len()
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn col(&self) -> usize {
+        self.pos + 1
+    }
+
+    /// Column of the next non-whitespace char (consumes the whitespace).
+    fn col_after_ws(&mut self) -> usize {
+        self.skip_ws();
+        self.col()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(c) if c.is_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn err_here(&self, msg: &str) -> Error {
+        self.err_at(self.col(), msg)
+    }
+
+    fn err_at(&self, col: usize, msg: &str) -> Error {
+        Error::PlanIo(format!(
+            "line {}, col {col}: {msg} (in `{}`)",
+            self.line_no,
+            self.raw.trim_end()
+        ))
+    }
+
+    fn end_of_line(&mut self) -> Result<()> {
+        self.skip_ws();
+        if self.done() {
+            return Ok(());
+        }
+        let rest: String = self.chars[self.pos..].iter().collect();
+        Err(self.err_here(&format!("unexpected trailing `{}`", rest.trim_end())))
+    }
+
+    fn expect(&mut self, c: char) -> Result<()> {
+        self.skip_ws();
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err_here(&format!("expected `{c}`")))
+        }
+    }
+
+    fn arrow(&mut self) -> Result<()> {
+        self.skip_ws();
+        if self.chars.get(self.pos) == Some(&'-') && self.chars.get(self.pos + 1) == Some(&'>') {
+            self.pos += 2;
+            Ok(())
+        } else {
+            Err(self.err_here("expected `->`"))
+        }
+    }
+
+    fn word(&mut self) -> Result<String> {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == '_') {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err_here("expected a word"));
+        }
+        Ok(self.chars[start..self.pos].iter().collect())
+    }
+
+    /// Consume the exact keyword `kw` or error.
+    fn keyword(&mut self, kw: &str) -> Result<()> {
+        let col = self.col_after_ws();
+        let w = self.word().map_err(|_| self.err_at(col, &format!("expected `{kw}`")))?;
+        if w == kw {
+            Ok(())
+        } else {
+            Err(self.err_at(col, &format!("expected `{kw}`, found `{w}`")))
+        }
+    }
+
+    /// Consume the keyword if present (returns whether it was).
+    fn opt_keyword(&mut self, kw: &str) -> bool {
+        let save = self.pos;
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == '_') {
+            self.pos += 1;
+        }
+        let w: String = self.chars[start..self.pos].iter().collect();
+        if w == kw {
+            true
+        } else {
+            self.pos = save;
+            false
+        }
+    }
+
+    fn try_number(&mut self) -> Option<usize> {
+        let save = self.pos;
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            self.pos = save;
+            return None;
+        }
+        let s: String = self.chars[start..self.pos].iter().collect();
+        match s.parse() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                self.pos = save;
+                None
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<usize> {
+        self.skip_ws();
+        let col = self.col();
+        self.try_number()
+            .ok_or_else(|| self.err_at(col, "expected an unsigned integer"))
+    }
+
+    /// `D0xD1x...` tensor shape.
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let mut dims = vec![self.number()?];
+        while self.peek() == Some('x') {
+            self.pos += 1;
+            // no whitespace inside a shape: `8x16`, not `8 x 16`
+            let col = self.col();
+            let start = self.pos;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+            if self.pos == start {
+                return Err(self.err_at(col, "expected a dimension after `x`"));
+            }
+            let s: String = self.chars[start..self.pos].iter().collect();
+            dims.push(
+                s.parse().map_err(|_| self.err_at(col, "expected a dimension after `x`"))?,
+            );
+        }
+        Ok(dims)
+    }
+
+    /// `name[o0:e0, o1:e1, ...]` chunk reference.
+    fn chunk(&mut self, table: &TensorTable) -> Result<Chunk> {
+        let name_col = self.col_after_ws();
+        let name = self.word().map_err(|_| self.err_at(name_col, "expected a tensor name"))?;
+        let Some(id) = table.lookup(&name) else {
+            return Err(self.err_at(name_col, &format!("unknown tensor `{name}`")));
+        };
+        self.expect('[')?;
+        let mut offset = Vec::new();
+        let mut sizes = Vec::new();
+        loop {
+            let lo_col = self.col_after_ws();
+            let lo = self.number()?;
+            self.expect(':')?;
+            let hi_col = self.col_after_ws();
+            let hi = self.number()?;
+            if hi <= lo {
+                return Err(self.err_at(
+                    hi_col,
+                    &format!("empty or inverted range {lo}:{hi}"),
+                ));
+            }
+            let _ = lo_col;
+            offset.push(lo);
+            sizes.push(hi - lo);
+            self.skip_ws();
+            match self.peek() {
+                Some(',') => {
+                    self.pos += 1;
+                }
+                Some(']') => {
+                    self.pos += 1;
+                    break;
+                }
+                _ => return Err(self.err_here("expected `,` or `]` in region")),
+            }
+        }
+        Ok(Chunk::new(id, Region { offset, sizes }))
+    }
+
+    /// Optional `deps (r,i) (r,i) ...` suffix.
+    fn deps(&mut self) -> Result<Vec<Dep>> {
+        if !self.opt_keyword("deps") {
+            return Ok(Vec::new());
+        }
+        let mut deps = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.peek() != Some('(') {
+                break;
+            }
+            self.pos += 1;
+            let rank = self.number()?;
+            self.expect(',')?;
+            let index = self.number()?;
+            self.expect(')')?;
+            deps.push(Dep { rank, index });
+        }
+        if deps.is_empty() {
+            return Err(self.err_here("expected at least one `(rank,index)` after `deps`"));
+        }
+        Ok(deps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::DType;
+    use crate::plan_io::print::print_schedule;
+
+    const OK: &str = "\
+# a hand-written exchange
+plan v1 world 2
+tensor x f32 8x16
+
+rank 0:
+  push x[0:4, 0:16] -> x[0:4, 0:16] peer 1
+rank 1:
+  pull x[4:8, 0:16] -> x[4:8, 0:16] peer 0 deps (0,0)
+";
+
+    #[test]
+    fn parses_canonical_text() {
+        let s = parse_schedule(OK).unwrap();
+        assert_eq!(s.world, 2);
+        assert_eq!(s.num_ops(), 2);
+        assert_eq!(s.tensors.get(s.tensors.lookup("x").unwrap()).unwrap().dtype, DType::F32);
+        let CommOp::P2p { kind, peer, reduce, .. } = &s.per_rank[0][0] else { panic!() };
+        assert_eq!(*kind, TransferKind::Push);
+        assert_eq!(*peer, 1);
+        assert!(!reduce);
+        assert_eq!(s.per_rank[1][0].deps(), &[Dep::on(0, 0)]);
+    }
+
+    #[test]
+    fn tolerates_messy_whitespace_and_comments() {
+        let messy = "\
+plan   v1   world 2   # header
+tensor x f32 8x16
+rank 1:              # empty is fine
+rank 0:
+    push   x[ 0:4 , 0:16 ]->x[0:4, 0:16]   peer 1   deps ( 1 , 0 )  # dep
+rank_ignored_comment_not_here
+";
+        // the last line is an op keyword error — drop it for the happy path
+        let messy = &messy[..messy.rfind("rank_ignored").unwrap()];
+        let s = parse_schedule(messy).unwrap();
+        assert_eq!(s.per_rank[0].len(), 1);
+        assert_eq!(s.per_rank[0][0].deps(), &[Dep::on(1, 0)]);
+        // re-print is canonical
+        let canon = print_schedule(&s).unwrap();
+        assert!(canon.contains("  push x[0:4, 0:16] -> x[0:4, 0:16] peer 1 deps (1,0)"));
+    }
+
+    fn err_of(text: &str) -> String {
+        parse_schedule(text).unwrap_err().to_string()
+    }
+
+    #[test]
+    fn errors_carry_line_and_col() {
+        // bad header version
+        let e = err_of("plan v9 world 2\n");
+        assert!(e.contains("line 1, col 1") && e.contains("v9"), "{e}");
+        // unknown dtype: `f64` starts at col 10
+        let e = err_of("plan v1 world 2\ntensor x f64 8x16\n");
+        assert!(e.contains("line 2, col 10") && e.contains("f64"), "{e}");
+        // unknown tensor in an op
+        let e = err_of("plan v1 world 2\nrank 0:\n  push y[0:1] -> y[0:1] peer 1\n");
+        assert!(e.contains("line 3, col 8") && e.contains("unknown tensor"), "{e}");
+        // op outside a rank section
+        let e = err_of("plan v1 world 2\ntensor x f32 4x4\npush x[0:1, 0:4] -> x[0:1, 0:4] peer 1\n");
+        assert!(e.contains("line 3") && e.contains("outside"), "{e}");
+        // missing header entirely
+        let e = err_of("tensor x f32 4x4\n");
+        assert!(e.contains("line 1") && e.contains("header"), "{e}");
+        // empty range
+        let e = err_of("plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  push x[2:2, 0:4] -> x[0:1, 0:4] peer 1\n");
+        assert!(e.contains("line 4") && e.contains("empty or inverted"), "{e}");
+        // trailing junk
+        let e = err_of("plan v1 world 2 extra\n");
+        assert!(e.contains("line 1") && e.contains("trailing"), "{e}");
+        // rank out of world / duplicate rank
+        let e = err_of("plan v1 world 2\nrank 5:\n");
+        assert!(e.contains("line 2, col 6") && e.contains("out of world"), "{e}");
+        let e = err_of("plan v1 world 2\nrank 0:\nrank 0:\n");
+        assert!(e.contains("line 3") && e.contains("twice"), "{e}");
+        // deps without tuples
+        let e = err_of(
+            "plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  push x[0:1, 0:4] -> x[0:1, 0:4] peer 1 deps\n",
+        );
+        assert!(e.contains("line 4") && e.contains("(rank,index)"), "{e}");
+        // peer out of world
+        let e = err_of("plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  push x[0:1, 0:4] -> x[0:1, 0:4] peer 9\n");
+        assert!(e.contains("line 4") && e.contains("peer 9"), "{e}");
+    }
+
+    #[test]
+    fn unparsed_ranks_default_to_empty() {
+        let s = parse_schedule("plan v1 world 4\ntensor x f32 4x4\nrank 2:\n  copy x[0:1, 0:4] -> x[1:2, 0:4]\n").unwrap();
+        assert_eq!(s.per_rank.len(), 4);
+        assert_eq!(s.per_rank[2].len(), 1);
+        assert!(s.per_rank[0].is_empty() && s.per_rank[3].is_empty());
+    }
+
+    #[test]
+    fn collective_line_roundtrips() {
+        let text = "plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  allgather x[0:4, 0:4] -> x[0:4, 0:4] ranks 0 1\n";
+        let s = parse_schedule(text).unwrap();
+        let CommOp::Collective { kind, ranks, .. } = &s.per_rank[0][0] else { panic!() };
+        assert_eq!(*kind, crate::schedule::CollectiveKind::AllGather);
+        assert_eq!(ranks, &[0, 1]);
+        let again = parse_schedule(&print_schedule(&s).unwrap()).unwrap();
+        assert_eq!(again, s);
+    }
+}

@@ -1,0 +1,185 @@
+//! Canonical pretty-printer for the `.sched` format.
+//!
+//! The output is *the* canonical form: deterministic, byte-stable, and the
+//! input to [`super::dsl::content_hash`]. The parser accepts a superset
+//! (flexible whitespace, comments, `(r, i)` spacing), but printing any
+//! parsed schedule reproduces this form bit-identically.
+
+use crate::chunk::{Chunk, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
+
+use super::dsl::{collective_name, dtype_name, is_valid_tensor_name, FORMAT_VERSION};
+
+/// Render a schedule in canonical `.sched` text.
+///
+/// Fails only when the schedule is not representable: a chunk referencing
+/// a tensor id outside the table, or a tensor name the grammar cannot
+/// express. Structural problems (bad deps, oob peers) print fine — `plan
+/// lint` exists to reject those.
+pub fn print_schedule(sched: &CommSchedule) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!("plan {FORMAT_VERSION} world {}\n", sched.world));
+    for (_, decl) in sched.tensors.iter() {
+        if !is_valid_tensor_name(&decl.name) {
+            return Err(Error::PlanIo(format!(
+                "tensor name `{}` is not representable in the DSL",
+                decl.name
+            )));
+        }
+        let dims: Vec<String> = decl.shape.iter().map(|d| d.to_string()).collect();
+        out.push_str(&format!(
+            "tensor {} {} {}\n",
+            decl.name,
+            dtype_name(decl.dtype),
+            dims.join("x")
+        ));
+    }
+    out.push('\n');
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        out.push_str(&format!("rank {rank}:\n"));
+        for op in ops {
+            out.push_str("  ");
+            out.push_str(&op_line(op, &sched.tensors)?);
+            out.push('\n');
+        }
+    }
+    Ok(out)
+}
+
+/// One op in canonical line form (no indentation, no newline).
+pub fn op_line(op: &CommOp, table: &TensorTable) -> Result<String> {
+    let mut s = String::new();
+    match op {
+        CommOp::P2p { kind, peer, src, dst, reduce, deps } => {
+            s.push_str(match kind {
+                TransferKind::Push => "push ",
+                TransferKind::Pull => "pull ",
+            });
+            s.push_str(&chunk_str(src, table)?);
+            s.push_str(" -> ");
+            s.push_str(&chunk_str(dst, table)?);
+            s.push_str(&format!(" peer {peer}"));
+            if *reduce {
+                s.push_str(" reduce");
+            }
+            push_deps(&mut s, deps);
+        }
+        CommOp::LocalCopy { src, dst, deps } => {
+            s.push_str("copy ");
+            s.push_str(&chunk_str(src, table)?);
+            s.push_str(" -> ");
+            s.push_str(&chunk_str(dst, table)?);
+            push_deps(&mut s, deps);
+        }
+        CommOp::Collective { kind, src, dst, ranks, deps } => {
+            s.push_str(collective_name(*kind));
+            s.push(' ');
+            s.push_str(&chunk_str(src, table)?);
+            s.push_str(" -> ");
+            s.push_str(&chunk_str(dst, table)?);
+            s.push_str(" ranks");
+            for r in ranks {
+                s.push_str(&format!(" {r}"));
+            }
+            push_deps(&mut s, deps);
+        }
+    }
+    Ok(s)
+}
+
+fn chunk_str(c: &Chunk, table: &TensorTable) -> Result<String> {
+    let decl = table
+        .get(c.tensor)
+        .map_err(|_| Error::PlanIo(format!("chunk references unknown tensor id {:?}", c.tensor)))?;
+    if !is_valid_tensor_name(&decl.name) {
+        return Err(Error::PlanIo(format!(
+            "tensor name `{}` is not representable in the DSL",
+            decl.name
+        )));
+    }
+    let dims: Vec<String> = c
+        .region
+        .offset
+        .iter()
+        .zip(&c.region.sizes)
+        .map(|(o, sz)| format!("{}:{}", o, o + sz))
+        .collect();
+    Ok(format!("{}[{}]", decl.name, dims.join(", ")))
+}
+
+fn push_deps(s: &mut String, deps: &[Dep]) {
+    if deps.is_empty() {
+        return;
+    }
+    s.push_str(" deps");
+    for d in deps {
+        s.push_str(&format!(" ({},{})", d.rank, d.index));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{DType, Region, TensorId};
+    use crate::plan_io::dsl::SchedBuilder;
+
+    fn two_rank() -> CommSchedule {
+        let mut b = SchedBuilder::new(2);
+        let x = b.tensor("x", &[8, 16], DType::F32).unwrap();
+        let d = b.push(0, 1, b.shard(x, 0, 0).unwrap(), &[]).unwrap();
+        b.pull(1, 0, b.shard(x, 0, 1).unwrap(), &[d]).unwrap();
+        b.build_unchecked()
+    }
+
+    #[test]
+    fn canonical_text_shape() {
+        let text = print_schedule(&two_rank()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "plan v1 world 2");
+        assert_eq!(lines[1], "tensor x f32 8x16");
+        assert_eq!(lines[2], "");
+        assert_eq!(lines[3], "rank 0:");
+        assert_eq!(lines[4], "  push x[0:4, 0:16] -> x[0:4, 0:16] peer 1");
+        assert_eq!(lines[5], "rank 1:");
+        assert_eq!(lines[6], "  pull x[4:8, 0:16] -> x[4:8, 0:16] peer 0 deps (0,0)");
+        assert_eq!(lines.len(), 7);
+    }
+
+    #[test]
+    fn reduce_copy_and_collective_lines() {
+        let mut b = SchedBuilder::new(2);
+        let x = b.tensor("x", &[8, 16], DType::BF16).unwrap();
+        let c = b.shard(x, 0, 0).unwrap();
+        b.push_reduce(0, 1, c.clone(), &[]).unwrap();
+        b.copy(0, c.clone(), b.shard(x, 0, 1).unwrap(), &[Dep::on(0, 0)]).unwrap();
+        b.collective(
+            1,
+            crate::schedule::CollectiveKind::AllReduce,
+            c.clone(),
+            c,
+            &[0, 1],
+            &[],
+        )
+        .unwrap();
+        let text = print_schedule(&b.build_unchecked()).unwrap();
+        assert!(text.contains("tensor x bf16 8x16"), "{text}");
+        assert!(text.contains("push x[0:4, 0:16] -> x[0:4, 0:16] peer 1 reduce"), "{text}");
+        assert!(text.contains("copy x[0:4, 0:16] -> x[4:8, 0:16] deps (0,0)"), "{text}");
+        assert!(
+            text.contains("allreduce x[0:4, 0:16] -> x[0:4, 0:16] ranks 0 1"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn unknown_tensor_id_unprintable() {
+        let mut s = two_rank();
+        s.per_rank[0].push(CommOp::LocalCopy {
+            src: Chunk::new(TensorId(7), Region::rows(0, 1, 16)),
+            dst: Chunk::new(TensorId(7), Region::rows(0, 1, 16)),
+            deps: vec![],
+        });
+        assert!(print_schedule(&s).is_err());
+    }
+}

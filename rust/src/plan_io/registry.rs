@@ -1,0 +1,211 @@
+//! Named plan sources: every exec-capable schedule template plus every
+//! baseline importer, instantiated at canonical validation-scale shapes.
+//!
+//! One registry drives three consumers:
+//! * `plan import --from NAME [--world N]` (the CLI's porting entry point),
+//! * the round-trip corpus test (`rust/tests/plan_io_corpus.rs`): every
+//!   source at worlds 2/4/8 must satisfy `parse(print(s)) == s` and pass
+//!   `validate()`,
+//! * `reports::ported`, which scores ported plans against native templates.
+
+use crate::chunk::{DType, TensorTable};
+use crate::error::{Error, Result};
+use crate::schedule::{templates, CommSchedule};
+use crate::topo::Topology;
+
+use super::import;
+
+/// Where a source's plan comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceKind {
+    /// Native reusable template (`schedule::templates`).
+    Template,
+    /// Imported from a foreign stream-level plan (`plan_io::import`).
+    Imported,
+}
+
+/// One named plan source.
+pub struct PlanSource {
+    pub name: &'static str,
+    pub kind: SourceKind,
+    pub about: &'static str,
+    build: fn(usize) -> Result<CommSchedule>,
+}
+
+impl PlanSource {
+    /// Instantiate at `world` ranks (canonical shape: `x[world²·2 × 16]`
+    /// f32 — divisible for every template including AllToAll's `world²`
+    /// block grid).
+    pub fn build(&self, world: usize) -> Result<CommSchedule> {
+        if world < 2 {
+            return Err(Error::PlanIo(format!(
+                "plan source `{}` needs world >= 2, got {world}",
+                self.name
+            )));
+        }
+        (self.build)(world)
+    }
+}
+
+/// Canonical tensor table for registry-built plans.
+fn canon_table(world: usize) -> Result<(TensorTable, crate::chunk::TensorId)> {
+    let mut t = TensorTable::new();
+    let x = t.declare("x", &[world * world * 2, 16], DType::F32)?;
+    Ok((t, x))
+}
+
+macro_rules! template_source {
+    ($f:path) => {
+        |world| {
+            let (t, x) = canon_table(world)?;
+            $f(&t, x, 0, world)
+        }
+    };
+}
+
+/// All registered plan sources.
+pub fn sources() -> Vec<PlanSource> {
+    vec![
+        PlanSource {
+            name: "ag-ring",
+            kind: SourceKind::Template,
+            about: "ring AllGather (Fig. 4c): forwarding chains",
+            build: template_source!(templates::all_gather_ring),
+        },
+        PlanSource {
+            name: "ag-swizzle",
+            kind: SourceKind::Template,
+            about: "1-D swizzled pull AllGather (Listing 2)",
+            build: template_source!(templates::all_gather_swizzle),
+        },
+        PlanSource {
+            name: "ag-direct",
+            kind: SourceKind::Template,
+            about: "direct push AllGather (naive broadcast)",
+            build: template_source!(templates::all_gather_direct),
+        },
+        PlanSource {
+            name: "rs-ring",
+            kind: SourceKind::Template,
+            about: "ring ReduceScatter",
+            build: template_source!(templates::reduce_scatter_ring),
+        },
+        PlanSource {
+            name: "rs-direct",
+            kind: SourceKind::Template,
+            about: "direct ReduceScatter (owner-targeted reduce pushes)",
+            build: template_source!(templates::reduce_scatter_direct),
+        },
+        PlanSource {
+            name: "ar-partition",
+            kind: SourceKind::Template,
+            about: "partition AllReduce (Fig. 4d): fibre reduce + re-broadcast",
+            build: template_source!(templates::all_reduce_partition),
+        },
+        PlanSource {
+            name: "ar-rs-ag",
+            kind: SourceKind::Template,
+            about: "AllReduce as ring RS then ring AG",
+            build: template_source!(templates::all_reduce_rs_ag),
+        },
+        PlanSource {
+            name: "a2a",
+            kind: SourceKind::Template,
+            about: "AllToAll block exchange",
+            build: template_source!(templates::all_to_all),
+        },
+        PlanSource {
+            name: "ag-hier",
+            kind: SourceKind::Template,
+            about: "heterogeneous hierarchical AllGather (Fig. 4e), 2 nodes",
+            build: |world| {
+                if world % 2 != 0 {
+                    return Err(Error::PlanIo(format!(
+                        "ag-hier needs an even world, got {world}"
+                    )));
+                }
+                let (t, x) = canon_table(world)?;
+                let topo = Topology::h100_multinode(2, world / 2)?;
+                templates::all_gather_hierarchical(&t, x, 0, &topo)
+            },
+        },
+        PlanSource {
+            name: "flux-ag",
+            kind: SourceKind::Imported,
+            about: "Flux-style tile-granular AllGather, lifted from streams",
+            build: |world| {
+                let (t, x) = canon_table(world)?;
+                import::flux_ag(&t, x, 0, world, 2)
+            },
+        },
+        PlanSource {
+            name: "tdist-ag",
+            kind: SourceKind::Imported,
+            about: "Triton-distributed-style shard AllGather, lifted from streams",
+            build: |world| {
+                let (t, x) = canon_table(world)?;
+                import::triton_dist_ag(&t, x, 0, world)
+            },
+        },
+    ]
+}
+
+/// Registered source names, in listing order.
+pub fn names() -> Vec<&'static str> {
+    sources().iter().map(|s| s.name).collect()
+}
+
+/// Build a named source; unknown names list the registry.
+pub fn build(name: &str, world: usize) -> Result<CommSchedule> {
+    let all = sources();
+    let Some(src) = all.iter().find(|s| s.name == name) else {
+        return Err(Error::PlanIo(format!(
+            "unknown plan source `{name}` (known: {})",
+            names().join(", ")
+        )));
+    };
+    src.build(world)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::validate;
+
+    #[test]
+    fn every_source_builds_and_validates() {
+        for src in sources() {
+            for world in [2usize, 4, 8] {
+                let s = src
+                    .build(world)
+                    .unwrap_or_else(|e| panic!("{} @ world {world}: {e}", src.name));
+                validate(&s).unwrap_or_else(|e| panic!("{} @ world {world}: {e}", src.name));
+                assert_eq!(s.world, world);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_source_names_registry() {
+        let e = build("nope", 4).unwrap_err().to_string();
+        assert!(e.contains("unknown plan source"), "{e}");
+        assert!(e.contains("ag-ring") && e.contains("tdist-ag"), "{e}");
+    }
+
+    #[test]
+    fn kinds_cover_both_paths() {
+        let all = sources();
+        assert!(all.iter().any(|s| s.kind == SourceKind::Template));
+        assert!(all.iter().any(|s| s.kind == SourceKind::Imported));
+        // names are unique
+        let mut n = names();
+        n.sort_unstable();
+        n.dedup();
+        assert_eq!(n.len(), all.len());
+    }
+
+    #[test]
+    fn world_below_two_rejected() {
+        assert!(build("ag-ring", 1).is_err());
+    }
+}

@@ -8,12 +8,11 @@
 use crate::autotune::{self, Budget};
 use crate::backend::{self, BackendKind};
 use crate::baselines::{self, Baseline};
-use crate::codegen::{compile, RankComputeInput, Realization};
+use crate::codegen::Realization;
 use crate::coordinator::operators::compile_operator;
 use crate::coordinator::TuneConfig;
 use crate::error::Result;
-use crate::kernel::grid::TileGrid;
-use crate::kernel::scheduler::{IntraOrder, SwizzlePolicy, TileScheduler};
+use crate::kernel::scheduler::{IntraOrder, SwizzlePolicy};
 use crate::lowering::collective::LowerPath;
 use crate::lowering::{loops, partition};
 use crate::metrics::Table;
@@ -217,25 +216,42 @@ pub fn comm_only_latency_us(
     real: Realization,
     topo: &Topology,
 ) -> Result<f64> {
-    // trivial 1-tile grid per rank, no compute cost, all transfers
-    // triggered immediately
-    let grid = TileGrid::gemm(1, 1, 1, 1)?;
-    let inputs: Vec<RankComputeInput> = (0..sched.world)
-        .map(|rank| RankComputeInput {
-            grid: grid.clone(),
-            order: TileScheduler::row_major(&grid),
-            sync: crate::depgraph::RankSync {
-                waits: vec![],
-                triggers: (0..sched.per_rank[rank].len())
-                    .map(|op_index| crate::depgraph::Trigger { after_pos: None, op_index })
-                    .collect(),
-            },
-            tile_flops: vec![0.0; 1],
-            tile_calls: Default::default(),
-        })
-        .collect();
-    let plan = compile(sched, &inputs, real, topo)?;
+    let plan = crate::codegen::compile_comm_only(sched, real, topo)?;
     Ok(simulate(&plan, topo, SimParams::default())?.makespan_us)
+}
+
+/// Ported-vs-native comparison: comm-only latency of the baseline plans
+/// lifted through `plan_io::import` next to the native AllGather templates,
+/// on the same simulator and realization — the like-for-like scoring the
+/// "ported from existing distributed compilers" path exists for.
+pub fn ported() -> Result<Table> {
+    use crate::chunk::{DType, TensorTable};
+    use crate::plan_io::import;
+    use crate::schedule::templates;
+
+    let mut t = Table::new(
+        "Ported plans vs native templates (comm-only AllGather latency)",
+        &["ring", "swizzle", "direct", "flux-imported", "tdist-imported"],
+        "us (lower=better)",
+    );
+    for world in [2usize, 4, 8] {
+        let topo = Topology::h100_node(world)?;
+        let mut table = TensorTable::new();
+        let x = table.declare("x", &[world * 1024, 4096], DType::BF16)?;
+        let real = Realization::new(BackendKind::CopyEngine, 0);
+        let lat = |s: &CommSchedule| comm_only_latency_us(s, real, &topo);
+        t.push_row(
+            &format!("{world}gpu"),
+            vec![
+                lat(&templates::all_gather_ring(&table, x, 0, world)?)?,
+                lat(&templates::all_gather_swizzle(&table, x, 0, world)?)?,
+                lat(&templates::all_gather_direct(&table, x, 0, world)?)?,
+                lat(&import::flux_ag(&table, x, 0, world, 4)?)?,
+                lat(&import::triton_dist_ag(&table, x, 0, world)?)?,
+            ],
+        );
+    }
+    Ok(t)
 }
 
 /// Fig. 10: higher-level compiler IRs lowered through Syncopate.

@@ -1,13 +1,19 @@
 //! Structural validation of communication schedules.
 //!
-//! A schedule admitted here is guaranteed to be *executable*: every op's
-//! chunks fit their tensors, every dependency resolves to an existing op,
-//! peers are in range, and the global happens-before relation (per-rank
-//! program order ∪ cross-rank deps) is acyclic, i.e. deadlock-free.
+//! A schedule admitted here is guaranteed to be *executable and
+//! deterministic*: every op's chunks fit their tensors, every dependency
+//! resolves to an existing op, peers are in range, the global
+//! happens-before relation (per-rank program order ∪ cross-rank deps) is
+//! acyclic (deadlock-free), no two unordered writes touch overlapping
+//! destination regions (write-write races would make the two exec engines
+//! diverge), and any rank that assembles a full tensor does so as an exact
+//! tiling ([`check_covers`] wired into [`validate`] — the classic gather
+//! off-by-one where shard regions overlap by a row while summing to the
+//! tensor size is rejected here instead of corrupting numerics silently).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
-use crate::chunk::Region;
+use crate::chunk::{Region, TensorId};
 use crate::error::{Error, Result};
 use crate::schedule::{CommOp, CommSchedule, OpRef};
 
@@ -80,7 +86,9 @@ pub fn validate(sched: &CommSchedule) -> Result<()> {
             }
         }
     }
-    check_acyclic(sched)
+    let order = topo_order(sched)?;
+    check_write_hazards(sched, &order)?;
+    check_gather_destinations(sched)
 }
 
 /// Deadlock-freedom: the relation {program order on each rank} ∪ {dep edges}
@@ -138,8 +146,167 @@ pub fn topo_order(sched: &CommSchedule) -> Result<Vec<OpRef>> {
     Ok(refs)
 }
 
-fn check_acyclic(sched: &CommSchedule) -> Result<()> {
-    topo_order(sched).map(|_| ())
+/// Write-write race detection: two ops whose destination regions of the
+/// same tensor on the same rank overlap must be ordered by the schedule's
+/// *apply-order* happens-before relation — unless both are reduce ops,
+/// whose contributions commute semantically (the exec layer's `plan_prep`
+/// serializes them canonically for f32 bit-stability).
+///
+/// Apply-order is stricter than issue order: both engines issue transfers
+/// asynchronously (an `Issue` whose dep signals are unmet is parked and
+/// later ops on the rank proceed), so same-rank program order only
+/// guarantees apply order *downstream of a dep-free op* — a dep-free
+/// transfer applies at its issue point in both engines, ordering it before
+/// every later op on its rank; an op with deps may apply arbitrarily late.
+/// The hazard graph therefore contains (a) dep edges and (b) edges from
+/// each dep-free op to every later op on its rank — nothing else.
+///
+/// An unordered overlapping pair means the engines (or two runs of the
+/// parallel engine) may apply the writes in different orders and
+/// legitimately diverge; such plans are rejected as
+/// nondeterministic-by-construction.
+fn check_write_hazards(sched: &CommSchedule, order: &[OpRef]) -> Result<()> {
+    let mut base = vec![0usize; sched.world + 1];
+    for r in 0..sched.world {
+        base[r + 1] = base[r] + sched.per_rank[r].len();
+    }
+    let n = base[sched.world];
+    if n < 2 {
+        return Ok(());
+    }
+    // Apply-order adjacency (a subgraph of the issue-order graph, so the
+    // caller's topological `order` remains valid for it).
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            let me = base[rank] + index;
+            for d in op.deps() {
+                adj[base[d.rank] + d.index].push(me);
+            }
+            if op.deps().is_empty() {
+                for later in index + 1..ops.len() {
+                    adj[me].push(base[rank] + later);
+                }
+            }
+        }
+    }
+    // Forward-reachability closure as bitsets, filled in reverse topological
+    // order: desc[u] = union over children v of ({v} ∪ desc[v]).
+    let words = (n + 63) / 64;
+    let mut desc = vec![vec![0u64; words]; n];
+    for opref in order.iter().rev() {
+        let u = base[opref.rank] + opref.index;
+        let mut acc = vec![0u64; words];
+        for &v in &adj[u] {
+            acc[v / 64] |= 1 << (v % 64);
+            for (a, d) in acc.iter_mut().zip(&desc[v]) {
+                *a |= *d;
+            }
+        }
+        desc[u] = acc;
+    }
+    let reaches = |a: usize, b: usize| desc[a][b / 64] & (1 << (b % 64)) != 0;
+
+    // Destination writes grouped by (dst rank, tensor):
+    // (graph node id, op ref, written region, is-reduce).
+    type WriterList<'a> = Vec<(usize, OpRef, &'a Region, bool)>;
+    let mut groups: HashMap<(usize, TensorId), WriterList<'_>> = HashMap::new();
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            let (dst_rank, reduce) = match op {
+                CommOp::P2p { reduce, .. } => (op.dst_rank(rank), *reduce),
+                CommOp::LocalCopy { .. } => (rank, false),
+                CommOp::Collective { .. } => continue, // abstract until lowering
+            };
+            let opref = OpRef { rank, index };
+            groups
+                .entry((dst_rank, op.produced_chunk().tensor))
+                .or_default()
+                .push((base[rank] + index, opref, &op.produced_chunk().region, reduce));
+        }
+    }
+    for ((dst, tensor), writers) in &groups {
+        for (i, a) in writers.iter().enumerate() {
+            for b in writers.iter().skip(i + 1) {
+                if (a.3 && b.3) || !a.2.intersects(b.2) {
+                    continue;
+                }
+                if !reaches(a.0, b.0) && !reaches(b.0, a.0) {
+                    let name = sched
+                        .tensors
+                        .get(*tensor)
+                        .map(|d| d.name.clone())
+                        .unwrap_or_else(|_| format!("{tensor:?}"));
+                    return Err(Error::Schedule(format!(
+                        "unordered overlapping writes (race) to `{name}` on rank {dst}: \
+                         ops ({},{}) and ({},{}) write intersecting regions with no \
+                         dependency path between them",
+                        a.1.rank, a.1.index, b.1.rank, b.1.index
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Gather-destination coverage: when a rank's incoming writes plus the
+/// regions it owns at the start (approximated as the distinct regions it
+/// *sources* without having received them) sum to exactly the tensor size —
+/// i.e. the rank appears to assemble the whole tensor, as every AllGather
+/// destination does — the assembly must be an exact tiling per
+/// [`check_covers`]. Partial-transfer plans (AllToAll, sub-tensor staging)
+/// never sum to the full size and are skipped.
+fn check_gather_destinations(sched: &CommSchedule) -> Result<()> {
+    // One pass over the ops, grouping distinct regions by (tensor, rank).
+    let mut received: HashMap<(TensorId, usize), Vec<&Region>> = HashMap::new();
+    let mut sourced: HashMap<(TensorId, usize), Vec<&Region>> = HashMap::new();
+    for (owner, ops) in sched.per_rank.iter().enumerate() {
+        for op in ops {
+            let CommOp::P2p { reduce: false, .. } = op else { continue };
+            let rec = received
+                .entry((op.produced_chunk().tensor, op.dst_rank(owner)))
+                .or_default();
+            let r = &op.produced_chunk().region;
+            if !rec.contains(&r) {
+                rec.push(r);
+            }
+            let src = sourced
+                .entry((op.consumed_chunk().tensor, op.src_rank(owner)))
+                .or_default();
+            let s = &op.consumed_chunk().region;
+            if !src.contains(&s) {
+                src.push(s);
+            }
+        }
+    }
+    for (tensor, decl) in sched.tensors.iter() {
+        let total = decl.elems();
+        for rank in 0..sched.world {
+            let empty = Vec::new();
+            let rec = received.get(&(tensor, rank)).unwrap_or(&empty);
+            let src = sourced.get(&(tensor, rank)).unwrap_or(&empty);
+            // Regions the rank sends without first receiving them are (an
+            // approximation of) its initial ownership; forwarded regions
+            // (ring hops) are contained in a received region and drop out.
+            let mut regions: Vec<Region> = rec.iter().map(|r| (*r).clone()).collect();
+            for &s in src {
+                if !rec.iter().any(|r| r.contains(s)) && !regions.contains(s) {
+                    regions.push(s.clone());
+                }
+            }
+            let sum: usize = regions.iter().map(|r| r.elems()).sum();
+            if sum == total && !regions.is_empty() && !check_covers(&decl.shape, &regions) {
+                return Err(Error::Schedule(format!(
+                    "gather destination: rank {rank} assembles tensor `{}` from \
+                     regions that are not an exact tiling (overlap or gap despite \
+                     summing to the tensor size)",
+                    decl.name
+                )));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Do `regions` tile `shape` exactly — full coverage, no overlap?
@@ -324,6 +491,136 @@ mod tests {
         };
         assert!(pos(0, 0) < pos(0, 1));
         assert!(pos(0, 1) < pos(1, 0));
+    }
+
+    // -- write-hazard (overlap/duplicate-region) checks ---------------------
+
+    #[test]
+    fn unordered_duplicate_writes_rejected() {
+        // two owners push the SAME region into rank 2 with no dependency path
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 4, 16));
+        let mut s = CommSchedule::new(3, t);
+        s.add_op(0, push(2, &c, vec![])).unwrap();
+        s.add_op(1, push(2, &c, vec![])).unwrap();
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("unordered overlapping writes"), "{e}");
+    }
+
+    #[test]
+    fn ordered_duplicate_writes_accepted() {
+        // same two writes, but the second depends on the first: determinate.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 4, 16));
+        let mut s = CommSchedule::new(3, t);
+        s.add_op(0, push(2, &c, vec![])).unwrap();
+        s.add_op(1, push(2, &c, vec![Dep::on(0, 0)])).unwrap();
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn reduce_writes_may_overlap_unordered() {
+        // commutative accumulation: plan_prep serializes these at exec time
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 4, 16));
+        let r = |peer: usize| CommOp::P2p {
+            kind: TransferKind::Push,
+            peer,
+            src: c.clone(),
+            dst: c.clone(),
+            reduce: true,
+            deps: vec![],
+        };
+        let mut s = CommSchedule::new(3, t);
+        s.add_op(0, r(2)).unwrap();
+        s.add_op(1, r(2)).unwrap();
+        validate(&s).unwrap();
+        // ...but a plain write racing a reduce write is still rejected
+        let mut bad = s.clone();
+        bad.add_op(1, push(2, &c, vec![])).unwrap();
+        assert!(validate(&bad).is_err());
+    }
+
+    #[test]
+    fn unordered_partial_overlap_rejected() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let a = Chunk::new(x, Region::rows(0, 4, 16));
+        let b = Chunk::new(x, Region::rows(2, 4, 16));
+        let mut s = CommSchedule::new(3, t);
+        s.add_op(0, push(2, &a, vec![])).unwrap();
+        s.add_op(1, push(2, &b, vec![])).unwrap();
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("race"), "{e}");
+    }
+
+    // -- gather-destination coverage (check_covers wired into validate) -----
+
+    #[test]
+    fn gather_destination_exact_tiling_accepted() {
+        // rank 0 sends both halves: rank 1 assembles the full tensor as an
+        // exact tiling; rank 0's sourced-but-never-received regions tile too.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 4, 16));
+        let hi = Chunk::new(x, Region::rows(4, 4, 16));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push(1, &lo, vec![])).unwrap();
+        s.add_op(0, push(1, &hi, vec![])).unwrap();
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn gather_destination_overlapping_tiling_rejected() {
+        // classic off-by-row gather bug: regions sum to the tensor size but
+        // overlap (and therefore leave a gap). Program order on rank 0 makes
+        // the writes race-free, so only the coverage check can catch it.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let a = Chunk::new(x, Region::rows(0, 4, 16));
+        let b = Chunk::new(x, Region::rows(2, 4, 16));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push(1, &a, vec![])).unwrap();
+        s.add_op(0, push(1, &b, vec![])).unwrap();
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("exact tiling"), "{e}");
+    }
+
+    #[test]
+    fn partial_transfers_skip_coverage() {
+        // a plan that moves only half the tensor is not a gather and passes
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 4, 16));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push(1, &lo, vec![])).unwrap();
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn every_template_passes_strict_validate() {
+        // the strengthened validate() must keep admitting all templates
+        use crate::schedule::templates as tp;
+        for world in [2usize, 4] {
+            let mut t = TensorTable::new();
+            let x = t.declare("x", &[world * world * 2, 16], DType::F32).unwrap();
+            for s in [
+                tp::all_gather_ring(&t, x, 0, world).unwrap(),
+                tp::all_gather_swizzle(&t, x, 0, world).unwrap(),
+                tp::all_gather_direct(&t, x, 0, world).unwrap(),
+                tp::reduce_scatter_ring(&t, x, 0, world).unwrap(),
+                tp::reduce_scatter_direct(&t, x, 0, world).unwrap(),
+                tp::all_reduce_partition(&t, x, 0, world).unwrap(),
+                tp::all_reduce_rs_ag(&t, x, 0, world).unwrap(),
+                tp::all_to_all(&t, x, 0, world).unwrap(),
+            ] {
+                validate(&s).unwrap();
+                validate(&s.split_p2p(0, 2).unwrap()).unwrap();
+            }
+        }
     }
 
     #[test]

@@ -45,6 +45,28 @@ fn plan_cache_hits_on_repeat_requests() {
 }
 
 #[test]
+fn user_plan_serves_shipped_corpus_through_cached_path() {
+    // A schedule authored purely in the textual DSL (no Rust) runs
+    // end-to-end: validate -> restricted autotune -> codegen -> exec,
+    // cached under the content hash of the canonical printed form.
+    use syncopate::exec::ExecOptions;
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/plans/hetero_fig4e_2x2.sched");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), 2);
+    let cold = coord.run_user_plan(&text, ExecOptions::parallel()).unwrap();
+    assert!(!cold.cache_hit);
+    assert_eq!(cold.world, 4);
+    assert_eq!(cold.ops, 12);
+    assert_eq!(cold.stats.transfers, 12);
+    let warm = coord.run_user_plan(&text, ExecOptions::sequential()).unwrap();
+    assert!(warm.cache_hit, "re-serving the same plan must hit the cache");
+    assert_eq!(warm.hash, cold.hash);
+    // both engines moved identical bytes over the same cached plan
+    assert_eq!(warm.stats.transfers, cold.stats.transfers);
+    assert_eq!(warm.stats.bytes_moved, cold.stats.bytes_moved);
+}
+
+#[test]
 fn pipelined_submissions_all_answer() {
     let coord = Coordinator::spawn(Topology::h100_node(8).unwrap());
     let mut rxs = Vec::new();

@@ -97,6 +97,23 @@ fn attn_sp_bit_identical() {
 }
 
 #[test]
+fn imported_plans_bit_identical() {
+    // plans ported from stream-level baseline descriptions (plan_io::import)
+    // must execute with the same cross-engine bit-identity guarantee as
+    // native templates — the ISSUE 2 "ported plans execute" criterion.
+    let rt = rt();
+    for world in [2usize, 4, 8] {
+        for variant in [AgVariant::ImportedFlux, AgVariant::ImportedTritonDist] {
+            check(&rt, &move || {
+                execases::ag_gemm_variant(world, 1, 600 + world as u64, variant)
+            });
+        }
+    }
+    // the split knob composes with imported chunking
+    check(&rt, &|| execases::ag_gemm_variant(4, 2, 606, AgVariant::ImportedFlux));
+}
+
+#[test]
 fn hierarchical_ag_gemm_bit_identical() {
     // the two-level mesh template needs >= 2 ranks per node: worlds 4 and 8
     let rt = rt();

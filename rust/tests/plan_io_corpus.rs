@@ -1,0 +1,148 @@
+//! Plan-interchange corpus tests (ISSUE 2 acceptance):
+//!
+//! * every registered plan source — all schedule templates AND all
+//!   imported baseline plans — round-trips `parse(print(s)) == s`
+//!   structurally at worlds 2/4/8, with bit-identical re-printing, and
+//!   passes `validate()`;
+//! * the shipped `examples/plans/*.sched` corpus parses, validates, and
+//!   round-trips (the same checks `plan lint` runs in CI);
+//! * malformed inputs fail with `line L, col C:` positions;
+//! * a schedule authored purely in the textual DSL executes through both
+//!   engines bit-identically.
+
+use std::path::PathBuf;
+
+use syncopate::codegen::compile_comm_only;
+use syncopate::exec::{run_with, BufferStore, ExecOptions};
+use syncopate::plan_io::{parse_schedule, print_schedule, registry};
+use syncopate::runtime::Runtime;
+use syncopate::schedule::validate::validate;
+use syncopate::topo::Topology;
+
+#[test]
+fn every_source_roundtrips_at_worlds_2_4_8() {
+    for src in registry::sources() {
+        for world in [2usize, 4, 8] {
+            let tag = format!("{} @ world {world}", src.name);
+            let s = src.build(world).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            validate(&s).unwrap_or_else(|e| panic!("{tag}: {e}"));
+
+            let printed = print_schedule(&s).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            let parsed = parse_schedule(&printed).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_eq!(parsed, s, "{tag}: parse(print(s)) != s");
+            validate(&parsed).unwrap_or_else(|e| panic!("{tag} (reparsed): {e}"));
+
+            let reprinted = print_schedule(&parsed).unwrap();
+            assert_eq!(reprinted, printed, "{tag}: print->parse->print not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn split_refinements_roundtrip_too() {
+    // the autotuner's split knob must not push plans out of the format
+    for name in ["ag-ring", "ag-swizzle", "rs-direct", "flux-ag", "tdist-ag"] {
+        let s = registry::build(name, 4).unwrap().split_p2p(0, 2).unwrap();
+        validate(&s).unwrap();
+        let printed = print_schedule(&s).unwrap();
+        assert_eq!(parse_schedule(&printed).unwrap(), s, "{name} split");
+    }
+}
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/plans")
+}
+
+#[test]
+fn shipped_corpus_parses_validates_and_roundtrips() {
+    let dir = corpus_dir();
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("examples/plans must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("sched") {
+            continue;
+        }
+        seen += 1;
+        let tag = path.display().to_string();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let s = parse_schedule(&text).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        validate(&s).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let printed = print_schedule(&s).unwrap();
+        assert_eq!(parse_schedule(&printed).unwrap(), s, "{tag}");
+    }
+    assert!(seen >= 3, "shipped corpus went missing ({seen} files in {dir:?})");
+}
+
+#[test]
+fn malformed_inputs_report_line_and_col() {
+    // (input, expected line, expected message fragment)
+    let cases = [
+        ("plan v2 world 4\n", "line 1", "unsupported plan version"),
+        ("plan v1 world 0\n", "line 1", "world must be > 0"),
+        ("tensor x f32 4x4\n", "line 1", "header"),
+        ("plan v1 world 2\ntensor x f99 4x4\n", "line 2, col 10", "unknown dtype"),
+        (
+            "plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  zap x[0:1, 0:4] -> x[0:1, 0:4] peer 1\n",
+            "line 4, col 3",
+            "unknown op",
+        ),
+        (
+            "plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  push y[0:1, 0:4] -> y[0:1, 0:4] peer 1\n",
+            "line 4, col 8",
+            "unknown tensor",
+        ),
+        (
+            "plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  push x[0:1, 0:4] -> x[0:1, 0:4]\n",
+            "line 4",
+            "expected `peer`",
+        ),
+        (
+            "plan v1 world 2\ntensor x f32 4x4\nrank 0:\n  push x[1:0, 0:4] -> x[0:1, 0:4] peer 1\n",
+            "line 4",
+            "inverted range",
+        ),
+        ("plan v1 world 2\nrank 9:\n", "line 2, col 6", "out of world"),
+    ];
+    for (input, at, what) in cases {
+        let e = parse_schedule(input).unwrap_err().to_string();
+        assert!(e.contains(at), "`{input}` -> {e} (wanted position {at})");
+        assert!(e.contains(what), "`{input}` -> {e} (wanted `{what}`)");
+    }
+}
+
+#[test]
+fn dsl_only_schedule_executes_bit_identically_in_both_engines() {
+    // authored as text, never through the Rust builder API
+    let text = std::fs::read_to_string(corpus_dir().join("hetero_fig4e_2x2.sched")).unwrap();
+    let sched = parse_schedule(&text).unwrap();
+    validate(&sched).unwrap();
+    let topo = Topology::h100_multinode(2, 2).unwrap();
+    let real = syncopate::autotune::tune_user_plan(&sched, &topo).unwrap().real;
+    let plan = compile_comm_only(&sched, real, &topo).unwrap();
+    let rt = Runtime::host_reference();
+
+    let seed_store = || {
+        let mut store = BufferStore::new(4);
+        store.declare("x", &[8, 16]).unwrap();
+        for r in 0..4 {
+            let mut xr = vec![0.0f32; 8 * 16];
+            for (i, v) in xr[r * 2 * 16..(r * 2 + 2) * 16].iter_mut().enumerate() {
+                *v = (r * 1000 + i) as f32 * 0.5;
+            }
+            store.set(r, "x", &xr).unwrap();
+        }
+        store
+    };
+
+    let seq = seed_store();
+    run_with(&plan, &sched.tensors, &seq, &rt, &ExecOptions::sequential()).unwrap();
+    let par = seed_store();
+    run_with(&plan, &sched.tensors, &par, &rt, &ExecOptions::parallel()).unwrap();
+    for r in 0..4 {
+        let a = seq.get(r, "x").unwrap();
+        let b = par.get(r, "x").unwrap();
+        assert_eq!(a, b, "rank {r} diverged between engines");
+        // and the gather completed: no zeros remain anywhere but position 0
+        assert!(a.iter().skip(1).all(|&v| v != 0.0), "rank {r} missed a shard");
+    }
+}

@@ -86,7 +86,9 @@ fn prop_grid_coords_roundtrip() {
 }
 
 /// Property: every random valid push/pull schedule is accepted by validate
-/// and its topo order respects all deps.
+/// and its topo order respects all deps. Duplicate writes of the same shard
+/// to the same destination are chained through a dependency on the previous
+/// writer — validate() rejects unordered overlapping writes as races.
 #[test]
 fn prop_random_schedules_validate_and_order() {
     let mut rng = Rng::new(0xDEAD);
@@ -98,6 +100,8 @@ fn prop_random_schedules_validate_and_order() {
         let mut s = CommSchedule::new(world, table);
         // random ops with deps only on already-added ops (guarantees DAG)
         let mut added: Vec<(usize, usize)> = Vec::new();
+        let mut last_writer: std::collections::HashMap<(usize, usize), (usize, usize)> =
+            std::collections::HashMap::new();
         for _ in 0..rng.below(20) + 1 {
             let rank = rng.below(world);
             let mut peer = rng.below(world);
@@ -108,17 +112,27 @@ fn prop_random_schedules_validate_and_order() {
             let region =
                 Region::rows(shard * (rows / world), rows / world, 8);
             let c = Chunk::new(x, region);
-            let deps = if !added.is_empty() && rng.below(2) == 1 {
+            let mut deps = if !added.is_empty() && rng.below(2) == 1 {
                 let (dr, di) = added[rng.below(added.len())];
                 vec![Dep::on(dr, di)]
             } else {
                 vec![]
             };
             let kind = if rng.below(2) == 0 { TransferKind::Push } else { TransferKind::Pull };
+            // order repeat writes of the same (destination, shard) after the
+            // previous writer, as a race-free plan must
+            let dst = if kind == TransferKind::Push { peer } else { rank };
+            if let Some(&(pr, pi)) = last_writer.get(&(dst, shard)) {
+                let d = Dep::on(pr, pi);
+                if !deps.contains(&d) {
+                    deps.push(d);
+                }
+            }
             let idx = s
                 .add_op(rank, CommOp::P2p { kind, peer, src: c.clone(), dst: c, reduce: false, deps })
                 .unwrap();
             added.push((rank, idx));
+            last_writer.insert((dst, shard), (rank, idx));
         }
         validate(&s).unwrap_or_else(|e| panic!("iter {it}: {e}"));
         let order = topo_order(&s).unwrap();
