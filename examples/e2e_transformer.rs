@@ -103,7 +103,7 @@ fn transformer_block_case(world: usize, seed: u64) -> syncopate::Result<ExecCase
         store.set(r, "k", &kr)?;
         store.set(r, "v", &vr)?;
         store.set(r, "q", &qs[r])?;
-        store.set(r, "m", &vec![-1e30f32; SQ])?;
+        store.set(r, "m", &[-1e30f32; SQ])?;
         store.set(r, "x", &x_glob)?;
         store.set(r, "w1", &w1s[r])?;
         store.set(r, "b1", &b1s[r])?;

@@ -259,10 +259,28 @@ pub struct TuneCache {
 }
 
 impl TuneCache {
-    /// Record a result for an operator.
-    pub fn insert(&mut self, op: &OperatorInstance, r: &TuneResult) {
-        self.entries.retain(|(l, ..)| l != &op.label());
-        self.entries.push((op.label(), r.cfg.label(), r.makespan_us, r.tflops));
+    /// Record a result for an operator. Fails with [`Error::Autotune`] when
+    /// either label embeds a tab or newline — the TSV format's structural
+    /// characters — instead of writing a cache file that parses back into
+    /// different (or silently merged) entries.
+    pub fn insert(&mut self, op: &OperatorInstance, r: &TuneResult) -> Result<()> {
+        self.insert_raw(&op.label(), &r.cfg.label(), r.makespan_us, r.tflops)
+    }
+
+    /// Label-level insert for callers with non-registry labels; the same
+    /// structural-character validation applies.
+    pub fn insert_raw(&mut self, op_label: &str, cfg_label: &str, m: f64, t: f64) -> Result<()> {
+        for (what, s) in [("operator label", op_label), ("config label", cfg_label)] {
+            if s.contains('\t') || s.contains('\n') {
+                return Err(Error::Autotune(format!(
+                    "cannot cache {what} {s:?}: embedded tab/newline would corrupt \
+                     the TSV cache"
+                )));
+            }
+        }
+        self.entries.retain(|(l, ..)| l != op_label);
+        self.entries.push((op_label.to_string(), cfg_label.to_string(), m, t));
+        Ok(())
     }
 
     /// Look up a cached config label for an operator.
@@ -297,9 +315,15 @@ impl TuneCache {
             if line.trim().is_empty() {
                 continue;
             }
-            let cols: Vec<&str> = line.split('\t').collect();
-            if cols.len() != 4 {
-                return Err(Error::Autotune(format!("cache line {}: need 4 cols", i + 1)));
+            // splitn keeps any surplus tabs inside the last fragment, where
+            // the float parse rejects them — a line can never contribute
+            // more than one entry however mangled its labels are
+            let cols: Vec<&str> = line.splitn(4, '\t').collect();
+            if cols.len() != 4 || cols[3].contains('\t') {
+                return Err(Error::Autotune(format!(
+                    "cache line {}: need exactly 4 tab-separated cols",
+                    i + 1
+                )));
             }
             let m: f64 = cols[2]
                 .parse()
@@ -394,7 +418,7 @@ mod tests {
         let r = tune(&op, &topo(), Budget::Quick).unwrap();
         let mut c = TuneCache::default();
         assert!(c.is_empty());
-        c.insert(&op, &r);
+        c.insert(&op, &r).unwrap();
         assert_eq!(c.len(), 1);
         let (cfg, m, t) = c.get(&op).unwrap();
         assert_eq!(cfg, r.cfg.label());
@@ -404,7 +428,7 @@ mod tests {
         let c2 = TuneCache::from_tsv(&c.to_tsv()).unwrap();
         assert_eq!(c, c2);
         // replacing an entry keeps the cache deduped
-        c.insert(&op, &r);
+        c.insert(&op, &r).unwrap();
         assert_eq!(c.len(), 1);
         // parse errors
         assert!(TuneCache::from_tsv("a\tb\tc\n").is_err());
@@ -417,12 +441,53 @@ mod tests {
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
         let r = tune(&op, &topo(), Budget::Quick).unwrap();
         let mut c = TuneCache::default();
-        c.insert(&op, &r);
+        c.insert(&op, &r).unwrap();
         let path = std::env::temp_dir().join("syncopate_tune_cache_test.tsv");
         c.save(&path).unwrap();
         let loaded = TuneCache::load(&path).unwrap();
         assert_eq!(c, loaded);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_roundtrips_every_suite_label() {
+        // ISSUE 3 satellite: every fig8/fig9 operator label (and the
+        // default config label) must survive the TSV round trip verbatim
+        let mut c = TuneCache::default();
+        let ops: Vec<_> =
+            crate::workload::fig8_suite().into_iter().chain(crate::workload::fig9_suite()).collect();
+        for (i, op) in ops.iter().enumerate() {
+            let r = TuneResult {
+                cfg: TuneConfig::default(),
+                makespan_us: 1.25 * (i + 1) as f64,
+                tflops: 0.5 * (i + 1) as f64,
+                evaluated: 1,
+                pruned: 0,
+                log: vec![],
+            };
+            c.insert(op, &r).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
+        }
+        assert_eq!(c.len(), ops.len(), "suite labels must be distinct");
+        let reloaded = TuneCache::from_tsv(&c.to_tsv()).unwrap();
+        assert_eq!(c, reloaded);
+        for op in &ops {
+            assert!(reloaded.get(op).is_some(), "{} lost in round trip", op.label());
+        }
+    }
+
+    #[test]
+    fn cache_rejects_structural_characters_in_labels() {
+        let mut c = TuneCache::default();
+        for bad in ["tab\tlabel", "newline\nlabel"] {
+            let e = c.insert_raw(bad, "cfg", 1.0, 2.0).unwrap_err();
+            assert!(matches!(e, Error::Autotune(_)), "{e:?}");
+            assert!(e.to_string().contains("corrupt"), "{e}");
+            let e = c.insert_raw("op", bad, 1.0, 2.0).unwrap_err();
+            assert!(e.to_string().contains("corrupt"), "{e}");
+        }
+        assert!(c.is_empty(), "rejected inserts must not partially apply");
+        // a mangled file can never smuggle extra columns into an entry
+        assert!(TuneCache::from_tsv("a\tb\t1.0\t2.0\textra\n").is_err());
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::exec::verify::{
 use crate::exec::{run_with, BufferStore, ExecOptions, ExecStats};
 use crate::kernel::grid::{Axis, TileGrid};
 use crate::kernel::scheduler::TileScheduler;
+use crate::pipeline::{self, Stage};
 use crate::runtime::Runtime;
 use crate::schedule::{templates, CommSchedule, OpRef};
 use crate::topo::Topology;
@@ -148,6 +149,32 @@ fn run_and_verify_stats(case: &ExecCase, runtime: &Runtime) -> Result<ExecStats>
     Ok(stats)
 }
 
+/// Reject degenerate world sizes with a named error instead of letting
+/// them panic (or silently no-op) deep inside template construction.
+fn check_world(case: &str, world: usize) -> Result<()> {
+    if world < 2 {
+        return Err(Error::Coordinator(format!(
+            "{case}: world must be >= 2 (got {world})"
+        )));
+    }
+    Ok(())
+}
+
+/// Reject degenerate split factors with a named error: `split == 0` would
+/// otherwise panic on the modulo, and a non-dividing split would surface
+/// as an opaque region error.
+fn check_split(case: &str, split: usize, shard: usize) -> Result<()> {
+    if split == 0 {
+        return Err(Error::Coordinator(format!("{case}: split must be >= 1 (got 0)")));
+    }
+    if shard % split != 0 {
+        return Err(Error::Coordinator(format!(
+            "{case}: split {split} does not evenly divide the {shard}-row shard"
+        )));
+    }
+    Ok(())
+}
+
 fn default_real(reduce: bool) -> Realization {
     if reduce {
         Realization::new(BackendKind::LdStSpecialized, 16)
@@ -249,10 +276,15 @@ pub fn ag_gemm_variant(
     seed: u64,
     variant: AgVariant,
 ) -> Result<ExecCase> {
+    // error messages name the registry case this variant actually backs
+    let case = match variant {
+        AgVariant::ImportedFlux => "ag-gemm-flux",
+        AgVariant::ImportedTritonDist => "ag-gemm-tdist",
+        _ => "ag-gemm",
+    };
+    check_world(case, world)?;
     let shard = 32usize;
-    if shard % split != 0 {
-        return Err(Error::Coordinator(format!("split {split} !| {shard}")));
-    }
+    check_split(case, split, shard)?;
     let bm = shard / split;
     let artifact = format!("gemm_{bm}x{GEMM_K}x{GEMM_N}");
     let m = world * shard;
@@ -356,6 +388,7 @@ pub fn gemm_ar(world: usize, seed: u64) -> Result<ExecCase> {
 }
 
 fn gemm_reduce_case(world: usize, seed: u64, all_reduce: bool) -> Result<ExecCase> {
+    check_world(if all_reduce { "gemm-ar" } else { "gemm-rs" }, world)?;
     let shard = 16usize;
     let bm = shard; // one tile per output shard
     let artifact = format!("gemm_{bm}x{GEMM_K}x{GEMM_N}");
@@ -457,6 +490,7 @@ fn gemm_reduce_case(world: usize, seed: u64, all_reduce: bool) -> Result<ExecCas
 
 /// A2A-GEMM: block exchange then per-block GEMM on received tokens.
 pub fn a2a_gemm(world: usize, seed: u64) -> Result<ExecCase> {
+    check_world("a2a-gemm", world)?;
     let blk = 8usize;
     let artifact = format!("gemm_{blk}x{GEMM_K}x{GEMM_N}");
     let m = world * world * blk;
@@ -548,10 +582,9 @@ pub fn a2a_gemm(world: usize, seed: u64) -> Result<ExecCase> {
 /// RingAttention: rotate K/V shards around the ring, folding each arrival
 /// with the online-softmax Pallas step; finalize at the end.
 pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
+    check_world("ring-attn", world)?;
     let shard = ATTN_SQ; // K/V rows per rank
-    if shard % split != 0 {
-        return Err(Error::Coordinator(format!("split {split} !| {shard}")));
-    }
+    check_split("ring-attn", split, shard)?;
     let ch = shard / split;
     let step_artifact = format!("attn_step_q{ATTN_SQ}d{ATTN_D}k{ch}");
     let fin_artifact = format!("attn_finalize_q{ATTN_SQ}d{ATTN_D}");
@@ -604,7 +637,7 @@ pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase>
         store.set(r, "k", &kr)?;
         store.set(r, "v", &vr)?;
         store.set(r, "q", &qs[r])?;
-        store.set(r, "m", &vec![-1e30f32; ATTN_SQ])?;
+        store.set(r, "m", &[-1e30f32; ATTN_SQ])?;
     }
 
     let mut inputs = Vec::new();
@@ -686,7 +719,13 @@ pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase>
 /// `nodes * rpn` ranks; validates that the multi-level schedule's deps
 /// deliver every shard exactly once and the chunked GEMM still matches.
 pub fn ag_gemm_hierarchical(nodes: usize, rpn: usize, seed: u64) -> Result<ExecCase> {
+    if nodes == 0 || rpn == 0 {
+        return Err(Error::Coordinator(format!(
+            "ag-gemm-hier: need nodes >= 1 and ranks-per-node >= 1 (got {nodes}x{rpn})"
+        )));
+    }
     let world = nodes * rpn;
+    check_world("ag-gemm-hier", world)?;
     let shard = 16usize;
     let artifact = format!("gemm_{shard}x{GEMM_K}x{GEMM_N}");
     let m = world * shard;
@@ -774,6 +813,7 @@ pub fn ag_gemm_hierarchical(nodes: usize, rpn: usize, seed: u64) -> Result<ExecC
 /// the direct pull swizzle (no ring deps), fold each arrival blockwise —
 /// the AttnSp pattern of Fig. 9 with real numerics.
 pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
+    check_world("attn-sp", world)?;
     let shard = ATTN_SQ;
     let step_artifact = format!("attn_step_q{ATTN_SQ}d{ATTN_D}k{shard}");
     let fin_artifact = format!("attn_finalize_q{ATTN_SQ}d{ATTN_D}");
@@ -822,7 +862,7 @@ pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
         store.set(r, "k", &kr)?;
         store.set(r, "v", &vr)?;
         store.set(r, "q", &qs[r])?;
-        store.set(r, "m", &vec![-1e30f32; ATTN_SQ])?;
+        store.set(r, "m", &[-1e30f32; ATTN_SQ])?;
     }
 
     let mut inputs = Vec::new();
@@ -889,6 +929,408 @@ pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
 }
 
 // ---------------------------------------------------------------------------
+// Fused cross-operator pipelines (`crate::pipeline`): multiple operators'
+// chunk schedules composed into ONE barrier-free plan. These are the
+// repro's demonstration of the paper's kernel-boundary-sync claim: every
+// other case overlaps comm and compute *within* one operator; these two
+// overlap *across* the operator seam.
+// ---------------------------------------------------------------------------
+
+/// Fused tensor-parallel MLP block: AG-GEMM → GEMM-RS with no barrier at
+/// the operator boundary.
+///
+/// Stage 1 gathers row-sharded `x` and computes the rank-private hidden
+/// `h = X_full @ w1_r`; stage 2 computes the partial output
+/// `y_r = h @ w2_r` and ReduceScatters it so rank `j` ends owning the
+/// fully-reduced row shard `j` of `Y = Σ_r X·w1_r·w2_r` — the exact
+/// math of a TP MLP block. The combined tile grid interleaves each stage-2
+/// tile right behind the stage-1 tile producing its input, so the reduce
+/// push of output shard `j` issues the moment rows `j` of `h·w2` exist,
+/// while later `x` chunks are still in flight.
+pub fn tp_block(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
+    check_world("tp-block", world)?;
+    let shard = 16usize;
+    check_split("tp-block", split, shard)?;
+    let bm = shard / split;
+    // stage 1 contracts over GEMM_K (x @ w1), stage 2 over GEMM_N
+    // (h @ w2) — equal at the canonical shapes, but kept distinct so the
+    // artifacts/flops stay right if the canon ever diverges
+    let artifact1 = format!("gemm_{bm}x{GEMM_K}x{GEMM_N}");
+    let artifact2 = format!("gemm_{bm}x{GEMM_N}x{GEMM_N}");
+    let m = world * shard;
+    let topo = Topology::h100_node(world)?;
+
+    // Stage schedules over their own tensor tables; pipeline::fuse merges
+    // the namespaces and validates the fused plan. The split knob then
+    // refines BOTH stages' transfers, like any single-operator schedule.
+    let mut t1 = TensorTable::new();
+    let x = t1.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
+    let mut t2 = TensorTable::new();
+    let y = t2.declare("y", &[m, GEMM_N], crate::chunk::DType::F32)?;
+    let fused = pipeline::fuse(&[
+        Stage::new("ag", templates::all_gather_swizzle(&t1, x, 0, world)?),
+        Stage::new("rs", templates::reduce_scatter_direct(&t2, y, 0, world)?),
+    ])?;
+    let sched = fused.sched.split_p2p(0, split)?;
+    let y_id = sched.tensors.lookup("y").expect("fused table keeps y");
+
+    // Combined grid: tiles [0, m/bm) are the stage-1 h tiles, tiles
+    // [m/bm, 2m/bm) the stage-2 y tiles over the same rows.
+    let half = m / bm;
+    let grid = TileGrid::new(vec![Axis::new("P", 2 * m, bm)?])?;
+
+    let mut rng = Rng::new(seed);
+    let x_global = rng.vec_f32(m * GEMM_K);
+    let w1s: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(GEMM_K * GEMM_N)).collect();
+    let w2s: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(GEMM_N * GEMM_N)).collect();
+
+    let mut store = BufferStore::new(world);
+    store.declare("x", &[m, GEMM_K])?;
+    store.declare("w1", &[GEMM_K, GEMM_N])?;
+    store.declare("h", &[m, GEMM_N])?;
+    store.declare("w2", &[GEMM_N, GEMM_N])?;
+    store.declare("y", &[m, GEMM_N])?;
+    for r in 0..world {
+        let mut xr = vec![0.0f32; m * GEMM_K];
+        let a = r * shard * GEMM_K;
+        xr[a..a + shard * GEMM_K].copy_from_slice(&x_global[a..a + shard * GEMM_K]);
+        store.set(r, "x", &xr)?;
+        store.set(r, "w1", &w1s[r])?;
+        store.set(r, "w2", &w2s[r])?;
+    }
+
+    let mut inputs = Vec::new();
+    for rank in 0..world {
+        // Chunk↔tile containment over the COMBINED grid: incoming x chunks
+        // feed the h tiles of their rows (rows_map, identity coordinates);
+        // outgoing y reduce pushes are fed by the y tiles of theirs, whose
+        // combined-grid coordinates sit at +m. This is the fine-grained
+        // boundary sync: no op anywhere waits for "stage 1 done".
+        let mut map = rows_map(&sched, rank, &grid, Some("x"), None)?;
+        for (index, op) in sched.per_rank[rank].iter().enumerate() {
+            if op.consumed_chunk().tensor == y_id {
+                let reg = &op.consumed_chunk().region;
+                map.producers.entry(OpRef { rank, index }).or_default().extend(
+                    grid.tiles_intersecting(&[Some((
+                        m + reg.offset[0],
+                        m + reg.offset[0] + reg.sizes[0],
+                    ))])?,
+                );
+            }
+        }
+        // Visiting order: local row blocks first, then x-chunk arrival
+        // order — each h tile immediately followed by the y tile it feeds.
+        let groups = map.consumer_groups(rank);
+        let mut covered = vec![false; half];
+        for tiles in groups.values() {
+            for &t in tiles {
+                covered[t] = true; // consumer tiles are h tiles (< half)
+            }
+        }
+        let mut order = Vec::with_capacity(2 * half);
+        for (t, seen) in covered.iter().enumerate() {
+            if !seen {
+                order.push(t);
+                order.push(t + half);
+            }
+        }
+        for k in 0..groups.len() {
+            for &t in &groups[&k] {
+                order.push(t);
+                order.push(t + half);
+            }
+        }
+        let order = TileScheduler { order };
+        let sync = plan_rank_sync(rank, &sched, &order, &map)?;
+        let mut tile_calls: HashMap<usize, Vec<CallSpec>> = HashMap::new();
+        for t in 0..half {
+            let rows = (t * bm, (t + 1) * bm);
+            tile_calls.insert(
+                t,
+                vec![CallSpec::GemmRows {
+                    artifact: artifact1.clone(),
+                    a: "x".into(),
+                    b: "w1".into(),
+                    out: "h".into(),
+                    rows,
+                    accumulate: false,
+                }],
+            );
+            tile_calls.insert(
+                t + half,
+                vec![CallSpec::GemmRows {
+                    artifact: artifact2.clone(),
+                    a: "h".into(),
+                    b: "w2".into(),
+                    out: "y".into(),
+                    rows,
+                    // y also receives reduce transfers: all contributions
+                    // commute, plan_prep serializes them canonically
+                    accumulate: true,
+                }],
+            );
+        }
+        let mut tile_flops = vec![2.0 * bm as f64 * GEMM_N as f64 * GEMM_K as f64; half];
+        tile_flops.extend(vec![2.0 * bm as f64 * GEMM_N as f64 * GEMM_N as f64; half]);
+        inputs.push(RankComputeInput {
+            grid: grid.clone(),
+            order,
+            sync,
+            tile_flops,
+            tile_calls,
+        });
+    }
+    let plan = compile(&sched, &inputs, default_real(true), &topo)?;
+
+    // oracle: h_r = X @ W1_r; Y = Σ_r h_r @ W2_r; rank r owns shard r of Y
+    let hs: Vec<Vec<f32>> =
+        (0..world).map(|r| host_gemm(&x_global, &w1s[r], m, GEMM_K, GEMM_N)).collect();
+    let partials: Vec<Vec<f32>> =
+        (0..world).map(|r| host_gemm(&hs[r], &w2s[r], m, GEMM_N, GEMM_N)).collect();
+    let refs: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+    let y_sum = host_sum(&refs);
+    let mut checks = Vec::new();
+    for r in 0..world {
+        checks.push(Check {
+            rank: r,
+            tensor: "h".into(),
+            expected: hs[r].clone(),
+            what: format!("fused TP block: h@rank{r} == X_full @ W1_{r}"),
+        });
+        let mut expected = partials[r].clone();
+        let a = r * shard * GEMM_N;
+        expected[a..a + shard * GEMM_N].copy_from_slice(&y_sum[a..a + shard * GEMM_N]);
+        checks.push(Check {
+            rank: r,
+            tensor: "y".into(),
+            expected,
+            what: format!("fused TP block: reduced shard {r}@rank{r}"),
+        });
+    }
+    Ok(ExecCase {
+        name: format!("tp-block-w{world}-s{split}"),
+        sched,
+        plan,
+        store,
+        checks,
+    })
+}
+
+/// Per-stage plans of the tp-block pipeline (same shapes, flops and
+/// realization as [`tp_block`], no attached numerics). The
+/// barrier-at-boundary baseline runs stage N+1 only after stage N's plan
+/// fully completes device-wide, so its makespan is the SUM of these plans'
+/// simulated makespans — each stage keeps its *internal* overlap, exactly
+/// like per-operator overlapped kernels that still sync at the seam
+/// (DESIGN.md §12). `reports::pipeline` scores fused vs. this.
+pub fn tp_block_stage_plans(world: usize, split: usize) -> Result<Vec<ExecutablePlan>> {
+    check_world("tp-block", world)?;
+    let shard = 16usize;
+    check_split("tp-block", split, shard)?;
+    let bm = shard / split;
+    let m = world * shard;
+    let topo = Topology::h100_node(world)?;
+    // stage-specific contraction depths, as in tp_block
+    let flops1 = 2.0 * bm as f64 * GEMM_N as f64 * GEMM_K as f64;
+    let flops2 = 2.0 * bm as f64 * GEMM_N as f64 * GEMM_N as f64;
+    let grid = TileGrid::new(vec![Axis::new("M", m, bm)?])?;
+
+    // stage 1: AllGather(x) overlapped with the h tiles
+    let mut t1 = TensorTable::new();
+    let x = t1.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
+    let s1 = templates::all_gather_swizzle(&t1, x, 0, world)?.split_p2p(0, split)?;
+    let mut inputs = Vec::new();
+    for rank in 0..world {
+        let map = rows_map(&s1, rank, &grid, Some("x"), None)?;
+        let order = chunk_major_order(&grid, &map, rank)?;
+        let sync = plan_rank_sync(rank, &s1, &order, &map)?;
+        inputs.push(RankComputeInput {
+            grid: grid.clone(),
+            order,
+            sync,
+            tile_flops: vec![flops1; grid.num_tiles()],
+            tile_calls: HashMap::new(),
+        });
+    }
+    let p1 = compile(&s1, &inputs, default_real(true), &topo)?;
+
+    // stage 2: the y tiles overlapped with the ReduceScatter of their shards
+    let mut t2 = TensorTable::new();
+    let y = t2.declare("y", &[m, GEMM_N], crate::chunk::DType::F32)?;
+    let s2 = templates::reduce_scatter_direct(&t2, y, 0, world)?.split_p2p(0, split)?;
+    let mut inputs = Vec::new();
+    for rank in 0..world {
+        let map = rows_map(&s2, rank, &grid, None, Some("y"))?;
+        let order = TileScheduler::row_major(&grid);
+        let sync = plan_rank_sync(rank, &s2, &order, &map)?;
+        inputs.push(RankComputeInput {
+            grid: grid.clone(),
+            order,
+            sync,
+            tile_flops: vec![flops2; grid.num_tiles()],
+            tile_calls: HashMap::new(),
+        });
+    }
+    let p2 = compile(&s2, &inputs, default_real(true), &topo)?;
+    Ok(vec![p1, p2])
+}
+
+/// Fused MoE block: AllToAll dispatch → per-rank expert GEMMs → AllToAll
+/// combine, as ONE barrier-free plan.
+///
+/// Token block `(i, j)` (row owner `i`, expert `j`) is dispatched to rank
+/// `j`, transformed by expert `j`'s weight the moment it lands, and the
+/// result pushed straight back to row owner `i` the moment the expert tile
+/// finishes — dispatch, expert compute, and combine are all in flight at
+/// once instead of three device-wide phases.
+pub fn moe_a2a(world: usize, seed: u64) -> Result<ExecCase> {
+    check_world("moe-a2a", world)?;
+    let blk = 8usize;
+    let artifact = format!("gemm_{blk}x{GEMM_K}x{GEMM_N}");
+    let m = world * world * blk;
+    let topo = Topology::h100_node(world)?;
+
+    let mut t1 = TensorTable::new();
+    let x = t1.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
+    let mut t2 = TensorTable::new();
+    let y = t2.declare("y", &[m, GEMM_N], crate::chunk::DType::F32)?;
+    let fused = pipeline::fuse(&[
+        Stage::new("dispatch", templates::all_to_all(&t1, x, 0, world)?),
+        Stage::new("combine", templates::all_to_all_transpose(&t2, y, 0, world)?),
+    ])?;
+    let sched = fused.sched;
+
+    let grid = TileGrid::new(vec![Axis::new("M", m, blk)?])?;
+    let mut rng = Rng::new(seed);
+    let x_global = rng.vec_f32(m * GEMM_K);
+    let ws: Vec<Vec<f32>> = (0..world).map(|_| rng.vec_f32(GEMM_K * GEMM_N)).collect();
+
+    let mut store = BufferStore::new(world);
+    store.declare("x", &[m, GEMM_K])?;
+    store.declare("w", &[GEMM_K, GEMM_N])?;
+    store.declare("y", &[m, GEMM_N])?;
+    for r in 0..world {
+        // rank r owns token block row r: global rows [r·w·blk, (r+1)·w·blk)
+        let mut xr = vec![0.0f32; m * GEMM_K];
+        let a = r * world * blk * GEMM_K;
+        xr[a..a + world * blk * GEMM_K]
+            .copy_from_slice(&x_global[a..a + world * blk * GEMM_K]);
+        store.set(r, "x", &xr)?;
+        store.set(r, "w", &ws[r])?;
+    }
+
+    let flops = 2.0 * blk as f64 * GEMM_N as f64 * GEMM_K as f64;
+    let mut inputs = Vec::new();
+    for rank in 0..world {
+        // incoming x blocks feed the expert tiles of their rows; outgoing
+        // y combine pushes are fed by the tiles that computed their blocks
+        let map = rows_map(&sched, rank, &grid, Some("x"), Some("y"))?;
+        let order = chunk_major_order(&grid, &map, rank)?;
+        let sync = plan_rank_sync(rank, &sched, &order, &map)?;
+        // expert `rank` computes blocks (i, rank): global rows (i·w+rank)·blk
+        let mut tile_calls: HashMap<usize, Vec<CallSpec>> = HashMap::new();
+        let mut tile_flops = vec![0.0f64; grid.num_tiles()];
+        for i in 0..world {
+            let r0 = (i * world + rank) * blk;
+            let tile = r0 / blk;
+            tile_flops[tile] = flops;
+            tile_calls.insert(
+                tile,
+                vec![CallSpec::GemmRows {
+                    artifact: artifact.clone(),
+                    a: "x".into(),
+                    b: "w".into(),
+                    out: "y".into(),
+                    rows: (r0, r0 + blk),
+                    accumulate: false,
+                }],
+            );
+        }
+        inputs.push(RankComputeInput { grid: grid.clone(), order, sync, tile_flops, tile_calls });
+    }
+    let plan = compile(&sched, &inputs, default_real(false), &topo)?;
+
+    // oracle: rank r ends with its combined row blocks (r, *) plus the
+    // expert outputs it computed locally, blocks (*, r); the rest stays 0
+    let mut checks = Vec::new();
+    for r in 0..world {
+        let mut expected = vec![0.0f32; m * GEMM_N];
+        {
+            let mut put = |i: usize, j: usize| {
+                let r0 = (i * world + j) * blk;
+                let yrows = host_gemm(
+                    &x_global[r0 * GEMM_K..(r0 + blk) * GEMM_K],
+                    &ws[j],
+                    blk,
+                    GEMM_K,
+                    GEMM_N,
+                );
+                expected[r0 * GEMM_N..(r0 + blk) * GEMM_N].copy_from_slice(&yrows);
+            };
+            for j in 0..world {
+                put(r, j); // combined row blocks (r, *)
+            }
+            for i in 0..world {
+                put(i, r); // locally computed expert outputs (*, r)
+            }
+        }
+        checks.push(Check {
+            rank: r,
+            tensor: "y".into(),
+            expected,
+            what: format!("fused MoE: combined rows + expert outputs @rank{r}"),
+        });
+    }
+    Ok(ExecCase { name: format!("moe-a2a-w{world}"), sched, plan, store, checks })
+}
+
+/// Per-stage plans of the MoE pipeline for the barrier-at-boundary
+/// baseline: dispatch AllToAll, then the expert GEMMs, then the combine
+/// AllToAll, each as its own device-wide-synced plan (see
+/// [`tp_block_stage_plans`]).
+pub fn moe_a2a_stage_plans(world: usize) -> Result<Vec<ExecutablePlan>> {
+    check_world("moe-a2a", world)?;
+    let blk = 8usize;
+    let m = world * world * blk;
+    let topo = Topology::h100_node(world)?;
+    let real = default_real(false);
+
+    let mut t1 = TensorTable::new();
+    let x = t1.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
+    let p1 =
+        crate::codegen::compile_comm_only(&templates::all_to_all(&t1, x, 0, world)?, real, &topo)?;
+
+    // stage 2: the expert GEMMs alone (no communication)
+    let grid = TileGrid::new(vec![Axis::new("M", m, blk)?])?;
+    let flops = 2.0 * blk as f64 * GEMM_N as f64 * GEMM_K as f64;
+    let empty = CommSchedule::new(world, TensorTable::new());
+    let mut inputs = Vec::new();
+    for rank in 0..world {
+        let mut tile_flops = vec![0.0f64; grid.num_tiles()];
+        for i in 0..world {
+            tile_flops[i * world + rank] = flops;
+        }
+        inputs.push(RankComputeInput {
+            grid: grid.clone(),
+            order: TileScheduler::row_major(&grid),
+            sync: crate::depgraph::RankSync::default(),
+            tile_flops,
+            tile_calls: HashMap::new(),
+        });
+    }
+    let p2 = compile(&empty, &inputs, real, &topo)?;
+
+    let mut t3 = TensorTable::new();
+    let y = t3.declare("y", &[m, GEMM_N], crate::chunk::DType::F32)?;
+    let p3 = crate::codegen::compile_comm_only(
+        &templates::all_to_all_transpose(&t3, y, 0, world)?,
+        real,
+        &topo,
+    )?;
+    Ok(vec![p1, p2, p3])
+}
+
+// ---------------------------------------------------------------------------
 // Case registry: the single source of truth for named exec cases, shared by
 // the CLI (`exec --case NAME`, `exec --case list`) and tests. Adding a case
 // here makes it reachable everywhere; unknown-case errors list the registry.
@@ -911,6 +1353,24 @@ impl Default for CaseParams {
     }
 }
 
+impl CaseParams {
+    /// Range checks every case shares, run before any builder: degenerate
+    /// values fail with a named [`Error::Coordinator`] message instead of
+    /// panicking deep inside template/grid construction. Builders add
+    /// case-specific checks (split divisibility, node factorization) on
+    /// top.
+    pub fn check(&self, case: &str) -> Result<()> {
+        check_world(case, self.world)?;
+        if self.split == 0 {
+            return Err(Error::Coordinator(format!("{case}: split must be >= 1 (got 0)")));
+        }
+        if self.nodes == 0 {
+            return Err(Error::Coordinator(format!("{case}: nodes must be >= 1 (got 0)")));
+        }
+        Ok(())
+    }
+}
+
 /// One registered validation case.
 pub struct CaseSpec {
     pub name: &'static str,
@@ -920,6 +1380,7 @@ pub struct CaseSpec {
 
 impl CaseSpec {
     pub fn build(&self, p: &CaseParams) -> Result<ExecCase> {
+        p.check(self.name)?;
         (self.build)(p)
     }
 }
@@ -968,6 +1429,16 @@ pub const CASES: &[CaseSpec] = &[
             }
             ag_gemm_hierarchical(p.nodes, p.world / p.nodes, p.seed)
         },
+    },
+    CaseSpec {
+        name: "tp-block",
+        about: "fused TP MLP block: AG-GEMM -> GEMM-RS, no boundary barrier",
+        build: |p| tp_block(p.world, p.split, p.seed),
+    },
+    CaseSpec {
+        name: "moe-a2a",
+        about: "fused MoE block: A2A dispatch -> expert GEMMs -> A2A combine",
+        build: |p| moe_a2a(p.world, p.seed),
     },
     CaseSpec {
         name: "ag-gemm-flux",
@@ -1063,6 +1534,85 @@ mod tests {
             assert_eq!(case.plan.world, p.world, "{}", spec.name);
             assert!(!case.checks.is_empty(), "{}", spec.name);
         }
+    }
+
+    #[test]
+    fn tp_block_structure() {
+        let case = tp_block(4, 1, 7).unwrap();
+        // AG pulls + RS reduce pushes: (w-1) of each per rank
+        assert_eq!(case.plan.total_transfers(), 2 * 4 * 3);
+        // one wait per incoming x chunk; no rank waits for "stage 1 done"
+        assert!(case.plan.per_rank.iter().all(|p| p.num_waits() == 3));
+        // every rank runs both stages' tiles: 2 per row block
+        assert_eq!(case.plan.per_rank[0].num_tiles(), 2 * 4);
+        // h and y checked on every rank
+        assert_eq!(case.checks.len(), 8);
+        // split refines both stages
+        let split = tp_block(4, 2, 7).unwrap();
+        assert_eq!(split.plan.total_transfers(), 2 * 4 * 3 * 2);
+    }
+
+    #[test]
+    fn moe_a2a_structure() {
+        let case = moe_a2a(4, 5).unwrap();
+        // dispatch + combine: w(w-1) pushes each
+        assert_eq!(case.plan.total_transfers(), 2 * 4 * 3);
+        assert_eq!(case.checks.len(), 4);
+        // each rank waits once per incoming token block
+        assert!(case.plan.per_rank.iter().all(|p| p.num_waits() == 3));
+    }
+
+    #[test]
+    fn pipeline_stage_plans_cover_every_stage() {
+        let stages = tp_block_stage_plans(4, 1).unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].total_transfers(), 4 * 3);
+        assert_eq!(stages[1].total_transfers(), 4 * 3);
+        let stages = moe_a2a_stage_plans(2).unwrap();
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[0].total_transfers(), 2);
+        assert_eq!(stages[1].total_transfers(), 0);
+        assert!(stages[1].total_flops() > 0.0);
+        assert_eq!(stages[2].total_transfers(), 2);
+    }
+
+    #[test]
+    fn degenerate_params_error_instead_of_panicking() {
+        // ISSUE 3 satellite: a registry-wide sweep over edge values —
+        // every builder must return, never panic, and the universally
+        // invalid values must carry named Coordinator errors.
+        let degenerate = [
+            CaseParams { world: 0, ..Default::default() },
+            CaseParams { world: 1, ..Default::default() },
+            CaseParams { split: 0, ..Default::default() },
+            CaseParams { split: 5, ..Default::default() },
+            CaseParams { split: 1 << 20, ..Default::default() },
+            CaseParams { nodes: 0, ..Default::default() },
+            CaseParams { world: 4, nodes: 3, ..Default::default() },
+        ];
+        for spec in CASES {
+            for p in &degenerate {
+                // Ok or Err both fine here; a panic fails the test
+                let _ = spec.build(p);
+            }
+            for p in &degenerate[..2] {
+                let e = spec.build(p).unwrap_err();
+                assert!(matches!(e, Error::Coordinator(_)), "{}: {e:?}", spec.name);
+                assert!(e.to_string().contains("world"), "{}: {e}", spec.name);
+            }
+            let e = spec.build(&degenerate[2]).unwrap_err();
+            assert!(e.to_string().contains("split"), "{}: {e}", spec.name);
+            let e = spec.build(&degenerate[5]).unwrap_err();
+            assert!(e.to_string().contains("nodes"), "{}: {e}", spec.name);
+        }
+        // direct-call paths are guarded too, not just the registry
+        assert!(tp_block(1, 1, 0).is_err());
+        assert!(tp_block(4, 0, 0).is_err());
+        assert!(moe_a2a(0, 0).is_err());
+        assert!(ag_gemm_hierarchical(0, 4, 0).is_err());
+        assert!(gemm_rs(1, 0).is_err());
+        assert!(a2a_gemm(1, 0).is_err());
+        assert!(attn_sp(0, 0).is_err());
     }
 
     #[test]

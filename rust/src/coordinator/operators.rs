@@ -104,10 +104,10 @@ fn compile_operator_inner(
     // term from the visiting order (Fig. 11d: tile order changes operand
     // reuse in L2/VMEM; orders that revisit operands back-to-back run
     // closer to peak). Calibrated small: order explains ~10%, shape the rest.
-    let locality = inputs
-        .first()
-        .map(|i| i.order.locality_score(&i.grid))
-        .unwrap_or(1.0);
+    let locality = match inputs.first() {
+        Some(i) => i.order.locality_score(&i.grid)?,
+        None => 1.0,
+    };
     let params = SimParams {
         mxu_eff: waves::mxu_efficiency(cfg.block_m, cfg.block_n, cfg.block_k)
             * (0.90 + 0.10 * locality),

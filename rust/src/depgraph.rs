@@ -137,7 +137,10 @@ pub fn plan_rank_sync(
     order: &TileScheduler,
     map: &ChunkTileMap,
 ) -> Result<RankSync> {
-    let pos = order.positions();
+    let pos = order.positions().map_err(|e| {
+        // hand-edited / imported plans reach this path: name the subsystem
+        Error::DepGraph(format!("rank {rank}: {e}"))
+    })?;
     let n = order.order.len();
     let mut waits = Vec::new();
     for (op, tiles) in &map.consumers {
@@ -357,6 +360,16 @@ mod tests {
         assert_eq!(tiles_before_first_wait(&sync, grid.num_tiles()), 2);
         let none = RankSync::default();
         assert_eq!(tiles_before_first_wait(&none, 4), 4);
+    }
+
+    #[test]
+    fn malformed_order_rejected_not_panicking() {
+        // regression (ISSUE 3): sync planning over a hand-edited plan with
+        // a duplicated tile in the order used to panic in positions()
+        let (s, _grid, map) = setup();
+        let order = TileScheduler { order: vec![0, 1, 1, 3] };
+        let e = plan_rank_sync(0, &s, &order, &map).unwrap_err();
+        assert!(e.to_string().contains("permutation"), "{e}");
     }
 
     #[test]

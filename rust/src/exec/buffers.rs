@@ -185,6 +185,7 @@ impl BufferStore {
     ///
     /// Holds one buffer lock at a time: the source region is snapshotted,
     /// then written under the destination lock.
+    #[allow(clippy::too_many_arguments)]
     pub fn transfer(
         &self,
         src_rank: Rank,

@@ -164,27 +164,44 @@ impl TileScheduler {
     }
 
     /// Position of each tile in the visiting order (inverse permutation).
-    pub fn positions(&self) -> Vec<usize> {
-        let mut pos = vec![0usize; self.order.len()];
+    ///
+    /// Orders reaching this point are usually compiler-built permutations,
+    /// but hand-edited or imported plans can carry anything — a
+    /// non-permutation order (out-of-range or duplicated tile) is a
+    /// [`Error::Kernel`] here, not an index panic.
+    pub fn positions(&self) -> Result<Vec<usize>> {
+        let n = self.order.len();
+        let mut pos = vec![usize::MAX; n];
         for (p, &t) in self.order.iter().enumerate() {
+            if t >= n {
+                return Err(Error::Kernel(format!(
+                    "tile order is not a permutation: tile {t} out of range {n}"
+                )));
+            }
+            if pos[t] != usize::MAX {
+                return Err(Error::Kernel(format!(
+                    "tile order is not a permutation: tile {t} visited twice"
+                )));
+            }
             pos[t] = p;
         }
-        pos
+        Ok(pos)
     }
 
     /// Locality score: mean #shared axis coordinates between consecutive
-    /// tiles (higher = better operand reuse). Used by Fig. 11(d).
-    pub fn locality_score(&self, grid: &TileGrid) -> f64 {
+    /// tiles (higher = better operand reuse). Used by Fig. 11(d). Fails on
+    /// orders referencing tiles outside the grid instead of panicking.
+    pub fn locality_score(&self, grid: &TileGrid) -> Result<f64> {
         if self.order.len() < 2 {
-            return 1.0;
+            return Ok(1.0);
         }
         let mut shared = 0usize;
         for w in self.order.windows(2) {
-            let a = grid.coords(w[0]).unwrap();
-            let b = grid.coords(w[1]).unwrap();
+            let a = grid.coords(w[0])?;
+            let b = grid.coords(w[1])?;
             shared += a.iter().zip(&b).filter(|(x, y)| x == y).count();
         }
-        shared as f64 / ((self.order.len() - 1) as f64 * grid.rank() as f64)
+        Ok(shared as f64 / ((self.order.len() - 1) as f64 * grid.rank() as f64))
     }
 }
 
@@ -248,7 +265,7 @@ mod tests {
         let s = TileScheduler::row_major(&g);
         assert!(s.is_permutation(g.num_tiles()));
         assert_eq!(s.order, (0..12).collect::<Vec<_>>());
-        assert!((s.locality_score(&g) - 0.5).abs() < 0.2);
+        assert!((s.locality_score(&g).unwrap() - 0.5).abs() < 0.2);
     }
 
     #[test]
@@ -290,7 +307,7 @@ mod tests {
         assert_eq!(&s.order[..6], &[0, 1, 2, 5, 4, 3]);
         // snake beats row-major on locality
         let rm = TileScheduler::row_major(&g);
-        assert!(s.locality_score(&g) >= rm.locality_score(&g));
+        assert!(s.locality_score(&g).unwrap() >= rm.locality_score(&g).unwrap());
     }
 
     #[test]
@@ -372,6 +389,22 @@ mod tests {
     #[test]
     fn positions_inverse() {
         let s = TileScheduler { order: vec![2, 0, 1] };
-        assert_eq!(s.positions(), vec![1, 2, 0]);
+        assert_eq!(s.positions().unwrap(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn malformed_orders_error_instead_of_panicking() {
+        // regression (ISSUE 3): a hand-edited or imported plan may carry a
+        // non-permutation order; these used to index-panic
+        let dup = TileScheduler { order: vec![0, 2, 2] };
+        let e = dup.positions().unwrap_err();
+        assert!(e.to_string().contains("visited twice"), "{e}");
+        let oob = TileScheduler { order: vec![0, 1, 7] };
+        let e = oob.positions().unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // locality_score rejects tiles outside the grid
+        let g = grid();
+        let bad = TileScheduler { order: vec![0, 99] };
+        assert!(bad.locality_score(&g).is_err());
     }
 }

@@ -18,7 +18,10 @@
 //!   ([`plan_io`]): a textual `.sched` DSL with guaranteed round-trip,
 //!   importers lifting stream-level plans from existing distributed
 //!   runtimes, and a user-plan serving path (validate → restricted
-//!   autotune → codegen → exec) cached by content hash.
+//!   autotune → codegen → exec) cached by content hash. Consecutive
+//!   operators compose through [`pipeline`]: their chunk schedules fuse
+//!   into one barrier-free plan whose cross-stage ordering is carried by
+//!   fine-grained dependency edges instead of a kernel-boundary sync.
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
@@ -39,6 +42,7 @@ pub mod kernel;
 pub mod lowering;
 pub mod exec;
 pub mod metrics;
+pub mod pipeline;
 pub mod plan_io;
 pub mod reports;
 pub mod runtime;

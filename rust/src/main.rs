@@ -3,7 +3,8 @@
 //! Subcommands (hand-rolled parser — the offline build carries no clap):
 //!
 //! ```text
-//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|ported|headline|all> [--full] [--csv]
+//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|ported|pipeline|headline|all>
+//!                  [--full] [--csv]
 //! syncopate simulate --op <kind> [--model <name>] [--world N] [--tokens N|--seq N]
 //!                    [--split K] [--backend <name>] [--sms N] [--timeline]
 //! syncopate tune --op <kind> [--model <name>] [--world N] [--full]
@@ -180,7 +181,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 } else {
                     autotune::TuneCache::default()
                 };
-                cache.insert(&op, &r);
+                cache.insert(&op, &r)?;
                 cache.save(p)?;
                 println!("cached   : {path} ({} entries)", cache.len());
             }
@@ -438,6 +439,7 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
         }
         "fig10" => emit(&reports::fig10(budget)?),
         "ported" => emit(&reports::ported()?),
+        "pipeline" => emit(&reports::pipeline()?),
         "scale" => emit(&reports::scalability(budget)?),
         "fig11" => {
             emit(&reports::fig11a()?);
@@ -450,9 +452,10 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
             println!("headline: avg {avg:.2}x, up to {max:.2}x over automatic baselines\n");
         }
         "all" => {
-            for w in
-                ["table2", "fig2", "fig8", "fig9", "fig10", "fig11", "ported", "scale", "headline"]
-            {
+            for w in [
+                "table2", "fig2", "fig8", "fig9", "fig10", "fig11", "ported", "pipeline",
+                "scale", "headline",
+            ] {
                 report(&[w.to_string()], flags)?;
             }
         }

@@ -1,0 +1,520 @@
+//! Schedule composition: concatenate stage schedules, rewrite tensor
+//! namespaces, and replace the inter-stage barrier with fine-grained
+//! dependency edges (see the module docs of [`crate::pipeline`]).
+
+use std::collections::HashMap;
+
+use crate::chunk::{Chunk, TensorId};
+use crate::error::{Error, Result};
+use crate::plan_io::dsl::is_valid_tensor_name;
+use crate::schedule::validate as sched_validate;
+use crate::schedule::{CommOp, CommSchedule, Dep, OpRef};
+use crate::topo::Rank;
+
+/// One pipeline stage: a named operator with its communication schedule.
+///
+/// The name namespaces tensors on declaration conflicts, so it must itself
+/// be a valid tensor-name fragment (`[A-Za-z_][A-Za-z0-9_]*`).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: String,
+    pub sched: CommSchedule,
+}
+
+impl Stage {
+    pub fn new(name: &str, sched: CommSchedule) -> Self {
+        Stage { name: name.to_string(), sched }
+    }
+}
+
+/// A fused multi-stage pipeline schedule plus provenance metadata.
+#[derive(Debug, Clone)]
+pub struct FusedPipeline {
+    /// The fused schedule over the merged tensor table — a plain
+    /// [`CommSchedule`]: it validates, splits, prints, parses, compiles and
+    /// executes exactly like a single-operator schedule.
+    pub sched: CommSchedule,
+    /// Per stage, per rank: the `[start, end)` index range the stage's ops
+    /// occupy in the fused per-rank lists.
+    pub op_ranges: Vec<Vec<(usize, usize)>>,
+    /// Per stage: original [`TensorId`] → fused [`TensorId`].
+    pub tensor_maps: Vec<HashMap<TensorId, TensorId>>,
+    /// Cross-stage dependency edges added in place of the boundary barrier:
+    /// `(later-stage op, earlier-stage op it now depends on)`, both in
+    /// fused coordinates.
+    pub cross_deps: Vec<(OpRef, OpRef)>,
+}
+
+impl FusedPipeline {
+    /// Which stage a fused op belongs to.
+    pub fn stage_of(&self, op: OpRef) -> Option<usize> {
+        self.op_ranges
+            .iter()
+            .position(|ranges| {
+                ranges
+                    .get(op.rank)
+                    .map(|&(s, e)| op.index >= s && op.index < e)
+                    .unwrap_or(false)
+            })
+    }
+}
+
+fn op_deps_mut(op: &mut CommOp) -> &mut Vec<Dep> {
+    match op {
+        CommOp::P2p { deps, .. }
+        | CommOp::Collective { deps, .. }
+        | CommOp::LocalCopy { deps, .. } => deps,
+    }
+}
+
+fn remap_chunk(c: &mut Chunk, map: &HashMap<TensorId, TensorId>) -> Result<()> {
+    let new = map
+        .get(&c.tensor)
+        .ok_or_else(|| Error::Schedule(format!("fuse: unmapped tensor id {:?}", c.tensor)))?;
+    c.tensor = *new;
+    Ok(())
+}
+
+fn remap_op(op: &mut CommOp, map: &HashMap<TensorId, TensorId>) -> Result<()> {
+    match op {
+        CommOp::P2p { src, dst, .. }
+        | CommOp::Collective { src, dst, .. }
+        | CommOp::LocalCopy { src, dst, .. } => {
+            remap_chunk(src, map)?;
+            remap_chunk(dst, map)
+        }
+    }
+}
+
+/// Buffer access of one op: which rank's buffer, which tensor, which region.
+/// Only exact for P2P/LocalCopy ops — abstract collectives (which touch
+/// every group rank) are rejected by [`fuse`] before this runs.
+fn read_access(op: &CommOp, owner: Rank) -> (Rank, &Chunk) {
+    (op.src_rank(owner), op.consumed_chunk())
+}
+
+fn write_access(op: &CommOp, owner: Rank) -> (Rank, &Chunk) {
+    (op.dst_rank(owner), op.produced_chunk())
+}
+
+fn accesses_conflict(a: (Rank, &Chunk), b: (Rank, &Chunk)) -> bool {
+    a.0 == b.0 && a.1.tensor == b.1.tensor && a.1.region.intersects(&b.1.region)
+}
+
+/// Fuse consecutive operator stages into one barrier-free schedule.
+///
+/// See the module docs for the three composition steps. Errors when the
+/// stages disagree on world size, a stage name cannot namespace tensors,
+/// conflicting tensor declarations cannot be disambiguated, or the fused
+/// schedule fails structural validation.
+pub fn fuse(stages: &[Stage]) -> Result<FusedPipeline> {
+    let Some(first) = stages.first() else {
+        return Err(Error::Schedule("fuse: pipeline has no stages".into()));
+    };
+    let world = first.sched.world;
+    for st in stages {
+        if st.sched.world != world {
+            return Err(Error::Schedule(format!(
+                "fuse: stage `{}` has world {}, expected {world}",
+                st.name, st.sched.world
+            )));
+        }
+        if st.sched.per_rank.len() != world {
+            return Err(Error::Schedule(format!(
+                "fuse: stage `{}` has {} per-rank lists for world {world}",
+                st.name,
+                st.sched.per_rank.len()
+            )));
+        }
+        if !is_valid_tensor_name(&st.name) {
+            return Err(Error::Schedule(format!(
+                "fuse: stage name `{}` cannot namespace tensors \
+                 (need [A-Za-z_][A-Za-z0-9_]*)",
+                st.name
+            )));
+        }
+        // An abstract collective reads/writes buffers on EVERY group rank,
+        // but per-op access attribution below sees only its owning rank —
+        // cross-stage hazards on the other ranks would be silently missed
+        // (and validate's race check is write-write only). Until
+        // lowering-aware attribution exists, fusion requires P2P form.
+        if st.sched.per_rank.iter().flatten().any(|op| matches!(op, CommOp::Collective { .. }))
+        {
+            return Err(Error::Schedule(format!(
+                "fuse: stage `{}` contains abstract collective ops; lower them \
+                 to P2P (lowering::collective) before fusing",
+                st.name
+            )));
+        }
+    }
+
+    // 1. Merge tensor tables: identical declarations unify (cross-stage
+    //    dataflow), conflicting names are stage-prefixed. Unification is
+    //    keyed on the ORIGINAL (name, shape, dtype) — two later stages
+    //    re-declaring the same tensor unify with each other even when both
+    //    had to be renamed away from an earlier stage's conflicting name
+    //    (otherwise their cross-stage dep edges would silently vanish).
+    let mut sched = CommSchedule::new(world, crate::chunk::TensorTable::new());
+    let mut tensor_maps: Vec<HashMap<TensorId, TensorId>> = Vec::with_capacity(stages.len());
+    let mut by_decl: HashMap<(String, Vec<usize>, crate::chunk::DType), TensorId> =
+        HashMap::new();
+    for st in stages {
+        let mut map = HashMap::new();
+        for (old_id, decl) in st.sched.tensors.iter() {
+            let key = (decl.name.clone(), decl.shape.clone(), decl.dtype);
+            let new_id = match by_decl.get(&key) {
+                Some(&unified) => unified,
+                None => {
+                    let id = if sched.tensors.lookup(&decl.name).is_none() {
+                        sched.tensors.declare(&decl.name, &decl.shape, decl.dtype)?
+                    } else {
+                        let renamed = format!("{}__{}", st.name, decl.name);
+                        if sched.tensors.lookup(&renamed).is_some() {
+                            return Err(Error::Schedule(format!(
+                                "fuse: cannot disambiguate tensor `{}` of stage `{}` \
+                                 (both `{}` and `{renamed}` are taken)",
+                                decl.name, st.name, decl.name
+                            )));
+                        }
+                        sched.tensors.declare(&renamed, &decl.shape, decl.dtype)?
+                    };
+                    by_decl.insert(key, id);
+                    id
+                }
+            };
+            map.insert(old_id, new_id);
+        }
+        tensor_maps.push(map);
+    }
+
+    // 2. Concatenate per-rank op lists in stage order, remapping tensor ids
+    //    and shifting intra-stage dep indices past the ops already emitted.
+    let mut op_ranges: Vec<Vec<(usize, usize)>> = Vec::with_capacity(stages.len());
+    for (si, st) in stages.iter().enumerate() {
+        let offsets: Vec<usize> = (0..world).map(|r| sched.per_rank[r].len()).collect();
+        for (rank, ops) in st.sched.per_rank.iter().enumerate() {
+            for op in ops {
+                let mut op = op.clone();
+                remap_op(&mut op, &tensor_maps[si])?;
+                for d in op_deps_mut(&mut op).iter_mut() {
+                    if d.rank >= world {
+                        return Err(Error::Schedule(format!(
+                            "fuse: stage `{}` dep rank {} out of world {world}",
+                            st.name, d.rank
+                        )));
+                    }
+                    d.index += offsets[d.rank];
+                }
+                sched.per_rank[rank].push(op);
+            }
+        }
+        op_ranges
+            .push((0..world).map(|r| (offsets[r], sched.per_rank[r].len())).collect());
+    }
+
+    // 3. Replace the boundary barrier with fine-grained dep edges: a
+    //    later-stage op waits on exactly the earlier-stage ops whose buffer
+    //    accesses conflict with its own (RAW/WAW/WAR on intersecting
+    //    regions of the same fused tensor at the same rank). Everything
+    //    else stays unordered and overlaps freely.
+    let mut cross_deps: Vec<(OpRef, OpRef)> = Vec::new();
+    for bi in 1..stages.len() {
+        for rank in 0..world {
+            let (bstart, bend) = op_ranges[bi][rank];
+            for bidx in bstart..bend {
+                let mut extra: Vec<Dep> = Vec::new();
+                {
+                    let b = &sched.per_rank[rank][bidx];
+                    let b_read = read_access(b, rank);
+                    let b_write = write_access(b, rank);
+                    for ranges in op_ranges.iter().take(bi) {
+                        for (arank, &(astart, aend)) in ranges.iter().enumerate() {
+                            for aidx in astart..aend {
+                                let a = &sched.per_rank[arank][aidx];
+                                let a_read = read_access(a, arank);
+                                let a_write = write_access(a, arank);
+                                let conflict = accesses_conflict(b_read, a_write)
+                                    || accesses_conflict(b_write, a_write)
+                                    || accesses_conflict(b_write, a_read);
+                                if conflict {
+                                    extra.push(Dep { rank: arank, index: aidx });
+                                }
+                            }
+                        }
+                    }
+                }
+                if !extra.is_empty() {
+                    let me = OpRef { rank, index: bidx };
+                    let deps = op_deps_mut(&mut sched.per_rank[rank][bidx]);
+                    for d in extra {
+                        if !deps.contains(&d) {
+                            deps.push(d);
+                            cross_deps.push((me, OpRef { rank: d.rank, index: d.index }));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Every fused pipeline must be executable and deadlock-free.
+    sched_validate::validate(&sched)?;
+    Ok(FusedPipeline { sched, op_ranges, tensor_maps, cross_deps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{DType, Region, TensorTable};
+    use crate::schedule::validate::topo_order;
+    use crate::schedule::{templates, TransferKind};
+
+    fn ag_stage(name: &str, tensor: &str, world: usize) -> Stage {
+        let mut t = TensorTable::new();
+        let x = t.declare(tensor, &[world * 4, 16], DType::F32).unwrap();
+        Stage::new(name, templates::all_gather_swizzle(&t, x, 0, world).unwrap())
+    }
+
+    #[test]
+    fn disjoint_stages_concatenate_without_cross_deps() {
+        let fp = fuse(&[ag_stage("ag1", "x", 4), ag_stage("ag2", "y", 4)]).unwrap();
+        assert_eq!(fp.sched.world, 4);
+        assert_eq!(fp.sched.tensors.len(), 2);
+        // each stage: (w-1) pulls per rank
+        assert_eq!(fp.sched.num_ops(), 2 * 4 * 3);
+        assert!(fp.cross_deps.is_empty(), "{:?}", fp.cross_deps);
+        for rank in 0..4 {
+            assert_eq!(fp.op_ranges[0][rank], (0, 3));
+            assert_eq!(fp.op_ranges[1][rank], (3, 6));
+        }
+        assert_eq!(fp.stage_of(OpRef { rank: 2, index: 1 }), Some(0));
+        assert_eq!(fp.stage_of(OpRef { rank: 2, index: 4 }), Some(1));
+        assert_eq!(fp.stage_of(OpRef { rank: 2, index: 9 }), None);
+    }
+
+    #[test]
+    fn identical_declarations_unify_into_one_tensor() {
+        // stage 2 re-declares `x` with the same shape/dtype: the fused
+        // table must hold ONE `x`, and both stages' ops must reference it.
+        let fp = fuse(&[ag_stage("a", "x", 2), {
+            let mut t = TensorTable::new();
+            let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+            let mut s = CommSchedule::new(2, t);
+            // forward the gathered half onward: reads what stage 1 wrote
+            let c = Chunk::new(x, Region::rows(4, 4, 16));
+            s.add_op(
+                0,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: 1,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )
+            .unwrap();
+            Stage::new("b", s)
+        }])
+        .unwrap();
+        assert_eq!(fp.sched.tensors.len(), 1);
+        let x = fp.sched.tensors.lookup("x").unwrap();
+        assert_eq!(fp.tensor_maps[0].values().copied().collect::<Vec<_>>(), vec![x]);
+        assert_eq!(fp.tensor_maps[1].values().copied().collect::<Vec<_>>(), vec![x]);
+    }
+
+    #[test]
+    fn conflicting_declarations_are_stage_prefixed() {
+        let mk = |name: &str, rows: usize| {
+            let mut t = TensorTable::new();
+            let x = t.declare("x", &[rows, 16], DType::F32).unwrap();
+            let mut s = CommSchedule::new(2, t);
+            let c = Chunk::new(x, Region::rows(0, 2, 16));
+            s.add_op(
+                0,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: 1,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )
+            .unwrap();
+            Stage::new(name, s)
+        };
+        let fp = fuse(&[mk("up", 8), mk("down", 4)]).unwrap();
+        assert_eq!(fp.sched.tensors.len(), 2);
+        assert!(fp.sched.tensors.lookup("x").is_some());
+        assert!(fp.sched.tensors.lookup("down__x").is_some());
+    }
+
+    #[test]
+    fn cross_stage_raw_gets_dep_edges_instead_of_barrier() {
+        // stage 1: direct AG of x — every rank ends holding all of x.
+        // stage 2: rank 0 pushes the region rank 1 delivered (a RAW hazard
+        // across the boundary): it must now depend on exactly the stage-1
+        // ops that write rows 4..8 of x on rank 0, and on nothing else.
+        let world = 2;
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let s1 = templates::all_gather_direct(&t, x, 0, world).unwrap();
+
+        let mut t2 = TensorTable::new();
+        let x2 = t2.declare("x", &[8, 16], DType::F32).unwrap();
+        let mut s2 = CommSchedule::new(world, t2);
+        let c = Chunk::new(x2, Region::rows(4, 4, 16));
+        s2.add_op(
+            0,
+            CommOp::P2p {
+                kind: TransferKind::Push,
+                peer: 1,
+                src: c.clone(),
+                dst: c,
+                reduce: false,
+                deps: vec![],
+            },
+        )
+        .unwrap();
+
+        let fp = fuse(&[Stage::new("gather", s1), Stage::new("forward", s2)]).unwrap();
+        // rank 1's stage-1 push wrote x[4:8] into rank 0 (RAW with the
+        // stage-2 read) and also reads x[4:8] on rank 1 where the stage-2
+        // push writes (WAR): one deduplicated edge onto exactly that op.
+        let consumer = OpRef { rank: 0, index: 1 };
+        assert!(
+            fp.cross_deps.contains(&(consumer, OpRef { rank: 1, index: 0 })),
+            "{:?}",
+            fp.cross_deps
+        );
+        let deps = fp.sched.per_rank[0][1].deps();
+        assert!(deps.contains(&Dep::on(1, 0)), "{deps:?}");
+        // the fused schedule stays acyclic and totally orderable
+        let order = topo_order(&fp.sched).unwrap();
+        assert_eq!(order.len(), fp.sched.num_ops());
+    }
+
+    #[test]
+    fn fused_tp_block_shape_validates_and_splits(){
+        // AG(x) then RS(y): the canonical tensor-parallel block at schedule
+        // level. No region conflicts -> no cross deps; the fused plan still
+        // validates, and the split knob composes with it.
+        let world = 4;
+        let mut t1 = TensorTable::new();
+        let x = t1.declare("x", &[world * 4, 16], DType::F32).unwrap();
+        let mut t2 = TensorTable::new();
+        let y = t2.declare("y", &[world * 4, 16], DType::F32).unwrap();
+        let fp = fuse(&[
+            Stage::new("ag", templates::all_gather_swizzle(&t1, x, 0, world).unwrap()),
+            Stage::new("rs", templates::reduce_scatter_direct(&t2, y, 0, world).unwrap()),
+        ])
+        .unwrap();
+        assert!(fp.cross_deps.is_empty());
+        assert_eq!(fp.sched.num_ops(), 2 * world * (world - 1));
+        let split = fp.sched.split_p2p(0, 2).unwrap();
+        crate::schedule::validate::validate(&split).unwrap();
+        assert_eq!(split.num_ops(), 2 * fp.sched.num_ops());
+    }
+
+    #[test]
+    fn renamed_tensors_still_unify_across_later_stages() {
+        // regression: stages B and C both declare x[16,16] (conflicting
+        // with stage A's x[8,16]); the identical declarations must unify
+        // into ONE renamed fused tensor so the C-reads-what-B-wrote dep
+        // edge is still derived — not split into b__x / c__x with the
+        // boundary ordering silently dropped.
+        let mk = |name: &str, rows: usize, src_row: usize| {
+            let mut t = TensorTable::new();
+            let x = t.declare("x", &[rows, 16], DType::F32).unwrap();
+            let mut s = CommSchedule::new(2, t);
+            let c = Chunk::new(x, Region::rows(src_row, 2, 16));
+            s.add_op(
+                0,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: 1,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )
+            .unwrap();
+            Stage::new(name, s)
+        };
+        // B pushes x[0:2] into rank 1; C pushes the SAME region onward —
+        // a cross-stage WAW/RAW that only exists if b/c share one tensor
+        let fp = fuse(&[mk("a", 8, 0), mk("b", 16, 0), mk("c", 16, 0)]).unwrap();
+        assert_eq!(fp.sched.tensors.len(), 2, "a's x + ONE unified renamed x");
+        assert!(fp.sched.tensors.lookup("b__x").is_some());
+        assert!(fp.sched.tensors.lookup("c__x").is_none());
+        let b_id = fp.tensor_maps[1][&crate::chunk::TensorId(0)];
+        let c_id = fp.tensor_maps[2][&crate::chunk::TensorId(0)];
+        assert_eq!(b_id, c_id, "identical later-stage declarations must unify");
+        // and the boundary edge exists: C's op depends on B's
+        assert!(
+            fp.cross_deps.contains(&(
+                OpRef { rank: 0, index: 2 },
+                OpRef { rank: 0, index: 1 }
+            )),
+            "{:?}",
+            fp.cross_deps
+        );
+    }
+
+    #[test]
+    fn world_mismatch_and_empty_pipeline_rejected() {
+        assert!(fuse(&[]).is_err());
+        let e = fuse(&[ag_stage("a", "x", 2), ag_stage("b", "y", 4)]).unwrap_err();
+        assert!(e.to_string().contains("world"), "{e}");
+        let e = fuse(&[Stage::new("bad name", ag_stage("a", "x", 2).sched)]).unwrap_err();
+        assert!(e.to_string().contains("stage name"), "{e}");
+    }
+
+    #[test]
+    fn abstract_collectives_are_rejected() {
+        // per-op access attribution cannot see a collective's non-owner
+        // ranks; fusing one could silently drop cross-stage hazards
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let mut s = CommSchedule::new(2, t);
+        let c = Chunk::new(x, Region::rows(0, 4, 16));
+        s.add_op(
+            0,
+            CommOp::Collective {
+                kind: crate::schedule::CollectiveKind::AllGather,
+                src: c.clone(),
+                dst: c,
+                ranks: vec![0, 1],
+                deps: vec![],
+            },
+        )
+        .unwrap();
+        let e = fuse(&[Stage::new("coll", s)]).unwrap_err();
+        assert!(e.to_string().contains("collective"), "{e}");
+    }
+
+    #[test]
+    fn fused_schedules_are_validated_on_construction() {
+        // a stage whose dep references a missing op must be rejected by the
+        // final validate pass, not silently emitted
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let mut s = CommSchedule::new(2, t);
+        let c = Chunk::new(x, Region::rows(0, 4, 16));
+        s.add_op(
+            0,
+            CommOp::P2p {
+                kind: TransferKind::Push,
+                peer: 1,
+                src: c.clone(),
+                dst: c,
+                reduce: false,
+                deps: vec![Dep::on(1, 5)],
+            },
+        )
+        .unwrap();
+        assert!(fuse(&[Stage::new("only", s)]).is_err());
+    }
+}

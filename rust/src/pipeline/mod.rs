@@ -1,0 +1,49 @@
+//! Cross-operator pipeline fusion (paper §2/§3: eliminating the
+//! device-wide synchronization at kernel boundaries).
+//!
+//! Every single-operator schedule in this repo already overlaps its own
+//! communication with its own compute — but a *sequence* of operators run
+//! as separate plans still pays a full barrier at each seam: operator N+1
+//! starts only after operator N's slowest rank has finished both its
+//! compute and its last transfer. That boundary sync is exactly what the
+//! paper's stream-level-overlap critique targets, and what this subsystem
+//! removes.
+//!
+//! [`fuse`] composes the [`crate::schedule::CommSchedule`]s of consecutive
+//! pipeline stages into ONE schedule:
+//!
+//! 1. **Namespace rewrite** — stage tensor tables are merged. Declarations
+//!    that agree on (name, shape, dtype) unify into one fused tensor (the
+//!    cross-stage dataflow: stage N's output *is* stage N+1's input);
+//!    conflicting declarations are renamed `"{stage}__{tensor}"` so both
+//!    survive.
+//! 2. **Op concatenation** — per-rank op lists are appended in stage order
+//!    with intra-stage dep indices shifted, like
+//!    [`crate::schedule::CommSchedule::append`] but across tables.
+//! 3. **Cross-stage dependency derivation** — instead of a barrier, each
+//!    later-stage op gains explicit `(rank, index)` deps on exactly the
+//!    earlier-stage ops whose buffer accesses conflict with its own
+//!    (RAW / WAW / WAR on an intersecting region of the same tensor at the
+//!    same rank), reusing the region math of [`crate::chunk::Region`] /
+//!    `schedule::validate`. Non-conflicting ops stay unordered and free to
+//!    overlap.
+//!
+//! The fused schedule is validated ([`crate::schedule::validate::validate`])
+//! before it is returned, so every fused pipeline is executable and
+//! deadlock-free by construction. Compute-side fine-grained sync (stage
+//! N+1 tiles starting the moment their chunks land) comes from compiling
+//! the fused schedule with a *combined* tile grid through the ordinary
+//! [`crate::depgraph::plan_rank_sync`] path — see
+//! `coordinator::execases::tp_block` / `moe_a2a` for the wired-up cases
+//! and `reports::pipeline` for the fused-vs-barrier makespan comparison.
+//!
+//! The **barrier-at-boundary baseline** this is measured against is the
+//! sum of the per-stage plan makespans: each stage keeps its internal
+//! overlap, but a device-wide sync separates consecutive stages (DESIGN.md
+//! §12). Fused pipelines are plain [`crate::schedule::CommSchedule`]s, so
+//! they print/parse through `plan_io` (`plan import --from tp-block`) and
+//! serve through the coordinator's content-hash plan cache unchanged.
+
+mod fuse;
+
+pub use fuse::{fuse, FusedPipeline, Stage};

@@ -1,5 +1,6 @@
-//! Named plan sources: every exec-capable schedule template plus every
-//! baseline importer, instantiated at canonical validation-scale shapes.
+//! Named plan sources: every exec-capable schedule template, every
+//! baseline importer, and the fused cross-operator pipelines
+//! (`crate::pipeline`), instantiated at canonical validation-scale shapes.
 //!
 //! One registry drives three consumers:
 //! * `plan import --from NAME [--world N]` (the CLI's porting entry point),
@@ -22,6 +23,9 @@ pub enum SourceKind {
     Template,
     /// Imported from a foreign stream-level plan (`plan_io::import`).
     Imported,
+    /// Cross-operator pipeline fused by `crate::pipeline::fuse` — multiple
+    /// stages' schedules composed into one barrier-free plan.
+    Fused,
 }
 
 /// One named plan source.
@@ -130,6 +134,50 @@ pub fn sources() -> Vec<PlanSource> {
             },
         },
         PlanSource {
+            name: "tp-block",
+            kind: SourceKind::Fused,
+            about: "fused TP MLP block: AllGather(x) + ReduceScatter(y), no boundary barrier",
+            build: |world| {
+                let mut t1 = TensorTable::new();
+                let x = t1.declare("x", &[world * world * 2, 16], DType::F32)?;
+                let mut t2 = TensorTable::new();
+                let y = t2.declare("y", &[world * world * 2, 16], DType::F32)?;
+                let fused = crate::pipeline::fuse(&[
+                    crate::pipeline::Stage::new(
+                        "ag",
+                        templates::all_gather_swizzle(&t1, x, 0, world)?,
+                    ),
+                    crate::pipeline::Stage::new(
+                        "rs",
+                        templates::reduce_scatter_direct(&t2, y, 0, world)?,
+                    ),
+                ])?;
+                Ok(fused.sched)
+            },
+        },
+        PlanSource {
+            name: "moe-a2a",
+            kind: SourceKind::Fused,
+            about: "fused MoE block: AllToAll dispatch + inverse AllToAll combine",
+            build: |world| {
+                let mut t1 = TensorTable::new();
+                let x = t1.declare("x", &[world * world * 2, 16], DType::F32)?;
+                let mut t2 = TensorTable::new();
+                let y = t2.declare("y", &[world * world * 2, 16], DType::F32)?;
+                let fused = crate::pipeline::fuse(&[
+                    crate::pipeline::Stage::new(
+                        "dispatch",
+                        templates::all_to_all(&t1, x, 0, world)?,
+                    ),
+                    crate::pipeline::Stage::new(
+                        "combine",
+                        templates::all_to_all_transpose(&t2, y, 0, world)?,
+                    ),
+                ])?;
+                Ok(fused.sched)
+            },
+        },
+        PlanSource {
             name: "flux-ag",
             kind: SourceKind::Imported,
             about: "Flux-style tile-granular AllGather, lifted from streams",
@@ -197,6 +245,7 @@ mod tests {
         let all = sources();
         assert!(all.iter().any(|s| s.kind == SourceKind::Template));
         assert!(all.iter().any(|s| s.kind == SourceKind::Imported));
+        assert!(all.iter().any(|s| s.kind == SourceKind::Fused));
         // names are unique
         let mut n = names();
         n.sort_unstable();

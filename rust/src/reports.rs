@@ -500,6 +500,55 @@ pub fn scalability(budget: Budget) -> Result<Table> {
     Ok(t)
 }
 
+/// Pipeline fusion: fused cross-operator plans vs. the barrier-at-boundary
+/// baseline (DESIGN.md §12).
+///
+/// For each fused case (`tp-block` = AG-GEMM → GEMM-RS, `moe-a2a` = A2A
+/// dispatch → expert GEMMs → A2A combine) and world size, the fused column
+/// is the simulated makespan of the single barrier-free plan; the barrier
+/// column is the sum of the per-stage plan makespans — each stage keeps
+/// its internal overlap but a device-wide sync separates consecutive
+/// operators, which is exactly how per-operator overlapped kernels compose
+/// today. The speedup column is barrier/fused.
+pub fn pipeline() -> Result<Table> {
+    use crate::coordinator::execases;
+
+    let mut t = Table::new(
+        "Pipeline fusion: fused vs. barrier-at-boundary makespan",
+        &["fused us", "barrier us", "speedup"],
+        "us (speedup: x, lower fused = better)",
+    );
+    fn sum_makespans(plans: &[crate::codegen::ExecutablePlan], topo: &Topology) -> Result<f64> {
+        let mut total = 0.0;
+        for p in plans {
+            total += simulate(p, topo, SimParams::default())?.makespan_us;
+        }
+        Ok(total)
+    }
+    for world in [2usize, 4, 8] {
+        let topo = Topology::h100_node(world)?;
+
+        let fused = simulate(
+            &execases::tp_block(world, 1, 42)?.plan,
+            &topo,
+            SimParams::default(),
+        )?
+        .makespan_us;
+        let barrier = sum_makespans(&execases::tp_block_stage_plans(world, 1)?, &topo)?;
+        t.push_row(&format!("tp-block-{world}gpu"), vec![fused, barrier, barrier / fused]);
+
+        let fused = simulate(
+            &execases::moe_a2a(world, 42)?.plan,
+            &topo,
+            SimParams::default(),
+        )?
+        .makespan_us;
+        let barrier = sum_makespans(&execases::moe_a2a_stage_plans(world)?, &topo)?;
+        t.push_row(&format!("moe-a2a-{world}gpu"), vec![fused, barrier, barrier / fused]);
+    }
+    Ok(t)
+}
+
 /// Headline numbers: average (geomean) and max speedup of Syncopate over
 /// the best *automatic* baseline across the Fig. 8 + Fig. 9 suites.
 pub fn headline(budget: Budget) -> Result<(f64, f64)> {

@@ -339,6 +339,47 @@ pub fn all_to_all(
     Ok(sched)
 }
 
+/// Inverse AllToAll over the same `world x world` block grid: rank `j`
+/// owns block *column* `j` (blocks `(i, j)` for all `i` — the state
+/// [`all_to_all`] leaves behind) and pushes block `(i, j)` back to row
+/// owner `i`. Composing `all_to_all` with this template round-trips every
+/// block, which is exactly the MoE dispatch → combine exchange pair.
+pub fn all_to_all_transpose(
+    table: &TensorTable,
+    tensor: TensorId,
+    axis: usize,
+    world: usize,
+) -> Result<CommSchedule> {
+    let shape = table.get(tensor)?.shape.clone();
+    let blocks = world * world;
+    if shape[axis] % blocks != 0 {
+        return Err(Error::Schedule(format!(
+            "A2A needs axis dim {} divisible by world^2 = {blocks}",
+            shape[axis]
+        )));
+    }
+    let mut sched = CommSchedule::new(world, table.clone());
+    for j in 0..world {
+        for ii in 1..world {
+            // same link-staggering swizzle as the forward exchange
+            let i = (j + ii) % world;
+            let c = Chunk::new(tensor, shard_region(&shape, axis, blocks, i * world + j)?);
+            sched.add_op(
+                j,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: i,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )?;
+        }
+    }
+    Ok(sched)
+}
+
 /// Heterogeneous hierarchical swizzled AllGather (Fig. 4e): pipelines the
 /// intra-node ring with cross-node shard exchange at per-shard granularity.
 ///
@@ -667,6 +708,28 @@ mod tests {
     fn a2a_requires_divisibility() {
         let (t, x) = table(6);
         assert!(all_to_all(&t, x, 0, 4).is_err());
+        assert!(all_to_all_transpose(&t, x, 0, 4).is_err());
+    }
+
+    #[test]
+    fn a2a_transpose_is_the_inverse_exchange() {
+        let world = 4;
+        let (t, x) = table(world * world * 2);
+        let s = all_to_all_transpose(&t, x, 0, world).unwrap();
+        validate(&s).unwrap();
+        // rank j pushes w-1 blocks, all from its own block COLUMN, each to
+        // that block's row owner
+        for j in 0..world {
+            assert_eq!(s.per_rank[j].len(), world - 1);
+            for op in &s.per_rank[j] {
+                let blk = op.consumed_chunk().region.offset[0] / 2;
+                assert_eq!(blk % world, j, "rank {j} must send its own column blocks");
+                assert_eq!(op.dst_rank(j), blk / world, "block must land at its row owner");
+            }
+        }
+        // forward then inverse touches every off-diagonal block exactly twice
+        let fwd = all_to_all(&t, x, 0, world).unwrap();
+        assert_eq!(fwd.num_ops(), s.num_ops());
     }
 
     #[test]

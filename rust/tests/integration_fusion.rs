@@ -1,0 +1,130 @@
+//! Integration: cross-operator pipeline fusion (ISSUE 3 acceptance).
+//!
+//! * `tp-block` (AG-GEMM → GEMM-RS) and `moe-a2a` (A2A dispatch → expert
+//!   GEMMs → A2A combine) execute with real numerics, bit-identically on
+//!   the sequential and parallel engines, at worlds 2/4/8;
+//! * `reports::pipeline` shows the fused makespan strictly below the
+//!   barrier-at-boundary baseline (sum of per-stage makespans) for both
+//!   cases at every world size;
+//! * fused pipelines ride the PR-2 interchange: they print/parse through
+//!   `plan_io` and serve through the coordinator's content-hash plan
+//!   cache, with the two-formats-one-entry property intact.
+
+use syncopate::coordinator::execases::{self, verify_modes_bit_identical, ExecCase};
+use syncopate::coordinator::service::Coordinator;
+use syncopate::exec::ExecOptions;
+use syncopate::plan_io::{content_hash, parse_schedule, print_schedule, registry};
+use syncopate::reports;
+use syncopate::runtime::Runtime;
+use syncopate::schedule::validate::validate;
+use syncopate::topo::Topology;
+use syncopate::Result;
+
+fn rt() -> Runtime {
+    Runtime::open_default().expect("open_default falls back to host-ref; cannot fail")
+}
+
+fn check(rt: &Runtime, build: &dyn Fn() -> Result<ExecCase>) {
+    verify_modes_bit_identical(build, rt).unwrap_or_else(|e| panic!("cross-mode: {e}"));
+}
+
+#[test]
+fn tp_block_bit_identical_across_engines() {
+    let rt = rt();
+    for world in [2usize, 4, 8] {
+        check(&rt, &move || execases::tp_block(world, 1, 700 + world as u64));
+    }
+    // the split knob composes with fusion
+    check(&rt, &|| execases::tp_block(4, 2, 707));
+}
+
+#[test]
+fn moe_a2a_bit_identical_across_engines() {
+    let rt = rt();
+    for world in [2usize, 4, 8] {
+        check(&rt, &move || execases::moe_a2a(world, 800 + world as u64));
+    }
+}
+
+#[test]
+fn report_pipeline_fused_strictly_beats_barrier() {
+    // the acceptance criterion: fused makespan strictly below the
+    // barrier-at-boundary baseline for BOTH cases at worlds 2/4/8
+    let t = reports::pipeline().unwrap();
+    assert_eq!(t.rows.len(), 6, "2 cases x 3 world sizes");
+    for (label, row) in &t.rows {
+        let (fused, barrier, speedup) = (row[0], row[1], row[2]);
+        assert!(fused > 0.0, "{label}: degenerate fused makespan {fused}");
+        assert!(
+            fused < barrier,
+            "{label}: fused {fused} us must be strictly below barrier {barrier} us"
+        );
+        assert!(speedup > 1.0, "{label}: speedup {speedup}");
+    }
+}
+
+#[test]
+fn fused_registry_sources_roundtrip_and_validate() {
+    // fused pipelines are plain CommSchedules: they must ride the PR-2
+    // interchange untouched (the corpus test also sweeps them; this pins
+    // the fused-specific sources explicitly)
+    for name in ["tp-block", "moe-a2a"] {
+        for world in [2usize, 4, 8] {
+            let s = registry::build(name, world)
+                .unwrap_or_else(|e| panic!("{name} @ {world}: {e}"));
+            validate(&s).unwrap_or_else(|e| panic!("{name} @ {world}: {e}"));
+            let printed = print_schedule(&s).unwrap();
+            assert_eq!(parse_schedule(&printed).unwrap(), s, "{name} @ {world}");
+        }
+    }
+}
+
+#[test]
+fn fused_plans_serve_and_cache_by_content_hash() {
+    // ISSUE 3 satellite: plan-cache behavior under pipelines — fused-plan
+    // hits/misses keyed by the canonical-form content hash, including the
+    // two-formats-one-entry property PR 2 established for user plans.
+    let world = 2usize;
+    let coord = Coordinator::spawn_pool(Topology::h100_node(world).unwrap(), 2);
+    let opts = ExecOptions::sequential();
+
+    let text = print_schedule(&registry::build("tp-block", world).unwrap()).unwrap();
+    let r1 = coord.run_user_plan(&text, opts.clone()).unwrap();
+    assert!(!r1.cache_hit, "first serve must miss");
+    assert_eq!(r1.world, world);
+    assert_eq!(r1.hash, content_hash(&text), "cache key is the canonical-form hash");
+
+    let r2 = coord.run_user_plan(&text, opts.clone()).unwrap();
+    assert!(r2.cache_hit, "re-serving the same fused plan must hit");
+    assert_eq!(r2.hash, r1.hash);
+    assert_eq!(r2.sim_makespan_us, r1.sim_makespan_us);
+
+    // differently formatted text of the SAME fused plan shares the entry
+    let messy = text.replace("  pull", "   pull ").replace("  push", "    push  ");
+    assert_ne!(messy, text);
+    let r3 = coord.run_user_plan(&messy, opts.clone()).unwrap();
+    assert!(r3.cache_hit, "canonical-form hashing must dedupe formatting");
+    assert_eq!(r3.hash, r1.hash);
+
+    // a different fused pipeline is a different entry
+    let other = print_schedule(&registry::build("moe-a2a", world).unwrap()).unwrap();
+    let r4 = coord.run_user_plan(&other, opts.clone()).unwrap();
+    assert!(!r4.cache_hit, "distinct fused plans must not collide");
+    assert_ne!(r4.hash, r1.hash);
+
+    // and the parallel engine serves the cached fused plan too
+    let r5 = coord.run_user_plan(&text, ExecOptions::parallel()).unwrap();
+    assert!(r5.cache_hit);
+    assert_eq!(r5.stats.transfers, r1.stats.transfers);
+}
+
+#[test]
+fn shipped_fused_example_matches_the_registry_source() {
+    // examples/plans/tp_block_fused_w2.sched documents the fused block; it
+    // must stay in sync with `plan import --from tp-block --world 2`
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/plans/tp_block_fused_w2.sched");
+    let text = std::fs::read_to_string(path).expect("shipped corpus file");
+    let parsed = parse_schedule(&text).unwrap();
+    assert_eq!(parsed, registry::build("tp-block", 2).unwrap());
+}
