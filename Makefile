@@ -1,6 +1,6 @@
 # Build-time artifact pipeline + convenience wrappers.
 
-.PHONY: artifacts build test bench fmt clippy clean examples lint-plans
+.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos
 
 # AOT-lower every L2 entry point to HLO text + manifest (needs jax).
 artifacts:
@@ -14,6 +14,8 @@ build:
 test:
 	cd rust && cargo build --release && cargo test -q
 
+# Hot-path microbench; also writes machine-readable BENCH_results.json at
+# the repo root (override the path with BENCH_RESULTS=...).
 bench:
 	cd rust && cargo bench --bench hotpath
 
@@ -24,6 +26,11 @@ examples:
 # Lint the shipped .sched plan corpus (parse + validate + round-trip).
 lint-plans:
 	cd rust && cargo run --release -- plan lint ../examples/plans/*.sched
+
+# Lint the shipped .topo hardware descriptions (parse + round-trip +
+# instantiate).
+lint-topos:
+	cd rust && cargo run --release -- topo lint ../examples/topos/*.topo
 
 fmt:
 	cd rust && cargo fmt --check

@@ -16,13 +16,12 @@ use syncopate::lowering::{loops, partition};
 use syncopate::reports::comm_only_latency_us;
 use syncopate::schedule::validate::validate;
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::util::fmt_us;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
 
 fn main() -> syncopate::Result<()> {
     let world = 8;
-    let topo = Topology::h100_node(world)?;
+    let topo = syncopate::hw::catalog::topology("h100_node", world)?;
     println!("== compiler integration: partition + loop IRs -> chunk schedules ==\n");
 
     // --- partition-based IRs (Domino / Alpa) -----------------------------

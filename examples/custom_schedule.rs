@@ -23,7 +23,6 @@ use syncopate::plan_io::{content_hash, parse_schedule, print_schedule};
 use syncopate::runtime::Runtime;
 use syncopate::schedule::templates::all_gather_hierarchical;
 use syncopate::schedule::validate::validate;
-use syncopate::topo::Topology;
 use syncopate::util::{fmt_us, Rng};
 
 /// Fig. 4e for 4 ranks in 2 nodes, written by hand in the schedule DSL.
@@ -77,7 +76,7 @@ fn main() -> syncopate::Result<()> {
 
     // 3. the hand-written text IS the library template, structurally —
     //    schedules are an interchange artifact, not Rust-only state
-    let topo2x2 = Topology::h100_multinode(2, 2)?;
+    let topo2x2 = syncopate::hw::catalog::topology_nodes("h100_multinode", 2, 4)?;
     let tmpl = all_gather_hierarchical(
         &sched.tensors,
         sched.tensors.lookup("x").expect("declared"),

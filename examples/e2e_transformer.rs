@@ -36,7 +36,6 @@ use syncopate::kernel::scheduler::{IntraOrder, TileScheduler};
 use syncopate::runtime::Runtime;
 use syncopate::schedule::{templates, OpRef};
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::util::fmt_us;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_8B};
 
@@ -48,7 +47,7 @@ const FF: usize = 64; // per-rank FFN intermediate shard
 
 /// Build the fused transformer-block exec case for `world` ranks.
 fn transformer_block_case(world: usize, seed: u64) -> syncopate::Result<ExecCase> {
-    let topo = Topology::h100_node(world)?;
+    let topo = syncopate::hw::catalog::topology("h100_node", world)?;
     let s_total = world * SQ;
 
     // --- tensors ---------------------------------------------------------
@@ -221,7 +220,14 @@ fn transformer_block_case(world: usize, seed: u64) -> syncopate::Result<ExecCase
             what: format!("tensor-parallel FFN AllReduce @rank{r}"),
         });
     }
-    Ok(ExecCase { name: format!("transformer-block-w{world}"), sched, plan, store, checks })
+    Ok(ExecCase {
+        name: format!("transformer-block-w{world}"),
+        sched,
+        plan,
+        store,
+        checks,
+        topo,
+    })
 }
 
 fn main() -> syncopate::Result<()> {
@@ -244,7 +250,7 @@ fn main() -> syncopate::Result<()> {
     // Stage 2: paper-scale layer performance (Llama-3-8B, 8 GPUs)
     println!("\n-- paper-scale layer (llama3-8b, seq 16k, 8 GPU) --");
     let world = 8;
-    let topo = Topology::h100_node(world)?;
+    let topo = syncopate::hw::catalog::topology("h100_node", world)?;
     let attn = OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 16384, world);
     let ffn = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_8B, 16384, world);
 

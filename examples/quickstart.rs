@@ -19,13 +19,12 @@ use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::TuneConfig;
 use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::util::fmt_us;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_8B};
 
 fn main() -> syncopate::Result<()> {
     let world = 8;
-    let topo = Topology::h100_node(world)?;
+    let topo = syncopate::hw::catalog::topology("h100_node", world)?;
     let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 8192, world);
     println!("== Syncopate quickstart: {} ==\n", op.label());
 

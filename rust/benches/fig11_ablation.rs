@@ -15,7 +15,6 @@ use syncopate::coordinator::TuneConfig;
 use syncopate::metrics::Table;
 use syncopate::reports;
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::util::fmt_us;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B, LLAMA3_8B};
 
@@ -26,7 +25,7 @@ fn main() {
     println!("{}", reports::fig11d().expect("11d").render());
 
     // --- ablation: scheduler swizzle vs explicit reorder pass (Fig. 6) ----
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8);
     let mut t = Table::new(
         "Ablation: swizzle-in-scheduler (Fig 6c) vs reorder pass (Fig 6b)",

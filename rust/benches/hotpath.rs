@@ -5,7 +5,12 @@
 //! (event engine), and a full quick autotune. Targets (DESIGN.md §9):
 //! simulate a full 8-rank fig8 config in <10 ms; autotune an operator <1 s.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath` (or `make bench`).
+//!
+//! Besides the human-readable stdout table, every measurement is written
+//! as machine-readable JSON to `BENCH_results.json` at the repository root
+//! (override the path with the `BENCH_RESULTS` env var) so the perf
+//! trajectory can be tracked across commits without scraping logs.
 
 use std::time::Instant;
 
@@ -16,37 +21,72 @@ use syncopate::coordinator::TuneConfig;
 use syncopate::exec::{prepare, run_prepared, ExecOptions};
 use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
 
-fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
-    // warmup
-    f();
-    let t0 = Instant::now();
-    for _ in 0..iters {
+/// Collected measurements: (label, seconds per iteration).
+struct Results(Vec<(String, f64)>);
+
+impl Results {
+    fn bench<F: FnMut()>(&mut self, label: &str, iters: usize, mut f: F) -> f64 {
+        // warmup
         f();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{label:48} {:>10.3} ms/iter   {:>8.1} iters/s",
+            per * 1e3,
+            1.0 / per
+        );
+        self.0.push((label.to_string(), per));
+        per
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
-    println!(
-        "{label:48} {:>10.3} ms/iter   {:>8.1} iters/s",
-        per * 1e3,
-        1.0 / per
-    );
-    per
+
+    /// Hand-rolled JSON (the offline build carries no serde): one object
+    /// per measurement, floats via `{}` (shortest round-trip repr).
+    fn to_json(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"results\": [\n");
+        for (i, (label, per)) in self.0.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"ms_per_iter\": {}, \"iters_per_s\": {}}}{}\n",
+                esc(label),
+                per * 1e3,
+                1.0 / per,
+                if i + 1 < self.0.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    fn write(&self) {
+        // cargo bench runs with cwd = rust/; the default lands the file at
+        // the repository root next to ROADMAP.md
+        let path = std::env::var("BENCH_RESULTS")
+            .unwrap_or_else(|_| "../BENCH_results.json".to_string());
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => println!("\nmachine-readable results -> {path}"),
+            Err(e) => eprintln!("\ncould not write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
-    let topo = Topology::h100_node(8).unwrap();
+    let mut res = Results(Vec::new());
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8);
     let cfg = TuneConfig::default();
 
     println!("== L3 hot paths (8-rank llama3-70b AG-GEMM) ==");
-    let compile_ms = bench("compile_operator (schedule+sync+codegen)", 50, || {
+    let compile_ms = res.bench("compile_operator (schedule+sync+codegen)", 50, || {
         let _ = compile_operator(&op, &cfg, &topo).unwrap();
     });
 
     let (plan, params) = compile_operator(&op, &cfg, &topo).unwrap();
-    let sim_ms = bench("simulate (event engine, full plan)", 200, || {
+    let sim_ms = res.bench("simulate (event engine, full plan)", 200, || {
         let _ = simulate(&plan, &topo, params).unwrap();
     });
 
@@ -57,16 +97,16 @@ fn main() {
         plan.total_transfers(),
         plan8.total_transfers()
     );
-    bench("simulate (split 8: 4x transfers)", 200, || {
+    res.bench("simulate (split 8: 4x transfers)", 200, || {
         let _ = simulate(&plan8, &topo, params8).unwrap();
     });
 
-    let tune_s = bench("autotune quick (full knob sweep)", 3, || {
+    let tune_s = res.bench("autotune quick (full knob sweep)", 3, || {
         let _ = autotune::tune(&op, &topo, Budget::Quick).unwrap();
     });
 
     let attn = OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_70B, 32768, 8);
-    bench("autotune quick (ring attention 32k)", 3, || {
+    res.bench("autotune quick (ring attention 32k)", 3, || {
         let _ = autotune::tune(&attn, &topo, Budget::Quick).unwrap();
     });
 
@@ -97,7 +137,7 @@ fn main() {
                 "exec ag-gemm w{world} s2 ({})",
                 if mi == 0 { "sequential" } else { "parallel" }
             );
-            per_mode[mi] = bench(&label, 5, || {
+            per_mode[mi] = res.bench(&label, 5, || {
                 let _ = run_prepared(&prep, &case.store, &rt, &opts).unwrap();
             });
         }
@@ -108,4 +148,6 @@ fn main() {
             per_mode[1] * 1e3
         );
     }
+
+    res.write();
 }

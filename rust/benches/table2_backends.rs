@@ -7,14 +7,13 @@ use std::time::Instant;
 
 use syncopate::backend::{self, BackendKind};
 use syncopate::reports;
-use syncopate::topo::Topology;
 
 fn main() {
     println!("{}", reports::table2().render());
 
     // model-throughput microbench: transfer_time_us evaluations/sec (the
     // autotuner calls this in its inner loop)
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     let t0 = Instant::now();
     let mut acc = 0.0f64;
     let n = 2_000_000usize;

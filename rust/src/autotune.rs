@@ -46,8 +46,9 @@ pub struct TuneResult {
 /// dominates (the "minimum efficient transfer size" prune of §5.3).
 pub const MIN_CE_CHUNK_BYTES: usize = 64 * 1024;
 
-/// Enumerate the candidate configurations for an operator.
-pub fn search_space(op: &OperatorInstance, budget: Budget) -> Vec<TuneConfig> {
+/// Enumerate the candidate configurations for an operator on a topology
+/// (the arch matrix decides which backends take SM-allocation choices).
+pub fn search_space(op: &OperatorInstance, topo: &Topology, budget: Budget) -> Vec<TuneConfig> {
     let splits: &[usize] = match budget {
         Budget::Quick => &[1, 2, 4],
         Budget::Full => &[1, 2, 4, 8, 16],
@@ -68,7 +69,7 @@ pub fn search_space(op: &OperatorInstance, budget: Budget) -> Vec<TuneConfig> {
     let mut out = Vec::new();
     for &split in splits {
         for backend in BackendKind::TUNABLE {
-            let sm_choices: Vec<usize> = if backend::curve(backend).sms_for_peak == 0 {
+            let sm_choices: Vec<usize> = if topo.arch.curve(backend).sms_for_peak == 0 {
                 vec![0]
             } else {
                 sms.to_vec()
@@ -105,7 +106,9 @@ pub fn prune(op: &OperatorInstance, cfg: &TuneConfig, topo: &Topology) -> Result
     } else {
         crate::topo::LinkLevel::IntraNode
     };
-    backend::check_feasible(cfg.real.backend, needs_reduce, level, cfg.real.comm_sms)?;
+    // arch-aware: rejects mechanisms the machine generation lacks entirely
+    // (e.g. TMA on a100_node) before the shared capability rules
+    topo.arch.check_feasible(cfg.real.backend, needs_reduce, level, cfg.real.comm_sms)?;
     // minimum efficient transfer size for the copy engine
     if cfg.real.backend == BackendKind::CopyEngine {
         let shard_bytes = op.comm_bytes() / op.world.max(1) / (op.world.max(2) - 1).max(1);
@@ -130,7 +133,7 @@ pub fn tune(op: &OperatorInstance, topo: &Topology, budget: Budget) -> Result<Tu
     let mut evaluated = 0usize;
     let mut pruned = 0usize;
     let mut log = Vec::new();
-    for cfg in search_space(op, budget) {
+    for cfg in search_space(op, topo, budget) {
         if prune(op, &cfg, topo).is_err() {
             pruned += 1;
             continue;
@@ -206,7 +209,7 @@ pub fn tune_user_plan(
     let mut pruned = 0usize;
     let mut last_err: Option<Error> = None;
     for backend in BackendKind::TUNABLE {
-        let sm_choices: &[usize] = if backend::curve(backend).sms_for_peak == 0 {
+        let sm_choices: &[usize] = if topo.arch.curve(backend).sms_for_peak == 0 {
             &[0]
         } else {
             &[8, 16, 32]
@@ -248,29 +251,56 @@ pub fn tune_user_plan(
 
 // ---------------------------------------------------------------------------
 // Tuned-configuration persistence: tune once, reuse across processes.
-// TSV format: operator label \t config label \t makespan_us \t tflops
-// (the offline build has no serde; config labels round-trip via `parse_label`).
+// TSV format (one row per entry):
+//   operator label \t topology fingerprint \t config label \t makespan \t tflops
+// The fingerprint (hw::fingerprint: structural hash of world, links, device
+// and the backend matrix) is part of the KEY: a cache persisted on one
+// machine shape can never serve stale knobs on another — tuned splits and
+// backends are only optimal for the curves they were scored on.
+// (The offline build has no serde; labels round-trip as plain text.)
 // ---------------------------------------------------------------------------
 
-/// On-disk tuning cache.
+/// On-disk tuning cache, keyed by (operator label, topology fingerprint).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TuneCache {
-    entries: Vec<(String, String, f64, f64)>,
+    entries: Vec<(String, String, String, f64, f64)>,
 }
 
 impl TuneCache {
-    /// Record a result for an operator. Fails with [`Error::Autotune`] when
-    /// either label embeds a tab or newline — the TSV format's structural
-    /// characters — instead of writing a cache file that parses back into
-    /// different (or silently merged) entries.
-    pub fn insert(&mut self, op: &OperatorInstance, r: &TuneResult) -> Result<()> {
-        self.insert_raw(&op.label(), &r.cfg.label(), r.makespan_us, r.tflops)
+    /// Record a result for an operator tuned on `topo`. Fails with
+    /// [`Error::Autotune`] when a label embeds a tab or newline — the TSV
+    /// format's structural characters — instead of writing a cache file
+    /// that parses back into different (or silently merged) entries.
+    pub fn insert(
+        &mut self,
+        op: &OperatorInstance,
+        topo: &Topology,
+        r: &TuneResult,
+    ) -> Result<()> {
+        self.insert_raw(
+            &op.label(),
+            &crate::hw::fingerprint(topo),
+            &r.cfg.label(),
+            r.makespan_us,
+            r.tflops,
+        )
     }
 
     /// Label-level insert for callers with non-registry labels; the same
     /// structural-character validation applies.
-    pub fn insert_raw(&mut self, op_label: &str, cfg_label: &str, m: f64, t: f64) -> Result<()> {
-        for (what, s) in [("operator label", op_label), ("config label", cfg_label)] {
+    pub fn insert_raw(
+        &mut self,
+        op_label: &str,
+        topo_fp: &str,
+        cfg_label: &str,
+        m: f64,
+        t: f64,
+    ) -> Result<()> {
+        for (what, s) in [
+            ("operator label", op_label),
+            ("topology fingerprint", topo_fp),
+            ("config label", cfg_label),
+        ] {
             if s.contains('\t') || s.contains('\n') {
                 return Err(Error::Autotune(format!(
                     "cannot cache {what} {s:?}: embedded tab/newline would corrupt \
@@ -278,17 +308,25 @@ impl TuneCache {
                 )));
             }
         }
-        self.entries.retain(|(l, ..)| l != op_label);
-        self.entries.push((op_label.to_string(), cfg_label.to_string(), m, t));
+        self.entries.retain(|(l, fp, ..)| !(l == op_label && fp == topo_fp));
+        self.entries.push((
+            op_label.to_string(),
+            topo_fp.to_string(),
+            cfg_label.to_string(),
+            m,
+            t,
+        ));
         Ok(())
     }
 
-    /// Look up a cached config label for an operator.
-    pub fn get(&self, op: &OperatorInstance) -> Option<(&str, f64, f64)> {
+    /// Look up a cached config label for an operator ON THIS topology;
+    /// entries tuned for any other machine shape never match.
+    pub fn get(&self, op: &OperatorInstance, topo: &Topology) -> Option<(&str, f64, f64)> {
+        let fp = crate::hw::fingerprint(topo);
         self.entries
             .iter()
-            .find(|(l, ..)| l == &op.label())
-            .map(|(_, c, m, t)| (c.as_str(), *m, *t))
+            .find(|(l, f, ..)| l == &op.label() && f == &fp)
+            .map(|(_, _, c, m, t)| (c.as_str(), *m, *t))
     }
 
     pub fn len(&self) -> usize {
@@ -301,9 +339,9 @@ impl TuneCache {
     /// Serialize to TSV.
     pub fn to_tsv(&self) -> String {
         let mut out = String::new();
-        for (op, cfg, m, t) in &self.entries {
+        for (op, fp, cfg, m, t) in &self.entries {
             // `{}` prints the shortest representation that round-trips f64
-            out.push_str(&format!("{op}\t{cfg}\t{m}\t{t}\n"));
+            out.push_str(&format!("{op}\t{fp}\t{cfg}\t{m}\t{t}\n"));
         }
         out
     }
@@ -318,20 +356,27 @@ impl TuneCache {
             // splitn keeps any surplus tabs inside the last fragment, where
             // the float parse rejects them — a line can never contribute
             // more than one entry however mangled its labels are
-            let cols: Vec<&str> = line.splitn(4, '\t').collect();
-            if cols.len() != 4 || cols[3].contains('\t') {
+            let cols: Vec<&str> = line.splitn(5, '\t').collect();
+            if cols.len() != 5 || cols[4].contains('\t') {
                 return Err(Error::Autotune(format!(
-                    "cache line {}: need exactly 4 tab-separated cols",
+                    "cache line {}: need exactly 5 tab-separated cols \
+                     (op, topo-fingerprint, config, makespan, tflops)",
                     i + 1
                 )));
             }
-            let m: f64 = cols[2]
+            let m: f64 = cols[3]
                 .parse()
                 .map_err(|_| Error::Autotune(format!("cache line {}: bad makespan", i + 1)))?;
-            let t: f64 = cols[3]
+            let t: f64 = cols[4]
                 .parse()
                 .map_err(|_| Error::Autotune(format!("cache line {}: bad tflops", i + 1)))?;
-            entries.push((cols[0].to_string(), cols[1].to_string(), m, t));
+            entries.push((
+                cols[0].to_string(),
+                cols[1].to_string(),
+                cols[2].to_string(),
+                m,
+                t,
+            ));
         }
         Ok(TuneCache { entries })
     }
@@ -352,14 +397,15 @@ mod tests {
     use crate::workload::{OperatorInstance, LLAMA3_8B, LLAMA3_70B};
 
     fn topo() -> Topology {
-        Topology::h100_node(4).unwrap()
+        crate::hw::catalog::topology("h100_node", 4).unwrap()
     }
 
     #[test]
     fn space_enumerates_and_scales_with_budget() {
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
-        let q = search_space(&op, Budget::Quick).len();
-        let f = search_space(&op, Budget::Full).len();
+        let t4 = topo();
+        let q = search_space(&op, &t4, Budget::Quick).len();
+        let f = search_space(&op, &t4, Budget::Full).len();
         assert!(q >= 20, "{q}");
         assert!(f > 4 * q, "{f} vs {q}");
     }
@@ -415,12 +461,13 @@ mod tests {
     #[test]
     fn cache_roundtrip_and_replace() {
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
-        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        let t4 = topo();
+        let r = tune(&op, &t4, Budget::Quick).unwrap();
         let mut c = TuneCache::default();
         assert!(c.is_empty());
-        c.insert(&op, &r).unwrap();
+        c.insert(&op, &t4, &r).unwrap();
         assert_eq!(c.len(), 1);
-        let (cfg, m, t) = c.get(&op).unwrap();
+        let (cfg, m, t) = c.get(&op, &t4).unwrap();
         assert_eq!(cfg, r.cfg.label());
         assert_eq!(m, r.makespan_us);
         assert_eq!(t, r.tflops);
@@ -428,20 +475,23 @@ mod tests {
         let c2 = TuneCache::from_tsv(&c.to_tsv()).unwrap();
         assert_eq!(c, c2);
         // replacing an entry keeps the cache deduped
-        c.insert(&op, &r).unwrap();
+        c.insert(&op, &t4, &r).unwrap();
         assert_eq!(c.len(), 1);
-        // parse errors
+        // parse errors (incl. the legacy 4-column format, which predates
+        // the topology-fingerprint key and must be rejected, not misread)
         assert!(TuneCache::from_tsv("a\tb\tc\n").is_err());
-        assert!(TuneCache::from_tsv("a\tb\tx\t1\n").is_err());
+        assert!(TuneCache::from_tsv("a\tb\t1.0\t2.0\n").is_err());
+        assert!(TuneCache::from_tsv("a\tfp\tb\tx\t1\n").is_err());
         assert!(TuneCache::from_tsv("").unwrap().is_empty());
     }
 
     #[test]
     fn cache_save_load_file() {
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
-        let r = tune(&op, &topo(), Budget::Quick).unwrap();
+        let t4 = topo();
+        let r = tune(&op, &t4, Budget::Quick).unwrap();
         let mut c = TuneCache::default();
-        c.insert(&op, &r).unwrap();
+        c.insert(&op, &t4, &r).unwrap();
         let path = std::env::temp_dir().join("syncopate_tune_cache_test.tsv");
         c.save(&path).unwrap();
         let loaded = TuneCache::load(&path).unwrap();
@@ -450,10 +500,37 @@ mod tests {
     }
 
     #[test]
+    fn cache_never_serves_across_machine_shapes() {
+        // ISSUE 4 satellite (poisoning regression): a cache persisted on
+        // one machine shape must not serve its knobs on another — neither
+        // a different arch, nor the same arch at a different world.
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let h100 = topo();
+        let r = tune(&op, &h100, Budget::Quick).unwrap();
+        let mut c = TuneCache::default();
+        c.insert(&op, &h100, &r).unwrap();
+        assert!(c.get(&op, &h100).is_some());
+        let a100 = crate::hw::catalog::topology("a100_node", 4).unwrap();
+        assert!(c.get(&op, &a100).is_none(), "a100 must miss an h100-tuned entry");
+        let h100_w8 = crate::hw::catalog::topology("h100_node", 8).unwrap();
+        assert!(c.get(&op, &h100_w8).is_none(), "world 8 must miss a world-4 entry");
+        // both shapes coexist under the same operator label...
+        let r_a100 = tune(&op, &a100, Budget::Quick).unwrap();
+        c.insert(&op, &a100, &r_a100).unwrap();
+        assert_eq!(c.len(), 2);
+        // ...and survive the TSV round trip with their fingerprints intact
+        let reloaded = TuneCache::from_tsv(&c.to_tsv()).unwrap();
+        assert_eq!(c, reloaded);
+        assert_eq!(reloaded.get(&op, &h100).unwrap().0, r.cfg.label());
+        assert_eq!(reloaded.get(&op, &a100).unwrap().0, r_a100.cfg.label());
+    }
+
+    #[test]
     fn cache_roundtrips_every_suite_label() {
         // ISSUE 3 satellite: every fig8/fig9 operator label (and the
         // default config label) must survive the TSV round trip verbatim
         let mut c = TuneCache::default();
+        let t4 = topo();
         let ops: Vec<_> =
             crate::workload::fig8_suite().into_iter().chain(crate::workload::fig9_suite()).collect();
         for (i, op) in ops.iter().enumerate() {
@@ -465,13 +542,13 @@ mod tests {
                 pruned: 0,
                 log: vec![],
             };
-            c.insert(op, &r).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
+            c.insert(op, &t4, &r).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
         }
         assert_eq!(c.len(), ops.len(), "suite labels must be distinct");
         let reloaded = TuneCache::from_tsv(&c.to_tsv()).unwrap();
         assert_eq!(c, reloaded);
         for op in &ops {
-            assert!(reloaded.get(op).is_some(), "{} lost in round trip", op.label());
+            assert!(reloaded.get(op, &t4).is_some(), "{} lost in round trip", op.label());
         }
     }
 
@@ -479,15 +556,17 @@ mod tests {
     fn cache_rejects_structural_characters_in_labels() {
         let mut c = TuneCache::default();
         for bad in ["tab\tlabel", "newline\nlabel"] {
-            let e = c.insert_raw(bad, "cfg", 1.0, 2.0).unwrap_err();
+            let e = c.insert_raw(bad, "fp", "cfg", 1.0, 2.0).unwrap_err();
             assert!(matches!(e, Error::Autotune(_)), "{e:?}");
             assert!(e.to_string().contains("corrupt"), "{e}");
-            let e = c.insert_raw("op", bad, 1.0, 2.0).unwrap_err();
+            let e = c.insert_raw("op", bad, "cfg", 1.0, 2.0).unwrap_err();
+            assert!(e.to_string().contains("corrupt"), "{e}");
+            let e = c.insert_raw("op", "fp", bad, 1.0, 2.0).unwrap_err();
             assert!(e.to_string().contains("corrupt"), "{e}");
         }
         assert!(c.is_empty(), "rejected inserts must not partially apply");
         // a mangled file can never smuggle extra columns into an entry
-        assert!(TuneCache::from_tsv("a\tb\t1.0\t2.0\textra\n").is_err());
+        assert!(TuneCache::from_tsv("a\tfp\tb\t1.0\t2.0\textra\n").is_err());
     }
 
     #[test]
@@ -521,5 +600,32 @@ mod tests {
         let r = tune(&op, &topo(), Budget::Quick).unwrap();
         assert!(backend::caps(r.cfg.real.backend).supports_reduce);
         assert!(r.pruned > 0);
+    }
+
+    #[test]
+    fn tune_on_a100_never_picks_an_arch_absent_mechanism() {
+        // A100 ships no TMA rows: the capability matrix must prune both
+        // TMA realizations out of the search without any TMA-specific code.
+        let a100 = crate::hw::catalog::topology("a100_node", 4).unwrap();
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let r = tune(&op, &a100, Budget::Quick).unwrap();
+        assert!(a100.arch.available(r.cfg.real.backend), "{:?}", r.cfg.real.backend);
+        assert!(
+            !matches!(
+                r.cfg.real.backend,
+                BackendKind::TmaSpecialized | BackendKind::TmaColocated
+            ),
+            "{:?}",
+            r.cfg.real.backend
+        );
+        assert!(r.pruned > 0, "TMA candidates must be pruned on a100");
+        // restricted user-plan tuning obeys the same matrix
+        use crate::chunk::{DType, TensorTable};
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[64, 64], DType::F32).unwrap();
+        let ag = crate::schedule::templates::all_gather_swizzle(&t, x, 0, 4).unwrap();
+        let ur = tune_user_plan(&ag, &a100).unwrap();
+        assert!(a100.arch.available(ur.real.backend), "{:?}", ur.real.backend);
+        assert!(ur.pruned > 0);
     }
 }

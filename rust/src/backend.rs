@@ -18,6 +18,14 @@
 //! backends scale with the number of issuing SMs, and copy engines pay a
 //! per-contiguous-piece host launch that collapses effective bandwidth for
 //! strided tensors.
+//!
+//! The tables in this module ([`caps`]/[`curve`]) are the **H100/NVLink
+//! reference calibration**. The data-driven store is [`crate::hw::Arch`]:
+//! every [`crate::topo::Topology`] carries one, sim/codegen/autotune query
+//! through it, and `.topo` descriptions override these numbers per machine
+//! shape without code edits. The `*_with` functions below hold the shared
+//! math, parameterized by an explicit [`Curve`]/[`Caps`], so the reference
+//! wrappers and the arch-aware paths cannot drift apart.
 
 use crate::error::{Error, Result};
 use crate::topo::{LinkLevel, LinkSpec};
@@ -51,6 +59,34 @@ impl BackendKind {
         BackendKind::LdStSpecialized,
         BackendKind::LdStColocated,
     ];
+
+    /// Every realization, including the baseline-only bulk collective —
+    /// the row set of the capability matrix ([`crate::hw::Arch`]).
+    pub const ALL: [BackendKind; 6] = [
+        BackendKind::CopyEngine,
+        BackendKind::TmaSpecialized,
+        BackendKind::TmaColocated,
+        BackendKind::LdStSpecialized,
+        BackendKind::LdStColocated,
+        BackendKind::NcclBulk,
+    ];
+
+    /// Dense index into [`BackendKind::ALL`] (the arch table row).
+    pub fn index(self) -> usize {
+        match self {
+            BackendKind::CopyEngine => 0,
+            BackendKind::TmaSpecialized => 1,
+            BackendKind::TmaColocated => 2,
+            BackendKind::LdStSpecialized => 3,
+            BackendKind::LdStColocated => 4,
+            BackendKind::NcclBulk => 5,
+        }
+    }
+
+    /// Inverse of [`BackendKind::name`] (the `.topo` format's lookup).
+    pub fn by_name(name: &str) -> Option<BackendKind> {
+        Self::ALL.into_iter().find(|b| b.name() == name)
+    }
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -129,7 +165,7 @@ pub fn caps(kind: BackendKind) -> Caps {
 }
 
 /// Tuning curve constants per backend.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Curve {
     /// Peak unidirectional bandwidth, GB/s (before link clamping).
     pub peak_gbps: f64,
@@ -181,15 +217,10 @@ pub fn curve(kind: BackendKind) -> Curve {
     }
 }
 
-/// Effective bandwidth (GB/s) for one transfer of `bytes` with `comm_sms`
-/// issuing SMs over `link`, clamped by link capacity.
-pub fn effective_bandwidth_gbps(
-    kind: BackendKind,
-    bytes: usize,
-    comm_sms: usize,
-    link: LinkSpec,
-) -> f64 {
-    let c = curve(kind);
+/// Effective bandwidth (GB/s) under an explicit curve — the one place the
+/// size-ramp x SM-ramp x link-clamp model lives. [`crate::hw::Arch`] and the
+/// reference wrapper below both route here.
+pub fn bandwidth_with(c: Curve, bytes: usize, comm_sms: usize, link: LinkSpec) -> f64 {
     let size_ramp = bytes as f64 / (bytes as f64 + c.half_size);
     let sm_ramp = if c.sms_for_peak == 0 {
         1.0
@@ -199,13 +230,14 @@ pub fn effective_bandwidth_gbps(
     (c.peak_gbps * size_ramp * sm_ramp).min(link.bw_gbps)
 }
 
-/// Wall-clock for one logical chunk transfer, microseconds.
+/// Transfer wall-clock under an explicit curve + host-launch flag.
 ///
 /// `pieces` is the number of contiguous spans the chunk's region decomposes
 /// into: host-launched backends pay `issue_us` *per piece*; SM backends pay
 /// it once (descriptors handle striding).
-pub fn transfer_time_us(
-    kind: BackendKind,
+pub fn transfer_time_with(
+    c: Curve,
+    host_launched: bool,
     bytes: usize,
     pieces: usize,
     comm_sms: usize,
@@ -214,28 +246,26 @@ pub fn transfer_time_us(
     if bytes == 0 {
         return 0.0;
     }
-    let c = curve(kind);
-    let host = caps(kind).host_launched;
-    let launches = if host { pieces.max(1) } else { 1 };
+    let launches = if host_launched { pieces.max(1) } else { 1 };
     // Host-launched engines saturate per piece (each piece is an independent
     // transfer); descriptor-based SM backends stride in hardware and see the
     // full chunk size.
-    let ramp_bytes = if host { bytes / pieces.max(1) } else { bytes };
-    let bw = effective_bandwidth_gbps(kind, ramp_bytes.max(1), comm_sms, link);
+    let ramp_bytes = if host_launched { bytes / pieces.max(1) } else { bytes };
+    let bw = bandwidth_with(c, ramp_bytes.max(1), comm_sms, link);
     let wire_us = bytes as f64 / (bw * 1e3); // GB/s == 1e3 bytes/µs
     launches as f64 * c.issue_us + link.lat_us + wire_us
 }
 
-/// Validate a backend choice against the needs of a specific transfer.
-/// The autotuner uses this to prune infeasible configurations (§5.3:
-/// "prunes configurations that would violate these hardware limits").
-pub fn check_feasible(
+/// Feasibility rules under an explicit capability row (`sm_driven` comes
+/// from the matching curve's `sms_for_peak > 0`).
+pub fn check_feasible_with(
     kind: BackendKind,
+    c: Caps,
+    sm_driven: bool,
     needs_reduce: bool,
     link_level: LinkLevel,
     comm_sms: usize,
 ) -> Result<()> {
-    let c = caps(kind);
     if needs_reduce && !c.supports_reduce {
         return Err(Error::Backend(format!(
             "{} cannot perform reductions (needed by this transfer)",
@@ -248,14 +278,13 @@ pub fn check_feasible(
             kind.name()
         )));
     }
-    let needs_sms = curve(kind).sms_for_peak > 0;
-    if needs_sms && comm_sms == 0 {
+    if sm_driven && comm_sms == 0 {
         return Err(Error::Backend(format!(
             "{} is SM-driven but comm_sms == 0",
             kind.name()
         )));
     }
-    if !needs_sms && comm_sms != 0 {
+    if !sm_driven && comm_sms != 0 {
         return Err(Error::Backend(format!(
             "{} takes no SMs but comm_sms == {comm_sms}",
             kind.name()
@@ -264,13 +293,67 @@ pub fn check_feasible(
     Ok(())
 }
 
+/// Effective bandwidth (GB/s) for one transfer of `bytes` with `comm_sms`
+/// issuing SMs over `link`, clamped by link capacity — H100 reference
+/// calibration. Arch-aware callers use [`crate::hw::Arch::effective_bandwidth_gbps`].
+pub fn effective_bandwidth_gbps(
+    kind: BackendKind,
+    bytes: usize,
+    comm_sms: usize,
+    link: LinkSpec,
+) -> f64 {
+    bandwidth_with(curve(kind), bytes, comm_sms, link)
+}
+
+/// Wall-clock for one logical chunk transfer, microseconds — H100
+/// reference calibration. Arch-aware callers use
+/// [`crate::hw::Arch::transfer_time_us`].
+pub fn transfer_time_us(
+    kind: BackendKind,
+    bytes: usize,
+    pieces: usize,
+    comm_sms: usize,
+    link: LinkSpec,
+) -> f64 {
+    transfer_time_with(curve(kind), caps(kind).host_launched, bytes, pieces, comm_sms, link)
+}
+
+/// Validate a backend choice against the needs of a specific transfer —
+/// H100 reference calibration. The autotuner prunes through the arch-aware
+/// [`crate::hw::Arch::check_feasible`] (§5.3: "prunes configurations that
+/// would violate these hardware limits").
+pub fn check_feasible(
+    kind: BackendKind,
+    needs_reduce: bool,
+    link_level: LinkLevel,
+    comm_sms: usize,
+) -> Result<()> {
+    check_feasible_with(
+        kind,
+        caps(kind),
+        curve(kind).sms_for_peak > 0,
+        needs_reduce,
+        link_level,
+        comm_sms,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topo::Topology;
 
     fn nvlink() -> LinkSpec {
-        Topology::h100_node(8).unwrap().intra
+        crate::hw::catalog::topology("h100_node", 8).unwrap().intra
+    }
+
+    #[test]
+    fn all_covers_tunable_plus_nccl_and_indexes_densely() {
+        assert_eq!(BackendKind::ALL.len(), BackendKind::TUNABLE.len() + 1);
+        for (i, b) in BackendKind::ALL.into_iter().enumerate() {
+            assert_eq!(b.index(), i);
+            assert_eq!(BackendKind::by_name(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::by_name("warp-drive"), None);
     }
 
     #[test]

@@ -345,7 +345,7 @@ mod tests {
     use crate::workload::{OperatorInstance, LLAMA3_8B};
 
     fn topo(w: usize) -> Topology {
-        Topology::h100_node(w).unwrap()
+        crate::hw::catalog::topology("h100_node", w).unwrap()
     }
 
     #[test]

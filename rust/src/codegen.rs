@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 
-use crate::backend::{self, BackendKind};
+use crate::backend::BackendKind;
 use crate::chunk::Chunk;
 use crate::depgraph::RankSync;
 use crate::error::{Error, Result};
@@ -360,7 +360,7 @@ pub fn compile(
     for (rank, input) in inputs.iter().enumerate() {
         per_rank.push(compile_rank(rank, sched, input, real, topo, &sig)?);
     }
-    let reserved = if backend::caps(real.backend).dedicated_sms { real.comm_sms } else { 0 };
+    let reserved = if topo.arch.caps(real.backend).dedicated_sms { real.comm_sms } else { 0 };
     Ok(ExecutablePlan { world: sched.world, per_rank, num_signals, reserved_comm_sms: reserved })
 }
 
@@ -419,7 +419,7 @@ fn make_transfer(
     let src_rank = op.src_rank(owner);
     let dst_rank = op.dst_rank(owner);
     let link = topo.link(src_rank, dst_rank)?;
-    backend::check_feasible(real.backend, reduce, link.level, real.comm_sms)?;
+    topo.arch.check_feasible(real.backend, reduce, link.level, real.comm_sms)?;
     let bytes = src_chunk.bytes(&sched.tensors)?;
     let shape = sched.tensors.get(src_chunk.tensor)?.shape.clone();
     let pieces = src_chunk.region.contiguous_pieces(&shape);
@@ -601,7 +601,7 @@ mod tests {
                 Trigger { after_pos: Some(1), op_index: 1 },
             ],
         };
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 2).unwrap();
         (s, vec![mk_input(sync0), mk_input(sync1)], topo)
     }
 

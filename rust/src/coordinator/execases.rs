@@ -47,6 +47,9 @@ pub struct ExecCase {
     pub plan: ExecutablePlan,
     pub store: BufferStore,
     pub checks: Vec<Check>,
+    /// The topology the case was compiled for (simulation runs against
+    /// this, e.g. `report arch-sweep`).
+    pub topo: Topology,
 }
 
 /// Execute a case and verify every check (consumes the case's store).
@@ -175,11 +178,30 @@ fn check_split(case: &str, split: usize, shard: usize) -> Result<()> {
     Ok(())
 }
 
-fn default_real(reduce: bool) -> Realization {
-    if reduce {
-        Realization::new(BackendKind::LdStSpecialized, 16)
-    } else {
-        Realization::new(BackendKind::CopyEngine, 0)
+/// Default realization for a case on `topo`: the copy engine for plain
+/// single-node transfers (the historical default), otherwise the first
+/// matrix row that can carry every transfer the case may issue — reduce
+/// support when `reduce`, inter-node reach on a multinode mesh, and no
+/// contiguous-only restriction (split chunks may stride). Picking through
+/// the capability matrix keeps custom `.topo` files without, say, an
+/// `ldst-specialized` row runnable instead of failing at codegen.
+fn default_real(topo: &Topology, reduce: bool) -> Realization {
+    let multi_node = topo.ranks_per_node < topo.world;
+    if !reduce && !multi_node && topo.arch.available(BackendKind::CopyEngine) {
+        return Realization::new(BackendKind::CopyEngine, 0);
+    }
+    let pick = BackendKind::ALL.into_iter().find(|&k| {
+        topo.arch.available(k) && {
+            let c = topo.arch.caps(k);
+            (!reduce || c.supports_reduce) && (!multi_node || c.inter_node) && !c.contiguous_only
+        }
+    });
+    match pick {
+        Some(k) if topo.arch.curve(k).sms_for_peak == 0 => Realization::new(k, 0),
+        Some(k) => Realization::new(k, 16),
+        // no feasible row: keep the reference choice so codegen's
+        // check_feasible names the real problem
+        None => Realization::new(BackendKind::LdStSpecialized, 16),
     }
 }
 
@@ -265,30 +287,53 @@ pub enum AgVariant {
 
 /// AG-GEMM at validation scale: gather row-sharded X, multiply by each
 /// rank's private weight shard, chunk by chunk as shards land.
+/// Runs on the default catalog topology; see [`ag_gemm_variant_on`].
 pub fn ag_gemm(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
     ag_gemm_variant(world, split, seed, AgVariant::PullSwizzle)
 }
 
-/// AG-GEMM with an explicit AllGather realization (see [`AgVariant`]).
+/// AG-GEMM with an explicit AllGather realization on the default catalog
+/// topology (see [`AgVariant`]).
 pub fn ag_gemm_variant(
     world: usize,
     split: usize,
     seed: u64,
     variant: AgVariant,
 ) -> Result<ExecCase> {
-    // error messages name the registry case this variant actually backs
-    let case = match variant {
+    check_world(ag_case_name(variant), world)?;
+    ag_gemm_variant_on(
+        &crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?,
+        split,
+        seed,
+        variant,
+    )
+}
+
+/// Registry case a variant backs (used in error messages).
+fn ag_case_name(variant: AgVariant) -> &'static str {
+    match variant {
         AgVariant::ImportedFlux => "ag-gemm-flux",
         AgVariant::ImportedTritonDist => "ag-gemm-tdist",
         _ => "ag-gemm",
-    };
+    }
+}
+
+/// AG-GEMM with an explicit AllGather realization on an explicit topology.
+pub fn ag_gemm_variant_on(
+    topo: &Topology,
+    split: usize,
+    seed: u64,
+    variant: AgVariant,
+) -> Result<ExecCase> {
+    // error messages name the registry case this variant actually backs
+    let case = ag_case_name(variant);
+    let world = topo.world;
     check_world(case, world)?;
     let shard = 32usize;
     check_split(case, split, shard)?;
     let bm = shard / split;
     let artifact = format!("gemm_{bm}x{GEMM_K}x{GEMM_N}");
     let m = world * shard;
-    let topo = Topology::h100_node(world)?;
 
     let mut table = TensorTable::new();
     let x = table.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
@@ -358,7 +403,7 @@ pub fn ag_gemm_variant(
             tile_calls,
         });
     }
-    let plan = compile(&sched, &inputs, default_real(false), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, false), topo)?;
     let checks = (0..world)
         .map(|r| Check {
             rank: r,
@@ -373,27 +418,40 @@ pub fn ag_gemm_variant(
         plan,
         store,
         checks,
+        topo: topo.clone(),
     })
 }
 
 /// GEMM-RS: each rank computes a partial Y from its K-shard, output row
 /// shards reduce-scatter to their owners as tiles finish.
 pub fn gemm_rs(world: usize, seed: u64) -> Result<ExecCase> {
-    gemm_reduce_case(world, seed, false)
+    check_world("gemm-rs", world)?;
+    gemm_rs_on(&crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?, seed)
 }
 
 /// GEMM-AR: partition-based AllReduce (Fig. 4d) of the partial Y.
 pub fn gemm_ar(world: usize, seed: u64) -> Result<ExecCase> {
-    gemm_reduce_case(world, seed, true)
+    check_world("gemm-ar", world)?;
+    gemm_ar_on(&crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?, seed)
 }
 
-fn gemm_reduce_case(world: usize, seed: u64, all_reduce: bool) -> Result<ExecCase> {
+/// [`gemm_rs`] on an explicit topology.
+pub fn gemm_rs_on(topo: &Topology, seed: u64) -> Result<ExecCase> {
+    gemm_reduce_case(topo, seed, false)
+}
+
+/// [`gemm_ar`] on an explicit topology.
+pub fn gemm_ar_on(topo: &Topology, seed: u64) -> Result<ExecCase> {
+    gemm_reduce_case(topo, seed, true)
+}
+
+fn gemm_reduce_case(topo: &Topology, seed: u64, all_reduce: bool) -> Result<ExecCase> {
+    let world = topo.world;
     check_world(if all_reduce { "gemm-ar" } else { "gemm-rs" }, world)?;
     let shard = 16usize;
     let bm = shard; // one tile per output shard
     let artifact = format!("gemm_{bm}x{GEMM_K}x{GEMM_N}");
     let m = world * shard;
-    let topo = Topology::h100_node(world)?;
 
     let mut table = TensorTable::new();
     table.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
@@ -452,7 +510,7 @@ fn gemm_reduce_case(world: usize, seed: u64, all_reduce: bool) -> Result<ExecCas
             tile_calls,
         });
     }
-    let plan = compile(&sched, &inputs, default_real(true), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, true), topo)?;
 
     // oracle: full reduced Y
     let partials: Vec<Vec<f32>> =
@@ -485,16 +543,30 @@ fn gemm_reduce_case(world: usize, seed: u64, all_reduce: bool) -> Result<ExecCas
         })
         .collect();
     let name = if all_reduce { "gemm-ar" } else { "gemm-rs" };
-    Ok(ExecCase { name: format!("{name}-w{world}"), sched, plan, store, checks })
+    Ok(ExecCase {
+        name: format!("{name}-w{world}"),
+        sched,
+        plan,
+        store,
+        checks,
+        topo: topo.clone(),
+    })
 }
 
 /// A2A-GEMM: block exchange then per-block GEMM on received tokens.
+/// Runs on the default catalog topology; see [`a2a_gemm_on`].
 pub fn a2a_gemm(world: usize, seed: u64) -> Result<ExecCase> {
+    check_world("a2a-gemm", world)?;
+    a2a_gemm_on(&crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?, seed)
+}
+
+/// [`a2a_gemm`] on an explicit topology.
+pub fn a2a_gemm_on(topo: &Topology, seed: u64) -> Result<ExecCase> {
+    let world = topo.world;
     check_world("a2a-gemm", world)?;
     let blk = 8usize;
     let artifact = format!("gemm_{blk}x{GEMM_K}x{GEMM_N}");
     let m = world * world * blk;
-    let topo = Topology::h100_node(world)?;
 
     let mut table = TensorTable::new();
     let x = table.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
@@ -553,7 +625,7 @@ pub fn a2a_gemm(world: usize, seed: u64) -> Result<ExecCase> {
             tile_calls,
         });
     }
-    let plan = compile(&sched, &inputs, default_real(false), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, false), topo)?;
 
     let mut checks = Vec::new();
     for j in 0..world {
@@ -576,12 +648,31 @@ pub fn a2a_gemm(world: usize, seed: u64) -> Result<ExecCase> {
             what: format!("column blocks @rank{j}"),
         });
     }
-    Ok(ExecCase { name: format!("a2a-gemm-w{world}"), sched, plan, store, checks })
+    Ok(ExecCase {
+        name: format!("a2a-gemm-w{world}"),
+        sched,
+        plan,
+        store,
+        checks,
+        topo: topo.clone(),
+    })
 }
 
 /// RingAttention: rotate K/V shards around the ring, folding each arrival
 /// with the online-softmax Pallas step; finalize at the end.
+/// Runs on the default catalog topology; see [`ring_attention_on`].
 pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
+    check_world("ring-attn", world)?;
+    ring_attention_on(
+        &crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?,
+        split,
+        seed,
+    )
+}
+
+/// [`ring_attention`] on an explicit topology.
+pub fn ring_attention_on(topo: &Topology, split: usize, seed: u64) -> Result<ExecCase> {
+    let world = topo.world;
     check_world("ring-attn", world)?;
     let shard = ATTN_SQ; // K/V rows per rank
     check_split("ring-attn", split, shard)?;
@@ -589,7 +680,6 @@ pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase>
     let step_artifact = format!("attn_step_q{ATTN_SQ}d{ATTN_D}k{ch}");
     let fin_artifact = format!("attn_finalize_q{ATTN_SQ}d{ATTN_D}");
     let s_total = world * shard;
-    let topo = Topology::h100_node(world)?;
 
     let mut table = TensorTable::new();
     let k = table.declare("k", &[s_total, ATTN_D], crate::chunk::DType::F32)?;
@@ -692,7 +782,7 @@ pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase>
             tile_calls,
         });
     }
-    let plan = compile(&sched, &inputs, default_real(false), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, false), topo)?;
     let _ = v;
 
     let scale = 1.0 / (ATTN_D as f32).sqrt();
@@ -710,6 +800,7 @@ pub fn ring_attention(world: usize, split: usize, seed: u64) -> Result<ExecCase>
         plan,
         store,
         checks,
+        topo: topo.clone(),
     })
 }
 
@@ -726,16 +817,29 @@ pub fn ag_gemm_hierarchical(nodes: usize, rpn: usize, seed: u64) -> Result<ExecC
     }
     let world = nodes * rpn;
     check_world("ag-gemm-hier", world)?;
+    ag_gemm_hierarchical_on(
+        &crate::hw::catalog::topology_nodes("h100_multinode", nodes, world)?,
+        seed,
+    )
+}
+
+/// [`ag_gemm_hierarchical`] on an explicit topology; node structure (and
+/// hence the schedule's level split) comes from the topology itself. On a
+/// single-node topology the hierarchical template degenerates to the
+/// intra-node ring.
+pub fn ag_gemm_hierarchical_on(topo: &Topology, seed: u64) -> Result<ExecCase> {
+    let world = topo.world;
+    check_world("ag-gemm-hier", world)?;
+    let (rpn, nodes) = (topo.ranks_per_node, world / topo.ranks_per_node);
     let shard = 16usize;
     let artifact = format!("gemm_{shard}x{GEMM_K}x{GEMM_N}");
     let m = world * shard;
-    let topo = Topology::h100_multinode(nodes, rpn)?;
 
     let mut table = TensorTable::new();
     let x = table.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
     table.declare("w", &[GEMM_K, GEMM_N], crate::chunk::DType::F32)?;
     table.declare("y", &[m, GEMM_N], crate::chunk::DType::F32)?;
-    let sched = templates::all_gather_hierarchical(&table, x, 0, &topo)?;
+    let sched = templates::all_gather_hierarchical(&table, x, 0, topo)?;
 
     let grid = TileGrid::new(vec![
         Axis::new("M", m, shard)?,
@@ -785,13 +889,9 @@ pub fn ag_gemm_hierarchical(nodes: usize, rpn: usize, seed: u64) -> Result<ExecC
             tile_calls,
         });
     }
-    // ld/st crosses nodes (TMA / copy engine cannot)
-    let plan = compile(
-        &sched,
-        &inputs,
-        Realization::new(BackendKind::LdStSpecialized, 16),
-        &topo,
-    )?;
+    // arch-aware default: inter-node-capable on a multinode mesh (ld/st on
+    // the catalog arches — TMA / copy engine cannot cross nodes)
+    let plan = compile(&sched, &inputs, default_real(topo, false), topo)?;
     let checks = (0..world)
         .map(|r| Check {
             rank: r,
@@ -806,6 +906,7 @@ pub fn ag_gemm_hierarchical(nodes: usize, rpn: usize, seed: u64) -> Result<ExecC
         plan,
         store,
         checks,
+        topo: topo.clone(),
     })
 }
 
@@ -814,11 +915,17 @@ pub fn ag_gemm_hierarchical(nodes: usize, rpn: usize, seed: u64) -> Result<ExecC
 /// the AttnSp pattern of Fig. 9 with real numerics.
 pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
     check_world("attn-sp", world)?;
+    attn_sp_on(&crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?, seed)
+}
+
+/// [`attn_sp`] on an explicit topology.
+pub fn attn_sp_on(topo: &Topology, seed: u64) -> Result<ExecCase> {
+    let world = topo.world;
+    check_world("attn-sp", world)?;
     let shard = ATTN_SQ;
     let step_artifact = format!("attn_step_q{ATTN_SQ}d{ATTN_D}k{shard}");
     let fin_artifact = format!("attn_finalize_q{ATTN_SQ}d{ATTN_D}");
     let s_total = world * shard;
-    let topo = Topology::h100_node(world)?;
 
     let mut table = TensorTable::new();
     let k = table.declare("k", &[s_total, ATTN_D], crate::chunk::DType::F32)?;
@@ -913,7 +1020,7 @@ pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
             tile_calls,
         });
     }
-    let plan = compile(&sched, &inputs, default_real(false), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, false), topo)?;
     let _ = v;
 
     let scale = 1.0 / (ATTN_D as f32).sqrt();
@@ -925,7 +1032,14 @@ pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
             what: format!("SP attention output @rank{r}"),
         })
         .collect();
-    Ok(ExecCase { name: format!("attn-sp-w{world}"), sched, plan, store, checks })
+    Ok(ExecCase {
+        name: format!("attn-sp-w{world}"),
+        sched,
+        plan,
+        store,
+        checks,
+        topo: topo.clone(),
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -949,6 +1063,17 @@ pub fn attn_sp(world: usize, seed: u64) -> Result<ExecCase> {
 /// while later `x` chunks are still in flight.
 pub fn tp_block(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
     check_world("tp-block", world)?;
+    tp_block_on(
+        &crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?,
+        split,
+        seed,
+    )
+}
+
+/// [`tp_block`] on an explicit topology.
+pub fn tp_block_on(topo: &Topology, split: usize, seed: u64) -> Result<ExecCase> {
+    let world = topo.world;
+    check_world("tp-block", world)?;
     let shard = 16usize;
     check_split("tp-block", split, shard)?;
     let bm = shard / split;
@@ -958,7 +1083,6 @@ pub fn tp_block(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
     let artifact1 = format!("gemm_{bm}x{GEMM_K}x{GEMM_N}");
     let artifact2 = format!("gemm_{bm}x{GEMM_N}x{GEMM_N}");
     let m = world * shard;
-    let topo = Topology::h100_node(world)?;
 
     // Stage schedules over their own tensor tables; pipeline::fuse merges
     // the namespaces and validates the fused plan. The split knob then
@@ -1080,7 +1204,7 @@ pub fn tp_block(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
             tile_calls,
         });
     }
-    let plan = compile(&sched, &inputs, default_real(true), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, true), topo)?;
 
     // oracle: h_r = X @ W1_r; Y = Σ_r h_r @ W2_r; rank r owns shard r of Y
     let hs: Vec<Vec<f32>> =
@@ -1113,6 +1237,7 @@ pub fn tp_block(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
         plan,
         store,
         checks,
+        topo: topo.clone(),
     })
 }
 
@@ -1125,11 +1250,20 @@ pub fn tp_block(world: usize, split: usize, seed: u64) -> Result<ExecCase> {
 /// (DESIGN.md §12). `reports::pipeline` scores fused vs. this.
 pub fn tp_block_stage_plans(world: usize, split: usize) -> Result<Vec<ExecutablePlan>> {
     check_world("tp-block", world)?;
+    tp_block_stage_plans_on(
+        &crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?,
+        split,
+    )
+}
+
+/// [`tp_block_stage_plans`] on an explicit topology.
+pub fn tp_block_stage_plans_on(topo: &Topology, split: usize) -> Result<Vec<ExecutablePlan>> {
+    let world = topo.world;
+    check_world("tp-block", world)?;
     let shard = 16usize;
     check_split("tp-block", split, shard)?;
     let bm = shard / split;
     let m = world * shard;
-    let topo = Topology::h100_node(world)?;
     // stage-specific contraction depths, as in tp_block
     let flops1 = 2.0 * bm as f64 * GEMM_N as f64 * GEMM_K as f64;
     let flops2 = 2.0 * bm as f64 * GEMM_N as f64 * GEMM_N as f64;
@@ -1152,7 +1286,7 @@ pub fn tp_block_stage_plans(world: usize, split: usize) -> Result<Vec<Executable
             tile_calls: HashMap::new(),
         });
     }
-    let p1 = compile(&s1, &inputs, default_real(true), &topo)?;
+    let p1 = compile(&s1, &inputs, default_real(topo, true), topo)?;
 
     // stage 2: the y tiles overlapped with the ReduceScatter of their shards
     let mut t2 = TensorTable::new();
@@ -1171,7 +1305,7 @@ pub fn tp_block_stage_plans(world: usize, split: usize) -> Result<Vec<Executable
             tile_calls: HashMap::new(),
         });
     }
-    let p2 = compile(&s2, &inputs, default_real(true), &topo)?;
+    let p2 = compile(&s2, &inputs, default_real(topo, true), topo)?;
     Ok(vec![p1, p2])
 }
 
@@ -1185,10 +1319,16 @@ pub fn tp_block_stage_plans(world: usize, split: usize) -> Result<Vec<Executable
 /// once instead of three device-wide phases.
 pub fn moe_a2a(world: usize, seed: u64) -> Result<ExecCase> {
     check_world("moe-a2a", world)?;
+    moe_a2a_on(&crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?, seed)
+}
+
+/// [`moe_a2a`] on an explicit topology.
+pub fn moe_a2a_on(topo: &Topology, seed: u64) -> Result<ExecCase> {
+    let world = topo.world;
+    check_world("moe-a2a", world)?;
     let blk = 8usize;
     let artifact = format!("gemm_{blk}x{GEMM_K}x{GEMM_N}");
     let m = world * world * blk;
-    let topo = Topology::h100_node(world)?;
 
     let mut t1 = TensorTable::new();
     let x = t1.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
@@ -1248,7 +1388,7 @@ pub fn moe_a2a(world: usize, seed: u64) -> Result<ExecCase> {
         }
         inputs.push(RankComputeInput { grid: grid.clone(), order, sync, tile_flops, tile_calls });
     }
-    let plan = compile(&sched, &inputs, default_real(false), &topo)?;
+    let plan = compile(&sched, &inputs, default_real(topo, false), topo)?;
 
     // oracle: rank r ends with its combined row blocks (r, *) plus the
     // expert outputs it computed locally, blocks (*, r); the rest stays 0
@@ -1281,7 +1421,14 @@ pub fn moe_a2a(world: usize, seed: u64) -> Result<ExecCase> {
             what: format!("fused MoE: combined rows + expert outputs @rank{r}"),
         });
     }
-    Ok(ExecCase { name: format!("moe-a2a-w{world}"), sched, plan, store, checks })
+    Ok(ExecCase {
+        name: format!("moe-a2a-w{world}"),
+        sched,
+        plan,
+        store,
+        checks,
+        topo: topo.clone(),
+    })
 }
 
 /// Per-stage plans of the MoE pipeline for the barrier-at-boundary
@@ -1290,15 +1437,21 @@ pub fn moe_a2a(world: usize, seed: u64) -> Result<ExecCase> {
 /// [`tp_block_stage_plans`]).
 pub fn moe_a2a_stage_plans(world: usize) -> Result<Vec<ExecutablePlan>> {
     check_world("moe-a2a", world)?;
+    moe_a2a_stage_plans_on(&crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?)
+}
+
+/// [`moe_a2a_stage_plans`] on an explicit topology.
+pub fn moe_a2a_stage_plans_on(topo: &Topology) -> Result<Vec<ExecutablePlan>> {
+    let world = topo.world;
+    check_world("moe-a2a", world)?;
     let blk = 8usize;
     let m = world * world * blk;
-    let topo = Topology::h100_node(world)?;
-    let real = default_real(false);
+    let real = default_real(topo, false);
 
     let mut t1 = TensorTable::new();
     let x = t1.declare("x", &[m, GEMM_K], crate::chunk::DType::F32)?;
     let p1 =
-        crate::codegen::compile_comm_only(&templates::all_to_all(&t1, x, 0, world)?, real, &topo)?;
+        crate::codegen::compile_comm_only(&templates::all_to_all(&t1, x, 0, world)?, real, topo)?;
 
     // stage 2: the expert GEMMs alone (no communication)
     let grid = TileGrid::new(vec![Axis::new("M", m, blk)?])?;
@@ -1318,14 +1471,14 @@ pub fn moe_a2a_stage_plans(world: usize) -> Result<Vec<ExecutablePlan>> {
             tile_calls: HashMap::new(),
         });
     }
-    let p2 = compile(&empty, &inputs, real, &topo)?;
+    let p2 = compile(&empty, &inputs, real, topo)?;
 
     let mut t3 = TensorTable::new();
     let y = t3.declare("y", &[m, GEMM_N], crate::chunk::DType::F32)?;
     let p3 = crate::codegen::compile_comm_only(
         &templates::all_to_all_transpose(&t3, y, 0, world)?,
         real,
-        &topo,
+        topo,
     )?;
     Ok(vec![p1, p2, p3])
 }
@@ -1345,11 +1498,19 @@ pub struct CaseParams {
     pub seed: u64,
     /// Node count for hierarchical cases (`world` must divide evenly).
     pub nodes: usize,
+    /// Topology: a catalog name (`hw::catalog`) or a `.topo` file path.
+    pub topo: String,
 }
 
 impl Default for CaseParams {
     fn default() -> Self {
-        CaseParams { world: 4, split: 1, seed: 42, nodes: 2 }
+        CaseParams {
+            world: 4,
+            split: 1,
+            seed: 42,
+            nodes: 2,
+            topo: crate::hw::catalog::DEFAULT.to_string(),
+        }
     }
 }
 
@@ -1369,6 +1530,41 @@ impl CaseParams {
         }
         Ok(())
     }
+
+    /// Resolve the requested topology (catalog name or `.topo` file) at
+    /// this world size.
+    pub fn topology(&self) -> Result<Topology> {
+        Ok(crate::hw::catalog::resolve(&self.topo, self.world)?.1)
+    }
+
+    /// Topology for the hierarchical case. A multinode description's own
+    /// node structure wins; for single-node descriptions the `--nodes`
+    /// knob splits the same device/link description across `nodes` (so the
+    /// default `h100_node` keeps the case's historical 2-node H100 shape —
+    /// structurally identical to `h100_multinode`).
+    pub fn hier_topology(&self) -> Result<Topology> {
+        let desc = crate::hw::catalog::load_desc(&self.topo)
+            .map_err(|e| Error::Coordinator(format!("ag-gemm-hier: {e}")))?;
+        if desc.nodes > 1 {
+            return desc
+                .instantiate(self.world)
+                .map_err(|e| Error::Coordinator(format!("ag-gemm-hier: {e}")));
+        }
+        if self.nodes == 0 {
+            return Err(Error::Coordinator(
+                "ag-gemm-hier: nodes must be >= 1 (got 0)".into(),
+            ));
+        }
+        if self.world % self.nodes != 0 {
+            return Err(Error::Coordinator(format!(
+                "ag-gemm-hier: world {} not divisible by nodes {}",
+                self.world, self.nodes
+            )));
+        }
+        desc.with_nodes(self.nodes)?
+            .instantiate(self.world)
+            .map_err(|e| Error::Coordinator(format!("ag-gemm-hier: {e}")))
+    }
 }
 
 /// One registered validation case.
@@ -1385,70 +1581,65 @@ impl CaseSpec {
     }
 }
 
-/// The registry, in listing order.
+/// The registry, in listing order. Every builder takes its topology from
+/// the catalog/file resolution of `p.topo` — no case hardwires a machine.
 pub const CASES: &[CaseSpec] = &[
     CaseSpec {
         name: "ag-gemm",
         about: "AllGather (pull swizzle) overlapped with row-sharded GEMM",
-        build: |p| ag_gemm(p.world, p.split, p.seed),
+        build: |p| ag_gemm_variant_on(&p.topology()?, p.split, p.seed, AgVariant::PullSwizzle),
     },
     CaseSpec {
         name: "gemm-rs",
         about: "GEMM with direct ReduceScatter of output shards",
-        build: |p| gemm_rs(p.world, p.seed),
+        build: |p| gemm_rs_on(&p.topology()?, p.seed),
     },
     CaseSpec {
         name: "gemm-ar",
         about: "GEMM with partition-based AllReduce (Fig. 4d)",
-        build: |p| gemm_ar(p.world, p.seed),
+        build: |p| gemm_ar_on(&p.topology()?, p.seed),
     },
     CaseSpec {
         name: "a2a-gemm",
         about: "AllToAll block exchange feeding per-block GEMMs",
-        build: |p| a2a_gemm(p.world, p.seed),
+        build: |p| a2a_gemm_on(&p.topology()?, p.seed),
     },
     CaseSpec {
         name: "ring-attn",
         about: "RingAttention: rotate K/V, fold with online softmax",
-        build: |p| ring_attention(p.world, p.split, p.seed),
+        build: |p| ring_attention_on(&p.topology()?, p.split, p.seed),
     },
     CaseSpec {
         name: "attn-sp",
         about: "sequence-parallel attention over a pull-swizzle K/V gather",
-        build: |p| attn_sp(p.world, p.seed),
+        build: |p| attn_sp_on(&p.topology()?, p.seed),
     },
     CaseSpec {
         name: "ag-gemm-hier",
         about: "AG-GEMM on a two-level mesh (Fig. 4e heterogeneous swizzle)",
-        build: |p| {
-            if p.nodes == 0 || p.world % p.nodes != 0 {
-                return Err(Error::Coordinator(format!(
-                    "ag-gemm-hier: world {} not divisible by nodes {}",
-                    p.world, p.nodes
-                )));
-            }
-            ag_gemm_hierarchical(p.nodes, p.world / p.nodes, p.seed)
-        },
+        build: |p| ag_gemm_hierarchical_on(&p.hier_topology()?, p.seed),
     },
     CaseSpec {
         name: "tp-block",
         about: "fused TP MLP block: AG-GEMM -> GEMM-RS, no boundary barrier",
-        build: |p| tp_block(p.world, p.split, p.seed),
+        build: |p| tp_block_on(&p.topology()?, p.split, p.seed),
     },
     CaseSpec {
         name: "moe-a2a",
         about: "fused MoE block: A2A dispatch -> expert GEMMs -> A2A combine",
-        build: |p| moe_a2a(p.world, p.seed),
+        build: |p| moe_a2a_on(&p.topology()?, p.seed),
     },
     CaseSpec {
         name: "ag-gemm-flux",
         about: "AG-GEMM over a Flux-style plan imported via plan_io",
-        build: |p| ag_gemm_variant(p.world, p.split, p.seed, AgVariant::ImportedFlux),
+        build: |p| ag_gemm_variant_on(&p.topology()?, p.split, p.seed, AgVariant::ImportedFlux),
     },
     CaseSpec {
         name: "ag-gemm-tdist",
         about: "AG-GEMM over a Triton-distributed-style imported plan",
-        build: |p| ag_gemm_variant(p.world, p.split, p.seed, AgVariant::ImportedTritonDist),
+        build: |p| {
+            ag_gemm_variant_on(&p.topology()?, p.split, p.seed, AgVariant::ImportedTritonDist)
+        },
     },
 ];
 

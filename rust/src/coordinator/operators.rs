@@ -311,7 +311,7 @@ mod tests {
     use crate::workload::{OperatorInstance, LLAMA3_8B};
 
     fn topo(w: usize) -> Topology {
-        Topology::h100_node(w).unwrap()
+        crate::hw::catalog::topology("h100_node", w).unwrap()
     }
 
     #[test]
@@ -409,7 +409,7 @@ mod tests {
 
     #[test]
     fn hierarchical_template_on_multinode() {
-        let t = Topology::h100_multinode(2, 4).unwrap();
+        let t = crate::hw::catalog::topology_nodes("h100_multinode", 2, 8).unwrap();
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 8);
         // TMA can't cross nodes; ldst can
         let cfg = TuneConfig {

@@ -377,7 +377,7 @@ mod tests {
 
     #[test]
     fn serve_and_cache() {
-        let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+        let coord = Coordinator::spawn(crate::hw::catalog::topology("h100_node", 4).unwrap());
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
         let r1 = coord.run(op, TuneConfig::default()).unwrap();
         assert!(r1.tflops > 0.0);
@@ -389,7 +389,7 @@ mod tests {
 
     #[test]
     fn errors_propagate() {
-        let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+        let coord = Coordinator::spawn(crate::hw::catalog::topology("h100_node", 4).unwrap());
         // world mismatch: operator says 8, topo is 4
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 8);
         assert!(coord.run(op, TuneConfig::default()).is_err());
@@ -397,7 +397,7 @@ mod tests {
 
     #[test]
     fn concurrent_submissions() {
-        let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+        let coord = Coordinator::spawn(crate::hw::catalog::topology("h100_node", 4).unwrap());
         let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 4096, 4);
         let cfg = TuneConfig {
             real: crate::codegen::Realization::new(
@@ -415,7 +415,7 @@ mod tests {
 
     #[test]
     fn pool_answers_from_multiple_workers() {
-        let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), 4);
+        let coord = Coordinator::spawn_pool(crate::hw::catalog::topology("h100_node", 4).unwrap(), 4);
         assert_eq!(coord.workers(), 4);
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
         let rxs: Vec<_> = (0..8)
@@ -431,7 +431,7 @@ mod tests {
 
     #[test]
     fn user_plans_serve_and_cache_by_content_hash() {
-        let coord = Coordinator::spawn_pool(Topology::h100_node(2).unwrap(), 2);
+        let coord = Coordinator::spawn_pool(crate::hw::catalog::topology("h100_node", 2).unwrap(), 2);
         let text = "plan v1 world 2\n\
                     tensor x f32 4x16\n\
                     rank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n\
@@ -458,7 +458,7 @@ mod tests {
 
     #[test]
     fn bad_user_plans_are_rejected_not_served() {
-        let coord = Coordinator::spawn(Topology::h100_node(2).unwrap());
+        let coord = Coordinator::spawn(crate::hw::catalog::topology("h100_node", 2).unwrap());
         let opts = ExecOptions::sequential();
         // parse error (carries line/col)
         let e = coord.run_user_plan("plan v9 world 2\n", opts.clone()).unwrap_err();
@@ -477,7 +477,7 @@ mod tests {
 
     #[test]
     fn clients_submit_from_other_threads() {
-        let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), 2);
+        let coord = Coordinator::spawn_pool(crate::hw::catalog::topology("h100_node", 4).unwrap(), 2);
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
         std::thread::scope(|s| {
             for _ in 0..3 {

@@ -39,6 +39,10 @@ pub enum Error {
     /// Plan interchange failure (DSL parse/print, importer lifting). Parse
     /// errors carry `line L, col C:` prefixes for editor jump-to.
     PlanIo(String),
+    /// Hardware-model failure (`.topo` parse/print, catalog lookup,
+    /// topology instantiation). Parse errors carry `line L, col C:`
+    /// prefixes like [`Error::PlanIo`].
+    Hw(String),
     /// I/O error (artifact files, manifests, exports).
     Io(String),
 }
@@ -60,6 +64,7 @@ impl Error {
             Error::Autotune(_) => "autotune",
             Error::Coordinator(_) => "coordinator",
             Error::PlanIo(_) => "plan-io",
+            Error::Hw(_) => "hw",
             Error::Io(_) => "io",
         }
     }
@@ -81,6 +86,7 @@ impl fmt::Display for Error {
             | Error::Autotune(m)
             | Error::Coordinator(m)
             | Error::PlanIo(m)
+            | Error::Hw(m)
             | Error::Io(m) => m,
         };
         write!(f, "[{}] {}", self.subsystem(), msg)

@@ -1,0 +1,220 @@
+//! Arch-parameterized capability matrix + bandwidth-curve store.
+//!
+//! [`Arch`] is the queryable, per-machine-generation replacement for the
+//! hardcoded H100 tables in `backend.rs`: one optional
+//! ([`Caps`], [`Curve`]) row per [`BackendKind`]. A missing row means the
+//! mechanism does not exist on that generation at all (e.g. TMA predates
+//! Hopper, so `a100_node` ships no `tma-*` rows) — [`Arch::check_feasible`]
+//! rejects it, which is how the autotuner and codegen prune arch-impossible
+//! realizations without any backend-specific code.
+//!
+//! The timing/feasibility MATH lives in `backend.rs` (`bandwidth_with`,
+//! `transfer_time_with`, `check_feasible_with`); this type only supplies
+//! the per-arch constants, so the reference H100 path and the data-driven
+//! path can never diverge in shape.
+
+use crate::backend::{self, BackendKind, Caps, Curve};
+use crate::error::{Error, Result};
+use crate::topo::{LinkLevel, LinkSpec};
+
+/// Number of rows in the matrix (one per [`BackendKind::ALL`] entry).
+pub const NUM_BACKENDS: usize = BackendKind::ALL.len();
+
+/// One capability-matrix row: what a mechanism can express ([`Caps`]) and
+/// how fast it goes ([`Curve`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendEntry {
+    pub caps: Caps,
+    pub curve: Curve,
+}
+
+/// Per-generation backend matrix: caps + curves for every available
+/// chunk-transfer mechanism.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    name: String,
+    entries: [Option<BackendEntry>; NUM_BACKENDS],
+}
+
+impl Arch {
+    /// An empty matrix (no mechanism available) — the parser's starting
+    /// point; every described backend is [`Arch::set`] onto it.
+    pub fn new(name: &str) -> Self {
+        Arch { name: name.to_string(), entries: [None; NUM_BACKENDS] }
+    }
+
+    /// A matrix filled with the H100/NVLink reference rows — exactly the
+    /// `backend::caps` / `backend::curve` tables, row by row — under a
+    /// caller-chosen name (catalog entries reuse the rows but keep their
+    /// own names for errors and round-tripping).
+    pub fn reference(name: &str) -> Self {
+        let mut a = Arch::new(name);
+        for kind in BackendKind::ALL {
+            a.set(kind, backend::caps(kind), backend::curve(kind));
+        }
+        a
+    }
+
+    /// The H100/NVLink reference matrix.
+    pub fn h100() -> Self {
+        Self::reference("h100")
+    }
+
+    /// Arch name (e.g. `h100`, `a100`); carried into error messages.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Install (or replace) one backend row.
+    pub fn set(&mut self, kind: BackendKind, caps: Caps, curve: Curve) {
+        self.entries[kind.index()] = Some(BackendEntry { caps, curve });
+    }
+
+    /// Whether the mechanism exists on this generation.
+    pub fn available(&self, kind: BackendKind) -> bool {
+        self.entries[kind.index()].is_some()
+    }
+
+    /// The raw matrix row, if available.
+    pub fn entry(&self, kind: BackendKind) -> Option<BackendEntry> {
+        self.entries[kind.index()]
+    }
+
+    /// Every available mechanism, in [`BackendKind::ALL`] order.
+    pub fn available_kinds(&self) -> Vec<BackendKind> {
+        BackendKind::ALL.into_iter().filter(|k| self.available(*k)).collect()
+    }
+
+    /// Capability row. Falls back to the H100 reference for unavailable
+    /// mechanisms so "what would it be" queries (reports, SM-choice
+    /// heuristics) stay infallible; actual USE is gated by
+    /// [`Arch::check_feasible`], which rejects unavailable kinds.
+    pub fn caps(&self, kind: BackendKind) -> Caps {
+        self.entry(kind).map(|e| e.caps).unwrap_or_else(|| backend::caps(kind))
+    }
+
+    /// Curve row; same fallback rule as [`Arch::caps`].
+    pub fn curve(&self, kind: BackendKind) -> Curve {
+        self.entry(kind).map(|e| e.curve).unwrap_or_else(|| backend::curve(kind))
+    }
+
+    /// Effective bandwidth (GB/s) under this arch's curve for `kind`.
+    pub fn effective_bandwidth_gbps(
+        &self,
+        kind: BackendKind,
+        bytes: usize,
+        comm_sms: usize,
+        link: LinkSpec,
+    ) -> f64 {
+        backend::bandwidth_with(self.curve(kind), bytes, comm_sms, link)
+    }
+
+    /// Wall-clock for one logical chunk transfer, microseconds, under this
+    /// arch's tables (the simulator's per-transfer cost query).
+    pub fn transfer_time_us(
+        &self,
+        kind: BackendKind,
+        bytes: usize,
+        pieces: usize,
+        comm_sms: usize,
+        link: LinkSpec,
+    ) -> f64 {
+        backend::transfer_time_with(
+            self.curve(kind),
+            self.caps(kind).host_launched,
+            bytes,
+            pieces,
+            comm_sms,
+            link,
+        )
+    }
+
+    /// Validate a backend choice against this arch and the needs of a
+    /// specific transfer: existence on the arch first, then the shared
+    /// capability rules.
+    pub fn check_feasible(
+        &self,
+        kind: BackendKind,
+        needs_reduce: bool,
+        link_level: LinkLevel,
+        comm_sms: usize,
+    ) -> Result<()> {
+        if !self.available(kind) {
+            return Err(Error::Backend(format!(
+                "{} is not available on arch `{}`",
+                kind.name(),
+                self.name
+            )));
+        }
+        backend::check_feasible_with(
+            kind,
+            self.caps(kind),
+            self.curve(kind).sms_for_peak > 0,
+            needs_reduce,
+            link_level,
+            comm_sms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nvlink() -> LinkSpec {
+        LinkSpec { level: LinkLevel::IntraNode, bw_gbps: 400.0, lat_us: 1.5 }
+    }
+
+    #[test]
+    fn h100_arch_matches_reference_tables() {
+        let a = Arch::h100();
+        assert_eq!(a.name(), "h100");
+        for kind in BackendKind::ALL {
+            assert!(a.available(kind), "{}", kind.name());
+            assert_eq!(a.caps(kind), backend::caps(kind));
+            assert_eq!(a.curve(kind), backend::curve(kind));
+            // arch-routed queries agree with the reference wrappers
+            let l = nvlink();
+            assert_eq!(
+                a.effective_bandwidth_gbps(kind, 8 << 20, 32, l),
+                backend::effective_bandwidth_gbps(kind, 8 << 20, 32, l)
+            );
+            assert_eq!(
+                a.transfer_time_us(kind, 8 << 20, 4, 32, l),
+                backend::transfer_time_us(kind, 8 << 20, 4, 32, l)
+            );
+        }
+        assert_eq!(a.available_kinds().len(), NUM_BACKENDS);
+    }
+
+    #[test]
+    fn missing_row_is_infeasible_but_queryable() {
+        let mut a = Arch::new("no-tma");
+        for kind in [BackendKind::CopyEngine, BackendKind::LdStSpecialized] {
+            a.set(kind, backend::caps(kind), backend::curve(kind));
+        }
+        assert!(!a.available(BackendKind::TmaSpecialized));
+        let e = a
+            .check_feasible(BackendKind::TmaSpecialized, false, LinkLevel::IntraNode, 16)
+            .unwrap_err();
+        assert!(e.to_string().contains("not available on arch `no-tma`"), "{e}");
+        // fallback keeps "what would it be" queries alive
+        assert_eq!(a.curve(BackendKind::TmaSpecialized), backend::curve(BackendKind::TmaSpecialized));
+        // available rows pass the shared rules
+        a.check_feasible(BackendKind::CopyEngine, false, LinkLevel::IntraNode, 0).unwrap();
+        assert!(a.check_feasible(BackendKind::CopyEngine, true, LinkLevel::IntraNode, 0).is_err());
+        assert_eq!(a.available_kinds(), vec![BackendKind::CopyEngine, BackendKind::LdStSpecialized]);
+    }
+
+    #[test]
+    fn overridden_curve_changes_the_model() {
+        let mut a = Arch::h100();
+        let mut c = backend::curve(BackendKind::CopyEngine);
+        c.peak_gbps = 100.0;
+        a.set(BackendKind::CopyEngine, backend::caps(BackendKind::CopyEngine), c);
+        let l = nvlink();
+        let slow = a.effective_bandwidth_gbps(BackendKind::CopyEngine, 256 << 20, 0, l);
+        assert!(slow <= 100.0, "{slow}");
+        assert!(slow < backend::effective_bandwidth_gbps(BackendKind::CopyEngine, 256 << 20, 0, l));
+    }
+}

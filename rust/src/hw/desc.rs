@@ -1,0 +1,154 @@
+//! Serializable topology descriptions and their instantiation.
+//!
+//! A [`TopoDesc`] is the machine-shape half of the hardware model as DATA:
+//! node structure, per-level link specs, device compute parameters, and the
+//! arch backend matrix. It is what a `.topo` file parses into
+//! ([`super::format`]), what the built-in catalog ships
+//! ([`super::catalog`]), and what [`TopoDesc::instantiate`] turns into the
+//! [`Topology`] every subsystem consumes.
+//!
+//! Fingerprint rule (used by `TuneCache` so tuned knobs never leak across
+//! machine shapes): [`fingerprint`] hashes the *instantiated* structure —
+//! world, ranks-per-node, links, device parameters, and every backend row —
+//! but NOT the name. Two descriptions of identical hardware share tuning;
+//! any structural difference (including world size) does not.
+
+use crate::backend::BackendKind;
+use crate::error::{Error, Result};
+use crate::hw::arch::Arch;
+use crate::topo::{LinkSpec, Topology};
+
+/// A machine-shape description: everything needed to instantiate a
+/// [`Topology`] at a given world size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopoDesc {
+    /// Description name (catalog key / `.topo` header), e.g. `h100_node`.
+    pub name: String,
+    /// Number of nodes the mesh spans; ranks split evenly across nodes at
+    /// instantiation (`world % nodes == 0`). `1` = single node.
+    pub nodes: usize,
+    pub local: LinkSpec,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+    pub sms_per_device: usize,
+    pub copy_engines_per_device: usize,
+    pub sm_tflops: f64,
+    pub switch_reduce: bool,
+    pub arch: Arch,
+}
+
+impl TopoDesc {
+    /// Instantiate at `world` ranks. The description fixes the node COUNT;
+    /// the per-node rank count scales with the request, mirroring how the
+    /// same cluster shape is used at different job sizes.
+    pub fn instantiate(&self, world: usize) -> Result<Topology> {
+        if world == 0 {
+            return Err(Error::Hw(format!(
+                "topology `{}`: world must be > 0",
+                self.name
+            )));
+        }
+        if world % self.nodes != 0 {
+            return Err(Error::Hw(format!(
+                "topology `{}`: world {world} not divisible across {} nodes",
+                self.name, self.nodes
+            )));
+        }
+        Ok(Topology {
+            world,
+            ranks_per_node: world / self.nodes,
+            local: self.local,
+            intra: self.intra,
+            inter: self.inter,
+            sms_per_device: self.sms_per_device,
+            copy_engines_per_device: self.copy_engines_per_device,
+            sm_tflops: self.sm_tflops,
+            switch_reduce: self.switch_reduce,
+            arch: self.arch.clone(),
+        })
+    }
+
+    /// Same description over a different node count (e.g. the CLI's
+    /// `--nodes` override on a multinode run).
+    pub fn with_nodes(mut self, nodes: usize) -> Result<Self> {
+        if nodes == 0 {
+            return Err(Error::Hw(format!(
+                "topology `{}`: nodes must be >= 1",
+                self.name
+            )));
+        }
+        self.nodes = nodes;
+        Ok(self)
+    }
+}
+
+/// Canonical structural description of an instantiated topology — the
+/// fingerprint preimage. Name-free by design (see the module doc).
+pub fn describe(topo: &Topology) -> String {
+    let mut s = format!("world {} ranks-per-node {}\n", topo.world, topo.ranks_per_node);
+    // every line shares its formatter with format::print_desc, so the
+    // fingerprint preimage cannot drift from what the format expresses
+    s.push_str(&super::format::device_line(
+        topo.sms_per_device,
+        topo.copy_engines_per_device,
+        topo.sm_tflops,
+        topo.switch_reduce,
+    ));
+    s.push('\n');
+    for (tag, l) in [("local", topo.local), ("intra", topo.intra), ("inter", topo.inter)] {
+        s.push_str(&super::format::link_line(tag, l));
+        s.push('\n');
+    }
+    for kind in BackendKind::ALL {
+        if let Some(e) = topo.arch.entry(kind) {
+            s.push_str(&super::format::backend_line(kind, &e));
+            s.push('\n');
+        }
+    }
+    s
+}
+
+/// Structural fingerprint of a topology (FNV-1a over [`describe`]) — the
+/// `TuneCache` key component that pins tuned knobs to one machine shape.
+pub fn fingerprint(topo: &Topology) -> String {
+    crate::plan_io::content_hash(&describe(topo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn instantiate_divides_ranks_across_nodes() {
+        let d = catalog::desc("h100_multinode").unwrap();
+        assert_eq!(d.nodes, 2);
+        let t = d.instantiate(8).unwrap();
+        assert_eq!((t.world, t.ranks_per_node), (8, 4));
+        // world 2 on 2 nodes: one rank per node, all traffic inter-node
+        let t = d.instantiate(2).unwrap();
+        assert_eq!(t.ranks_per_node, 1);
+        // named errors on degenerate worlds
+        let e = d.instantiate(0).unwrap_err();
+        assert!(e.to_string().contains("world must be > 0"), "{e}");
+        let e = d.instantiate(5).unwrap_err();
+        assert!(e.to_string().contains("not divisible"), "{e}");
+        assert!(d.clone().with_nodes(0).is_err());
+        let t = d.with_nodes(4).unwrap().instantiate(8).unwrap();
+        assert_eq!(t.ranks_per_node, 2);
+    }
+
+    #[test]
+    fn fingerprint_is_structural_and_name_free() {
+        let a = catalog::topology("h100_node", 4).unwrap();
+        let b = catalog::topology("h100_node", 4).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "same shape must fingerprint equal");
+        // a renamed but structurally identical description shares the print
+        let mut renamed = catalog::desc("h100_node").unwrap();
+        renamed.name = "my_cluster".into();
+        assert_eq!(fingerprint(&renamed.instantiate(4).unwrap()), fingerprint(&a));
+        // world and arch changes do not
+        assert_ne!(fingerprint(&a), fingerprint(&catalog::topology("h100_node", 8).unwrap()));
+        assert_ne!(fingerprint(&a), fingerprint(&catalog::topology("a100_node", 4).unwrap()));
+    }
+}

@@ -1,0 +1,626 @@
+//! The line-oriented `.topo` hardware-description format.
+//!
+//! Mirrors the `.sched` discipline of `plan_io` (PR 2): a hand-rolled,
+//! dependency-free parser accepting a superset (flexible whitespace, `#`
+//! comments, sections in any order), a canonical printer whose output is
+//! byte-stable, errors carrying 1-based `line L, col C:` positions, and the
+//! round-trip guarantee `parse(print(t)) == t`.
+//!
+//! Canonical form:
+//!
+//! ```text
+//! topo v1 h100_node
+//! nodes 1
+//! device sms 132 copy-engines 3 sm-tflops 7.5 switch-reduce
+//! link local bw 2000 lat 0.2
+//! link intra bw 400 lat 1.5
+//! link inter bw 50 lat 5
+//! backend copy-engine peak 400 half 4194304 issue 2.5 sms 0 caps contig,host
+//! backend ldst-specialized peak 280 half 131072 issue 0.3 sms 32 caps reduce,inter,dedicated
+//! ```
+//!
+//! Semantics: `nodes` is the node count (ranks split evenly at
+//! instantiation); `link` rows give per-level unidirectional bandwidth
+//! (GB/s) and base latency (µs); `backend` rows are capability-matrix rows —
+//! `peak` GB/s, `half` the transfer size in bytes reaching half of peak,
+//! `issue` the per-launch (per-piece if `host`) overhead in µs, `sms` the
+//! SM count needed for peak (0 = no SM involvement). `caps` flags:
+//! `contig` (contiguous-only), `reduce`, `inter` (crosses nodes),
+//! `dedicated` (statically reserves SMs), `host` (host-launched); `-` for
+//! none. A mechanism with NO row does not exist on the arch and is
+//! infeasible everywhere ([`crate::hw::Arch::check_feasible`]).
+
+use crate::backend::{BackendKind, Caps, Curve};
+use crate::error::{Error, Result};
+use crate::hw::arch::{Arch, BackendEntry};
+use crate::hw::desc::TopoDesc;
+use crate::topo::{LinkLevel, LinkSpec};
+
+/// `.topo` format version tag.
+pub const FORMAT_VERSION: &str = "v1";
+
+/// File extension for topology descriptions.
+pub const FILE_EXT: &str = ".topo";
+
+/// Capability flags in canonical order: (token, accessor).
+const CAP_FLAGS: [(&str, fn(&Caps) -> bool); 5] = [
+    ("contig", |c| c.contiguous_only),
+    ("reduce", |c| c.supports_reduce),
+    ("inter", |c| c.inter_node),
+    ("dedicated", |c| c.dedicated_sms),
+    ("host", |c| c.host_launched),
+];
+
+/// Valid topology name: `[A-Za-z_][A-Za-z0-9_-]*`.
+pub fn is_valid_topo_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Canonical `device ...` line (no newline). Shared by [`print_desc`] and
+/// the fingerprint preimage ([`super::desc::describe`]) so the hash covers
+/// exactly what the format expresses — same rule as [`backend_line`].
+pub fn device_line(sms: usize, copy_engines: usize, sm_tflops: f64, switch_reduce: bool) -> String {
+    format!(
+        "device sms {sms} copy-engines {copy_engines} sm-tflops {sm_tflops}{}",
+        if switch_reduce { " switch-reduce" } else { "" }
+    )
+}
+
+/// Canonical `link ...` line (no newline); shared like [`device_line`].
+pub fn link_line(tag: &str, l: LinkSpec) -> String {
+    format!("link {tag} bw {} lat {}", l.bw_gbps, l.lat_us)
+}
+
+/// One backend row in canonical line form (no newline). Shared with the
+/// fingerprint preimage ([`super::desc::describe`]) so the hash covers
+/// exactly what the format expresses.
+pub fn backend_line(kind: BackendKind, e: &BackendEntry) -> String {
+    let flags: Vec<&str> = CAP_FLAGS
+        .iter()
+        .filter(|(_, get)| get(&e.caps))
+        .map(|(tok, _)| *tok)
+        .collect();
+    format!(
+        "backend {} peak {} half {} issue {} sms {} caps {}",
+        kind.name(),
+        e.curve.peak_gbps,
+        e.curve.half_size,
+        e.curve.issue_us,
+        e.curve.sms_for_peak,
+        if flags.is_empty() { "-".to_string() } else { flags.join(",") }
+    )
+}
+
+/// Render a description in canonical `.topo` text.
+pub fn print_desc(d: &TopoDesc) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("topo {FORMAT_VERSION} {}\n", d.name));
+    out.push_str(&format!("nodes {}\n", d.nodes));
+    out.push_str(&device_line(
+        d.sms_per_device,
+        d.copy_engines_per_device,
+        d.sm_tflops,
+        d.switch_reduce,
+    ));
+    out.push('\n');
+    for (tag, l) in [("local", d.local), ("intra", d.intra), ("inter", d.inter)] {
+        out.push_str(&link_line(tag, l));
+        out.push('\n');
+    }
+    for kind in BackendKind::ALL {
+        if let Some(e) = d.arch.entry(kind) {
+            out.push_str(&backend_line(kind, &e));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Parse `.topo` text into a description. Every error carries a
+/// `line L, col C:` prefix.
+pub fn parse_desc(text: &str) -> Result<TopoDesc> {
+    let mut name: Option<String> = None;
+    let mut nodes: Option<usize> = None;
+    let mut device: Option<(usize, usize, f64, bool)> = None;
+    let mut links: [Option<LinkSpec>; 3] = [None, None, None]; // local/intra/inter
+    let mut arch: Option<Arch> = None;
+    let mut any_backend = false;
+
+    for (i, raw) in text.lines().enumerate() {
+        let mut cur = Cur::new(raw, i + 1);
+        cur.skip_ws();
+        if cur.done() {
+            continue; // blank or comment-only line
+        }
+        let kw_col = cur.col();
+        let kw = cur.ident()?;
+        if name.is_none() && kw != "topo" {
+            return Err(cur.err_at(
+                kw_col,
+                &format!("expected `topo {FORMAT_VERSION} NAME` header, found `{kw}`"),
+            ));
+        }
+        match kw.as_str() {
+            "topo" => {
+                if name.is_some() {
+                    return Err(cur.err_at(kw_col, "duplicate `topo` header"));
+                }
+                let ver = cur.ident()?;
+                if ver != FORMAT_VERSION {
+                    return Err(cur.err_at(
+                        kw_col,
+                        &format!("unsupported topo version `{ver}` (expected {FORMAT_VERSION})"),
+                    ));
+                }
+                let n_col = cur.col_after_ws();
+                let n = cur.ident()?;
+                if !is_valid_topo_name(&n) {
+                    return Err(cur.err_at(
+                        n_col,
+                        &format!("invalid topology name `{n}` (want [A-Za-z_][A-Za-z0-9_-]*)"),
+                    ));
+                }
+                cur.end_of_line()?;
+                arch = Some(Arch::new(&n));
+                name = Some(n);
+            }
+            "nodes" => {
+                if nodes.is_some() {
+                    return Err(cur.err_at(kw_col, "duplicate `nodes` line"));
+                }
+                let n_col = cur.col_after_ws();
+                let n = cur.number()?;
+                if n == 0 {
+                    return Err(cur.err_at(n_col, "nodes must be >= 1"));
+                }
+                cur.end_of_line()?;
+                nodes = Some(n);
+            }
+            "device" => {
+                if device.is_some() {
+                    return Err(cur.err_at(kw_col, "duplicate `device` line"));
+                }
+                cur.keyword("sms")?;
+                let s_col = cur.col_after_ws();
+                let sms = cur.number()?;
+                if sms == 0 {
+                    return Err(cur.err_at(s_col, "device sms must be >= 1"));
+                }
+                cur.keyword("copy-engines")?;
+                let c_col = cur.col_after_ws();
+                let ce = cur.number()?;
+                if ce == 0 {
+                    return Err(cur.err_at(c_col, "copy-engines must be >= 1"));
+                }
+                cur.keyword("sm-tflops")?;
+                let t_col = cur.col_after_ws();
+                let tf = cur.float()?; // float() guarantees finite
+                if tf <= 0.0 {
+                    return Err(cur.err_at(t_col, "sm-tflops must be > 0"));
+                }
+                let sw = cur.opt_keyword("switch-reduce");
+                cur.end_of_line()?;
+                device = Some((sms, ce, tf, sw));
+            }
+            "link" => {
+                let lv_col = cur.col_after_ws();
+                let lv = cur.ident()?;
+                let (slot, level) = match lv.as_str() {
+                    "local" => (0, LinkLevel::Local),
+                    "intra" => (1, LinkLevel::IntraNode),
+                    "inter" => (2, LinkLevel::InterNode),
+                    other => {
+                        return Err(cur.err_at(
+                            lv_col,
+                            &format!("unknown link level `{other}` (local|intra|inter)"),
+                        ))
+                    }
+                };
+                if links[slot].is_some() {
+                    return Err(cur.err_at(lv_col, &format!("duplicate `link {lv}` line")));
+                }
+                cur.keyword("bw")?;
+                let b_col = cur.col_after_ws();
+                let bw = cur.float()?;
+                if bw <= 0.0 {
+                    return Err(cur.err_at(b_col, "link bandwidth must be > 0"));
+                }
+                cur.keyword("lat")?;
+                let l_col = cur.col_after_ws();
+                let lat = cur.float()?;
+                if lat < 0.0 {
+                    return Err(cur.err_at(l_col, "link latency must be >= 0"));
+                }
+                cur.end_of_line()?;
+                links[slot] = Some(LinkSpec { level, bw_gbps: bw, lat_us: lat });
+            }
+            "backend" => {
+                let b_col = cur.col_after_ws();
+                let bname = cur.ident()?;
+                let Some(kind) = BackendKind::by_name(&bname) else {
+                    let known: Vec<&str> =
+                        BackendKind::ALL.iter().map(|b| b.name()).collect();
+                    return Err(cur.err_at(
+                        b_col,
+                        &format!("unknown backend `{bname}` (known: {})", known.join("|")),
+                    ));
+                };
+                let a = arch.as_mut().expect("header parsed before any backend line");
+                if a.available(kind) {
+                    return Err(cur.err_at(b_col, &format!("duplicate `backend {bname}` line")));
+                }
+                cur.keyword("peak")?;
+                let p_col = cur.col_after_ws();
+                let peak = cur.float()?;
+                if peak <= 0.0 {
+                    return Err(cur.err_at(p_col, "peak bandwidth must be > 0"));
+                }
+                cur.keyword("half")?;
+                let h_col = cur.col_after_ws();
+                let half = cur.float()?;
+                if half < 0.0 {
+                    return Err(cur.err_at(h_col, "half-saturation size must be >= 0"));
+                }
+                cur.keyword("issue")?;
+                let i_col = cur.col_after_ws();
+                let issue = cur.float()?;
+                if issue < 0.0 {
+                    return Err(cur.err_at(i_col, "issue overhead must be >= 0"));
+                }
+                cur.keyword("sms")?;
+                let sms = cur.number()?;
+                cur.keyword("caps")?;
+                let caps = cur.cap_flags()?;
+                cur.end_of_line()?;
+                a.set(
+                    kind,
+                    caps,
+                    Curve { peak_gbps: peak, half_size: half, issue_us: issue, sms_for_peak: sms },
+                );
+                any_backend = true;
+            }
+            other => {
+                return Err(cur.err_at(
+                    kw_col,
+                    &format!("unknown directive `{other}` (topo|nodes|device|link|backend)"),
+                ));
+            }
+        }
+    }
+
+    let Some(name) = name else {
+        return Err(Error::Hw(format!(
+            "line 1, col 1: empty input (expected `topo {FORMAT_VERSION} NAME` header)"
+        )));
+    };
+    let missing = |what: &str| Error::Hw(format!("topology `{name}`: missing `{what}` line"));
+    let nodes = nodes.ok_or_else(|| missing("nodes"))?;
+    let (sms, ce, tf, sw) = device.ok_or_else(|| missing("device"))?;
+    let local = links[0].ok_or_else(|| missing("link local"))?;
+    let intra = links[1].ok_or_else(|| missing("link intra"))?;
+    let inter = links[2].ok_or_else(|| missing("link inter"))?;
+    if !any_backend {
+        return Err(missing("backend"));
+    }
+    Ok(TopoDesc {
+        name,
+        nodes,
+        local,
+        intra,
+        inter,
+        sms_per_device: sms,
+        copy_engines_per_device: ce,
+        sm_tflops: tf,
+        switch_reduce: sw,
+        arch: arch.expect("set with the header"),
+    })
+}
+
+/// Single-line cursor with 1-based line/col error positions (the
+/// `plan_io::parse` discipline, specialized to the `.topo` token set).
+struct Cur<'a> {
+    chars: Vec<char>,
+    pos: usize,
+    line_no: usize,
+    raw: &'a str,
+}
+
+impl<'a> Cur<'a> {
+    fn new(raw: &'a str, line_no: usize) -> Self {
+        // strip trailing comment (no string literals in the grammar)
+        let body = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        };
+        Cur { chars: body.chars().collect(), pos: 0, line_no, raw }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.chars.len()
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn col(&self) -> usize {
+        self.pos + 1
+    }
+
+    /// Column of the next non-whitespace char (consumes the whitespace).
+    fn col_after_ws(&mut self) -> usize {
+        self.skip_ws();
+        self.col()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(c) if c.is_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn err_here(&self, msg: &str) -> Error {
+        self.err_at(self.col(), msg)
+    }
+
+    fn err_at(&self, col: usize, msg: &str) -> Error {
+        Error::Hw(format!(
+            "line {}, col {col}: {msg} (in `{}`)",
+            self.line_no,
+            self.raw.trim_end()
+        ))
+    }
+
+    fn end_of_line(&mut self) -> Result<()> {
+        self.skip_ws();
+        if self.done() {
+            return Ok(());
+        }
+        let rest: String = self.chars[self.pos..].iter().collect();
+        Err(self.err_here(&format!("unexpected trailing `{}`", rest.trim_end())))
+    }
+
+    /// Identifier: `[A-Za-z0-9_-]+` (backend names embed `-`).
+    fn ident(&mut self) -> Result<String> {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err_here("expected a word"));
+        }
+        Ok(self.chars[start..self.pos].iter().collect())
+    }
+
+    /// Consume the exact keyword `kw` or error.
+    fn keyword(&mut self, kw: &str) -> Result<()> {
+        let col = self.col_after_ws();
+        let w = self.ident().map_err(|_| self.err_at(col, &format!("expected `{kw}`")))?;
+        if w == kw {
+            Ok(())
+        } else {
+            Err(self.err_at(col, &format!("expected `{kw}`, found `{w}`")))
+        }
+    }
+
+    /// Consume the keyword if present (returns whether it was).
+    fn opt_keyword(&mut self, kw: &str) -> bool {
+        let save = self.pos;
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            self.pos += 1;
+        }
+        let w: String = self.chars[start..self.pos].iter().collect();
+        if w == kw {
+            true
+        } else {
+            self.pos = save;
+            false
+        }
+    }
+
+    fn number(&mut self) -> Result<usize> {
+        self.skip_ws();
+        let col = self.col();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err_at(col, "expected an unsigned integer"));
+        }
+        let s: String = self.chars[start..self.pos].iter().collect();
+        s.parse().map_err(|_| self.err_at(col, "integer out of range"))
+    }
+
+    /// Non-negative decimal float (canonical `{}` prints of f64 round-trip;
+    /// scientific notation is accepted for hand-written files).
+    fn float(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let col = self.col();
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, '.' | 'e' | 'E' | '+' | '-')
+        ) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err_at(col, "expected a number"));
+        }
+        let s: String = self.chars[start..self.pos].iter().collect();
+        s.parse::<f64>()
+            .map_err(|_| self.err_at(col, &format!("invalid number `{s}`")))
+            .and_then(|v| {
+                if v.is_finite() {
+                    Ok(v)
+                } else {
+                    Err(self.err_at(col, &format!("non-finite number `{s}`")))
+                }
+            })
+    }
+
+    /// `caps` flag list: `-` or comma-joined tokens from [`CAP_FLAGS`].
+    fn cap_flags(&mut self) -> Result<Caps> {
+        self.skip_ws();
+        let col = self.col();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == ',' || c == '-')
+        {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err_at(col, "expected capability flags (or `-` for none)"));
+        }
+        let s: String = self.chars[start..self.pos].iter().collect();
+        let mut caps = Caps {
+            contiguous_only: false,
+            supports_reduce: false,
+            inter_node: false,
+            dedicated_sms: false,
+            host_launched: false,
+        };
+        if s == "-" {
+            return Ok(caps);
+        }
+        for tok in s.split(',') {
+            match tok {
+                "contig" => caps.contiguous_only = true,
+                "reduce" => caps.supports_reduce = true,
+                "inter" => caps.inter_node = true,
+                "dedicated" => caps.dedicated_sms = true,
+                "host" => caps.host_launched = true,
+                other => {
+                    let known: Vec<&str> = CAP_FLAGS.iter().map(|(t, _)| *t).collect();
+                    return Err(self.err_at(
+                        col,
+                        &format!("unknown capability flag `{other}` (known: {})", known.join(",")),
+                    ));
+                }
+            }
+        }
+        Ok(caps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog;
+
+    #[test]
+    fn catalog_round_trips_bit_stably() {
+        for name in catalog::names() {
+            let d = catalog::desc(name).unwrap();
+            let text = print_desc(&d);
+            let parsed = parse_desc(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(parsed, d, "{name}: parse(print(t)) != t");
+            assert_eq!(print_desc(&parsed), text, "{name}: reprint not byte-stable");
+        }
+    }
+
+    #[test]
+    fn tolerates_messy_whitespace_comments_and_order() {
+        let messy = "\
+# hand-written description
+topo   v1   tiny_box   # header comment
+link inter bw 25 lat 8
+device sms 4 copy-engines 1 sm-tflops 0.5
+nodes 2
+link   local  bw 100   lat 0.1
+link intra bw 50 lat 1.5
+backend copy-engine peak 40 half 65536 issue 2.5 sms 0 caps contig,host
+backend ldst-specialized peak 30 half 8192 issue 0.3 sms 8 caps reduce,inter,dedicated
+";
+        let d = parse_desc(messy).unwrap();
+        assert_eq!(d.name, "tiny_box");
+        assert_eq!(d.nodes, 2);
+        assert_eq!(d.sms_per_device, 4);
+        assert_eq!(d.inter.bw_gbps, 25.0);
+        assert!(d.arch.available(BackendKind::CopyEngine));
+        assert!(!d.arch.available(BackendKind::TmaSpecialized));
+        assert!(d.arch.caps(BackendKind::LdStSpecialized).supports_reduce);
+        // re-print is canonical and round-trips
+        let canon = print_desc(&d);
+        assert_eq!(parse_desc(&canon).unwrap(), d);
+        let t = d.instantiate(4).unwrap();
+        assert_eq!(t.ranks_per_node, 2);
+    }
+
+    fn err_of(text: &str) -> String {
+        parse_desc(text).unwrap_err().to_string()
+    }
+
+    #[test]
+    fn errors_carry_line_and_col() {
+        // bad version
+        let e = err_of("topo v9 x\n");
+        assert!(e.contains("line 1, col 1") && e.contains("v9"), "{e}");
+        // missing header
+        let e = err_of("nodes 1\n");
+        assert!(e.contains("line 1") && e.contains("header"), "{e}");
+        // empty input
+        let e = err_of("");
+        assert!(e.contains("line 1, col 1") && e.contains("empty"), "{e}");
+        // bad name
+        let e = err_of("topo v1 9lives\n");
+        assert!(e.contains("line 1, col 9") && e.contains("invalid topology name"), "{e}");
+        // unknown directive
+        let e = err_of("topo v1 x\nflux-capacitor 88\n");
+        assert!(e.contains("line 2, col 1") && e.contains("unknown directive"), "{e}");
+        // unknown backend: col of the name (after `backend `)
+        let e = err_of("topo v1 x\nbackend warp-drive peak 1 half 1 issue 1 sms 0 caps -\n");
+        assert!(e.contains("line 2, col 9") && e.contains("unknown backend"), "{e}");
+        // unknown flag
+        let e = err_of("topo v1 x\nbackend copy-engine peak 1 half 1 issue 1 sms 0 caps warp\n");
+        assert!(e.contains("line 2") && e.contains("unknown capability flag"), "{e}");
+        // duplicate sections
+        let e = err_of("topo v1 x\nnodes 1\nnodes 2\n");
+        assert!(e.contains("line 3") && e.contains("duplicate"), "{e}");
+        let e = err_of("topo v1 x\nlink intra bw 1 lat 1\nlink intra bw 2 lat 2\n");
+        assert!(e.contains("line 3") && e.contains("duplicate `link intra`"), "{e}");
+        // zero nodes / zero bandwidth
+        let e = err_of("topo v1 x\nnodes 0\n");
+        assert!(e.contains("line 2") && e.contains("nodes must be >= 1"), "{e}");
+        let e = err_of("topo v1 x\nlink intra bw 0 lat 1\n");
+        assert!(e.contains("line 2") && e.contains("bandwidth must be > 0"), "{e}");
+        // trailing junk
+        let e = err_of("topo v1 x extra\n");
+        assert!(e.contains("line 1") && e.contains("trailing"), "{e}");
+        // missing required sections are named
+        let e = err_of("topo v1 x\nnodes 1\n");
+        assert!(e.contains("missing `device`"), "{e}");
+    }
+
+    #[test]
+    fn caps_flags_round_trip_every_subset() {
+        // drive each flag through a synthetic entry
+        let base = catalog::desc("h100_node").unwrap();
+        for bits in 0..32u32 {
+            let caps = Caps {
+                contiguous_only: bits & 1 != 0,
+                supports_reduce: bits & 2 != 0,
+                inter_node: bits & 4 != 0,
+                dedicated_sms: bits & 8 != 0,
+                host_launched: bits & 16 != 0,
+            };
+            let mut d = base.clone();
+            d.arch.set(
+                BackendKind::CopyEngine,
+                caps,
+                Curve { peak_gbps: 1.0, half_size: 2.0, issue_us: 0.5, sms_for_peak: 3 },
+            );
+            let parsed = parse_desc(&print_desc(&d)).unwrap();
+            assert_eq!(parsed.arch.caps(BackendKind::CopyEngine), caps, "bits {bits}");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Data-driven hardware model: queryable capability matrix + topology
+//! catalog.
+//!
+//! Syncopate's chunk abstraction decouples *plans* from *backend
+//! mechanisms*; this subsystem decouples both from the *machine*. The
+//! hardware side of the model is a serializable artifact, not code:
+//!
+//! * [`arch`] — the per-generation backend matrix ([`Arch`]): one
+//!   capability row + bandwidth-curve row per [`crate::backend::BackendKind`],
+//!   with absence meaning "mechanism does not exist on this arch" (A100
+//!   has no TMA). Every [`crate::topo::Topology`] carries one; sim,
+//!   codegen, and the autotuner query it instead of the hardcoded H100
+//!   tables.
+//! * [`desc`] — [`TopoDesc`], the machine-shape description (nodes, link
+//!   specs per level, device parameters, arch), instantiated to a
+//!   `Topology` at any world size; plus the structural [`fingerprint`]
+//!   that keys tuned knobs to one machine shape (`TuneCache`).
+//! * [`format`] — the line-oriented `.topo` text format: hand-rolled
+//!   parser with `line L, col C:` errors, canonical printer,
+//!   `parse(print(t)) == t` (the `.sched` discipline of `plan_io`).
+//! * [`catalog`] — five built-in shapes (`h100_node`, `h100_multinode`,
+//!   `a100_node`, `b200_node`, `mixed_multinode`), shipped as
+//!   `examples/topos/*.topo`, and name-or-file resolution for every
+//!   `--topo` flag.
+//!
+//! Everything downstream (exec cases, reports, `plan run`, autotune,
+//! `report arch-sweep`) reaches hardware exclusively through this module —
+//! there are no `h100_*` constructors anywhere else.
+
+pub mod arch;
+pub mod catalog;
+pub mod desc;
+pub mod format;
+
+pub use arch::{Arch, BackendEntry, NUM_BACKENDS};
+pub use desc::{describe, fingerprint, TopoDesc};
+pub use format::{parse_desc, print_desc};

@@ -22,6 +22,12 @@
 //!   operators compose through [`pipeline`]: their chunk schedules fuse
 //!   into one barrier-free plan whose cross-stage ordering is carried by
 //!   fine-grained dependency edges instead of a kernel-boundary sync.
+//!   The hardware model is data, not code ([`hw`]): a queryable per-arch
+//!   capability matrix + bandwidth-curve store, a `.topo` description
+//!   format with a built-in catalog (`h100_node`, `a100_node`, `b200_node`,
+//!   multinode and mixed-fabric shapes), and a topology fingerprint keying
+//!   the tuning cache — every scenario runs on any described machine via
+//!   `--topo`.
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
@@ -38,6 +44,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod depgraph;
 pub mod error;
+pub mod hw;
 pub mod kernel;
 pub mod lowering;
 pub mod exec;

@@ -273,7 +273,7 @@ mod tests {
 
     #[test]
     fn all_paths_produce_valid_ag() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let (t, x) = table(8);
         for path in [LowerPath::Direct, LowerPath::Template, LowerPath::Synth] {
             let s = lower_collective(CollectiveKind::AllGather, &t, x, 0, &topo, path)
@@ -285,7 +285,7 @@ mod tests {
 
     #[test]
     fn paths_differ_structurally() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let (t, x) = table(8);
         let d = lower_collective(CollectiveKind::AllGather, &t, x, 0, &topo, LowerPath::Direct)
             .unwrap();
@@ -300,7 +300,7 @@ mod tests {
 
     #[test]
     fn template_ag_goes_hierarchical_on_multinode() {
-        let topo = Topology::h100_multinode(2, 2).unwrap();
+        let topo = crate::hw::catalog::topology_nodes("h100_multinode", 2, 4).unwrap();
         let (t, x) = table(8);
         let s = lower_collective(CollectiveKind::AllGather, &t, x, 0, &topo, LowerPath::Template)
             .unwrap();
@@ -311,7 +311,7 @@ mod tests {
     #[test]
     fn synth_ag_converges_all_worlds() {
         for world in [2usize, 3, 4, 8] {
-            let topo = Topology::h100_node(world).unwrap();
+            let topo = crate::hw::catalog::topology("h100_node", world).unwrap();
             let (t, x) = table(world * 2);
             let s = synth_all_gather(&t, x, 0, &topo).unwrap();
             validate(&s).unwrap();
@@ -321,7 +321,7 @@ mod tests {
 
     #[test]
     fn synth_ag_prefers_intra_node() {
-        let topo = Topology::h100_multinode(2, 4).unwrap();
+        let topo = crate::hw::catalog::topology_nodes("h100_multinode", 2, 8).unwrap();
         let (t, x) = table(16);
         let s = synth_all_gather(&t, x, 0, &topo).unwrap();
         validate(&s).unwrap();
@@ -339,7 +339,7 @@ mod tests {
 
     #[test]
     fn rs_and_ar_paths_valid() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let (t, x) = table(8);
         for path in [LowerPath::Direct, LowerPath::Template, LowerPath::Synth] {
             for kind in [CollectiveKind::ReduceScatter, CollectiveKind::AllReduce] {
@@ -352,7 +352,7 @@ mod tests {
 
     #[test]
     fn broadcast_tree_log_depth() {
-        let topo = Topology::h100_node(8).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 8).unwrap();
         let (t, x) = table(8);
         let s = lower_collective(CollectiveKind::Broadcast, &t, x, 0, &topo, LowerPath::Template)
             .unwrap();
@@ -365,7 +365,7 @@ mod tests {
 
     #[test]
     fn a2a_same_under_all_paths() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let (t, x) = table(32);
         let a = lower_collective(CollectiveKind::AllToAll, &t, x, 0, &topo, LowerPath::Direct)
             .unwrap();

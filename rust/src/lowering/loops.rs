@@ -180,7 +180,7 @@ mod tests {
 
     #[test]
     fn ring_attention_lowers_and_validates() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::mercury_ring_attention(4, 64, 32);
         let s = lower_loop_ir(&ir, &topo).unwrap();
         validate(&s).unwrap();
@@ -192,7 +192,7 @@ mod tests {
 
     #[test]
     fn double_ring_lowers() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::mercury_double_ring(4, 64, 32);
         let s = lower_loop_ir(&ir, &topo).unwrap();
         validate(&s).unwrap();
@@ -202,7 +202,7 @@ mod tests {
 
     #[test]
     fn empty_loop_ir_is_empty_schedule() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 2).unwrap();
         let ir = LoopIR { world: 2, tensors: vec![], nodes: vec![] };
         let s = lower_loop_ir(&ir, &topo).unwrap();
         assert_eq!(s.num_ops(), 0);
@@ -210,7 +210,7 @@ mod tests {
 
     #[test]
     fn error_cases() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         // undeclared tensor
         let ir = LoopIR {
             world: 4,
@@ -240,7 +240,7 @@ mod tests {
     fn shard_rotation_covers_all_shards_at_each_rank() {
         // after the ring completes, every rank has pushed/received w-1
         // distinct shards of each tensor
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::mercury_ring_attention(4, 64, 32);
         let s = lower_loop_ir(&ir, &topo).unwrap();
         for r in 0..4 {

@@ -228,7 +228,7 @@ mod tests {
 
     #[test]
     fn domino_ffn_lowers_and_validates() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::domino_ffn(4, 64, 32, 32);
         for path in [LowerPath::Direct, LowerPath::Template, LowerPath::Synth] {
             let s = lower_partition_ir(&ir, &topo, path).unwrap();
@@ -240,7 +240,7 @@ mod tests {
 
     #[test]
     fn alpa_ffn_has_ag_and_rs_phases() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::alpa_ffn(4, 64, 32, 32);
         let s = lower_partition_ir(&ir, &topo, LowerPath::Template).unwrap();
         validate(&s).unwrap();
@@ -254,7 +254,7 @@ mod tests {
     fn merged_deps_remapped_past_earlier_tensor_ops() {
         // Direct path: AG ring (with deps) then AR rs+ag (with deps); the
         // second tensor's dep indices must be shifted by the first's op count.
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::domino_ffn(4, 64, 32, 32);
         let s = lower_partition_ir(&ir, &topo, LowerPath::Direct).unwrap();
         validate(&s).unwrap(); // would fail on bad dep indices / cycles
@@ -273,7 +273,7 @@ mod tests {
 
     #[test]
     fn moe_a2a_round_trip() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::moe_a2a(4, 64, 32);
         let s = lower_partition_ir(&ir, &topo, LowerPath::Template).unwrap();
         validate(&s).unwrap();
@@ -283,7 +283,7 @@ mod tests {
 
     #[test]
     fn world_mismatch_rejected() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 2).unwrap();
         let ir = presets::domino_ffn(4, 64, 32, 32);
         assert!(lower_partition_ir(&ir, &topo, LowerPath::Template).is_err());
     }
@@ -291,7 +291,7 @@ mod tests {
     #[test]
     fn a2a_needs_divisible_blocks() {
         // tokens not divisible by world^2 on the A2A axis -> schedule error
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let ir = presets::moe_a2a(4, 20, 32);
         assert!(lower_partition_ir(&ir, &topo, LowerPath::Template).is_err());
     }

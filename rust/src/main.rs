@@ -3,20 +3,33 @@
 //! Subcommands (hand-rolled parser — the offline build carries no clap):
 //!
 //! ```text
-//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|ported|pipeline|headline|all>
-//!                  [--full] [--csv]
+//! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|ported|pipeline|
+//!                   arch-sweep|headline|all> [--full] [--csv]
 //! syncopate simulate --op <kind> [--model <name>] [--world N] [--tokens N|--seq N]
 //!                    [--split K] [--backend <name>] [--sms N] [--timeline]
+//!                    [--topo <name|FILE.topo>]
 //! syncopate tune --op <kind> [--model <name>] [--world N] [--full]
+//!                [--topo <name|FILE.topo>] [--cache FILE]
 //! syncopate exec --case <NAME|list> [--world N] [--split K] [--nodes N]
+//!                [--topo <name|FILE.topo>]
 //!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
+//!                (--nodes splits SINGLE-node --topo descriptions for the
+//!                 hierarchical case; a multinode description's own node
+//!                 structure wins)
 //! syncopate plan import --from <SOURCE> [--world N] [--out FILE.sched]
 //! syncopate plan show <FILE.sched>
 //! syncopate plan lint <FILE.sched>...
 //! syncopate plan run <FILE.sched> [--workers N] [--exec-mode M] [--timeout-ms N]
+//!                    [--topo <name|FILE.topo>]
 //! syncopate plan --op <kind> [--world N] [--split K]      (operator plan stats)
-//! syncopate serve-demo [--workers N]
+//! syncopate topo list
+//! syncopate topo show <name|FILE.topo>
+//! syncopate topo lint <FILE.topo>...
+//! syncopate serve-demo [--workers N] [--topo <name|FILE.topo>]
 //! ```
+//!
+//! Every `--topo` accepts a built-in catalog name (`syncopate topo list`)
+//! or a path to a `.topo` description file (DESIGN.md §13).
 
 use std::collections::HashMap;
 
@@ -29,6 +42,7 @@ use syncopate::coordinator::service::{opkind_by_name, Coordinator};
 use syncopate::coordinator::TuneConfig;
 use syncopate::error::{Error, Result};
 use syncopate::exec::{ExecMode, ExecOptions};
+use syncopate::hw;
 use syncopate::plan_io;
 use syncopate::reports;
 use syncopate::runtime::Runtime;
@@ -107,15 +121,24 @@ fn build_op(flags: &HashMap<String, String>) -> Result<OperatorInstance> {
     })
 }
 
-fn build_cfg(flags: &HashMap<String, String>) -> Result<TuneConfig> {
+/// Resolve the `--topo` flag (catalog name or `.topo` file path; defaults
+/// to the paper's `h100_node`) at `world` ranks.
+fn resolve_topo(flags: &HashMap<String, String>, world: usize) -> Result<Topology> {
+    let spec = flags.get("topo").map(String::as_str).unwrap_or(hw::catalog::DEFAULT);
+    Ok(hw::catalog::resolve(spec, world)?.1)
+}
+
+fn build_cfg(flags: &HashMap<String, String>, topo: &Topology) -> Result<TuneConfig> {
     let mut cfg = TuneConfig::default();
     cfg.split = get_usize(flags, "split", cfg.split)?;
     if let Some(b) = flags.get("backend") {
         let backend = backend_by_name(b)?;
+        // --sms default follows the TARGET arch's curve, not the H100
+        // reference: a .topo may flip a mechanism's SM-drivenness
         let sms = get_usize(
             flags,
             "sms",
-            if syncopate::backend::curve(backend).sms_for_peak == 0 { 0 } else { 16 },
+            if topo.arch.curve(backend).sms_for_peak == 0 { 0 } else { 16 },
         )?;
         cfg.real = Realization::new(backend, sms);
     }
@@ -132,11 +155,12 @@ fn dispatch(args: &[String]) -> Result<()> {
         "report" => report(&bare, &flags),
         "simulate" => {
             let op = build_op(&flags)?;
-            let cfg = build_cfg(&flags)?;
-            let topo = Topology::h100_node(op.world)?;
+            let topo = resolve_topo(&flags, op.world)?;
+            let cfg = build_cfg(&flags, &topo)?;
             let (plan, params) = compile_operator(&op, &cfg, &topo)?;
             let r = simulate(&plan, &topo, params)?;
             println!("operator : {}", op.label());
+            println!("topology : {} (fingerprint {})", topo.arch.name(), hw::fingerprint(&topo));
             println!("config   : {}", cfg.label());
             println!("makespan : {}", syncopate::util::fmt_us(r.makespan_us));
             println!("tflops   : {:.1}", r.tflops());
@@ -152,15 +176,19 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         "tune" => {
             let op = build_op(&flags)?;
-            let topo = Topology::h100_node(op.world)?;
+            let topo = resolve_topo(&flags, op.world)?;
             let budget = if flags.contains_key("full") { Budget::Full } else { Budget::Quick };
-            // tune-once persistence: `--cache FILE` reuses prior results
+            // tune-once persistence: `--cache FILE` reuses prior results —
+            // keyed by (operator, topology fingerprint), so a cache file
+            // from another machine shape never serves stale knobs here
             if let Some(path) = flags.get("cache") {
                 let p = std::path::Path::new(path);
                 if p.exists() {
                     let cache = autotune::TuneCache::load(p)?;
-                    if let Some((cfg, m, t)) = cache.get(&op) {
+                    if let Some((cfg, m, t)) = cache.get(&op, &topo) {
                         println!("operator : {} (cached)", op.label());
+                        println!("topology : {} (fingerprint {})",
+                            topo.arch.name(), hw::fingerprint(&topo));
                         println!("best     : {cfg}");
                         println!("makespan : {}", syncopate::util::fmt_us(m));
                         println!("tflops   : {t:.1}");
@@ -170,6 +198,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             let r = autotune::tune(&op, &topo, budget)?;
             println!("operator : {}", op.label());
+            println!("topology : {} (fingerprint {})", topo.arch.name(), hw::fingerprint(&topo));
             println!("best     : {}", r.cfg.label());
             println!("makespan : {}", syncopate::util::fmt_us(r.makespan_us));
             println!("tflops   : {:.1}", r.tflops);
@@ -181,7 +210,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 } else {
                     autotune::TuneCache::default()
                 };
-                cache.insert(&op, &r)?;
+                cache.insert(&op, &topo, &r)?;
                 cache.save(p)?;
                 println!("cached   : {path} ({} entries)", cache.len());
             }
@@ -202,6 +231,10 @@ fn dispatch(args: &[String]) -> Result<()> {
                 split: get_usize(&flags, "split", 1)?,
                 seed: get_usize(&flags, "seed", 42)? as u64,
                 nodes: get_usize(&flags, "nodes", 2)?,
+                topo: flags
+                    .get("topo")
+                    .cloned()
+                    .unwrap_or_else(|| hw::catalog::DEFAULT.to_string()),
             };
             let case = execases::build_case(&case_name, &params)?;
             let name = case.name.clone();
@@ -220,7 +253,9 @@ fn dispatch(args: &[String]) -> Result<()> {
             let backend = rt.backend_name();
             let stats = run_and_verify_with(case, &rt, &opts)?;
             println!(
-                "{name}: VERIFIED [{mode:?}/{backend}] ({} transfers, {} moved, {} kernel calls)",
+                "{name}: VERIFIED on {} [{mode:?}/{backend}] ({} transfers, {} moved, \
+                 {} kernel calls)",
+                params.topo,
                 stats.transfers,
                 syncopate::util::fmt_bytes(stats.bytes_moved as u64),
                 stats.compute_calls
@@ -238,8 +273,8 @@ fn dispatch(args: &[String]) -> Result<()> {
             ))),
             None => {
                 let op = build_op(&flags)?;
-                let cfg = build_cfg(&flags)?;
-                let topo = Topology::h100_node(op.world)?;
+                let topo = resolve_topo(&flags, op.world)?;
+                let cfg = build_cfg(&flags, &topo)?;
                 let (plan, _) = compile_operator(&op, &cfg, &topo)?;
                 println!("operator  : {}", op.label());
                 println!("transfers : {}", plan.total_transfers());
@@ -260,7 +295,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve-demo" => {
             let world = get_usize(&flags, "world", 8)?;
             let workers = get_usize(&flags, "workers", 2)?;
-            let coord = Coordinator::spawn_pool(Topology::h100_node(world)?, workers);
+            let coord = Coordinator::spawn_pool(resolve_topo(&flags, world)?, workers);
             println!(
                 "coordinator up (world {world}, {} workers); submitting demo batch...",
                 coord.workers()
@@ -283,10 +318,84 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "topo" => topo_cmd(&bare),
         other => {
             print_usage();
             Err(Error::Coordinator(format!("unknown subcommand `{other}`")))
         }
+    }
+}
+
+/// `topo list|show|lint`: the hardware-description counterpart of the
+/// `plan` verbs (DESIGN.md §13).
+fn topo_cmd(bare: &[String]) -> Result<()> {
+    match bare.first().map(String::as_str) {
+        Some("list") => {
+            println!("topology catalog (use with --topo NAME, or point --topo at a .topo file):");
+            for e in hw::catalog::CATALOG {
+                let d = hw::catalog::desc(e.name)?;
+                println!(
+                    "  {:16} {:>2} node(s)  {:>4} SMs  {:>6.0} GB/s intra   {}",
+                    e.name, d.nodes, d.sms_per_device, d.intra.bw_gbps, e.about
+                );
+            }
+            Ok(())
+        }
+        Some("show") => {
+            let Some(spec) = bare.get(1) else {
+                return Err(Error::Coordinator(
+                    "topo show needs a catalog name or .topo file".into(),
+                ));
+            };
+            let d = hw::catalog::load_desc(spec)?;
+            let canonical = hw::print_desc(&d);
+            println!("# {spec}");
+            println!(
+                "# {} node(s), {} backends, fingerprint@world{} {}",
+                d.nodes,
+                d.arch.available_kinds().len(),
+                2 * d.nodes,
+                hw::fingerprint(&d.instantiate(2 * d.nodes)?),
+            );
+            print!("{canonical}");
+            Ok(())
+        }
+        Some("lint") => {
+            if bare.len() < 2 {
+                return Err(Error::Coordinator(
+                    "topo lint needs at least one .topo file".into(),
+                ));
+            }
+            for path in &bare[1..] {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+                let d = hw::parse_desc(&text).map_err(|e| Error::Hw(format!("{path}: {e}")))?;
+                let canonical = hw::print_desc(&d);
+                let reparsed = hw::parse_desc(&canonical)?;
+                if reparsed != d {
+                    return Err(Error::Hw(format!(
+                        "{path}: print->parse round-trip changed the description \
+                         (printer bug?)"
+                    )));
+                }
+                // instantiation smoke: the description must produce a
+                // usable mesh at its smallest even filling
+                let world = 2 * d.nodes;
+                let t = d.instantiate(world)?;
+                println!(
+                    "OK {path}: {} ({} node(s), {} backends), fingerprint@world{world} {}",
+                    d.name,
+                    d.nodes,
+                    d.arch.available_kinds().len(),
+                    hw::fingerprint(&t)
+                );
+            }
+            Ok(())
+        }
+        other => Err(Error::Coordinator(format!(
+            "unknown topo verb `{}` (list|show|lint)",
+            other.unwrap_or("<none>")
+        ))),
     }
 }
 
@@ -390,7 +499,7 @@ fn plan_run(files: &[String], flags: &HashMap<String, String>) -> Result<()> {
         mode,
         wait_timeout: std::time::Duration::from_millis(timeout_ms),
     };
-    let coord = Coordinator::spawn_pool(Topology::h100_node(sched.world)?, workers);
+    let coord = Coordinator::spawn_pool(resolve_topo(flags, sched.world)?, workers);
     for attempt in ["cold", "warm"] {
         let r = coord.run_user_plan(&text, opts.clone())?;
         println!(
@@ -447,6 +556,11 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
             emit(&reports::fig11c()?);
             emit(&reports::fig11d()?);
         }
+        "arch-sweep" => {
+            let t = reports::arch_sweep()?;
+            emit(&t);
+            print_arch_ranking(&t);
+        }
         "headline" => {
             let (avg, max) = reports::headline(budget)?;
             println!("headline: avg {avg:.2}x, up to {max:.2}x over automatic baselines\n");
@@ -454,7 +568,7 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
         "all" => {
             for w in [
                 "table2", "fig2", "fig8", "fig9", "fig10", "fig11", "ported", "pipeline",
-                "scale", "headline",
+                "scale", "arch-sweep", "headline",
             ] {
                 report(&[w.to_string()], flags)?;
             }
@@ -462,6 +576,17 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
         other => return Err(Error::Coordinator(format!("unknown report `{other}`"))),
     }
     Ok(())
+}
+
+/// Per-case topology ranking for `report arch-sweep` (fastest first).
+fn print_arch_ranking(t: &syncopate::metrics::Table) {
+    for (label, row) in &t.rows {
+        let mut idx: Vec<usize> = (0..row.len()).filter(|&i| row[i].is_finite()).collect();
+        idx.sort_by(|&a, &b| row[a].total_cmp(&row[b]));
+        let order: Vec<&str> = idx.iter().map(|&i| t.columns[i].as_str()).collect();
+        println!("  {label:14} fastest -> slowest: {}", order.join(" > "));
+    }
+    println!();
 }
 
 fn print_ratios(t: &syncopate::metrics::Table) {
@@ -478,9 +603,11 @@ fn print_ratios(t: &syncopate::metrics::Table) {
 fn print_usage() {
     println!(
         "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
-         usage: syncopate <report|simulate|tune|exec|plan|serve-demo> [flags]\n\
+         usage: syncopate <report|simulate|tune|exec|plan|topo|serve-demo> [flags]\n\
          plan verbs: plan import --from <src>, plan show|lint|run <file.sched>\n\
+         topo verbs: topo list, topo show|lint <name|file.topo>\n\
          exec cases: syncopate exec --case list\n\
+         hardware  : every sim/tune/exec/plan-run takes --topo <name|file.topo>\n\
          see rust/src/main.rs header for the full flag list"
     );
 }

@@ -12,7 +12,6 @@
 use crate::chunk::{DType, TensorTable};
 use crate::error::{Error, Result};
 use crate::schedule::{templates, CommSchedule};
-use crate::topo::Topology;
 
 use super::import;
 
@@ -129,7 +128,7 @@ pub fn sources() -> Vec<PlanSource> {
                     )));
                 }
                 let (t, x) = canon_table(world)?;
-                let topo = Topology::h100_multinode(2, world / 2)?;
+                let topo = crate::hw::catalog::topology_nodes("h100_multinode", 2, world)?;
                 templates::all_gather_hierarchical(&t, x, 0, &topo)
             },
         },

@@ -6,7 +6,7 @@
 //! what the paper plots; DESIGN.md §5 maps figures to these functions.
 
 use crate::autotune::{self, Budget};
-use crate::backend::{self, BackendKind};
+use crate::backend::BackendKind;
 use crate::baselines::{self, Baseline};
 use crate::codegen::Realization;
 use crate::coordinator::operators::compile_operator;
@@ -28,23 +28,23 @@ use crate::workload::{
 /// Table 2: communication mechanism comparison (achieved bandwidth at a
 /// large message + capability flags encoded as 0/1).
 pub fn table2() -> Table {
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = crate::hw::catalog::topology("h100_node", 8).unwrap();
     let mut t = Table::new(
         "Table 2: GPU communication mechanisms",
         &["bw GB/s @256MiB", "bw @1MiB", "collective-reduce", "host-launched", "SM-driven"],
         "mixed",
     );
     for b in [BackendKind::CopyEngine, BackendKind::TmaSpecialized, BackendKind::LdStSpecialized] {
-        let caps = backend::caps(b);
-        let sms = backend::curve(b).sms_for_peak.max(0);
+        let caps = topo.arch.caps(b);
+        let sms = topo.arch.curve(b).sms_for_peak.max(0);
         t.push_row(
             b.name(),
             vec![
-                backend::effective_bandwidth_gbps(b, 256 << 20, sms, topo.intra),
-                backend::effective_bandwidth_gbps(b, 1 << 20, sms, topo.intra),
+                topo.arch.effective_bandwidth_gbps(b, 256 << 20, sms, topo.intra),
+                topo.arch.effective_bandwidth_gbps(b, 1 << 20, sms, topo.intra),
                 caps.supports_reduce as u8 as f64,
                 caps.host_launched as u8 as f64,
-                (backend::curve(b).sms_for_peak > 0) as u8 as f64,
+                (topo.arch.curve(b).sms_for_peak > 0) as u8 as f64,
             ],
         );
     }
@@ -73,7 +73,7 @@ pub fn fig2a() -> Table {
 
 /// Fig. 2(b): streamed (persistent, fused) vs kernel-partitioned GEMM.
 pub fn fig2b() -> Result<Table> {
-    let topo = Topology::h100_node(8)?;
+    let topo = crate::hw::catalog::topology("h100_node", 8)?;
     let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, DEFAULT_TOKENS, 8);
     let mut t = Table::new(
         "Fig 2b: streamed kernel vs kernel-partitioned (AG-GEMM, 70B shape)",
@@ -97,7 +97,7 @@ pub fn fig2b() -> Result<Table> {
 
 /// Fig. 2(c): achieved bandwidth vs transfer size per backend.
 pub fn fig2c() -> Table {
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = crate::hw::catalog::topology("h100_node", 8).unwrap();
     let mut t = Table::new(
         "Fig 2c: bandwidth vs transfer size",
         &["copy-engine", "tma(16sm)", "ldst(32sm)"],
@@ -105,7 +105,7 @@ pub fn fig2c() -> Table {
     );
     // achieved GB/s including launch/latency overheads: bytes / (µs · 1e3)
     let gbps = |kind: BackendKind, bytes: usize, sms: usize| {
-        bytes as f64 / (backend::transfer_time_us(kind, bytes, 1, sms, topo.intra) * 1e3)
+        bytes as f64 / (topo.arch.transfer_time_us(kind, bytes, 1, sms, topo.intra) * 1e3)
     };
     for kib in [4usize, 64, 1024, 4096, 65536, 262144] {
         let bytes = kib * 1024;
@@ -123,7 +123,7 @@ pub fn fig2c() -> Table {
 
 /// Fig. 2(d): achieved bandwidth vs number of communication SMs.
 pub fn fig2d() -> Table {
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = crate::hw::catalog::topology("h100_node", 8).unwrap();
     let bytes = 64 << 20;
     let mut t = Table::new(
         "Fig 2d: bandwidth vs #SMs (64 MiB transfers)",
@@ -134,9 +134,9 @@ pub fn fig2d() -> Table {
         t.push_row(
             &format!("{sms} SMs"),
             vec![
-                backend::effective_bandwidth_gbps(BackendKind::TmaSpecialized, bytes, sms, topo.intra),
-                backend::effective_bandwidth_gbps(BackendKind::LdStSpecialized, bytes, sms, topo.intra),
-                backend::effective_bandwidth_gbps(BackendKind::CopyEngine, bytes, 0, topo.intra),
+                topo.arch.effective_bandwidth_gbps(BackendKind::TmaSpecialized, bytes, sms, topo.intra),
+                topo.arch.effective_bandwidth_gbps(BackendKind::LdStSpecialized, bytes, sms, topo.intra),
+                topo.arch.effective_bandwidth_gbps(BackendKind::CopyEngine, bytes, 0, topo.intra),
             ],
         );
     }
@@ -177,7 +177,7 @@ pub fn fig8(budget: Budget) -> Result<Table> {
     let mut t = Table::new("Fig 8: distributed GEMM operators", &SYSTEMS, "TFLOPS");
     for model in &MODELS {
         for &world in &[4usize, 8] {
-            let topo = Topology::h100_node(world)?;
+            let topo = crate::hw::catalog::topology("h100_node", world)?;
             for kind in [OpKind::AgGemm, OpKind::GemmRs, OpKind::GemmAr] {
                 let op = OperatorInstance::gemm(kind, model, DEFAULT_TOKENS, world);
                 let row = compare_systems(&op, &topo, budget)?;
@@ -193,7 +193,7 @@ pub fn fig9(budget: Budget) -> Result<Table> {
     let mut t = Table::new("Fig 9: distributed attention operators", &SYSTEMS, "TFLOPS");
     for model in &[LLAMA3_8B, LLAMA3_70B] {
         for &world in &[4usize, 8] {
-            let topo = Topology::h100_node(world)?;
+            let topo = crate::hw::catalog::topology("h100_node", world)?;
             for &seq in &SEQ_SWEEP[..3] {
                 for kind in OpKind::ATTN_OPS {
                     let op = OperatorInstance::attention(kind, model, seq, world);
@@ -235,7 +235,7 @@ pub fn ported() -> Result<Table> {
         "us (lower=better)",
     );
     for world in [2usize, 4, 8] {
-        let topo = Topology::h100_node(world)?;
+        let topo = crate::hw::catalog::topology("h100_node", world)?;
         let mut table = TensorTable::new();
         let x = table.declare("x", &[world * 1024, 4096], DType::BF16)?;
         let real = Realization::new(BackendKind::CopyEngine, 0);
@@ -262,7 +262,7 @@ pub fn ported() -> Result<Table> {
 /// paths on the IR's own communication schedule.
 pub fn fig10(budget: Budget) -> Result<Table> {
     let world = 8usize;
-    let topo = Topology::h100_node(world)?;
+    let topo = crate::hw::catalog::topology("h100_node", world)?;
     let mut t = Table::new(
         "Fig 10: integration with distributed compilers (8 GPU)",
         &["native", "+syncopate", "comm direct", "comm template", "comm synth"],
@@ -334,7 +334,7 @@ pub fn fig10(budget: Budget) -> Result<Table> {
 
 /// Fig. 11(a): backend ablation for a fixed logical schedule.
 pub fn fig11a() -> Result<Table> {
-    let topo = Topology::h100_node(8)?;
+    let topo = crate::hw::catalog::topology("h100_node", 8)?;
     let mut t = Table::new(
         "Fig 11a: communication backend ablation",
         &["copy-engine", "tma-spec", "tma-coloc", "ldst-spec", "ldst-coloc"],
@@ -346,7 +346,7 @@ pub fn fig11a() -> Result<Table> {
     ] {
         let mut row = Vec::new();
         for b in BackendKind::TUNABLE {
-            let sms = if backend::curve(b).sms_for_peak == 0 { 0 } else { 16 };
+            let sms = if topo.arch.curve(b).sms_for_peak == 0 { 0 } else { 16 };
             let cfg = TuneConfig { real: Realization::new(b, sms), ..Default::default() };
             match compile_operator(&op, &cfg, &topo)
                 .and_then(|(p, params)| simulate(&p, &topo, params))
@@ -362,7 +362,7 @@ pub fn fig11a() -> Result<Table> {
 
 /// Fig. 11(b): chunk split-factor sensitivity (non-monotone, interior peak).
 pub fn fig11b() -> Result<Table> {
-    let topo = Topology::h100_node(8)?;
+    let topo = crate::hw::catalog::topology("h100_node", 8)?;
     let mut t = Table::new(
         "Fig 11b: chunk size (split factor) sensitivity",
         &["a2a-gemm-70b", "gemm-ar-70b"],
@@ -395,7 +395,7 @@ pub fn fig11b() -> Result<Table> {
 
 /// Fig. 11(c): communication-SM allocation sweet spot.
 pub fn fig11c() -> Result<Table> {
-    let topo = Topology::h100_node(8)?;
+    let topo = crate::hw::catalog::topology("h100_node", 8)?;
     let mut t = Table::new(
         "Fig 11c: SM allocation (ldst-specialized)",
         &["gemm-ar-405b", "gemm-ar-70b"],
@@ -426,7 +426,7 @@ pub fn fig11c() -> Result<Table> {
 
 /// Fig. 11(d): intra-tile schedule spread for one GEMM configuration.
 pub fn fig11d() -> Result<Table> {
-    let topo = Topology::h100_node(8)?;
+    let topo = crate::hw::catalog::topology("h100_node", 8)?;
     let op = OperatorInstance::gemm(OpKind::AgGemm, &QWEN_72B, DEFAULT_TOKENS, 8);
     let mut t = Table::new(
         "Fig 11d: tile schedule / shape ablation (AG-GEMM Qwen-72B)",
@@ -471,10 +471,10 @@ pub fn scalability(budget: Budget) -> Result<Table> {
         "TFLOPS (speedup: x)",
     );
     let meshes: Vec<(String, Topology)> = vec![
-        ("2gpu".into(), Topology::h100_node(2)?),
-        ("4gpu".into(), Topology::h100_node(4)?),
-        ("8gpu".into(), Topology::h100_node(8)?),
-        ("2x8gpu".into(), Topology::h100_multinode(2, 8)?),
+        ("2gpu".into(), crate::hw::catalog::topology("h100_node", 2)?),
+        ("4gpu".into(), crate::hw::catalog::topology("h100_node", 4)?),
+        ("8gpu".into(), crate::hw::catalog::topology("h100_node", 8)?),
+        ("2x8gpu".into(), crate::hw::catalog::topology_nodes("h100_multinode", 2, 16)?),
     ];
     for (mname, topo) in &meshes {
         for kind in [OpKind::AgGemm, OpKind::A2aGemm, OpKind::RingAttn] {
@@ -526,7 +526,7 @@ pub fn pipeline() -> Result<Table> {
         Ok(total)
     }
     for world in [2usize, 4, 8] {
-        let topo = Topology::h100_node(world)?;
+        let topo = crate::hw::catalog::topology("h100_node", world)?;
 
         let fused = simulate(
             &execases::tp_block(world, 1, 42)?.plan,
@@ -545,6 +545,38 @@ pub fn pipeline() -> Result<Table> {
         .makespan_us;
         let barrier = sum_makespans(&execases::moe_a2a_stage_plans(world)?, &topo)?;
         t.push_row(&format!("moe-a2a-{world}gpu"), vec![fused, barrier, barrier / fused]);
+    }
+    Ok(t)
+}
+
+/// Arch sweep: every registry exec case simulated on every catalog
+/// topology — the cross-machine comparison the data-driven hardware model
+/// exists for. One row per exec case, one column per catalog shape, cell =
+/// simulated makespan of the case's compiled plan on that machine (µs).
+/// The CLI (`report arch-sweep`) additionally prints the per-case
+/// fastest→slowest ranking.
+pub fn arch_sweep() -> Result<Table> {
+    use crate::coordinator::execases::{self, CaseParams};
+
+    let names = crate::hw::catalog::names();
+    let mut t = Table::new(
+        "Arch sweep: per-case makespan across the topology catalog (world 4)",
+        &names,
+        "us (lower=better)",
+    );
+    for spec in execases::CASES {
+        let mut row = Vec::with_capacity(names.len());
+        for name in &names {
+            let p = CaseParams { topo: name.to_string(), ..Default::default() };
+            let r = spec
+                .build(&p)
+                .and_then(|case| simulate(&case.plan, &case.topo, SimParams::default()));
+            row.push(match r {
+                Ok(sim) => sim.makespan_us,
+                Err(_) => f64::NAN,
+            });
+        }
+        t.push_row(spec.name, row);
     }
     Ok(t)
 }
@@ -620,6 +652,25 @@ mod tests {
         let col: Vec<f64> = t.rows.iter().map(|(_, r)| r[1]).collect();
         let best = col.iter().copied().fold(0.0, f64::max);
         assert!(col[0] < best || col[col.len() - 1] < best);
+    }
+
+    #[test]
+    fn arch_sweep_covers_every_case_on_every_topology() {
+        // acceptance: every registry exec case builds and simulates on all
+        // five catalog topologies — no NaN cell anywhere
+        let t = arch_sweep().unwrap();
+        assert_eq!(t.columns.len(), crate::hw::catalog::names().len());
+        assert_eq!(t.rows.len(), crate::coordinator::execases::CASES.len());
+        for (label, row) in &t.rows {
+            for (c, v) in t.columns.iter().zip(row) {
+                assert!(v.is_finite() && *v > 0.0, "{label} on {c}: {v}");
+            }
+        }
+        // the sweep must actually distinguish machines: on the compute- and
+        // bandwidth-lighter a100 the ag-gemm case cannot tie h100
+        let (ia, ih) = (t.col("a100_node").unwrap(), t.col("h100_node").unwrap());
+        let ag = &t.rows.iter().find(|(l, _)| l == "ag-gemm").unwrap().1;
+        assert!(ag[ia] > ag[ih], "a100 {} vs h100 {}", ag[ia], ag[ih]);
     }
 
     #[test]

@@ -734,7 +734,7 @@ mod tests {
 
     #[test]
     fn hierarchical_ag_gathers_two_nodes() {
-        let topo = Topology::h100_multinode(2, 4).unwrap();
+        let topo = crate::hw::catalog::topology_nodes("h100_multinode", 2, 8).unwrap();
         let (t, x) = table(16); // 8 shards of 2 rows
         let s = all_gather_hierarchical(&t, x, 0, &topo).unwrap();
         validate(&s).unwrap();
@@ -746,7 +746,7 @@ mod tests {
 
     #[test]
     fn hierarchical_ag_single_node_falls_back_to_ring() {
-        let topo = Topology::h100_node(4).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 4).unwrap();
         let (t, x) = table(8);
         let a = all_gather_hierarchical(&t, x, 0, &topo).unwrap();
         let b = all_gather_ring(&t, x, 0, 4).unwrap();
@@ -755,7 +755,7 @@ mod tests {
 
     #[test]
     fn hierarchical_ag_three_nodes() {
-        let topo = Topology::h100_multinode(3, 2).unwrap();
+        let topo = crate::hw::catalog::topology_nodes("h100_multinode", 3, 6).unwrap();
         let (t, x) = table(12); // 6 shards of 2
         let s = all_gather_hierarchical(&t, x, 0, &topo).unwrap();
         validate(&s).unwrap();

@@ -13,7 +13,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
-use crate::backend::{self, BackendKind};
+use crate::backend::BackendKind;
 use crate::codegen::{ExecutablePlan, PlanOp, SignalId};
 use crate::error::{Error, Result};
 use crate::sim::timeline::{Span, SpanKind, Timeline};
@@ -327,7 +327,9 @@ impl<'a> Engine<'a> {
         }
         let (owner, desc) = (self.xfers[tid].owner, self.xfers[tid].desc.clone());
         let link = self.topo.link(desc.src_rank, desc.dst_rank)?;
-        let dur = backend::transfer_time_us(
+        // per-transfer cost through the topology's own backend matrix —
+        // curves differ per machine generation (hw::Arch), not per build
+        let dur = self.topo.arch.transfer_time_us(
             desc.backend,
             desc.bytes,
             desc.pieces,
@@ -417,6 +419,10 @@ mod tests {
         Chunk::new(TensorId(0), Region::rows(0, 4, 16))
     }
 
+    fn topo(w: usize) -> Topology {
+        crate::hw::catalog::topology("h100_node", w).unwrap()
+    }
+
     fn xfer(signal: usize, src: usize, dst: usize, bytes: usize, deps: Vec<usize>) -> TransferDesc {
         TransferDesc {
             signal,
@@ -454,7 +460,7 @@ mod tests {
 
     #[test]
     fn compute_only_plan_times_by_waves() {
-        let topo = Topology::h100_node(1).unwrap();
+        let topo = topo(1);
         // 264 tiles of 2*128^3 flops on 132 SMs = 2 waves
         let p = plan(1, vec![vec![PlanOp::Compute(seg(264, 2.0 * 128.0_f64.powi(3)))]], 0);
         let r = simulate(&p, &topo, SimParams { mxu_eff: 1.0 }).unwrap();
@@ -465,7 +471,7 @@ mod tests {
 
     #[test]
     fn transfer_then_wait_exposes_comm() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = topo(2);
         // rank1 issues a big transfer; rank0 waits for it with no compute.
         let p = plan(
             2,
@@ -482,7 +488,7 @@ mod tests {
 
     #[test]
     fn overlap_hides_comm_behind_compute() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = topo(2);
         // 100 waves of 128^3 tiles ≈ 66µs compute vs ~52µs transfer
         let big_seg = seg(264 * 50, 2.0 * 128.0_f64.powi(3));
         let t = xfer(0, 1, 0, 16 << 20, vec![]);
@@ -501,7 +507,7 @@ mod tests {
 
     #[test]
     fn dep_signals_serialize_transfers() {
-        let topo = Topology::h100_node(3).unwrap();
+        let topo = topo(3);
         let bytes = 8 << 20;
         // t1 (rank1->0) deps on t0 (rank2->1): must start after t0 completes.
         let p = plan(
@@ -523,7 +529,7 @@ mod tests {
                 ],
                 1,
             );
-            simulate(&p1, &Topology::h100_node(2).unwrap(), SimParams::default())
+            simulate(&p1, &crate::hw::catalog::topology("h100_node", 2).unwrap(), SimParams::default())
                 .unwrap()
                 .makespan_us
         };
@@ -533,7 +539,7 @@ mod tests {
 
     #[test]
     fn link_contention_serializes_same_pair() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = topo(2);
         let bytes = 32 << 20;
         // two transfers on the same (1 -> 0) link, independent
         let p = plan(
@@ -562,7 +568,7 @@ mod tests {
 
     #[test]
     fn colocated_charges_debt_to_compute() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = topo(2);
         let mut t = xfer(0, 1, 0, 32 << 20, vec![]);
         t.backend = BackendKind::LdStColocated;
         t.comm_sms = 32;
@@ -593,7 +599,7 @@ mod tests {
 
     #[test]
     fn deadlock_detected() {
-        let topo = Topology::h100_node(1).unwrap();
+        let topo = topo(1);
         // wait on a signal nobody sets
         let p = plan(1, vec![vec![PlanOp::Wait(0)]], 1);
         let e = simulate(&p, &topo, SimParams::default()).unwrap_err();
@@ -602,14 +608,14 @@ mod tests {
 
     #[test]
     fn world_mismatch_rejected() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = topo(2);
         let p = plan(1, vec![vec![]], 0);
         assert!(simulate(&p, &topo, SimParams::default()).is_err());
     }
 
     #[test]
     fn reserved_sms_slow_compute() {
-        let topo = Topology::h100_node(1).unwrap();
+        let topo = topo(1);
         let mk = |reserved| {
             let mut p = plan(1, vec![vec![PlanOp::Compute(seg(264, 2.0 * 128.0_f64.powi(3)))]], 0);
             p.reserved_comm_sms = reserved;
@@ -624,7 +630,7 @@ mod tests {
 
     #[test]
     fn overhead_spans_accumulate() {
-        let topo = Topology::h100_node(1).unwrap();
+        let topo = topo(1);
         let p = plan(
             1,
             vec![vec![
@@ -640,7 +646,7 @@ mod tests {
 
     #[test]
     fn determinism() {
-        let topo = Topology::h100_node(2).unwrap();
+        let topo = topo(2);
         let p = plan(
             2,
             vec![

@@ -1,11 +1,19 @@
 //! Device mesh and interconnect topology.
 //!
-//! Models the paper's testbed (8×H100, NVLink/NVSwitch, 900 GB/s aggregate)
-//! plus a two-level hierarchy (intra-node NVLink, inter-node IB) used by the
-//! heterogeneous swizzled schedules of Fig. 4(e).
-
+//! Models a (possibly multi-node) accelerator mesh: per-level link specs
+//! (local / intra-node / inter-node, the hierarchy the heterogeneous
+//! swizzled schedules of Fig. 4(e) pipeline across), device compute
+//! parameters, and the per-backend capability/curve matrix ([`crate::hw::Arch`]).
+//!
+//! There are NO hardcoded machine constructors here: every [`Topology`] is
+//! instantiated from a data-driven description — a built-in catalog entry
+//! or a parsed `.topo` file — via [`crate::hw::catalog`] /
+//! [`crate::hw::TopoDesc::instantiate`]. The paper's 8×H100 testbed
+//! (NVLink/NVSwitch, 900 GB/s aggregate) is the catalog's `h100_node`
+//! entry.
 
 use crate::error::{Error, Result};
+use crate::hw::Arch;
 
 /// Rank index within the mesh.
 pub type Rank = usize;
@@ -15,7 +23,7 @@ pub type Rank = usize;
 pub enum LinkLevel {
     /// Same device (local copy; effectively SOL bandwidth).
     Local,
-    /// Intra-node NVLink/NVSwitch.
+    /// Intra-node NVLink/NVSwitch (or PCIe on archs without NVLink).
     IntraNode,
     /// Inter-node fabric (IB/RoCE).
     InterNode,
@@ -36,48 +44,25 @@ pub struct LinkSpec {
 pub struct Topology {
     pub world: usize,
     pub ranks_per_node: usize,
+    /// Same-device copies (SOL HBM bandwidth).
+    pub local: LinkSpec,
     pub intra: LinkSpec,
     pub inter: LinkSpec,
     /// SMs per device (H100 SXM: 132).
     pub sms_per_device: usize,
     /// Copy engines per device usable for P2P (H100: ~3 usable DMA engines).
     pub copy_engines_per_device: usize,
-    /// Per-SM dense f32-accumulate throughput, TFLOP/s (H100 bf16 tensor core
-    /// ≈ 990 TFLOPS / 132 SMs ≈ 7.5).
+    /// Per-SM dense f32-accumulate throughput, TFLOP/s (H100 bf16 tensor
+    /// core ≈ 990 TFLOPS / 132 SMs ≈ 7.5).
     pub sm_tflops: f64,
     /// Whether the switch supports in-network reduction (NVLS/SHARP).
     pub switch_reduce: bool,
+    /// Per-backend capability matrix + bandwidth curves for this machine
+    /// generation (the queryable store sim/codegen/autotune read).
+    pub arch: Arch,
 }
 
 impl Topology {
-    /// Single NVLink node of `world` H100s (the paper's testbed for world<=8).
-    pub fn h100_node(world: usize) -> Result<Self> {
-        if world == 0 {
-            return Err(Error::Schedule("world must be > 0".into()));
-        }
-        Ok(Topology {
-            world,
-            ranks_per_node: world,
-            // 900 GB/s aggregate bidirectional -> 450 GB/s per direction;
-            // a single P2P stream peaks near 400 GB/s on the copy engine
-            // (§2.3), the remainder is protocol overhead.
-            intra: LinkSpec { level: LinkLevel::IntraNode, bw_gbps: 400.0, lat_us: 1.5 },
-            inter: LinkSpec { level: LinkLevel::InterNode, bw_gbps: 50.0, lat_us: 5.0 },
-            sms_per_device: 132,
-            copy_engines_per_device: 3,
-            sm_tflops: 7.5,
-            switch_reduce: true,
-        })
-    }
-
-    /// Multi-node mesh: `nodes` × `ranks_per_node` H100s with IB between nodes.
-    pub fn h100_multinode(nodes: usize, ranks_per_node: usize) -> Result<Self> {
-        let mut t = Self::h100_node(ranks_per_node)?;
-        t.world = nodes * ranks_per_node;
-        t.ranks_per_node = ranks_per_node;
-        Ok(t)
-    }
-
     /// Node index of a rank.
     pub fn node_of(&self, r: Rank) -> usize {
         r / self.ranks_per_node
@@ -92,7 +77,7 @@ impl Topology {
             )));
         }
         if src == dst {
-            return Ok(LinkSpec { level: LinkLevel::Local, bw_gbps: 2000.0, lat_us: 0.2 });
+            return Ok(self.local);
         }
         if self.node_of(src) == self.node_of(dst) {
             Ok(self.intra)
@@ -124,32 +109,34 @@ impl Topology {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::catalog;
 
     #[test]
     fn single_node_links() {
-        let t = Topology::h100_node(8).unwrap();
+        let t = catalog::topology("h100_node", 8).unwrap();
         assert_eq!(t.world, 8);
         let l = t.link(0, 5).unwrap();
         assert_eq!(l.level, LinkLevel::IntraNode);
         assert!(l.bw_gbps > 100.0);
         assert_eq!(t.link(3, 3).unwrap().level, LinkLevel::Local);
+        assert_eq!(t.link(3, 3).unwrap(), t.local);
     }
 
     #[test]
     fn zero_world_rejected() {
-        assert!(Topology::h100_node(0).is_err());
+        assert!(catalog::topology("h100_node", 0).is_err());
     }
 
     #[test]
     fn rank_bounds_checked() {
-        let t = Topology::h100_node(4).unwrap();
+        let t = catalog::topology("h100_node", 4).unwrap();
         assert!(t.link(0, 4).is_err());
         assert!(t.link(9, 0).is_err());
     }
 
     #[test]
     fn multinode_levels() {
-        let t = Topology::h100_multinode(2, 4).unwrap();
+        let t = catalog::topology_nodes("h100_multinode", 2, 8).unwrap();
         assert_eq!(t.world, 8);
         assert_eq!(t.node_of(3), 0);
         assert_eq!(t.node_of(4), 1);
@@ -160,14 +147,14 @@ mod tests {
 
     #[test]
     fn node_peers() {
-        let t = Topology::h100_multinode(2, 4).unwrap();
+        let t = catalog::topology_nodes("h100_multinode", 2, 8).unwrap();
         assert_eq!(t.node_peers(1), vec![0, 2, 3]);
         assert_eq!(t.node_peers(5), vec![4, 6, 7]);
     }
 
     #[test]
     fn ring_order() {
-        let t = Topology::h100_node(4).unwrap();
+        let t = catalog::topology("h100_node", 4).unwrap();
         assert_eq!(t.ring_next(3), 0);
         assert_eq!(t.ring_prev(0), 3);
         // ring_next and ring_prev are inverses
@@ -178,7 +165,7 @@ mod tests {
 
     #[test]
     fn device_tflops_scale() {
-        let t = Topology::h100_node(8).unwrap();
+        let t = catalog::topology("h100_node", 8).unwrap();
         // H100 ballpark: ~990 TFLOPS
         assert!((t.device_tflops() - 990.0).abs() < 50.0);
     }

@@ -7,12 +7,11 @@ use std::path::Path;
 use syncopate::coordinator::service::{opkind_by_name, Coordinator, Request};
 use syncopate::coordinator::TuneConfig;
 use syncopate::kernel::annotations::parse_annotations_file;
-use syncopate::topo::Topology;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B, LLAMA3_8B};
 
 #[test]
 fn service_runs_the_operator_registry() {
-    let coord = Coordinator::spawn(Topology::h100_node(8).unwrap());
+    let coord = Coordinator::spawn(syncopate::hw::catalog::topology("h100_node", 8).unwrap());
     for name in ["ag-gemm", "gemm-rs", "gemm-ar"] {
         let kind = opkind_by_name(name).unwrap();
         let op = OperatorInstance::gemm(kind, &LLAMA3_8B, 8192, 8);
@@ -33,7 +32,7 @@ fn service_runs_the_operator_registry() {
 
 #[test]
 fn plan_cache_hits_on_repeat_requests() {
-    let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+    let coord = Coordinator::spawn(syncopate::hw::catalog::topology("h100_node", 4).unwrap());
     let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 4);
     let a = coord.run(op, TuneConfig::default()).unwrap();
     let b = coord.run(op, TuneConfig::default()).unwrap();
@@ -52,7 +51,7 @@ fn user_plan_serves_shipped_corpus_through_cached_path() {
     use syncopate::exec::ExecOptions;
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/plans/hetero_fig4e_2x2.sched");
     let text = std::fs::read_to_string(&path).unwrap();
-    let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), 2);
+    let coord = Coordinator::spawn_pool(syncopate::hw::catalog::topology("h100_node", 4).unwrap(), 2);
     let cold = coord.run_user_plan(&text, ExecOptions::parallel()).unwrap();
     assert!(!cold.cache_hit);
     assert_eq!(cold.world, 4);
@@ -68,7 +67,7 @@ fn user_plan_serves_shipped_corpus_through_cached_path() {
 
 #[test]
 fn pipelined_submissions_all_answer() {
-    let coord = Coordinator::spawn(Topology::h100_node(8).unwrap());
+    let coord = Coordinator::spawn(syncopate::hw::catalog::topology("h100_node", 8).unwrap());
     let mut rxs = Vec::new();
     for tokens in [2048usize, 4096, 8192] {
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, tokens, 8);
@@ -112,7 +111,7 @@ fn pool_stress_concurrent_clients_cache_accounting_consistent() {
     use std::sync::Mutex;
 
     let workers = 4usize;
-    let coord = Coordinator::spawn_pool(Topology::h100_node(4).unwrap(), workers);
+    let coord = Coordinator::spawn_pool(syncopate::hw::catalog::topology("h100_node", 4).unwrap(), workers);
     let tokens_keys = [2048usize, 4096, 8192, 16384];
     let results: Mutex<Vec<(usize, bool, f64)>> = Mutex::new(Vec::new());
 
@@ -156,7 +155,7 @@ fn pool_stress_concurrent_clients_cache_accounting_consistent() {
 
 #[test]
 fn errors_surface_through_the_service() {
-    let coord = Coordinator::spawn(Topology::h100_node(4).unwrap());
+    let coord = Coordinator::spawn(syncopate::hw::catalog::topology("h100_node", 4).unwrap());
     // reduce on the default copy-engine realization is infeasible
     let op = OperatorInstance::gemm(OpKind::GemmRs, &LLAMA3_8B, 8192, 4);
     let e = coord.run(op, TuneConfig::default()).unwrap_err();

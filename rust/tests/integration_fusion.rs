@@ -17,7 +17,6 @@ use syncopate::plan_io::{content_hash, parse_schedule, print_schedule, registry}
 use syncopate::reports;
 use syncopate::runtime::Runtime;
 use syncopate::schedule::validate::validate;
-use syncopate::topo::Topology;
 use syncopate::Result;
 
 fn rt() -> Runtime {
@@ -85,7 +84,7 @@ fn fused_plans_serve_and_cache_by_content_hash() {
     // hits/misses keyed by the canonical-form content hash, including the
     // two-formats-one-entry property PR 2 established for user plans.
     let world = 2usize;
-    let coord = Coordinator::spawn_pool(Topology::h100_node(world).unwrap(), 2);
+    let coord = Coordinator::spawn_pool(syncopate::hw::catalog::topology("h100_node", world).unwrap(), 2);
     let opts = ExecOptions::sequential();
 
     let text = print_schedule(&registry::build("tp-block", world).unwrap()).unwrap();

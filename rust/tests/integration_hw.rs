@@ -1,0 +1,140 @@
+//! Hardware-model integration (ISSUE 4 acceptance):
+//!
+//! * catalog-wide sweep — every registry exec case builds, validates, and
+//!   simulates on every catalog topology at worlds 2/4/8;
+//! * both exec engines stay bit-identical on a non-H100 topology, and
+//!   real-numerics verification passes off-H100;
+//! * the shipped `examples/topos/*.topo` files stay in sync with the
+//!   built-in catalog and round-trip (the same checks `topo lint` runs in
+//!   CI);
+//! * topology fingerprints distinguish every catalog shape and world size.
+
+use std::path::PathBuf;
+
+use syncopate::coordinator::execases::{self, run_and_verify, AgVariant, CaseParams};
+use syncopate::hw::{catalog, fingerprint, parse_desc, print_desc};
+use syncopate::runtime::Runtime;
+use syncopate::schedule::validate::validate;
+use syncopate::sim::engine::{simulate, SimParams};
+
+fn topos_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/topos")
+}
+
+#[test]
+fn every_case_builds_validates_and_simulates_on_every_catalog_topology() {
+    for name in catalog::names() {
+        for world in [2usize, 4, 8] {
+            for spec in execases::CASES {
+                let tag = format!("{} on {name} @ world {world}", spec.name);
+                let p = CaseParams {
+                    world,
+                    topo: name.to_string(),
+                    ..Default::default()
+                };
+                let case = spec.build(&p).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                validate(&case.sched).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                let r = simulate(&case.plan, &case.topo, SimParams::default())
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert!(r.makespan_us > 0.0, "{tag}: zero makespan");
+            }
+        }
+    }
+}
+
+#[test]
+fn exec_engines_bit_identical_on_non_h100_topology() {
+    // DESIGN.md §6 cross-mode equivalence, off the reference machine: the
+    // backend matrix changes timing, never numerics.
+    let rt = Runtime::open_default().expect("host-ref fallback cannot fail");
+    let a100 = catalog::topology("a100_node", 4).unwrap();
+    execases::verify_modes_bit_identical(
+        &|| execases::ag_gemm_variant_on(&a100, 2, 42, AgVariant::PullSwizzle),
+        &rt,
+    )
+    .unwrap();
+    execases::verify_modes_bit_identical(&|| execases::gemm_ar_on(&a100, 7), &rt).unwrap();
+}
+
+#[test]
+fn exec_cases_verify_on_every_non_h100_catalog_topology() {
+    let rt = Runtime::open_default().expect("host-ref fallback cannot fail");
+    for name in ["a100_node", "b200_node", "mixed_multinode"] {
+        let p = CaseParams { world: 2, topo: name.to_string(), ..Default::default() };
+        let case = execases::build_case("ag-gemm", &p).unwrap();
+        let case_name = case.name.clone();
+        run_and_verify(case, &rt).unwrap_or_else(|e| panic!("{case_name} on {name}: {e}"));
+    }
+}
+
+#[test]
+fn shipped_topo_files_match_builtin_catalog() {
+    let dir = topos_dir();
+    for name in catalog::names() {
+        let path = dir.join(format!("{name}.topo"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let parsed = parse_desc(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let builtin = catalog::desc(name).unwrap();
+        assert_eq!(parsed, builtin, "{name}: shipped .topo drifted from the builtin");
+        // lint-grade checks: canonical reprint round-trips bit-stably
+        let canon = print_desc(&parsed);
+        assert_eq!(parse_desc(&canon).unwrap(), parsed, "{name}: round trip");
+        assert_eq!(print_desc(&parse_desc(&canon).unwrap()), canon, "{name}: reprint");
+    }
+}
+
+#[test]
+fn fingerprints_distinguish_catalog_shapes_and_worlds() {
+    let mut seen = std::collections::HashMap::new();
+    for name in catalog::names() {
+        for world in [2usize, 4, 8] {
+            let fp = fingerprint(&catalog::topology(name, world).unwrap());
+            if let Some(prev) = seen.insert(fp.clone(), format!("{name}@{world}")) {
+                panic!("fingerprint collision: {prev} vs {name}@{world} ({fp})");
+            }
+        }
+    }
+    // deterministic across instantiations
+    assert_eq!(
+        fingerprint(&catalog::topology("b200_node", 4).unwrap()),
+        fingerprint(&catalog::topology("b200_node", 4).unwrap())
+    );
+}
+
+#[test]
+fn hier_case_splits_single_node_descs_across_nodes() {
+    // ag-gemm-hier keeps its historical 2-node H100 shape on the default
+    // topo; a single-node description is split across --nodes with its OWN
+    // device/links; a multinode description's node structure wins outright.
+    let def = execases::build_case("ag-gemm-hier", &CaseParams::default()).unwrap();
+    assert_eq!(def.topo.ranks_per_node, 2, "default: 4 ranks over 2 nodes");
+    assert_eq!(def.topo.sms_per_device, 132);
+    let p = CaseParams { topo: "b200_node".to_string(), ..Default::default() };
+    let b200 = execases::build_case("ag-gemm-hier", &p).unwrap();
+    assert_eq!(b200.topo.ranks_per_node, 2, "--nodes 2 splits the b200 description");
+    assert_eq!(b200.topo.sms_per_device, 148, "the named device params still apply");
+    simulate(&b200.plan, &b200.topo, SimParams::default()).unwrap();
+    let p = CaseParams { topo: "mixed_multinode".to_string(), nodes: 4, ..Default::default() };
+    let mixed = execases::build_case("ag-gemm-hier", &p).unwrap();
+    assert_eq!(mixed.topo.ranks_per_node, 2, "multinode desc ignores --nodes");
+}
+
+#[test]
+fn topo_file_paths_work_end_to_end_as_case_topologies() {
+    // a .topo FILE (not a catalog name) drives an exec case: write one
+    // out, point CaseParams at the path, run with real numerics
+    let d = catalog::desc("a100_node").unwrap();
+    let path = std::env::temp_dir().join("syncopate_integration_hw.topo");
+    std::fs::write(&path, print_desc(&d)).unwrap();
+    let p = CaseParams {
+        world: 2,
+        topo: path.to_str().unwrap().to_string(),
+        ..Default::default()
+    };
+    let case = execases::build_case("gemm-rs", &p).unwrap();
+    assert_eq!(case.topo.sms_per_device, 108, "the file's device params must apply");
+    let rt = Runtime::open_default().unwrap();
+    run_and_verify(case, &rt).unwrap();
+    let _ = std::fs::remove_file(&path);
+}

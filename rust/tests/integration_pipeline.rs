@@ -9,7 +9,6 @@ use syncopate::coordinator::operators::{compile_operator, compile_operator_barri
 use syncopate::coordinator::TuneConfig;
 use syncopate::reports;
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::workload::{fig8_suite, fig9_suite, OpKind, OperatorInstance, LLAMA3_70B, LLAMA3_8B};
 
 fn cfg_for(kind: OpKind) -> TuneConfig {
@@ -25,7 +24,7 @@ fn cfg_for(kind: OpKind) -> TuneConfig {
 #[test]
 fn whole_fig8_suite_compiles_and_simulates() {
     for op in fig8_suite() {
-        let topo = Topology::h100_node(op.world).unwrap();
+        let topo = syncopate::hw::catalog::topology("h100_node", op.world).unwrap();
         let cfg = cfg_for(op.kind);
         let (plan, params) =
             compile_operator(&op, &cfg, &topo).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
@@ -37,7 +36,7 @@ fn whole_fig8_suite_compiles_and_simulates() {
 #[test]
 fn whole_fig9_suite_compiles_and_simulates() {
     for op in fig9_suite() {
-        let topo = Topology::h100_node(op.world).unwrap();
+        let topo = syncopate::hw::catalog::topology("h100_node", op.world).unwrap();
         let cfg = TuneConfig { split: 1, ..TuneConfig::default() };
         let (plan, params) =
             compile_operator(&op, &cfg, &topo).unwrap_or_else(|e| panic!("{}: {e}", op.label()));
@@ -55,7 +54,7 @@ fn every_baseline_covers_every_supported_operator() {
         OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 8192, 8),
         OperatorInstance::attention(OpKind::AttnHp, &LLAMA3_8B, 8192, 8),
     ];
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     for op in ops {
         for b in Baseline::ALL {
             if !b.supports(&op) {
@@ -72,7 +71,7 @@ fn every_baseline_covers_every_supported_operator() {
 #[test]
 fn tuned_beats_or_matches_every_automatic_baseline() {
     // the paper's core claim at operator level
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     for op in [
         OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8),
         OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 8),
@@ -96,7 +95,7 @@ fn tuned_beats_or_matches_every_automatic_baseline() {
 
 #[test]
 fn minimal_sync_never_loses_to_barrier() {
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     for op in [
         OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_70B, 8192, 8),
         OperatorInstance::attention(OpKind::RingAttn, &LLAMA3_8B, 16384, 8),
@@ -113,7 +112,7 @@ fn minimal_sync_never_loses_to_barrier() {
 
 #[test]
 fn simulation_is_deterministic_across_runs() {
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     let op = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 8);
     let cfg = cfg_for(op.kind);
     let (plan, params) = compile_operator(&op, &cfg, &topo).unwrap();
@@ -125,7 +124,7 @@ fn simulation_is_deterministic_across_runs() {
 
 #[test]
 fn multinode_topology_end_to_end() {
-    let topo = Topology::h100_multinode(2, 4).unwrap();
+    let topo = syncopate::hw::catalog::topology_nodes("h100_multinode", 2, 8).unwrap();
     let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 8192, 8);
     let cfg = TuneConfig {
         real: Realization::new(BackendKind::LdStSpecialized, 32),
@@ -134,7 +133,7 @@ fn multinode_topology_end_to_end() {
     let (plan, params) = compile_operator(&op, &cfg, &topo).unwrap();
     let multi = simulate(&plan, &topo, params).unwrap();
     // same operator on a single 8-GPU node is faster (no IB hops)
-    let topo1 = Topology::h100_node(8).unwrap();
+    let topo1 = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     let (plan1, params1) = compile_operator(&op, &cfg, &topo1).unwrap();
     let single = simulate(&plan1, &topo1, params1).unwrap();
     assert!(multi.makespan_us > single.makespan_us);
@@ -169,7 +168,7 @@ fn fig10_integration_improves_on_native() {
 
 #[test]
 fn split_sweep_has_interior_optimum_for_ar() {
-    let topo = Topology::h100_node(8).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 8).unwrap();
     let op = OperatorInstance::gemm(OpKind::GemmAr, &LLAMA3_70B, 8192, 8);
     let mut times = Vec::new();
     for split in [1usize, 2, 4, 8, 16] {

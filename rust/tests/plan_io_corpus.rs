@@ -17,7 +17,6 @@ use syncopate::exec::{run_with, BufferStore, ExecOptions};
 use syncopate::plan_io::{parse_schedule, print_schedule, registry};
 use syncopate::runtime::Runtime;
 use syncopate::schedule::validate::validate;
-use syncopate::topo::Topology;
 
 #[test]
 fn every_source_roundtrips_at_worlds_2_4_8() {
@@ -116,7 +115,7 @@ fn dsl_only_schedule_executes_bit_identically_in_both_engines() {
     let text = std::fs::read_to_string(corpus_dir().join("hetero_fig4e_2x2.sched")).unwrap();
     let sched = parse_schedule(&text).unwrap();
     validate(&sched).unwrap();
-    let topo = Topology::h100_multinode(2, 2).unwrap();
+    let topo = syncopate::hw::catalog::topology_nodes("h100_multinode", 2, 4).unwrap();
     let real = syncopate::autotune::tune_user_plan(&sched, &topo).unwrap().real;
     let plan = compile_comm_only(&sched, real, &topo).unwrap();
     let rt = Runtime::host_reference();

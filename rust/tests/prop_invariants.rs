@@ -18,7 +18,6 @@ use syncopate::runtime::Runtime;
 use syncopate::schedule::validate::{check_covers, topo_order, validate};
 use syncopate::schedule::{CommOp, CommSchedule, Dep, TransferKind};
 use syncopate::sim::engine::simulate;
-use syncopate::topo::Topology;
 use syncopate::util::Rng;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_8B};
 
@@ -214,7 +213,7 @@ fn prop_swizzle_is_permutation() {
 /// (same plan shape, larger tensors == no faster).
 #[test]
 fn prop_sim_monotone_in_bytes() {
-    let topo = Topology::h100_node(4).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 4).unwrap();
     let mut prev = 0.0;
     for tokens in [2048usize, 4096, 8192, 16384] {
         let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, tokens, 4);
@@ -252,7 +251,7 @@ fn prop_exec_numerics_random_configs() {
 #[test]
 fn prop_autotune_respects_feasibility() {
     let mut rng = Rng::new(0xFEA5);
-    let topo = Topology::h100_node(4).unwrap();
+    let topo = syncopate::hw::catalog::topology("h100_node", 4).unwrap();
     for _ in 0..6 {
         let kind = [OpKind::AgGemm, OpKind::GemmRs, OpKind::GemmAr][rng.below(3)];
         let tokens = (rng.below(3) + 1) * 4096;
