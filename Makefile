@@ -1,6 +1,6 @@
 # Build-time artifact pipeline + convenience wrappers.
 
-.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos
+.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke
 
 # AOT-lower every L2 entry point to HLO text + manifest (needs jax).
 artifacts:
@@ -31,6 +31,14 @@ lint-plans:
 # instantiate).
 lint-topos:
 	cd rust && cargo run --release -- topo lint ../examples/topos/*.topo
+
+# The sim<->execution loop end to end: trace a case, analyze the overlap,
+# calibrate a .topo from the measurements, lint + run on it (DESIGN.md §14).
+trace-smoke:
+	cd rust && cargo run --release -- exec --case tp-block --world 2 --trace /tmp/syncopate_trace.json
+	cd rust && cargo run --release -- trace overlap /tmp/syncopate_trace.json
+	cd rust && cargo run --release -- calibrate --from /tmp/syncopate_trace.json --topo h100_node -o /tmp/syncopate_cal.topo
+	cd rust && cargo run --release -- topo lint /tmp/syncopate_cal.topo
 
 fmt:
 	cd rust && cargo fmt --check

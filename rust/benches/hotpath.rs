@@ -18,7 +18,7 @@ use syncopate::autotune::{self, Budget};
 use syncopate::coordinator::execases;
 use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::TuneConfig;
-use syncopate::exec::{prepare, run_prepared, ExecOptions};
+use syncopate::exec::{prepare, run_prepared, run_prepared_traced, ExecOptions};
 use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
@@ -147,6 +147,33 @@ fn main() {
             per_mode[0] * 1e3,
             per_mode[1] * 1e3
         );
+    }
+
+    // -- tracing overhead: trace-off vs trace-on on the same prepared plan.
+    // Trace-off IS the pre-tracing hot path (run_prepared carries a None
+    // sink internally: one dead branch per op) — the acceptance bar is
+    // that these two "off" rows match the historical numbers, with the
+    // "on" rows quantifying what capture costs when explicitly requested.
+    println!("\n== exec tracing: off (production path) vs on (capture) ==");
+    {
+        let case = execases::ag_gemm(4, 2, 7).unwrap();
+        let prep = prepare(&case.plan, &case.sched.tensors).unwrap();
+        for (mode_label, opts) in
+            [("sequential", ExecOptions::sequential()), ("parallel", ExecOptions::parallel())]
+        {
+            let off = res.bench(&format!("exec ag-gemm w4 s2 {mode_label} trace-off"), 5, || {
+                let _ = run_prepared(&prep, &case.store, &rt, &opts).unwrap();
+            });
+            let on = res.bench(&format!("exec ag-gemm w4 s2 {mode_label} trace-on"), 5, || {
+                let _ = run_prepared_traced(&prep, &case.store, &rt, &opts).unwrap();
+            });
+            println!(
+                "  {mode_label}: tracing overhead {:+.1}% (off {:.3} ms, on {:.3} ms)",
+                (on / off - 1.0) * 100.0,
+                off * 1e3,
+                on * 1e3
+            );
+        }
     }
 
     res.write();

@@ -252,18 +252,48 @@ pub fn tune_user_plan(
 // ---------------------------------------------------------------------------
 // Tuned-configuration persistence: tune once, reuse across processes.
 // TSV format (one row per entry):
-//   operator label \t topology fingerprint \t config label \t makespan \t tflops
+//   operator \t topology fingerprint \t config \t makespan \t tflops \t source
 // The fingerprint (hw::fingerprint: structural hash of world, links, device
 // and the backend matrix) is part of the KEY: a cache persisted on one
 // machine shape can never serve stale knobs on another — tuned splits and
 // backends are only optimal for the curves they were scored on.
+// `source` records where the time came from — `modeled` (simulator) or
+// `measured` (a traced execution); measured entries outrank modeled ones.
+// Five-column files from before the source column parse as `modeled`.
 // (The offline build has no serde; labels round-trip as plain text.)
 // ---------------------------------------------------------------------------
+
+/// Where a cached time came from: the calibrated model, or an actual
+/// traced execution. Measured beats modeled — a modeled insert never
+/// overwrites a measured entry for the same key, while a measured insert
+/// overwrites anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeSource {
+    Modeled,
+    Measured,
+}
+
+impl TimeSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            TimeSource::Modeled => "modeled",
+            TimeSource::Measured => "measured",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<TimeSource> {
+        match s {
+            "modeled" => Some(TimeSource::Modeled),
+            "measured" => Some(TimeSource::Measured),
+            _ => None,
+        }
+    }
+}
 
 /// On-disk tuning cache, keyed by (operator label, topology fingerprint).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TuneCache {
-    entries: Vec<(String, String, String, f64, f64)>,
+    entries: Vec<(String, String, String, f64, f64, TimeSource)>,
 }
 
 impl TuneCache {
@@ -286,8 +316,8 @@ impl TuneCache {
         )
     }
 
-    /// Label-level insert for callers with non-registry labels; the same
-    /// structural-character validation applies.
+    /// Label-level insert of a MODELED time for callers with non-registry
+    /// labels; the same structural-character validation applies.
     pub fn insert_raw(
         &mut self,
         op_label: &str,
@@ -295,6 +325,31 @@ impl TuneCache {
         cfg_label: &str,
         m: f64,
         t: f64,
+    ) -> Result<()> {
+        self.insert_with_source(op_label, topo_fp, cfg_label, m, t, TimeSource::Modeled)
+    }
+
+    /// Record a MEASURED time (from a traced execution). Overwrites any
+    /// existing entry for the key.
+    pub fn insert_measured_raw(
+        &mut self,
+        op_label: &str,
+        topo_fp: &str,
+        cfg_label: &str,
+        m: f64,
+        t: f64,
+    ) -> Result<()> {
+        self.insert_with_source(op_label, topo_fp, cfg_label, m, t, TimeSource::Measured)
+    }
+
+    fn insert_with_source(
+        &mut self,
+        op_label: &str,
+        topo_fp: &str,
+        cfg_label: &str,
+        m: f64,
+        t: f64,
+        source: TimeSource,
     ) -> Result<()> {
         for (what, s) in [
             ("operator label", op_label),
@@ -308,6 +363,14 @@ impl TuneCache {
                 )));
             }
         }
+        // measured wins: a modeled time never displaces a measured one
+        if source == TimeSource::Modeled
+            && self.entries.iter().any(|(l, fp, _, _, _, s)| {
+                l == op_label && fp == topo_fp && *s == TimeSource::Measured
+            })
+        {
+            return Ok(());
+        }
         self.entries.retain(|(l, fp, ..)| !(l == op_label && fp == topo_fp));
         self.entries.push((
             op_label.to_string(),
@@ -315,6 +378,7 @@ impl TuneCache {
             cfg_label.to_string(),
             m,
             t,
+            source,
         ));
         Ok(())
     }
@@ -322,11 +386,20 @@ impl TuneCache {
     /// Look up a cached config label for an operator ON THIS topology;
     /// entries tuned for any other machine shape never match.
     pub fn get(&self, op: &OperatorInstance, topo: &Topology) -> Option<(&str, f64, f64)> {
+        self.get_with_source(op, topo).map(|(c, m, t, _)| (c, m, t))
+    }
+
+    /// [`TuneCache::get`] + where the time came from.
+    pub fn get_with_source(
+        &self,
+        op: &OperatorInstance,
+        topo: &Topology,
+    ) -> Option<(&str, f64, f64, TimeSource)> {
         let fp = crate::hw::fingerprint(topo);
         self.entries
             .iter()
             .find(|(l, f, ..)| l == &op.label() && f == &fp)
-            .map(|(_, _, c, m, t)| (c.as_str(), *m, *t))
+            .map(|(_, _, c, m, t, s)| (c.as_str(), *m, *t, *s))
     }
 
     pub fn len(&self) -> usize {
@@ -339,14 +412,14 @@ impl TuneCache {
     /// Serialize to TSV.
     pub fn to_tsv(&self) -> String {
         let mut out = String::new();
-        for (op, fp, cfg, m, t) in &self.entries {
+        for (op, fp, cfg, m, t, s) in &self.entries {
             // `{}` prints the shortest representation that round-trips f64
-            out.push_str(&format!("{op}\t{fp}\t{cfg}\t{m}\t{t}\n"));
+            out.push_str(&format!("{op}\t{fp}\t{cfg}\t{m}\t{t}\t{}\n", s.name()));
         }
         out
     }
 
-    /// Parse from TSV.
+    /// Parse from TSV (5 legacy columns = modeled, 6 with a source tag).
     pub fn from_tsv(text: &str) -> Result<Self> {
         let mut entries = Vec::new();
         for (i, line) in text.lines().enumerate() {
@@ -354,20 +427,40 @@ impl TuneCache {
                 continue;
             }
             // splitn keeps any surplus tabs inside the last fragment, where
-            // the float parse rejects them — a line can never contribute
+            // the tag/float parse rejects them — a line can never contribute
             // more than one entry however mangled its labels are
-            let cols: Vec<&str> = line.splitn(5, '\t').collect();
-            if cols.len() != 5 || cols[4].contains('\t') {
+            let cols: Vec<&str> = line.splitn(6, '\t').collect();
+            if cols.len() < 5 {
                 return Err(Error::Autotune(format!(
-                    "cache line {}: need exactly 5 tab-separated cols \
-                     (op, topo-fingerprint, config, makespan, tflops)",
+                    "cache line {}: need 5 or 6 tab-separated cols \
+                     (op, topo-fingerprint, config, makespan, tflops[, source])",
                     i + 1
                 )));
             }
             let m: f64 = cols[3]
                 .parse()
                 .map_err(|_| Error::Autotune(format!("cache line {}: bad makespan", i + 1)))?;
-            let t: f64 = cols[4]
+            let t_col = cols[4];
+            let (t_str, source) = if cols.len() == 6 {
+                let src = TimeSource::by_name(cols[5]).ok_or_else(|| {
+                    Error::Autotune(format!(
+                        "cache line {}: unknown source `{}` (modeled|measured)",
+                        i + 1,
+                        cols[5]
+                    ))
+                })?;
+                (t_col, src)
+            } else {
+                // legacy 5-column row: modeled (predates the source column)
+                if t_col.contains('\t') {
+                    return Err(Error::Autotune(format!(
+                        "cache line {}: need 5 or 6 tab-separated cols",
+                        i + 1
+                    )));
+                }
+                (t_col, TimeSource::Modeled)
+            };
+            let t: f64 = t_str
                 .parse()
                 .map_err(|_| Error::Autotune(format!("cache line {}: bad tflops", i + 1)))?;
             entries.push((
@@ -376,6 +469,7 @@ impl TuneCache {
                 cols[2].to_string(),
                 m,
                 t,
+                source,
             ));
         }
         Ok(TuneCache { entries })
@@ -567,6 +661,36 @@ mod tests {
         assert!(c.is_empty(), "rejected inserts must not partially apply");
         // a mangled file can never smuggle extra columns into an entry
         assert!(TuneCache::from_tsv("a\tfp\tb\t1.0\t2.0\textra\n").is_err());
+    }
+
+    #[test]
+    fn measured_times_outrank_modeled_ones() {
+        // ISSUE 5 satellite: the cache accepts measured (traced-execution)
+        // times next to modeled ones; measured wins on conflict and the
+        // source tag survives the TSV round trip.
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let t4 = topo();
+        let fp = crate::hw::fingerprint(&t4);
+        let mut c = TuneCache::default();
+        c.insert_raw(&op.label(), &fp, "cfg-a", 100.0, 1.0).unwrap();
+        assert_eq!(c.get_with_source(&op, &t4).unwrap().3, TimeSource::Modeled);
+        // measured overwrites modeled
+        c.insert_measured_raw(&op.label(), &fp, "cfg-a", 250.0, 0.4).unwrap();
+        let (_, m, _, s) = c.get_with_source(&op, &t4).unwrap();
+        assert_eq!((m, s), (250.0, TimeSource::Measured));
+        assert_eq!(c.len(), 1);
+        // a later modeled insert silently yields to the measurement
+        c.insert_raw(&op.label(), &fp, "cfg-b", 90.0, 1.1).unwrap();
+        let (cfg, m, _, s) = c.get_with_source(&op, &t4).unwrap();
+        assert_eq!((cfg, m, s), ("cfg-a", 250.0, TimeSource::Measured));
+        // round trip keeps the tag; legacy 5-col rows read as modeled
+        let reloaded = TuneCache::from_tsv(&c.to_tsv()).unwrap();
+        assert_eq!(c, reloaded);
+        assert!(reloaded.to_tsv().contains("\tmeasured\n"));
+        let legacy = TuneCache::from_tsv(&format!("{}\t{fp}\tcfg\t1.5\t2.5\n", op.label())).unwrap();
+        assert_eq!(legacy.get_with_source(&op, &t4).unwrap().3, TimeSource::Modeled);
+        // unknown tags rejected
+        assert!(TuneCache::from_tsv("a\tfp\tb\t1.0\t2.0\tguessed\n").is_err());
     }
 
     #[test]

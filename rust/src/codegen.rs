@@ -131,6 +131,40 @@ impl ComputeSeg {
     }
 }
 
+impl CallSpec {
+    /// Artifact label of this call ("add_rows" for the artifact-free
+    /// host-side combine) — the kernel-span name in execution traces.
+    pub fn artifact_name(&self) -> &str {
+        match self {
+            CallSpec::GemmRows { artifact, .. }
+            | CallSpec::AttnStep { artifact, .. }
+            | CallSpec::AttnFinalize { artifact, .. }
+            | CallSpec::FfnShard { artifact, .. } => artifact,
+            CallSpec::AddRows { .. } => "add_rows",
+        }
+    }
+}
+
+impl PlanOp {
+    /// One-line human form for stuck-op reports (the full `Debug` form
+    /// dumps whole chunk regions — far too loud for an error message).
+    pub fn brief(&self) -> String {
+        match self {
+            PlanOp::Compute(seg) => {
+                format!("Compute({} tiles, {} calls)", seg.tiles.len(), seg.calls.len())
+            }
+            PlanOp::Issue(d) => {
+                format!(
+                    "Issue(sig {}, {}->{}, deps {:?})",
+                    d.signal, d.src_rank, d.dst_rank, d.dep_signals
+                )
+            }
+            PlanOp::Wait(sig) => format!("Wait(sig {sig})"),
+            PlanOp::Overhead { label, .. } => format!("Overhead({label})"),
+        }
+    }
+}
+
 /// A rank's complete fused-kernel body.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RankProgram {

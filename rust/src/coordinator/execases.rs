@@ -69,6 +69,26 @@ pub fn run_and_verify_with(
     Ok(stats)
 }
 
+/// [`run_and_verify_with`] + chunk-level tracing. The returned
+/// [`crate::trace::Trace`] is stamped with the case topology's
+/// [`crate::hw::fingerprint`] (calibration's cross-machine guard) and the
+/// case name/world — everything `calibrate --from` needs to rebuild and
+/// re-simulate the traced plan.
+pub fn run_and_verify_traced(
+    case: ExecCase,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+) -> Result<(ExecStats, crate::trace::Trace)> {
+    let (stats, mut trace) =
+        crate::exec::run_with_traced(&case.plan, &case.sched.tensors, &case.store, runtime, opts)?;
+    verify_checks(&case.name, "", &case.store, &case.checks)?;
+    trace.fingerprint = crate::hw::fingerprint(&case.topo);
+    trace.set_meta("case", &case.name);
+    trace.set_meta("world", &case.topo.world.to_string());
+    trace.set_meta("engine", &format!("{:?}", opts.mode));
+    Ok((stats, trace))
+}
+
 /// Assert every expected-value check against the post-run store; `tag`
 /// distinguishes which engine produced the state in error messages.
 fn verify_checks(name: &str, tag: &str, store: &BufferStore, checks: &[Check]) -> Result<()> {

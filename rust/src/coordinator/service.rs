@@ -68,6 +68,9 @@ pub struct UserPlanResponse {
     pub stats: ExecStats,
     /// True when the compiled plan came from the coordinator's cache.
     pub cache_hit: bool,
+    /// Measured per-request overlap summary, when the request asked for a
+    /// traced execution ([`CoordinatorClient::run_user_plan_traced`]).
+    pub trace: Option<crate::trace::TraceStats>,
 }
 
 /// Simulation outcome returned to the caller.
@@ -83,7 +86,8 @@ pub struct Response {
 
 enum Envelope {
     Req(Request, mpsc::Sender<Result<Response>>),
-    UserPlan(String, ExecOptions, mpsc::Sender<Result<UserPlanResponse>>),
+    /// (plan text, exec options, trace this execution?)
+    UserPlan(String, ExecOptions, bool, mpsc::Sender<Result<UserPlanResponse>>),
     Shutdown,
 }
 
@@ -137,9 +141,29 @@ impl CoordinatorClient {
         text: &str,
         opts: ExecOptions,
     ) -> Result<mpsc::Receiver<Result<UserPlanResponse>>> {
+        self.submit_user_plan_opts(text, opts, false)
+    }
+
+    /// [`CoordinatorClient::submit_user_plan`] with per-request tracing:
+    /// the execution runs over a trace sink and the response carries the
+    /// measured overlap summary ([`crate::trace::TraceStats`]).
+    pub fn submit_user_plan_traced(
+        &self,
+        text: &str,
+        opts: ExecOptions,
+    ) -> Result<mpsc::Receiver<Result<UserPlanResponse>>> {
+        self.submit_user_plan_opts(text, opts, true)
+    }
+
+    fn submit_user_plan_opts(
+        &self,
+        text: &str,
+        opts: ExecOptions,
+        traced: bool,
+    ) -> Result<mpsc::Receiver<Result<UserPlanResponse>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Envelope::UserPlan(text.to_string(), opts, rtx))
+            .send(Envelope::UserPlan(text.to_string(), opts, traced, rtx))
             .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
         Ok(rrx)
     }
@@ -147,6 +171,14 @@ impl CoordinatorClient {
     /// Convenience: submit a user plan and block for the outcome.
     pub fn run_user_plan(&self, text: &str, opts: ExecOptions) -> Result<UserPlanResponse> {
         self.submit_user_plan(text, opts)?
+            .recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
+    }
+
+    /// Convenience: traced submit + block (see
+    /// [`CoordinatorClient::submit_user_plan_traced`]).
+    pub fn run_user_plan_traced(&self, text: &str, opts: ExecOptions) -> Result<UserPlanResponse> {
+        self.submit_user_plan_traced(text, opts)?
             .recv()
             .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
     }
@@ -202,6 +234,11 @@ impl Coordinator {
     pub fn run_user_plan(&self, text: &str, opts: ExecOptions) -> Result<UserPlanResponse> {
         self.client().run_user_plan(text, opts)
     }
+
+    /// Traced serving (see [`CoordinatorClient::run_user_plan_traced`]).
+    pub fn run_user_plan_traced(&self, text: &str, opts: ExecOptions) -> Result<UserPlanResponse> {
+        self.client().run_user_plan_traced(text, opts)
+    }
 }
 
 impl Drop for Coordinator {
@@ -225,8 +262,8 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<
         let Ok(env) = env else { break };
         match env {
             Envelope::Shutdown => break,
-            Envelope::UserPlan(text, opts, reply) => {
-                let resp = serve_user_plan(&text, &opts, topo, cache, &mut runtime);
+            Envelope::UserPlan(text, opts, traced, reply) => {
+                let resp = serve_user_plan(&text, &opts, traced, topo, cache, &mut runtime);
                 let _ = reply.send(resp);
             }
             Envelope::Req(Request::Run { op, cfg }, reply) => {
@@ -267,6 +304,7 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<
 fn serve_user_plan(
     text: &str,
     opts: &crate::exec::ExecOptions,
+    traced: bool,
     topo: &Topology,
     cache: &RwLock<PlanCache>,
     runtime: &mut Option<Runtime>,
@@ -318,7 +356,13 @@ fn serve_user_plan(
     }
     let rt = runtime.as_ref().expect("just initialized");
     let store = seeded_store(&sched)?;
-    let stats = crate::exec::run_with(&plan, &sched.tensors, &store, rt, opts)?;
+    let (stats, trace_stats) = if traced {
+        let (stats, trace) =
+            crate::exec::run_with_traced(&plan, &sched.tensors, &store, rt, opts)?;
+        (stats, Some(crate::trace::analyze(&trace).stats()))
+    } else {
+        (crate::exec::run_with(&plan, &sched.tensors, &store, rt, opts)?, None)
+    };
     Ok(UserPlanResponse {
         hash,
         world: sched.world,
@@ -327,6 +371,7 @@ fn serve_user_plan(
         sim_makespan_us,
         stats,
         cache_hit,
+        trace: trace_stats,
     })
 }
 
@@ -454,6 +499,25 @@ mod tests {
         let r3 = coord.run_user_plan(text, ExecOptions::parallel()).unwrap();
         assert!(r3.cache_hit);
         assert_eq!(r3.stats.transfers, 2);
+        // untraced requests carry no trace summary
+        assert!(r3.trace.is_none());
+    }
+
+    #[test]
+    fn traced_requests_carry_overlap_stats() {
+        let coord =
+            Coordinator::spawn_pool(crate::hw::catalog::topology("h100_node", 2).unwrap(), 2);
+        let text = "plan v1 world 2\n\
+                    tensor x f32 4x16\n\
+                    rank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n\
+                    rank 1:\n  push x[2:4, 0:16] -> x[2:4, 0:16] peer 0\n";
+        for opts in [ExecOptions::sequential(), ExecOptions::parallel()] {
+            let r = coord.run_user_plan_traced(text, opts).unwrap();
+            let t = r.trace.expect("traced request must carry stats");
+            assert_eq!(t.events, r.stats.transfers, "comm-only plan: one event per transfer");
+            assert!(t.comm_us > 0.0);
+            assert!(t.busy_makespan_us > 0.0);
+        }
     }
 
     #[test]

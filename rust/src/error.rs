@@ -43,6 +43,9 @@ pub enum Error {
     /// topology instantiation). Parse errors carry `line L, col C:`
     /// prefixes like [`Error::PlanIo`].
     Hw(String),
+    /// Tracing / calibration failure (trace JSON parse, schema violation,
+    /// fingerprint mismatch, unfittable samples).
+    Trace(String),
     /// I/O error (artifact files, manifests, exports).
     Io(String),
 }
@@ -65,6 +68,7 @@ impl Error {
             Error::Coordinator(_) => "coordinator",
             Error::PlanIo(_) => "plan-io",
             Error::Hw(_) => "hw",
+            Error::Trace(_) => "trace",
             Error::Io(_) => "io",
         }
     }
@@ -87,6 +91,7 @@ impl fmt::Display for Error {
             | Error::Coordinator(m)
             | Error::PlanIo(m)
             | Error::Hw(m)
+            | Error::Trace(m)
             | Error::Io(m) => m,
         };
         write!(f, "[{}] {}", self.subsystem(), msg)

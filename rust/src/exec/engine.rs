@@ -23,6 +23,7 @@ use crate::exec::buffers::BufferStore;
 use crate::exec::plan_prep::{prepare, PreparedPlan};
 use crate::exec::{ExecMode, ExecOptions};
 use crate::runtime::Runtime;
+use crate::trace::{Trace, TraceEvent, TraceKind, TraceSink};
 
 /// Execution statistics.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -78,6 +79,44 @@ pub fn run_prepared(
     runtime: &Runtime,
     opts: &ExecOptions,
 ) -> Result<ExecStats> {
+    run_prepared_sunk(prep, store, runtime, opts, None)
+}
+
+/// [`run_prepared`] with chunk-level event tracing: runs over a fresh
+/// [`TraceSink`] and returns the captured [`Trace`] (fingerprint/meta
+/// unstamped — callers who know the topology stamp it). Both engines emit
+/// the same event *set* for a given prepared plan; timestamps differ.
+pub fn run_prepared_traced(
+    prep: &PreparedPlan,
+    store: &BufferStore,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+) -> Result<(ExecStats, Trace)> {
+    let sink = TraceSink::new(prep.plan.world);
+    let stats = run_prepared_sunk(prep, store, runtime, opts, Some(&sink))?;
+    Ok((stats, sink.into_trace(prep.plan.world)))
+}
+
+/// [`run_with`] + tracing (validate, prepare, execute once, capture).
+pub fn run_with_traced(
+    plan: &ExecutablePlan,
+    table: &TensorTable,
+    store: &BufferStore,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+) -> Result<(ExecStats, Trace)> {
+    plan.validate().map_err(|e| Error::Exec(format!("invalid plan: {e}")))?;
+    let prep = prepare(plan, table)?;
+    run_prepared_traced(&prep, store, runtime, opts)
+}
+
+fn run_prepared_sunk(
+    prep: &PreparedPlan,
+    store: &BufferStore,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+    sink: Option<&TraceSink>,
+) -> Result<ExecStats> {
     if store.world() != prep.plan.world {
         return Err(Error::Exec(format!(
             "store world {} != plan world {}",
@@ -86,8 +125,8 @@ pub fn run_prepared(
         )));
     }
     match opts.mode {
-        ExecMode::Sequential => run_sequential(prep, store, runtime),
-        ExecMode::Parallel => super::parallel::run_parallel(prep, store, runtime, opts),
+        ExecMode::Sequential => run_sequential(prep, store, runtime, sink),
+        ExecMode::Parallel => super::parallel::run_parallel(prep, store, runtime, opts, sink),
     }
 }
 
@@ -110,10 +149,96 @@ pub(crate) fn apply_transfer(
     )
 }
 
+/// [`apply_transfer`] with the span recorded on the source rank's comm
+/// lane. `sink == None` is the untraced hot path: one dead branch, no
+/// clock reads.
+pub(crate) fn apply_transfer_sunk(
+    prep: &PreparedPlan,
+    d: &TransferDesc,
+    store: &BufferStore,
+    sink: Option<&TraceSink>,
+) -> Result<usize> {
+    let Some(sink) = sink else {
+        return apply_transfer(prep, d, store);
+    };
+    let t0 = sink.now_us();
+    let bytes = apply_transfer(prep, d, store)?;
+    sink.push(TraceEvent {
+        start_us: t0,
+        end_us: sink.now_us(),
+        kind: TraceKind::Transfer {
+            src: d.src_rank,
+            dst: d.dst_rank,
+            bytes: d.bytes,
+            pieces: d.pieces,
+            backend: d.backend,
+            comm_sms: d.comm_sms,
+            reduce: d.reduce,
+            signal: d.signal,
+        },
+    });
+    Ok(bytes)
+}
+
+/// Record a whole compute segment's span (its kernel calls nest inside,
+/// pushed individually by the engines). No event for call-free segments —
+/// they execute nothing, and both engines apply the same rule so event
+/// sets stay identical.
+pub(crate) fn push_seg_event(
+    sink: &TraceSink,
+    rank: usize,
+    op_index: usize,
+    seg: &crate::codegen::ComputeSeg,
+    start_us: f64,
+    end_us: f64,
+) {
+    sink.push(TraceEvent {
+        start_us,
+        end_us,
+        kind: TraceKind::Compute {
+            rank,
+            op: op_index,
+            calls: seg.calls.len(),
+            tiles: seg.tiles.len(),
+            flops: seg.total_flops(),
+            quantized: seg.quantized,
+        },
+    });
+}
+
+/// Run one kernel call with its span recorded.
+pub(crate) fn exec_call_sunk(
+    call: &CallSpec,
+    rank: usize,
+    op_index: usize,
+    call_index: usize,
+    store: &BufferStore,
+    rt: &Runtime,
+    sink: Option<&TraceSink>,
+) -> Result<()> {
+    let Some(sink) = sink else {
+        return exec_call(call, rank, store, rt);
+    };
+    let t0 = sink.now_us();
+    exec_call(call, rank, store, rt)?;
+    sink.push(TraceEvent {
+        start_us: t0,
+        end_us: sink.now_us(),
+        kind: TraceKind::Kernel {
+            rank,
+            op: op_index,
+            call: call_index,
+            artifact: call.artifact_name().to_string(),
+        },
+    });
+    Ok(())
+}
+
 fn run_sequential(
     prep: &PreparedPlan,
     store: &BufferStore,
     runtime: &Runtime,
+    sink: Option<&TraceSink>,
 ) -> Result<ExecStats> {
     let plan = &prep.plan;
     let mut stats = ExecStats::default();
@@ -121,6 +246,9 @@ fn run_sequential(
     let mut pcs = vec![0usize; plan.world];
     // Transfers issued but blocked on dep signals.
     let mut pending: Vec<TransferDesc> = Vec::new();
+    // When tracing: the time each rank first blocked at its current Wait,
+    // so the wait span covers the whole cooperative stall.
+    let mut wait_from: Vec<Option<f64>> = vec![None; plan.world];
 
     loop {
         let mut progress = false;
@@ -129,7 +257,7 @@ fn run_sequential(
         let mut still = Vec::new();
         for d in pending.drain(..) {
             if d.dep_signals.iter().all(|&s| signals[s]) {
-                let bytes = apply_transfer(prep, &d, store)?;
+                let bytes = apply_transfer_sunk(prep, &d, store, sink)?;
                 stats.transfers += 1;
                 stats.bytes_moved += bytes;
                 signals[d.signal] = true;
@@ -152,16 +280,29 @@ fn run_sequential(
                     }
                     PlanOp::Wait(sig) => {
                         if signals[*sig] {
+                            if let Some(s) = sink {
+                                let now = s.now_us();
+                                s.push(TraceEvent {
+                                    start_us: wait_from[rank].take().unwrap_or(now),
+                                    end_us: now,
+                                    kind: TraceKind::Wait { rank, op: op_index, signal: *sig },
+                                });
+                            }
                             stats.waits_hit += 1;
                             pcs[rank] += 1;
                             progress = true;
                         } else {
+                            if let Some(s) = sink {
+                                if wait_from[rank].is_none() {
+                                    wait_from[rank] = Some(s.now_us());
+                                }
+                            }
                             break; // blocked; try other ranks
                         }
                     }
                     PlanOp::Issue(d) => {
                         if d.dep_signals.iter().all(|&s| signals[s]) {
-                            let bytes = apply_transfer(prep, d, store)?;
+                            let bytes = apply_transfer_sunk(prep, d, store, sink)?;
                             stats.transfers += 1;
                             stats.bytes_moved += bytes;
                             signals[d.signal] = true;
@@ -172,11 +313,17 @@ fn run_sequential(
                         progress = true;
                     }
                     PlanOp::Compute(seg) => {
+                        let seg_start = sink.map(|s| s.now_us());
                         for (ci, call) in seg.calls.iter().enumerate() {
-                            exec_call(call, rank, store, runtime)?;
+                            exec_call_sunk(call, rank, op_index, ci, store, runtime, sink)?;
                             stats.compute_calls += 1;
                             if let Some(&ps) = prep.call_signals.get(&(rank, op_index, ci)) {
                                 signals[ps] = true;
+                            }
+                        }
+                        if let (Some(s), Some(t0)) = (sink, seg_start) {
+                            if !seg.calls.is_empty() {
+                                push_seg_event(s, rank, op_index, seg, t0, s.now_us());
                             }
                         }
                         pcs[rank] += 1;
@@ -194,7 +341,9 @@ fn run_sequential(
         if !progress {
             let stuck: Vec<String> = (0..plan.world)
                 .filter(|&r| pcs[r] < plan.per_rank[r].ops.len())
-                .map(|r| format!("rank {r} at op {} ({:?})", pcs[r], plan.per_rank[r].ops[pcs[r]]))
+                .map(|r| {
+                    format!("rank {r} at op {} ({})", pcs[r], plan.per_rank[r].ops[pcs[r]].brief())
+                })
                 .collect();
             return Err(Error::Exec(format!(
                 "deadlock: no progress; {} pending transfers; stuck: {}",
@@ -439,6 +588,46 @@ mod tests {
         };
         let rt = runtime();
         assert!(run(&plan, &t, &mut store, &rt).is_err());
+    }
+
+    #[test]
+    fn traced_runs_match_untraced_stats_and_agree_across_engines() {
+        // The same plan under both engines: identical ExecStats to the
+        // untraced path, and identical timestamp-free event SETS (the
+        // cross-engine identity the trace subsystem guarantees).
+        let build_plan = |t: &TensorTable| ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram {
+                    ops: vec![
+                        PlanOp::Issue(xfer(t, 0, 0, 1, vec![], false)),
+                        PlanOp::Compute(ComputeSeg::default()), // call-free: no event
+                    ],
+                },
+                RankProgram { ops: vec![PlanOp::Wait(0)] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let rt = runtime();
+        let mut keysets = Vec::new();
+        for opts in both_modes() {
+            let (t, mut store) = table_and_store();
+            store.set(0, "x", &[3.0; 16]).unwrap();
+            let plan = build_plan(&t);
+            let (stats, trace) = run_with_traced(&plan, &t, &mut store, &rt, &opts).unwrap();
+            assert_eq!(stats.transfers, 1);
+            assert_eq!(stats.waits_hit, 1);
+            assert_eq!(trace.world, 2);
+            assert_eq!(trace.count("transfer"), 1);
+            assert_eq!(trace.count("wait"), 1);
+            assert_eq!(trace.count("compute"), 0, "call-free segs emit no event");
+            for ev in &trace.events {
+                assert!(ev.end_us >= ev.start_us);
+            }
+            keysets.push(trace.event_keys());
+        }
+        assert_eq!(keysets[0], keysets[1], "engines must agree on the event set");
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //! writers into each plan, so the two modes produce bit-identical f32
 //! results — property tests assert this for every schedule template and
 //! world size (DESIGN.md §6).
+//!
+//! Both engines optionally emit chunk-level [`crate::trace`] events
+//! (transfer applies, wait spans, kernel-call spans) through the
+//! `*_traced` entry points; an untraced run carries a `None` sink and pays
+//! one dead branch per op (DESIGN.md §14).
 
 pub mod buffers;
 pub mod engine;
@@ -31,7 +36,7 @@ pub mod verify;
 use std::time::Duration;
 
 pub use buffers::BufferStore;
-pub use engine::{run, run_prepared, run_with, ExecStats};
+pub use engine::{run, run_prepared, run_prepared_traced, run_with, run_with_traced, ExecStats};
 pub use plan_prep::{prepare, PreparedPlan};
 pub use signals::SignalBoard;
 

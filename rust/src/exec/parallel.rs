@@ -30,11 +30,15 @@ use std::sync::Mutex;
 use crate::codegen::{PlanOp, TransferDesc};
 use crate::error::{Error, Result};
 use crate::exec::buffers::BufferStore;
-use crate::exec::engine::{apply_transfer, exec_call, ExecStats};
+use crate::exec::engine::{apply_transfer_sunk, exec_call_sunk, push_seg_event, ExecStats};
 use crate::exec::plan_prep::PreparedPlan;
 use crate::exec::signals::SignalBoard;
 use crate::exec::ExecOptions;
 use crate::runtime::Runtime;
+use crate::trace::{TraceEvent, TraceKind, TraceSink};
+
+/// `rank_pc` value meaning "this rank's program completed".
+const RANK_DONE: usize = usize::MAX;
 
 struct Shared<'p> {
     prep: &'p PreparedPlan,
@@ -42,8 +46,16 @@ struct Shared<'p> {
     /// Issued transfers whose dependency signals were not yet met.
     pending: Mutex<Vec<TransferDesc>>,
     ranks_active: AtomicUsize,
+    /// Each rank's current op index ([`RANK_DONE`] once finished) — read
+    /// only by the deadlock verdict, so stuck ranks are named with the op
+    /// they are parked on. Relaxed stores: a stale-by-one read only makes
+    /// an error message stale-by-one.
+    rank_pc: Vec<AtomicUsize>,
     stats: Mutex<ExecStats>,
     fail: Mutex<Option<Error>>,
+    /// Event sink when the run is traced; `None` leaves the hot path with
+    /// a dead branch per op.
+    sink: Option<&'p TraceSink>,
 }
 
 impl Shared<'_> {
@@ -53,9 +65,27 @@ impl Shared<'_> {
     /// misdiagnosis window).
     fn apply_busy(&self, d: &TransferDesc, store: &BufferStore) -> Result<usize> {
         self.board.busy_begin();
-        let r = apply_transfer(self.prep, d, store);
+        let r = apply_transfer_sunk(self.prep, d, store, self.sink);
         self.board.busy_end();
         r
+    }
+
+    /// Where every unfinished rank is stuck, for deadlock verdicts.
+    fn stuck_ranks(&self) -> Vec<String> {
+        (0..self.prep.plan.world)
+            .filter_map(|r| {
+                let pc = self.rank_pc[r].load(Ordering::Relaxed);
+                if pc == RANK_DONE {
+                    return None;
+                }
+                let op = self.prep.plan.per_rank[r]
+                    .ops
+                    .get(pc)
+                    .map(|o| o.brief())
+                    .unwrap_or_else(|| "<end>".into());
+                Some(format!("rank {r} at op {pc} ({op})"))
+            })
+            .collect()
     }
 
     /// Record the first failure and wake every waiter.
@@ -75,6 +105,7 @@ pub(crate) fn run_parallel(
     store: &BufferStore,
     runtime: &Runtime,
     opts: &ExecOptions,
+    sink: Option<&TraceSink>,
 ) -> Result<ExecStats> {
     let world = prep.plan.world;
     let shared = Shared {
@@ -82,8 +113,10 @@ pub(crate) fn run_parallel(
         board: SignalBoard::new(prep.plan.num_signals),
         pending: Mutex::new(Vec::new()),
         ranks_active: AtomicUsize::new(world),
+        rank_pc: (0..world).map(|_| AtomicUsize::new(0)).collect(),
         stats: Mutex::new(ExecStats::default()),
         fail: Mutex::new(None),
+        sink,
     };
 
     std::thread::scope(|scope| {
@@ -91,7 +124,10 @@ pub(crate) fn run_parallel(
             let shared = &shared;
             scope.spawn(move || {
                 match rank_body(shared, rank, store, runtime, opts) {
-                    Ok(local) => shared.stats.lock().unwrap().merge(&local),
+                    Ok(local) => {
+                        shared.rank_pc[rank].store(RANK_DONE, Ordering::Relaxed);
+                        shared.stats.lock().unwrap().merge(&local);
+                    }
                     Err(e) => shared.record_fail(e),
                 }
                 shared.ranks_active.fetch_sub(1, Ordering::SeqCst);
@@ -120,6 +156,7 @@ fn rank_body(
     let prog = &shared.prep.plan.per_rank[rank];
     let mut local = ExecStats::default();
     for (op_index, op) in prog.ops.iter().enumerate() {
+        shared.rank_pc[rank].store(op_index, Ordering::Relaxed);
         if shared.board.aborted() {
             // another thread already recorded the real error
             return Err(Error::Exec(format!("rank {rank}: run aborted")));
@@ -127,9 +164,17 @@ fn rank_body(
         match op {
             PlanOp::Overhead { .. } => {}
             PlanOp::Wait(sig) => {
+                let t0 = shared.sink.map(|s| s.now_us());
                 shared.board.wait_all(&[*sig], opts.wait_timeout, || {
-                    format!("rank {rank} at op {op_index} (Wait({sig}))")
+                    format!("rank {rank} at op {op_index} (Wait(sig {sig}))")
                 })?;
+                if let (Some(s), Some(t0)) = (shared.sink, t0) {
+                    s.push(TraceEvent {
+                        start_us: t0,
+                        end_us: s.now_us(),
+                        kind: TraceKind::Wait { rank, op: op_index, signal: *sig },
+                    });
+                }
                 local.waits_hit += 1;
             }
             PlanOp::Issue(d) => {
@@ -145,16 +190,23 @@ fn rank_body(
                 }
             }
             PlanOp::Compute(seg) => {
+                let seg_start = shared.sink.map(|s| s.now_us());
                 for (ci, call) in seg.calls.iter().enumerate() {
                     // mark the call busy so bounded waiters elsewhere
                     // treat this rank as live, however long the kernel runs
                     shared.board.busy_begin();
-                    let result = exec_call(call, rank, store, runtime);
+                    let result =
+                        exec_call_sunk(call, rank, op_index, ci, store, runtime, shared.sink);
                     shared.board.busy_end();
                     result?;
                     local.compute_calls += 1;
                     if let Some(&ps) = shared.prep.call_signals.get(&(rank, op_index, ci)) {
                         shared.board.set(ps);
+                    }
+                }
+                if let (Some(s), Some(t0)) = (shared.sink, seg_start) {
+                    if !seg.calls.is_empty() {
+                        push_seg_event(s, rank, op_index, seg, t0, s.now_us());
                     }
                 }
             }
@@ -222,17 +274,34 @@ fn servicer(shared: &Shared<'_>, store: &BufferStore, opts: &ExecOptions) {
             Ok(true) => continue,   // activity — re-scan
             Ok(false) => return,    // aborted elsewhere
             Err(e) => {
-                // bounded wait expired with no progress: deadlock verdict,
-                // enriched with what exactly is stuck
-                let stuck: Vec<usize> = shared
+                // Bounded wait expired with no progress: deadlock verdict,
+                // enriched with WHO is stuck WHERE — each unfinished
+                // rank's current op, and each parked transfer's unmet
+                // dependency signals — instead of a bare timeout.
+                let parked: Vec<String> = shared
                     .pending
                     .lock()
                     .unwrap()
                     .iter()
-                    .map(|d| d.signal)
+                    .map(|d| {
+                        format!(
+                            "sig {} ({}->{}) missing deps {:?}",
+                            d.signal,
+                            d.src_rank,
+                            d.dst_rank,
+                            shared.board.unmet(&d.dep_signals)
+                        )
+                    })
                     .collect();
+                let stuck = shared.stuck_ranks();
+                let stuck = if stuck.is_empty() {
+                    "none (all rank programs completed)".to_string()
+                } else {
+                    stuck.join("; ")
+                };
                 shared.record_fail(Error::Exec(format!(
-                    "{e}; parked transfer signals: {stuck:?}"
+                    "{e}; stuck ranks: {stuck}; parked transfers: [{}]",
+                    parked.join(", ")
                 )));
                 return;
             }
@@ -282,9 +351,95 @@ mod tests {
             mode: crate::exec::ExecMode::Parallel,
             wait_timeout: Duration::from_secs(5),
         };
-        let stats = run_parallel(&prep, &store, &rt, &opts).unwrap();
+        let stats = run_parallel(&prep, &store, &rt, &opts, None).unwrap();
         assert_eq!(stats.transfers, 2);
         assert_eq!(stats.waits_hit, 1);
         assert_eq!(&store.get(2, "x").unwrap()[..8], &[5.0; 8]);
+    }
+
+    #[test]
+    fn deadlock_verdict_names_stuck_rank_and_pending_signal() {
+        // Rank 0 waits forever on signal 1, which only rank 1's parked
+        // transfer would set — and that transfer's dep (signal 0) is never
+        // set either. Whichever bounded wait fires first (the rank's
+        // wait_all or the servicer), the error must name WHO is stuck on
+        // WHAT: a rank + op + signal, not a bare timeout.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 4], crate::chunk::DType::F32).unwrap();
+        let mut store = BufferStore::new(2);
+        store.declare("x", &[4, 4]).unwrap();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Wait(1)] },
+                RankProgram {
+                    ops: vec![PlanOp::Issue(transfer_desc(
+                        x,
+                        Region::rows(0, 2, 4),
+                        1,
+                        1,
+                        0,
+                        vec![0],
+                        false,
+                    ))],
+                },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let rt = Runtime::host_reference();
+        let opts = ExecOptions {
+            mode: crate::exec::ExecMode::Parallel,
+            wait_timeout: Duration::from_millis(100),
+        };
+        let e = run_parallel(&prep, &store, &rt, &opts, None).unwrap_err().to_string();
+        assert!(e.contains("deadlock"), "{e}");
+        assert!(e.contains("rank 0") || e.contains("sig 1"), "{e}");
+        // the signal id of the blocking wait (or the parked transfer) is named
+        assert!(e.contains('1'), "{e}");
+    }
+
+    #[test]
+    fn servicer_verdict_lists_parked_transfers_with_unmet_deps() {
+        // No rank ever blocks: rank 0 parks a transfer whose dep (signal
+        // 1) nobody sets and finishes its program. Only the servicer is
+        // left holding the bag, so ITS verdict fires — and must list the
+        // parked transfer's signal and its unmet dependency.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 4], crate::chunk::DType::F32).unwrap();
+        let mut store = BufferStore::new(2);
+        store.declare("x", &[4, 4]).unwrap();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram {
+                    ops: vec![PlanOp::Issue(transfer_desc(
+                        x,
+                        Region::rows(0, 2, 4),
+                        0,
+                        0,
+                        1,
+                        vec![1],
+                        false,
+                    ))],
+                },
+                RankProgram::default(),
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let rt = Runtime::host_reference();
+        let opts = ExecOptions {
+            mode: crate::exec::ExecMode::Parallel,
+            wait_timeout: Duration::from_millis(100),
+        };
+        let e = run_parallel(&prep, &store, &rt, &opts, None).unwrap_err().to_string();
+        assert!(e.contains("deadlock"), "{e}");
+        assert!(e.contains("parked transfers"), "{e}");
+        assert!(e.contains("sig 0"), "missing parked signal: {e}");
+        assert!(e.contains("missing deps [1]"), "missing unmet dep list: {e}");
+        assert!(e.contains("all rank programs completed"), "{e}");
     }
 }

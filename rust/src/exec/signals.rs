@@ -113,6 +113,14 @@ impl SignalBoard {
         ids.iter().all(|&i| st.set[i])
     }
 
+    /// The subset of `ids` not yet set — what a stuck waiter is actually
+    /// missing. Deadlock verdicts use this to name the pending signals
+    /// instead of reporting a bare timeout.
+    pub fn unmet(&self, ids: &[usize]) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        ids.iter().copied().filter(|&i| !st.set[i]).collect()
+    }
+
     /// Current epoch; pair with [`SignalBoard::wait_activity_since`].
     pub fn epoch(&self) -> u64 {
         self.state.lock().unwrap().epoch
@@ -201,6 +209,8 @@ mod tests {
         assert!(b.all_set(&[0, 2]));
         assert!(!b.all_set(&[0, 1]));
         assert!(b.all_set(&[]));
+        assert_eq!(b.unmet(&[0, 1, 2]), vec![1]);
+        assert!(b.unmet(&[]).is_empty());
     }
 
     #[test]

@@ -27,7 +27,11 @@
 //!   format with a built-in catalog (`h100_node`, `a100_node`, `b200_node`,
 //!   multinode and mixed-fabric shapes), and a topology fingerprint keying
 //!   the tuning cache — every scenario runs on any described machine via
-//!   `--topo`.
+//!   `--topo`. The model is closed-loop ([`trace`]): both exec engines
+//!   emit chunk-level event traces (Chrome `trace_event` export, overlap
+//!   report, sim-vs-trace divergence), and `calibrate` fits measured
+//!   bandwidth curves + compute rate back into a `.topo` keyed by the
+//!   machine fingerprint.
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
@@ -58,6 +62,7 @@ pub mod sim;
 #[doc(hidden)]
 pub mod testutil;
 pub mod topo;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

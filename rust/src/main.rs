@@ -4,18 +4,22 @@
 //!
 //! ```text
 //! syncopate report <table2|fig2|fig8|fig9|fig10|fig11|ported|pipeline|
-//!                   arch-sweep|headline|all> [--full] [--csv]
+//!                   arch-sweep|headline|all> [--full] [--csv] [--json]
 //! syncopate simulate --op <kind> [--model <name>] [--world N] [--tokens N|--seq N]
 //!                    [--split K] [--backend <name>] [--sms N] [--timeline]
-//!                    [--topo <name|FILE.topo>]
+//!                    [--chrome FILE.json] [--topo <name|FILE.topo>]
 //! syncopate tune --op <kind> [--model <name>] [--world N] [--full]
 //!                [--topo <name|FILE.topo>] [--cache FILE]
 //! syncopate exec --case <NAME|list> [--world N] [--split K] [--nodes N]
-//!                [--topo <name|FILE.topo>]
+//!                [--topo <name|FILE.topo>] [--trace FILE.json] [--cache FILE]
 //!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
 //!                (--nodes splits SINGLE-node --topo descriptions for the
 //!                 hierarchical case; a multinode description's own node
-//!                 structure wins)
+//!                 structure wins; --trace captures a Chrome trace and
+//!                 --cache additionally records the measured time)
+//! syncopate trace show <FILE.json>
+//! syncopate trace overlap <FILE.json>
+//! syncopate calibrate --from <FILE.json> --topo <name|FILE.topo> [-o FILE.topo]
 //! syncopate plan import --from <SOURCE> [--world N] [--out FILE.sched]
 //! syncopate plan show <FILE.sched>
 //! syncopate plan lint <FILE.sched>...
@@ -29,7 +33,10 @@
 //! ```
 //!
 //! Every `--topo` accepts a built-in catalog name (`syncopate topo list`)
-//! or a path to a `.topo` description file (DESIGN.md §13).
+//! or a path to a `.topo` description file (DESIGN.md §13). Tracing and
+//! calibration (the sim↔execution loop) are DESIGN.md §14: `exec --trace`
+//! captures, `trace overlap` analyzes, `calibrate` fits measured curves
+//! into a new `.topo`.
 
 use std::collections::HashMap;
 
@@ -58,14 +65,18 @@ fn main() {
     }
 }
 
-/// Parse `--key value` pairs and bare flags after the subcommand.
+/// Parse `--key value` pairs (and short `-k value` flags, e.g.
+/// `calibrate -o FILE`) plus bare words after the subcommand.
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     let mut flags = HashMap::new();
     let mut bare = Vec::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+        let key = args[i]
+            .strip_prefix("--")
+            .or_else(|| args[i].strip_prefix('-').filter(|k| !k.is_empty()));
+        if let Some(key) = key {
+            if i + 1 < args.len() && !args[i + 1].starts_with('-') {
                 flags.insert(key.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
@@ -172,6 +183,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                 std::fs::write(path, r.timeline.to_json())?;
                 println!("timeline JSON -> {path}");
             }
+            if let Some(path) = flags.get("chrome") {
+                // predicted timeline, same viewer format as `exec --trace`
+                std::fs::write(path, r.timeline.to_chrome_json(op.world))?;
+                println!("chrome trace (simulated) -> {path}");
+            }
             Ok(())
         }
         "tune" => {
@@ -238,6 +254,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             };
             let case = execases::build_case(&case_name, &params)?;
             let name = case.name.clone();
+            let plan_flops = case.plan.total_flops();
             let mode: ExecMode = flags
                 .get("exec-mode")
                 .map(String::as_str)
@@ -251,7 +268,48 @@ fn dispatch(args: &[String]) -> Result<()> {
             };
             let rt = Runtime::open_default()?;
             let backend = rt.backend_name();
-            let stats = run_and_verify_with(case, &rt, &opts)?;
+            let stats = match flags.get("trace") {
+                None => run_and_verify_with(case, &rt, &opts)?,
+                Some(trace_path) => {
+                    let (stats, mut trace) =
+                        execases::run_and_verify_traced(case, &rt, &opts)?;
+                    // full provenance so `trace overlap` / `calibrate` can
+                    // rebuild and re-simulate exactly this run
+                    trace.set_meta("registry-case", &case_name);
+                    trace.set_meta("split", &params.split.to_string());
+                    trace.set_meta("seed", &params.seed.to_string());
+                    trace.set_meta("nodes", &params.nodes.to_string());
+                    trace.set_meta("topo", &params.topo);
+                    std::fs::write(trace_path, syncopate::trace::to_chrome_json(&trace))?;
+                    let report = syncopate::trace::analyze(&trace);
+                    println!("trace -> {trace_path} ({})", report.summary_line());
+                    if let Some(cache_path) = flags.get("cache") {
+                        // the MEASURED time lands in the tuning cache,
+                        // keyed like everything else by the machine
+                        // fingerprint; measured entries outrank modeled
+                        let p = std::path::Path::new(cache_path);
+                        let mut cache = if p.exists() {
+                            autotune::TuneCache::load(p)?
+                        } else {
+                            autotune::TuneCache::default()
+                        };
+                        cache.insert_measured_raw(
+                            &format!("exec:{name}"),
+                            &trace.fingerprint,
+                            &format!("{mode:?}"),
+                            report.busy_makespan_us,
+                            syncopate::metrics::tflops(plan_flops, report.busy_makespan_us),
+                        )?;
+                        cache.save(p)?;
+                        println!(
+                            "measured : busy {} -> {cache_path} ({} entries)",
+                            syncopate::util::fmt_us(report.busy_makespan_us),
+                            cache.len()
+                        );
+                    }
+                    stats
+                }
+            };
             println!(
                 "{name}: VERIFIED on {} [{mode:?}/{backend}] ({} transfers, {} moved, \
                  {} kernel calls)",
@@ -262,6 +320,8 @@ fn dispatch(args: &[String]) -> Result<()> {
             );
             Ok(())
         }
+        "trace" => trace_cmd(&bare),
+        "calibrate" => calibrate_cmd(&flags),
         "plan" => match bare.first().map(String::as_str) {
             Some("import") => plan_import(&flags),
             Some("show") => plan_show(&bare[1..]),
@@ -313,6 +373,28 @@ fn dispatch(args: &[String]) -> Result<()> {
                     r.label,
                     syncopate::util::fmt_us(r.makespan_us),
                     r.tflops,
+                    r.cache_hit
+                );
+            }
+            // user-plan requests served WITH per-request tracing: every
+            // response carries its measured overlap stats (DESIGN.md §14)
+            let sched = plan_io::registry::build("ag-swizzle", world)?;
+            let text = plan_io::print_schedule(&sched)?;
+            for attempt in ["cold", "warm"] {
+                let r = coord.run_user_plan_traced(&text, ExecOptions::parallel())?;
+                let t = r.trace.as_ref().expect("traced request carries stats");
+                let hidden = if t.hidden_frac.is_nan() {
+                    "-".to_string()
+                } else {
+                    format!("{:.0}%", t.hidden_frac * 100.0)
+                };
+                println!(
+                    "  plan ag-swizzle [{attempt:4}] {:>10} busy, {} events, comm {} \
+                     ({hidden} hidden), {} transfers (cache {})",
+                    syncopate::util::fmt_us(t.busy_makespan_us),
+                    t.events,
+                    syncopate::util::fmt_us(t.comm_us),
+                    r.stats.transfers,
                     r.cache_hit
                 );
             }
@@ -397,6 +479,156 @@ fn topo_cmd(bare: &[String]) -> Result<()> {
             other.unwrap_or("<none>")
         ))),
     }
+}
+
+/// Read + schema-check + parse an exported Chrome trace file.
+fn load_trace(path: &str) -> Result<syncopate::trace::Trace> {
+    let text = std::fs::read_to_string(path).map_err(|e| Error::Io(format!("{path}: {e}")))?;
+    syncopate::trace::from_chrome_json(&text)
+        .map_err(|e| Error::Trace(format!("{path}: {e}")))
+}
+
+/// Rebuild the exec case a trace was captured from (when its provenance
+/// metadata names one) and return its compiled plan + the topology it
+/// executed on — `trace overlap` and `calibrate` simulate it to score
+/// sim-vs-trace divergence. The case's OWN topology matters: the
+/// hierarchical case splits single-node `--topo` descriptions across
+/// `--nodes`, so re-resolving the topo spec naively would simulate a
+/// different machine shape than the trace's fingerprint names. `Ok(None)`
+/// when the trace carries no case provenance (e.g. a coordinator trace).
+/// (Rebuilding also re-derives the case's host oracles — wasted for this
+/// read-only path, but it keeps one source of truth for case shapes.)
+fn traced_case_plan(
+    trace: &syncopate::trace::Trace,
+) -> Result<Option<(syncopate::codegen::ExecutablePlan, Topology)>> {
+    let (Some(case), Some(split), Some(seed), Some(nodes), Some(tspec)) = (
+        trace.meta("registry-case"),
+        trace.meta("split"),
+        trace.meta("seed"),
+        trace.meta("nodes"),
+        trace.meta("topo"),
+    ) else {
+        return Ok(None);
+    };
+    let num = |what: &str, v: &str| -> Result<usize> {
+        v.parse()
+            .map_err(|_| Error::Trace(format!("trace meta `{what}` is not an integer: `{v}`")))
+    };
+    let params = CaseParams {
+        world: trace.world,
+        split: num("split", split)?,
+        seed: num("seed", seed)? as u64,
+        nodes: num("nodes", nodes)?,
+        topo: tspec.to_string(),
+    };
+    let built = execases::build_case(case, &params)?;
+    Ok(Some((built.plan, built.topo)))
+}
+
+/// `trace show|overlap FILE`: inspect a captured execution trace
+/// (DESIGN.md §14).
+fn trace_cmd(bare: &[String]) -> Result<()> {
+    let (verb, path) = match (bare.first().map(String::as_str), bare.get(1)) {
+        (Some(v @ ("show" | "overlap")), Some(p)) => (v, p),
+        (Some("show" | "overlap"), None) => {
+            return Err(Error::Coordinator("trace show|overlap needs a trace file".into()))
+        }
+        (other, _) => {
+            return Err(Error::Coordinator(format!(
+                "unknown trace verb `{}` (show|overlap)",
+                other.unwrap_or("<none>")
+            )))
+        }
+    };
+    let trace = load_trace(path)?;
+    println!("# {path}");
+    println!(
+        "# world {}, fingerprint {}, {} events ({} transfers, {} waits, {} kernel calls, \
+         {} segments)",
+        trace.world,
+        if trace.fingerprint.is_empty() { "<none>" } else { trace.fingerprint.as_str() },
+        trace.events.len(),
+        trace.count("transfer"),
+        trace.count("wait"),
+        trace.count("kernel"),
+        trace.count("compute"),
+    );
+    for (k, v) in &trace.meta {
+        println!("# {k}: {v}");
+    }
+    let report = syncopate::trace::analyze(&trace);
+    match verb {
+        "show" => println!("{}", report.summary_line()),
+        _ => {
+            println!("{}", report.table().render());
+            println!("{}\n", report.summary_line());
+            // divergence against the model, when the trace names its case
+            if let Some((plan, topo)) = traced_case_plan(&trace)? {
+                let sim = simulate(&plan, &topo, syncopate::sim::SimParams::default())?;
+                let case = trace.meta("registry-case").expect("provenance checked");
+                println!("{}", report.divergence_table(case, sim.makespan_us).render());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `calibrate --from TRACE --topo NAME -o FILE.topo`: fit measured curve
+/// rows from a trace into an updated `.topo` description (DESIGN.md §14).
+fn calibrate_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let Some(from) = flags.get("from") else {
+        return Err(Error::Coordinator(
+            "calibrate needs --from <trace.json> (captured by `exec --trace`)".into(),
+        ));
+    };
+    let Some(spec) = flags.get("topo") else {
+        return Err(Error::Coordinator(
+            "calibrate needs --topo <name|file.topo> (the shape the trace ran on)".into(),
+        ));
+    };
+    let trace = load_trace(from)?;
+    let mut desc = hw::catalog::load_desc(spec)?;
+    // The hierarchical exec case splits single-node descriptions across
+    // `--nodes`; when the trace's fingerprint says THAT is the shape it
+    // ran on, follow the same resolution — otherwise a hier trace naming
+    // its own topo would be refused as a foreign machine.
+    if let Some(nodes) = trace.meta("nodes").and_then(|v| v.parse::<usize>().ok()) {
+        if desc.nodes == 1 && nodes > 1 && trace.world % nodes == 0 {
+            let split = desc.clone().with_nodes(nodes)?;
+            if hw::fingerprint(&split.instantiate(trace.world)?) == trace.fingerprint {
+                desc = split;
+            }
+        }
+    }
+    let cal = syncopate::trace::calibrate(&trace, &desc)?;
+    println!("{}", cal.table().render());
+    for (tag, before, after) in &cal.link_floors {
+        println!("link {tag}: bandwidth floor raised {before:.1} -> {after:.1} GB/s");
+    }
+    // when the trace names its case, show how much closer the calibrated
+    // model predicts the measured run
+    if let Some((plan, _)) = traced_case_plan(&trace)? {
+        let report = syncopate::trace::analyze(&trace);
+        let params = syncopate::sim::SimParams::default();
+        let before =
+            simulate(&plan, &desc.instantiate(trace.world)?, params)?.makespan_us;
+        let after =
+            simulate(&plan, &cal.desc.instantiate(trace.world)?, params)?.makespan_us;
+        println!(
+            "sim-vs-trace divergence: {:.3} (uncalibrated) -> {:.3} (calibrated)",
+            report.divergence(before),
+            report.divergence(after)
+        );
+    }
+    let text = hw::print_desc(&cal.desc);
+    match flags.get("o").or_else(|| flags.get("out")) {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("calibrated topology `{}` -> {path}", cal.desc.name);
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
 }
 
 /// `plan import --from SOURCE [--world N] [--out FILE]`: instantiate a
@@ -521,8 +753,14 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let which = bare.first().map(String::as_str).unwrap_or("all");
     let budget = if flags.contains_key("full") { Budget::Full } else { Budget::Quick };
     let csv = flags.contains_key("csv");
+    // --json: the BENCH_results.json discipline for report tables (NaN
+    // cells -> null); ranking/ratio footers are suppressed so the output
+    // pipes straight into jq
+    let json = flags.contains_key("json");
     let emit = |t: &syncopate::metrics::Table| {
-        if csv {
+        if json {
+            println!("{}", t.to_json());
+        } else if csv {
             println!("{}", t.to_csv());
         } else {
             println!("{}", t.render());
@@ -539,12 +777,16 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
         "fig8" => {
             let t = reports::fig8(budget)?;
             emit(&t);
-            print_ratios(&t);
+            if !json {
+                print_ratios(&t);
+            }
         }
         "fig9" => {
             let t = reports::fig9(budget)?;
             emit(&t);
-            print_ratios(&t);
+            if !json {
+                print_ratios(&t);
+            }
         }
         "fig10" => emit(&reports::fig10(budget)?),
         "ported" => emit(&reports::ported()?),
@@ -559,7 +801,9 @@ fn report(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
         "arch-sweep" => {
             let t = reports::arch_sweep()?;
             emit(&t);
-            print_arch_ranking(&t);
+            if !json {
+                print_arch_ranking(&t);
+            }
         }
         "headline" => {
             let (avg, max) = reports::headline(budget)?;
@@ -603,10 +847,12 @@ fn print_ratios(t: &syncopate::metrics::Table) {
 fn print_usage() {
     println!(
         "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
-         usage: syncopate <report|simulate|tune|exec|plan|topo|serve-demo> [flags]\n\
+         usage: syncopate <report|simulate|tune|exec|trace|calibrate|plan|topo|serve-demo> [flags]\n\
          plan verbs: plan import --from <src>, plan show|lint|run <file.sched>\n\
          topo verbs: topo list, topo show|lint <name|file.topo>\n\
-         exec cases: syncopate exec --case list\n\
+         exec cases: syncopate exec --case list   (add --trace FILE to capture)\n\
+         tracing   : trace show|overlap <file.json>; calibrate --from <file.json> \
+         --topo <name> -o <file.topo>\n\
          hardware  : every sim/tune/exec/plan-run takes --topo <name|file.topo>\n\
          see rust/src/main.rs header for the full flag list"
     );

@@ -134,6 +134,36 @@ impl Table {
         out
     }
 
+    /// JSON export (the `BENCH_results.json` discipline: machine-readable
+    /// next to the human table, hand-rolled — the offline build has no
+    /// serde). NaN cells (unsupported combos) render as `null`.
+    pub fn to_json(&self) -> String {
+        let esc = crate::util::json_escape;
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"title\": \"{}\",", esc(&self.title));
+        let _ = writeln!(out, "  \"unit\": \"{}\",", esc(self.unit));
+        let cols: Vec<String> = self.columns.iter().map(|c| format!("\"{}\"", esc(c))).collect();
+        let _ = writeln!(out, "  \"columns\": [{}],", cols.join(", "));
+        let _ = writeln!(out, "  \"rows\": [");
+        for (i, (label, vals)) in self.rows.iter().enumerate() {
+            let cells: Vec<String> = vals
+                .iter()
+                .map(|v| if v.is_finite() { format!("{v}") } else { "null".to_string() })
+                .collect();
+            let _ = writeln!(
+                out,
+                "    {{\"label\": \"{}\", \"values\": [{}]}}{}",
+                esc(label),
+                cells.join(", "),
+                if i + 1 < self.rows.len() { "," } else { "" }
+            );
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = writeln!(out, "}}");
+        out
+    }
+
     /// Markdown export (for EXPERIMENTS.md).
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
@@ -195,6 +225,20 @@ mod tests {
         let m = table().to_markdown();
         assert!(m.contains("| a | 4.00 | 2.00 |"));
         assert!(m.contains("| c | 5.00 | - |"));
+    }
+
+    #[test]
+    fn json_export_marks_missing_as_null() {
+        let j = table().to_json();
+        assert!(j.contains("\"title\": \"fig\""), "{j}");
+        assert!(j.contains("\"columns\": [\"ours\", \"base\"]"), "{j}");
+        assert!(j.contains("{\"label\": \"a\", \"values\": [4, 2]}"), "{j}");
+        assert!(j.contains("{\"label\": \"c\", \"values\": [5, null]}"), "{j}");
+        // quotes in labels stay valid JSON
+        let mut t = Table::new("q\"t", &["c"], "u");
+        t.push_row("r\"l", vec![1.0]);
+        assert!(t.to_json().contains("q\\\"t"));
+        assert!(t.to_json().contains("r\\\"l"));
     }
 
     #[test]

@@ -110,6 +110,45 @@ impl Timeline {
         out
     }
 
+    /// Chrome `trace_event` JSON export: the SIMULATED timeline in the
+    /// same viewer format the exec engines' measured traces use
+    /// ([`crate::trace::export`]), so a prediction and its measurement can
+    /// be compared side by side in `chrome://tracing`. Tracks mirror the
+    /// measured layout: rank `r`'s compute/wait/overhead on tid `2r`,
+    /// transfers on tid `2r + 1`.
+    pub fn to_chrome_json(&self, world: usize) -> String {
+        let esc = crate::util::json_escape;
+        let mut lines = Vec::new();
+        for r in 0..world {
+            for (lane, label) in
+                [(2 * r, format!("rank {r} (sim)")), (2 * r + 1, format!("rank {r} comm (sim)"))]
+            {
+                lines.push(format!(
+                    "    {{\"ph\": \"M\", \"pid\": 0, \"tid\": {lane}, \
+                     \"name\": \"thread_name\", \"args\": {{\"name\": \"{label}\"}}}}"
+                ));
+            }
+        }
+        for s in &self.spans {
+            let tid = match s.kind {
+                SpanKind::Transfer => 2 * s.rank + 1,
+                _ => 2 * s.rank,
+            };
+            lines.push(format!(
+                "    {{\"ph\": \"X\", \"pid\": 0, \"tid\": {tid}, \"name\": \"{}\", \
+                 \"cat\": \"sim-{}\", \"ts\": {}, \"dur\": {}, \"args\": {{}}}}",
+                esc(&s.label),
+                s.kind.name(),
+                s.start_us,
+                s.dur_us().max(0.0)
+            ));
+        }
+        format!(
+            "{{\n  \"displayTimeUnit\": \"ms\",\n  \"traceEvents\": [\n{}\n  ]\n}}\n",
+            lines.join(",\n")
+        )
+    }
+
     /// Compact per-rank ASCII rendering for CLI debugging.
     pub fn ascii(&self, world: usize, width: usize) -> String {
         let m = self.makespan_us().max(1e-9);
@@ -177,6 +216,16 @@ mod tests {
         let mut t = Timeline::default();
         t.push(Span { rank: 0, kind: SpanKind::Compute, start_us: 0.0, end_us: 1.0, label: "a\"b".into() });
         assert!(t.to_json().contains("a'b"));
+    }
+
+    #[test]
+    fn chrome_export_has_tracks_and_spans() {
+        let j = tl().to_chrome_json(2);
+        assert!(j.contains("\"traceEvents\""), "{j}");
+        assert!(j.contains("rank 0 (sim)"));
+        assert!(j.contains("\"cat\": \"sim-compute\""));
+        // transfers land on the comm track (tid 2r+1 = 3 for rank 1)
+        assert!(j.contains("\"tid\": 3"));
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Overlap analysis of a captured [`Trace`]: the measured counterpart of
+//! the simulator's `exposed_wait_us`.
+//!
+//! Definitions (all µs):
+//!
+//! * **wall makespan** — latest event end minus earliest event start; the
+//!   run's wall-clock extent. Includes engine scheduling noise (thread
+//!   spawn, lock handoffs), so it varies run to run.
+//! * **busy makespan** — max over ranks of that rank's total *working*
+//!   time (compute segments + transfers it sourced; waits are idle). This
+//!   is the scheduling-noise-free critical-rank work, identical in
+//!   expectation across engines — the quantity sim-vs-trace divergence is
+//!   measured against.
+//! * **comm-hidden fraction** — `1 - wait/comm`: how much of the measured
+//!   communication time was NOT exposed as a wait anywhere. The paper's
+//!   overlap claim, measured instead of predicted.
+//! * **per-rank slack** — wall makespan minus the rank's last event end
+//!   (relative to the trace start): how long the rank sat finished while
+//!   stragglers ran. Feeds the NUMA-pinning roadmap item.
+
+use crate::metrics::Table;
+use crate::trace::{Trace, TraceKind};
+
+/// Per-rank usage totals (µs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankUsage {
+    pub compute_us: f64,
+    pub comm_us: f64,
+    pub wait_us: f64,
+    /// compute + comm (working, non-idle time).
+    pub busy_us: f64,
+    /// Wall time from trace start to this rank's last event end.
+    pub end_us: f64,
+}
+
+/// The full overlap analysis of one trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverlapReport {
+    pub world: usize,
+    pub wall_makespan_us: f64,
+    pub busy_makespan_us: f64,
+    pub per_rank: Vec<RankUsage>,
+    pub comm_total_us: f64,
+    pub wait_total_us: f64,
+    /// `1 - wait/comm`, clamped to `[0, 1]`; NaN when no communication
+    /// was traced.
+    pub hidden_frac: f64,
+    pub events: usize,
+}
+
+/// Compact per-request summary for serving responses (`serve-demo`,
+/// coordinator user-plan tracing).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    pub events: usize,
+    pub comm_us: f64,
+    pub wait_us: f64,
+    pub busy_makespan_us: f64,
+    pub hidden_frac: f64,
+}
+
+/// Analyze a trace (kernel spans nest inside their compute segment's span,
+/// so only segment spans count toward compute time — counting both would
+/// double-bill).
+pub fn analyze(trace: &Trace) -> OverlapReport {
+    let world = trace.world;
+    let mut per_rank = vec![RankUsage::default(); world];
+    let mut start = f64::INFINITY;
+    let mut end = f64::NEG_INFINITY;
+    // ranks whose compute ops carry no segment span (comm-only plans still
+    // traced their kernel-free programs) fall back to kernel spans — for
+    // ordinary plans kernels are nested and must not double-count
+    let mut has_seg = vec![false; world];
+    for ev in &trace.events {
+        if let TraceKind::Compute { rank, .. } = ev.kind {
+            has_seg[rank] = true;
+        }
+    }
+    for ev in &trace.events {
+        let r = ev.rank().min(world.saturating_sub(1));
+        start = start.min(ev.start_us);
+        end = end.max(ev.end_us);
+        per_rank[r].end_us = per_rank[r].end_us.max(ev.end_us);
+        match &ev.kind {
+            TraceKind::Transfer { .. } => per_rank[r].comm_us += ev.dur_us(),
+            TraceKind::Wait { .. } => per_rank[r].wait_us += ev.dur_us(),
+            TraceKind::Compute { .. } => per_rank[r].compute_us += ev.dur_us(),
+            TraceKind::Kernel { .. } => {
+                if !has_seg[r] {
+                    per_rank[r].compute_us += ev.dur_us();
+                }
+            }
+        }
+    }
+    if trace.events.is_empty() {
+        start = 0.0;
+        end = 0.0;
+    }
+    for u in &mut per_rank {
+        u.busy_us = u.compute_us + u.comm_us;
+        u.end_us = (u.end_us - start).max(0.0);
+    }
+    let comm_total_us: f64 = per_rank.iter().map(|u| u.comm_us).sum();
+    let wait_total_us: f64 = per_rank.iter().map(|u| u.wait_us).sum();
+    let hidden_frac = if comm_total_us > 0.0 {
+        (1.0 - wait_total_us / comm_total_us).clamp(0.0, 1.0)
+    } else {
+        f64::NAN
+    };
+    OverlapReport {
+        world,
+        wall_makespan_us: (end - start).max(0.0),
+        busy_makespan_us: per_rank.iter().map(|u| u.busy_us).fold(0.0, f64::max),
+        per_rank,
+        comm_total_us,
+        wait_total_us,
+        hidden_frac,
+        events: trace.events.len(),
+    }
+}
+
+impl OverlapReport {
+    /// Per-rank usage table (paper-style rendering via [`Table`]).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Overlap report: measured per-rank usage",
+            &["compute us", "comm us", "wait us", "busy us", "slack us"],
+            "us",
+        );
+        for (r, u) in self.per_rank.iter().enumerate() {
+            t.push_row(
+                &format!("rank {r}"),
+                vec![
+                    u.compute_us,
+                    u.comm_us,
+                    u.wait_us,
+                    u.busy_us,
+                    (self.wall_makespan_us - u.end_us).max(0.0),
+                ],
+            );
+        }
+        t
+    }
+
+    /// Sim-vs-trace divergence table: one row comparing a simulated
+    /// makespan against this trace's busy makespan (the noise-free side —
+    /// see the module doc for why not wall time).
+    pub fn divergence_table(&self, label: &str, sim_makespan_us: f64) -> Table {
+        let mut t = Table::new(
+            "Sim vs trace divergence",
+            &["sim us", "trace busy us", "trace wall us", "divergence"],
+            "us (divergence: |sim-busy|/busy)",
+        );
+        t.push_row(
+            label,
+            vec![
+                sim_makespan_us,
+                self.busy_makespan_us,
+                self.wall_makespan_us,
+                self.divergence(sim_makespan_us),
+            ],
+        );
+        t
+    }
+
+    /// Relative divergence `|sim - busy| / busy` of a simulated makespan
+    /// from the measured busy makespan (NaN for an empty trace).
+    pub fn divergence(&self, sim_makespan_us: f64) -> f64 {
+        if self.busy_makespan_us <= 0.0 {
+            return f64::NAN;
+        }
+        (sim_makespan_us - self.busy_makespan_us).abs() / self.busy_makespan_us
+    }
+
+    /// One-line human summary (`exec --trace` / serve-demo output).
+    pub fn summary_line(&self) -> String {
+        let hidden = if self.hidden_frac.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.0}%", self.hidden_frac * 100.0)
+        };
+        format!(
+            "{} events, wall {}, busy {}, comm {} ({hidden} hidden), waits {}",
+            self.events,
+            crate::util::fmt_us(self.wall_makespan_us),
+            crate::util::fmt_us(self.busy_makespan_us),
+            crate::util::fmt_us(self.comm_total_us),
+            crate::util::fmt_us(self.wait_total_us),
+        )
+    }
+
+    /// Compact serving summary.
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            events: self.events,
+            comm_us: self.comm_total_us,
+            wait_us: self.wait_total_us,
+            busy_makespan_us: self.busy_makespan_us,
+            hidden_frac: self.hidden_frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::trace::TraceEvent;
+
+    fn ev(start: f64, end: f64, kind: TraceKind) -> TraceEvent {
+        TraceEvent { start_us: start, end_us: end, kind }
+    }
+
+    fn trace() -> Trace {
+        Trace {
+            world: 2,
+            fingerprint: String::new(),
+            meta: vec![],
+            events: vec![
+                // rank 0: a 10us segment with a nested 8us kernel call,
+                // then a 4us transfer it sources
+                ev(
+                    0.0,
+                    10.0,
+                    TraceKind::Compute {
+                        rank: 0,
+                        op: 0,
+                        calls: 1,
+                        tiles: 1,
+                        flops: 1e6,
+                        quantized: false,
+                    },
+                ),
+                ev(1.0, 9.0, TraceKind::Kernel { rank: 0, op: 0, call: 0, artifact: "g".into() }),
+                ev(
+                    10.0,
+                    14.0,
+                    TraceKind::Transfer {
+                        src: 0,
+                        dst: 1,
+                        bytes: 1024,
+                        pieces: 1,
+                        backend: BackendKind::CopyEngine,
+                        comm_sms: 0,
+                        reduce: false,
+                        signal: 0,
+                    },
+                ),
+                // rank 1: waits 14us then nothing else
+                ev(0.0, 14.0, TraceKind::Wait { rank: 1, op: 0, signal: 0 }),
+            ],
+        }
+    }
+
+    #[test]
+    fn usage_totals_and_makespans() {
+        let r = analyze(&trace());
+        assert_eq!(r.world, 2);
+        assert_eq!(r.events, 4);
+        // kernel nested in a segment: compute counted once (10us, not 18)
+        assert_eq!(r.per_rank[0].compute_us, 10.0);
+        assert_eq!(r.per_rank[0].comm_us, 4.0);
+        assert_eq!(r.per_rank[0].busy_us, 14.0);
+        assert_eq!(r.per_rank[1].wait_us, 14.0);
+        assert_eq!(r.per_rank[1].busy_us, 0.0);
+        assert_eq!(r.wall_makespan_us, 14.0);
+        assert_eq!(r.busy_makespan_us, 14.0);
+        // 4us comm, 14us waits -> nothing hidden (clamped at 0)
+        assert_eq!(r.hidden_frac, 0.0);
+    }
+
+    #[test]
+    fn kernels_count_when_no_segment_span_exists() {
+        let mut t = trace();
+        t.events.retain(|e| !matches!(e.kind, TraceKind::Compute { .. }));
+        let r = analyze(&t);
+        assert_eq!(r.per_rank[0].compute_us, 8.0);
+    }
+
+    #[test]
+    fn divergence_and_tables() {
+        let r = analyze(&trace());
+        assert!((r.divergence(7.0) - 0.5).abs() < 1e-12);
+        assert_eq!(r.divergence(14.0), 0.0);
+        let t = r.table();
+        assert_eq!(t.rows.len(), 2);
+        // rank 0 slack: wall 14 - end 14 = 0; rank 1 identical here
+        assert_eq!(t.rows[0].1[4], 0.0);
+        let d = r.divergence_table("case", 7.0);
+        assert_eq!(d.rows[0].1[0], 7.0);
+        assert!(d.render().contains("divergence"));
+        assert!(r.summary_line().contains("4 events"), "{}", r.summary_line());
+        let s = r.stats();
+        assert_eq!(s.events, 4);
+        assert_eq!(s.busy_makespan_us, 14.0);
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let t = Trace { world: 2, fingerprint: String::new(), meta: vec![], events: vec![] };
+        let r = analyze(&t);
+        assert_eq!(r.wall_makespan_us, 0.0);
+        assert_eq!(r.busy_makespan_us, 0.0);
+        assert!(r.hidden_frac.is_nan());
+        assert!(r.divergence(1.0).is_nan());
+    }
+
+    #[test]
+    fn full_overlap_hides_everything() {
+        // comm with zero wait time -> hidden fraction 1
+        let t = Trace {
+            world: 2,
+            fingerprint: String::new(),
+            meta: vec![],
+            events: vec![ev(
+                0.0,
+                5.0,
+                TraceKind::Transfer {
+                    src: 0,
+                    dst: 1,
+                    bytes: 64,
+                    pieces: 1,
+                    backend: BackendKind::CopyEngine,
+                    comm_sms: 0,
+                    reduce: false,
+                    signal: 0,
+                },
+            )],
+        };
+        assert_eq!(analyze(&t).hidden_frac, 1.0);
+    }
+}

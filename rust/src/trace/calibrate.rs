@@ -1,0 +1,543 @@
+//! Measured-curve calibration: fit the `.topo` hardware model to a
+//! captured [`Trace`] so the simulator predicts the machine that actually
+//! ran, not the hand-written reference.
+//!
+//! What gets fitted (everything else in the description is preserved):
+//!
+//! * **Per-backend bandwidth curves** — for every backend with traced
+//!   transfer samples, ordinary least squares on the existing curve
+//!   parameterization (`backend::transfer_time_with`). The model is linear
+//!   once rearranged: with `x` the per-launch ramp bytes and
+//!   `y = (t - link_lat) / launches`,
+//!   `y = issue + (x + half) / (peak · smramp · 1e3)` — slope gives
+//!   `peak`, intercept gives `issue` (with `half` kept from the prior row;
+//!   slope and intercept cannot separate `issue` from `half/peak`, and
+//!   `half` needs a size sweep far wider than one run provides).
+//! * **Device compute rate** (`sm_tflops`) — the simulator's segment
+//!   duration is linear in `1/sm_tflops` ([`crate::sim::waves`]), so the
+//!   fit is a one-parameter least squares over traced compute segments
+//!   (each carries its modeled FLOPs and wave shape).
+//! * **Link bandwidth floors** — raised (never lowered) to the best
+//!   observed effective bandwidth per level, so the link clamp cannot cap
+//!   a fitted curve below what the machine demonstrably did.
+//!
+//! Fingerprint rule: a trace calibrates ONLY the machine shape it was
+//! captured on — [`calibrate`] requires the trace's
+//! [`crate::hw::fingerprint`] to equal the fingerprint of the target
+//! description instantiated at the trace's world size. The emitted
+//! description gets a `-cal` suffix and (being structurally different)
+//! its own fingerprint, so `TuneCache` entries tuned on the uncalibrated
+//! shape are automatically invalidated.
+
+use crate::backend::{BackendKind, Caps, Curve};
+use crate::error::{Error, Result};
+use crate::hw::TopoDesc;
+use crate::topo::{LinkLevel, Topology};
+use crate::trace::{Trace, TraceKind};
+
+/// Achieved MXU fraction assumed when fitting the compute rate — must
+/// match the [`crate::sim::SimParams::default`] the exec cases simulate
+/// under, or the fitted rate would be silently rescaled.
+const FIT_MXU_EFF: f64 = 0.85;
+
+/// Fit outcome for one backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurveFit {
+    pub backend: BackendKind,
+    pub samples: usize,
+    pub before: Curve,
+    pub after: Curve,
+}
+
+/// A completed calibration: the updated description plus what changed.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// The calibrated description (print with [`crate::hw::print_desc`]).
+    pub desc: TopoDesc,
+    /// One entry per backend observed in the trace.
+    pub curves: Vec<CurveFit>,
+    /// (before, after, samples) for the device compute rate, when compute
+    /// segments were traced.
+    pub sm_tflops: Option<(f64, f64, usize)>,
+    /// Link levels whose bandwidth floor was raised: (level tag, before,
+    /// after GB/s).
+    pub link_floors: Vec<(&'static str, f64, f64)>,
+}
+
+struct XferSample {
+    bytes: usize,
+    pieces: usize,
+    comm_sms: usize,
+    dur_us: f64,
+    lat_us: f64,
+}
+
+/// Least-squares curve fit for one backend's samples (see module doc).
+fn fit_curve(prior: Curve, caps: Caps, samples: &[XferSample]) -> Curve {
+    let launches = |s: &XferSample| if caps.host_launched { s.pieces.max(1) } else { 1 } as f64;
+    let ramp = |s: &XferSample| {
+        if prior.sms_for_peak == 0 {
+            1.0
+        } else {
+            (s.comm_sms as f64 / prior.sms_for_peak as f64).clamp(1e-3, 1.0)
+        }
+    };
+    let pts: Vec<(f64, f64, f64)> = samples
+        .iter()
+        .map(|s| {
+            let l = launches(s);
+            let x = s.bytes as f64 / l; // per-launch ramp bytes
+            let y = ((s.dur_us - s.lat_us) / l).max(0.0);
+            (x, y, ramp(s))
+        })
+        .collect();
+    let n = pts.len() as f64;
+    if n == 0.0 {
+        return prior;
+    }
+    let s_ramp = pts.iter().map(|(_, _, r)| r).sum::<f64>() / n;
+    let mx = pts.iter().map(|(x, ..)| x).sum::<f64>() / n;
+    let my = pts.iter().map(|(_, y, _)| y).sum::<f64>() / n;
+    let sxx: f64 = pts.iter().map(|(x, ..)| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = pts.iter().map(|(x, y, _)| (x - mx) * (y - my)).sum();
+    let mut c = prior;
+    if sxx > 0.0 {
+        let beta = sxy / sxx; // µs per ramp byte = 1/(peak·smramp·1e3)
+        if beta.is_finite() && beta > 0.0 {
+            c.peak_gbps = (1.0 / (beta * s_ramp * 1e3)).clamp(1e-3, 1e9);
+        }
+    }
+    // intercept -> issue overhead, with the wire term at the mean size
+    // removed under the fitted peak (issue floor keeps the curve sane when
+    // samples are noise-dominated)
+    let wire_at_mean = (mx + c.half_size) / (c.peak_gbps * s_ramp * 1e3);
+    c.issue_us = (my - wire_at_mean).max(0.01);
+    c
+}
+
+/// Fit the device compute rate from traced segments: each segment's
+/// simulated duration is `K_i / r` with `K_i` the wave-model duration at
+/// `sm_tflops = 1` ([`crate::sim::waves`]), so least squares over
+/// `dur_i ≈ K_i · (1/r)` has the closed form `1/r = Σ K·d / Σ K²`.
+fn fit_sm_tflops(sms: usize, segs: &[(usize, f64, bool, f64)]) -> Option<(f64, usize)> {
+    // segs: (tiles, total flops, quantized, measured duration)
+    let mut skd = 0.0;
+    let mut skk = 0.0;
+    let mut n = 0usize;
+    for &(tiles, flops, quantized, dur) in segs {
+        if tiles == 0 || flops <= 0.0 || dur <= 0.0 {
+            continue;
+        }
+        let mean_tile_us_at_r1 = (flops / tiles as f64) / (1e6 * FIT_MXU_EFF);
+        let k = if quantized {
+            crate::sim::waves::segment_duration_us(tiles, mean_tile_us_at_r1, sms, 0.0)
+        } else {
+            crate::sim::waves::streaming_duration_us(tiles, mean_tile_us_at_r1, sms, 0.0)
+        };
+        skd += k * dur;
+        skk += k * k;
+        n += 1;
+    }
+    if n == 0 || skk <= 0.0 || skd <= 0.0 {
+        return None;
+    }
+    Some(((skk / skd).clamp(1e-9, 1e9), n))
+}
+
+/// Calibrate `desc` from a trace captured on the same machine shape.
+///
+/// Errors when the trace carries no fingerprint, the fingerprint does not
+/// match `desc` at the trace's world size, or a traced backend has no row
+/// on the description's arch (impossible for a genuine same-shape trace).
+pub fn calibrate(trace: &Trace, desc: &TopoDesc) -> Result<Calibration> {
+    if trace.fingerprint.is_empty() {
+        return Err(Error::Trace(
+            "trace carries no topology fingerprint; re-capture with `exec --trace` \
+             (calibration refuses anonymous traces)"
+                .into(),
+        ));
+    }
+    let topo: Topology = desc.instantiate(trace.world)?;
+    let fp = crate::hw::fingerprint(&topo);
+    if trace.fingerprint != fp {
+        return Err(Error::Trace(format!(
+            "trace fingerprint {} does not match topology `{}` at world {} ({fp}); \
+             calibrations must not cross machine shapes",
+            trace.fingerprint, desc.name, trace.world
+        )));
+    }
+
+    // -- collect samples -------------------------------------------------
+    let mut by_backend: Vec<(BackendKind, Vec<XferSample>)> = Vec::new();
+    let mut segs: Vec<(usize, f64, bool, f64)> = Vec::new();
+    let mut best_eff: [(f64, bool); 3] = [(0.0, false); 3]; // local/intra/inter
+    for ev in &trace.events {
+        match &ev.kind {
+            TraceKind::Transfer { src, dst, bytes, pieces, backend, comm_sms, .. } => {
+                let link = topo.link(*src, *dst)?;
+                let dur = ev.dur_us();
+                if dur > 0.0 && *bytes > 0 {
+                    let idx = match link.level {
+                        LinkLevel::Local => 0,
+                        LinkLevel::IntraNode => 1,
+                        LinkLevel::InterNode => 2,
+                    };
+                    let eff = *bytes as f64 / (dur * 1e3);
+                    if eff > best_eff[idx].0 {
+                        best_eff[idx] = (eff, true);
+                    }
+                }
+                let sample = XferSample {
+                    bytes: *bytes,
+                    pieces: *pieces,
+                    comm_sms: *comm_sms,
+                    dur_us: dur,
+                    lat_us: link.lat_us,
+                };
+                match by_backend.iter_mut().find(|(b, _)| b == backend) {
+                    Some((_, v)) => v.push(sample),
+                    None => by_backend.push((*backend, vec![sample])),
+                }
+            }
+            TraceKind::Compute { tiles, flops, quantized, .. } => {
+                segs.push((*tiles, *flops, *quantized, ev.dur_us()));
+            }
+            _ => {}
+        }
+    }
+    if by_backend.is_empty() && segs.is_empty() {
+        return Err(Error::Trace(
+            "trace contains no transfer or compute samples; nothing to calibrate".into(),
+        ));
+    }
+    by_backend.sort_by_key(|(b, _)| b.index());
+
+    // -- fit -------------------------------------------------------------
+    let mut out = desc.clone();
+    if !out.name.ends_with("-cal") {
+        out.name.push_str("-cal");
+    }
+
+    let mut curves = Vec::new();
+    for (backend, samples) in &by_backend {
+        let entry = desc.arch.entry(*backend).ok_or_else(|| {
+            Error::Trace(format!(
+                "trace used backend {} but arch `{}` has no row for it — \
+                 the trace cannot be from this machine shape",
+                backend.name(),
+                desc.arch.name()
+            ))
+        })?;
+        let after = fit_curve(entry.curve, entry.caps, samples);
+        out.arch.set(*backend, entry.caps, after);
+        curves.push(CurveFit {
+            backend: *backend,
+            samples: samples.len(),
+            before: entry.curve,
+            after,
+        });
+    }
+
+    // The simulator runs segments on `sms_per_device - reserved_comm_sms`;
+    // reconstruct the traced plan's reservation by codegen's own rule
+    // (dedicated-SM backends statically reserve their comm SMs) so the
+    // compute fit models the pool the segments actually map back onto.
+    let reserved = by_backend
+        .iter()
+        .filter(|(b, _)| desc.arch.caps(*b).dedicated_sms)
+        .flat_map(|(_, v)| v.iter().map(|s| s.comm_sms))
+        .max()
+        .unwrap_or(0);
+    let pool = desc.sms_per_device.saturating_sub(reserved).max(1);
+    let sm_tflops = fit_sm_tflops(pool, &segs).map(|(r, n)| (desc.sm_tflops, r, n));
+    if let Some((_, fitted, _)) = sm_tflops {
+        out.sm_tflops = fitted;
+    }
+
+    // raise link floors so the clamp never caps a demonstrated rate
+    let mut link_floors = Vec::new();
+    let links = [
+        ("local", &mut out.local),
+        ("intra", &mut out.intra),
+        ("inter", &mut out.inter),
+    ];
+    for (i, (tag, link)) in links.into_iter().enumerate() {
+        let (eff, seen) = best_eff[i];
+        let floor = eff * 1.05;
+        if seen && floor > link.bw_gbps {
+            link_floors.push((tag, link.bw_gbps, floor));
+            link.bw_gbps = floor;
+        }
+    }
+
+    Ok(Calibration { desc: out, curves, sm_tflops, link_floors })
+}
+
+impl Calibration {
+    /// Fit summary table ([`crate::metrics::Table`], paper-style).
+    pub fn table(&self) -> crate::metrics::Table {
+        let mut t = crate::metrics::Table::new(
+            "Calibration: fitted curve rows (measured vs prior)",
+            &["samples", "peak before", "peak after", "issue before", "issue after"],
+            "GB/s | us",
+        );
+        for f in &self.curves {
+            t.push_row(
+                f.backend.name(),
+                vec![
+                    f.samples as f64,
+                    f.before.peak_gbps,
+                    f.after.peak_gbps,
+                    f.before.issue_us,
+                    f.after.issue_us,
+                ],
+            );
+        }
+        if let Some((before, after, n)) = self.sm_tflops {
+            t.push_row("sm-tflops", vec![n as f64, before, after, f64::NAN, f64::NAN]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend;
+    use crate::trace::TraceEvent;
+
+    fn desc() -> TopoDesc {
+        crate::hw::catalog::desc("h100_node").unwrap()
+    }
+
+    fn stamped_trace(world: usize, events: Vec<TraceEvent>) -> Trace {
+        let topo = desc().instantiate(world).unwrap();
+        Trace {
+            world,
+            fingerprint: crate::hw::fingerprint(&topo),
+            meta: vec![],
+            events,
+        }
+    }
+
+    fn xfer(bytes: usize, dur_us: f64) -> TraceEvent {
+        TraceEvent {
+            start_us: 0.0,
+            end_us: dur_us,
+            kind: TraceKind::Transfer {
+                src: 0,
+                dst: 1,
+                bytes,
+                pieces: 1,
+                backend: BackendKind::CopyEngine,
+                comm_sms: 0,
+                reduce: false,
+                signal: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejected() {
+        let mut t = stamped_trace(2, vec![xfer(1024, 5.0)]);
+        t.fingerprint = "0000000000000000".into();
+        let e = calibrate(&t, &desc()).unwrap_err();
+        assert!(e.to_string().contains("must not cross machine shapes"), "{e}");
+        t.fingerprint = String::new();
+        let e = calibrate(&t, &desc()).unwrap_err();
+        assert!(e.to_string().contains("no topology fingerprint"), "{e}");
+        // world change is a shape change too: same events, world 4 print
+        let mut t4 = stamped_trace(2, vec![xfer(1024, 5.0)]);
+        t4.world = 4; // fingerprint still the world-2 one
+        assert!(calibrate(&t4, &desc()).is_err());
+    }
+
+    #[test]
+    fn empty_trace_rejected() {
+        let t = stamped_trace(2, vec![]);
+        let e = calibrate(&t, &desc()).unwrap_err();
+        assert!(e.to_string().contains("nothing to calibrate"), "{e}");
+    }
+
+    #[test]
+    fn curve_fit_recovers_a_synthetic_machine() {
+        // generate samples from a KNOWN curve, fit, and require the model's
+        // predictions to match the generator closely
+        let truth = Curve {
+            peak_gbps: 12.0,
+            half_size: backend::curve(BackendKind::CopyEngine).half_size,
+            issue_us: 7.0,
+            sms_for_peak: 0,
+        };
+        let caps = backend::caps(BackendKind::CopyEngine);
+        let d = desc();
+        let topo = d.instantiate(2).unwrap();
+        let lat = topo.intra.lat_us;
+        let events: Vec<TraceEvent> = [64usize << 10, 256 << 10, 1 << 20, 4 << 20]
+            .iter()
+            .map(|&bytes| {
+                // generator = the model itself, minus the link clamp (the
+                // synthetic peak is far below the link, clamp inert)
+                let dur = backend::transfer_time_with(truth, caps.host_launched, bytes, 1, 0, topo.intra);
+                xfer(bytes, dur)
+            })
+            .collect();
+        let t = stamped_trace(2, events);
+        let cal = calibrate(&t, &d).unwrap();
+        assert_eq!(cal.curves.len(), 1);
+        let fit = &cal.curves[0];
+        assert_eq!(fit.backend, BackendKind::CopyEngine);
+        assert_eq!(fit.samples, 4);
+        assert!(
+            (fit.after.peak_gbps - truth.peak_gbps).abs() / truth.peak_gbps < 0.15,
+            "peak {} vs {}",
+            fit.after.peak_gbps,
+            truth.peak_gbps
+        );
+        assert!(
+            (fit.after.issue_us - truth.issue_us).abs() < 1.5,
+            "issue {} vs {}",
+            fit.after.issue_us,
+            truth.issue_us
+        );
+        // the emitted description carries the fitted row, renamed, and
+        // fingerprints differently from the source shape
+        assert!(cal.desc.name.ends_with("-cal"), "{}", cal.desc.name);
+        let cal_topo = cal.desc.instantiate(2).unwrap();
+        assert_ne!(crate::hw::fingerprint(&cal_topo), t.fingerprint);
+        assert_eq!(
+            cal_topo.arch.curve(BackendKind::CopyEngine).peak_gbps,
+            fit.after.peak_gbps
+        );
+        // untraced backends keep their prior rows
+        assert_eq!(
+            cal_topo.arch.curve(BackendKind::TmaSpecialized),
+            backend::curve(BackendKind::TmaSpecialized)
+        );
+    }
+
+    #[test]
+    fn compute_fit_matches_measured_segments() {
+        let d = desc();
+        // one-wave segments measured at 100us for 1e6 flops/tile
+        let seg = |tiles: usize, dur: f64| TraceEvent {
+            start_us: 0.0,
+            end_us: dur,
+            kind: TraceKind::Compute {
+                rank: 0,
+                op: 0,
+                calls: tiles,
+                tiles,
+                flops: 1e6 * tiles as f64,
+                quantized: false,
+            },
+        };
+        let t = stamped_trace(2, vec![seg(1, 100.0), seg(2, 200.0), seg(4, 400.0)]);
+        let cal = calibrate(&t, &d).unwrap();
+        let (before, after, n) = cal.sm_tflops.unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(before, d.sm_tflops);
+        // streaming model: dur = flops/(sms·r·1e6·eff)
+        // -> r = flops/(sms·dur·1e6·eff) = 1e6/(132·100·1e6·0.85)
+        let want = 1e6 / (d.sms_per_device as f64 * 100.0 * 1e6 * FIT_MXU_EFF);
+        assert!((after - want).abs() / want < 1e-6, "{after} vs {want}");
+        assert_eq!(cal.desc.sm_tflops, after);
+        // a lint-style round trip of the emitted text holds
+        let text = crate::hw::print_desc(&cal.desc);
+        let reparsed = crate::hw::parse_desc(&text).unwrap();
+        assert_eq!(reparsed, cal.desc);
+    }
+
+    #[test]
+    fn compute_fit_honors_dedicated_sm_reservation() {
+        // A traced plan whose realization statically reserves comm SMs
+        // (dedicated backend) runs its segments on the REDUCED pool in the
+        // simulator — the fit must reconstruct that from the transfers, or
+        // re-simulating the traced plan would overpredict every segment.
+        let d = desc();
+        let seg = TraceEvent {
+            start_us: 0.0,
+            end_us: 100.0,
+            kind: TraceKind::Compute {
+                rank: 0,
+                op: 0,
+                calls: 1,
+                tiles: 1,
+                flops: 1e6,
+                quantized: false,
+            },
+        };
+        let ldst = TraceEvent {
+            start_us: 0.0,
+            end_us: 2.0,
+            kind: TraceKind::Transfer {
+                src: 0,
+                dst: 1,
+                bytes: 4096,
+                pieces: 1,
+                backend: BackendKind::LdStSpecialized, // dedicated-SM row
+                comm_sms: 32,
+                reduce: true,
+                signal: 0,
+            },
+        };
+        let t = stamped_trace(2, vec![seg, ldst]);
+        let cal = calibrate(&t, &d).unwrap();
+        let (_, after, _) = cal.sm_tflops.unwrap();
+        let pool = (d.sms_per_device - 32) as f64;
+        let want = 1e6 / (pool * 100.0 * 1e6 * FIT_MXU_EFF);
+        assert!((after - want).abs() / want < 1e-6, "{after} vs {want}");
+    }
+
+    #[test]
+    fn link_floor_raised_when_measured_faster() {
+        let d = desc();
+        // 64 MiB in 10us = 6400 GB/s effective, far above the intra link
+        let t = stamped_trace(2, vec![xfer(64 << 20, 10.0)]);
+        let cal = calibrate(&t, &d).unwrap();
+        assert_eq!(cal.link_floors.len(), 1);
+        let (tag, before, after) = cal.link_floors[0];
+        assert_eq!(tag, "intra");
+        assert_eq!(before, d.intra.bw_gbps);
+        assert!(after > before);
+        assert_eq!(cal.desc.intra.bw_gbps, after);
+        // slow transfers never lower a floor
+        let t = stamped_trace(2, vec![xfer(1024, 1000.0)]);
+        let cal = calibrate(&t, &d).unwrap();
+        assert!(cal.link_floors.is_empty());
+        assert_eq!(cal.desc.intra.bw_gbps, d.intra.bw_gbps);
+    }
+
+    #[test]
+    fn calibration_lowers_model_error_on_synthetic_samples() {
+        // end to end at the fit level: generated from a machine 50x slower
+        // than the catalog entry, the calibrated curve must predict the
+        // samples better than the prior on every sample
+        let d = desc();
+        let topo = d.instantiate(2).unwrap();
+        let caps = backend::caps(BackendKind::CopyEngine);
+        let slow = Curve { peak_gbps: 8.0, issue_us: 120.0, ..backend::curve(BackendKind::CopyEngine) };
+        let sizes = [32usize << 10, 128 << 10, 512 << 10, 2 << 20];
+        let events: Vec<TraceEvent> = sizes
+            .iter()
+            .map(|&b| {
+                xfer(b, backend::transfer_time_with(slow, caps.host_launched, b, 1, 0, topo.intra))
+            })
+            .collect();
+        let t = stamped_trace(2, events);
+        let cal = calibrate(&t, &d).unwrap();
+        let fitted = cal.curves[0].after;
+        let prior = cal.curves[0].before;
+        for &b in &sizes {
+            let want = backend::transfer_time_with(slow, caps.host_launched, b, 1, 0, topo.intra);
+            let got_fit = backend::transfer_time_with(fitted, caps.host_launched, b, 1, 0, topo.intra);
+            let got_prior =
+                backend::transfer_time_with(prior, caps.host_launched, b, 1, 0, topo.intra);
+            assert!(
+                (got_fit - want).abs() < (got_prior - want).abs(),
+                "{b}B: fit {got_fit} prior {got_prior} want {want}"
+            );
+        }
+        assert!(cal.table().render().contains("copy-engine"));
+    }
+}

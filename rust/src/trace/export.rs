@@ -1,0 +1,413 @@
+//! Chrome `trace_event` JSON export / import for [`Trace`]s.
+//!
+//! The exported file opens directly in `chrome://tracing` / Perfetto: one
+//! *compute* track and one *comm* track per rank (thread-name metadata
+//! events label them), every span a `"ph": "X"` complete event with `ts` /
+//! `dur` in microseconds, wait and kernel spans nesting inside their
+//! segment's span on the compute track. A `"syncopate"` top-level object
+//! (ignored by viewers) carries the world size, the
+//! [`crate::hw::fingerprint`] of the machine shape the run executed on,
+//! and free-form provenance metadata — everything [`super::calibrate`]
+//! needs to refuse cross-machine traces and rebuild the traced case.
+//!
+//! [`from_chrome_json`] inverts [`to_chrome_json`] exactly (timestamps are
+//! printed with `{}`, the shortest f64 round-trip form), and
+//! [`check_chrome_schema`] validates the structural contract without
+//! building a [`Trace`] — the CI smoke and the corpus test both run it.
+
+use crate::backend::BackendKind;
+use crate::error::{Error, Result};
+use crate::trace::json::{self, Json};
+use crate::trace::{Trace, TraceEvent, TraceKind};
+use crate::util::json_escape as esc;
+
+/// Track id: compute/wait/kernel spans of rank `r` on tid `2r`, its
+/// outgoing transfers on tid `2r + 1` (transfers overlap compute in the
+/// parallel engine; separate tracks keep the viewer's nesting clean).
+fn tid(ev: &TraceEvent) -> usize {
+    match ev.kind {
+        TraceKind::Transfer { .. } => 2 * ev.rank() + 1,
+        _ => 2 * ev.rank(),
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> String {
+    let (name, cat, args) = match &ev.kind {
+        TraceKind::Transfer { src, dst, bytes, pieces, backend, comm_sms, reduce, signal } => (
+            format!("{src}->{dst} {}", backend.name()),
+            "transfer",
+            format!(
+                "{{\"src\": {src}, \"dst\": {dst}, \"bytes\": {bytes}, \"pieces\": {pieces}, \
+                 \"backend\": \"{}\", \"sms\": {comm_sms}, \"reduce\": {reduce}, \
+                 \"signal\": {signal}}}",
+                backend.name()
+            ),
+        ),
+        TraceKind::Wait { rank, op, signal } => (
+            format!("wait sig{signal}"),
+            "wait",
+            format!("{{\"rank\": {rank}, \"op\": {op}, \"signal\": {signal}}}"),
+        ),
+        TraceKind::Kernel { rank, op, call, artifact } => (
+            esc(artifact),
+            "kernel",
+            format!("{{\"rank\": {rank}, \"op\": {op}, \"call\": {call}}}"),
+        ),
+        TraceKind::Compute { rank, op, calls, tiles, flops, quantized } => (
+            format!("seg {tiles} tiles"),
+            "compute",
+            format!(
+                "{{\"rank\": {rank}, \"op\": {op}, \"calls\": {calls}, \"tiles\": {tiles}, \
+                 \"flops\": {flops}, \"quantized\": {quantized}}}"
+            ),
+        ),
+    };
+    // `end` is ours, not Chrome's (viewers ignore unknown keys): `ts + dur`
+    // does not always reproduce `end_us` bit-exactly in f64, and the
+    // importer promises an exact round trip
+    format!(
+        "    {{\"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"name\": \"{name}\", \
+         \"cat\": \"{cat}\", \"ts\": {}, \"dur\": {}, \"end\": {}, \"args\": {args}}}",
+        tid(ev),
+        ev.start_us,
+        ev.dur_us(),
+        ev.end_us
+    )
+}
+
+/// Render a trace as Chrome `trace_event` JSON.
+pub fn to_chrome_json(trace: &Trace) -> String {
+    let mut out = String::from("{\n  \"displayTimeUnit\": \"ms\",\n");
+    out.push_str(&format!(
+        "  \"syncopate\": {{\"version\": 1, \"world\": {}, \"fingerprint\": \"{}\", \
+         \"meta\": {{",
+        trace.world,
+        esc(&trace.fingerprint)
+    ));
+    for (i, (k, v)) in trace.meta.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("\"{}\": \"{}\"", esc(k), esc(v)));
+    }
+    out.push_str("}},\n  \"traceEvents\": [\n");
+    let mut lines = Vec::new();
+    // thread-name metadata: label every rank's compute + comm track
+    for r in 0..trace.world {
+        for (lane, label) in [(2 * r, format!("rank {r}")), (2 * r + 1, format!("rank {r} comm"))]
+        {
+            lines.push(format!(
+                "    {{\"ph\": \"M\", \"pid\": 0, \"tid\": {lane}, \"name\": \"thread_name\", \
+                 \"args\": {{\"name\": \"{label}\"}}}}"
+            ));
+        }
+    }
+    lines.extend(trace.events.iter().map(event_json));
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Per-category required `args` keys (the schema contract).
+const REQUIRED_ARGS: [(&str, &[&str]); 4] = [
+    ("transfer", &["src", "dst", "bytes", "pieces", "backend", "sms", "reduce", "signal"]),
+    ("wait", &["rank", "op", "signal"]),
+    ("kernel", &["rank", "op", "call"]),
+    ("compute", &["rank", "op", "calls", "tiles", "flops", "quantized"]),
+];
+
+/// Validate the structural contract of an exported trace: a JSON object
+/// with a `traceEvents` array whose `"X"` events carry `name`/`cat`/`ts`/
+/// `dur`/`tid` and the per-category `args` keys, plus the `syncopate`
+/// header with `world` and `fingerprint`. Returns the `"X"` event count.
+pub fn check_chrome_schema(text: &str) -> Result<usize> {
+    check_parsed(&json::parse(text)?)
+}
+
+/// [`check_chrome_schema`] over an already-parsed document, so the
+/// importer pays the parse exactly once.
+fn check_parsed(doc: &Json) -> Result<usize> {
+    let sync = doc
+        .get("syncopate")
+        .ok_or_else(|| Error::Trace("missing `syncopate` header object".into()))?;
+    let world = sync
+        .get("world")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Trace("syncopate.world missing or not an integer".into()))?;
+    if world == 0 {
+        return Err(Error::Trace("syncopate.world must be >= 1".into()));
+    }
+    if sync.get("fingerprint").and_then(Json::as_str).is_none() {
+        return Err(Error::Trace("syncopate.fingerprint missing or not a string".into()));
+    }
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Trace("missing `traceEvents` array".into()))?;
+    let mut spans = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Trace(format!("event {i}: missing `ph`")))?;
+        match ph {
+            "M" => continue, // metadata (thread names)
+            "X" => {}
+            other => {
+                return Err(Error::Trace(format!(
+                    "event {i}: unsupported phase `{other}` (exporter only emits X/M)"
+                )))
+            }
+        }
+        for key in ["ts", "dur"] {
+            if ev.get(key).and_then(Json::as_f64).is_none() {
+                return Err(Error::Trace(format!("event {i}: missing numeric `{key}`")));
+            }
+        }
+        if ev.get("tid").and_then(Json::as_usize).is_none() {
+            return Err(Error::Trace(format!("event {i}: missing integer `tid`")));
+        }
+        if ev.get("name").and_then(Json::as_str).is_none() {
+            return Err(Error::Trace(format!("event {i}: missing string `name`")));
+        }
+        let cat = ev
+            .get("cat")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Trace(format!("event {i}: missing string `cat`")))?;
+        let required = REQUIRED_ARGS
+            .iter()
+            .find(|(c, _)| *c == cat)
+            .map(|(_, keys)| *keys)
+            .ok_or_else(|| Error::Trace(format!("event {i}: unknown category `{cat}`")))?;
+        let args = ev
+            .get("args")
+            .ok_or_else(|| Error::Trace(format!("event {i}: missing `args` object")))?;
+        for key in required {
+            if args.get(key).is_none() {
+                return Err(Error::Trace(format!(
+                    "event {i} ({cat}): args missing `{key}`"
+                )));
+            }
+        }
+        spans += 1;
+    }
+    Ok(spans)
+}
+
+fn arg_usize(args: &Json, key: &str, i: usize) -> Result<usize> {
+    args.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Trace(format!("event {i}: args.{key} missing or not an integer")))
+}
+
+fn arg_f64(args: &Json, key: &str, i: usize) -> Result<f64> {
+    args.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Trace(format!("event {i}: args.{key} missing or not a number")))
+}
+
+/// Parse an exported trace back into a [`Trace`] (schema-checking as it
+/// goes). Inverse of [`to_chrome_json`].
+pub fn from_chrome_json(text: &str) -> Result<Trace> {
+    let doc = json::parse(text)?;
+    check_parsed(&doc)?;
+    let sync = doc.get("syncopate").expect("schema-checked");
+    let world = sync.get("world").and_then(Json::as_usize).expect("schema-checked");
+    let fingerprint = sync
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .expect("schema-checked")
+        .to_string();
+    let mut meta = Vec::new();
+    if let Some(Json::Obj(pairs)) = sync.get("meta") {
+        for (k, v) in pairs {
+            let v = v
+                .as_str()
+                .ok_or_else(|| Error::Trace(format!("syncopate.meta.{k} is not a string")))?;
+            meta.push((k.clone(), v.to_string()));
+        }
+    }
+    meta.sort();
+
+    let mut events = Vec::new();
+    for (i, ev) in doc.get("traceEvents").and_then(Json::as_arr).expect("schema-checked").iter().enumerate()
+    {
+        if ev.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let args = ev.get("args").expect("schema-checked");
+        let kind = match ev.get("cat").and_then(Json::as_str).expect("schema-checked") {
+            "transfer" => {
+                let b = args.get("backend").and_then(Json::as_str).ok_or_else(|| {
+                    Error::Trace(format!("event {i}: args.backend is not a string"))
+                })?;
+                TraceKind::Transfer {
+                    src: arg_usize(args, "src", i)?,
+                    dst: arg_usize(args, "dst", i)?,
+                    bytes: arg_usize(args, "bytes", i)?,
+                    pieces: arg_usize(args, "pieces", i)?,
+                    backend: BackendKind::by_name(b).ok_or_else(|| {
+                        Error::Trace(format!("event {i}: unknown backend `{b}`"))
+                    })?,
+                    comm_sms: arg_usize(args, "sms", i)?,
+                    reduce: matches!(args.get("reduce"), Some(Json::Bool(true))),
+                    signal: arg_usize(args, "signal", i)?,
+                }
+            }
+            "wait" => TraceKind::Wait {
+                rank: arg_usize(args, "rank", i)?,
+                op: arg_usize(args, "op", i)?,
+                signal: arg_usize(args, "signal", i)?,
+            },
+            "kernel" => TraceKind::Kernel {
+                rank: arg_usize(args, "rank", i)?,
+                op: arg_usize(args, "op", i)?,
+                call: arg_usize(args, "call", i)?,
+                artifact: ev.get("name").and_then(Json::as_str).expect("schema-checked").into(),
+            },
+            "compute" => TraceKind::Compute {
+                rank: arg_usize(args, "rank", i)?,
+                op: arg_usize(args, "op", i)?,
+                calls: arg_usize(args, "calls", i)?,
+                tiles: arg_usize(args, "tiles", i)?,
+                flops: arg_f64(args, "flops", i)?,
+                quantized: matches!(args.get("quantized"), Some(Json::Bool(true))),
+            },
+            _ => unreachable!("schema-checked"),
+        };
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("schema-checked");
+        let dur = ev.get("dur").and_then(Json::as_f64).expect("schema-checked");
+        // exporter-written traces carry the exact end; plain Chrome traces
+        // reconstruct it from ts + dur
+        let end = ev.get("end").and_then(Json::as_f64).unwrap_or(ts + dur);
+        let event = TraceEvent { start_us: ts, end_us: end, kind };
+        if event.rank() >= world {
+            return Err(Error::Trace(format!(
+                "event {i}: rank {} out of range for world {world}",
+                event.rank()
+            )));
+        }
+        events.push(event);
+    }
+    // restore the canonical lane grouping (rank-major, start-sorted)
+    events.sort_by(|a, b| a.rank().cmp(&b.rank()).then(a.start_us.total_cmp(&b.start_us)));
+    Ok(Trace { world, fingerprint, meta, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace {
+            world: 2,
+            fingerprint: "deadbeefdeadbeef".into(),
+            meta: vec![],
+            events: vec![
+                TraceEvent {
+                    start_us: 0.5,
+                    end_us: 3.25,
+                    kind: TraceKind::Compute {
+                        rank: 0,
+                        op: 1,
+                        calls: 2,
+                        tiles: 2,
+                        flops: 524288.0,
+                        quantized: false,
+                    },
+                },
+                TraceEvent {
+                    start_us: 0.6,
+                    end_us: 1.5,
+                    kind: TraceKind::Kernel {
+                        rank: 0,
+                        op: 1,
+                        call: 0,
+                        artifact: "gemm_32x128x128".into(),
+                    },
+                },
+                TraceEvent {
+                    start_us: 1.0,
+                    end_us: 2.0,
+                    kind: TraceKind::Transfer {
+                        src: 0,
+                        dst: 1,
+                        bytes: 16384,
+                        pieces: 4,
+                        backend: BackendKind::LdStSpecialized,
+                        comm_sms: 16,
+                        reduce: true,
+                        signal: 3,
+                    },
+                },
+                TraceEvent {
+                    start_us: 0.0,
+                    end_us: 2.1,
+                    kind: TraceKind::Wait { rank: 1, op: 0, signal: 3 },
+                },
+            ],
+        };
+        t.set_meta("case", "unit \"quoted\"");
+        t
+    }
+
+    #[test]
+    fn export_passes_schema_and_counts_spans() {
+        let t = sample_trace();
+        let txt = to_chrome_json(&t);
+        assert_eq!(check_chrome_schema(&txt).unwrap(), t.events.len());
+        // viewers need these verbatim
+        assert!(txt.contains("\"traceEvents\""), "{txt}");
+        assert!(txt.contains("\"ph\": \"X\""));
+        assert!(txt.contains("thread_name"));
+        assert!(txt.contains("rank 0 comm"));
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let t = sample_trace();
+        let back = from_chrome_json(&to_chrome_json(&t)).unwrap();
+        assert_eq!(back.world, t.world);
+        assert_eq!(back.fingerprint, t.fingerprint);
+        assert_eq!(back.meta, t.meta);
+        // events re-sorted into lane order, contents preserved exactly
+        assert_eq!(back.events.len(), t.events.len());
+        let mut want = t.events.clone();
+        want.sort_by(|a, b| a.rank().cmp(&b.rank()).then(a.start_us.total_cmp(&b.start_us)));
+        assert_eq!(back.events, want);
+    }
+
+    #[test]
+    fn schema_rejects_malformed_traces() {
+        // not JSON / missing header / missing args key / unknown category
+        assert!(check_chrome_schema("not json").is_err());
+        assert!(check_chrome_schema("{\"traceEvents\": []}").is_err());
+        let no_world = "{\"syncopate\": {\"fingerprint\": \"f\"}, \"traceEvents\": []}";
+        assert!(check_chrome_schema(no_world).unwrap_err().to_string().contains("world"));
+        let bad_args = "{\"syncopate\": {\"world\": 2, \"fingerprint\": \"f\"}, \
+            \"traceEvents\": [{\"ph\": \"X\", \"tid\": 0, \"name\": \"n\", \"cat\": \"wait\", \
+            \"ts\": 0, \"dur\": 1, \"args\": {\"rank\": 0, \"op\": 0}}]}";
+        let e = check_chrome_schema(bad_args).unwrap_err();
+        assert!(e.to_string().contains("signal"), "{e}");
+        let bad_cat = bad_args.replace("\"wait\"", "\"warp\"");
+        assert!(check_chrome_schema(&bad_cat).unwrap_err().to_string().contains("warp"));
+    }
+
+    #[test]
+    fn import_rejects_out_of_range_ranks_and_bad_backends() {
+        let t = sample_trace();
+        let txt = to_chrome_json(&t);
+        let shrunk = txt.replace("\"world\": 2", "\"world\": 1");
+        let e = from_chrome_json(&shrunk).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        let warped = txt.replace("ldst-specialized", "warp-drive");
+        assert!(from_chrome_json(&warped).is_err());
+    }
+
+    #[test]
+    fn empty_trace_round_trips() {
+        let t = Trace { world: 1, fingerprint: "f".into(), meta: vec![], events: vec![] };
+        let back = from_chrome_json(&to_chrome_json(&t)).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,301 @@
+//! Chunk-level execution tracing + measured-curve calibration: the
+//! sim↔execution feedback loop.
+//!
+//! Everything upstream of this module *predicts*: `sim::` scores plans on
+//! the `.topo` curve store, the autotuner ranks candidates on those scores.
+//! Nothing measured what the exec engines actually did — so the hardware
+//! model stayed a hand-written artifact. This subsystem closes the loop:
+//!
+//! * **Capture** (this file) — both exec engines emit timestamped
+//!   [`TraceEvent`]s (transfer applies with bytes/peer/backend, signal-wait
+//!   spans, kernel-call spans, compute-segment spans) into a [`TraceSink`]
+//!   with one lock per rank lane, toggled per run: when tracing is off the
+//!   engines carry a `None` sink and the hot path is a dead branch.
+//! * **Export / analyze** ([`export`], [`analyze`]) — Chrome `trace_event`
+//!   JSON (one compute + one comm track per rank, wait spans nested in
+//!   their op's track) with a schema-checked importer, plus an overlap
+//!   report: comm-hidden fraction, busy-critical-path makespan, per-rank
+//!   slack, and the sim-vs-trace divergence row — all rendered through
+//!   [`crate::metrics::Table`] so `trace overlap` prints paper-style.
+//! * **Calibrate** ([`calibrate`]) — least-squares fits of per-backend
+//!   bandwidth [`crate::backend::Curve`] rows (and the device compute
+//!   rate) from traced samples, emitted as an updated `.topo` through
+//!   `hw::format`'s canonical printer. Calibrations are keyed by
+//!   [`crate::hw::fingerprint`]: a trace only calibrates the machine shape
+//!   it was captured on.
+//!
+//! Event identity: both engines interpret the same
+//! [`crate::exec::PreparedPlan`], so a traced run produces the same event
+//! *set* (kinds, ranks, op indices, signals — [`Trace::event_keys`])
+//! under either engine; only timestamps differ. Tests assert this for
+//! every registry exec case.
+
+pub mod analyze;
+pub mod calibrate;
+mod json;
+pub mod export;
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::backend::BackendKind;
+
+pub use analyze::{analyze, OverlapReport, TraceStats};
+pub use calibrate::{calibrate, Calibration};
+pub use export::{check_chrome_schema, from_chrome_json, to_chrome_json};
+
+/// What one traced span was doing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// One applied chunk transfer (attributed to the source rank's comm
+    /// lane). `signal` is the plan-unique completion signal — the event's
+    /// identity across engines.
+    Transfer {
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        pieces: usize,
+        backend: BackendKind,
+        comm_sms: usize,
+        reduce: bool,
+        signal: usize,
+    },
+    /// A rank blocked on (then passed) a dependency signal. `op` is the
+    /// plan op index of the `Wait`.
+    Wait { rank: usize, op: usize, signal: usize },
+    /// One kernel call (`artifact` names the AOT entry, or the built-in
+    /// family for artifact-free calls).
+    Kernel { rank: usize, op: usize, call: usize, artifact: String },
+    /// A whole compute segment (its kernel calls nest inside). `flops` is
+    /// the segment's modeled total, carried so calibration can fit the
+    /// device compute rate; `quantized` mirrors the plan's wave model.
+    Compute { rank: usize, op: usize, calls: usize, tiles: usize, flops: f64, quantized: bool },
+}
+
+/// One timestamped span. Times are microseconds from the sink's origin
+/// (run start).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub start_us: f64,
+    pub end_us: f64,
+    pub kind: TraceKind,
+}
+
+impl TraceEvent {
+    pub fn dur_us(&self) -> f64 {
+        (self.end_us - self.start_us).max(0.0)
+    }
+
+    /// The rank whose lane this event lives on (transfers: the source).
+    pub fn rank(&self) -> usize {
+        match &self.kind {
+            TraceKind::Transfer { src, .. } => *src,
+            TraceKind::Wait { rank, .. }
+            | TraceKind::Kernel { rank, .. }
+            | TraceKind::Compute { rank, .. } => *rank,
+        }
+    }
+
+    /// Timestamp-free identity, stable across engines: two traced runs of
+    /// the same prepared plan produce equal key multisets.
+    pub fn key(&self) -> String {
+        match &self.kind {
+            TraceKind::Transfer { src, dst, bytes, pieces, backend, reduce, signal, .. } => {
+                format!(
+                    "xfer sig{signal} {src}->{dst} {bytes}B p{pieces} {} r{}",
+                    backend.name(),
+                    *reduce as u8
+                )
+            }
+            TraceKind::Wait { rank, op, signal } => format!("wait r{rank} op{op} sig{signal}"),
+            TraceKind::Kernel { rank, op, call, artifact } => {
+                format!("call r{rank} op{op} c{call} {artifact}")
+            }
+            TraceKind::Compute { rank, op, calls, tiles, .. } => {
+                format!("seg r{rank} op{op} t{tiles} c{calls}")
+            }
+        }
+    }
+}
+
+/// Lock-cheap event collector the engines write into: one mutexed lane per
+/// rank, so rank threads contend only when the shared transfer servicer
+/// lands a transfer on their lane. Created per traced run; the engines
+/// take `Option<&TraceSink>` and skip every clock read when it is `None`.
+#[derive(Debug)]
+pub struct TraceSink {
+    origin: Instant,
+    lanes: Vec<Mutex<Vec<TraceEvent>>>,
+}
+
+impl TraceSink {
+    pub fn new(world: usize) -> Self {
+        TraceSink {
+            origin: Instant::now(),
+            lanes: (0..world.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Microseconds since the sink was created (the run clock).
+    pub fn now_us(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record one event on its rank's lane.
+    pub fn push(&self, ev: TraceEvent) {
+        let lane = ev.rank().min(self.lanes.len() - 1);
+        self.lanes[lane].lock().unwrap().push(ev);
+    }
+
+    /// Drain into an immutable [`Trace`] (events sorted per rank by start
+    /// time; fingerprint/meta left for the caller to stamp).
+    pub fn into_trace(self, world: usize) -> Trace {
+        let mut events = Vec::new();
+        for lane in self.lanes {
+            let mut evs = lane.into_inner().unwrap();
+            evs.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+            events.extend(evs);
+        }
+        Trace { world, fingerprint: String::new(), meta: Vec::new(), events }
+    }
+}
+
+/// A finished capture: every event of one run, plus the machine-shape
+/// fingerprint and free-form provenance metadata (case name, world, seed,
+/// ... — whatever the producer knows). The fingerprint is load-bearing:
+/// [`calibrate`] refuses traces whose fingerprint does not match the
+/// topology being calibrated, so measured curves never leak across
+/// machine shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub world: usize,
+    /// [`crate::hw::fingerprint`] of the topology the run executed on
+    /// (empty when unknown — e.g. a hand-built trace).
+    pub fingerprint: String,
+    /// Sorted (key, value) provenance pairs.
+    pub meta: Vec<(String, String)>,
+    /// All events, grouped by rank lane, sorted by start within each lane.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Stamp provenance (sorts keys; replaces an existing key).
+    pub fn set_meta(&mut self, key: &str, value: &str) {
+        self.meta.retain(|(k, _)| k != key);
+        self.meta.push((key.to_string(), value.to_string()));
+        self.meta.sort();
+    }
+
+    /// Look up a provenance value.
+    pub fn meta(&self, key: &str) -> Option<&str> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Sorted timestamp-free event keys — the cross-engine identity set.
+    pub fn event_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self.events.iter().map(TraceEvent::key).collect();
+        keys.sort();
+        keys
+    }
+
+    /// Event count of one kind class: "transfer" | "wait" | "kernel" |
+    /// "compute".
+    pub fn count(&self, class: &str) -> usize {
+        self.events
+            .iter()
+            .filter(|e| match &e.kind {
+                TraceKind::Transfer { .. } => class == "transfer",
+                TraceKind::Wait { .. } => class == "wait",
+                TraceKind::Kernel { .. } => class == "kernel",
+                TraceKind::Compute { .. } => class == "compute",
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xfer(signal: usize) -> TraceEvent {
+        TraceEvent {
+            start_us: 1.0,
+            end_us: 2.5,
+            kind: TraceKind::Transfer {
+                src: 0,
+                dst: 1,
+                bytes: 4096,
+                pieces: 1,
+                backend: BackendKind::CopyEngine,
+                comm_sms: 0,
+                reduce: false,
+                signal,
+            },
+        }
+    }
+
+    #[test]
+    fn sink_collects_per_rank_sorted() {
+        let sink = TraceSink::new(2);
+        sink.push(TraceEvent {
+            start_us: 5.0,
+            end_us: 6.0,
+            kind: TraceKind::Wait { rank: 1, op: 0, signal: 0 },
+        });
+        sink.push(xfer(0));
+        sink.push(TraceEvent {
+            start_us: 0.5,
+            end_us: 0.9,
+            kind: TraceKind::Kernel { rank: 0, op: 1, call: 0, artifact: "g".into() },
+        });
+        let t = sink.into_trace(2);
+        assert_eq!(t.world, 2);
+        assert_eq!(t.events.len(), 3);
+        // rank 0's lane first, sorted by start (kernel before transfer)
+        assert!(matches!(t.events[0].kind, TraceKind::Kernel { .. }));
+        assert!(matches!(t.events[1].kind, TraceKind::Transfer { .. }));
+        assert_eq!(t.events[2].rank(), 1);
+        assert_eq!(t.count("transfer"), 1);
+        assert_eq!(t.count("wait"), 1);
+        assert_eq!(t.count("kernel"), 1);
+        assert_eq!(t.count("compute"), 0);
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let sink = TraceSink::new(1);
+        let a = sink.now_us();
+        let b = sink.now_us();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn keys_are_timestamp_free_and_sorted() {
+        let mut a = xfer(3);
+        let mut b = xfer(3);
+        a.start_us = 0.0;
+        b.start_us = 99.0;
+        assert_eq!(a.key(), b.key());
+        let t = Trace {
+            world: 2,
+            fingerprint: String::new(),
+            meta: vec![],
+            events: vec![xfer(7), xfer(2)],
+        };
+        let keys = t.event_keys();
+        assert!(keys[0] < keys[1], "{keys:?}");
+        assert!(keys[0].contains("sig2"), "{keys:?}");
+    }
+
+    #[test]
+    fn meta_set_get_replace() {
+        let mut t = Trace { world: 2, fingerprint: "fp".into(), meta: vec![], events: vec![] };
+        t.set_meta("case", "ag-gemm");
+        t.set_meta("world", "4");
+        t.set_meta("case", "gemm-rs");
+        assert_eq!(t.meta("case"), Some("gemm-rs"));
+        assert_eq!(t.meta("world"), Some("4"));
+        assert_eq!(t.meta("nope"), None);
+        assert_eq!(t.meta.len(), 2);
+    }
+}
