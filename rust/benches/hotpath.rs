@@ -18,7 +18,10 @@ use syncopate::autotune::{self, Budget};
 use syncopate::coordinator::execases;
 use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::TuneConfig;
-use syncopate::exec::{prepare, run_prepared, run_prepared_traced, ExecOptions};
+use syncopate::exec::{
+    prepare, run_prepared, run_prepared_reusing, run_prepared_traced, ExecOptions, PlanArena,
+    SyncStrategy,
+};
 use syncopate::runtime::Runtime;
 use syncopate::sim::engine::simulate;
 use syncopate::workload::{OpKind, OperatorInstance, LLAMA3_70B};
@@ -174,6 +177,41 @@ fn main() {
                 on * 1e3
             );
         }
+    }
+
+    // -- synchronization cores: retained condvar baseline vs the lock-free
+    // atomic hot path, plus the arena-reuse entry point (zero allocation
+    // after the first run). Trace-off parallel, the production path.
+    println!("\n== parallel sync core: condvar baseline vs atomic (trace-off) ==");
+    for world in [2usize, 4, 8] {
+        let case = execases::ag_gemm(world, 2, 7).unwrap();
+        let prep = prepare(&case.plan, &case.sched.tensors).unwrap();
+        let condvar_opts =
+            ExecOptions { sync: SyncStrategy::Condvar, ..ExecOptions::parallel() };
+        let atomic_opts = ExecOptions::parallel();
+        let condvar =
+            res.bench(&format!("exec ag-gemm w{world} s2 parallel condvar"), 10, || {
+                let _ = run_prepared(&prep, &case.store, &rt, &condvar_opts).unwrap();
+            });
+        let atomic =
+            res.bench(&format!("exec ag-gemm w{world} s2 parallel atomic"), 10, || {
+                let _ = run_prepared(&prep, &case.store, &rt, &atomic_opts).unwrap();
+            });
+        let mut arena = PlanArena::new(&prep);
+        let reused =
+            res.bench(&format!("exec ag-gemm w{world} s2 parallel atomic+arena"), 10, || {
+                let _ =
+                    run_prepared_reusing(&prep, &mut arena, &case.store, &rt, &atomic_opts)
+                        .unwrap();
+            });
+        println!(
+            "  world {world}: atomic speedup over condvar {:.2}x (condvar {:.3} ms, \
+             atomic {:.3} ms, atomic+arena {:.3} ms)",
+            condvar / atomic,
+            condvar * 1e3,
+            atomic * 1e3,
+            reused * 1e3
+        );
     }
 
     res.write();

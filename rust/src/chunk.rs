@@ -200,11 +200,64 @@ impl Region {
         pieces
     }
 
+    /// Visit the row-major linear offset of every element in order,
+    /// allocating nothing for rank ≤ [`Region::MAX_STACK_RANK`] (strides
+    /// and the odometer live in stack arrays). This is the engine hot
+    /// path's streaming alternative to [`Region::linear_offsets`].
+    pub fn for_each_offset(&self, shape: &[usize], mut f: impl FnMut(usize)) {
+        assert_eq!(self.rank(), shape.len());
+        let rank = self.rank();
+        if rank > Self::MAX_STACK_RANK {
+            // Rare deep-rank fallback: heap-allocating odometer.
+            for o in self.linear_offsets_alloc(shape) {
+                f(o);
+            }
+            return;
+        }
+        let mut strides = [1usize; Self::MAX_STACK_RANK];
+        for d in (0..rank.saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        let mut idx = [0usize; Self::MAX_STACK_RANK];
+        loop {
+            let mut lin = 0usize;
+            for d in 0..rank {
+                lin += (idx[d] + self.offset[d]) * strides[d];
+            }
+            f(lin);
+            // odometer increment
+            let mut d = rank;
+            loop {
+                if d == 0 {
+                    return;
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < self.sizes[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Max tensor rank handled without heap allocation in
+    /// [`Region::for_each_offset`].
+    pub const MAX_STACK_RANK: usize = 8;
+
     /// Row-major linear offsets of every element (for buffer copies).
     ///
-    /// Only used by the real-numerics executor at small shapes.
+    /// Only used by the real-numerics executor at small shapes; streaming
+    /// callers should prefer [`Region::for_each_offset`].
     pub fn linear_offsets(&self, shape: &[usize]) -> Vec<usize> {
-        assert_eq!(self.rank(), shape.len());
+        let mut out = Vec::with_capacity(self.elems());
+        self.for_each_offset(shape, |o| out.push(o));
+        out
+    }
+
+    /// Heap-allocating odometer for regions deeper than
+    /// [`Region::MAX_STACK_RANK`].
+    fn linear_offsets_alloc(&self, shape: &[usize]) -> Vec<usize> {
         let mut strides = vec![1usize; shape.len()];
         for d in (0..shape.len().saturating_sub(1)).rev() {
             strides[d] = strides[d + 1] * shape[d + 1];
@@ -380,6 +433,26 @@ mod tests {
         let r = Region::cols(1, 2, 3);
         let offs = r.linear_offsets(&[3, 4]);
         assert_eq!(offs, vec![1, 2, 5, 6, 9, 10]);
+    }
+
+    #[test]
+    fn for_each_offset_matches_alloc_odometer() {
+        // stack-array path vs the heap odometer, across ranks and strides
+        let cases: Vec<(Region, Vec<usize>)> = vec![
+            (Region::rows(1, 2, 4), vec![4, 4]),
+            (Region::cols(1, 2, 3), vec![3, 4]),
+            (Region::new(vec![1, 0, 2], vec![2, 3, 2]), vec![4, 3, 4]),
+            (Region::new(vec![0], vec![5]), vec![5]),
+            // rank 9 exercises the > MAX_STACK_RANK fallback
+            (Region::new(vec![0; 9], vec![1, 2, 1, 2, 1, 2, 1, 2, 1]), vec![2; 9]),
+        ];
+        for (r, shape) in cases {
+            let mut streamed = Vec::new();
+            r.for_each_offset(&shape, |o| streamed.push(o));
+            assert_eq!(streamed, r.linear_offsets_alloc(&shape), "region {r:?}");
+            assert_eq!(streamed, r.linear_offsets(&shape));
+            assert_eq!(streamed.len(), r.elems());
+        }
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Sharded read-mostly plan cache for the coordinator worker pool.
+//!
+//! The pool used to share ONE `RwLock<HashMap>`: every cache hit still
+//! bounced the same lock word between worker cores, and any insert blocked
+//! every concurrent hit. [`ShardedCache`] splits the map N ways by key
+//! hash (FNV-1a, shard = `hash & (shards - 1)`), so lookups of different
+//! keys take different locks and writers only stall readers of their own
+//! shard. Shard count is rounded up to a power of two to keep the index a
+//! mask instead of a modulo.
+//!
+//! Semantics match the single-lock original: [`ShardedCache::insert_if_absent`]
+//! is first-writer-wins (racing workers compiled the same deterministic
+//! bits, so whichever insert lands first is canonical and the caller's
+//! value is dropped on the floor for later arrivals).
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// FNV-1a 64-bit: tiny, allocation-free, good dispersion on short
+/// `label|config` style keys. (std's `DefaultHasher` works too; FNV keeps
+/// the shard choice stable across Rust releases, which makes shard-balance
+/// tests deterministic.)
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A string-keyed concurrent cache, sharded by key hash.
+#[derive(Debug)]
+pub struct ShardedCache<V> {
+    shards: Vec<RwLock<HashMap<String, V>>>,
+    mask: u64,
+}
+
+impl<V: Clone> ShardedCache<V> {
+    /// Build with at least `shards` shards (rounded up to a power of two,
+    /// minimum 1).
+    pub fn new(shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        ShardedCache {
+            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            mask: (n - 1) as u64,
+        }
+    }
+
+    fn shard(&self, key: &str) -> &RwLock<HashMap<String, V>> {
+        &self.shards[(fnv1a(key) & self.mask) as usize]
+    }
+
+    /// Clone the cached value for `key`, if present.
+    pub fn get(&self, key: &str) -> Option<V> {
+        self.shard(key).read().unwrap().get(key).cloned()
+    }
+
+    /// Insert unless the key is already present (first writer wins).
+    /// Returns true if this call inserted.
+    pub fn insert_if_absent(&self, key: &str, value: V) -> bool {
+        let mut shard = self.shard(key).write().unwrap();
+        if shard.contains_key(key) {
+            return false;
+        }
+        shard.insert(key.to_string(), value);
+        true
+    }
+
+    /// Total entries across all shards. Takes the shard read locks one at
+    /// a time; exact only when writers are quiescent (tests, stats).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn shard_count_rounds_up_to_power_of_two() {
+        assert_eq!(ShardedCache::<u32>::new(0).num_shards(), 1);
+        assert_eq!(ShardedCache::<u32>::new(1).num_shards(), 1);
+        assert_eq!(ShardedCache::<u32>::new(5).num_shards(), 8);
+        assert_eq!(ShardedCache::<u32>::new(16).num_shards(), 16);
+    }
+
+    #[test]
+    fn get_insert_roundtrip_and_first_writer_wins() {
+        let c = ShardedCache::new(4);
+        assert!(c.is_empty());
+        assert!(c.get("a").is_none());
+        assert!(c.insert_if_absent("a", 1));
+        assert!(!c.insert_if_absent("a", 2), "second writer must lose");
+        assert_eq!(c.get("a"), Some(1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn keys_disperse_across_shards() {
+        let c = ShardedCache::new(8);
+        for i in 0..64 {
+            c.insert_if_absent(&format!("user-plan|{i:016x}"), i);
+        }
+        assert_eq!(c.len(), 64);
+        let occupied =
+            c.shards.iter().filter(|s| !s.read().unwrap().is_empty()).count();
+        assert!(occupied >= 4, "64 keys landed in only {occupied}/8 shards");
+    }
+
+    #[test]
+    fn concurrent_workers_agree_on_hits_and_misses() {
+        // the satellite's stress shape: 8 workers x 50 requests over 10
+        // keys; hits + misses must account for every request, exactly 10
+        // entries exist afterwards, and at most workers*keys inserts can
+        // have raced in.
+        const WORKERS: usize = 8;
+        const REQS: usize = 50;
+        const KEYS: usize = 10;
+        let c = ShardedCache::new(16);
+        let hits = AtomicUsize::new(0);
+        let misses = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for w in 0..WORKERS {
+                let (c, hits, misses) = (&c, &hits, &misses);
+                s.spawn(move || {
+                    for r in 0..REQS {
+                        let key = format!("k{}", (w + r) % KEYS);
+                        if let Some(v) = c.get(&key) {
+                            assert_eq!(v, (w + r) % KEYS, "value for {key} corrupted");
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            misses.fetch_add(1, Ordering::Relaxed);
+                            c.insert_if_absent(&key, (w + r) % KEYS);
+                        }
+                    }
+                });
+            }
+        });
+        let (h, m) = (hits.load(Ordering::Relaxed), misses.load(Ordering::Relaxed));
+        assert_eq!(h + m, WORKERS * REQS, "every request is a hit or a miss");
+        assert_eq!(c.len(), KEYS);
+        assert!(m >= KEYS, "each key misses at least once");
+        assert!(m <= WORKERS * KEYS, "misses bounded by worst-case racing");
+    }
+}

@@ -160,6 +160,62 @@ pub fn verify_modes_bit_identical(
     Ok((seq_stats, par_stats))
 }
 
+/// [`verify_modes_bit_identical`] extended across synchronization cores:
+/// runs the case sequentially, parallel/atomic, and parallel/condvar, and
+/// requires bit-identical f32 state and identical stats from all three —
+/// the safety net for the lock-free hot path (DESIGN.md §15).
+pub fn verify_sync_strategies_bit_identical(
+    build: &dyn Fn() -> Result<ExecCase>,
+    runtime: &Runtime,
+) -> Result<()> {
+    let engines: [(&str, ExecOptions); 3] = [
+        ("sequential", ExecOptions::sequential()),
+        ("parallel/atomic", ExecOptions::parallel()),
+        (
+            "parallel/condvar",
+            ExecOptions {
+                sync: crate::exec::SyncStrategy::Condvar,
+                ..ExecOptions::parallel()
+            },
+        ),
+    ];
+    let mut reference: Option<(String, Vec<String>, usize, ExecCase, ExecStats)> = None;
+    for (tag, opts) in engines {
+        let case = build()?;
+        let stats = run_with(&case.plan, &case.sched.tensors, &case.store, runtime, &opts)?;
+        verify_checks(&case.name, &format!(" ({tag})"), &case.store, &case.checks)?;
+        match &reference {
+            None => {
+                let name = case.name.clone();
+                let tensors: Vec<String> =
+                    case.store.names().into_iter().map(|s| s.to_string()).collect();
+                let world = case.store.world();
+                reference = Some((name, tensors, world, case, stats));
+            }
+            Some((name, tensors, world, ref_case, ref_stats)) => {
+                for t in tensors {
+                    for r in 0..*world {
+                        assert_bit_identical(
+                            &case.store.get(r, t)?,
+                            &ref_case.store.get(r, t)?,
+                            &format!("{name}: {tag} vs sequential `{t}`@rank{r}"),
+                        )?;
+                    }
+                }
+                if stats.transfers != ref_stats.transfers
+                    || stats.bytes_moved != ref_stats.bytes_moved
+                    || stats.compute_calls != ref_stats.compute_calls
+                {
+                    return Err(Error::Exec(format!(
+                        "{name}: stats diverge: {tag} {stats:?} vs sequential {ref_stats:?}"
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 fn run_and_verify_stats(case: &ExecCase, runtime: &Runtime) -> Result<ExecStats> {
     let stats = run_with(
         &case.plan,

@@ -11,9 +11,11 @@
 //!   execution (PJRT artifacts or the host-reference backend) and numeric
 //!   verification against host oracles (`exec::`).
 //! * [`service`] — a multi-worker request pool that serves compiled
-//!   operators (tune-once, run-many) from a shared `RwLock` plan cache,
-//!   the "runtime" half of the paper's compiler + runtime framework.
+//!   operators (tune-once, run-many) from a sharded plan cache
+//!   ([`cache::ShardedCache`]), the "runtime" half of the paper's
+//!   compiler + runtime framework.
 
+pub mod cache;
 pub mod execases;
 pub mod operators;
 pub mod service;

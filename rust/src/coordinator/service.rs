@@ -6,16 +6,16 @@
 //! std worker threads draining one shared mpsc queue (dequeue serialized
 //! behind a mutex, processing fully parallel), which is all the request
 //! path needs — requests are CPU-bound compilations/simulations, not I/O.
-//! Compiled plans land in a process-wide cache behind an `RwLock`: reads
-//! (cache hits) never block each other, and a key is compiled at most a
-//! handful of times under race but inserted once (first writer wins, so
-//! responses stay deterministic).
+//! Compiled plans land in a process-wide [`ShardedCache`] (key-hash
+//! sharded `RwLock` maps): hits on different keys take different locks,
+//! and a key is compiled at most a handful of times under race but
+//! inserted once (first writer wins, so responses stay deterministic).
 
-use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 use std::thread;
 
+use crate::coordinator::cache::ShardedCache;
 use crate::coordinator::operators::compile_operator;
 use crate::coordinator::TuneConfig;
 use crate::error::{Error, Result};
@@ -101,7 +101,10 @@ struct CachedPlan {
     user_meta: Option<(f64, String)>,
 }
 
-type PlanCache = HashMap<String, CachedPlan>;
+/// 16 shards comfortably exceeds the worker-pool sizes we spawn (≤ 8 in
+/// tests), so two workers rarely contend on the same shard lock.
+type PlanCache = ShardedCache<CachedPlan>;
+const CACHE_SHARDS: usize = 16;
 
 /// A running coordinator service (worker pool).
 pub struct Coordinator {
@@ -196,7 +199,7 @@ impl Coordinator {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Envelope>();
         let rx = Arc::new(Mutex::new(rx));
-        let cache: Arc<RwLock<PlanCache>> = Arc::new(RwLock::new(HashMap::new()));
+        let cache: Arc<PlanCache> = Arc::new(ShardedCache::new(CACHE_SHARDS));
         let topo = Arc::new(topo);
         let handles = (0..workers)
             .map(|_| {
@@ -252,7 +255,7 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<PlanCache>) {
+fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &PlanCache) {
     // Lazily opened on the first user-plan request: operator requests are
     // sim-only and never touch the artifact runtime.
     let mut runtime: Option<Runtime> = None;
@@ -268,7 +271,7 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<
             }
             Envelope::Req(Request::Run { op, cfg }, reply) => {
                 let key = format!("{}|{}", op.label(), cfg.label());
-                let cached = cache.read().unwrap().get(&key).cloned();
+                let cached = cache.get(&key);
                 let cache_hit = cached.is_some();
                 let compiled = match cached {
                     Some(c) => Ok((c.plan, c.params)),
@@ -278,9 +281,10 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &RwLock<
                     if !cache_hit {
                         // first writer wins; racing workers agree anyway
                         // (compilation is deterministic)
-                        cache.write().unwrap().entry(key.clone()).or_insert_with(|| {
-                            CachedPlan { plan: plan.clone(), params, user_meta: None }
-                        });
+                        cache.insert_if_absent(
+                            &key,
+                            CachedPlan { plan: plan.clone(), params, user_meta: None },
+                        );
                     }
                     let r = simulate(&plan, topo, params)?;
                     Ok(Response {
@@ -306,7 +310,7 @@ fn serve_user_plan(
     opts: &crate::exec::ExecOptions,
     traced: bool,
     topo: &Topology,
-    cache: &RwLock<PlanCache>,
+    cache: &PlanCache,
     runtime: &mut Option<Runtime>,
 ) -> Result<UserPlanResponse> {
     let sched = crate::plan_io::parse_schedule(text)?;
@@ -322,7 +326,7 @@ fn serve_user_plan(
     let hash = crate::plan_io::content_hash(&crate::plan_io::print_schedule(&sched)?);
     let key = format!("user-plan|{hash}");
 
-    let cached = cache.read().unwrap().get(&key).cloned();
+    let cached = cache.get(&key);
     let cache_hit = cached.is_some();
     let (plan, sim_makespan_us, backend_label) = match cached {
         Some(CachedPlan { plan, user_meta: Some((makespan, label)), .. }) => {
@@ -342,11 +346,14 @@ fn serve_user_plan(
             let sim = simulate(&plan, topo, params)?;
             let label = realization_label(&plan);
             // first writer wins; racing workers compiled the same bits
-            cache.write().unwrap().entry(key).or_insert_with(|| CachedPlan {
-                plan: plan.clone(),
-                params,
-                user_meta: Some((sim.makespan_us, label.clone())),
-            });
+            cache.insert_if_absent(
+                &key,
+                CachedPlan {
+                    plan: plan.clone(),
+                    params,
+                    user_meta: Some((sim.makespan_us, label.clone())),
+                },
+            );
             (plan, sim.makespan_us, label)
         }
     };
@@ -472,6 +479,43 @@ mod tests {
         // warm cache: a fresh request is a hit no matter which worker serves it
         let r = coord.run(op, TuneConfig::default()).unwrap();
         assert!(r.cache_hit);
+    }
+
+    #[test]
+    fn sharded_cache_consistent_under_concurrent_pool_load() {
+        // 8 workers hammer 3 distinct keys with 24 in-flight requests: every
+        // response is either a hit or a miss, results are identical per key,
+        // and once the pool drains, every key is warm.
+        let coord =
+            Coordinator::spawn_pool(crate::hw::catalog::topology("h100_node", 4).unwrap(), 8);
+        let op = OperatorInstance::gemm(OpKind::AgGemm, &LLAMA3_8B, 4096, 4);
+        let cfgs: Vec<TuneConfig> =
+            [1, 2, 4].iter().map(|&s| TuneConfig { split: s, ..Default::default() }).collect();
+        let rxs: Vec<_> = (0..24)
+            .map(|i| {
+                coord.submit(Request::Run { op, cfg: cfgs[i % cfgs.len()].clone() }).unwrap()
+            })
+            .collect();
+        let mut by_key: std::collections::HashMap<String, Vec<(f64, bool)>> = Default::default();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            by_key.entry(r.label.clone()).or_default().push((r.makespan_us, r.cache_hit));
+        }
+        assert_eq!(by_key.len(), 3);
+        for (key, results) in &by_key {
+            assert_eq!(results.len(), 8);
+            assert!(
+                results.windows(2).all(|w| w[0].0 == w[1].0),
+                "nondeterministic makespan for {key}"
+            );
+            let misses = results.iter().filter(|(_, hit)| !hit).count();
+            assert!(misses >= 1, "{key}: first request cannot be a hit");
+            assert!(misses <= 8, "{key}: more misses than workers");
+        }
+        // drained pool: every key is warm now
+        for cfg in cfgs {
+            assert!(coord.run(op, cfg).unwrap().cache_hit);
+        }
     }
 
     #[test]

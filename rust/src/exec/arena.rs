@@ -1,0 +1,188 @@
+//! Arena-allocated runtime state for one prepared plan.
+//!
+//! Everything the parallel engine mutates while interpreting a plan —
+//! signal words, parked-transfer queue storage, per-rank scratch — is
+//! sized from the [`PreparedPlan`] and allocated up front in a
+//! [`PlanArena`], so the run loop itself performs no heap allocation:
+//! queue pushes land in preallocated `Vec`s, drain passes reuse a scratch
+//! vector, and region copies stage through a buffer sized for the plan's
+//! largest transfer. An arena is reusable: [`PlanArena::reset`] clears
+//! state but keeps every capacity warm, so repeated runs of the same plan
+//! (the bench loop, a serving tier replaying a cached plan) stay
+//! allocation-free after the first.
+//!
+//! Capacities come from two fields `prepare()` computes while it walks
+//! the plan anyway: [`PreparedPlan::incoming`] (per-destination-rank
+//! Issue counts — a rank's queue can never hold more than every transfer
+//! addressed to it) and [`PreparedPlan::max_transfer_elems`] (the copy
+//! staging high-water mark).
+
+use std::sync::Mutex;
+use std::thread::Thread;
+
+use crate::exec::plan_prep::PreparedPlan;
+use crate::exec::signals::{SeenSignals, SignalBoard};
+
+/// A parked transfer, by reference: the (rank, op) coordinates of an
+/// `Issue` op in the prepared plan. Queues store these 8-byte handles
+/// instead of cloning `TransferDesc`s (dep vectors, chunk refs) into
+/// shared state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct QueuedTransfer {
+    pub(crate) rank: u32,
+    pub(crate) op: u32,
+}
+
+/// One destination rank's parked-transfer queue. Pushed by source ranks
+/// whose `Issue` found unmet deps; drained exclusively by the destination
+/// rank thread. The mutex is per-queue, so contention is pairwise
+/// (one producer vs one consumer) instead of global.
+#[derive(Debug)]
+pub(crate) struct TransferQueue {
+    pub(crate) items: Mutex<Vec<QueuedTransfer>>,
+}
+
+/// Per-rank-thread mutable state, handed to the rank thread at spawn.
+/// Lives in the arena (not on the thread's stack) so capacities survive
+/// across runs.
+#[derive(Debug)]
+pub(crate) struct RankLocal {
+    /// Monotonic local signal cache (DESIGN.md §15).
+    pub(crate) seen: SeenSignals,
+    /// Drain scratch: ready transfers pulled out of the queue per pass.
+    pub(crate) ready: Vec<QueuedTransfer>,
+    /// Region-copy staging buffer threaded through transfer applies.
+    pub(crate) copy: Vec<f32>,
+}
+
+/// All mutable engine state for one plan, preallocated.
+#[derive(Debug)]
+pub struct PlanArena {
+    pub(crate) board: SignalBoard,
+    pub(crate) queues: Vec<TransferQueue>,
+    pub(crate) rank_local: Vec<Mutex<RankLocal>>,
+    /// Rank thread handles, registered as each thread's first action so
+    /// producers can unpark a destination directly after a queue push.
+    pub(crate) threads: Vec<Mutex<Option<Thread>>>,
+    num_signals: usize,
+}
+
+impl PlanArena {
+    pub fn new(prep: &PreparedPlan) -> Self {
+        let world = prep.plan.world;
+        let num_signals = prep.plan.num_signals;
+        debug_assert_eq!(prep.incoming.len(), world);
+        PlanArena {
+            board: SignalBoard::new(num_signals),
+            queues: (0..world)
+                .map(|r| TransferQueue {
+                    items: Mutex::new(Vec::with_capacity(
+                        prep.incoming.get(r).copied().unwrap_or(0),
+                    )),
+                })
+                .collect(),
+            rank_local: (0..world)
+                .map(|r| {
+                    Mutex::new(RankLocal {
+                        seen: SeenSignals::new(num_signals),
+                        ready: Vec::with_capacity(prep.incoming.get(r).copied().unwrap_or(0)),
+                        copy: Vec::with_capacity(prep.max_transfer_elems),
+                    })
+                })
+                .collect(),
+            threads: (0..world).map(|_| Mutex::new(None)).collect(),
+            num_signals,
+        }
+    }
+
+    /// Clear run state, keep capacities. Called by the engine on entry so
+    /// a reused arena behaves exactly like a fresh one.
+    pub fn reset(&mut self) {
+        self.board.reset();
+        for q in &mut self.queues {
+            q.items.get_mut().unwrap().clear();
+        }
+        for l in &mut self.rank_local {
+            let l = l.get_mut().unwrap();
+            l.seen.reset();
+            l.ready.clear();
+            l.copy.clear();
+        }
+        for t in &mut self.threads {
+            *t.get_mut().unwrap() = None;
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Does this arena fit `prep`? Guards `run_prepared_reusing` against
+    /// an arena built for a different plan.
+    pub fn fits(&self, prep: &PreparedPlan) -> bool {
+        self.world() == prep.plan.world && self.num_signals == prep.plan.num_signals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{DType, TensorTable};
+    use crate::codegen::{ExecutablePlan, PlanOp, RankProgram};
+    use crate::exec::plan_prep::prepare;
+    use crate::testutil::transfer_desc;
+
+    fn two_rank_prep() -> PreparedPlan {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 4], DType::F32).unwrap();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram {
+                    ops: vec![PlanOp::Issue(transfer_desc(
+                        x,
+                        crate::chunk::Region::rows(0, 2, 4),
+                        0,
+                        0,
+                        1,
+                        vec![],
+                        false,
+                    ))],
+                },
+                RankProgram { ops: vec![PlanOp::Wait(0)] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        prepare(&plan, &t).unwrap()
+    }
+
+    #[test]
+    fn arena_sizes_from_prepared_plan() {
+        let prep = two_rank_prep();
+        // one transfer addressed to rank 1, none to rank 0
+        assert_eq!(prep.incoming, vec![0, 1]);
+        assert_eq!(prep.max_transfer_elems, 8); // 2x4 rows region
+        let arena = PlanArena::new(&prep);
+        assert_eq!(arena.world(), 2);
+        assert!(arena.fits(&prep));
+        assert!(arena.queues[1].items.lock().unwrap().capacity() >= 1);
+        assert!(arena.rank_local[0].lock().unwrap().copy.capacity() >= 8);
+    }
+
+    #[test]
+    fn reset_clears_state_but_keeps_capacity() {
+        let prep = two_rank_prep();
+        let mut arena = PlanArena::new(&prep);
+        arena.board.set(0);
+        arena.queues[1].items.lock().unwrap().push(QueuedTransfer { rank: 0, op: 0 });
+        arena.rank_local[1].lock().unwrap().copy.extend_from_slice(&[1.0; 8]);
+        let cap_before = arena.rank_local[1].lock().unwrap().copy.capacity();
+        arena.reset();
+        assert!(!arena.board.is_set(0));
+        assert!(arena.queues[1].items.lock().unwrap().is_empty());
+        let local = arena.rank_local[1].lock().unwrap();
+        assert!(local.copy.is_empty());
+        assert!(local.copy.capacity() >= cap_before);
+    }
+}

@@ -181,6 +181,32 @@ impl BufferStore {
         Ok(())
     }
 
+    /// Read a region into a caller-provided buffer (cleared first). The
+    /// allocation-free twin of [`BufferStore::read_region`]: the parallel
+    /// engine threads a per-rank scratch vector through here so steady-state
+    /// transfers never touch the heap once the scratch has grown to the
+    /// plan's largest region.
+    pub fn read_region_into(
+        &self,
+        rank: Rank,
+        name: &str,
+        region: &Region,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let buf = self.buf(rank, name)?;
+        let shape = &self.shapes[name];
+        if !region.fits(shape) {
+            return Err(Error::Exec(format!(
+                "read `{name}`: region {region:?} does not fit {shape:?}"
+            )));
+        }
+        out.clear();
+        out.reserve(region.elems());
+        let buf = buf.read().unwrap();
+        region.for_each_offset(shape, |o| out.push(buf[o]));
+        Ok(())
+    }
+
     /// Copy a region between ranks/tensors (the chunk-transfer primitive).
     ///
     /// Holds one buffer lock at a time: the source region is snapshotted,
@@ -206,6 +232,33 @@ impl BufferStore {
         let values = self.read_region(src_rank, src_name, src_region)?;
         self.write_region(dst_rank, dst_name, dst_region, &values, reduce)?;
         Ok(values.len() * 4)
+    }
+
+    /// [`BufferStore::transfer`] staging through a caller-provided scratch
+    /// buffer instead of a fresh `Vec` per copy. Same one-lock-at-a-time
+    /// discipline, same byte count returned.
+    #[allow(clippy::too_many_arguments)]
+    pub fn transfer_into(
+        &self,
+        src_rank: Rank,
+        src_name: &str,
+        src_region: &Region,
+        dst_rank: Rank,
+        dst_name: &str,
+        dst_region: &Region,
+        reduce: bool,
+        scratch: &mut Vec<f32>,
+    ) -> Result<usize> {
+        if src_region.elems() != dst_region.elems() {
+            return Err(Error::Exec(format!(
+                "transfer: src {} elems != dst {} elems",
+                src_region.elems(),
+                dst_region.elems()
+            )));
+        }
+        self.read_region_into(src_rank, src_name, src_region, scratch)?;
+        self.write_region(dst_rank, dst_name, dst_region, scratch, reduce)?;
+        Ok(scratch.len() * 4)
     }
 }
 
@@ -334,6 +387,43 @@ mod tests {
         // write proceeds after guards drop
         s.set(0, "x", &[1.0; 16]).unwrap();
         assert!(s.read_guard(0, "nope").is_err());
+    }
+
+    #[test]
+    fn read_region_into_matches_read_region() {
+        let s = store();
+        let vals: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        s.set(0, "x", &vals).unwrap();
+        let mut scratch = Vec::new();
+        for r in [Region::rows(1, 2, 4), Region::cols(1, 1, 4), Region::full(&[4, 4])] {
+            s.read_region_into(0, "x", &r, &mut scratch).unwrap();
+            assert_eq!(scratch, s.read_region(0, "x", &r).unwrap());
+        }
+        // scratch is cleared, not appended to
+        s.read_region_into(0, "x", &Region::rows(0, 1, 4), &mut scratch).unwrap();
+        assert_eq!(scratch.len(), 4);
+        assert!(s
+            .read_region_into(0, "x", &Region::rows(3, 2, 4), &mut scratch)
+            .is_err());
+    }
+
+    #[test]
+    fn transfer_into_matches_transfer_and_reuses_scratch() {
+        let s = store();
+        s.set(0, "x", &[2.0; 16]).unwrap();
+        let r = Region::rows(0, 2, 4);
+        let mut scratch = Vec::new();
+        let bytes = s.transfer_into(0, "x", &r, 1, "x", &r, false, &mut scratch).unwrap();
+        assert_eq!(bytes, 8 * 4);
+        assert_eq!(&s.get(1, "x").unwrap()[..8], &[2.0; 8]);
+        let cap = scratch.capacity();
+        // second transfer reuses the grown scratch without reallocating
+        s.transfer_into(0, "x", &r, 1, "x", &r, true, &mut scratch).unwrap();
+        assert_eq!(scratch.capacity(), cap);
+        assert_eq!(&s.get(1, "x").unwrap()[..8], &[4.0; 8]);
+        assert!(s
+            .transfer_into(0, "x", &Region::rows(0, 1, 4), 1, "x", &r, false, &mut scratch)
+            .is_err());
     }
 
     #[test]

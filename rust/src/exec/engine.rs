@@ -10,18 +10,23 @@
 //!   with no progress is reported as a deadlock with the stuck ops. This is
 //!   the *reference semantics* every other execution strategy is checked
 //!   against.
-//! * [`ExecMode::Parallel`] ([`super::parallel`]) — one worker thread per
-//!   rank over a shared [`super::signals::SignalBoard`], with bounded-wait
-//!   deadlock detection. Thanks to the deterministic reduction order
-//!   grafted in by [`super::plan_prep::prepare`], it produces bit-identical
-//!   f32 results to the sequential engine (DESIGN.md §6).
+//! * [`ExecMode::Parallel`] — one worker thread per rank with bounded-wait
+//!   deadlock detection, in one of two synchronization flavors selected by
+//!   [`SyncStrategy`]: [`super::parallel`] (atomic board, rank-owned
+//!   transfer queues, arena state — the production engine) or
+//!   [`super::parallel_condvar`] (the retained condvar baseline the bench
+//!   compares against). Thanks to the deterministic reduction order
+//!   grafted in by [`super::plan_prep::prepare`], both produce
+//!   bit-identical f32 results to the sequential engine (DESIGN.md §6,
+//!   §15).
 
 use crate::chunk::TensorTable;
 use crate::codegen::{CallSpec, ExecutablePlan, PlanOp, TransferDesc};
 use crate::error::{Error, Result};
+use crate::exec::arena::PlanArena;
 use crate::exec::buffers::BufferStore;
 use crate::exec::plan_prep::{prepare, PreparedPlan};
-use crate::exec::{ExecMode, ExecOptions};
+use crate::exec::{ExecMode, ExecOptions, SyncStrategy};
 use crate::runtime::Runtime;
 use crate::trace::{Trace, TraceEvent, TraceKind, TraceSink};
 
@@ -124,10 +129,38 @@ fn run_prepared_sunk(
             prep.plan.world
         )));
     }
-    match opts.mode {
-        ExecMode::Sequential => run_sequential(prep, store, runtime, sink),
-        ExecMode::Parallel => super::parallel::run_parallel(prep, store, runtime, opts, sink),
+    match (opts.mode, opts.sync) {
+        (ExecMode::Sequential, _) => run_sequential(prep, store, runtime, sink),
+        (ExecMode::Parallel, SyncStrategy::Atomic) => {
+            super::parallel::run_parallel(prep, store, runtime, opts, sink)
+        }
+        (ExecMode::Parallel, SyncStrategy::Condvar) => {
+            super::parallel_condvar::run_parallel_condvar(prep, store, runtime, opts, sink)
+        }
     }
+}
+
+/// Execute a prepared plan on the atomic parallel engine inside a
+/// caller-owned [`PlanArena`] (see [`PlanArena::new`]): repeated runs of
+/// one plan reuse every preallocated capacity, so the interpretation loop
+/// allocates nothing after the first run. `opts.mode`/`opts.sync` are
+/// ignored — this entry point IS the atomic parallel engine; only
+/// `wait_timeout` and `pin_cores` apply.
+pub fn run_prepared_reusing(
+    prep: &PreparedPlan,
+    arena: &mut PlanArena,
+    store: &BufferStore,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+) -> Result<ExecStats> {
+    if store.world() != prep.plan.world {
+        return Err(Error::Exec(format!(
+            "store world {} != plan world {}",
+            store.world(),
+            prep.plan.world
+        )));
+    }
+    super::parallel::run_parallel_in(prep, arena, store, runtime, opts, None)
 }
 
 /// Apply one transfer to the buffers; returns the bytes moved.
@@ -147,6 +180,62 @@ pub(crate) fn apply_transfer(
         &d.dst_chunk.region,
         d.reduce,
     )
+}
+
+/// [`apply_transfer`] staging through a caller-owned scratch buffer (the
+/// atomic engine's zero-allocation copy path — the scratch lives in the
+/// [`PlanArena`], sized for the plan's largest transfer).
+pub(crate) fn apply_transfer_scratch(
+    prep: &PreparedPlan,
+    d: &TransferDesc,
+    store: &BufferStore,
+    scratch: &mut Vec<f32>,
+) -> Result<usize> {
+    let src_name = prep.name(d.src_chunk.tensor)?;
+    let dst_name = prep.name(d.dst_chunk.tensor)?;
+    store.transfer_into(
+        d.src_rank,
+        src_name,
+        &d.src_chunk.region,
+        d.dst_rank,
+        dst_name,
+        &d.dst_chunk.region,
+        d.reduce,
+        scratch,
+    )
+}
+
+/// [`apply_transfer_scratch`] with the span recorded on the source rank's
+/// comm lane (same event shape as [`apply_transfer_sunk`], so traces are
+/// engine-agnostic). `sink == None` is the untraced hot path: one dead
+/// branch, no clock reads.
+pub(crate) fn apply_transfer_scratch_sunk(
+    prep: &PreparedPlan,
+    d: &TransferDesc,
+    store: &BufferStore,
+    scratch: &mut Vec<f32>,
+    sink: Option<&TraceSink>,
+) -> Result<usize> {
+    let Some(sink) = sink else {
+        return apply_transfer_scratch(prep, d, store, scratch);
+    };
+    let t0 = sink.now_us();
+    let bytes = apply_transfer_scratch(prep, d, store, scratch)?;
+    sink.push(TraceEvent {
+        start_us: t0,
+        end_us: sink.now_us(),
+        kind: TraceKind::Transfer {
+            src: d.src_rank,
+            dst: d.dst_rank,
+            bytes: d.bytes,
+            pieces: d.pieces,
+            backend: d.backend,
+            comm_sms: d.comm_sms,
+            reduce: d.reduce,
+            signal: d.signal,
+        },
+    });
+    Ok(bytes)
 }
 
 /// [`apply_transfer`] with the span recorded on the source rank's comm
@@ -484,10 +573,21 @@ mod tests {
         Runtime::host_reference()
     }
 
-    fn both_modes() -> [ExecOptions; 2] {
+    fn both_modes() -> [ExecOptions; 3] {
+        // "both" engines, with the parallel one in both sync flavors
         [
             ExecOptions::sequential(),
-            ExecOptions { mode: ExecMode::Parallel, wait_timeout: Duration::from_secs(5) },
+            ExecOptions {
+                mode: ExecMode::Parallel,
+                wait_timeout: Duration::from_secs(5),
+                ..ExecOptions::parallel()
+            },
+            ExecOptions {
+                mode: ExecMode::Parallel,
+                wait_timeout: Duration::from_secs(5),
+                sync: SyncStrategy::Condvar,
+                ..ExecOptions::parallel()
+            },
         ]
     }
 
@@ -570,11 +670,17 @@ mod tests {
         let e = run(&plan, &t, &mut store, &rt).unwrap_err();
         assert!(e.to_string().contains("deadlock"), "{e}");
         assert!(e.to_string().contains("rank 0"), "{e}");
-        // the parallel engine reports it too, within the bounded wait
-        let opts =
-            ExecOptions { mode: ExecMode::Parallel, wait_timeout: Duration::from_millis(100) };
-        let e = run_with(&plan, &t, &mut store, &rt, &opts).unwrap_err();
-        assert!(e.to_string().contains("deadlock"), "{e}");
+        // both parallel engines report it too, within the bounded wait
+        for sync in [SyncStrategy::Atomic, SyncStrategy::Condvar] {
+            let opts = ExecOptions {
+                mode: ExecMode::Parallel,
+                wait_timeout: Duration::from_millis(100),
+                sync,
+                ..ExecOptions::parallel()
+            };
+            let e = run_with(&plan, &t, &mut store, &rt, &opts).unwrap_err();
+            assert!(e.to_string().contains("deadlock"), "{e}");
+        }
     }
 
     #[test]
@@ -627,7 +733,40 @@ mod tests {
             }
             keysets.push(trace.event_keys());
         }
-        assert_eq!(keysets[0], keysets[1], "engines must agree on the event set");
+        for k in &keysets[1..] {
+            assert_eq!(&keysets[0], k, "engines must agree on the event set");
+        }
+    }
+
+    #[test]
+    fn arena_reuse_entry_point_matches_fresh_runs() {
+        // the public reuse API: same plan, same arena, repeated runs — each
+        // must match what a fresh parallel run produces
+        let (t, store) = table_and_store();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Issue(xfer(&t, 0, 0, 1, vec![], false))] },
+                RankProgram { ops: vec![PlanOp::Wait(0)] },
+            ],
+            num_signals: 1,
+            reserved_comm_sms: 0,
+        };
+        let rt = runtime();
+        let prep = prepare(&plan, &t).unwrap();
+        let mut arena = PlanArena::new(&prep);
+        let opts = ExecOptions::parallel();
+        for _ in 0..2 {
+            let run_store = store.clone();
+            run_store.set(0, "x", &[9.0; 16]).unwrap();
+            let stats =
+                super::run_prepared_reusing(&prep, &mut arena, &run_store, &rt, &opts).unwrap();
+            assert_eq!(stats.transfers, 1);
+            assert_eq!(&run_store.get(1, "x").unwrap()[..8], &[9.0; 8]);
+        }
+        // world-mismatched store is rejected before touching the engine
+        let bad = BufferStore::new(3);
+        assert!(super::run_prepared_reusing(&prep, &mut arena, &bad, &rt, &opts).is_err());
     }
 
     #[test]

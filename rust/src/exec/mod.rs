@@ -8,37 +8,53 @@
 //! Two engines interpret every plan (selected by [`ExecMode`]):
 //!
 //! * **Parallel** — the production path: one worker thread per rank over a
-//!   shared condvar-backed [`signals::SignalBoard`] and a sharded,
-//!   interior-mutable [`buffers::BufferStore`], so chunks genuinely land
-//!   while other ranks compute. Bounded waits turn cyclic schedules into
-//!   errors instead of hangs.
+//!   shared atomic [`signals::SignalBoard`] and a sharded, interior-mutable
+//!   [`buffers::BufferStore`], so chunks genuinely land while other ranks
+//!   compute. Bounded waits turn cyclic schedules into errors instead of
+//!   hangs. [`SyncStrategy`] selects between the lock-free atomic
+//!   synchronization core (default) and the retained condvar baseline
+//!   ([`signals_condvar::CondvarSignalBoard`]) kept for benchmarking.
 //! * **Sequential** — the deterministic single-threaded cooperative
 //!   interpreter kept as the *reference semantics*: ranks step round-robin,
 //!   failures are exactly reproducible.
 //!
 //! [`plan_prep::prepare`] grafts a canonical ordering over all accumulating
-//! writers into each plan, so the two modes produce bit-identical f32
+//! writers into each plan, so all engines produce bit-identical f32
 //! results — property tests assert this for every schedule template and
 //! world size (DESIGN.md §6).
 //!
-//! Both engines optionally emit chunk-level [`crate::trace`] events
+//! All engines optionally emit chunk-level [`crate::trace`] events
 //! (transfer applies, wait spans, kernel-call spans) through the
 //! `*_traced` entry points; an untraced run carries a `None` sink and pays
 //! one dead branch per op (DESIGN.md §14).
+//!
+//! The atomic parallel engine additionally supports arena reuse
+//! ([`PlanArena`] + [`run_prepared_reusing`]) for allocation-free repeated
+//! runs, and opt-in core pinning via [`ExecOptions::pin_cores`]
+//! (DESIGN.md §15).
 
+pub mod arena;
 pub mod buffers;
 pub mod engine;
 pub mod parallel;
+pub(crate) mod parallel_condvar;
+pub mod pin;
 pub mod plan_prep;
 pub mod signals;
+pub mod signals_condvar;
 pub mod verify;
 
 use std::time::Duration;
 
+pub use arena::PlanArena;
 pub use buffers::BufferStore;
-pub use engine::{run, run_prepared, run_prepared_traced, run_with, run_with_traced, ExecStats};
+pub use engine::{
+    run, run_prepared, run_prepared_reusing, run_prepared_traced, run_with, run_with_traced,
+    ExecStats,
+};
 pub use plan_prep::{prepare, PreparedPlan};
-pub use signals::SignalBoard;
+pub use signals::{SeenSignals, SignalBoard};
+pub use signals_condvar::CondvarSignalBoard;
 
 /// Which engine interprets the plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +78,30 @@ impl std::str::FromStr for ExecMode {
     }
 }
 
+/// Which synchronization core the parallel engine uses (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncStrategy {
+    /// Lock-free hot path: atomic signal words, targeted thread parking,
+    /// rank-owned transfer queues, arena-allocated plan state. Default.
+    Atomic,
+    /// Retained mutex+condvar baseline (`notify_all`, global pending-transfer
+    /// servicer). Kept for benchmark comparison; do not grow it.
+    Condvar,
+}
+
+impl std::str::FromStr for SyncStrategy {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "atomic" => Ok(SyncStrategy::Atomic),
+            "condvar" => Ok(SyncStrategy::Condvar),
+            other => Err(crate::error::Error::Exec(format!(
+                "unknown sync strategy `{other}` (expected `atomic` or `condvar`)"
+            ))),
+        }
+    }
+}
+
 /// Engine selection + bounded-wait budget for the parallel engine.
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
@@ -72,11 +112,23 @@ pub struct ExecOptions {
     /// progress however long the call runs. The sequential engine detects
     /// stalls exactly and ignores this.
     pub wait_timeout: Duration,
+    /// Parallel engine only: synchronization core. The sequential engine
+    /// ignores this.
+    pub sync: SyncStrategy,
+    /// Parallel engine only (atomic core): pin rank `r` to core
+    /// `pin_cores[r % pin_cores.len()]`. Best-effort — pinning failure is
+    /// ignored, unsupported platforms no-op. `None` or empty disables.
+    pub pin_cores: Option<Vec<usize>>,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { mode: ExecMode::Sequential, wait_timeout: Duration::from_secs(10) }
+        ExecOptions {
+            mode: ExecMode::Sequential,
+            wait_timeout: Duration::from_secs(10),
+            sync: SyncStrategy::Atomic,
+            pin_cores: None,
+        }
     }
 }
 
@@ -102,8 +154,17 @@ mod tests {
     }
 
     #[test]
+    fn sync_strategy_parses() {
+        assert_eq!("atomic".parse::<SyncStrategy>().unwrap(), SyncStrategy::Atomic);
+        assert_eq!("condvar".parse::<SyncStrategy>().unwrap(), SyncStrategy::Condvar);
+        assert!("spin".parse::<SyncStrategy>().is_err());
+    }
+
+    #[test]
     fn default_options_are_sequential_reference() {
         assert_eq!(ExecOptions::default().mode, ExecMode::Sequential);
         assert_eq!(ExecOptions::parallel().mode, ExecMode::Parallel);
+        assert_eq!(ExecOptions::default().sync, SyncStrategy::Atomic);
+        assert!(ExecOptions::default().pin_cores.is_none());
     }
 }

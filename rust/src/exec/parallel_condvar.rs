@@ -1,0 +1,443 @@
+//! The retained condvar-based parallel engine — the pre-atomic baseline.
+//!
+//! This is the parallel engine as it shipped before the lock-free rework
+//! (DESIGN.md §15): one worker thread per rank over a
+//! [`CondvarSignalBoard`], with transfers whose dependencies are unmet
+//! parked in a single global pending pool drained by a dedicated
+//! transfer-servicer loop on the caller's thread. It is kept selectable
+//! ([`crate::exec::SyncStrategy::Condvar`], `--sync condvar`) so the
+//! hotpath bench can compare the atomic engine against this baseline
+//! like-for-like; see [`crate::exec::parallel`] for the production
+//! engine and the rationale for each structural difference (per-rank
+//! queues instead of the global pool, targeted parking instead of
+//! `notify_all`, arena state instead of per-run allocation).
+//!
+//! Semantics are identical to the atomic engine: same deterministic
+//! reduction order (the plan arrives pre-augmented by
+//! [`super::plan_prep::prepare`]), same bounded-wait deadlock policy,
+//! same verdict message shapes. Bit-identity across all three engines is
+//! asserted per registry case in `tests/integration_parallel.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::codegen::{PlanOp, TransferDesc};
+use crate::error::{Error, Result};
+use crate::exec::buffers::BufferStore;
+use crate::exec::engine::{apply_transfer_sunk, exec_call_sunk, push_seg_event, ExecStats};
+use crate::exec::plan_prep::PreparedPlan;
+use crate::exec::signals_condvar::CondvarSignalBoard;
+use crate::exec::ExecOptions;
+use crate::runtime::Runtime;
+use crate::trace::{TraceEvent, TraceKind, TraceSink};
+
+/// `rank_pc` value meaning "this rank's program completed".
+const RANK_DONE: usize = usize::MAX;
+
+struct Shared<'p> {
+    prep: &'p PreparedPlan,
+    board: CondvarSignalBoard,
+    /// Issued transfers whose dependency signals were not yet met.
+    pending: Mutex<Vec<TransferDesc>>,
+    ranks_active: AtomicUsize,
+    /// Each rank's current op index ([`RANK_DONE`] once finished) — read
+    /// only by the deadlock verdict, so stuck ranks are named with the op
+    /// they are parked on. Relaxed stores: a stale-by-one read only makes
+    /// an error message stale-by-one.
+    rank_pc: Vec<AtomicUsize>,
+    stats: Mutex<ExecStats>,
+    fail: Mutex<Option<Error>>,
+    /// Event sink when the run is traced; `None` leaves the hot path with
+    /// a dead branch per op.
+    sink: Option<&'p TraceSink>,
+}
+
+impl Shared<'_> {
+    /// Apply a transfer with the board's busy marker held, so bounded
+    /// waiters elsewhere treat a long region copy as progress, not
+    /// deadlock (the marker transitions under the board lock — no
+    /// misdiagnosis window).
+    fn apply_busy(&self, d: &TransferDesc, store: &BufferStore) -> Result<usize> {
+        self.board.busy_begin();
+        let r = apply_transfer_sunk(self.prep, d, store, self.sink);
+        self.board.busy_end();
+        r
+    }
+
+    /// Where every unfinished rank is stuck, for deadlock verdicts.
+    fn stuck_ranks(&self) -> Vec<String> {
+        (0..self.prep.plan.world)
+            .filter_map(|r| {
+                let pc = self.rank_pc[r].load(Ordering::Relaxed);
+                if pc == RANK_DONE {
+                    return None;
+                }
+                let op = self.prep.plan.per_rank[r]
+                    .ops
+                    .get(pc)
+                    .map(|o| o.brief())
+                    .unwrap_or_else(|| "<end>".into());
+                Some(format!("rank {r} at op {pc} ({op})"))
+            })
+            .collect()
+    }
+
+    /// Record the first failure and wake every waiter.
+    fn record_fail(&self, e: Error) {
+        {
+            let mut f = self.fail.lock().unwrap();
+            if f.is_none() {
+                *f = Some(e);
+            }
+        }
+        self.board.abort();
+    }
+}
+
+pub(crate) fn run_parallel_condvar(
+    prep: &PreparedPlan,
+    store: &BufferStore,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+    sink: Option<&TraceSink>,
+) -> Result<ExecStats> {
+    let world = prep.plan.world;
+    let shared = Shared {
+        prep,
+        board: CondvarSignalBoard::new(prep.plan.num_signals),
+        pending: Mutex::new(Vec::new()),
+        ranks_active: AtomicUsize::new(world),
+        rank_pc: (0..world).map(|_| AtomicUsize::new(0)).collect(),
+        stats: Mutex::new(ExecStats::default()),
+        fail: Mutex::new(None),
+        sink,
+    };
+
+    std::thread::scope(|scope| {
+        for rank in 0..world {
+            let shared = &shared;
+            scope.spawn(move || {
+                match rank_body(shared, rank, store, runtime, opts) {
+                    Ok(local) => {
+                        shared.rank_pc[rank].store(RANK_DONE, Ordering::Relaxed);
+                        shared.stats.lock().unwrap().merge(&local);
+                    }
+                    Err(e) => shared.record_fail(e),
+                }
+                shared.ranks_active.fetch_sub(1, Ordering::SeqCst);
+                shared.board.touch();
+            });
+        }
+        // The caller's thread services parked transfers until all ranks
+        // finish and the pool drains (or the run fails).
+        servicer(&shared, store, opts);
+    });
+
+    if let Some(e) = shared.fail.lock().unwrap().take() {
+        return Err(e);
+    }
+    Ok(shared.stats.into_inner().unwrap())
+}
+
+/// Interpret one rank's program on its own thread.
+fn rank_body(
+    shared: &Shared<'_>,
+    rank: usize,
+    store: &BufferStore,
+    runtime: &Runtime,
+    opts: &ExecOptions,
+) -> Result<ExecStats> {
+    let prog = &shared.prep.plan.per_rank[rank];
+    let mut local = ExecStats::default();
+    for (op_index, op) in prog.ops.iter().enumerate() {
+        shared.rank_pc[rank].store(op_index, Ordering::Relaxed);
+        if shared.board.aborted() {
+            // another thread already recorded the real error
+            return Err(Error::Exec(format!("rank {rank}: run aborted")));
+        }
+        match op {
+            PlanOp::Overhead { .. } => {}
+            PlanOp::Wait(sig) => {
+                let t0 = shared.sink.map(|s| s.now_us());
+                shared.board.wait_all(&[*sig], opts.wait_timeout, || {
+                    format!("rank {rank} at op {op_index} (Wait(sig {sig}))")
+                })?;
+                if let (Some(s), Some(t0)) = (shared.sink, t0) {
+                    s.push(TraceEvent {
+                        start_us: t0,
+                        end_us: s.now_us(),
+                        kind: TraceKind::Wait { rank, op: op_index, signal: *sig },
+                    });
+                }
+                local.waits_hit += 1;
+            }
+            PlanOp::Issue(d) => {
+                if shared.board.all_set(&d.dep_signals) {
+                    let bytes = shared.apply_busy(d, store)?;
+                    local.transfers += 1;
+                    local.bytes_moved += bytes;
+                    shared.board.set(d.signal);
+                } else {
+                    // asynchronous issue: park it and move on
+                    shared.pending.lock().unwrap().push(d.clone());
+                    shared.board.touch();
+                }
+            }
+            PlanOp::Compute(seg) => {
+                let seg_start = shared.sink.map(|s| s.now_us());
+                for (ci, call) in seg.calls.iter().enumerate() {
+                    // mark the call busy so bounded waiters elsewhere
+                    // treat this rank as live, however long the kernel runs
+                    shared.board.busy_begin();
+                    let result =
+                        exec_call_sunk(call, rank, op_index, ci, store, runtime, shared.sink);
+                    shared.board.busy_end();
+                    result?;
+                    local.compute_calls += 1;
+                    if let Some(&ps) = shared.prep.call_signals.get(&(rank, op_index, ci)) {
+                        shared.board.set(ps);
+                    }
+                }
+                if let (Some(s), Some(t0)) = (shared.sink, seg_start) {
+                    if !seg.calls.is_empty() {
+                        push_seg_event(s, rank, op_index, seg, t0, s.now_us());
+                    }
+                }
+            }
+        }
+    }
+    Ok(local)
+}
+
+/// Drain parked transfers as their dependencies resolve; detect deadlock.
+fn servicer(shared: &Shared<'_>, store: &BufferStore, opts: &ExecOptions) {
+    loop {
+        if shared.board.aborted() {
+            return;
+        }
+        // Epoch snapshot BEFORE the readiness check: any signal set between
+        // the check and the wait bumps the epoch and the wait returns
+        // immediately — no lost wakeups.
+        let epoch = shared.board.epoch();
+
+        let ready: Vec<TransferDesc> = {
+            let mut q = shared.pending.lock().unwrap();
+            let mut ready = Vec::new();
+            let mut keep = Vec::new();
+            for d in q.drain(..) {
+                if shared.board.all_set(&d.dep_signals) {
+                    ready.push(d);
+                } else {
+                    keep.push(d);
+                }
+            }
+            *q = keep;
+            ready
+        };
+        let made_progress = !ready.is_empty();
+        for d in &ready {
+            match shared.apply_busy(d, store) {
+                Ok(bytes) => {
+                    {
+                        let mut st = shared.stats.lock().unwrap();
+                        st.transfers += 1;
+                        st.bytes_moved += bytes;
+                    }
+                    shared.board.set(d.signal);
+                }
+                Err(e) => {
+                    shared.record_fail(e);
+                    return;
+                }
+            }
+        }
+
+        let ranks_left = shared.ranks_active.load(Ordering::SeqCst);
+        let pending_left = shared.pending.lock().unwrap().len();
+        if ranks_left == 0 && pending_left == 0 {
+            return;
+        }
+        if made_progress {
+            continue; // re-check before sleeping
+        }
+
+        let msg = format!(
+            "transfer servicer: {pending_left} parked transfers, {ranks_left} ranks active"
+        );
+        match shared.board.wait_activity_since(epoch, opts.wait_timeout, || msg.clone()) {
+            Ok(true) => continue,   // activity — re-scan
+            Ok(false) => return,    // aborted elsewhere
+            Err(e) => {
+                // Bounded wait expired with no progress: deadlock verdict,
+                // enriched with WHO is stuck WHERE — each unfinished
+                // rank's current op, and each parked transfer's unmet
+                // dependency signals — instead of a bare timeout.
+                let parked: Vec<String> = shared
+                    .pending
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|d| {
+                        format!(
+                            "sig {} ({}->{}) missing deps {:?}",
+                            d.signal,
+                            d.src_rank,
+                            d.dst_rank,
+                            shared.board.unmet(&d.dep_signals)
+                        )
+                    })
+                    .collect();
+                let stuck = shared.stuck_ranks();
+                let stuck = if stuck.is_empty() {
+                    "none (all rank programs completed)".to_string()
+                } else {
+                    stuck.join("; ")
+                };
+                shared.record_fail(Error::Exec(format!(
+                    "{e}; stuck ranks: {stuck}; parked transfers: [{}]",
+                    parked.join(", ")
+                )));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Pool mechanics of the retained baseline engine; the same scenarios
+    // run against the atomic engine in exec::parallel::tests, and both
+    // verdict shapes are re-asserted per sync strategy in
+    // tests/integration_parallel.rs.
+    use super::*;
+    use crate::chunk::{DType, Region, TensorTable};
+    use crate::codegen::{ExecutablePlan, RankProgram};
+    use crate::exec::plan_prep::prepare;
+    use crate::testutil::transfer_desc;
+    use std::time::Duration;
+
+    fn opts(timeout: Duration) -> ExecOptions {
+        ExecOptions {
+            mode: crate::exec::ExecMode::Parallel,
+            wait_timeout: timeout,
+            sync: crate::exec::SyncStrategy::Condvar,
+            ..ExecOptions::parallel()
+        }
+    }
+
+    #[test]
+    fn forwarding_chain_completes_across_threads() {
+        // rank0 -> rank1 -> rank2 forwarding chain: rank1's send depends on
+        // rank0's arrival, so it parks in the pending pool and the servicer
+        // must fire it once signal 0 lands.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 4], DType::F32).unwrap();
+        let mut store = BufferStore::new(3);
+        store.declare("x", &[4, 4]).unwrap();
+        store.set(0, "x", &[5.0; 16]).unwrap();
+        let mk = |signal: usize, src: usize, dst: usize, deps: Vec<usize>| {
+            transfer_desc(x, Region::rows(0, 2, 4), signal, src, dst, deps, false)
+        };
+        let plan = ExecutablePlan {
+            world: 3,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Issue(mk(0, 0, 1, vec![]))] },
+                // issued before its dep is met -> parked
+                RankProgram { ops: vec![PlanOp::Issue(mk(1, 1, 2, vec![0]))] },
+                RankProgram { ops: vec![PlanOp::Wait(1)] },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let rt = Runtime::host_reference();
+        let stats =
+            run_parallel_condvar(&prep, &store, &rt, &opts(Duration::from_secs(5)), None)
+                .unwrap();
+        assert_eq!(stats.transfers, 2);
+        assert_eq!(stats.waits_hit, 1);
+        assert_eq!(&store.get(2, "x").unwrap()[..8], &[5.0; 8]);
+    }
+
+    #[test]
+    fn deadlock_verdict_names_stuck_rank_and_pending_signal() {
+        // Rank 0 waits forever on signal 1, which only rank 1's parked
+        // transfer would set — and that transfer's dep (signal 0) is never
+        // set either. Whichever bounded wait fires first (the rank's
+        // wait_all or the servicer), the error must name WHO is stuck on
+        // WHAT: a rank + op + signal, not a bare timeout.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 4], crate::chunk::DType::F32).unwrap();
+        let mut store = BufferStore::new(2);
+        store.declare("x", &[4, 4]).unwrap();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram { ops: vec![PlanOp::Wait(1)] },
+                RankProgram {
+                    ops: vec![PlanOp::Issue(transfer_desc(
+                        x,
+                        Region::rows(0, 2, 4),
+                        1,
+                        1,
+                        0,
+                        vec![0],
+                        false,
+                    ))],
+                },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let rt = Runtime::host_reference();
+        let e = run_parallel_condvar(&prep, &store, &rt, &opts(Duration::from_millis(100)), None)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("deadlock"), "{e}");
+        assert!(e.contains("rank 0") || e.contains("sig 1"), "{e}");
+        // the signal id of the blocking wait (or the parked transfer) is named
+        assert!(e.contains('1'), "{e}");
+    }
+
+    #[test]
+    fn servicer_verdict_lists_parked_transfers_with_unmet_deps() {
+        // No rank ever blocks: rank 0 parks a transfer whose dep (signal
+        // 1) nobody sets and finishes its program. Only the servicer is
+        // left holding the bag, so ITS verdict fires — and must list the
+        // parked transfer's signal and its unmet dependency.
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 4], crate::chunk::DType::F32).unwrap();
+        let mut store = BufferStore::new(2);
+        store.declare("x", &[4, 4]).unwrap();
+        let plan = ExecutablePlan {
+            world: 2,
+            per_rank: vec![
+                RankProgram {
+                    ops: vec![PlanOp::Issue(transfer_desc(
+                        x,
+                        Region::rows(0, 2, 4),
+                        0,
+                        0,
+                        1,
+                        vec![1],
+                        false,
+                    ))],
+                },
+                RankProgram::default(),
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        let rt = Runtime::host_reference();
+        let e = run_parallel_condvar(&prep, &store, &rt, &opts(Duration::from_millis(100)), None)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("deadlock"), "{e}");
+        assert!(e.contains("parked transfers"), "{e}");
+        assert!(e.contains("sig 0"), "missing parked signal: {e}");
+        assert!(e.contains("missing deps [1]"), "missing unmet dep list: {e}");
+        assert!(e.contains("all rank programs completed"), "{e}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Opt-in core pinning for the parallel engine's rank threads.
+//!
+//! Pinning is *best-effort everywhere*: [`pin_current_thread`] issues a raw
+//! `sched_setaffinity` syscall on Linux (no libc dependency — this crate is
+//! std-only) and returns `Err` on any other platform or on kernel refusal.
+//! The engine ignores the `Err`: an unpinnable environment (containers with
+//! restricted cpusets, non-Linux CI) runs exactly as before.
+//!
+//! Layouts map ranks to cores. [`identity_layout`] is the obvious
+//! `rank % cores` spread; [`layout_from_slack`] orders ranks by measured
+//! per-rank slack from a chunk trace (ascending — stragglers first), so the
+//! ranks with the least headroom get the lowest-numbered (conventionally
+//! least-contended) cores and never migrate mid-run.
+
+use crate::error::{Error, Result};
+
+/// Pin the calling thread to one CPU. Best-effort; see module docs.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_current_thread(cpu: usize) -> Result<()> {
+    // cpu_set_t is 1024 bits = 16 u64 words on Linux.
+    const WORDS: usize = 16;
+    if cpu >= WORDS * 64 {
+        return Err(Error::Exec(format!("cpu {cpu} out of cpu_set_t range")));
+    }
+    let mut mask = [0u64; WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    let size = core::mem::size_of_val(&mask);
+    let ret: isize;
+    // sched_setaffinity(pid=0 /* self */, size, &mask)
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") size,
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe {
+        core::arch::asm!(
+            "svc 0",
+            inlateout("x0") 0usize => ret, // pid = self
+            in("x1") size,
+            in("x2") mask.as_ptr(),
+            in("x8") 122usize, // __NR_sched_setaffinity
+            options(nostack),
+        );
+    }
+    if ret < 0 {
+        return Err(Error::Exec(format!(
+            "sched_setaffinity(cpu {cpu}) failed (errno {})",
+            -ret
+        )));
+    }
+    Ok(())
+}
+
+/// Non-Linux / non-{x86_64,aarch64} fallback: pinning unsupported.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_current_thread(_cpu: usize) -> Result<()> {
+    Err(Error::Exec("core pinning unsupported on this platform".into()))
+}
+
+/// `rank -> core` layout from traced per-rank slack (µs of idle headroom
+/// before the critical path; see `trace::analyze`). Ranks are ordered by
+/// ascending slack — stragglers first — and assigned cores round-robin, so
+/// with fewer ranks than cores every straggler gets a dedicated core.
+///
+/// Returns `layout` where rank `r` should pin to `layout[r]`.
+pub fn layout_from_slack(slack_us: &[f64], cores: usize) -> Vec<usize> {
+    let cores = cores.max(1);
+    let mut order: Vec<usize> = (0..slack_us.len()).collect();
+    // total_cmp: NaN-safe, deterministic; rank id breaks ties
+    order.sort_by(|&a, &b| slack_us[a].total_cmp(&slack_us[b]).then(a.cmp(&b)));
+    let mut layout = vec![0usize; slack_us.len()];
+    for (pos, &rank) in order.iter().enumerate() {
+        layout[rank] = pos % cores;
+    }
+    layout
+}
+
+/// The trivial `rank % cores` layout (no trace needed).
+pub fn identity_layout(world: usize, cores: usize) -> Vec<usize> {
+    let cores = cores.max(1);
+    (0..world).map(|r| r % cores).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slack_layout_gives_stragglers_low_cores() {
+        // rank 2 has the least slack -> core 0; rank 0 the most -> core 2
+        let layout = layout_from_slack(&[50.0, 20.0, 5.0], 4);
+        assert_eq!(layout, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn slack_layout_wraps_when_ranks_exceed_cores() {
+        let layout = layout_from_slack(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(layout, vec![0, 1, 0, 1]);
+        // zero cores clamps to 1 instead of dividing by zero
+        assert_eq!(layout_from_slack(&[1.0, 2.0], 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn slack_ties_break_by_rank_id() {
+        let layout = layout_from_slack(&[7.0, 7.0, 7.0], 8);
+        assert_eq!(layout, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn identity_layout_spreads_round_robin() {
+        assert_eq!(identity_layout(4, 2), vec![0, 1, 0, 1]);
+        assert_eq!(identity_layout(2, 8), vec![0, 1]);
+        assert_eq!(identity_layout(2, 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn pin_is_best_effort_smoke() {
+        // must not panic or UB regardless of platform/cpuset; Err is fine
+        let _ = pin_current_thread(0);
+        assert!(pin_current_thread(usize::MAX).is_err());
+    }
+}

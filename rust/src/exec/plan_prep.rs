@@ -56,6 +56,14 @@ pub struct PreparedPlan {
     pub base_signals: usize,
     /// Internal signal to set when the call at a [`CallLoc`] completes.
     pub call_signals: HashMap<CallLoc, SignalId>,
+    /// Per-destination-rank `Issue` counts: `incoming[r]` is how many
+    /// transfers in the whole plan target rank `r`. Sizes the rank-owned
+    /// parked-transfer queues in [`crate::exec::PlanArena`] so queue pushes
+    /// never reallocate at run time.
+    pub incoming: Vec<usize>,
+    /// Largest transfer region (in elements) anywhere in the plan: the
+    /// high-water mark for the arena's per-rank copy staging buffer.
+    pub max_transfer_elems: usize,
     names: Vec<String>,
 }
 
@@ -264,7 +272,22 @@ pub fn prepare(plan: &ExecutablePlan, table: &TensorTable) -> Result<PreparedPla
         }
     }
 
-    Ok(PreparedPlan { plan, base_signals, call_signals, names })
+    // Arena sizing: count transfers per destination rank and the largest
+    // region, over the final (augmented) plan.
+    let mut incoming = vec![0usize; plan.world];
+    let mut max_transfer_elems = 0usize;
+    for prog in &plan.per_rank {
+        for op in &prog.ops {
+            if let PlanOp::Issue(d) = op {
+                if let Some(slot) = incoming.get_mut(d.dst_rank) {
+                    *slot += 1;
+                }
+                max_transfer_elems = max_transfer_elems.max(d.src_chunk.region.elems());
+            }
+        }
+    }
+
+    Ok(PreparedPlan { plan, base_signals, call_signals, incoming, max_transfer_elems, names })
 }
 
 #[cfg(test)]
@@ -503,6 +526,24 @@ mod tests {
         assert!(!prep.call_signals.contains_key(&(0, 2, 0)));
         let PlanOp::Issue(d) = &prep.plan.per_rank[1].ops[0] else { panic!() };
         assert_eq!(d.dep_signals, vec![1], "transfer must wait for call A");
+    }
+
+    #[test]
+    fn arena_sizing_fields_count_the_augmented_plan() {
+        let t = table();
+        let plan = ExecutablePlan {
+            world: 3,
+            per_rank: vec![
+                RankProgram::default(),
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 0, 1, 0, 0))] },
+                RankProgram { ops: vec![PlanOp::Issue(reduce_xfer(&t, 1, 2, 0, 4))] },
+            ],
+            num_signals: 2,
+            reserved_comm_sms: 0,
+        };
+        let prep = prepare(&plan, &t).unwrap();
+        assert_eq!(prep.incoming, vec![2, 0, 0], "both transfers target rank 0");
+        assert_eq!(prep.max_transfer_elems, 8, "2x4 rows regions");
     }
 
     #[test]

@@ -1,129 +1,275 @@
-//! Shared atomic signal table for the parallel per-rank executor.
+//! Lock-free atomic signal table for the parallel per-rank executor.
 //!
-//! A [`SignalBoard`] replaces the sequential interpreter's `Vec<bool>` when
-//! rank programs run on their own threads: signal sets are monotonic (a
-//! signal, once set, never clears within a run), waiters block on a condvar,
-//! and every state change bumps an *epoch* counter so waiters can implement
-//! bounded-wait deadlock detection — "no board activity for `timeout`"
-//! rather than a fixed absolute deadline, which would misfire on slow but
-//! live schedules.
+//! A [`SignalBoard`] is the synchronization core shared by all rank
+//! threads: one `AtomicU32` word per signal, an atomic epoch heartbeat,
+//! an atomic busy counter, and a small parking lot for blocked threads.
+//! Signal sets are monotonic (a signal, once set, never clears within a
+//! run), which buys two things the old `Mutex + Condvar` board could not
+//! offer (see [`crate::exec::signals_condvar`] for the retained baseline):
+//!
+//! * **Uncontended reads.** `is_set`/`all_set`/`unmet` are plain atomic
+//!   loads — no lock word is touched, and rank threads layer a
+//!   [`SeenSignals`] cache on top so re-checks of already-observed signals
+//!   never even touch shared cache lines.
+//! * **Targeted wakeups.** A blocked thread registers *what* it is waiting
+//!   for ([`Interest`]) and parks; `set(id)` unparks only the threads
+//!   interested in `id` (plus any-activity waiters) instead of
+//!   `notify_all`-ing the world. Producers skip the parking lot entirely
+//!   when nobody is parked (a single atomic load).
+//!
+//! # Memory ordering
+//!
+//! All hot-path atomics use `SeqCst`. Release/acquire is the *minimum*
+//! the design needs — the publishing store in [`SignalBoard::set`] must
+//! happen-after the buffer writes it announces, and a reader observing
+//! the word must see those writes — but the wakeup protocol additionally
+//! needs a store-load fence (Dekker-style): a producer stores the signal
+//! word and then loads the parked count, while a waiter registers in the
+//! parking lot and then re-checks the signal. `SeqCst` on both sides
+//! guarantees at least one of them sees the other — either the producer
+//! observes `nparked > 0` and walks the lot, or the waiter's re-check
+//! sees the fresh signal and never sleeps. Plain release/acquire permits
+//! both loads to miss, i.e. a lost wakeup. The signal words themselves
+//! would be correct with `Release`-store/`Acquire`-load; they share the
+//! `SeqCst` spelling so every ordering in this file means one thing.
+//!
+//! # Bounded-wait deadlock detection without a condvar
+//!
+//! The epoch counter is bumped by every `set`, `touch`, `abort`, and
+//! `busy_end`. A bounded waiter snapshots the epoch, parks with a
+//! deadline, and on expiry declares deadlock only if the epoch is still
+//! at the snapshot *and* the busy counter is zero. `busy_end` bumps the
+//! epoch *before* decrementing the counter, and the waiter reads busy
+//! *before* epoch, so across any completed busy window the waiter
+//! observes either `busy > 0` or a moved epoch — the condvar board got
+//! this atomicity from its lock; here it falls out of the two orderings.
 
-use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::Mutex;
+use std::thread::Thread;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 
-#[derive(Debug)]
-struct BoardState {
-    set: Vec<bool>,
-    /// Bumped on every `set`, `touch`, `abort`, or `busy_end`; the
-    /// progress heartbeat.
-    epoch: u64,
-    /// Threads currently inside work the board can't see (kernel calls,
-    /// transfer applies). While nonzero, bounded waits never declare
-    /// deadlock. Transitions happen under the board lock, so a waiter
-    /// evaluating its timeout atomically sees either `busy > 0` or the
-    /// epoch bump from `busy_end` — there is no misdiagnosis window.
-    busy: usize,
-    aborted: bool,
+/// What a parked thread must be woken for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interest {
+    /// Wake when this one signal is set (the common Wait-op case).
+    Signal(usize),
+    /// Wake on any board activity — used by threads whose wake condition
+    /// spans many signals (e.g. a rank with parked inbound transfers whose
+    /// dep signals can be set by anyone).
+    Any,
 }
 
-/// Condvar-backed monotonic signal table shared by all rank threads.
+#[derive(Debug)]
+struct Parker {
+    thread: Thread,
+    interest: Interest,
+}
+
+/// Atomic monotonic signal table shared by all rank threads.
 #[derive(Debug)]
 pub struct SignalBoard {
-    state: Mutex<BoardState>,
-    cv: Condvar,
+    /// One word per signal: 0 = unset, 1 = set. Monotonic within a run.
+    words: Box<[AtomicU32]>,
+    /// Bumped on every `set`, `touch`, `abort`, or `busy_end`; the
+    /// progress heartbeat bounded waits measure against.
+    epoch: AtomicU64,
+    /// Threads currently inside work the board can't see (kernel calls,
+    /// transfer applies). While nonzero, bounded waits never declare
+    /// deadlock.
+    busy: AtomicUsize,
+    aborted: AtomicBool,
+    /// Mirror of `parked.len()`, maintained under the `parked` lock.
+    /// Producers load this first and skip the lock when it reads 0 — the
+    /// no-waiters fast path. See the module doc for why this load and the
+    /// signal store must both be `SeqCst`.
+    nparked: AtomicUsize,
+    /// The parking lot: registered blocked threads. Only touched on the
+    /// slow path (a thread about to sleep, or a producer that saw
+    /// `nparked > 0`).
+    parked: Mutex<Vec<Parker>>,
 }
 
 impl SignalBoard {
     pub fn new(num_signals: usize) -> Self {
+        let words: Vec<AtomicU32> = (0..num_signals).map(|_| AtomicU32::new(0)).collect();
         SignalBoard {
-            state: Mutex::new(BoardState {
-                set: vec![false; num_signals],
-                epoch: 0,
-                busy: 0,
-                aborted: false,
-            }),
-            cv: Condvar::new(),
+            words: words.into_boxed_slice(),
+            epoch: AtomicU64::new(0),
+            busy: AtomicUsize::new(0),
+            aborted: AtomicBool::new(false),
+            nparked: AtomicUsize::new(0),
+            // worst case every rank thread parks at once; a small
+            // preallocation keeps the slow path allocation-free too
+            parked: Mutex::new(Vec::with_capacity(16)),
         }
     }
 
+    /// Clear all run state for plan reuse (arena resets between runs).
+    /// Takes `&mut self`, so no thread can still be waiting.
+    pub fn reset(&mut self) {
+        for w in self.words.iter() {
+            w.store(0, SeqCst);
+        }
+        self.epoch.store(0, SeqCst);
+        self.busy.store(0, SeqCst);
+        self.aborted.store(false, SeqCst);
+        self.parked.get_mut().unwrap().clear();
+        self.nparked.store(0, SeqCst);
+    }
+
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().set.len()
+        self.words.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.words.is_empty()
     }
 
-    /// Set a signal and wake all waiters.
+    /// Set a signal and wake the threads waiting for it (targeted — other
+    /// parked threads stay parked).
     pub fn set(&self, id: usize) {
-        let mut st = self.state.lock().unwrap();
-        st.set[id] = true;
-        st.epoch += 1;
-        drop(st);
-        self.cv.notify_all();
+        self.words[id].store(1, SeqCst);
+        self.epoch.fetch_add(1, SeqCst);
+        self.wake(Some(id));
     }
 
-    /// Record activity without setting a signal (pending-queue pushes, rank
-    /// completion) so bounded waits see the run is still live.
+    /// Record activity without setting a signal (queue pushes, rank
+    /// completion) so bounded waits see the run is still live. Wakes only
+    /// any-activity waiters; signal-targeted parkers have, by definition,
+    /// nothing new to look at.
     pub fn touch(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.epoch += 1;
-        drop(st);
-        self.cv.notify_all();
+        self.epoch.fetch_add(1, SeqCst);
+        self.wake(None);
     }
 
     /// Mark the start of work the board can't otherwise see (a kernel
     /// call, a transfer apply). Bounded waits defer the deadlock verdict
     /// while any such work is in flight.
     pub fn busy_begin(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.busy += 1;
+        self.busy.fetch_add(1, SeqCst);
     }
 
     /// End of [`SignalBoard::busy_begin`]'s work; counts as activity.
+    ///
+    /// The epoch bump precedes the decrement on purpose: a bounded waiter
+    /// reads busy first, then epoch, so across any completed busy window
+    /// it sees either the in-flight count or the bump — never a false
+    /// "idle and quiet" verdict. An end without a matching begin is a
+    /// caller bug: loudly asserted in debug builds, clamped at zero in
+    /// release so a production run degrades to the old masking behavior
+    /// instead of wrapping the counter to `usize::MAX` (which would
+    /// suppress deadlock detection forever).
     pub fn busy_end(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.busy = st.busy.saturating_sub(1);
-        st.epoch += 1;
-        drop(st);
-        self.cv.notify_all();
+        self.epoch.fetch_add(1, SeqCst);
+        let prev = self.busy.fetch_sub(1, SeqCst);
+        debug_assert!(prev > 0, "busy_end without matching busy_begin");
+        if prev == 0 {
+            self.busy.store(0, SeqCst);
+        }
+        self.wake(None);
     }
 
     /// Tell every waiter to give up (another thread hit an error).
     pub fn abort(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.aborted = true;
-        st.epoch += 1;
-        drop(st);
-        self.cv.notify_all();
+        self.aborted.store(true, SeqCst);
+        self.epoch.fetch_add(1, SeqCst);
+        self.wake_all();
     }
 
     pub fn aborted(&self) -> bool {
-        self.state.lock().unwrap().aborted
+        self.aborted.load(SeqCst)
     }
 
     pub fn is_set(&self, id: usize) -> bool {
-        self.state.lock().unwrap().set[id]
+        self.words[id].load(SeqCst) != 0
     }
 
     pub fn all_set(&self, ids: &[usize]) -> bool {
-        let st = self.state.lock().unwrap();
-        ids.iter().all(|&i| st.set[i])
+        ids.iter().all(|&i| self.is_set(i))
     }
 
     /// The subset of `ids` not yet set — what a stuck waiter is actually
     /// missing. Deadlock verdicts use this to name the pending signals
     /// instead of reporting a bare timeout.
     pub fn unmet(&self, ids: &[usize]) -> Vec<usize> {
-        let st = self.state.lock().unwrap();
-        ids.iter().copied().filter(|&i| !st.set[i]).collect()
+        ids.iter().copied().filter(|&i| !self.is_set(i)).collect()
     }
 
-    /// Current epoch; pair with [`SignalBoard::wait_activity_since`].
+    /// Current epoch; pair with [`SignalBoard::wait_activity_since`] or an
+    /// engine-side bounded-wait loop.
     pub fn epoch(&self) -> u64 {
-        self.state.lock().unwrap().epoch
+        self.epoch.load(SeqCst)
+    }
+
+    /// Current busy count (threads inside invisible work).
+    pub fn busy(&self) -> usize {
+        self.busy.load(SeqCst)
+    }
+
+    /// Wake parked threads after a state change. `sig = Some(id)` is a
+    /// signal set (wake matching `Interest::Signal` parkers plus all
+    /// `Interest::Any` parkers); `None` is bare activity (wake only
+    /// `Interest::Any` parkers — the epoch moved, nothing else did).
+    fn wake(&self, sig: Option<usize>) {
+        if self.nparked.load(SeqCst) == 0 {
+            return; // fast path: nobody is parked, skip the lot entirely
+        }
+        let parked = self.parked.lock().unwrap();
+        for p in parked.iter() {
+            let hit = match (p.interest, sig) {
+                (Interest::Any, _) => true,
+                (Interest::Signal(want), Some(id)) => want == id,
+                (Interest::Signal(_), None) => false,
+            };
+            if hit {
+                p.thread.unpark();
+            }
+        }
+    }
+
+    /// Unpark everyone regardless of interest (abort).
+    fn wake_all(&self) {
+        if self.nparked.load(SeqCst) == 0 {
+            return;
+        }
+        let parked = self.parked.lock().unwrap();
+        for p in parked.iter() {
+            p.thread.unpark();
+        }
+    }
+
+    /// Park the current thread until a matching wakeup, `deadline`, or a
+    /// spurious unpark — whichever comes first. Returns after at most one
+    /// sleep; callers loop and re-evaluate their own condition.
+    ///
+    /// The lost-wakeup-free protocol: (1) register in the parking lot and
+    /// publish the count, (2) re-check `cond`, (3) sleep only if it still
+    /// holds nothing. A producer that fires between (2) and the sleep saw
+    /// `nparked > 0` (its `SeqCst` store precedes its count load; our
+    /// count store precedes our re-check) and left an unpark token, which
+    /// makes the `park_timeout` return immediately. Stale tokens from
+    /// previous rounds cause at worst one spurious loop iteration.
+    pub fn park_unless(&self, interest: Interest, deadline: Instant, cond: impl Fn() -> bool) {
+        {
+            let mut parked = self.parked.lock().unwrap();
+            parked.push(Parker { thread: std::thread::current(), interest });
+            self.nparked.store(parked.len(), SeqCst);
+        }
+        if !cond() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if !left.is_zero() {
+                std::thread::park_timeout(left);
+            }
+        }
+        let me = std::thread::current().id();
+        let mut parked = self.parked.lock().unwrap();
+        if let Some(pos) = parked.iter().position(|p| p.thread.id() == me) {
+            parked.swap_remove(pos);
+        }
+        self.nparked.store(parked.len(), SeqCst);
     }
 
     /// Block until every signal in `ids` is set.
@@ -139,25 +285,42 @@ impl SignalBoard {
         timeout: Duration,
         what: impl Fn() -> String,
     ) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut bound_epoch = self.epoch();
+        let mut deadline = Instant::now() + timeout;
         loop {
-            if st.aborted {
+            if self.aborted() {
                 return Err(Error::Exec(format!("aborted while waiting: {}", what())));
             }
-            if ids.iter().all(|&i| st.set[i]) {
+            let Some(first) = ids.iter().copied().find(|&i| !self.is_set(i)) else {
                 return Ok(());
+            };
+            // any activity since the snapshot restarts the bound — the
+            // board is live, even if our own signals haven't moved
+            let e = self.epoch();
+            if e != bound_epoch {
+                bound_epoch = e;
+                deadline = Instant::now() + timeout;
             }
-            let epoch = st.epoch;
-            let (guard, res) = self.cv.wait_timeout(st, timeout).unwrap();
-            st = guard;
-            if res.timed_out() && st.epoch == epoch && st.busy == 0 {
-                let missing: Vec<usize> =
-                    ids.iter().copied().filter(|&i| !st.set[i]).collect();
-                return Err(Error::Exec(format!(
-                    "deadlock: bounded wait ({timeout:?}) expired with no progress; \
-                     {} still waiting on signals {missing:?}",
-                    what()
-                )));
+            self.park_unless(Interest::Signal(first), deadline, || {
+                self.aborted() || self.epoch() != e
+            });
+            if Instant::now() >= deadline {
+                // busy BEFORE epoch: see busy_end's ordering contract
+                let busy = self.busy();
+                let e2 = self.epoch();
+                if busy == 0 && e2 == bound_epoch {
+                    let missing = self.unmet(ids);
+                    return Err(Error::Exec(format!(
+                        "deadlock: bounded wait ({timeout:?}) expired with no progress; \
+                         {} still waiting on signals {missing:?}",
+                        what()
+                    )));
+                }
+                if busy > 0 {
+                    // invisible work in flight: extend the bound; its
+                    // busy_end will bump the epoch and restart it anyway
+                    deadline = Instant::now() + timeout;
+                }
             }
         }
     }
@@ -173,35 +336,89 @@ impl SignalBoard {
         timeout: Duration,
         what: impl Fn() -> String,
     ) -> Result<bool> {
-        let mut st = self.state.lock().unwrap();
+        let mut deadline = Instant::now() + timeout;
         loop {
-            if st.aborted {
+            if self.aborted() {
                 return Ok(false);
             }
-            if st.epoch != since {
+            if self.epoch() != since {
                 return Ok(true);
             }
-            let (guard, res) = self.cv.wait_timeout(st, timeout).unwrap();
-            st = guard;
-            if res.timed_out() && st.epoch == since && st.busy == 0 {
-                return Err(Error::Exec(format!(
-                    "deadlock: bounded wait ({timeout:?}) expired with no progress; {}",
-                    what()
-                )));
+            self.park_unless(Interest::Any, deadline, || {
+                self.aborted() || self.epoch() != since
+            });
+            if Instant::now() >= deadline {
+                let busy = self.busy();
+                let e = self.epoch();
+                if busy == 0 && e == since {
+                    return Err(Error::Exec(format!(
+                        "deadlock: bounded wait ({timeout:?}) expired with no progress; {}",
+                        what()
+                    )));
+                }
+                deadline = Instant::now() + timeout;
             }
         }
+    }
+}
+
+/// Per-thread monotonic cache over a board's signals.
+///
+/// Signals never clear within a run, so once a thread has observed one it
+/// can answer every future re-check from thread-local memory — no shared
+/// cache line is touched, which is what makes dep-heavy drain loops cheap
+/// (the queue retain pass re-checks the same dep sets every round). The
+/// cache is sound in one direction only: a `true` is forever, a `false`
+/// just means "go ask the board".
+#[derive(Debug, Clone)]
+pub struct SeenSignals {
+    seen: Vec<bool>,
+}
+
+impl SeenSignals {
+    pub fn new(num_signals: usize) -> Self {
+        SeenSignals { seen: vec![false; num_signals] }
+    }
+
+    /// Forget everything (arena reuse between runs).
+    pub fn reset(&mut self) {
+        for s in &mut self.seen {
+            *s = false;
+        }
+    }
+
+    /// Record a signal this thread itself set (skip the board round-trip).
+    pub fn mark(&mut self, id: usize) {
+        self.seen[id] = true;
+    }
+
+    pub fn is_set(&mut self, board: &SignalBoard, id: usize) -> bool {
+        if self.seen[id] {
+            return true;
+        }
+        if board.is_set(id) {
+            self.seen[id] = true;
+            return true;
+        }
+        false
+    }
+
+    pub fn all_set(&mut self, board: &SignalBoard, ids: &[usize]) -> bool {
+        ids.iter().all(|&i| self.is_set(board, i))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
     use std::time::Instant;
 
     #[test]
     fn set_and_query() {
         let b = SignalBoard::new(3);
         assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
         assert!(!b.is_set(0));
         b.set(0);
         b.set(2);
@@ -299,5 +516,73 @@ mod tests {
         let e1 = b.epoch();
         let err = b.wait_activity_since(e1, Duration::from_millis(30), || "idle".into());
         assert!(err.is_err());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "busy_end without matching busy_begin")]
+    fn unbalanced_busy_end_asserts_in_debug() {
+        // the old board silently saturating_sub'd this imbalance away —
+        // it now names the bug at the call site
+        let b = SignalBoard::new(1);
+        b.busy_end();
+    }
+
+    #[test]
+    fn targeted_wakeup_only_wakes_matching_waiters() {
+        // two waiters on different signals: setting one must complete that
+        // waiter while the other stays blocked until ITS signal lands
+        let b = SignalBoard::new(2);
+        let done = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                b.wait_all(&[0], Duration::from_secs(10), || "w0".into()).unwrap();
+                done.fetch_add(1, SeqCst);
+            });
+            s.spawn(|| {
+                b.wait_all(&[1], Duration::from_secs(10), || "w1".into()).unwrap();
+                done.fetch_add(1, SeqCst);
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            b.set(0);
+            std::thread::sleep(Duration::from_millis(50));
+            assert!(done.load(SeqCst) <= 1, "waiter 1 completed without its signal");
+            b.set(1);
+        });
+        assert_eq!(done.load(SeqCst), 2);
+    }
+
+    #[test]
+    fn seen_cache_is_monotonic_and_marks_local_sets() {
+        let b = SignalBoard::new(3);
+        let mut cache = SeenSignals::new(3);
+        assert!(!cache.is_set(&b, 0));
+        b.set(0);
+        assert!(cache.is_set(&b, 0));
+        assert!(cache.is_set(&b, 0)); // second hit answered from the cache
+        cache.mark(2);
+        assert!(cache.is_set(&b, 2)); // local set: never asked the board
+        assert!(!cache.all_set(&b, &[0, 1, 2]));
+        b.set(1);
+        assert!(cache.all_set(&b, &[0, 1, 2]));
+        cache.reset();
+        assert!(cache.is_set(&b, 0)); // board still has it after reset
+    }
+
+    #[test]
+    fn many_producers_one_waiter_race() {
+        // N producers each set one signal with no coordination; a single
+        // wait_all on the full set must observe every one exactly once
+        let n = 16;
+        let b = SignalBoard::new(n);
+        let ids: Vec<usize> = (0..n).collect();
+        std::thread::scope(|s| {
+            for i in 0..n {
+                let b = &b;
+                s.spawn(move || b.set(i));
+            }
+            b.wait_all(&ids, Duration::from_secs(10), || "collector".into()).unwrap();
+        });
+        assert!(b.all_set(&ids));
     }
 }

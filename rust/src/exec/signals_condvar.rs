@@ -1,0 +1,314 @@
+//! The retained `Mutex + Condvar` signal board — the pre-atomic baseline.
+//!
+//! This is the synchronization core the parallel engine shipped with
+//! before the lock-free rework (DESIGN.md §15): every `set`/`wait`/`touch`
+//! funnels through one mutex and wakes every waiter via `notify_all`. It
+//! is kept compilable and selectable (`--sync condvar`,
+//! [`crate::exec::SyncStrategy::Condvar`]) for exactly one reason: the
+//! hotpath bench compares the atomic engine against this baseline
+//! like-for-like, on the same prepared plans, in the same process. Do not
+//! grow it; behavioral fixes land in [`crate::exec::signals`] first and
+//! are backported only if the bench comparison would otherwise be unfair.
+//!
+//! Semantics (shared with the atomic board): signal sets are monotonic
+//! within a run, every state change bumps an *epoch* counter, and bounded
+//! waits declare deadlock only after `timeout` passes with no epoch
+//! movement and no busy work in flight.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug)]
+struct BoardState {
+    set: Vec<bool>,
+    /// Bumped on every `set`, `touch`, `abort`, or `busy_end`; the
+    /// progress heartbeat.
+    epoch: u64,
+    /// Threads currently inside work the board can't see (kernel calls,
+    /// transfer applies). While nonzero, bounded waits never declare
+    /// deadlock. Transitions happen under the board lock, so a waiter
+    /// evaluating its timeout atomically sees either `busy > 0` or the
+    /// epoch bump from `busy_end` — there is no misdiagnosis window.
+    busy: usize,
+    aborted: bool,
+}
+
+/// Condvar-backed monotonic signal table shared by all rank threads.
+#[derive(Debug)]
+pub struct CondvarSignalBoard {
+    state: Mutex<BoardState>,
+    cv: Condvar,
+}
+
+impl CondvarSignalBoard {
+    pub fn new(num_signals: usize) -> Self {
+        CondvarSignalBoard {
+            state: Mutex::new(BoardState {
+                set: vec![false; num_signals],
+                epoch: 0,
+                busy: 0,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Set a signal and wake all waiters.
+    pub fn set(&self, id: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.set[id] = true;
+        st.epoch += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Record activity without setting a signal (pending-queue pushes, rank
+    /// completion) so bounded waits see the run is still live.
+    pub fn touch(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.epoch += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Mark the start of work the board can't otherwise see (a kernel
+    /// call, a transfer apply). Bounded waits defer the deadlock verdict
+    /// while any such work is in flight.
+    pub fn busy_begin(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.busy += 1;
+    }
+
+    /// End of [`CondvarSignalBoard::busy_begin`]'s work; counts as
+    /// activity. An end without a matching begin is a caller bug: loudly
+    /// asserted in debug builds, clamped at zero in release (same policy
+    /// as the atomic board — see `SignalBoard::busy_end`).
+    pub fn busy_end(&self) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.busy > 0, "busy_end without matching busy_begin");
+        st.busy = st.busy.saturating_sub(1);
+        st.epoch += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Tell every waiter to give up (another thread hit an error).
+    pub fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        st.epoch += 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.state.lock().unwrap().aborted
+    }
+
+    pub fn is_set(&self, id: usize) -> bool {
+        self.state.lock().unwrap().set[id]
+    }
+
+    pub fn all_set(&self, ids: &[usize]) -> bool {
+        let st = self.state.lock().unwrap();
+        ids.iter().all(|&i| st.set[i])
+    }
+
+    /// The subset of `ids` not yet set — what a stuck waiter is actually
+    /// missing. Deadlock verdicts use this to name the pending signals
+    /// instead of reporting a bare timeout.
+    pub fn unmet(&self, ids: &[usize]) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        ids.iter().copied().filter(|&i| !st.set[i]).collect()
+    }
+
+    /// Current epoch; pair with [`CondvarSignalBoard::wait_activity_since`].
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Block until every signal in `ids` is set.
+    ///
+    /// Errors if the run is aborted, or if `timeout` elapses with no board
+    /// activity at all and no busy work in flight (the bounded-wait
+    /// deadlock verdict — see [`CondvarSignalBoard::busy_begin`]); slow
+    /// kernel calls are never misdiagnosed as deadlocks. `what` labels the
+    /// error with the waiter's identity.
+    pub fn wait_all(
+        &self,
+        ids: &[usize],
+        timeout: Duration,
+        what: impl Fn() -> String,
+    ) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return Err(Error::Exec(format!("aborted while waiting: {}", what())));
+            }
+            if ids.iter().all(|&i| st.set[i]) {
+                return Ok(());
+            }
+            let epoch = st.epoch;
+            let (guard, res) = self.cv.wait_timeout(st, timeout).unwrap();
+            st = guard;
+            if res.timed_out() && st.epoch == epoch && st.busy == 0 {
+                let missing: Vec<usize> =
+                    ids.iter().copied().filter(|&i| !st.set[i]).collect();
+                return Err(Error::Exec(format!(
+                    "deadlock: bounded wait ({timeout:?}) expired with no progress; \
+                     {} still waiting on signals {missing:?}",
+                    what()
+                )));
+            }
+        }
+    }
+
+    /// Block until the board's epoch moves past `since` (any activity).
+    ///
+    /// Returns `Ok(true)` on activity, `Ok(false)` if aborted, and the
+    /// deadlock error if `timeout` elapses with the epoch unchanged and
+    /// no busy work in flight (see [`CondvarSignalBoard::busy_begin`]).
+    pub fn wait_activity_since(
+        &self,
+        since: u64,
+        timeout: Duration,
+        what: impl Fn() -> String,
+    ) -> Result<bool> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return Ok(false);
+            }
+            if st.epoch != since {
+                return Ok(true);
+            }
+            let (guard, res) = self.cv.wait_timeout(st, timeout).unwrap();
+            st = guard;
+            if res.timed_out() && st.epoch == since && st.busy == 0 {
+                return Err(Error::Exec(format!(
+                    "deadlock: bounded wait ({timeout:?}) expired with no progress; {}",
+                    what()
+                )));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn set_and_query() {
+        let b = CondvarSignalBoard::new(3);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_set(0));
+        b.set(0);
+        b.set(2);
+        assert!(b.is_set(0));
+        assert!(b.all_set(&[0, 2]));
+        assert!(!b.all_set(&[0, 1]));
+        assert!(b.all_set(&[]));
+        assert_eq!(b.unmet(&[0, 1, 2]), vec![1]);
+        assert!(b.unmet(&[]).is_empty());
+    }
+
+    #[test]
+    fn wait_all_returns_once_set() {
+        let b = CondvarSignalBoard::new(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(20));
+                b.set(0);
+                b.set(1);
+            });
+            b.wait_all(&[0, 1], Duration::from_secs(5), || "test".into()).unwrap();
+        });
+        assert!(b.all_set(&[0, 1]));
+    }
+
+    #[test]
+    fn bounded_wait_reports_deadlock() {
+        let b = CondvarSignalBoard::new(2);
+        let t0 = Instant::now();
+        let e = b
+            .wait_all(&[1], Duration::from_millis(50), || "rank 0 at op 3".into())
+            .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(e.to_string().contains("deadlock"), "{e}");
+        assert!(e.to_string().contains("rank 0 at op 3"), "{e}");
+    }
+
+    #[test]
+    fn activity_resets_the_bound() {
+        // a live-but-slow producer must not trip the deadlock verdict; the
+        // producer-step vs bound ratio is kept wide (5ms vs 500ms) so
+        // loaded CI runners cannot misschedule their way into flaking
+        let b = CondvarSignalBoard::new(8);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..8 {
+                    std::thread::sleep(Duration::from_millis(5));
+                    b.set(i);
+                }
+            });
+            b.wait_all(&[7], Duration::from_millis(500), || "waiter".into()).unwrap();
+        });
+    }
+
+    #[test]
+    fn busy_work_defers_the_verdict() {
+        // a waiter whose bound expires while busy work is in flight (a
+        // rank inside a long kernel call) must keep waiting, and succeed
+        // when the signal finally lands after the "call" finishes
+        let b = CondvarSignalBoard::new(1);
+        b.busy_begin();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // "kernel call" far longer than the 20ms bound
+                std::thread::sleep(Duration::from_millis(200));
+                b.busy_end();
+                b.set(0);
+            });
+            b.wait_all(&[0], Duration::from_millis(20), || "waiter".into()).unwrap();
+        });
+    }
+
+    #[test]
+    fn abort_wakes_waiters() {
+        let b = CondvarSignalBoard::new(1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(10));
+                b.abort();
+            });
+            let e = b
+                .wait_all(&[0], Duration::from_secs(30), || "waiter".into())
+                .unwrap_err();
+            assert!(e.to_string().contains("abort"), "{e}");
+        });
+        assert!(b.aborted());
+    }
+
+    #[test]
+    fn wait_activity_since_sees_touch() {
+        let b = CondvarSignalBoard::new(1);
+        let e0 = b.epoch();
+        b.touch();
+        assert!(b.wait_activity_since(e0, Duration::from_millis(10), || "x".into()).unwrap());
+        let e1 = b.epoch();
+        let err = b.wait_activity_since(e1, Duration::from_millis(30), || "idle".into());
+        assert!(err.is_err());
+    }
+}

@@ -13,10 +13,15 @@
 //! syncopate exec --case <NAME|list> [--world N] [--split K] [--nodes N]
 //!                [--topo <name|FILE.topo>] [--trace FILE.json] [--cache FILE]
 //!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
+//!                [--sync <atomic|condvar>] [--pin-ranks] [--pin-from FILE.json]
 //!                (--nodes splits SINGLE-node --topo descriptions for the
 //!                 hierarchical case; a multinode description's own node
 //!                 structure wins; --trace captures a Chrome trace and
-//!                 --cache additionally records the measured time)
+//!                 --cache additionally records the measured time;
+//!                 --sync picks the parallel engine's synchronization core,
+//!                 --pin-ranks pins rank threads round-robin over cores, and
+//!                 --pin-from derives the pin layout from a prior traced
+//!                 run's per-rank slack — stragglers get dedicated cores)
 //! syncopate trace show <FILE.json>
 //! syncopate trace overlap <FILE.json>
 //! syncopate calibrate --from <FILE.json> --topo <name|FILE.topo> [-o FILE.topo]
@@ -24,7 +29,7 @@
 //! syncopate plan show <FILE.sched>
 //! syncopate plan lint <FILE.sched>...
 //! syncopate plan run <FILE.sched> [--workers N] [--exec-mode M] [--timeout-ms N]
-//!                    [--topo <name|FILE.topo>]
+//!                    [--sync <atomic|condvar>] [--topo <name|FILE.topo>]
 //! syncopate plan --op <kind> [--world N] [--split K]      (operator plan stats)
 //! syncopate topo list
 //! syncopate topo show <name|FILE.topo>
@@ -48,7 +53,7 @@ use syncopate::coordinator::operators::compile_operator;
 use syncopate::coordinator::service::{opkind_by_name, Coordinator};
 use syncopate::coordinator::TuneConfig;
 use syncopate::error::{Error, Result};
-use syncopate::exec::{ExecMode, ExecOptions};
+use syncopate::exec::{ExecMode, ExecOptions, SyncStrategy};
 use syncopate::hw;
 use syncopate::plan_io;
 use syncopate::reports;
@@ -98,6 +103,41 @@ fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Resu
             .parse()
             .map_err(|_| Error::Coordinator(format!("--{key} expects an integer, got `{v}`"))),
     }
+}
+
+/// Parse `--sync <atomic|condvar>` (default atomic).
+fn get_sync(flags: &HashMap<String, String>) -> Result<SyncStrategy> {
+    flags.get("sync").map(String::as_str).unwrap_or("atomic").parse()
+}
+
+/// Resolve `--pin-ranks` / `--pin-from FILE.json` into a rank→core layout
+/// for [`ExecOptions::pin_cores`]. `--pin-from` orders ranks by measured
+/// per-rank slack from a chunk trace (stragglers get the low cores);
+/// `--pin-ranks` alone is the identity `rank % cores` spread.
+fn get_pin_layout(flags: &HashMap<String, String>, world: usize) -> Result<Option<Vec<usize>>> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if let Some(path) = flags.get("pin-from") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        let trace = syncopate::trace::from_chrome_json(&text)?;
+        let report = syncopate::trace::analyze(&trace);
+        if report.per_rank.len() != world {
+            return Err(Error::Exec(format!(
+                "--pin-from {path}: trace has {} ranks but the case runs {world}",
+                report.per_rank.len()
+            )));
+        }
+        let slack: Vec<f64> = report
+            .per_rank
+            .iter()
+            .map(|u| (report.wall_makespan_us - u.end_us).max(0.0))
+            .collect();
+        return Ok(Some(syncopate::exec::pin::layout_from_slack(&slack, cores)));
+    }
+    if flags.contains_key("pin-ranks") {
+        return Ok(Some(syncopate::exec::pin::identity_layout(world, cores)));
+    }
+    Ok(None)
 }
 
 fn model_by_name(name: &str) -> Result<ModelCfg> {
@@ -265,6 +305,8 @@ fn dispatch(args: &[String]) -> Result<()> {
             let opts = ExecOptions {
                 mode,
                 wait_timeout: std::time::Duration::from_millis(timeout_ms),
+                sync: get_sync(&flags)?,
+                pin_cores: get_pin_layout(&flags, params.world)?,
             };
             let rt = Runtime::open_default()?;
             let backend = rt.backend_name();
@@ -730,6 +772,8 @@ fn plan_run(files: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let opts = ExecOptions {
         mode,
         wait_timeout: std::time::Duration::from_millis(timeout_ms),
+        sync: get_sync(flags)?,
+        pin_cores: None,
     };
     let coord = Coordinator::spawn_pool(resolve_topo(flags, sched.world)?, workers);
     for attempt in ["cold", "warm"] {

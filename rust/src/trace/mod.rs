@@ -119,9 +119,11 @@ impl TraceEvent {
 }
 
 /// Lock-cheap event collector the engines write into: one mutexed lane per
-/// rank, so rank threads contend only when the shared transfer servicer
-/// lands a transfer on their lane. Created per traced run; the engines
-/// take `Option<&TraceSink>` and skip every clock read when it is `None`.
+/// rank, so rank threads contend only when another rank lands a transfer
+/// event on their lane (events are attributed to the SOURCE rank, so a
+/// destination draining its parked queue writes to the issuer's lane).
+/// Created per traced run; the engines take `Option<&TraceSink>` and skip
+/// every clock read when it is `None`.
 #[derive(Debug)]
 pub struct TraceSink {
     origin: Instant,

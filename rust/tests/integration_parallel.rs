@@ -16,8 +16,11 @@ use std::time::{Duration, Instant};
 
 use syncopate::chunk::{DType, Region, TensorTable};
 use syncopate::codegen::{ExecutablePlan, PlanOp, RankProgram, TransferDesc};
-use syncopate::coordinator::execases::{self, verify_modes_bit_identical, AgVariant, ExecCase};
-use syncopate::exec::{run_with, BufferStore, ExecMode, ExecOptions};
+use syncopate::coordinator::execases::{
+    self, verify_modes_bit_identical, verify_sync_strategies_bit_identical, AgVariant,
+    CaseParams, ExecCase,
+};
+use syncopate::exec::{run_with, BufferStore, ExecMode, ExecOptions, SyncStrategy};
 use syncopate::runtime::Runtime;
 use syncopate::testutil::transfer_desc;
 use syncopate::Result;
@@ -122,6 +125,30 @@ fn hierarchical_ag_gemm_bit_identical() {
     }
 }
 
+#[test]
+fn every_registry_case_tri_engine_bit_identical() {
+    // the lock-free hot path's safety net: EVERY registered exec case, at
+    // every world size it supports, must produce bit-identical f32 state
+    // from the sequential reference, the atomic parallel engine, and the
+    // retained condvar parallel engine.
+    let rt = rt();
+    let mut verified = 0usize;
+    for spec in execases::CASES {
+        for world in [2usize, 4, 8] {
+            let params = CaseParams { world, ..Default::default() };
+            // some cases reject some shapes (e.g. hierarchical needs >= 2
+            // ranks per node): a named build error is a skip, not a failure
+            if spec.build(&params).is_err() {
+                continue;
+            }
+            verify_sync_strategies_bit_identical(&|| spec.build(&params), &rt)
+                .unwrap_or_else(|e| panic!("{} w{world}: {e}", spec.name));
+            verified += 1;
+        }
+    }
+    assert!(verified >= 20, "registry sweep degenerated: only {verified} case-worlds ran");
+}
+
 // ---------------------------------------------------------------------------
 // deadlock detection
 // ---------------------------------------------------------------------------
@@ -140,7 +167,15 @@ fn xfer(t: &TensorTable, signal: usize, src: usize, dst: usize, deps: Vec<usize>
 }
 
 fn short_parallel() -> ExecOptions {
-    ExecOptions { mode: ExecMode::Parallel, wait_timeout: Duration::from_millis(250) }
+    ExecOptions {
+        mode: ExecMode::Parallel,
+        wait_timeout: Duration::from_millis(250),
+        ..ExecOptions::parallel()
+    }
+}
+
+fn short_parallel_sync(sync: SyncStrategy) -> ExecOptions {
+    ExecOptions { sync, ..short_parallel() }
 }
 
 #[test]
@@ -149,7 +184,7 @@ fn cyclic_issue_schedule_errors_within_bound() {
     // a dependency cycle between transfers. Structural validation cannot see
     // it (both signals have producers); the engines must catch it at run
     // time — the parallel one within the bounded wait, not by hanging.
-    let (t, store) = call_free_fixture();
+    let (t, _store) = call_free_fixture();
     let plan = ExecutablePlan {
         world: 2,
         per_rank: vec![
@@ -161,10 +196,14 @@ fn cyclic_issue_schedule_errors_within_bound() {
     };
     let rt = rt();
 
-    let t0 = Instant::now();
-    let e = run_with(&plan, &t, &store, &rt, &short_parallel()).unwrap_err();
-    assert!(t0.elapsed() < Duration::from_secs(20), "bounded wait must bound the wait");
-    assert!(e.to_string().contains("deadlock"), "{e}");
+    // both parallel synchronization cores must report the same verdict
+    for sync in [SyncStrategy::Atomic, SyncStrategy::Condvar] {
+        let (t, store) = call_free_fixture();
+        let t0 = Instant::now();
+        let e = run_with(&plan, &t, &store, &rt, &short_parallel_sync(sync)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(20), "bounded wait must bound the wait");
+        assert!(e.to_string().contains("deadlock"), "{sync:?}: {e}");
+    }
 
     // the sequential reference engine agrees (and detects it exactly)
     let (t, store) = call_free_fixture();
@@ -191,11 +230,13 @@ fn cyclic_wait_schedule_errors_within_bound() {
         reserved_comm_sms: 0,
     };
     let rt = rt();
-    let t0 = Instant::now();
-    let e = run_with(&plan, &t, &store, &rt, &short_parallel()).unwrap_err();
-    assert!(t0.elapsed() < Duration::from_secs(20));
-    assert!(e.to_string().contains("deadlock"), "{e}");
-    assert!(e.to_string().contains("rank"), "stuck rank should be named: {e}");
+    for sync in [SyncStrategy::Atomic, SyncStrategy::Condvar] {
+        let t0 = Instant::now();
+        let e = run_with(&plan, &t, &store, &rt, &short_parallel_sync(sync)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(20));
+        assert!(e.to_string().contains("deadlock"), "{sync:?}: {e}");
+        assert!(e.to_string().contains("rank"), "stuck rank should be named: {e}");
+    }
 }
 
 #[test]

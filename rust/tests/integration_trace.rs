@@ -31,7 +31,11 @@ fn rt() -> Runtime {
 }
 
 fn opts(mode: ExecMode) -> ExecOptions {
-    ExecOptions { mode, wait_timeout: std::time::Duration::from_secs(30) }
+    ExecOptions {
+        mode,
+        wait_timeout: std::time::Duration::from_secs(30),
+        ..ExecOptions::parallel()
+    }
 }
 
 /// Expected per-kind event counts straight from the compiled plan.

@@ -1,0 +1,261 @@
+//! Stress: the atomic synchronization core under real thread races.
+//!
+//! The unit tests in `exec::signals` pin the protocol pieces one at a
+//! time; these tests hammer the whole board — many producers, many
+//! waiters, targeted wakeups, abort storms — and then race the full
+//! parallel engine over all-pairs exchange plans at worlds 4 and 8,
+//! repeatedly, so a lost-wakeup or ordering bug that only shows under
+//! contention has many chances to fire.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use syncopate::chunk::{DType, Region, TensorTable};
+use syncopate::codegen::{ExecutablePlan, PlanOp, RankProgram};
+use syncopate::exec::{run_with, BufferStore, ExecMode, ExecOptions, SignalBoard};
+use syncopate::runtime::Runtime;
+use syncopate::testutil::transfer_desc;
+
+const LONG: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// board-level races
+// ---------------------------------------------------------------------------
+
+#[test]
+fn many_producers_many_waiters_all_released() {
+    // producers set disjoint signal ranges while waiters block on subsets
+    // spanning ALL producers: every waiter must be released, none may
+    // verdict a deadlock while the board is live.
+    for (producers, waiters) in [(4usize, 4usize), (8, 8)] {
+        let per = 16usize;
+        let n = producers * per;
+        let board = Arc::new(SignalBoard::new(n));
+        let released = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for w in 0..waiters {
+                let board = Arc::clone(&board);
+                let released = Arc::clone(&released);
+                s.spawn(move || {
+                    // one signal from each producer's range, offset by w
+                    let ids: Vec<usize> =
+                        (0..producers).map(|p| p * per + (w % per)).collect();
+                    board.wait_all(&ids, LONG, || format!("waiter {w}")).unwrap();
+                    released.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            for p in 0..producers {
+                let board = Arc::clone(&board);
+                s.spawn(move || {
+                    for i in 0..per {
+                        board.set(p * per + i);
+                        if i % 5 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(released.load(Ordering::Relaxed), waiters);
+        for id in 0..n {
+            assert!(board.is_set(id));
+        }
+    }
+}
+
+#[test]
+fn waiters_racing_last_signal_never_miss_the_wakeup() {
+    // the classic lost-wakeup window: the producer sets the signal between
+    // the waiter's check and its park. 200 rounds of a one-signal rendezvous
+    // with a fresh pair of threads each time.
+    for round in 0..200usize {
+        let board = Arc::new(SignalBoard::new(1));
+        std::thread::scope(|s| {
+            let b = Arc::clone(&board);
+            let waiter = s.spawn(move || {
+                b.wait_all(&[0], Duration::from_secs(10), || format!("round {round}"))
+            });
+            let b = Arc::clone(&board);
+            s.spawn(move || b.set(0));
+            waiter.join().unwrap().unwrap();
+        });
+    }
+}
+
+#[test]
+fn abort_releases_every_blocked_waiter() {
+    for waiters in [4usize, 8] {
+        let board = Arc::new(SignalBoard::new(4));
+        let errs = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for w in 0..waiters {
+                let board = Arc::clone(&board);
+                let errs = Arc::clone(&errs);
+                s.spawn(move || {
+                    let e = board
+                        .wait_all(&[w % 4], LONG, || format!("w{w}"))
+                        .unwrap_err();
+                    assert!(e.to_string().contains("aborted"), "{e}");
+                    errs.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // give waiters a moment to actually park, then pull the plug
+            std::thread::sleep(Duration::from_millis(20));
+            board.abort();
+        });
+        assert_eq!(errs.load(Ordering::Relaxed), waiters);
+    }
+}
+
+#[test]
+fn busy_producers_defer_verdicts_under_contention() {
+    // 4 "kernel" threads cycle busy_begin/busy_end while a waiter's bound
+    // expires repeatedly: the waiter must keep extending, then release when
+    // the signal finally lands.
+    let board = Arc::new(SignalBoard::new(1));
+    std::thread::scope(|s| {
+        let b = Arc::clone(&board);
+        let waiter = s.spawn(move || {
+            b.wait_all(&[0], Duration::from_millis(30), || "stress waiter".into())
+        });
+        for _ in 0..4 {
+            let b = Arc::clone(&board);
+            s.spawn(move || {
+                for _ in 0..20 {
+                    b.busy_begin();
+                    std::thread::sleep(Duration::from_millis(2));
+                    b.busy_end();
+                }
+            });
+        }
+        let b = Arc::clone(&board);
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(120));
+            b.set(0);
+        });
+        waiter.join().unwrap().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// engine-level races
+// ---------------------------------------------------------------------------
+
+/// All-pairs exchange: every rank pushes its own row to every peer, then
+/// waits for every inbound row. Maximally contended transfer traffic with
+/// a full wait fan-in per rank.
+fn all_pairs_plan(world: usize, t: &TensorTable) -> ExecutablePlan {
+    let x = t.lookup("x").unwrap();
+    let cols = 4usize;
+    let sig = |src: usize, dst: usize| src * world + dst;
+    let per_rank = (0..world)
+        .map(|r| {
+            let mut ops = Vec::new();
+            for dst in 0..world {
+                if dst != r {
+                    ops.push(PlanOp::Issue(transfer_desc(
+                        x,
+                        Region::rows(r, 1, cols),
+                        sig(r, dst),
+                        r,
+                        dst,
+                        vec![],
+                        false,
+                    )));
+                }
+            }
+            for src in 0..world {
+                if src != r {
+                    ops.push(PlanOp::Wait(sig(src, r)));
+                }
+            }
+            RankProgram { ops }
+        })
+        .collect();
+    ExecutablePlan { world, per_rank, num_signals: world * world, reserved_comm_sms: 0 }
+}
+
+#[test]
+fn all_pairs_exchange_races_clean_at_worlds_4_and_8() {
+    let rt = Runtime::open_default().unwrap();
+    for world in [4usize, 8] {
+        let mut t = TensorTable::new();
+        t.declare("x", &[world, 4], DType::F32).unwrap();
+        let plan = all_pairs_plan(world, &t);
+        // 10 fresh runs per world: thread interleavings differ, results must not
+        for run in 0..10usize {
+            let mut store = BufferStore::new(world);
+            store.declare("x", &[world, 4]).unwrap();
+            for r in 0..world {
+                store.set(r, "x", &vec![(r + 1) as f32; world * 4]).unwrap();
+            }
+            let opts = ExecOptions {
+                mode: ExecMode::Parallel,
+                wait_timeout: Duration::from_secs(10),
+                ..ExecOptions::parallel()
+            };
+            let stats = run_with(&plan, &t, &store, &rt, &opts)
+                .unwrap_or_else(|e| panic!("world {world} run {run}: {e}"));
+            assert_eq!(stats.transfers, world * (world - 1));
+            for r in 0..world {
+                let v = store.get(r, "x").unwrap();
+                for src in 0..world {
+                    let want = if src == r { (r + 1) as f32 } else { (src + 1) as f32 };
+                    assert_eq!(
+                        &v[src * 4..(src + 1) * 4],
+                        &[want; 4],
+                        "world {world} run {run}: rank {r} row {src}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dependent_chains_complete_under_tight_bound_at_world_8() {
+    // forwarding chains exercise the parked-transfer path: rank r's send
+    // depends on the signal of rank r-1's send, so transfers park and must
+    // be drained by their DESTINATION rank as deps land.
+    let world = 8usize;
+    let mut t = TensorTable::new();
+    let x = t.declare("x", &[4, 4], DType::F32).unwrap();
+    let rt = Runtime::open_default().unwrap();
+    for run in 0..10usize {
+        let mut per_rank: Vec<RankProgram> = Vec::new();
+        for r in 0..world - 1 {
+            let deps = if r == 0 { vec![] } else { vec![r - 1] };
+            per_rank.push(RankProgram {
+                ops: vec![PlanOp::Issue(transfer_desc(
+                    x,
+                    Region::rows(0, 2, 4),
+                    r,
+                    r,
+                    r + 1,
+                    deps,
+                    false,
+                ))],
+            });
+        }
+        per_rank.push(RankProgram { ops: vec![PlanOp::Wait(world - 2)] });
+        let plan = ExecutablePlan {
+            world,
+            per_rank,
+            num_signals: world - 1,
+            reserved_comm_sms: 0,
+        };
+        let mut store = BufferStore::new(world);
+        store.declare("x", &[4, 4]).unwrap();
+        store.set(0, "x", &[9.0; 16]).unwrap();
+        let opts = ExecOptions {
+            mode: ExecMode::Parallel,
+            wait_timeout: Duration::from_millis(500),
+            ..ExecOptions::parallel()
+        };
+        let stats = run_with(&plan, &t, &store, &rt, &opts)
+            .unwrap_or_else(|e| panic!("run {run}: {e}"));
+        assert_eq!(stats.transfers, world - 1);
+        assert_eq!(&store.get(world - 1, "x").unwrap()[..8], &[9.0; 8]);
+    }
+}
