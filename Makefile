@@ -1,6 +1,6 @@
 # Build-time artifact pipeline + convenience wrappers.
 
-.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke
+.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke obs-smoke
 
 # AOT-lower every L2 entry point to HLO text + manifest (needs jax).
 artifacts:
@@ -39,6 +39,14 @@ trace-smoke:
 	cd rust && cargo run --release -- trace overlap /tmp/syncopate_trace.json
 	cd rust && cargo run --release -- calibrate --from /tmp/syncopate_trace.json --topo h100_node -o /tmp/syncopate_cal.topo
 	cd rust && cargo run --release -- topo lint /tmp/syncopate_cal.topo
+
+# Telemetry end to end: repeat-run feeding histograms, stats snapshot
+# export + schema check, live serving stats from a worker pool (§16).
+obs-smoke:
+	cd rust && cargo run --release -- exec --case ag-gemm --world 2 --repeat 5 --stats /tmp/syncopate_stats.json
+	cd rust && cargo run --release -- stats show /tmp/syncopate_stats.json
+	cd rust && cargo run --release -- stats check /tmp/syncopate_stats.json
+	cd rust && cargo run --release -- serve-demo --workers 4 --stats /tmp/syncopate_serve.json
 
 fmt:
 	cd rust && cargo fmt --check

@@ -214,5 +214,34 @@ fn main() {
         );
     }
 
+    // -- observability overhead: the hot-path counters (parks, unparks,
+    // queue drains, seen short-circuits, arena reuses) are strictly-Relaxed
+    // atomics behind a runtime enable flag; one binary measures both sides
+    // of that flag on the same prepared plan. Built with `--features
+    // no-obs` the record functions are compiled-out no-ops and the two
+    // rows must collapse onto each other.
+    println!("\n== hot-path observability: obs-on vs obs-off (parallel atomic) ==");
+    {
+        let case = execases::ag_gemm(4, 2, 7).unwrap();
+        let prep = prepare(&case.plan, &case.sched.tensors).unwrap();
+        let opts = ExecOptions::parallel();
+        let mut arena = PlanArena::new(&prep);
+        syncopate::obs::hot::set_enabled(true);
+        let on = res.bench("exec ag-gemm w4 s2 parallel atomic obs-on", 10, || {
+            let _ = run_prepared_reusing(&prep, &mut arena, &case.store, &rt, &opts).unwrap();
+        });
+        syncopate::obs::hot::set_enabled(false);
+        let off = res.bench("exec ag-gemm w4 s2 parallel atomic obs-off", 10, || {
+            let _ = run_prepared_reusing(&prep, &mut arena, &case.store, &rt, &opts).unwrap();
+        });
+        syncopate::obs::hot::set_enabled(true);
+        println!(
+            "  obs overhead {:+.1}% (on {:.3} ms, off {:.3} ms)",
+            (on / off - 1.0) * 100.0,
+            on * 1e3,
+            off * 1e3
+        );
+    }
+
     res.write();
 }

@@ -389,17 +389,26 @@ impl TuneCache {
         self.get_with_source(op, topo).map(|(c, m, t, _)| (c, m, t))
     }
 
-    /// [`TuneCache::get`] + where the time came from.
+    /// [`TuneCache::get`] + where the time came from. Every lookup lands
+    /// in `tune_cache.lookups{result=modeled|measured|miss}` so a serving
+    /// tier can watch how much of its tuning is backed by real traces.
     pub fn get_with_source(
         &self,
         op: &OperatorInstance,
         topo: &Topology,
     ) -> Option<(&str, f64, f64, TimeSource)> {
         let fp = crate::hw::fingerprint(topo);
-        self.entries
+        let found = self
+            .entries
             .iter()
             .find(|(l, f, ..)| l == &op.label() && f == &fp)
-            .map(|(_, _, c, m, t, s)| (c.as_str(), *m, *t, *s))
+            .map(|(_, _, c, m, t, s)| (c.as_str(), *m, *t, *s));
+        let result = match &found {
+            Some((.., s)) => s.name(),
+            None => "miss",
+        };
+        crate::obs::counter_with("tune_cache.lookups", &[("result", result)]).inc();
+        found
     }
 
     pub fn len(&self) -> usize {

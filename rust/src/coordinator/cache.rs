@@ -16,6 +16,8 @@
 use std::collections::HashMap;
 use std::sync::RwLock;
 
+use crate::obs;
+
 /// FNV-1a 64-bit: tiny, allocation-free, good dispersion on short
 /// `label|config` style keys. (std's `DefaultHasher` works too; FNV keeps
 /// the shard choice stable across Rust releases, which makes shard-balance
@@ -29,10 +31,37 @@ fn fnv1a(s: &str) -> u64 {
     h
 }
 
+/// Per-shard telemetry handles. Counters live in the global [`obs`]
+/// registry under `plan_cache.{hits,misses,insert_races}{shard=i}` — the
+/// only production [`ShardedCache`] is the coordinator's plan cache, so
+/// the name is fixed rather than threaded through the generic. Handles
+/// are `&'static`, so cloning a cache instance (or building one in a
+/// test) shares the same counters; assertions on them must be
+/// delta-based.
+#[derive(Debug)]
+struct ShardStats {
+    hits: &'static obs::Counter,
+    misses: &'static obs::Counter,
+    races: &'static obs::Counter,
+}
+
+impl ShardStats {
+    fn for_shard(i: usize) -> Self {
+        let shard = i.to_string();
+        let labels: &[(&str, &str)] = &[("shard", shard.as_str())];
+        ShardStats {
+            hits: obs::counter_with("plan_cache.hits", labels),
+            misses: obs::counter_with("plan_cache.misses", labels),
+            races: obs::counter_with("plan_cache.insert_races", labels),
+        }
+    }
+}
+
 /// A string-keyed concurrent cache, sharded by key hash.
 #[derive(Debug)]
 pub struct ShardedCache<V> {
     shards: Vec<RwLock<HashMap<String, V>>>,
+    stats: Vec<ShardStats>,
     mask: u64,
 }
 
@@ -43,24 +72,39 @@ impl<V: Clone> ShardedCache<V> {
         let n = shards.max(1).next_power_of_two();
         ShardedCache {
             shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            stats: (0..n).map(ShardStats::for_shard).collect(),
             mask: (n - 1) as u64,
         }
     }
 
+    fn index(&self, key: &str) -> usize {
+        (fnv1a(key) & self.mask) as usize
+    }
+
     fn shard(&self, key: &str) -> &RwLock<HashMap<String, V>> {
-        &self.shards[(fnv1a(key) & self.mask) as usize]
+        &self.shards[self.index(key)]
     }
 
     /// Clone the cached value for `key`, if present.
     pub fn get(&self, key: &str) -> Option<V> {
-        self.shard(key).read().unwrap().get(key).cloned()
+        let i = self.index(key);
+        let v = self.shards[i].read().unwrap().get(key).cloned();
+        match v {
+            Some(_) => self.stats[i].hits.inc(),
+            None => self.stats[i].misses.inc(),
+        }
+        v
     }
 
     /// Insert unless the key is already present (first writer wins).
-    /// Returns true if this call inserted.
+    /// Returns true if this call inserted. A losing insert (the key
+    /// appeared between the caller's miss and this write) counts as an
+    /// insert race.
     pub fn insert_if_absent(&self, key: &str, value: V) -> bool {
-        let mut shard = self.shard(key).write().unwrap();
+        let i = self.index(key);
+        let mut shard = self.shards[i].write().unwrap();
         if shard.contains_key(key) {
+            self.stats[i].races.inc();
             return false;
         }
         shard.insert(key.to_string(), value);
@@ -152,5 +196,23 @@ mod tests {
         assert_eq!(c.len(), KEYS);
         assert!(m >= KEYS, "each key misses at least once");
         assert!(m <= WORKERS * KEYS, "misses bounded by worst-case racing");
+    }
+
+    #[test]
+    fn cache_traffic_lands_in_obs_counters() {
+        // counters are process-global and shared by every cache instance,
+        // so assert deltas, not absolutes (other tests run concurrently)
+        let c = ShardedCache::new(1); // one shard: all traffic hits shard=0
+        let hits = crate::obs::counter_with("plan_cache.hits", &[("shard", "0")]);
+        let misses = crate::obs::counter_with("plan_cache.misses", &[("shard", "0")]);
+        let races = crate::obs::counter_with("plan_cache.insert_races", &[("shard", "0")]);
+        let (h0, m0, r0) = (hits.get(), misses.get(), races.get());
+        assert!(c.get("k").is_none());
+        assert!(c.insert_if_absent("k", 1));
+        assert!(!c.insert_if_absent("k", 2), "losing insert must count as a race");
+        assert_eq!(c.get("k"), Some(1));
+        assert!(hits.get() >= h0 + 1);
+        assert!(misses.get() >= m0 + 1);
+        assert!(races.get() >= r0 + 1);
     }
 }

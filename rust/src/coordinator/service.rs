@@ -14,12 +14,14 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Instant;
 
 use crate::coordinator::cache::ShardedCache;
 use crate::coordinator::operators::compile_operator;
 use crate::coordinator::TuneConfig;
 use crate::error::{Error, Result};
 use crate::exec::{BufferStore, ExecOptions, ExecStats};
+use crate::obs;
 use crate::runtime::Runtime;
 use crate::sim::engine::simulate;
 use crate::topo::Topology;
@@ -125,6 +127,7 @@ impl CoordinatorClient {
         self.tx
             .send(Envelope::Req(req, rtx))
             .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
+        obs::gauge("coord.queue_depth").inc();
         Ok(rrx)
     }
 
@@ -168,6 +171,7 @@ impl CoordinatorClient {
         self.tx
             .send(Envelope::UserPlan(text.to_string(), opts, traced, rtx))
             .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
+        obs::gauge("coord.queue_depth").inc();
         Ok(rrx)
     }
 
@@ -202,11 +206,11 @@ impl Coordinator {
         let cache: Arc<PlanCache> = Arc::new(ShardedCache::new(CACHE_SHARDS));
         let topo = Arc::new(topo);
         let handles = (0..workers)
-            .map(|_| {
+            .map(|wi| {
                 let rx = rx.clone();
                 let cache = cache.clone();
                 let topo = topo.clone();
-                thread::spawn(move || worker(&topo, &rx, &cache))
+                thread::spawn(move || worker(wi, &topo, &rx, &cache))
             })
             .collect();
         Coordinator { tx, handles }
@@ -255,10 +259,14 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &PlanCache) {
+fn worker(wi: usize, topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &PlanCache) {
     // Lazily opened on the first user-plan request: operator requests are
     // sim-only and never touch the artifact runtime.
     let mut runtime: Option<Runtime> = None;
+    let widx = wi.to_string();
+    let busy = obs::gauge_with("coord.worker_busy", &[("worker", widx.as_str())]);
+    let served = obs::counter_with("coord.worker_requests", &[("worker", widx.as_str())]);
+    let depth = obs::gauge("coord.queue_depth");
     loop {
         // Serialize only the dequeue; processing runs in parallel.
         let env = { rx.lock().unwrap().recv() };
@@ -266,10 +274,24 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &PlanCac
         match env {
             Envelope::Shutdown => break,
             Envelope::UserPlan(text, opts, traced, reply) => {
+                depth.dec();
+                busy.set(1.0);
+                served.inc();
+                let t0 = Instant::now();
                 let resp = serve_user_plan(&text, &opts, traced, topo, cache, &mut runtime);
+                obs::histogram_with("serve.request_us", &[("kind", "user-plan")])
+                    .record_us(obs::us_since(t0));
+                if let Err(e) = &resp {
+                    obs::error_total(e.subsystem());
+                }
+                busy.set(0.0);
                 let _ = reply.send(resp);
             }
             Envelope::Req(Request::Run { op, cfg }, reply) => {
+                depth.dec();
+                busy.set(1.0);
+                served.inc();
+                let t0 = Instant::now();
                 let key = format!("{}|{}", op.label(), cfg.label());
                 let cached = cache.get(&key);
                 let cache_hit = cached.is_some();
@@ -295,6 +317,12 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &PlanCac
                         cache_hit,
                     })
                 });
+                obs::histogram_with("serve.request_us", &[("kind", "operator")])
+                    .record_us(obs::us_since(t0));
+                if let Err(e) = &resp {
+                    obs::error_total(e.subsystem());
+                }
+                busy.set(0.0);
                 let _ = reply.send(resp);
             }
         }
@@ -304,7 +332,11 @@ fn worker(topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cache: &PlanCac
 /// The user-plan serving path (DESIGN.md §11): parse → validate →
 /// restricted autotune (split fixed by the plan) → comm-only codegen →
 /// real-numerics exec, with the tuned compiled plan cached under the
-/// content hash of the canonical printed form.
+/// content hash of the canonical printed form. Each phase lands its
+/// latency in `serve.phase_us{phase=...}` (a phase that errors out
+/// records nothing — the failure is counted once in `error_total` by the
+/// worker loop); warm cache hits skip tune/compile, so those phases only
+/// accumulate cold-path samples.
 fn serve_user_plan(
     text: &str,
     opts: &crate::exec::ExecOptions,
@@ -313,7 +345,11 @@ fn serve_user_plan(
     cache: &PlanCache,
     runtime: &mut Option<Runtime>,
 ) -> Result<UserPlanResponse> {
+    let phase = |p: &str| obs::histogram_with("serve.phase_us", &[("phase", p)]);
+    let t0 = Instant::now();
     let sched = crate::plan_io::parse_schedule(text)?;
+    phase("parse").record_us(obs::us_since(t0));
+    let t0 = Instant::now();
     if sched.world != topo.world {
         return Err(Error::Coordinator(format!(
             "plan world {} != coordinator world {}",
@@ -325,6 +361,7 @@ fn serve_user_plan(
     // the same plan still hit the same cache entry
     let hash = crate::plan_io::content_hash(&crate::plan_io::print_schedule(&sched)?);
     let key = format!("user-plan|{hash}");
+    phase("validate").record_us(obs::us_since(t0));
 
     let cached = cache.get(&key);
     let cache_hit = cached.is_some();
@@ -340,11 +377,15 @@ fn serve_user_plan(
             (plan, sim.makespan_us, label)
         }
         None => {
+            let t0 = Instant::now();
             let tuned = crate::autotune::tune_user_plan(&sched, topo)?;
+            phase("tune").record_us(obs::us_since(t0));
+            let t0 = Instant::now();
             let plan = crate::codegen::compile_comm_only(&sched, tuned.real, topo)?;
             let params = crate::sim::SimParams::default();
             let sim = simulate(&plan, topo, params)?;
             let label = realization_label(&plan);
+            phase("compile").record_us(obs::us_since(t0));
             // first writer wins; racing workers compiled the same bits
             cache.insert_if_absent(
                 &key,
@@ -363,13 +404,18 @@ fn serve_user_plan(
     }
     let rt = runtime.as_ref().expect("just initialized");
     let store = seeded_store(&sched)?;
+    let t0 = Instant::now();
     let (stats, trace_stats) = if traced {
         let (stats, trace) =
             crate::exec::run_with_traced(&plan, &sched.tensors, &store, rt, opts)?;
-        (stats, Some(crate::trace::analyze(&trace).stats()))
+        let report = crate::trace::analyze(&trace);
+        // every traced request feeds the standing sim-vs-trace gauge
+        report.record_divergence(sim_makespan_us);
+        (stats, Some(report.stats()))
     } else {
         (crate::exec::run_with(&plan, &sched.tensors, &store, rt, opts)?, None)
     };
+    phase("exec").record_us(obs::us_since(t0));
     Ok(UserPlanResponse {
         hash,
         world: sched.world,
@@ -581,6 +627,34 @@ mod tests {
                    rank 1:\n  push x[2:4, 0:16] -> x[2:4, 0:16] peer 0 deps (0,0)\n";
         let e = coord.run_user_plan(cyc, opts).unwrap_err();
         assert!(e.to_string().contains("cycle"), "{e}");
+    }
+
+    #[test]
+    fn serving_feeds_the_obs_registry() {
+        // metric handles are process-global: assert deltas, not absolutes
+        let req = crate::obs::histogram_with("serve.request_us", &[("kind", "user-plan")]);
+        let parse = crate::obs::histogram_with("serve.phase_us", &[("phase", "parse")]);
+        let exec = crate::obs::histogram_with("serve.phase_us", &[("phase", "exec")]);
+        let div_samples = crate::obs::counter("sim.divergence_samples");
+        let errs = crate::obs::counter_with("error_total", &[("kind", "coordinator")]);
+        let (r0, p0, e0) = (req.snap().count, parse.snap().count, exec.snap().count);
+        let (d0, c0) = (div_samples.get(), errs.get());
+        let coord =
+            Coordinator::spawn_pool(crate::hw::catalog::topology("h100_node", 2).unwrap(), 2);
+        let text = "plan v1 world 2\n\
+                    tensor x f32 4x16\n\
+                    rank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n\
+                    rank 1:\n  push x[2:4, 0:16] -> x[2:4, 0:16] peer 0\n";
+        coord.run_user_plan(text, ExecOptions::sequential()).unwrap();
+        coord.run_user_plan_traced(text, ExecOptions::sequential()).unwrap();
+        assert!(req.snap().count >= r0 + 2, "both requests must land in serve.request_us");
+        assert!(parse.snap().count >= p0 + 2);
+        assert!(exec.snap().count >= e0 + 2);
+        assert!(div_samples.get() >= d0 + 1, "traced request must feed the divergence gauge");
+        // a rejected plan (world mismatch -> coordinator subsystem) counts
+        let four = "plan v1 world 4\ntensor x f32 8x16\nrank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n";
+        assert!(coord.run_user_plan(four, ExecOptions::sequential()).is_err());
+        assert!(errs.get() >= c0 + 1, "serve errors must land in error_total{{kind}}");
     }
 
     #[test]

@@ -65,6 +65,10 @@ pub struct PlanArena {
     /// producers can unpark a destination directly after a queue push.
     pub(crate) threads: Vec<Mutex<Option<Thread>>>,
     num_signals: usize,
+    /// Has this arena driven a run before? Flipped by the first
+    /// [`reset`](Self::reset); later resets count as warm reuse in the
+    /// hot-path telemetry (`hot.arena_reuses`).
+    used: bool,
 }
 
 impl PlanArena {
@@ -92,12 +96,17 @@ impl PlanArena {
                 .collect(),
             threads: (0..world).map(|_| Mutex::new(None)).collect(),
             num_signals,
+            used: false,
         }
     }
 
     /// Clear run state, keep capacities. Called by the engine on entry so
     /// a reused arena behaves exactly like a fresh one.
     pub fn reset(&mut self) {
+        if self.used {
+            crate::obs::hot::arena_reuse();
+        }
+        self.used = true;
         self.board.reset();
         for q in &mut self.queues {
             q.items.get_mut().unwrap().clear();

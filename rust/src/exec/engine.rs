@@ -434,6 +434,7 @@ fn run_sequential(
                     format!("rank {r} at op {} ({})", pcs[r], plan.per_rank[r].ops[pcs[r]].brief())
                 })
                 .collect();
+            crate::obs::error_total("deadlock");
             return Err(Error::Exec(format!(
                 "deadlock: no progress; {} pending transfers; stuck: {}",
                 pending.len(),

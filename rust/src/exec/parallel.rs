@@ -147,6 +147,7 @@ impl Shared<'_> {
                 }
             }
         }
+        crate::obs::error_total("deadlock");
         let stuck = self.stuck_ranks();
         let stuck = if stuck.is_empty() {
             "none (all rank programs completed)".to_string()
@@ -375,6 +376,7 @@ fn drain_ready(
         });
     }
     let n = ready.len();
+    crate::obs::hot::queue_drained(n);
     for it in ready.drain(..) {
         let d = shared.queued_desc(it)?;
         let bytes = shared.apply_busy(d, store, copy)?;

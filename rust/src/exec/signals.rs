@@ -225,6 +225,7 @@ impl SignalBoard {
                 (Interest::Signal(_), None) => false,
             };
             if hit {
+                crate::obs::hot::unpark();
                 p.thread.unpark();
             }
         }
@@ -261,6 +262,7 @@ impl SignalBoard {
         if !cond() {
             let left = deadline.saturating_duration_since(Instant::now());
             if !left.is_zero() {
+                crate::obs::hot::park();
                 std::thread::park_timeout(left);
             }
         }
@@ -394,6 +396,7 @@ impl SeenSignals {
 
     pub fn is_set(&mut self, board: &SignalBoard, id: usize) -> bool {
         if self.seen[id] {
+            crate::obs::hot::seen_short_circuit();
             return true;
         }
         if board.is_set(id) {

@@ -31,7 +31,11 @@
 //!   emit chunk-level event traces (Chrome `trace_event` export, overlap
 //!   report, sim-vs-trace divergence), and `calibrate` fits measured
 //!   bandwidth curves + compute rate back into a `.topo` keyed by the
-//!   machine fingerprint.
+//!   machine fingerprint. A standing telemetry layer ([`obs`]) watches
+//!   all of it continuously: a lock-free metrics registry (counters,
+//!   gauges, log₂ latency histograms) instruments the serving path, the
+//!   plan/tune caches, and the parallel engine's run loop, exported as
+//!   Prometheus text or `syncopate.stats.v1` JSON (`stats` CLI verbs).
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
@@ -53,6 +57,7 @@ pub mod kernel;
 pub mod lowering;
 pub mod exec;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod plan_io;
 pub mod reports;

@@ -14,6 +14,7 @@
 //!                [--topo <name|FILE.topo>] [--trace FILE.json] [--cache FILE]
 //!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
 //!                [--sync <atomic|condvar>] [--pin-ranks] [--pin-from FILE.json]
+//!                [--repeat N] [--stats FILE.json]
 //!                (--nodes splits SINGLE-node --topo descriptions for the
 //!                 hierarchical case; a multinode description's own node
 //!                 structure wins; --trace captures a Chrome trace and
@@ -21,9 +22,18 @@
 //!                 --sync picks the parallel engine's synchronization core,
 //!                 --pin-ranks pins rank threads round-robin over cores, and
 //!                 --pin-from derives the pin layout from a prior traced
-//!                 run's per-rank slack — stragglers get dedicated cores)
+//!                 run's per-rank slack — stragglers get dedicated cores;
+//!                 --repeat N warm-replays the prepared plan N times on the
+//!                 atomic engine, feeding per-iteration makespans into the
+//!                 exec.iter_us histogram; --stats dumps the process
+//!                 telemetry snapshot as syncopate.stats.v1 JSON on exit)
 //! syncopate trace show <FILE.json>
 //! syncopate trace overlap <FILE.json>
+//! syncopate trace diff <A.json> <B.json>
+//! syncopate stats show [FILE.json] [--prom]
+//! syncopate stats check <FILE.json>
+//! syncopate stats watch <FILE.json> [--interval-ms N] [--count N]
+//! syncopate stats reset
 //! syncopate calibrate --from <FILE.json> --topo <name|FILE.topo> [-o FILE.topo]
 //! syncopate plan import --from <SOURCE> [--world N] [--out FILE.sched]
 //! syncopate plan show <FILE.sched>
@@ -34,7 +44,7 @@
 //! syncopate topo list
 //! syncopate topo show <name|FILE.topo>
 //! syncopate topo lint <FILE.topo>...
-//! syncopate serve-demo [--workers N] [--topo <name|FILE.topo>]
+//! syncopate serve-demo [--workers N] [--topo <name|FILE.topo>] [--stats FILE.json]
 //! ```
 //!
 //! Every `--topo` accepts a built-in catalog name (`syncopate topo list`)
@@ -360,9 +370,43 @@ fn dispatch(args: &[String]) -> Result<()> {
                 syncopate::util::fmt_bytes(stats.bytes_moved as u64),
                 stats.compute_calls
             );
+            // --repeat N: warm-replay the prepared plan through the atomic
+            // engine's arena-reusing entry point (regardless of --exec-mode:
+            // replay is about the serving-tier hot path), so exec.iter_us
+            // accumulates real per-iteration makespans
+            let repeat = get_usize(&flags, "repeat", 1)?.max(1);
+            if repeat > 1 {
+                let rcase = execases::build_case(&case_name, &params)?;
+                let prep = syncopate::exec::prepare(&rcase.plan, &rcase.sched.tensors)?;
+                let mut arena = syncopate::exec::PlanArena::new(&prep);
+                let hist =
+                    syncopate::obs::histogram_with("exec.iter_us", &[("case", name.as_str())]);
+                for _ in 0..repeat {
+                    let store = rcase.store.clone();
+                    let t0 = std::time::Instant::now();
+                    syncopate::exec::run_prepared_reusing(&prep, &mut arena, &store, &rt, &opts)?;
+                    hist.record_us(syncopate::obs::us_since(t0));
+                }
+                let s = hist.snap();
+                println!(
+                    "repeat {repeat}x [atomic, arena-reused]: p50 {} p90 {} p99 {} max {} \
+                     (n={})",
+                    syncopate::util::fmt_us(s.percentile(0.50)),
+                    syncopate::util::fmt_us(s.percentile(0.90)),
+                    syncopate::util::fmt_us(s.percentile(0.99)),
+                    syncopate::util::fmt_us(s.max_us),
+                    s.count
+                );
+            }
+            if let Some(path) = flags.get("stats") {
+                let snap = syncopate::obs::registry().snapshot();
+                std::fs::write(path, syncopate::obs::export::to_json(&snap))?;
+                println!("stats -> {path} ({} metrics)", snap.entries.len());
+            }
             Ok(())
         }
         "trace" => trace_cmd(&bare),
+        "stats" => stats_cmd(&bare, &flags),
         "calibrate" => calibrate_cmd(&flags),
         "plan" => match bare.first().map(String::as_str) {
             Some("import") => plan_import(&flags),
@@ -439,6 +483,15 @@ fn dispatch(args: &[String]) -> Result<()> {
                     r.stats.transfers,
                     r.cache_hit
                 );
+            }
+            // live telemetry on exit: everything the demo batch recorded
+            // (per-phase serving latencies, cache traffic, the divergence
+            // gauge the traced requests fed)
+            let snap = syncopate::obs::registry().snapshot();
+            println!("\n{}", syncopate::obs::export::render(&snap));
+            if let Some(path) = flags.get("stats") {
+                std::fs::write(path, syncopate::obs::export::to_json(&snap))?;
+                println!("stats -> {path} ({} metrics)", snap.entries.len());
             }
             Ok(())
         }
@@ -567,9 +620,12 @@ fn traced_case_plan(
     Ok(Some((built.plan, built.topo)))
 }
 
-/// `trace show|overlap FILE`: inspect a captured execution trace
+/// `trace show|overlap|diff`: inspect captured execution traces
 /// (DESIGN.md §14).
 fn trace_cmd(bare: &[String]) -> Result<()> {
+    if bare.first().map(String::as_str) == Some("diff") {
+        return trace_diff(bare.get(1), bare.get(2));
+    }
     let (verb, path) = match (bare.first().map(String::as_str), bare.get(1)) {
         (Some(v @ ("show" | "overlap")), Some(p)) => (v, p),
         (Some("show" | "overlap"), None) => {
@@ -577,7 +633,7 @@ fn trace_cmd(bare: &[String]) -> Result<()> {
         }
         (other, _) => {
             return Err(Error::Coordinator(format!(
-                "unknown trace verb `{}` (show|overlap)",
+                "unknown trace verb `{}` (show|overlap|diff)",
                 other.unwrap_or("<none>")
             )))
         }
@@ -613,6 +669,133 @@ fn trace_cmd(bare: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `trace diff A.json B.json`: compare two traced runs of the same plan —
+/// per-rank busy deltas, makespan/hidden-fraction deltas, and (when the
+/// traces name their registry case) the sim-vs-trace divergence shift.
+/// Refuses traces that describe different worlds, machine shapes, or
+/// cases: a diff across those is noise, not a comparison.
+fn trace_diff(a: Option<&String>, b: Option<&String>) -> Result<()> {
+    let (Some(pa), Some(pb)) = (a, b) else {
+        return Err(Error::Coordinator("trace diff needs two trace files: A.json B.json".into()));
+    };
+    let ta = load_trace(pa)?;
+    let tb = load_trace(pb)?;
+    if ta.world != tb.world {
+        return Err(Error::Trace(format!(
+            "world mismatch: {pa} is world {}, {pb} is world {}",
+            ta.world, tb.world
+        )));
+    }
+    if !ta.fingerprint.is_empty()
+        && !tb.fingerprint.is_empty()
+        && ta.fingerprint != tb.fingerprint
+    {
+        return Err(Error::Trace(format!(
+            "fingerprint mismatch: the traces ran on different machine shapes \
+             ({} vs {})",
+            ta.fingerprint, tb.fingerprint
+        )));
+    }
+    if let (Some(ca), Some(cb)) = (ta.meta("registry-case"), tb.meta("registry-case")) {
+        if ca != cb {
+            return Err(Error::Trace(format!(
+                "case mismatch: {pa} traced `{ca}`, {pb} traced `{cb}`"
+            )));
+        }
+    }
+    let ra = syncopate::trace::analyze(&ta);
+    let rb = syncopate::trace::analyze(&tb);
+    println!("# A: {pa} ({})", ra.summary_line());
+    println!("# B: {pb} ({})", rb.summary_line());
+    println!("{}", syncopate::trace::OverlapReport::diff_table(&ra, &rb).render());
+    if let Some((plan, topo)) = traced_case_plan(&ta)? {
+        let sim = simulate(&plan, &topo, syncopate::sim::SimParams::default())?;
+        println!(
+            "sim-vs-trace divergence: A {:.3} -> B {:.3} (sim {})",
+            ra.divergence(sim.makespan_us),
+            rb.divergence(sim.makespan_us),
+            syncopate::util::fmt_us(sim.makespan_us)
+        );
+    }
+    Ok(())
+}
+
+/// `stats show|check|watch|reset`: the live-telemetry verb family. `show`
+/// renders a `syncopate.stats.v1` snapshot file (or, with no file, this
+/// process's own registry — useful mostly after `exec --repeat` in the
+/// same invocation); `--prom` switches to Prometheus text exposition.
+fn stats_cmd(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let load_snap = |path: &String| -> Result<syncopate::obs::Snapshot> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        syncopate::obs::export::from_json(&text).map_err(|e| Error::Io(format!("{path}: {e}")))
+    };
+    match bare.first().map(String::as_str) {
+        Some("show") => {
+            let snap = match bare.get(1) {
+                Some(path) => load_snap(path)?,
+                None => syncopate::obs::registry().snapshot(),
+            };
+            if flags.contains_key("prom") {
+                print!("{}", syncopate::obs::export::to_prometheus(&snap));
+            } else {
+                print!("{}", syncopate::obs::export::render(&snap));
+            }
+            Ok(())
+        }
+        Some("check") => {
+            let Some(path) = bare.get(1) else {
+                return Err(Error::Coordinator("stats check needs a stats.json file".into()));
+            };
+            let snap = load_snap(path)?;
+            println!(
+                "OK {path}: valid {} snapshot ({} metrics)",
+                syncopate::obs::export::STATS_SCHEMA,
+                snap.entries.len()
+            );
+            Ok(())
+        }
+        Some("watch") => {
+            let Some(path) = bare.get(1) else {
+                return Err(Error::Coordinator("stats watch needs a stats.json file".into()));
+            };
+            let interval = get_usize(flags, "interval-ms", 1000)?.max(10) as u64;
+            // --count bounds the watch (0 = forever); CI smoke uses 1
+            let count = get_usize(flags, "count", 0)?;
+            let mut seen = String::new();
+            let mut shown = 0usize;
+            loop {
+                // a watched file may not exist yet (or be mid-write):
+                // unreadable snapshots just mean "poll again"
+                if let Ok(text) = std::fs::read_to_string(path) {
+                    if text != seen {
+                        let snap = syncopate::obs::export::from_json(&text)
+                            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+                        println!("-- {path} --");
+                        print!("{}", syncopate::obs::export::render(&snap));
+                        seen = text;
+                        shown += 1;
+                        if count > 0 && shown >= count {
+                            return Ok(());
+                        }
+                    }
+                }
+                std::thread::sleep(std::time::Duration::from_millis(interval));
+            }
+        }
+        Some("reset") => {
+            let n = syncopate::obs::registry().snapshot().entries.len();
+            syncopate::obs::registry().reset();
+            println!("stats: registry reset ({n} metrics zeroed)");
+            Ok(())
+        }
+        other => Err(Error::Coordinator(format!(
+            "unknown stats verb `{}` (show|check|watch|reset)",
+            other.unwrap_or("<none>")
+        ))),
+    }
 }
 
 /// `calibrate --from TRACE --topo NAME -o FILE.topo`: fit measured curve
@@ -891,12 +1074,16 @@ fn print_ratios(t: &syncopate::metrics::Table) {
 fn print_usage() {
     println!(
         "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
-         usage: syncopate <report|simulate|tune|exec|trace|calibrate|plan|topo|serve-demo> [flags]\n\
+         usage: syncopate <report|simulate|tune|exec|trace|stats|calibrate|plan|topo|serve-demo> \
+         [flags]\n\
          plan verbs: plan import --from <src>, plan show|lint|run <file.sched>\n\
          topo verbs: topo list, topo show|lint <name|file.topo>\n\
-         exec cases: syncopate exec --case list   (add --trace FILE to capture)\n\
-         tracing   : trace show|overlap <file.json>; calibrate --from <file.json> \
-         --topo <name> -o <file.topo>\n\
+         exec cases: syncopate exec --case list   (add --trace FILE to capture, \
+         --repeat N --stats FILE for telemetry)\n\
+         tracing   : trace show|overlap <file.json>, trace diff <a.json> <b.json>; \
+         calibrate --from <file.json> --topo <name> -o <file.topo>\n\
+         telemetry : stats show [file.json] [--prom], stats check|watch <file.json>, \
+         stats reset\n\
          hardware  : every sim/tune/exec/plan-run takes --topo <name|file.topo>\n\
          see rust/src/main.rs header for the full flag list"
     );

@@ -247,4 +247,32 @@ mod tests {
         let mut t = Table::new("x", &["a"], "u");
         t.push_row("r", vec![1.0, 2.0]);
     }
+
+    #[test]
+    fn json_export_survives_control_chars_and_non_finite() {
+        // stats snapshots pipe Table JSON into files and jq: control
+        // characters in titles/labels and non-finite cells must never
+        // produce invalid JSON. Validate with the crate's own parser.
+        let mut t = Table::new("line1\nline2\ttabbed \"q\"", &["c\\col", "d"], "us");
+        t.push_row("row\r\"quoted\"", vec![f64::INFINITY, 1.5]);
+        t.push_row("neg", vec![f64::NEG_INFINITY, f64::NAN]);
+        let parsed =
+            crate::trace::json::parse(&t.to_json()).expect("Table::to_json must emit valid JSON");
+        assert_eq!(
+            parsed.get("title").and_then(|v| v.as_str()),
+            Some("line1\nline2\ttabbed \"q\"")
+        );
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("label").and_then(|v| v.as_str()),
+            Some("row\r\"quoted\"")
+        );
+        // every non-finite cell (Inf, -Inf, NaN) lands as null
+        let vals = |i: usize| rows[i].get("values").unwrap().as_arr().unwrap();
+        assert!(matches!(vals(0)[0], crate::trace::json::Json::Null));
+        assert_eq!(vals(0)[1].as_f64(), Some(1.5));
+        assert!(matches!(vals(1)[0], crate::trace::json::Json::Null));
+        assert!(matches!(vals(1)[1], crate::trace::json::Json::Null));
+    }
 }

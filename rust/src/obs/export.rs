@@ -1,0 +1,507 @@
+//! Snapshot export: Prometheus text exposition, JSON stats snapshots
+//! (schema `syncopate.stats.v1`), and [`Table`] renderings for the
+//! `stats show` CLI — all hand-rolled, same zero-dependency discipline as
+//! `trace::json` (whose parser reads the JSON back).
+//!
+//! Exposition grammar (the subset of the Prometheus text format we
+//! emit; see DESIGN.md §16):
+//!
+//! ```text
+//! # TYPE syncopate_<name> counter|gauge|histogram
+//! syncopate_<name>{label="value",...} <number>
+//! ```
+//!
+//! Metric names sanitize `.`/`-` (and anything non-alphanumeric) to `_`
+//! and carry a `syncopate_` prefix. Histograms expand to cumulative
+//! `_bucket{le="2^i"}` samples (buckets up to the last non-empty one,
+//! then `le="+Inf"`), `_sum`, and `_count`.
+
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+use crate::obs::{bucket_upper_us, HistogramSnapshot, Key, Snapshot, Value, NUM_BUCKETS};
+use crate::trace::json::{parse as parse_json, Json};
+use std::fmt::Write as _;
+
+/// Schema tag stamped on (and required of) every JSON stats snapshot.
+pub const STATS_SCHEMA: &str = "syncopate.stats.v1";
+
+/// Prometheus-safe metric name: `syncopate_` prefix, every
+/// non-alphanumeric byte mapped to `_`.
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 10);
+    out.push_str("syncopate_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shortest-round-trip number, integers without a trailing `.0`.
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn sample_name(base: &str, labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if pairs.is_empty() {
+        base.to_string()
+    } else {
+        format!("{base}{{{}}}", pairs.join(","))
+    }
+}
+
+/// Flatten a snapshot into `(sample_name, value)` pairs — the exact
+/// sample set [`to_prometheus`] renders, exposed so the golden test can
+/// assert `parse(render(s)) == flatten(s)`.
+pub fn flatten(snap: &Snapshot) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (key, value) in &snap.entries {
+        let base = sanitize(&key.name);
+        match value {
+            Value::Counter(n) => out.push((sample_name(&base, &key.labels, None), *n as f64)),
+            Value::Gauge(v) => out.push((sample_name(&base, &key.labels, None), *v)),
+            Value::Histogram(h) => {
+                let bucket_base = format!("{base}_bucket");
+                let last = h.buckets.iter().rposition(|&b| b > 0);
+                let mut cum = 0u64;
+                if let Some(last) = last {
+                    for (i, b) in h.buckets.iter().enumerate().take(last + 1) {
+                        cum += b;
+                        let le = fmt_num(bucket_upper_us(i));
+                        out.push((
+                            sample_name(&bucket_base, &key.labels, Some(("le", &le))),
+                            cum as f64,
+                        ));
+                    }
+                }
+                out.push((
+                    sample_name(&bucket_base, &key.labels, Some(("le", "+Inf"))),
+                    h.count as f64,
+                ));
+                out.push((sample_name(&format!("{base}_sum"), &key.labels, None), h.sum_us));
+                out.push((
+                    sample_name(&format!("{base}_count"), &key.labels, None),
+                    h.count as f64,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot in Prometheus text-exposition format.
+pub fn to_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut typed: Vec<String> = Vec::new();
+    // TYPE headers interleave with their samples; emit per metric name.
+    for (key, value) in &snap.entries {
+        let base = sanitize(&key.name);
+        if !typed.contains(&base) {
+            let _ = writeln!(out, "# TYPE {base} {}", value.kind());
+            typed.push(base);
+        }
+        for (name, v) in flatten(&Snapshot { entries: vec![(key.clone(), value.clone())] }) {
+            let _ = writeln!(out, "{name} {}", fmt_num(v));
+        }
+    }
+    out
+}
+
+/// Parse the exposition format back into `(sample_name, value)` pairs
+/// (comment lines skipped) — the golden-test inverse of
+/// [`to_prometheus`].
+pub fn parse_prometheus(text: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some(space) = line.rfind(' ') else {
+            return Err(Error::Io(format!("exposition line {}: no value: `{line}`", ln + 1)));
+        };
+        let (name, value) = line.split_at(space);
+        let value: f64 = value
+            .trim()
+            .parse()
+            .map_err(|_| Error::Io(format!("exposition line {}: bad number `{value}`", ln + 1)))?;
+        out.push((name.to_string(), value));
+    }
+    Ok(out)
+}
+
+fn labels_json(labels: &[(String, String)]) -> String {
+    let esc = crate::util::json_escape;
+    let pairs: Vec<String> =
+        labels.iter().map(|(k, v)| format!("\"{}\": \"{}\"", esc(k), esc(v))).collect();
+    format!("{{{}}}", pairs.join(", "))
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a snapshot as a `syncopate.stats.v1` JSON document.
+///
+/// Histograms carry their non-empty buckets as `[upper_us, count]`
+/// pairs plus derived p50/p90/p99 (informational — [`from_json`]
+/// re-derives them from the buckets). Non-finite numbers render as
+/// `null`, so the document is always valid JSON.
+pub fn to_json(snap: &Snapshot) -> String {
+    let esc = crate::util::json_escape;
+    let mut out = String::new();
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"schema\": \"{STATS_SCHEMA}\",");
+    let _ = writeln!(out, "  \"metrics\": [");
+    for (i, (key, value)) in snap.entries.iter().enumerate() {
+        let sep = if i + 1 < snap.entries.len() { "," } else { "" };
+        let head = format!(
+            "\"name\": \"{}\", \"labels\": {}, \"kind\": \"{}\"",
+            esc(&key.name),
+            labels_json(&key.labels),
+            value.kind()
+        );
+        match value {
+            Value::Counter(n) => {
+                let _ = writeln!(out, "    {{{head}, \"value\": {n}}}{sep}");
+            }
+            Value::Gauge(v) => {
+                let _ = writeln!(out, "    {{{head}, \"value\": {}}}{sep}", json_f64(*v));
+            }
+            Value::Histogram(h) => {
+                let buckets: Vec<String> = h
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b > 0)
+                    .map(|(i, b)| format!("[{}, {b}]", fmt_num(bucket_upper_us(i))))
+                    .collect();
+                let _ = writeln!(
+                    out,
+                    "    {{{head}, \"count\": {}, \"sum_us\": {}, \"max_us\": {}, \
+                     \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}, \"buckets\": [{}]}}{sep}",
+                    h.count,
+                    json_f64(h.sum_us),
+                    json_f64(h.max_us),
+                    json_f64(h.percentile(0.5)),
+                    json_f64(h.percentile(0.9)),
+                    json_f64(h.percentile(0.99)),
+                    buckets.join(", ")
+                );
+            }
+        }
+    }
+    let _ = writeln!(out, "  ]");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+fn key_from_json(m: &Json) -> Result<Key> {
+    let name = m
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Io("stats metric missing `name`".into()))?;
+    let mut labels: Vec<(String, String)> = Vec::new();
+    if let Some(Json::Obj(pairs)) = m.get("labels") {
+        for (k, v) in pairs {
+            let v = v
+                .as_str()
+                .ok_or_else(|| Error::Io(format!("label `{k}` of `{name}` is not a string")))?;
+            labels.push((k.clone(), v.to_string()));
+        }
+    }
+    labels.sort();
+    Ok(Key { name: name.to_string(), labels })
+}
+
+fn histogram_from_json(m: &Json, key: &Key) -> Result<HistogramSnapshot> {
+    let count = m
+        .get("count")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Io(format!("histogram `{key}` missing `count`")))?
+        as u64;
+    let sum_us = m.get("sum_us").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let max_us = m.get("max_us").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let mut buckets = vec![0u64; NUM_BUCKETS];
+    let pairs = m
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Io(format!("histogram `{key}` missing `buckets`")))?;
+    for pair in pairs {
+        let pair = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| Error::Io(format!("histogram `{key}`: bucket must be [le, count]")))?;
+        let le = pair[0]
+            .as_f64()
+            .ok_or_else(|| Error::Io(format!("histogram `{key}`: bad bucket bound")))?;
+        let n = pair[1]
+            .as_usize()
+            .ok_or_else(|| Error::Io(format!("histogram `{key}`: bad bucket count")))?;
+        let idx = (0..NUM_BUCKETS)
+            .find(|&i| bucket_upper_us(i) == le)
+            .ok_or_else(|| Error::Io(format!("histogram `{key}`: `{le}` is not a bucket bound")))?;
+        buckets[idx] = n as u64;
+    }
+    if buckets.iter().sum::<u64>() != count {
+        return Err(Error::Io(format!("histogram `{key}`: count != sum of buckets")));
+    }
+    Ok(HistogramSnapshot { buckets, count, sum_us, max_us })
+}
+
+/// Parse a `syncopate.stats.v1` document back into a [`Snapshot`]
+/// (schema-checked; the `stats show FILE` path).
+pub fn from_json(text: &str) -> Result<Snapshot> {
+    let doc = parse_json(text).map_err(|e| Error::Io(format!("stats snapshot: {e}")))?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(STATS_SCHEMA) => {}
+        Some(other) => {
+            return Err(Error::Io(format!(
+                "stats snapshot schema `{other}` (expected `{STATS_SCHEMA}`)"
+            )))
+        }
+        None => return Err(Error::Io("stats snapshot missing `schema` tag".into())),
+    }
+    let metrics = doc
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Io("stats snapshot missing `metrics` array".into()))?;
+    let mut entries = Vec::with_capacity(metrics.len());
+    for m in metrics {
+        let key = key_from_json(m)?;
+        let kind = m
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Io(format!("metric `{key}` missing `kind`")))?;
+        let value = match kind {
+            "counter" => Value::Counter(
+                m.get("value")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Io(format!("counter `{key}` missing `value`")))?
+                    as u64,
+            ),
+            "gauge" => Value::Gauge(match m.get("value") {
+                Some(Json::Null) => f64::NAN,
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| Error::Io(format!("gauge `{key}` has a non-number value")))?,
+                None => return Err(Error::Io(format!("gauge `{key}` missing `value`"))),
+            }),
+            "histogram" => Value::Histogram(histogram_from_json(m, &key)?),
+            other => return Err(Error::Io(format!("metric `{key}`: unknown kind `{other}`"))),
+        };
+        entries.push((key, value));
+    }
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(Snapshot { entries })
+}
+
+/// Validate that `text` is a well-formed `syncopate.stats.v1` snapshot
+/// (the CI schema check).
+pub fn check_schema(text: &str) -> Result<()> {
+    from_json(text).map(|_| ())
+}
+
+/// Render a snapshot as paper-style [`Table`]s: one for counters, one
+/// for gauges, one for histograms (count/mean/p50/p90/p99/max).
+/// Zero-valued counters and empty histograms are elided — the JSON
+/// snapshot keeps everything; the tables are the human view.
+pub fn tables(snap: &Snapshot) -> Vec<Table> {
+    let mut counters = Table::new("stats: counters", &["value"], "count");
+    let mut gauges = Table::new("stats: gauges", &["value"], "value");
+    let mut hists = Table::new(
+        "stats: latency histograms",
+        &["count", "mean us", "p50 us", "p90 us", "p99 us", "max us"],
+        "us",
+    );
+    for (key, value) in &snap.entries {
+        let label = key.to_string();
+        match value {
+            Value::Counter(n) => {
+                if *n > 0 {
+                    counters.push_row(&label, vec![*n as f64]);
+                }
+            }
+            Value::Gauge(v) => gauges.push_row(&label, vec![*v]),
+            Value::Histogram(h) => {
+                if h.count > 0 {
+                    hists.push_row(
+                        &label,
+                        vec![
+                            h.count as f64,
+                            h.mean_us(),
+                            h.percentile(0.5),
+                            h.percentile(0.9),
+                            h.percentile(0.99),
+                            h.max_us,
+                        ],
+                    );
+                }
+            }
+        }
+    }
+    [counters, gauges, hists].into_iter().filter(|t| !t.rows.is_empty()).collect()
+}
+
+/// Human rendering of a whole snapshot (the `stats show` output).
+pub fn render(snap: &Snapshot) -> String {
+    let ts = tables(snap);
+    if ts.is_empty() {
+        return "stats: no metrics recorded\n".to_string();
+    }
+    ts.iter().map(|t| t.render()).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Histogram;
+
+    fn sample_snapshot() -> Snapshot {
+        let h = Histogram::new();
+        h.record_us(2.0);
+        h.record_us(2.0);
+        h.record_us(10.0);
+        Snapshot {
+            entries: vec![
+                (Key::new("exec.iter_us", &[("case", "ag")]), Value::Histogram(h.snap())),
+                (Key::new("queue.depth", &[]), Value::Gauge(2.0)),
+                (Key::new("serve.requests", &[("kind", "op")]), Value::Counter(5)),
+            ],
+        }
+    }
+
+    #[test]
+    fn prometheus_golden() {
+        let text = to_prometheus(&sample_snapshot());
+        let expected = "\
+# TYPE syncopate_exec_iter_us histogram
+syncopate_exec_iter_us_bucket{case=\"ag\",le=\"1\"} 0
+syncopate_exec_iter_us_bucket{case=\"ag\",le=\"2\"} 0
+syncopate_exec_iter_us_bucket{case=\"ag\",le=\"4\"} 2
+syncopate_exec_iter_us_bucket{case=\"ag\",le=\"8\"} 2
+syncopate_exec_iter_us_bucket{case=\"ag\",le=\"16\"} 3
+syncopate_exec_iter_us_bucket{case=\"ag\",le=\"+Inf\"} 3
+syncopate_exec_iter_us_sum{case=\"ag\"} 14
+syncopate_exec_iter_us_count{case=\"ag\"} 3
+# TYPE syncopate_queue_depth gauge
+syncopate_queue_depth 2
+# TYPE syncopate_serve_requests counter
+syncopate_serve_requests{kind=\"op\"} 5
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn exposition_parse_render_round_trip() {
+        let snap = sample_snapshot();
+        let parsed = parse_prometheus(&to_prometheus(&snap)).unwrap();
+        assert_eq!(parsed, flatten(&snap));
+    }
+
+    #[test]
+    fn exposition_parser_rejects_garbage() {
+        assert!(parse_prometheus("no_value_here").is_err());
+        assert!(parse_prometheus("x notanumber").is_err());
+        assert!(parse_prometheus("# comment only\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn sanitize_maps_punctuation() {
+        assert_eq!(sanitize("serve.phase_us"), "syncopate_serve_phase_us");
+        assert_eq!(sanitize("a-b.c"), "syncopate_a_b_c");
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let snap = sample_snapshot();
+        let text = to_json(&snap);
+        let back = from_json(&text).unwrap();
+        assert_eq!(back, snap);
+        check_schema(&text).unwrap();
+        // the document parses under the strict trace::json reader
+        crate::trace::json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn json_marks_non_finite_as_null() {
+        let snap = Snapshot {
+            entries: vec![(Key::new("g", &[]), Value::Gauge(f64::NAN))],
+        };
+        let text = to_json(&snap);
+        assert!(text.contains("\"value\": null"), "{text}");
+        crate::trace::json::parse(&text).unwrap();
+        let back = from_json(&text).unwrap();
+        match back.get("g", &[]) {
+            Some(Value::Gauge(v)) => assert!(v.is_nan()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn schema_check_rejects_malformed() {
+        assert!(check_schema("{}").is_err());
+        assert!(check_schema("{\"schema\": \"other.v9\", \"metrics\": []}").is_err());
+        assert!(check_schema("{\"schema\": \"syncopate.stats.v1\"}").is_err());
+        // bucket bound that is not a power of two
+        let bad = "{\"schema\": \"syncopate.stats.v1\", \"metrics\": [\
+                   {\"name\": \"h\", \"labels\": {}, \"kind\": \"histogram\", \
+                   \"count\": 1, \"sum_us\": 1, \"max_us\": 1, \"buckets\": [[3, 1]]}]}";
+        assert!(check_schema(bad).is_err());
+        // count disagreeing with buckets
+        let torn = "{\"schema\": \"syncopate.stats.v1\", \"metrics\": [\
+                    {\"name\": \"h\", \"labels\": {}, \"kind\": \"histogram\", \
+                    \"count\": 5, \"sum_us\": 1, \"max_us\": 1, \"buckets\": [[4, 1]]}]}";
+        assert!(check_schema(torn).is_err());
+        // unknown kind
+        let odd = "{\"schema\": \"syncopate.stats.v1\", \"metrics\": [\
+                   {\"name\": \"x\", \"labels\": {}, \"kind\": \"meter\", \"value\": 1}]}";
+        assert!(check_schema(odd).is_err());
+    }
+
+    #[test]
+    fn tables_elide_empty_series() {
+        let mut snap = sample_snapshot();
+        snap.entries.push((Key::new("zero.counter", &[]), Value::Counter(0)));
+        snap.entries
+            .push((Key::new("empty.hist", &[]), Value::Histogram(HistogramSnapshot::empty())));
+        let ts = tables(&snap);
+        let all: String = ts.iter().map(|t| t.render()).collect();
+        assert!(all.contains("exec.iter_us{case=ag}"), "{all}");
+        assert!(all.contains("serve.requests{kind=op}"), "{all}");
+        assert!(!all.contains("zero.counter"), "{all}");
+        assert!(!all.contains("empty.hist"), "{all}");
+        let r = render(&snap);
+        assert!(r.contains("stats: counters"), "{r}");
+        assert!(r.contains("stats: latency histograms"), "{r}");
+    }
+}

@@ -172,6 +172,66 @@ impl OverlapReport {
         (sim_makespan_us - self.busy_makespan_us).abs() / self.busy_makespan_us
     }
 
+    /// Feed the standing sim-vs-trace telemetry: sets the `sim.divergence`
+    /// gauge to this trace's divergence from `sim_makespan_us` and bumps
+    /// `sim.divergence_samples`. A NaN divergence (empty trace) records
+    /// nothing — the gauge keeps its last meaningful value.
+    pub fn record_divergence(&self, sim_makespan_us: f64) {
+        let d = self.divergence(sim_makespan_us);
+        if d.is_nan() {
+            return;
+        }
+        crate::obs::gauge("sim.divergence").set(d);
+        crate::obs::counter("sim.divergence_samples").inc();
+    }
+
+    /// Compare two traced runs of the same plan: per-rank busy deltas
+    /// (B − A) plus summary rows for busy/wall makespan and the hidden
+    /// fraction. Feeds `trace diff A.json B.json`; callers are expected to
+    /// have checked the traces describe the same case first.
+    pub fn diff_table(a: &OverlapReport, b: &OverlapReport) -> Table {
+        let mut t = Table::new(
+            "Trace diff (B - A)",
+            &["A us", "B us", "delta us", "delta %"],
+            "us",
+        );
+        let pct = |a: f64, b: f64| if a > 0.0 { (b - a) / a * 100.0 } else { f64::NAN };
+        let ranks = a.per_rank.len().max(b.per_rank.len());
+        for r in 0..ranks {
+            let ab = a.per_rank.get(r).map(|u| u.busy_us).unwrap_or(0.0);
+            let bb = b.per_rank.get(r).map(|u| u.busy_us).unwrap_or(0.0);
+            t.push_row(&format!("rank {r} busy"), vec![ab, bb, bb - ab, pct(ab, bb)]);
+        }
+        t.push_row(
+            "busy makespan",
+            vec![
+                a.busy_makespan_us,
+                b.busy_makespan_us,
+                b.busy_makespan_us - a.busy_makespan_us,
+                pct(a.busy_makespan_us, b.busy_makespan_us),
+            ],
+        );
+        t.push_row(
+            "wall makespan",
+            vec![
+                a.wall_makespan_us,
+                b.wall_makespan_us,
+                b.wall_makespan_us - a.wall_makespan_us,
+                pct(a.wall_makespan_us, b.wall_makespan_us),
+            ],
+        );
+        t.push_row(
+            "hidden frac",
+            vec![
+                a.hidden_frac,
+                b.hidden_frac,
+                b.hidden_frac - a.hidden_frac,
+                f64::NAN,
+            ],
+        );
+        t
+    }
+
     /// One-line human summary (`exec --trace` / serve-demo output).
     pub fn summary_line(&self) -> String {
         let hidden = if self.hidden_frac.is_nan() {
@@ -293,6 +353,42 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.events, 4);
         assert_eq!(s.busy_makespan_us, 14.0);
+    }
+
+    #[test]
+    fn record_divergence_sets_gauge_and_counter() {
+        // the gauge/counter are process-global and other tests feed them
+        // too: assert deltas only
+        let samples = crate::obs::counter("sim.divergence_samples");
+        let s0 = samples.get();
+        let r = analyze(&trace());
+        r.record_divergence(7.0);
+        assert!(samples.get() >= s0 + 1);
+        // NaN (empty trace) must take the early-return path, not panic
+        let empty =
+            analyze(&Trace { world: 2, fingerprint: String::new(), meta: vec![], events: vec![] });
+        assert!(empty.divergence(1.0).is_nan());
+        empty.record_divergence(1.0);
+    }
+
+    #[test]
+    fn diff_table_reports_per_rank_and_summary_deltas() {
+        let a = analyze(&trace());
+        let mut t2 = trace();
+        for ev in &mut t2.events {
+            ev.end_us *= 2.0; // B is uniformly slower
+            ev.start_us *= 2.0;
+        }
+        let b = analyze(&t2);
+        let d = OverlapReport::diff_table(&a, &b);
+        // 2 ranks + busy/wall makespan + hidden frac
+        assert_eq!(d.rows.len(), 5);
+        let busy = d.rows.iter().find(|(l, _)| l == "busy makespan").unwrap();
+        assert_eq!(busy.1[0], 14.0);
+        assert_eq!(busy.1[1], 28.0);
+        assert_eq!(busy.1[2], 14.0);
+        assert!((busy.1[3] - 100.0).abs() < 1e-9);
+        assert!(d.render().contains("rank 0 busy"));
     }
 
     #[test]

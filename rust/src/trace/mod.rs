@@ -32,7 +32,7 @@
 
 pub mod analyze;
 pub mod calibrate;
-mod json;
+pub(crate) mod json;
 pub mod export;
 
 use std::sync::Mutex;

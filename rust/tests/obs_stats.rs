@@ -1,0 +1,187 @@
+//! Integration: the observability layer end-to-end (DESIGN.md §16).
+//!
+//! Three claims:
+//!
+//! 1. **Repeat loops feed histograms** — replaying a prepared plan through
+//!    the arena-reusing engine lands every iteration in an `exec.iter_us`
+//!    histogram whose percentiles are derivable without allocation.
+//! 2. **Snapshots survive export** — a registry snapshot round-trips
+//!    through both wire formats (`syncopate.stats.v1` JSON and Prometheus
+//!    text exposition) without losing counts, bounds, or label structure.
+//! 3. **The serving path is instrumented** — a worker pool serving user
+//!    plans populates per-phase latency histograms, request counters,
+//!    cache counters, and returns the queue-depth gauge to zero.
+//!
+//! The registry is process-global and this binary's tests share it, so
+//! cross-cutting metrics (queue depth, cache counters) are asserted as
+//! deltas; exactness is reserved for metric keys unique to a single test.
+
+use std::path::Path;
+
+use syncopate::coordinator::execases;
+use syncopate::coordinator::service::Coordinator;
+use syncopate::exec::{prepare, run_prepared_reusing, ExecOptions, PlanArena};
+use syncopate::obs::{self, export};
+use syncopate::runtime::Runtime;
+
+#[test]
+fn repeat_loop_feeds_exec_histograms() {
+    let rt = Runtime::open_default().unwrap();
+    let case = execases::ag_gemm(2, 2, 7).unwrap();
+    let prep = prepare(&case.plan, &case.sched.tensors).unwrap();
+    let mut arena = PlanArena::new(&prep);
+    // key unique to this test -> exact assertions are safe
+    let hist = obs::histogram_with("exec.iter_us", &[("case", "obs-itest")]);
+    let opts = ExecOptions::parallel();
+    const N: usize = 5;
+    for _ in 0..N {
+        let t0 = std::time::Instant::now();
+        run_prepared_reusing(&prep, &mut arena, &case.store, &rt, &opts).unwrap();
+        hist.record_us(obs::us_since(t0));
+    }
+    let s = hist.snap();
+    assert_eq!(s.count, N as u64, "every iteration must be recorded");
+    assert_eq!(s.count, s.buckets.iter().sum::<u64>());
+    let (p50, p99) = (s.percentile(0.50), s.percentile(0.99));
+    assert!(p50.is_finite() && p99.is_finite());
+    assert!(p50 <= p99 && p99 <= s.max_us.max(1.0) * 2.0, "p50 {p50} p99 {p99}");
+    assert!(s.sum_us > 0.0 && s.max_us > 0.0);
+    // the snapshot surfaces the same histogram under its labeled key
+    let snap = obs::registry().snapshot();
+    let got = snap
+        .histogram("exec.iter_us", &[("case", "obs-itest")])
+        .expect("repeat histogram must appear in the registry snapshot");
+    assert!(got.count >= N as u64);
+}
+
+#[test]
+fn snapshot_round_trips_through_both_wire_formats() {
+    // unique names so the values are exact regardless of sibling tests
+    obs::counter("itest.round_trip_total").add(42);
+    obs::gauge_with("itest.depth", &[("lane", "a")]).set(3.25);
+    let h = obs::histogram("itest.lat_us");
+    for us in [0.5, 3.0, 17.0, 900.0, 123456.0] {
+        h.record_us(us);
+    }
+    let snap = obs::registry().snapshot();
+
+    // JSON: schema-tagged, parseable, value-preserving
+    let json = export::to_json(&snap);
+    export::check_schema(&json).expect("our own snapshot must satisfy the schema");
+    let back = export::from_json(&json).unwrap();
+    assert!(back.counter("itest.round_trip_total", &[]).unwrap() >= 42);
+    assert_eq!(back.gauge("itest.depth", &[("lane", "a")]), Some(3.25));
+    let (orig, rt) = (
+        snap.histogram("itest.lat_us", &[]).unwrap(),
+        back.histogram("itest.lat_us", &[]).unwrap(),
+    );
+    assert_eq!(orig.count, rt.count);
+    assert_eq!(orig.buckets, rt.buckets);
+    assert_eq!(orig.max_us, rt.max_us);
+    assert!((orig.percentile(0.9) - rt.percentile(0.9)).abs() < 1e-9);
+
+    // Prometheus: every flattened scalar appears, parse(render) stable
+    let prom = export::to_prometheus(&snap);
+    let parsed = export::parse_prometheus(&prom).unwrap();
+    assert!(!parsed.is_empty());
+    let find = |name: &str| {
+        parsed
+            .iter()
+            .find(|(k, _)| k.contains(name))
+            .unwrap_or_else(|| panic!("{name} missing from exposition:\n{prom}"))
+            .1
+    };
+    assert!(find("itest_round_trip_total") >= 42.0);
+    assert_eq!(find("itest_depth"), 3.25);
+    assert!(find("itest_lat_us_count") >= 5.0);
+}
+
+#[test]
+fn serve_pool_populates_phase_histograms_and_drains_queue() {
+    let text = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/plans/hetero_fig4e_2x2.sched"),
+    )
+    .unwrap();
+    let snap0 = obs::registry().snapshot();
+    let count0 = |name: &str, labels: &[(&str, &str)]| {
+        snap0.histogram(name, labels).map(|h| h.count).unwrap_or(0)
+    };
+    let req0 = count0("serve.request_us", &[("kind", "user-plan")]);
+    let parse0 = count0("serve.phase_us", &[("phase", "parse")]);
+    let exec0 = count0("serve.phase_us", &[("phase", "exec")]);
+    let tune0 = count0("serve.phase_us", &[("phase", "tune")]);
+
+    let coord =
+        Coordinator::spawn_pool(syncopate::hw::catalog::topology("h100_node", 4).unwrap(), 4);
+    let cold = coord.run_user_plan(&text, ExecOptions::parallel()).unwrap();
+    let warm = coord.run_user_plan(&text, ExecOptions::parallel()).unwrap();
+    assert!(!cold.cache_hit && warm.cache_hit);
+
+    let snap = obs::registry().snapshot();
+    let count = |name: &str, labels: &[(&str, &str)]| {
+        snap.histogram(name, labels).map(|h| h.count).unwrap_or(0)
+    };
+    // both requests timed end-to-end and in every always-on phase
+    assert!(count("serve.request_us", &[("kind", "user-plan")]) >= req0 + 2);
+    assert!(count("serve.phase_us", &[("phase", "parse")]) >= parse0 + 2);
+    assert!(count("serve.phase_us", &[("phase", "exec")]) >= exec0 + 2);
+    // tune runs on the cold path only; the warm hit skips it
+    assert!(count("serve.phase_us", &[("phase", "tune")]) >= tune0 + 1);
+    let p99 = snap
+        .histogram("serve.request_us", &[("kind", "user-plan")])
+        .unwrap()
+        .percentile(0.99);
+    assert!(p99.is_finite() && p99 > 0.0);
+
+    // the pool went idle: queue drained, no worker mid-request
+    assert_eq!(snap.gauge("coord.queue_depth", &[]), Some(0.0));
+    let served: u64 = (0..4)
+        .filter_map(|w| {
+            let wl = w.to_string();
+            snap.counter("coord.worker_requests", &[("worker", wl.as_str())])
+        })
+        .sum();
+    assert!(served >= 2, "pool workers must count served requests, got {served}");
+
+    // the plan cache saw one miss (cold) then one hit (warm)
+    let shard_sum = |name: &str| -> u64 {
+        snap.entries
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .filter_map(|(_, v)| match v {
+                obs::Value::Counter(c) => Some(*c),
+                _ => None,
+            })
+            .sum()
+    };
+    let hits0: u64 = snap0
+        .entries
+        .iter()
+        .filter(|(k, _)| k.name == "plan_cache.hits")
+        .filter_map(|(_, v)| match v {
+            obs::Value::Counter(c) => Some(*c),
+            _ => None,
+        })
+        .sum();
+    assert!(shard_sum("plan_cache.hits") >= hits0 + 1);
+    assert!(shard_sum("plan_cache.misses") >= 1);
+
+    // -- traced serving feeds the standing sim-vs-trace divergence gauge.
+    // (Same test fn as the pool above so all coordinator traffic in this
+    // binary is serialized: the queue-depth-zero assertion cannot race
+    // against another test's in-flight request.)
+    let traced = std::fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/plans/neighbor_first_w4.sched"),
+    )
+    .unwrap();
+    let samples0 = obs::counter("sim.divergence_samples").get();
+    let r = coord.run_user_plan_traced(&traced, ExecOptions::parallel()).unwrap();
+    assert!(r.trace.is_some(), "traced serving must return overlap stats");
+    assert!(
+        obs::counter("sim.divergence_samples").get() >= samples0 + 1,
+        "every traced run must sample the divergence gauge"
+    );
+    let snap = obs::registry().snapshot();
+    let g = snap.gauge("sim.divergence", &[]).expect("divergence gauge must exist");
+    assert!(g.is_finite(), "divergence gauge must hold a real ratio, got {g}");
+}
