@@ -1,0 +1,296 @@
+//! Shared happens-before machinery (DESIGN.md §17.1).
+//!
+//! Both [`crate::schedule::validate`] (the admission gate) and
+//! [`crate::analysis`] (the multi-rule analyzer) reason about the same two
+//! relations over a schedule's ops, built here exactly once:
+//!
+//! * **Issue order** — per-rank program order ∪ dep edges. A cycle here is
+//!   a static deadlock: some op can never have its wait satisfied.
+//! * **Apply order** — dep edges ∪ edges from each *dep-free* op to every
+//!   later op on its rank. Both exec engines issue transfers
+//!   asynchronously (an op with unmet deps parks while later ops on the
+//!   rank proceed), so same-rank program order only constrains the order
+//!   writes *land* downstream of a dep-free op. Data-race questions must
+//!   be asked of this relation, not issue order — apply order is a
+//!   subgraph of the issue-order transitive closure, so any issue-order
+//!   topological order is also topological for it.
+//!
+//! Node numbering is dense: op `(rank, index)` is node
+//! `base[rank] + index` with `base` the prefix sums of per-rank op counts.
+//! Reachability is materialized as one `u64`-word bitset per node, filled
+//! in reverse topological order — O(n²/64) space/time, exact, and fast at
+//! the plan sizes the serving path admits.
+
+use crate::schedule::{CommSchedule, OpRef};
+
+/// A dependence graph over a schedule's ops (see module docs for which
+/// edges each constructor includes).
+pub struct OpGraph {
+    /// Prefix sums of per-rank op counts; `base[world]` is the node count.
+    pub base: Vec<usize>,
+    /// Node count.
+    pub n: usize,
+    /// Forward adjacency (`u -> v` means `u` happens before `v`).
+    pub adj: Vec<Vec<usize>>,
+}
+
+fn bases(sched: &CommSchedule) -> Vec<usize> {
+    let mut base = vec![0usize; sched.world + 1];
+    for r in 0..sched.world {
+        base[r + 1] = base[r] + sched.per_rank[r].len();
+    }
+    base
+}
+
+impl OpGraph {
+    /// The issue-order graph: program order on each rank ∪ dep edges.
+    pub fn issue_order(sched: &CommSchedule) -> OpGraph {
+        let base = bases(sched);
+        let n = base[sched.world];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (rank, ops) in sched.per_rank.iter().enumerate() {
+            for (index, op) in ops.iter().enumerate() {
+                let me = base[rank] + index;
+                if index > 0 {
+                    // program order: ops on a rank *issue* in list order
+                    adj[me - 1].push(me);
+                }
+                for d in op.deps() {
+                    adj[base[d.rank] + d.index].push(me);
+                }
+            }
+        }
+        OpGraph { base, n, adj }
+    }
+
+    /// The apply-order graph: dep edges ∪ (dep-free op → every later op on
+    /// its rank). See module docs for why program order alone is not an
+    /// apply-order guarantee.
+    pub fn apply_order(sched: &CommSchedule) -> OpGraph {
+        let base = bases(sched);
+        let n = base[sched.world];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (rank, ops) in sched.per_rank.iter().enumerate() {
+            for (index, op) in ops.iter().enumerate() {
+                let me = base[rank] + index;
+                for d in op.deps() {
+                    adj[base[d.rank] + d.index].push(me);
+                }
+                if op.deps().is_empty() {
+                    for later in index + 1..ops.len() {
+                        adj[me].push(base[rank] + later);
+                    }
+                }
+            }
+        }
+        OpGraph { base, n, adj }
+    }
+
+    /// Dense node id of an op.
+    pub fn id(&self, op: OpRef) -> usize {
+        self.base[op.rank] + op.index
+    }
+
+    /// Inverse of [`OpGraph::id`].
+    pub fn op_ref(&self, u: usize) -> OpRef {
+        // first rank whose base exceeds u, minus one
+        let rank = self.base.partition_point(|&b| b <= u) - 1;
+        OpRef { rank, index: u - self.base[rank] }
+    }
+
+    /// Kahn's algorithm. `Ok(order)` is a topological order of all nodes;
+    /// `Err(cycle)` is one full cycle in forward-edge direction (each node
+    /// has an edge to the next, and the last back to the first).
+    pub fn topo(&self) -> std::result::Result<Vec<usize>, Vec<usize>> {
+        let mut indeg = vec![0usize; self.n];
+        for edges in &self.adj {
+            for &v in edges {
+                indeg[v] += 1;
+            }
+        }
+        let mut queue: Vec<usize> = (0..self.n).filter(|&u| indeg[u] == 0).collect();
+        let mut order = Vec::with_capacity(self.n);
+        while let Some(u) = queue.pop() {
+            order.push(u);
+            for &v in &self.adj[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() == self.n {
+            return Ok(order);
+        }
+        // Residual nodes (indeg still > 0) all lie on or downstream of a
+        // cycle, and every residual node has at least one residual
+        // predecessor (the edge that kept its indegree positive). Walking
+        // predecessors inside the residual set must therefore revisit a
+        // node; the revisited segment is a cycle.
+        let residual: Vec<bool> = indeg.iter().map(|&d| d > 0).collect();
+        let mut pred = vec![usize::MAX; self.n];
+        for u in 0..self.n {
+            if !residual[u] {
+                continue;
+            }
+            for &v in &self.adj[u] {
+                if residual[v] {
+                    pred[v] = u;
+                }
+            }
+        }
+        let start = (0..self.n).find(|&u| residual[u]).expect("residual set is non-empty");
+        let mut seen_at = vec![usize::MAX; self.n];
+        let mut path = Vec::new();
+        let mut cur = start;
+        loop {
+            if seen_at[cur] != usize::MAX {
+                // path[seen_at[cur]..] walked backwards over edges; flip it
+                let mut cycle: Vec<usize> = path[seen_at[cur]..].to_vec();
+                cycle.reverse();
+                return Err(cycle);
+            }
+            seen_at[cur] = path.len();
+            path.push(cur);
+            cur = pred[cur];
+        }
+    }
+
+    /// Topological order as [`OpRef`]s (convenience for callers that do not
+    /// hold node ids).
+    pub fn topo_refs(&self) -> std::result::Result<Vec<OpRef>, Vec<OpRef>> {
+        match self.topo() {
+            Ok(order) => Ok(order.into_iter().map(|u| self.op_ref(u)).collect()),
+            Err(cycle) => Err(cycle.into_iter().map(|u| self.op_ref(u)).collect()),
+        }
+    }
+}
+
+/// Forward-reachability closure of an [`OpGraph`] as per-node bitsets.
+pub struct Reach {
+    words: usize,
+    desc: Vec<Vec<u64>>,
+}
+
+impl Reach {
+    /// Build the closure. `order` must be topological for `g` (for the
+    /// apply-order graph, an *issue-order* topological order qualifies —
+    /// see the module docs).
+    pub fn build(g: &OpGraph, order: &[usize]) -> Reach {
+        let words = (g.n + 63) / 64;
+        let mut desc = vec![vec![0u64; words]; g.n];
+        for &u in order.iter().rev() {
+            let mut acc = vec![0u64; words];
+            for &v in &g.adj[u] {
+                acc[v / 64] |= 1 << (v % 64);
+                for (a, d) in acc.iter_mut().zip(&desc[v]) {
+                    *a |= *d;
+                }
+            }
+            desc[u] = acc;
+        }
+        Reach { words, desc }
+    }
+
+    /// Is there a non-empty path `a -> ... -> b`?
+    pub fn reaches(&self, a: usize, b: usize) -> bool {
+        debug_assert!(b / 64 < self.words);
+        self.desc[a][b / 64] & (1 << (b % 64)) != 0
+    }
+
+    /// Are `a` and `b` ordered either way?
+    pub fn ordered(&self, a: usize, b: usize) -> bool {
+        self.reaches(a, b) || self.reaches(b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{Chunk, DType, Region, TensorTable};
+    use crate::schedule::{CommOp, Dep, TransferKind};
+
+    fn sched2() -> (CommSchedule, Chunk) {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 4, 16));
+        (CommSchedule::new(2, t), c)
+    }
+
+    fn push(peer: usize, c: &Chunk, deps: Vec<Dep>) -> CommOp {
+        CommOp::P2p {
+            kind: TransferKind::Push,
+            peer,
+            src: c.clone(),
+            dst: c.clone(),
+            reduce: false,
+            deps,
+        }
+    }
+
+    #[test]
+    fn id_and_op_ref_are_inverse() {
+        let (mut s, c) = sched2();
+        s.add_op(0, push(1, &c, vec![])).unwrap();
+        s.add_op(0, push(1, &c, vec![])).unwrap();
+        s.add_op(1, push(0, &c, vec![])).unwrap();
+        let g = OpGraph::issue_order(&s);
+        for rank in 0..2 {
+            for index in 0..s.per_rank[rank].len() {
+                let r = OpRef { rank, index };
+                assert_eq!(g.op_ref(g.id(r)), r);
+            }
+        }
+    }
+
+    #[test]
+    fn issue_order_includes_program_edges_apply_does_not_chain_parked_ops() {
+        // rank 0: op0 has a dep (parks), op1 is later in program order.
+        // Issue order chains 0->1; apply order must NOT (op0 may land late).
+        let (mut s, c) = sched2();
+        s.add_op(1, push(0, &c, vec![])).unwrap();
+        s.add_op(0, push(1, &c, vec![Dep::on(1, 0)])).unwrap();
+        s.add_op(0, push(1, &c, vec![])).unwrap();
+        let issue = OpGraph::issue_order(&s);
+        let apply = OpGraph::apply_order(&s);
+        let op0 = issue.id(OpRef { rank: 0, index: 0 });
+        let op1 = issue.id(OpRef { rank: 0, index: 1 });
+        assert!(issue.adj[op0].contains(&op1));
+        assert!(!apply.adj[op0].contains(&op1));
+        // ...but a dep-free op orders everything later on its rank
+        let r1op0 = issue.id(OpRef { rank: 1, index: 0 });
+        assert!(apply.adj[r1op0].contains(&op0), "dep edge kept");
+    }
+
+    #[test]
+    fn topo_detects_cycle_and_returns_full_path() {
+        let (mut s, c) = sched2();
+        s.add_op(0, push(1, &c, vec![Dep::on(1, 0)])).unwrap();
+        s.add_op(1, push(0, &c, vec![Dep::on(0, 0)])).unwrap();
+        let g = OpGraph::issue_order(&s);
+        let cycle = g.topo().unwrap_err();
+        assert_eq!(cycle.len(), 2);
+        // forward-edge direction: each node points at the next, wrapping
+        for (i, &u) in cycle.iter().enumerate() {
+            let v = cycle[(i + 1) % cycle.len()];
+            assert!(g.adj[u].contains(&v), "cycle edge {u}->{v} missing");
+        }
+    }
+
+    #[test]
+    fn reach_closure_is_transitive() {
+        let (mut s, c) = sched2();
+        s.add_op(0, push(1, &c, vec![])).unwrap(); // (0,0) dep-free
+        s.add_op(0, push(1, &c, vec![])).unwrap(); // (0,1)
+        s.add_op(1, push(0, &c, vec![Dep::on(0, 1)])).unwrap(); // (1,0)
+        let g = OpGraph::apply_order(&s);
+        let order = g.topo().unwrap();
+        let r = Reach::build(&g, &order);
+        let id = |rk: usize, ix: usize| g.id(OpRef { rank: rk, index: ix });
+        assert!(r.reaches(id(0, 0), id(0, 1)), "prog edge from dep-free op");
+        assert!(r.reaches(id(0, 0), id(1, 0)), "transitive through (0,1)");
+        assert!(!r.reaches(id(1, 0), id(0, 0)));
+        assert!(r.ordered(id(0, 0), id(1, 0)));
+        assert!(!r.reaches(id(0, 0), id(0, 0)), "reachability is strict");
+    }
+}

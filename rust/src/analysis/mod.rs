@@ -1,0 +1,1050 @@
+//! Chunk-plan static analyzer (DESIGN.md §17).
+//!
+//! [`run`] executes a fixed catalog of rules over a [`CommSchedule`] and
+//! returns every finding — it is a *reporting* pass, not a first-error
+//! gate like [`crate::schedule::validate`]. Rules have stable IDs and one
+//! of three severities:
+//!
+//! | rule       | severity | meaning                                        |
+//! |------------|----------|------------------------------------------------|
+//! | `SY-E001`  | error    | unordered read-write overlap (data race)       |
+//! | `SY-E002`  | error    | unordered write-write overlap (data race)      |
+//! | `SY-E003`  | error    | static deadlock: wait-for cycle, full path     |
+//! | `SY-W101`  | warn     | redundant dep edge (transitive reduction)      |
+//! | `SY-W201`  | warn     | whole-tensor single chunk (no overlap possible)|
+//! | `SY-W202`  | warn     | barrier-like all-wait-all dependency pattern   |
+//! | `SY-W203`  | warn     | straggler chain dominating the critical path   |
+//! | `SY-I301`  | info     | unbalanced per-rank op counts                  |
+//!
+//! Race questions are asked of the **apply-order** happens-before relation
+//! ([`hb`]); redundancy is defined against the same relation, which makes
+//! [`reduce`] sound: every removed edge has an alternative apply-order
+//! path, so the set of admissible write orders — and therefore the final
+//! f32 state under both exec engines — is unchanged (§17.3 has the full
+//! argument). Cyclic schedules skip all reachability-based rules and
+//! report only the `SY-E003` certificate (plus syntactic lints).
+
+pub mod hb;
+
+use std::collections::BTreeMap;
+
+use crate::chunk::{Region, TensorId};
+use crate::error::{Error, Result};
+use crate::schedule::{CommOp, CommSchedule, Dep, OpRef};
+use crate::topo::Topology;
+use crate::util::json_escape;
+
+/// Stable rule IDs (never renumber; retired rules leave gaps).
+pub const RULE_RW_RACE: &str = "SY-E001";
+pub const RULE_WW_RACE: &str = "SY-E002";
+pub const RULE_DEADLOCK: &str = "SY-E003";
+pub const RULE_REDUNDANT_DEP: &str = "SY-W101";
+pub const RULE_WHOLE_TENSOR: &str = "SY-W201";
+pub const RULE_BARRIER: &str = "SY-W202";
+pub const RULE_STRAGGLER: &str = "SY-W203";
+pub const RULE_UNBALANCED: &str = "SY-I301";
+
+/// Per-rule finding cap: a hostile or degenerate plan with O(n²) racing
+/// pairs must not DoS the serving path with findings; the overflow is
+/// counted in [`AnalysisReport::suppressed`].
+const MAX_PER_RULE: usize = 64;
+
+/// Finding severity. `Error` findings reject a plan on the serving path;
+/// `Warn`/`Info` are advisory (counted into `obs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One diagnostic: a rule violation anchored to the ops involved.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Ops involved, most significant first (e.g. race: the two racing
+    /// ops; deadlock: the full cycle in wait order).
+    pub ops: Vec<OpRef>,
+    pub message: String,
+}
+
+/// Everything [`run`] learned about one schedule.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    pub world: usize,
+    pub num_ops: usize,
+    pub findings: Vec<Finding>,
+    /// Redundant dep edges, `(op, dep)` — the input to [`reduce`].
+    pub removable_deps: Vec<(OpRef, Dep)>,
+    /// Findings dropped by the per-rule cap.
+    pub suppressed: usize,
+    /// Simulated critical path of the schedule as-is ([`run_on`] only).
+    pub critical_path_us: Option<f64>,
+    /// Simulated critical path after [`reduce`] ([`run_on`] only, and only
+    /// when there was something to remove).
+    pub reduced_critical_path_us: Option<f64>,
+}
+
+impl AnalysisReport {
+    pub fn count(&self, sev: Severity) -> usize {
+        self.findings.iter().filter(|f| f.severity == sev).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Error)
+    }
+
+    /// Render as `syncopate.analysis.v1` JSON (parses under the strict
+    /// [`crate::trace::json`] reader; `source` names the analyzed artifact).
+    pub fn to_json(&self, source: &str) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"schema\": \"syncopate.analysis.v1\",");
+        let _ = writeln!(out, "  \"source\": \"{}\",", json_escape(source));
+        let _ = writeln!(out, "  \"world\": {},", self.world);
+        let _ = writeln!(out, "  \"ops\": {},", self.num_ops);
+        let _ = writeln!(out, "  \"errors\": {},", self.count(Severity::Error));
+        let _ = writeln!(out, "  \"warnings\": {},", self.count(Severity::Warn));
+        let _ = writeln!(out, "  \"infos\": {},", self.count(Severity::Info));
+        let _ = writeln!(out, "  \"suppressed\": {},", self.suppressed);
+        let opt = |v: Option<f64>| match v {
+            Some(x) if x.is_finite() => format!("{x}"),
+            _ => "null".to_string(),
+        };
+        let _ = writeln!(out, "  \"critical_path_us\": {},", opt(self.critical_path_us));
+        let _ = writeln!(
+            out,
+            "  \"reduced_critical_path_us\": {},",
+            opt(self.reduced_critical_path_us)
+        );
+        let _ = writeln!(out, "  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            let ops: Vec<String> =
+                f.ops.iter().map(|o| format!("[{}, {}]", o.rank, o.index)).collect();
+            let sep = if i + 1 == self.findings.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"rule\": \"{}\", \"severity\": \"{}\", \"ops\": [{}], \
+                 \"message\": \"{}\"}}{sep}",
+                f.rule,
+                f.severity.as_str(),
+                ops.join(", "),
+                json_escape(&f.message)
+            );
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = writeln!(out, "}}");
+        out
+    }
+
+    /// Render as human-readable text, one finding per line.
+    pub fn render_text(&self, source: &str) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "analyze {source}: world {}, {} ops", self.world, self.num_ops);
+        for f in &self.findings {
+            let ops: Vec<String> =
+                f.ops.iter().map(|o| format!("({},{})", o.rank, o.index)).collect();
+            let _ = writeln!(
+                out,
+                "  {:5} {} [{}] {}",
+                f.severity.as_str(),
+                f.rule,
+                ops.join(" "),
+                f.message
+            );
+        }
+        if let (Some(a), Some(b)) = (self.critical_path_us, self.reduced_critical_path_us) {
+            let delta = if a > 0.0 { (b - a) / a * 100.0 } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "  reduction impact: sim critical path {:.3}us -> {:.3}us ({delta:+.2}%)",
+                a, b
+            );
+        }
+        if self.suppressed > 0 {
+            let _ = writeln!(out, "  ({} further findings suppressed)", self.suppressed);
+        }
+        let _ = writeln!(
+            out,
+            "summary: {} errors, {} warnings, {} infos",
+            self.count(Severity::Error),
+            self.count(Severity::Warn),
+            self.count(Severity::Info)
+        );
+        out
+    }
+}
+
+fn fmt_op(o: OpRef) -> String {
+    format!("({},{})", o.rank, o.index)
+}
+
+fn region_str(name: &str, r: &Region) -> String {
+    let dims: Vec<String> =
+        r.offset.iter().zip(&r.sizes).map(|(o, s)| format!("{}:{}", o, o + s)).collect();
+    format!("{name}[{}]", dims.join(", "))
+}
+
+fn intersection(a: &Region, b: &Region) -> Region {
+    let mut offset = Vec::with_capacity(a.offset.len());
+    let mut sizes = Vec::with_capacity(a.offset.len());
+    for i in 0..a.offset.len().min(b.offset.len()) {
+        let lo = a.offset[i].max(b.offset[i]);
+        let hi = (a.offset[i] + a.sizes[i]).min(b.offset[i] + b.sizes[i]);
+        offset.push(lo);
+        sizes.push(hi.saturating_sub(lo));
+    }
+    Region { offset, sizes }
+}
+
+fn tensor_name(sched: &CommSchedule, id: TensorId) -> String {
+    sched.tensors.get(id).map(|d| d.name.clone()).unwrap_or_else(|_| format!("{id:?}"))
+}
+
+/// Cheap structural sanity: analysis (unlike `validate`) accepts plans
+/// that fail admission — that is its point — but node numbering needs
+/// per-rank lists matching `world` and deps that resolve to real ops.
+fn structural_precheck(sched: &CommSchedule) -> Result<()> {
+    if sched.per_rank.len() != sched.world {
+        return Err(Error::Analysis(format!(
+            "per_rank has {} entries for world {}",
+            sched.per_rank.len(),
+            sched.world
+        )));
+    }
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            for d in op.deps() {
+                if d.rank >= sched.world || d.index >= sched.per_rank[d.rank].len() {
+                    return Err(Error::Analysis(format!(
+                        "op ({rank},{index}): dep ({}, {}) references a missing op",
+                        d.rank, d.index
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One memory access for race analysis: which op touches which region of
+/// which rank's buffer. Collectives are skipped (abstract until lowering;
+/// [`crate::pipeline::fuse`] rejects them for the same reason).
+struct Access<'a> {
+    node: usize,
+    op: OpRef,
+    region: &'a Region,
+    reduce: bool,
+}
+
+type AccessMap<'a> = BTreeMap<(usize, TensorId), Vec<Access<'a>>>;
+
+fn collect_accesses<'a>(sched: &'a CommSchedule, g: &hb::OpGraph) -> (AccessMap<'a>, AccessMap<'a>) {
+    let mut writes: AccessMap<'a> = BTreeMap::new();
+    let mut reads: AccessMap<'a> = BTreeMap::new();
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            let opref = OpRef { rank, index };
+            let node = g.id(opref);
+            let reduce = match op {
+                CommOp::P2p { reduce, .. } => *reduce,
+                CommOp::LocalCopy { .. } => false,
+                CommOp::Collective { .. } => continue,
+            };
+            writes
+                .entry((op.dst_rank(rank), op.produced_chunk().tensor))
+                .or_default()
+                .push(Access { node, op: opref, region: &op.produced_chunk().region, reduce });
+            reads
+                .entry((op.src_rank(rank), op.consumed_chunk().tensor))
+                .or_default()
+                .push(Access { node, op: opref, region: &op.consumed_chunk().region, reduce: false });
+        }
+    }
+    (writes, reads)
+}
+
+/// Run the full rule catalog (static rules only; see [`run_on`] for the
+/// sim-measured reduction impact). Returns `Err` only when the schedule is
+/// too malformed to number ops — every analyzable problem is a [`Finding`].
+pub fn run(sched: &CommSchedule) -> Result<AnalysisReport> {
+    structural_precheck(sched)?;
+    let issue = hb::OpGraph::issue_order(sched);
+    let mut rep = AnalysisReport {
+        world: sched.world,
+        num_ops: issue.n,
+        ..AnalysisReport::default()
+    };
+
+    let order = match issue.topo() {
+        Ok(order) => order,
+        Err(cycle) => {
+            let refs: Vec<OpRef> = cycle.iter().map(|&u| issue.op_ref(u)).collect();
+            let path: Vec<String> = refs.iter().map(|o| fmt_op(*o)).collect();
+            rep.findings.push(Finding {
+                rule: RULE_DEADLOCK,
+                severity: Severity::Error,
+                ops: refs,
+                message: format!(
+                    "static deadlock: wait-for cycle {} -> (back to start); no execution \
+                     can satisfy all of these waits — the runtime would only see this as \
+                     a bounded-wait timeout",
+                    path.join(" -> ")
+                ),
+            });
+            // reachability-based rules are meaningless on a cyclic graph;
+            // keep the syntactic lints so one pass still reports them
+            lint_whole_tensor(sched, &mut rep);
+            lint_unbalanced(sched, &mut rep);
+            return Ok(rep);
+        }
+    };
+
+    // positions in one concrete admissible interleaving (witness basis)
+    let mut pos = vec![0usize; issue.n];
+    for (i, &u) in order.iter().enumerate() {
+        pos[u] = i;
+    }
+    let apply = hb::OpGraph::apply_order(sched);
+    let reach = hb::Reach::build(&apply, &order);
+
+    check_races(sched, &apply, &reach, &pos, &mut rep);
+    let removable = redundant_in(sched, &apply, &reach);
+    for (op, dep, why) in &removable {
+        if push_capped(
+            &mut rep,
+            Finding {
+                rule: RULE_REDUNDANT_DEP,
+                severity: Severity::Warn,
+                ops: vec![*op, OpRef { rank: dep.rank, index: dep.index }],
+                message: format!(
+                    "dep ({},{}) of op {} is redundant: {why}; removing it cannot change \
+                     any admissible apply order (plan analyze --fix drops it)",
+                    dep.rank,
+                    dep.index,
+                    fmt_op(*op)
+                ),
+            },
+        ) {
+            break;
+        }
+    }
+    rep.removable_deps = removable.into_iter().map(|(op, dep, _)| (op, dep)).collect();
+
+    lint_whole_tensor(sched, &mut rep);
+    lint_barrier(sched, &mut rep);
+    lint_straggler(sched, &apply, &order, &mut rep);
+    lint_unbalanced(sched, &mut rep);
+    Ok(rep)
+}
+
+/// [`run`], plus the sim-measured critical path of the schedule and (when
+/// anything is removable) of its reduction, under the best backend the
+/// restricted user-plan autotune finds on `topo`. Simulation failures
+/// (abstract collectives, untunable plans) leave the fields `None` — the
+/// impact numbers are advisory, never a gate.
+pub fn run_on(sched: &CommSchedule, topo: &Topology) -> Result<AnalysisReport> {
+    let mut rep = run(sched)?;
+    if rep.has_errors() {
+        return Ok(rep);
+    }
+    let Ok(tuned) = crate::autotune::tune_user_plan(sched, topo) else {
+        return Ok(rep);
+    };
+    let params = crate::sim::SimParams::default();
+    let Ok(plan) = crate::codegen::compile_comm_only(sched, tuned.real.clone(), topo) else {
+        return Ok(rep);
+    };
+    if let Ok(sim) = crate::sim::engine::simulate(&plan, topo, params) {
+        rep.critical_path_us = Some(sim.makespan_us);
+    }
+    if !rep.removable_deps.is_empty() {
+        if let Ok((reduced, _)) = reduce(sched) {
+            if let Ok(rplan) = crate::codegen::compile_comm_only(&reduced, tuned.real, topo) {
+                if let Ok(rsim) = crate::sim::engine::simulate(&rplan, topo, params) {
+                    rep.reduced_critical_path_us = Some(rsim.makespan_us);
+                }
+            }
+        }
+    }
+    Ok(rep)
+}
+
+/// Push respecting the per-rule cap; returns `true` when the cap is hit
+/// (callers should stop scanning that rule).
+fn push_capped(rep: &mut AnalysisReport, f: Finding) -> bool {
+    let n = rep.findings.iter().filter(|x| x.rule == f.rule).count();
+    if n >= MAX_PER_RULE {
+        rep.suppressed += 1;
+        return true;
+    }
+    rep.findings.push(f);
+    false
+}
+
+/// SY-E001 / SY-E002: read-write and write-write races under apply-order
+/// happens-before. Reduce-reduce write pairs are exempt (commutative;
+/// exec's plan_prep serializes them canonically for f32 bit-stability) —
+/// a plain write or a read racing a reduce write is still an error.
+fn check_races(
+    sched: &CommSchedule,
+    apply: &hb::OpGraph,
+    reach: &hb::Reach,
+    pos: &[usize],
+    rep: &mut AnalysisReport,
+) {
+    let (writes, reads) = collect_accesses(sched, apply);
+    let witness = |a: OpRef, an: usize, b: OpRef, bn: usize| {
+        let (first, second) = if pos[an] <= pos[bn] { (a, b) } else { (b, a) };
+        format!(
+            "witness: the interleaving applying {} then {} is admissible, and with no \
+             happens-before path between them so is the mirror applying {} first",
+            fmt_op(first),
+            fmt_op(second),
+            fmt_op(second)
+        )
+    };
+    for ((mem_rank, tensor), ws) in &writes {
+        // write-write
+        'ww: for (i, a) in ws.iter().enumerate() {
+            for b in ws.iter().skip(i + 1) {
+                if (a.reduce && b.reduce) || !a.region.intersects(b.region) {
+                    continue;
+                }
+                if reach.ordered(a.node, b.node) {
+                    continue;
+                }
+                let name = tensor_name(sched, *tensor);
+                let overlap = region_str(&name, &intersection(a.region, b.region));
+                if push_capped(
+                    rep,
+                    Finding {
+                        rule: RULE_WW_RACE,
+                        severity: Severity::Error,
+                        ops: vec![a.op, b.op],
+                        message: format!(
+                            "unordered write-write race on `{name}` rank {mem_rank}: ops {} \
+                             and {} both write {overlap} with no happens-before path \
+                             between them; {}",
+                            fmt_op(a.op),
+                            fmt_op(b.op),
+                            witness(a.op, a.node, b.op, b.node)
+                        ),
+                    },
+                ) {
+                    break 'ww;
+                }
+            }
+        }
+        // read-write against the same (rank, tensor) memory
+        let Some(rs) = reads.get(&(*mem_rank, *tensor)) else { continue };
+        'rw: for w in ws {
+            for r in rs {
+                if r.op == w.op || !r.region.intersects(w.region) {
+                    continue;
+                }
+                if reach.ordered(r.node, w.node) {
+                    continue;
+                }
+                let name = tensor_name(sched, *tensor);
+                let overlap = region_str(&name, &intersection(r.region, w.region));
+                if push_capped(
+                    rep,
+                    Finding {
+                        rule: RULE_RW_RACE,
+                        severity: Severity::Error,
+                        ops: vec![r.op, w.op],
+                        message: format!(
+                            "unordered read-write race on `{name}` rank {mem_rank}: op {} \
+                             reads {overlap} while op {} writes it, with no happens-before \
+                             path between them; {}",
+                            fmt_op(r.op),
+                            fmt_op(w.op),
+                            witness(r.op, r.node, w.op, w.node)
+                        ),
+                    },
+                ) {
+                    break 'rw;
+                }
+            }
+        }
+    }
+}
+
+/// SY-W101 core: every dep edge implied by the rest of the apply-order
+/// graph. An edge `d -> v` is redundant iff some *other* in-edge of `v`
+/// comes from `d` itself (a parallel program-order edge) or from a node
+/// `d` reaches — i.e. there is an apply-order path `d -> ... -> v` that
+/// survives the removal. All edges are judged against the ORIGINAL
+/// closure; simultaneous removal stays sound (DESIGN.md §17.3).
+fn redundant_in(
+    sched: &CommSchedule,
+    g: &hb::OpGraph,
+    reach: &hb::Reach,
+) -> Vec<(OpRef, Dep, String)> {
+    let mut out = Vec::new();
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            let v = OpRef { rank, index };
+            let deps = op.deps();
+            // program-order in-edges: earlier dep-free ops on this rank
+            let prog_in: Vec<usize> = (0..index)
+                .filter(|&e| ops[e].deps().is_empty())
+                .map(|e| g.id(OpRef { rank, index: e }))
+                .collect();
+            for (slot, d) in deps.iter().enumerate() {
+                let dn = g.id(OpRef { rank: d.rank, index: d.index });
+                // duplicate dep: keep the first occurrence only
+                if deps[..slot].contains(d) {
+                    out.push((v, *d, "it duplicates an earlier dep of the same op".into()));
+                    continue;
+                }
+                let mut why: Option<String> = None;
+                for (oslot, od) in deps.iter().enumerate() {
+                    if oslot == slot || *od == *d {
+                        continue;
+                    }
+                    let on = g.id(OpRef { rank: od.rank, index: od.index });
+                    if reach.reaches(dn, on) {
+                        why = Some(format!(
+                            "already implied through dep ({},{})",
+                            od.rank, od.index
+                        ));
+                        break;
+                    }
+                }
+                if why.is_none() {
+                    for &pn in &prog_in {
+                        if pn == dn {
+                            why = Some(
+                                "the dep target is an earlier dep-free op on the same \
+                                 rank, so program order already applies it first"
+                                    .into(),
+                            );
+                            break;
+                        }
+                        if reach.reaches(dn, pn) {
+                            let p = g.op_ref(pn);
+                            why = Some(format!(
+                                "already implied through the earlier dep-free op ({},{}) \
+                                 on the same rank",
+                                p.rank, p.index
+                            ));
+                            break;
+                        }
+                    }
+                }
+                if let Some(why) = why {
+                    out.push((v, *d, why));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Redundant dep edges of a schedule, `(op, dep)` pairs. Errors on cyclic
+/// or structurally broken schedules (no reduction exists).
+pub fn redundant_dep_edges(sched: &CommSchedule) -> Result<Vec<(OpRef, Dep)>> {
+    structural_precheck(sched)?;
+    let issue = hb::OpGraph::issue_order(sched);
+    let order = issue
+        .topo()
+        .map_err(|_| Error::Analysis("cannot reduce a cyclic schedule".into()))?;
+    let apply = hb::OpGraph::apply_order(sched);
+    let reach = hb::Reach::build(&apply, &order);
+    Ok(redundant_in(sched, &apply, &reach).into_iter().map(|(o, d, _)| (o, d)).collect())
+}
+
+/// Delete one dep *slot* per removed edge (duplicate deps count once each).
+fn apply_removals(sched: &mut CommSchedule, removed: &[(OpRef, Dep)]) {
+    for (rank, ops) in sched.per_rank.iter_mut().enumerate() {
+        for (index, op) in ops.iter_mut().enumerate() {
+            let me = OpRef { rank, index };
+            let mut drop: Vec<&Dep> =
+                removed.iter().filter(|(o, _)| *o == me).map(|(_, d)| d).collect();
+            if drop.is_empty() {
+                continue;
+            }
+            let deps = match op {
+                CommOp::P2p { deps, .. }
+                | CommOp::Collective { deps, .. }
+                | CommOp::LocalCopy { deps, .. } => deps,
+            };
+            let mut kept = Vec::with_capacity(deps.len());
+            for d in deps.iter() {
+                if let Some(p) = drop.iter().position(|r| **r == *d) {
+                    drop.remove(p); // each removed edge deletes ONE slot
+                } else {
+                    kept.push(*d);
+                }
+            }
+            *deps = kept;
+        }
+    }
+}
+
+/// Transitive reduction: drop every redundant dep edge, iterated to a
+/// fixpoint — removing a dep can leave an op dep-free, which *adds*
+/// program-order apply edges and can expose further redundancy. Returns
+/// the canonically reduced schedule plus all removed `(op, dep)` edges.
+/// Every pass preserves apply-order reachability (each dropped edge keeps
+/// an alternative path), so the admissible apply orders of the reduction
+/// are a subset of the original's — exec bit-identity follows
+/// (DESIGN.md §17.3).
+pub fn reduce(sched: &CommSchedule) -> Result<(CommSchedule, Vec<(OpRef, Dep)>)> {
+    let mut out = sched.clone();
+    let mut all_removed = Vec::new();
+    loop {
+        let removed = redundant_dep_edges(&out)?;
+        if removed.is_empty() {
+            return Ok((out, all_removed));
+        }
+        apply_removals(&mut out, &removed);
+        all_removed.extend(removed);
+    }
+}
+
+/// SY-W201: an op moving an entire tensor as one chunk — splitting is the
+/// whole point of chunk-centric overlap, so this op serializes with
+/// everything touching the tensor.
+fn lint_whole_tensor(sched: &CommSchedule, rep: &mut AnalysisReport) {
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for (index, op) in ops.iter().enumerate() {
+            if matches!(op, CommOp::Collective { .. }) {
+                continue;
+            }
+            let c = op.produced_chunk();
+            let Ok(decl) = sched.tensors.get(c.tensor) else { continue };
+            let full = c.region.offset.iter().all(|&o| o == 0) && c.region.sizes == decl.shape;
+            if !full {
+                continue;
+            }
+            if push_capped(
+                rep,
+                Finding {
+                    rule: RULE_WHOLE_TENSOR,
+                    severity: Severity::Warn,
+                    ops: vec![OpRef { rank, index }],
+                    message: format!(
+                        "op ({rank},{index}) moves ALL of `{}` ({}) as a single chunk: \
+                         no compute can overlap a transfer it depends on or that depends \
+                         on it; split the tensor into chunks (split_p2p)",
+                        decl.name,
+                        region_str(&decl.name, &c.region)
+                    ),
+                },
+            ) {
+                return;
+            }
+        }
+    }
+}
+
+/// SY-W202: barrier-like all-wait-all. At world ≥ 3, if EVERY rank has an
+/// op whose deps span all other ranks, the plan contains a de-facto
+/// global barrier — exactly the pattern fine-grained deps exist to avoid.
+fn lint_barrier(sched: &CommSchedule, rep: &mut AnalysisReport) {
+    if sched.world < 3 {
+        return;
+    }
+    let mut waiters: Vec<OpRef> = Vec::with_capacity(sched.world);
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        let found = ops.iter().enumerate().find(|(_, op)| {
+            let mut seen = vec![false; sched.world];
+            for d in op.deps() {
+                if d.rank != rank {
+                    seen[d.rank] = true;
+                }
+            }
+            seen.iter().filter(|&&s| s).count() >= sched.world - 1
+        });
+        match found {
+            Some((index, _)) => waiters.push(OpRef { rank, index }),
+            None => return,
+        }
+    }
+    let names: Vec<String> = waiters.iter().map(|o| fmt_op(*o)).collect();
+    rep.findings.push(Finding {
+        rule: RULE_BARRIER,
+        severity: Severity::Warn,
+        ops: waiters,
+        message: format!(
+            "barrier-like all-wait-all: every rank has an op waiting on ops from all \
+             other ranks ({}); this is a global barrier in dep-edge clothing — overlap \
+             across it is impossible, consider depending only on the chunks actually read",
+            names.join(" ")
+        ),
+    });
+}
+
+/// SY-W203: straggler chain. The longest apply-order chain concentrated
+/// on one rank (≥70% of its ops) whose cross-rank dep fan-in is more than
+/// twice the mean — that rank serializes the plan while others idle.
+fn lint_straggler(
+    sched: &CommSchedule,
+    apply: &hb::OpGraph,
+    order: &[usize],
+    rep: &mut AnalysisReport,
+) {
+    if apply.n < 4 || sched.world < 2 {
+        return;
+    }
+    // longest path by op count, reconstructed deterministically
+    let mut len = vec![1usize; apply.n];
+    let mut next = vec![usize::MAX; apply.n];
+    for &u in order.iter().rev() {
+        for &v in &apply.adj[u] {
+            if len[v] + 1 > len[u] || (len[v] + 1 == len[u] && v < next[u]) {
+                len[u] = len[v] + 1;
+                next[u] = v;
+            }
+        }
+    }
+    let Some(start) = (0..apply.n).max_by_key(|&u| (len[u], usize::MAX - u)) else { return };
+    if len[start] < 4 {
+        return;
+    }
+    let mut chain = Vec::with_capacity(len[start]);
+    let mut cur = start;
+    while cur != usize::MAX {
+        chain.push(cur);
+        cur = next[cur];
+    }
+    let mut per_rank = vec![0usize; sched.world];
+    for &u in &chain {
+        per_rank[apply.op_ref(u).rank] += 1;
+    }
+    let (mode_rank, &mode_count) =
+        per_rank.iter().enumerate().max_by_key(|&(r, c)| (*c, usize::MAX - r)).unwrap();
+    if (mode_count as f64) < 0.7 * chain.len() as f64 {
+        return;
+    }
+    // cross-rank dep fan-in per rank
+    let mut cross_in = vec![0usize; sched.world];
+    for (rank, ops) in sched.per_rank.iter().enumerate() {
+        for op in ops {
+            cross_in[rank] += op.deps().iter().filter(|d| d.rank != rank).count();
+        }
+    }
+    let total: usize = cross_in.iter().sum();
+    let mean = total as f64 / sched.world as f64;
+    if mean <= 0.0 || (cross_in[mode_rank] as f64) <= 2.0 * mean {
+        return;
+    }
+    let head: Vec<String> =
+        chain.iter().take(6).map(|&u| fmt_op(apply.op_ref(u))).collect();
+    rep.findings.push(Finding {
+        rule: RULE_STRAGGLER,
+        severity: Severity::Warn,
+        ops: chain.iter().map(|&u| apply.op_ref(u)).collect(),
+        message: format!(
+            "straggler chain: the longest apply-order chain ({} ops, {head}...) runs \
+             {mode_count}/{} of its ops on rank {mode_rank}, whose cross-rank dep fan-in \
+             ({}) is more than twice the mean ({mean:.1}); that rank serializes the \
+             critical path while the others idle",
+            chain.len(),
+            chain.len(),
+            cross_in[mode_rank],
+            head = head.join(" -> ")
+        ),
+    });
+}
+
+/// SY-I301: per-rank op-count imbalance (max > 2x min, or idle ranks in a
+/// non-empty plan).
+fn lint_unbalanced(sched: &CommSchedule, rep: &mut AnalysisReport) {
+    if sched.world < 2 {
+        return;
+    }
+    let counts: Vec<usize> = sched.per_rank.iter().map(Vec::len).collect();
+    let max = *counts.iter().max().unwrap_or(&0);
+    let min = *counts.iter().min().unwrap_or(&0);
+    if max == 0 || (min > 0 && max <= 2 * min) {
+        return;
+    }
+    rep.findings.push(Finding {
+        rule: RULE_UNBALANCED,
+        severity: Severity::Info,
+        ops: Vec::new(),
+        message: format!(
+            "unbalanced per-rank op counts {counts:?}: the busiest rank issues {max} ops \
+             vs {min} on the idlest; heavily skewed plans under-use the idle ranks' links"
+        ),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::{Chunk, DType, Region, TensorTable};
+    use crate::schedule::{templates, TransferKind};
+
+    fn push_op(peer: usize, src: &Chunk, dst: &Chunk, reduce: bool, deps: Vec<Dep>) -> CommOp {
+        CommOp::P2p {
+            kind: TransferKind::Push,
+            peer,
+            src: src.clone(),
+            dst: dst.clone(),
+            reduce,
+            deps,
+        }
+    }
+
+    fn rules_at_least_warn(rep: &AnalysisReport) -> Vec<&'static str> {
+        let mut v: Vec<&'static str> = rep
+            .findings
+            .iter()
+            .filter(|f| f.severity != Severity::Info)
+            .map(|f| f.rule)
+            .collect();
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn clean_template_reports_nothing() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let s = templates::all_gather_ring(&t, x, 0, 4).unwrap();
+        let rep = run(&s).unwrap();
+        assert!(!rep.has_errors(), "{:?}", rep.findings);
+        assert_eq!(rules_at_least_warn(&rep), Vec::<&str>::new(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn rw_race_detected_with_witness() {
+        // rank 0 writes x[0:2] into rank 1 while rank 1 reads it, unordered
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 2, 8));
+        let hi = Chunk::new(x, Region::rows(2, 2, 8));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push_op(1, &lo, &lo, false, vec![])).unwrap();
+        s.add_op(1, push_op(0, &lo, &hi, false, vec![])).unwrap();
+        let rep = run(&s).unwrap();
+        assert_eq!(rules_at_least_warn(&rep), vec![RULE_RW_RACE], "{:?}", rep.findings);
+        let f = &rep.findings[0];
+        assert_eq!(f.ops, vec![OpRef { rank: 1, index: 0 }, OpRef { rank: 0, index: 0 }]);
+        assert!(f.message.contains("witness"), "{}", f.message);
+        assert!(f.message.contains("x[0:2, 0:8]"), "{}", f.message);
+        // the dep-ordered version is clean
+        let mut ok = CommSchedule::new(2, {
+            let mut t = TensorTable::new();
+            t.declare("x", &[4, 8], DType::F32).unwrap();
+            t
+        });
+        ok.add_op(0, push_op(1, &lo, &lo, false, vec![])).unwrap();
+        ok.add_op(1, push_op(0, &lo, &hi, false, vec![Dep::on(0, 0)])).unwrap();
+        assert!(!run(&ok).unwrap().has_errors());
+    }
+
+    #[test]
+    fn ww_race_detected_reduce_pair_exempt() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 2, 8));
+        let mut s = CommSchedule::new(3, t.clone());
+        s.add_op(0, push_op(2, &c, &c, false, vec![])).unwrap();
+        s.add_op(1, push_op(2, &c, &c, false, vec![])).unwrap();
+        let rep = run(&s).unwrap();
+        assert!(rep.findings.iter().any(|f| f.rule == RULE_WW_RACE), "{:?}", rep.findings);
+
+        let mut r = CommSchedule::new(3, t);
+        r.add_op(0, push_op(2, &c, &c, true, vec![])).unwrap();
+        r.add_op(1, push_op(2, &c, &c, true, vec![])).unwrap();
+        assert!(!run(&r).unwrap().has_errors(), "reduce-reduce pairs commute");
+    }
+
+    #[test]
+    fn deadlock_certificate_prints_full_cycle() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let a = Chunk::new(x, Region::rows(0, 2, 8));
+        let b = Chunk::new(x, Region::rows(2, 2, 8));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push_op(1, &a, &a, false, vec![Dep::on(1, 0)])).unwrap();
+        s.add_op(1, push_op(0, &b, &b, false, vec![Dep::on(0, 0)])).unwrap();
+        let rep = run(&s).unwrap();
+        let f = rep.findings.iter().find(|f| f.rule == RULE_DEADLOCK).expect("E003");
+        assert!(f.message.contains("(0,0)") && f.message.contains("(1,0)"), "{}", f.message);
+        assert_eq!(f.ops.len(), 2);
+        // cyclic plans skip reachability rules: no race/redundancy noise
+        assert!(rep.findings.iter().all(|f| f.rule != RULE_RW_RACE && f.rule != RULE_WW_RACE));
+    }
+
+    #[test]
+    fn redundant_dep_found_and_reduced() {
+        // (1,1) deps on (0,0) and (1,0); (1,0) is an earlier dep-free op on
+        // the same rank, so that dep is pure noise
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 2, 8));
+        let hi = Chunk::new(x, Region::rows(2, 2, 8));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push_op(1, &lo, &lo, false, vec![])).unwrap();
+        s.add_op(1, push_op(0, &hi, &hi, false, vec![])).unwrap();
+        s.add_op(1, push_op(0, &hi, &hi, false, vec![Dep::on(0, 0), Dep::on(1, 0)])).unwrap();
+        let rep = run(&s).unwrap();
+        assert_eq!(rep.removable_deps, vec![(OpRef { rank: 1, index: 1 }, Dep::on(1, 0))]);
+        assert!(rep.findings.iter().any(|f| f.rule == RULE_REDUNDANT_DEP));
+        let (reduced, removed) = reduce(&s).unwrap();
+        assert_eq!(removed.len(), 1);
+        assert_eq!(reduced.per_rank[1][1].deps(), &[Dep::on(0, 0)]);
+        // reduction reaches a fixpoint: nothing left to remove
+        assert!(redundant_dep_edges(&reduced).unwrap().is_empty());
+        crate::schedule::validate::validate(&reduced).unwrap();
+    }
+
+    #[test]
+    fn dep_implied_through_other_dep_is_redundant() {
+        // (1,0) deps on both (0,1) and (0,0); (0,0) -> (0,1) in apply order
+        // ((0,0) is dep-free), so the (0,0) dep is implied
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 2, 8));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push_op(1, &lo, &lo, false, vec![])).unwrap();
+        s.add_op(0, push_op(1, &lo, &lo, false, vec![])).unwrap();
+        s.add_op(1, push_op(0, &lo, &lo, false, vec![Dep::on(0, 1), Dep::on(0, 0)])).unwrap();
+        let removed = redundant_dep_edges(&s).unwrap();
+        assert_eq!(removed, vec![(OpRef { rank: 1, index: 0 }, Dep::on(0, 0))]);
+    }
+
+    #[test]
+    fn whole_tensor_chunk_flagged() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let full = Chunk::new(x, Region::full(&[4, 8]));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push_op(1, &full, &full, false, vec![])).unwrap();
+        let rep = run(&s).unwrap();
+        assert!(rep.findings.iter().any(|f| f.rule == RULE_WHOLE_TENSOR), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn barrier_pattern_flagged_only_when_every_rank_waits() {
+        let world = 4;
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 8], DType::F32).unwrap();
+        let shard = |r: usize| Chunk::new(x, Region::rows(2 * r, 2, 8));
+        let mut s = CommSchedule::new(world, t);
+        for r in 0..world {
+            s.add_op(r, push_op((r + 1) % world, &shard(r), &shard(r), false, vec![])).unwrap();
+        }
+        for r in 0..world {
+            let deps: Vec<Dep> =
+                (0..world).filter(|&s2| s2 != r).map(|s2| Dep::on(s2, 0)).collect();
+            s.add_op(r, push_op((r + 2) % world, &shard(r), &shard(r), false, deps)).unwrap();
+        }
+        let rep = run(&s).unwrap();
+        assert!(rep.findings.iter().any(|f| f.rule == RULE_BARRIER), "{:?}", rep.findings);
+        // drop one rank's all-wait op: no longer a global barrier
+        let mut partial = s.clone();
+        partial.per_rank[0].truncate(1);
+        let rep2 = run(&partial).unwrap();
+        assert!(rep2.findings.iter().all(|f| f.rule != RULE_BARRIER), "{:?}", rep2.findings);
+    }
+
+    #[test]
+    fn unbalanced_op_counts_info() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 8], DType::F32).unwrap();
+        let c = |r0: usize| Chunk::new(x, Region::rows(r0, 2, 8));
+        let mut s = CommSchedule::new(2, t);
+        for i in 0..3 {
+            s.add_op(0, push_op(1, &c(2 * i), &c(2 * i), false, vec![])).unwrap();
+        }
+        let rep = run(&s).unwrap();
+        let f = rep.findings.iter().find(|f| f.rule == RULE_UNBALANCED).expect("I301");
+        assert_eq!(f.severity, Severity::Info);
+    }
+
+    #[test]
+    fn straggler_chain_flagged() {
+        // rank 0 hosts a 4-op chain fed by cross-rank deps at every link;
+        // ranks 1..3 each contribute one feeder op and no chain of their own
+        let world = 4;
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[16, 8], DType::F32).unwrap();
+        let c = |r0: usize| Chunk::new(x, Region::rows(r0, 2, 8));
+        let mut s = CommSchedule::new(world, t);
+        for r in 1..world {
+            s.add_op(r, push_op(0, &c(2 * r), &c(2 * r), false, vec![])).unwrap();
+        }
+        s.add_op(0, push_op(1, &c(0), &c(0), false, vec![Dep::on(1, 0)])).unwrap();
+        s.add_op(0, push_op(2, &c(8), &c(8), false, vec![Dep::on(2, 0), Dep::on(0, 0)]))
+            .unwrap();
+        s.add_op(0, push_op(3, &c(10), &c(10), false, vec![Dep::on(3, 0), Dep::on(0, 1)]))
+            .unwrap();
+        s.add_op(0, push_op(1, &c(12), &c(12), false, vec![Dep::on(0, 2)])).unwrap();
+        let rep = run(&s).unwrap();
+        assert!(rep.findings.iter().any(|f| f.rule == RULE_STRAGGLER), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn json_and_text_render() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 2, 8));
+        let mut s = CommSchedule::new(3, t);
+        s.add_op(0, push_op(2, &c, &c, false, vec![])).unwrap();
+        s.add_op(1, push_op(2, &c, &c, false, vec![])).unwrap();
+        let rep = run(&s).unwrap();
+        let j = rep.to_json("test.sched");
+        crate::trace::json::parse(&j).expect("analysis JSON must parse strictly");
+        assert!(j.contains("\"schema\": \"syncopate.analysis.v1\""));
+        assert!(j.contains(RULE_WW_RACE));
+        let text = rep.render_text("test.sched");
+        assert!(text.contains("summary:"), "{text}");
+        assert!(text.contains(RULE_WW_RACE), "{text}");
+    }
+
+    #[test]
+    fn structural_breakage_is_an_error_not_a_finding() {
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[4, 8], DType::F32).unwrap();
+        let c = Chunk::new(x, Region::rows(0, 2, 8));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push_op(1, &c, &c, false, vec![Dep::on(1, 9)])).unwrap();
+        let e = run(&s).unwrap_err();
+        assert_eq!(e.subsystem(), "analysis");
+    }
+
+    #[test]
+    fn every_template_analyzes_without_errors() {
+        use crate::schedule::templates as tp;
+        for world in [2usize, 4, 8] {
+            let mut t = TensorTable::new();
+            let x = t.declare("x", &[world * world * 2, 16], DType::F32).unwrap();
+            for s in [
+                tp::all_gather_ring(&t, x, 0, world).unwrap(),
+                tp::all_gather_swizzle(&t, x, 0, world).unwrap(),
+                tp::all_gather_direct(&t, x, 0, world).unwrap(),
+                tp::reduce_scatter_ring(&t, x, 0, world).unwrap(),
+                tp::reduce_scatter_direct(&t, x, 0, world).unwrap(),
+                tp::all_reduce_partition(&t, x, 0, world).unwrap(),
+                tp::all_reduce_rs_ag(&t, x, 0, world).unwrap(),
+                tp::all_to_all(&t, x, 0, world).unwrap(),
+            ] {
+                let rep = run(&s).unwrap();
+                assert!(!rep.has_errors(), "world {world}: {:#?}", rep.findings);
+                let rep2 = run(&s.split_p2p(0, 2).unwrap()).unwrap();
+                assert!(!rep2.has_errors(), "world {world} split: {:#?}", rep2.findings);
+            }
+        }
+    }
+}

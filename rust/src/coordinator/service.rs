@@ -357,6 +357,26 @@ fn serve_user_plan(
         )));
     }
     crate::schedule::validate::validate(&sched)?;
+    // Static analysis (DESIGN.md §17): every finding is counted into the
+    // registry; error-severity findings reject the plan with its
+    // certificate (defense in depth — validate already rejects races and
+    // cycles, but the analyzer's rule set may grow past it).
+    let rep = crate::analysis::run(&sched)?;
+    for f in &rep.findings {
+        obs::counter_with(
+            "analysis.findings_total",
+            &[("rule", f.rule), ("severity", f.severity.as_str())],
+        )
+        .inc();
+    }
+    if let Some(f) =
+        rep.findings.iter().find(|f| f.severity == crate::analysis::Severity::Error)
+    {
+        return Err(Error::Analysis(format!(
+            "plan rejected by static analysis: {} {}",
+            f.rule, f.message
+        )));
+    }
     // hash the CANONICAL form: formatting differences between authors of
     // the same plan still hit the same cache entry
     let hash = crate::plan_io::content_hash(&crate::plan_io::print_schedule(&sched)?);
@@ -655,6 +675,31 @@ mod tests {
         let four = "plan v1 world 4\ntensor x f32 8x16\nrank 0:\n  push x[0:2, 0:16] -> x[0:2, 0:16] peer 1\n";
         assert!(coord.run_user_plan(four, ExecOptions::sequential()).is_err());
         assert!(errs.get() >= c0 + 1, "serve errors must land in error_total{{kind}}");
+    }
+
+    #[test]
+    fn analysis_findings_feed_obs_and_gate_serving() {
+        // metric handles are process-global: assert deltas, not absolutes
+        let warns = crate::obs::counter_with(
+            "analysis.findings_total",
+            &[("rule", crate::analysis::RULE_REDUNDANT_DEP), ("severity", "warn")],
+        );
+        let w0 = warns.get();
+        let coord = Coordinator::spawn(crate::hw::catalog::topology("h100_node", 2).unwrap());
+        // dep (1,0) duplicates rank 1's program order: the plan still serves,
+        // but the analyzer's SY-W101 finding lands in the registry
+        let text = "plan v1 world 2\ntensor x f32 4x8\n\
+                    rank 0:\n  push x[0:2, 0:8] -> x[0:2, 0:8] peer 1\n\
+                    rank 1:\n  push x[2:4, 0:8] -> x[2:4, 0:8] peer 0\n  \
+                    push x[2:4, 0:8] -> x[2:4, 0:8] peer 0 deps (0,0) (1,0)\n";
+        coord.run_user_plan(text, ExecOptions::sequential()).unwrap();
+        assert!(warns.get() >= w0 + 1, "redundant dep must land in analysis.findings_total");
+        // a racy plan never reaches execution: rejected with a race certificate
+        let racy = "plan v1 world 2\ntensor x f32 4x8\n\
+                    rank 0:\n  push x[0:2, 0:8] -> x[0:2, 0:8] peer 1\n\
+                    rank 1:\n  push x[0:2, 0:8] -> x[2:4, 0:8] peer 0\n";
+        let e = coord.run_user_plan(racy, ExecOptions::sequential()).unwrap_err();
+        assert!(e.to_string().contains("race"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,10 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// Failure classes across the Syncopate stack.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Error {
+    /// Static analysis could not run (structurally broken schedule, or a
+    /// reduction requested on a cyclic plan). Rule findings are *not*
+    /// errors of this kind — they are data in the `AnalysisReport`.
+    Analysis(String),
     /// Chunk/region arithmetic out of bounds or shape mismatch.
     Region(String),
     /// Communication schedule is malformed (bad deps, uncovered regions, ...).
@@ -54,6 +58,7 @@ impl Error {
     /// Short subsystem tag, used in log lines and test assertions.
     pub fn subsystem(&self) -> &'static str {
         match self {
+            Error::Analysis(_) => "analysis",
             Error::Region(_) => "region",
             Error::Schedule(_) => "schedule",
             Error::Kernel(_) => "kernel",
@@ -77,7 +82,8 @@ impl Error {
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let msg = match self {
-            Error::Region(m)
+            Error::Analysis(m)
+            | Error::Region(m)
             | Error::Schedule(m)
             | Error::Kernel(m)
             | Error::DepGraph(m)

@@ -27,6 +27,10 @@ pub fn pin_current_thread(cpu: usize) -> Result<()> {
     let size = core::mem::size_of_val(&mask);
     let ret: isize;
     // sched_setaffinity(pid=0 /* self */, size, &mask)
+    // SAFETY: the syscall only *reads* `size` bytes from `mask`, which is a
+    // live stack array for the whole call; the kernel writes no user memory
+    // for sched_setaffinity; rcx/r11 are declared clobbered (syscall ABI)
+    // and the return flows out through rax. No Rust invariants are touched.
     #[cfg(target_arch = "x86_64")]
     unsafe {
         core::arch::asm!(
@@ -40,6 +44,9 @@ pub fn pin_current_thread(cpu: usize) -> Result<()> {
             options(nostack),
         );
     }
+    // SAFETY: same contract as the x86_64 block — `svc 0` with x8 =
+    // __NR_sched_setaffinity reads `size` bytes from the live `mask` array,
+    // writes no user memory, and returns through x0.
     #[cfg(target_arch = "aarch64")]
     unsafe {
         core::arch::asm!(

@@ -1,3 +1,4 @@
+#![deny(unsafe_op_in_unsafe_fn)]
 //! # Syncopate
 //!
 //! Reproduction of *Syncopate: Efficient Multi-GPU AI Kernels via Automatic
@@ -36,6 +37,12 @@
 //!   gauges, log₂ latency histograms) instruments the serving path, the
 //!   plan/tune caches, and the parallel engine's run loop, exported as
 //!   Prometheus text or `syncopate.stats.v1` JSON (`stats` CLI verbs).
+//!   Plans are checked before they run ([`analysis`]): a multi-rule
+//!   static analyzer over the happens-before relation reports read-write /
+//!   write-write race certificates with witness interleavings, static
+//!   deadlock cycles, redundant-dep reduction (with a `--fix` mode
+//!   emitting the canonically reduced plan), and overlap-quality lints —
+//!   wired into `plan analyze`/`plan lint` and the serving path.
 //! * **L2/L1 (python/, build-time only)** — JAX per-rank compute graphs
 //!   calling Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //!
@@ -44,6 +51,7 @@
 //! artifacts when built with `--features xla`, or the dependency-free
 //! host-reference backend otherwise — and is self-contained either way.
 
+pub mod analysis;
 pub mod autotune;
 pub mod backend;
 pub mod baselines;

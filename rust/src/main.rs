@@ -38,6 +38,13 @@
 //! syncopate plan import --from <SOURCE> [--world N] [--out FILE.sched]
 //! syncopate plan show <FILE.sched>
 //! syncopate plan lint <FILE.sched>...
+//! syncopate plan analyze <FILE.sched>... [--json] [--strict] [--topo <name|FILE.topo>]
+//! syncopate plan analyze --fix <FILE.sched> -o FILE.sched
+//!                    (static analysis, DESIGN.md §17: race certificates with
+//!                     witness interleavings, deadlock cycle paths, redundant-dep
+//!                     reduction with sim-measured critical-path impact, overlap
+//!                     lints; error findings exit non-zero, --strict promotes
+//!                     warnings, --fix writes the canonically reduced plan)
 //! syncopate plan run <FILE.sched> [--workers N] [--exec-mode M] [--timeout-ms N]
 //!                    [--sync <atomic|condvar>] [--topo <name|FILE.topo>]
 //! syncopate plan --op <kind> [--world N] [--split K]      (operator plan stats)
@@ -412,10 +419,11 @@ fn dispatch(args: &[String]) -> Result<()> {
             Some("import") => plan_import(&flags),
             Some("show") => plan_show(&bare[1..]),
             Some("lint") => plan_lint(&bare[1..]),
+            Some("analyze") => plan_analyze(&bare[1..], &flags),
             Some("run") => plan_run(&bare[1..], &flags),
             Some(other) => Err(Error::Coordinator(format!(
-                "unknown plan verb `{other}` (import|show|lint|run, or `plan --op ...` \
-                 for operator plan stats)"
+                "unknown plan verb `{other}` (import|show|lint|analyze|run, or \
+                 `plan --op ...` for operator plan stats)"
             ))),
             None => {
                 let op = build_op(&flags)?;
@@ -904,9 +912,11 @@ fn plan_show(files: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `plan lint FILE...`: parse + validate + round-trip-check each file;
-/// exits non-zero on the first violation (CI guards the shipped corpus
-/// with this).
+/// `plan lint FILE...`: parse + validate + round-trip-check each file,
+/// then run the analyzer's error-severity rules (race certificates,
+/// deadlock cycles); exits non-zero on the first violation (CI guards the
+/// shipped corpus with this). Warnings are counted, not fatal — `plan
+/// analyze --strict` is the gate for those.
 fn plan_lint(files: &[String]) -> Result<()> {
     if files.is_empty() {
         return Err(Error::Coordinator("plan lint needs at least one .sched file".into()));
@@ -918,6 +928,15 @@ fn plan_lint(files: &[String]) -> Result<()> {
             .map_err(|e| Error::PlanIo(format!("{path}: {e}")))?;
         syncopate::schedule::validate::validate(&sched)
             .map_err(|e| Error::Schedule(format!("{path}: {e}")))?;
+        let rep = syncopate::analysis::run(&sched)
+            .map_err(|e| Error::Analysis(format!("{path}: {e}")))?;
+        if let Some(f) = rep
+            .findings
+            .iter()
+            .find(|f| f.severity == syncopate::analysis::Severity::Error)
+        {
+            return Err(Error::Analysis(format!("{path}: {} {}", f.rule, f.message)));
+        }
         let canonical = plan_io::print_schedule(&sched)?;
         let reparsed = plan_io::parse_schedule(&canonical)?;
         if reparsed != sched {
@@ -926,11 +945,90 @@ fn plan_lint(files: &[String]) -> Result<()> {
             )));
         }
         println!(
-            "OK {path}: world {}, {} ops, hash {}",
+            "OK {path}: world {}, {} ops, {} warning(s), hash {}",
             sched.world,
             sched.num_ops(),
+            rep.count(syncopate::analysis::Severity::Warn),
             plan_io::content_hash(&canonical)
         );
+    }
+    Ok(())
+}
+
+/// `plan analyze FILE... [--json] [--strict]`: run the full static-analysis
+/// rule catalog (DESIGN.md §17) over each plan and report every finding —
+/// unlike `plan lint`, bad plans are *described*, not just rejected: race
+/// certificates name both ops, the overlapping region, and a witness
+/// interleaving; deadlocks print the full wait-for cycle. With `--topo`
+/// the report includes the sim-measured critical-path impact of removing
+/// redundant deps. Exits non-zero when any plan has error findings
+/// (`--strict`: or warnings).
+///
+/// `plan analyze --fix FILE -o OUT` writes the canonically reduced plan
+/// (all redundant dep edges dropped); both exec engines run it
+/// bit-identically to the original.
+fn plan_analyze(files: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    // `--fix FILE` puts the file in the flag value (hand-rolled parser);
+    // accept it there or as a bare arg.
+    if let Some(fix) = flags.get("fix") {
+        let target = if fix != "true" { Some(fix) } else { files.first() };
+        let Some(path) = target else {
+            return Err(Error::Coordinator("plan analyze --fix needs a .sched file".into()));
+        };
+        let Some(out) = flags.get("o").or_else(|| flags.get("out")) else {
+            return Err(Error::Coordinator("plan analyze --fix needs -o FILE.sched".into()));
+        };
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        let sched = plan_io::parse_schedule(&text)
+            .map_err(|e| Error::PlanIo(format!("{path}: {e}")))?;
+        // only valid plans are worth canonicalizing — a racy or deadlocked
+        // plan needs fixing by hand, not dep-thinning
+        syncopate::schedule::validate::validate(&sched)
+            .map_err(|e| Error::Schedule(format!("{path}: {e}")))?;
+        let (reduced, removed) = syncopate::analysis::reduce(&sched)
+            .map_err(|e| Error::Analysis(format!("{path}: {e}")))?;
+        syncopate::schedule::validate::validate(&reduced)?;
+        let canonical = plan_io::print_schedule(&reduced)?;
+        std::fs::write(out, &canonical)?;
+        println!(
+            "{path}: removed {} redundant dep edge(s) -> {out} ({} ops, hash {})",
+            removed.len(),
+            reduced.num_ops(),
+            plan_io::content_hash(&canonical)
+        );
+        return Ok(());
+    }
+    if files.is_empty() {
+        return Err(Error::Coordinator("plan analyze needs at least one .sched file".into()));
+    }
+    let json = flags.contains_key("json");
+    let strict = flags.contains_key("strict");
+    let mut failed = 0usize;
+    for path in files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        let sched = plan_io::parse_schedule(&text)
+            .map_err(|e| Error::PlanIo(format!("{path}: {e}")))?;
+        let topo = resolve_topo(flags, sched.world)?;
+        let rep = syncopate::analysis::run_on(&sched, &topo)
+            .map_err(|e| Error::Analysis(format!("{path}: {e}")))?;
+        if json {
+            print!("{}", rep.to_json(path));
+        } else {
+            print!("{}", rep.render_text(path));
+        }
+        use syncopate::analysis::Severity;
+        if rep.has_errors() || (strict && rep.count(Severity::Warn) > 0) {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        return Err(Error::Analysis(format!(
+            "{failed} of {} plan(s) failed analysis{}",
+            files.len(),
+            if strict { " (--strict: warnings are fatal)" } else { "" }
+        )));
     }
     Ok(())
 }

@@ -257,6 +257,37 @@ pub fn fuse(stages: &[Stage]) -> Result<FusedPipeline> {
         }
     }
 
+    // 4. Reduce the derived edges: step 3 adds one dep per conflicting
+    //    earlier-stage op, and many of those are already implied by other
+    //    deps or by apply-order program edges (e.g. a chain of stages
+    //    touching the same region derives a full clique). Drop every
+    //    *derived* edge the rest of the graph implies — stage-internal deps
+    //    are the stages' own and are left untouched. Removal against the
+    //    original closure is sound (DESIGN.md §17.3): each dropped edge
+    //    keeps an alternative happens-before path, so the fused plan stays
+    //    provably race-free with the minimal boundary ordering.
+    // Iterated to a fixpoint: a removal can leave an op dep-free, adding
+    // apply-order program edges that expose further redundancy.
+    loop {
+        let removable = crate::analysis::redundant_dep_edges(&sched)?;
+        let mut progressed = false;
+        for (op, dep) in &removable {
+            let target = OpRef { rank: dep.rank, index: dep.index };
+            let Some(pos) = cross_deps.iter().position(|e| *e == (*op, target)) else {
+                continue; // stage-internal dep: not ours to remove
+            };
+            cross_deps.remove(pos);
+            let deps = op_deps_mut(&mut sched.per_rank[op.rank][op.index]);
+            if let Some(slot) = deps.iter().position(|d| d == dep) {
+                deps.remove(slot);
+            }
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
     // Every fused pipeline must be executable and deadlock-free.
     sched_validate::validate(&sched)?;
     Ok(FusedPipeline { sched, op_ranges, tensor_maps, cross_deps })
@@ -452,15 +483,65 @@ mod tests {
         let b_id = fp.tensor_maps[1][&crate::chunk::TensorId(0)];
         let c_id = fp.tensor_maps[2][&crate::chunk::TensorId(0)];
         assert_eq!(b_id, c_id, "identical later-stage declarations must unify");
-        // and the boundary edge exists: C's op depends on B's
+        // The boundary ordering exists but the explicit edge does not: B's
+        // op is dep-free, so apply-order program order already runs it
+        // before C's — the derived dep is redundant and step 4 drops it.
         assert!(
-            fp.cross_deps.contains(&(
+            !fp.cross_deps.contains(&(
                 OpRef { rank: 0, index: 2 },
                 OpRef { rank: 0, index: 1 }
             )),
-            "{:?}",
+            "redundant derived edge must be reduced away: {:?}",
             fp.cross_deps
         );
+        let g = crate::analysis::hb::OpGraph::apply_order(&fp.sched);
+        let order = g.topo().unwrap();
+        let reach = crate::analysis::hb::Reach::build(&g, &order);
+        assert!(
+            reach.reaches(
+                g.id(OpRef { rank: 0, index: 1 }),
+                g.id(OpRef { rank: 0, index: 2 })
+            ),
+            "ordering must survive the reduction via program order"
+        );
+    }
+
+    #[test]
+    fn fused_output_is_race_free_and_reduced() {
+        // Chain three stages over one tensor: step 3 derives a dep clique
+        // at each boundary; step 4 must thin it to the transitive reduction
+        // while the analyzer still certifies the result race-free.
+        let mk = |name: &str| {
+            let mut t = TensorTable::new();
+            let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+            let mut s = CommSchedule::new(2, t);
+            let c = Chunk::new(x, Region::rows(0, 4, 16));
+            s.add_op(
+                0,
+                CommOp::P2p {
+                    kind: TransferKind::Push,
+                    peer: 1,
+                    src: c.clone(),
+                    dst: c,
+                    reduce: false,
+                    deps: vec![],
+                },
+            )
+            .unwrap();
+            Stage::new(name, s)
+        };
+        let fp = fuse(&[mk("s1"), mk("s2"), mk("s3")]).unwrap();
+        let rep = crate::analysis::run(&fp.sched).unwrap();
+        assert!(!rep.has_errors(), "{:#?}", rep.findings);
+        // no derived edge left over that the rest of the graph implies
+        let leftover: Vec<_> = crate::analysis::redundant_dep_edges(&fp.sched)
+            .unwrap()
+            .into_iter()
+            .filter(|(op, d)| {
+                fp.cross_deps.contains(&(*op, OpRef { rank: d.rank, index: d.index }))
+            })
+            .collect();
+        assert!(leftover.is_empty(), "{leftover:?}");
     }
 
     #[test]

@@ -4,15 +4,22 @@
 //! deterministic*: every op's chunks fit their tensors, every dependency
 //! resolves to an existing op, peers are in range, the global
 //! happens-before relation (per-rank program order ∪ cross-rank deps) is
-//! acyclic (deadlock-free), no two unordered writes touch overlapping
-//! destination regions (write-write races would make the two exec engines
-//! diverge), and any rank that assembles a full tensor does so as an exact
-//! tiling ([`check_covers`] wired into [`validate`] — the classic gather
-//! off-by-one where shard regions overlap by a row while summing to the
-//! tensor size is rejected here instead of corrupting numerics silently).
+//! acyclic (deadlock-free), no two unordered accesses race on overlapping
+//! regions — write-write *and* read-write, either would make the two exec
+//! engines diverge — and any rank that assembles a full tensor does so as
+//! an exact tiling ([`check_covers`] wired into [`validate`] — the classic
+//! gather off-by-one where shard regions overlap by a row while summing to
+//! the tensor size is rejected here instead of corrupting numerics
+//! silently).
+//!
+//! The happens-before graphs and reachability closure are built by
+//! [`crate::analysis::hb`], shared with the multi-rule static analyzer —
+//! one builder, one semantics. `validate` stays a cheap first-error gate;
+//! [`crate::analysis::run`] reports *every* violation with witnesses.
 
 use std::collections::{HashMap, HashSet};
 
+use crate::analysis::hb::{OpGraph, Reach};
 use crate::chunk::{Region, TensorId};
 use crate::error::{Error, Result};
 use crate::schedule::{CommOp, CommSchedule, OpRef};
@@ -92,156 +99,115 @@ pub fn validate(sched: &CommSchedule) -> Result<()> {
 }
 
 /// Deadlock-freedom: the relation {program order on each rank} ∪ {dep edges}
-/// must be a DAG. Returns a topological order of all ops when acyclic.
+/// must be a DAG. Returns a topological order of all ops when acyclic; on a
+/// cycle, the error carries the full certificate path (same one
+/// [`crate::analysis`] reports as rule `SY-E003`).
 pub fn topo_order(sched: &CommSchedule) -> Result<Vec<OpRef>> {
-    // Node numbering: prefix sums of per-rank op counts.
-    let mut base = vec![0usize; sched.world + 1];
-    for r in 0..sched.world {
-        base[r + 1] = base[r] + sched.per_rank[r].len();
-    }
-    let n = base[sched.world];
-    let id = |op: OpRef| base[op.rank] + op.index;
-
-    let mut indeg = vec![0usize; n];
-    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (rank, ops) in sched.per_rank.iter().enumerate() {
-        for (index, op) in ops.iter().enumerate() {
-            let me = id(OpRef { rank, index });
-            if index > 0 {
-                // program order: ops on a rank *issue* in list order
-                adj[me - 1].push(me);
-                indeg[me] += 1;
-            }
-            for d in op.deps() {
-                let dep = id(OpRef { rank: d.rank, index: d.index });
-                adj[dep].push(me);
-                indeg[me] += 1;
-            }
+    match OpGraph::issue_order(sched).topo_refs() {
+        Ok(order) => Ok(order),
+        Err(cycle) => {
+            let path: Vec<String> =
+                cycle.iter().map(|o| format!("({},{})", o.rank, o.index)).collect();
+            Err(Error::Schedule(format!(
+                "dependency cycle (deadlock): {} -> (back to start)",
+                path.join(" -> ")
+            )))
         }
     }
-    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
-    let mut order = Vec::with_capacity(n);
-    while let Some(u) = queue.pop() {
-        order.push(u);
-        for &v in &adj[u] {
-            indeg[v] -= 1;
-            if indeg[v] == 0 {
-                queue.push(v);
-            }
-        }
-    }
-    if order.len() != n {
-        return Err(Error::Schedule(format!(
-            "dependency cycle: only {}/{} ops orderable (deadlock)",
-            order.len(),
-            n
-        )));
-    }
-    // map back to OpRefs
-    let mut refs = Vec::with_capacity(n);
-    for u in order {
-        let rank = (0..sched.world).find(|&r| base[r] <= u && u < base[r + 1]).unwrap();
-        refs.push(OpRef { rank, index: u - base[rank] });
-    }
-    Ok(refs)
 }
 
-/// Write-write race detection: two ops whose destination regions of the
-/// same tensor on the same rank overlap must be ordered by the schedule's
-/// *apply-order* happens-before relation — unless both are reduce ops,
-/// whose contributions commute semantically (the exec layer's `plan_prep`
-/// serializes them canonically for f32 bit-stability).
+/// Race detection: two ops accessing overlapping regions of the same
+/// tensor on the same rank must be ordered by the schedule's *apply-order*
+/// happens-before relation ([`OpGraph::apply_order`] has the full
+/// asynchronous-issue rationale). Two hazard classes are rejected:
 ///
-/// Apply-order is stricter than issue order: both engines issue transfers
-/// asynchronously (an `Issue` whose dep signals are unmet is parked and
-/// later ops on the rank proceed), so same-rank program order only
-/// guarantees apply order *downstream of a dep-free op* — a dep-free
-/// transfer applies at its issue point in both engines, ordering it before
-/// every later op on its rank; an op with deps may apply arbitrarily late.
-/// The hazard graph therefore contains (a) dep edges and (b) edges from
-/// each dep-free op to every later op on its rank — nothing else.
+/// * **write-write** — unless both are reduce ops, whose contributions
+///   commute semantically (the exec layer's `plan_prep` serializes them
+///   canonically for f32 bit-stability);
+/// * **read-write** — an op sourcing a region unordered w.r.t. an op
+///   writing an overlapping region reads either pre- or post-write bytes
+///   depending on timing.
 ///
-/// An unordered overlapping pair means the engines (or two runs of the
-/// parallel engine) may apply the writes in different orders and
-/// legitimately diverge; such plans are rejected as
+/// Either unordered pair means the engines (or two runs of the parallel
+/// engine) may legitimately diverge; such plans are rejected as
 /// nondeterministic-by-construction.
 fn check_write_hazards(sched: &CommSchedule, order: &[OpRef]) -> Result<()> {
-    let mut base = vec![0usize; sched.world + 1];
-    for r in 0..sched.world {
-        base[r + 1] = base[r] + sched.per_rank[r].len();
-    }
-    let n = base[sched.world];
-    if n < 2 {
+    let g = OpGraph::apply_order(sched);
+    if g.n < 2 {
         return Ok(());
     }
-    // Apply-order adjacency (a subgraph of the issue-order graph, so the
-    // caller's topological `order` remains valid for it).
-    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (rank, ops) in sched.per_rank.iter().enumerate() {
-        for (index, op) in ops.iter().enumerate() {
-            let me = base[rank] + index;
-            for d in op.deps() {
-                adj[base[d.rank] + d.index].push(me);
-            }
-            if op.deps().is_empty() {
-                for later in index + 1..ops.len() {
-                    adj[me].push(base[rank] + later);
-                }
-            }
-        }
-    }
-    // Forward-reachability closure as bitsets, filled in reverse topological
-    // order: desc[u] = union over children v of ({v} ∪ desc[v]).
-    let words = (n + 63) / 64;
-    let mut desc = vec![vec![0u64; words]; n];
-    for opref in order.iter().rev() {
-        let u = base[opref.rank] + opref.index;
-        let mut acc = vec![0u64; words];
-        for &v in &adj[u] {
-            acc[v / 64] |= 1 << (v % 64);
-            for (a, d) in acc.iter_mut().zip(&desc[v]) {
-                *a |= *d;
-            }
-        }
-        desc[u] = acc;
-    }
-    let reaches = |a: usize, b: usize| desc[a][b / 64] & (1 << (b % 64)) != 0;
+    // The caller's order is topological for the *issue* graph; apply order
+    // is a subgraph of its transitive closure, so the order remains valid.
+    let ids: Vec<usize> = order.iter().map(|o| g.id(*o)).collect();
+    let reach = Reach::build(&g, &ids);
 
-    // Destination writes grouped by (dst rank, tensor):
-    // (graph node id, op ref, written region, is-reduce).
-    type WriterList<'a> = Vec<(usize, OpRef, &'a Region, bool)>;
-    let mut groups: HashMap<(usize, TensorId), WriterList<'_>> = HashMap::new();
+    // Accesses grouped by (memory rank, tensor):
+    // (graph node id, op ref, region, is-reduce).
+    type AccessList<'a> = Vec<(usize, OpRef, &'a Region, bool)>;
+    let mut writes: HashMap<(usize, TensorId), AccessList<'_>> = HashMap::new();
+    let mut reads: HashMap<(usize, TensorId), AccessList<'_>> = HashMap::new();
     for (rank, ops) in sched.per_rank.iter().enumerate() {
         for (index, op) in ops.iter().enumerate() {
-            let (dst_rank, reduce) = match op {
-                CommOp::P2p { reduce, .. } => (op.dst_rank(rank), *reduce),
-                CommOp::LocalCopy { .. } => (rank, false),
+            let reduce = match op {
+                CommOp::P2p { reduce, .. } => *reduce,
+                CommOp::LocalCopy { .. } => false,
                 CommOp::Collective { .. } => continue, // abstract until lowering
             };
             let opref = OpRef { rank, index };
-            groups
-                .entry((dst_rank, op.produced_chunk().tensor))
+            let node = g.id(opref);
+            writes
+                .entry((op.dst_rank(rank), op.produced_chunk().tensor))
                 .or_default()
-                .push((base[rank] + index, opref, &op.produced_chunk().region, reduce));
+                .push((node, opref, &op.produced_chunk().region, reduce));
+            reads
+                .entry((op.src_rank(rank), op.consumed_chunk().tensor))
+                .or_default()
+                .push((node, opref, &op.consumed_chunk().region, false));
         }
     }
-    for ((dst, tensor), writers) in &groups {
+    let name_of = |tensor: TensorId| {
+        sched
+            .tensors
+            .get(tensor)
+            .map(|d| d.name.clone())
+            .unwrap_or_else(|_| format!("{tensor:?}"))
+    };
+    for ((mem, tensor), writers) in &writes {
         for (i, a) in writers.iter().enumerate() {
             for b in writers.iter().skip(i + 1) {
                 if (a.3 && b.3) || !a.2.intersects(b.2) {
                     continue;
                 }
-                if !reaches(a.0, b.0) && !reaches(b.0, a.0) {
-                    let name = sched
-                        .tensors
-                        .get(*tensor)
-                        .map(|d| d.name.clone())
-                        .unwrap_or_else(|_| format!("{tensor:?}"));
+                if !reach.ordered(a.0, b.0) {
                     return Err(Error::Schedule(format!(
-                        "unordered overlapping writes (race) to `{name}` on rank {dst}: \
+                        "unordered overlapping writes (race) to `{}` on rank {mem}: \
                          ops ({},{}) and ({},{}) write intersecting regions with no \
                          dependency path between them",
-                        a.1.rank, a.1.index, b.1.rank, b.1.index
+                        name_of(*tensor),
+                        a.1.rank,
+                        a.1.index,
+                        b.1.rank,
+                        b.1.index
+                    )));
+                }
+            }
+        }
+        let Some(readers) = reads.get(&(*mem, *tensor)) else { continue };
+        for w in writers {
+            for r in readers {
+                if r.1 == w.1 || !r.2.intersects(w.2) {
+                    continue;
+                }
+                if !reach.ordered(r.0, w.0) {
+                    return Err(Error::Schedule(format!(
+                        "unordered read-write overlap (race) on `{}` rank {mem}: op \
+                         ({},{}) reads a region that op ({},{}) writes, with no \
+                         dependency path between them",
+                        name_of(*tensor),
+                        r.1.rank,
+                        r.1.index,
+                        w.1.rank,
+                        w.1.index
                     )));
                 }
             }
@@ -555,6 +521,69 @@ mod tests {
         s.add_op(1, push(2, &b, vec![])).unwrap();
         let e = validate(&s).unwrap_err();
         assert!(e.to_string().contains("race"), "{e}");
+    }
+
+    #[test]
+    fn unordered_read_write_rejected() {
+        // rank 0 overwrites x[0:4] on rank 1 while rank 1's own push still
+        // sources it — whether rank 1 sends pre- or post-write bytes is a
+        // timing accident. validate historically missed this (only
+        // write-write was checked).
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 4, 16));
+        let hi = Chunk::new(x, Region::rows(4, 4, 16));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push(1, &lo, vec![])).unwrap();
+        s.add_op(
+            1,
+            CommOp::P2p {
+                kind: TransferKind::Push,
+                peer: 0,
+                src: lo.clone(),
+                dst: hi.clone(),
+                reduce: false,
+                deps: vec![],
+            },
+        )
+        .unwrap();
+        let e = validate(&s).unwrap_err();
+        assert!(e.to_string().contains("read-write"), "{e}");
+        assert!(e.to_string().contains("race"), "{e}");
+    }
+
+    #[test]
+    fn ordered_read_write_accepted() {
+        // same shape of plan, but the reader waits for the write: determinate
+        let mut t = TensorTable::new();
+        let x = t.declare("x", &[8, 16], DType::F32).unwrap();
+        let lo = Chunk::new(x, Region::rows(0, 4, 16));
+        let hi = Chunk::new(x, Region::rows(4, 4, 16));
+        let mut s = CommSchedule::new(2, t);
+        s.add_op(0, push(1, &lo, vec![])).unwrap();
+        s.add_op(
+            1,
+            CommOp::P2p {
+                kind: TransferKind::Push,
+                peer: 0,
+                src: lo.clone(),
+                dst: hi.clone(),
+                reduce: false,
+                deps: vec![Dep::on(0, 0)],
+            },
+        )
+        .unwrap();
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn cycle_error_carries_certificate_path() {
+        let (mut s, c) = base();
+        s.add_op(0, push(1, &c, vec![Dep::on(1, 0)])).unwrap();
+        s.add_op(1, push(0, &c, vec![Dep::on(0, 0)])).unwrap();
+        let e = topo_order(&s).unwrap_err().to_string();
+        assert!(e.contains("cycle"), "{e}");
+        assert!(e.contains("(0,0)") && e.contains("(1,0)"), "{e}");
     }
 
     // -- gather-destination coverage (check_covers wired into validate) -----

@@ -1,0 +1,180 @@
+//! Static-analysis integration (ISSUE 8 acceptance):
+//!
+//! * the negative corpus `examples/plans/bad/*.sched` triggers **exactly**
+//!   the rule each file is annotated with (`# expect: SY-...`), and
+//!   `validate` agrees with the analyzer on which of them are
+//!   error-severity;
+//! * the shipped good corpus analyzes clean at warn severity;
+//! * every registry exec case at worlds 2/4/8 reports **zero**
+//!   error-severity findings, and — being statically acyclic — never trips
+//!   the parallel engine's bounded-wait deadlock verdict;
+//! * `analysis::reduce` (the `plan analyze --fix` engine) is a fixpoint,
+//!   keeps plans valid, and the reduced plan produces f32 state
+//!   bit-identical to the original under BOTH exec engines.
+
+use std::path::PathBuf;
+
+use syncopate::analysis::{self, Severity};
+use syncopate::backend::BackendKind;
+use syncopate::codegen::{compile_comm_only, Realization};
+use syncopate::coordinator::execases::{self, CaseParams};
+use syncopate::exec::{run_with, ExecOptions};
+use syncopate::plan_io::parse_schedule;
+use syncopate::runtime::Runtime;
+use syncopate::schedule::validate::validate;
+
+fn plans_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/plans")
+}
+
+#[test]
+fn bad_corpus_triggers_exactly_its_annotated_rule() {
+    let dir = plans_dir().join("bad");
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("examples/plans/bad must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("sched") {
+            continue;
+        }
+        seen += 1;
+        let tag = path.display().to_string();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let expect = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("# expect:"))
+            .unwrap_or_else(|| panic!("{tag}: missing `# expect: SY-...` annotation"))
+            .trim()
+            .to_string();
+        let sched = parse_schedule(&text).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let rep = analysis::run(&sched).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert!(
+            rep.findings.iter().any(|f| f.rule == expect),
+            "{tag}: expected {expect}, got {:?}",
+            rep.findings
+        );
+        for f in &rep.findings {
+            assert_eq!(
+                f.rule, expect,
+                "{tag}: unexpected extra finding {} ({})",
+                f.rule, f.message
+            );
+        }
+        // the corpus' error-severity entries are exactly the plans that
+        // `validate` refuses to pass to execution
+        let is_error = expect.starts_with("SY-E");
+        assert_eq!(rep.has_errors(), is_error, "{tag}: severity drifted from the annotation");
+        assert_eq!(
+            validate(&sched).is_err(),
+            is_error,
+            "{tag}: validate and the analyzer must agree on error-severity plans"
+        );
+    }
+    assert_eq!(seen, 5, "bad corpus went missing ({seen} files)");
+}
+
+#[test]
+fn shipped_good_corpus_analyzes_clean() {
+    // read_dir is non-recursive on purpose: bad/ lives one level down
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir(plans_dir()).expect("examples/plans must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("sched") {
+            continue;
+        }
+        seen += 1;
+        let tag = path.display().to_string();
+        let sched = parse_schedule(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let rep = analysis::run(&sched).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let noisy: Vec<_> =
+            rep.findings.iter().filter(|f| f.severity != Severity::Info).collect();
+        assert!(noisy.is_empty(), "{tag}: shipped plan must analyze clean, got {noisy:?}");
+    }
+    assert!(seen >= 3, "good corpus went missing ({seen} files)");
+}
+
+#[test]
+fn registry_cases_analyze_without_errors_and_never_deadlock() {
+    let rt = Runtime::open_default().unwrap();
+    let mut swept = 0usize;
+    for spec in execases::CASES {
+        for world in [2usize, 4, 8] {
+            let params = CaseParams { world, ..Default::default() };
+            // some cases reject some shapes: a named build error is a skip
+            let Ok(case) = spec.build(&params) else { continue };
+            let tag = format!("{} w{world}", spec.name);
+            let rep = analysis::run(&case.sched).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_eq!(
+                rep.count(Severity::Error),
+                0,
+                "{tag}: error findings on a registry case: {:?}",
+                rep.findings
+            );
+            // statically acyclic (no SY-E003) -> the runtime bounded-wait
+            // verdict must never fire for this plan
+            execases::run_and_verify_with(case, &rt, &ExecOptions::parallel())
+                .unwrap_or_else(|e| panic!("{tag}: parallel engine tripped: {e}"));
+            swept += 1;
+        }
+    }
+    assert!(swept >= 20, "registry sweep degenerated: only {swept} case-worlds ran");
+}
+
+#[test]
+fn fix_reduced_registry_plans_run_bit_identically_in_both_engines() {
+    let rt = Runtime::open_default().unwrap();
+    let real = || Realization::new(BackendKind::LdStSpecialized, 16);
+    let mut reduced_any = 0usize;
+    for spec in execases::CASES {
+        for world in [2usize, 4, 8] {
+            let params = CaseParams { world, ..Default::default() };
+            let Ok(probe) = spec.build(&params) else { continue };
+            let tag = format!("{} w{world}", spec.name);
+            let (reduced, removed) =
+                analysis::reduce(&probe.sched).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            validate(&reduced).unwrap_or_else(|e| panic!("{tag}: reduced plan invalid: {e}"));
+            assert_eq!(reduced.num_ops(), probe.sched.num_ops(), "{tag}: reduce dropped ops");
+            // the reduction is a fixpoint: a second pass finds nothing
+            assert!(
+                analysis::reduce(&reduced).unwrap().1.is_empty(),
+                "{tag}: reduce is not a fixpoint"
+            );
+            if !removed.is_empty() {
+                reduced_any += 1;
+            }
+            let topo = &probe.topo;
+            let plan_orig = compile_comm_only(&probe.sched, real(), topo)
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            let plan_red =
+                compile_comm_only(&reduced, real(), topo).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            // four identically-seeded stores: {orig, reduced} x {seq, par}.
+            // build() is deterministic per seed, so each rebuild reseeds the
+            // same initial state.
+            let mut states: Vec<Vec<Vec<f32>>> = Vec::new();
+            for (plan, opts) in [
+                (&plan_orig, ExecOptions::sequential()),
+                (&plan_orig, ExecOptions::parallel()),
+                (&plan_red, ExecOptions::sequential()),
+                (&plan_red, ExecOptions::parallel()),
+            ] {
+                let case = spec.build(&params).unwrap();
+                run_with(plan, &case.sched.tensors, &case.store, &rt, opts)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                let mut state = Vec::new();
+                for r in 0..world {
+                    for name in case.store.names() {
+                        state.push(case.store.get(r, name).unwrap());
+                    }
+                }
+                states.push(state);
+            }
+            for (i, s) in states.iter().enumerate().skip(1) {
+                assert_eq!(
+                    &states[0], s,
+                    "{tag}: plan/engine combo {i} diverged bitwise from original+sequential"
+                );
+            }
+        }
+    }
+    assert!(reduced_any >= 1, "sweep never exercised an actual reduction");
+}

@@ -1,0 +1,91 @@
+//! Unsafe audit (ISSUE 8 satellite): every `unsafe` site in the crate —
+//! block, fn, impl, or extern — must carry a `// SAFETY:` justification
+//! directly above it, and the crate root must deny implicit
+//! unsafe-op-in-unsafe-fn. Enforced textually so a new unsafe block cannot
+//! land without its argument.
+
+use std::path::{Path, PathBuf};
+
+fn src_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rs_files(&path, out);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn is_unsafe_code_line(line: &str) -> bool {
+    let t = line.trim_start();
+    if t.starts_with("//") {
+        return false; // the word in prose is not a site
+    }
+    if t.contains("unsafe_op_in_unsafe_fn") {
+        return false; // the lint name in attributes is not a site
+    }
+    ["unsafe {", "unsafe{", "unsafe fn", "unsafe impl", "unsafe extern"]
+        .iter()
+        .any(|p| t.contains(p))
+}
+
+#[test]
+fn every_unsafe_site_has_a_safety_comment() {
+    let mut files = Vec::new();
+    rs_files(&src_dir(), &mut files);
+    files.sort();
+    let mut sites = 0usize;
+    for path in &files {
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            if !is_unsafe_code_line(line) {
+                continue;
+            }
+            sites += 1;
+            // walk upward through comments, attributes, blanks, and
+            // adjacent unsafe lines (one SAFETY comment may cover a
+            // Send+Sync impl pair) until the comment or real code
+            let mut j = i;
+            let mut found = false;
+            while j > 0 {
+                j -= 1;
+                let t = lines[j].trim_start();
+                if t.contains("SAFETY:") {
+                    found = true;
+                    break;
+                }
+                let skippable = t.starts_with("//")
+                    || t.starts_with('#')
+                    || t.is_empty()
+                    || is_unsafe_code_line(lines[j]);
+                if !skippable {
+                    break;
+                }
+            }
+            assert!(
+                found,
+                "{}:{}: unsafe without a `// SAFETY:` comment above it",
+                path.display(),
+                i + 1
+            );
+        }
+    }
+    // the crate currently has exactly 4 sites (2 asm blocks, 1 Send+Sync
+    // pair); if this ever reads 0 the matcher broke, not the code
+    assert!(sites >= 1, "audit matched no unsafe sites — matcher broke");
+}
+
+#[test]
+fn crate_denies_implicit_unsafe_in_unsafe_fn() {
+    let lib = std::fs::read_to_string(src_dir().join("lib.rs")).unwrap();
+    assert!(
+        lib.contains("#![deny(unsafe_op_in_unsafe_fn)]"),
+        "lib.rs must keep the unsafe_op_in_unsafe_fn deny"
+    );
+}
