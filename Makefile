@@ -1,6 +1,6 @@
 # Build-time artifact pipeline + convenience wrappers.
 
-.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke obs-smoke
+.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke obs-smoke flight-smoke
 
 # AOT-lower every L2 entry point to HLO text + manifest (needs jax).
 artifacts:
@@ -47,6 +47,16 @@ obs-smoke:
 	cd rust && cargo run --release -- stats show /tmp/syncopate_stats.json
 	cd rust && cargo run --release -- stats check /tmp/syncopate_stats.json
 	cd rust && cargo run --release -- serve-demo --workers 4 --stats /tmp/syncopate_serve.json
+
+# Post-mortem capture end to end: a known runtime deadlock writes a
+# flight dump whose verdict carries the stuck ranks' recent events,
+# the dump round-trips through `flight show`, and sampled live tracing
+# feeds the divergence gauge (§18).
+flight-smoke:
+	cd rust && cargo run --release -- flight dump --deadlock-demo --out /tmp/syncopate_flight.json --chrome /tmp/syncopate_flight_chrome.json
+	cd rust && cargo run --release -- flight show /tmp/syncopate_flight.json
+	cd rust && cargo run --release -- serve-demo --workers 4 --trace-sample 4 --stats /tmp/syncopate_flight_serve.json
+	cd rust && cargo run --release -- stats check /tmp/syncopate_flight_serve.json
 
 fmt:
 	cd rust && cargo fmt --check

@@ -243,5 +243,34 @@ fn main() {
         );
     }
 
+    // -- flight recorder overhead: the seqlock ring writes (op issue/apply,
+    // signal set/wait, park/unpark, queue drains) sit on the same hot path
+    // behind their own runtime flag; measured per world size because the
+    // event rate scales with rank count. Under `--features no-obs` the
+    // record functions are compiled-out and the rows must collapse.
+    println!("\n== flight recorder: flight-on vs flight-off (parallel atomic) ==");
+    for world in [2usize, 4, 8] {
+        let case = execases::ag_gemm(world, 2, 7).unwrap();
+        let prep = prepare(&case.plan, &case.sched.tensors).unwrap();
+        let opts = ExecOptions::parallel();
+        let mut arena = PlanArena::new(&prep);
+        syncopate::obs::flight::set_enabled(true);
+        let on = res.bench(&format!("exec ag-gemm w{world} s2 parallel atomic flight-on"), 10, || {
+            let _ = run_prepared_reusing(&prep, &mut arena, &case.store, &rt, &opts).unwrap();
+        });
+        syncopate::obs::flight::set_enabled(false);
+        let off =
+            res.bench(&format!("exec ag-gemm w{world} s2 parallel atomic flight-off"), 10, || {
+                let _ = run_prepared_reusing(&prep, &mut arena, &case.store, &rt, &opts).unwrap();
+            });
+        syncopate::obs::flight::set_enabled(true);
+        println!(
+            "  world {world}: flight overhead {:+.1}% (on {:.3} ms, off {:.3} ms)",
+            (on / off - 1.0) * 100.0,
+            on * 1e3,
+            off * 1e3
+        );
+    }
+
     res.write();
 }

@@ -1735,6 +1735,45 @@ pub fn build_case(name: &str, params: &CaseParams) -> Result<ExecCase> {
     spec.build(params)
 }
 
+/// A deliberately deadlocking plan — NOT in the [`CASES`] registry (the
+/// static-analysis sweep asserts every registered case is clean). Rank 0
+/// waits on a signal that only its *own later* transfer would set; every
+/// other rank has an empty program. All three engines report a runtime
+/// deadlock verdict. Used by `flight dump --deadlock-demo`, the CI flight
+/// smoke, and the deadlock-accounting regression tests: a known-bad plan
+/// to exercise post-mortem capture without a hand-written `.sched` file.
+pub fn deadlock_demo(world: usize) -> Result<ExecCase> {
+    check_world("deadlock-demo", world)?;
+    let mut table = TensorTable::new();
+    let x = table.declare("x", &[4, 4], crate::chunk::DType::F32)?;
+    let mut store = BufferStore::new(world);
+    store.declare("x", &[4, 4])?;
+
+    let mut per_rank = vec![crate::codegen::RankProgram::default(); world];
+    per_rank[0].ops = vec![
+        crate::codegen::PlanOp::Wait(0),
+        crate::codegen::PlanOp::Issue(crate::testutil::transfer_desc(
+            x,
+            crate::chunk::Region::rows(0, 2, 4),
+            0,
+            0,
+            1,
+            vec![],
+            false,
+        )),
+    ];
+    let plan = ExecutablePlan { world, per_rank, num_signals: 1, reserved_comm_sms: 0 };
+    let topo = crate::hw::catalog::topology(crate::hw::catalog::DEFAULT, world)?;
+    Ok(ExecCase {
+        name: format!("deadlock-demo-w{world}"),
+        sched: CommSchedule::new(world, table),
+        plan,
+        store,
+        checks: Vec::new(), // it never runs to completion
+        topo,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     // These builders are exercised with the real PJRT runtime in
@@ -1756,6 +1795,27 @@ mod tests {
     fn invalid_split_rejected() {
         assert!(ag_gemm(2, 5, 0).is_err());
         assert!(ring_attention(2, 5, 0).is_err());
+    }
+
+    #[test]
+    fn deadlock_demo_reports_verdict_with_flight_context() {
+        let case = deadlock_demo(2).unwrap();
+        assert!(case.name.starts_with("deadlock-demo"));
+        // not in the registry: the analysis sweep must stay clean
+        assert!(!case_names().contains(&"deadlock-demo"));
+        let rt = Runtime::host_reference();
+        let e = run_with(&case.plan, &case.sched.tensors, &case.store, &rt, &ExecOptions::sequential())
+            .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("deadlock"), "{msg}");
+        assert!(msg.contains("rank 0"), "{msg}");
+        // post-mortem context: the stuck rank's recent flight events ride
+        // along on the verdict (rank 0 recorded at least its blocked wait)
+        #[cfg(not(feature = "no-obs"))]
+        {
+            assert!(msg.contains("recent flight events"), "{msg}");
+            assert!(msg.contains("sig-wait"), "{msg}");
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! and a key is compiled at most a handful of times under race but
 //! inserted once (first writer wins, so responses stay deterministic).
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -86,10 +87,19 @@ pub struct Response {
     pub cache_hit: bool,
 }
 
+/// Monotonic request IDs, assigned at submit time (so queue time is part
+/// of a request's observable lifetime). Process-global: IDs stay unique
+/// across coordinator instances, which keeps flight events unambiguous.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_request_id() -> u64 {
+    NEXT_REQUEST_ID.fetch_add(1, Relaxed)
+}
+
 enum Envelope {
-    Req(Request, mpsc::Sender<Result<Response>>),
-    /// (plan text, exec options, trace this execution?)
-    UserPlan(String, ExecOptions, bool, mpsc::Sender<Result<UserPlanResponse>>),
+    Req(u64, Request, mpsc::Sender<Result<Response>>),
+    /// (request id, plan text, exec options, trace this execution?)
+    UserPlan(u64, String, ExecOptions, bool, mpsc::Sender<Result<UserPlanResponse>>),
     Shutdown,
 }
 
@@ -125,7 +135,7 @@ impl CoordinatorClient {
     pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Result<Response>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Envelope::Req(req, rtx))
+            .send(Envelope::Req(next_request_id(), req, rtx))
             .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
         obs::gauge("coord.queue_depth").inc();
         Ok(rrx)
@@ -169,7 +179,7 @@ impl CoordinatorClient {
     ) -> Result<mpsc::Receiver<Result<UserPlanResponse>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Envelope::UserPlan(text.to_string(), opts, traced, rtx))
+            .send(Envelope::UserPlan(next_request_id(), text.to_string(), opts, traced, rtx))
             .map_err(|_| Error::Coordinator("coordinator workers are gone".into()))?;
         obs::gauge("coord.queue_depth").inc();
         Ok(rrx)
@@ -273,24 +283,38 @@ fn worker(wi: usize, topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cach
         let Ok(env) = env else { break };
         match env {
             Envelope::Shutdown => break,
-            Envelope::UserPlan(text, opts, traced, reply) => {
+            Envelope::UserPlan(id, text, opts, traced, reply) => {
                 depth.dec();
                 busy.set(1.0);
                 served.inc();
+                // everything this request touches — serving phases on this
+                // thread AND rank threads the engines spawn — records under
+                // this request ID (DESIGN.md §18)
+                obs::flight::set_request(id);
+                obs::flight::req_begin();
                 let t0 = Instant::now();
-                let resp = serve_user_plan(&text, &opts, traced, topo, cache, &mut runtime);
+                let resp = serve_user_plan(&text, &opts, traced, topo, cache, &mut runtime)
+                    .map_err(|e| e.prefixed(&format!("request {id}")));
                 obs::histogram_with("serve.request_us", &[("kind", "user-plan")])
                     .record_us(obs::us_since(t0));
-                if let Err(e) = &resp {
-                    obs::error_total(e.subsystem());
+                match &resp {
+                    Ok(_) => obs::flight::req_end(),
+                    Err(e) => {
+                        obs::error_total(e.subsystem());
+                        obs::flight::req_error();
+                        obs::flight::dump_to_configured("served-error");
+                    }
                 }
+                obs::flight::set_request(0);
                 busy.set(0.0);
                 let _ = reply.send(resp);
             }
-            Envelope::Req(Request::Run { op, cfg }, reply) => {
+            Envelope::Req(id, Request::Run { op, cfg }, reply) => {
                 depth.dec();
                 busy.set(1.0);
                 served.inc();
+                obs::flight::set_request(id);
+                obs::flight::req_begin();
                 let t0 = Instant::now();
                 let key = format!("{}|{}", op.label(), cfg.label());
                 let cached = cache.get(&key);
@@ -317,11 +341,18 @@ fn worker(wi: usize, topo: &Topology, rx: &Mutex<mpsc::Receiver<Envelope>>, cach
                         cache_hit,
                     })
                 });
+                let resp = resp.map_err(|e| e.prefixed(&format!("request {id}")));
                 obs::histogram_with("serve.request_us", &[("kind", "operator")])
                     .record_us(obs::us_since(t0));
-                if let Err(e) = &resp {
-                    obs::error_total(e.subsystem());
+                match &resp {
+                    Ok(_) => obs::flight::req_end(),
+                    Err(e) => {
+                        obs::error_total(e.subsystem());
+                        obs::flight::req_error();
+                        obs::flight::dump_to_configured("served-error");
+                    }
                 }
+                obs::flight::set_request(0);
                 busy.set(0.0);
                 let _ = reply.send(resp);
             }
@@ -346,10 +377,16 @@ fn serve_user_plan(
     runtime: &mut Option<Runtime>,
 ) -> Result<UserPlanResponse> {
     let phase = |p: &str| obs::histogram_with("serve.phase_us", &[("phase", p)]);
+    // phase spans in the flight recorder carry the worker's current
+    // request ID; a phase that errors out leaves its begin unmatched,
+    // which Chrome renders as the unfinished span — exactly the story
     let t0 = Instant::now();
+    obs::flight::phase_begin("parse");
     let sched = crate::plan_io::parse_schedule(text)?;
+    obs::flight::phase_end("parse");
     phase("parse").record_us(obs::us_since(t0));
     let t0 = Instant::now();
+    obs::flight::phase_begin("validate");
     if sched.world != topo.world {
         return Err(Error::Coordinator(format!(
             "plan world {} != coordinator world {}",
@@ -381,6 +418,7 @@ fn serve_user_plan(
     // the same plan still hit the same cache entry
     let hash = crate::plan_io::content_hash(&crate::plan_io::print_schedule(&sched)?);
     let key = format!("user-plan|{hash}");
+    obs::flight::phase_end("validate");
     phase("validate").record_us(obs::us_since(t0));
 
     let cached = cache.get(&key);
@@ -398,13 +436,17 @@ fn serve_user_plan(
         }
         None => {
             let t0 = Instant::now();
+            obs::flight::phase_begin("tune");
             let tuned = crate::autotune::tune_user_plan(&sched, topo)?;
+            obs::flight::phase_end("tune");
             phase("tune").record_us(obs::us_since(t0));
             let t0 = Instant::now();
+            obs::flight::phase_begin("compile");
             let plan = crate::codegen::compile_comm_only(&sched, tuned.real, topo)?;
             let params = crate::sim::SimParams::default();
             let sim = simulate(&plan, topo, params)?;
             let label = realization_label(&plan);
+            obs::flight::phase_end("compile");
             phase("compile").record_us(obs::us_since(t0));
             // first writer wins; racing workers compiled the same bits
             cache.insert_if_absent(
@@ -425,9 +467,16 @@ fn serve_user_plan(
     let rt = runtime.as_ref().expect("just initialized");
     let store = seeded_store(&sched)?;
     let t0 = Instant::now();
+    obs::flight::phase_begin("exec");
     let (stats, trace_stats) = if traced {
-        let (stats, trace) =
+        let (stats, mut trace) =
             crate::exec::run_with_traced(&plan, &sched.tensors, &store, rt, opts)?;
+        // the captured trace remembers which request produced it, so a
+        // Chrome export of a sampled live trace names its lifecycle
+        let req = obs::flight::current_request();
+        if req != 0 {
+            trace.set_meta("request", &req.to_string());
+        }
         let report = crate::trace::analyze(&trace);
         // every traced request feeds the standing sim-vs-trace gauge
         report.record_divergence(sim_makespan_us);
@@ -435,6 +484,7 @@ fn serve_user_plan(
     } else {
         (crate::exec::run_with(&plan, &sched.tensors, &store, rt, opts)?, None)
     };
+    obs::flight::phase_end("exec");
     phase("exec").record_us(obs::us_since(t0));
     Ok(UserPlanResponse {
         hash,

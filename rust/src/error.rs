@@ -77,6 +77,33 @@ impl Error {
             Error::Io(_) => "io",
         }
     }
+
+    /// The same error with `prefix: ` prepended to its message. The
+    /// variant (and therefore [`Error::subsystem`]) is preserved, so
+    /// `error_total{kind}` still counts the real failure class — the
+    /// coordinator uses this to stamp the request ID onto served errors.
+    pub fn prefixed(self, prefix: &str) -> Error {
+        let wrap = |m: String| format!("{prefix}: {m}");
+        match self {
+            Error::Analysis(m) => Error::Analysis(wrap(m)),
+            Error::Region(m) => Error::Region(wrap(m)),
+            Error::Schedule(m) => Error::Schedule(wrap(m)),
+            Error::Kernel(m) => Error::Kernel(wrap(m)),
+            Error::DepGraph(m) => Error::DepGraph(wrap(m)),
+            Error::Backend(m) => Error::Backend(wrap(m)),
+            Error::Lowering(m) => Error::Lowering(wrap(m)),
+            Error::Codegen(m) => Error::Codegen(wrap(m)),
+            Error::Sim(m) => Error::Sim(wrap(m)),
+            Error::Exec(m) => Error::Exec(wrap(m)),
+            Error::Runtime(m) => Error::Runtime(wrap(m)),
+            Error::Autotune(m) => Error::Autotune(wrap(m)),
+            Error::Coordinator(m) => Error::Coordinator(wrap(m)),
+            Error::PlanIo(m) => Error::PlanIo(wrap(m)),
+            Error::Hw(m) => Error::Hw(wrap(m)),
+            Error::Trace(m) => Error::Trace(wrap(m)),
+            Error::Io(m) => Error::Io(wrap(m)),
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -121,6 +148,13 @@ mod tests {
         let e = Error::Schedule("bad dep".into());
         assert_eq!(e.to_string(), "[schedule] bad dep");
         assert_eq!(e.subsystem(), "schedule");
+    }
+
+    #[test]
+    fn prefixed_keeps_subsystem() {
+        let e = Error::PlanIo("line 1, col 6: bad token".into()).prefixed("request 42");
+        assert_eq!(e.subsystem(), "plan-io");
+        assert_eq!(e.to_string(), "[plan-io] request 42: line 1, col 6: bad token");
     }
 
     #[test]

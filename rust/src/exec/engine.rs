@@ -129,13 +129,31 @@ fn run_prepared_sunk(
             prep.plan.world
         )));
     }
-    match (opts.mode, opts.sync) {
+    let res = match (opts.mode, opts.sync) {
         (ExecMode::Sequential, _) => run_sequential(prep, store, runtime, sink),
         (ExecMode::Parallel, SyncStrategy::Atomic) => {
             super::parallel::run_parallel(prep, store, runtime, opts, sink)
         }
         (ExecMode::Parallel, SyncStrategy::Condvar) => {
             super::parallel_condvar::run_parallel_condvar(prep, store, runtime, opts, sink)
+        }
+    };
+    // the sequential engine interprets ranks on this thread; return it to
+    // the control lane whichever way the run exited
+    crate::obs::flight::exit_rank();
+    note_deadlock(&res);
+    res
+}
+
+/// The shared deadlock-verdict path: every engine's verdict funnels
+/// through here exactly once, so `error_total{kind=deadlock}` counts each
+/// failed run once regardless of mode/sync, and a configured flight dump
+/// path captures the post-mortem at the moment of the verdict.
+fn note_deadlock<T>(res: &Result<T>) {
+    if let Err(e) = res {
+        if e.to_string().contains("deadlock") {
+            crate::obs::error_total("deadlock");
+            crate::obs::flight::dump_to_configured("deadlock");
         }
     }
 }
@@ -160,7 +178,9 @@ pub fn run_prepared_reusing(
             prep.plan.world
         )));
     }
-    super::parallel::run_parallel_in(prep, arena, store, runtime, opts, None)
+    let res = super::parallel::run_parallel_in(prep, arena, store, runtime, opts, None);
+    note_deadlock(&res);
+    res
 }
 
 /// Apply one transfer to the buffers; returns the bytes moved.
@@ -350,6 +370,8 @@ fn run_sequential(
                 stats.transfers += 1;
                 stats.bytes_moved += bytes;
                 signals[d.signal] = true;
+                // deferred apply: op index unknown here, sentinel a=MAX
+                crate::obs::flight::op_apply(d.src_rank, usize::MAX, d.signal);
                 progress = true;
             } else {
                 still.push(d);
@@ -359,6 +381,7 @@ fn run_sequential(
 
         // 2. step each rank as far as it can go
         for rank in 0..plan.world {
+            crate::obs::flight::enter_rank(rank);
             let prog = &plan.per_rank[rank];
             while pcs[rank] < prog.ops.len() {
                 let op_index = pcs[rank];
@@ -381,6 +404,7 @@ fn run_sequential(
                             pcs[rank] += 1;
                             progress = true;
                         } else {
+                            crate::obs::flight::signal_wait(rank, op_index, *sig);
                             if let Some(s) = sink {
                                 if wait_from[rank].is_none() {
                                     wait_from[rank] = Some(s.now_us());
@@ -390,11 +414,13 @@ fn run_sequential(
                         }
                     }
                     PlanOp::Issue(d) => {
+                        crate::obs::flight::op_issue(rank, op_index);
                         if d.dep_signals.iter().all(|&s| signals[s]) {
                             let bytes = apply_transfer_sunk(prep, d, store, sink)?;
                             stats.transfers += 1;
                             stats.bytes_moved += bytes;
                             signals[d.signal] = true;
+                            crate::obs::flight::op_apply(rank, op_index, d.signal);
                         } else {
                             pending.push(d.clone());
                         }
@@ -428,15 +454,19 @@ fn run_sequential(
             return Ok(stats);
         }
         if !progress {
-            let stuck: Vec<String> = (0..plan.world)
-                .filter(|&r| pcs[r] < plan.per_rank[r].ops.len())
-                .map(|r| {
+            let stuck_ranks: Vec<usize> =
+                (0..plan.world).filter(|&r| pcs[r] < plan.per_rank[r].ops.len()).collect();
+            let stuck: Vec<String> = stuck_ranks
+                .iter()
+                .map(|&r| {
                     format!("rank {r} at op {} ({})", pcs[r], plan.per_rank[r].ops[pcs[r]].brief())
                 })
                 .collect();
-            crate::obs::error_total("deadlock");
+            // error_total{kind=deadlock} and the post-mortem dump happen on
+            // the shared verdict path in run_prepared_sunk, not here
+            let ctx = crate::obs::flight::verdict_context(&stuck_ranks, 8);
             return Err(Error::Exec(format!(
-                "deadlock: no progress; {} pending transfers; stuck: {}",
+                "deadlock: no progress; {} pending transfers; stuck: {}{ctx}",
                 pending.len(),
                 stuck.join("; ")
             )));

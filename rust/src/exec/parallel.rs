@@ -147,8 +147,20 @@ impl Shared<'_> {
                 }
             }
         }
-        crate::obs::error_total("deadlock");
+        // error_total{kind=deadlock} and the flight dump happen once on the
+        // shared verdict path in engine::note_deadlock, not per call site
         let stuck = self.stuck_ranks();
+        let stuck_idx: Vec<usize> = (0..self.prep.plan.world)
+            .filter(|&r| self.rank_pc[r].load(Ordering::Relaxed) != RANK_DONE)
+            .collect();
+        // when every program completed (a final-drain verdict), the whole
+        // world's recent events are the useful context
+        let ctx_ranks: Vec<usize> = if stuck_idx.is_empty() {
+            (0..self.prep.plan.world).collect()
+        } else {
+            stuck_idx
+        };
+        let ctx = crate::obs::flight::verdict_context(&ctx_ranks, 8);
         let stuck = if stuck.is_empty() {
             "none (all rank programs completed)".to_string()
         } else {
@@ -156,7 +168,7 @@ impl Shared<'_> {
         };
         Error::Exec(format!(
             "deadlock: bounded wait ({timeout:?}) expired with no progress; {what}; \
-             stuck ranks: {stuck}; parked transfers: [{}]",
+             stuck ranks: {stuck}; parked transfers: [{}]{ctx}",
             parked.join(", ")
         ))
     }
@@ -213,10 +225,15 @@ pub(crate) fn run_parallel_in(
         sink,
     };
 
+    // rank threads inherit the spawning thread's request scope so their
+    // flight events carry the request ID being served
+    let req = crate::obs::flight::current_request();
     std::thread::scope(|scope| {
         for rank in 0..world {
             let shared = &shared;
             scope.spawn(move || {
+                crate::obs::flight::set_request(req);
+                crate::obs::flight::enter_rank(rank);
                 // register the handle FIRST: producers unpark us directly
                 // after pushing into our queue, and a push that lands
                 // before registration is caught by our first drain pass
@@ -272,6 +289,7 @@ fn rank_body(
         match op {
             PlanOp::Overhead { .. } => {}
             PlanOp::Wait(sig) => {
+                crate::obs::flight::signal_wait(rank, op_index, *sig);
                 let t0 = shared.sink.map(|s| s.now_us());
                 wait_and_drain(shared, rank, op_index, *sig, store, opts, local, &mut stats)?;
                 if let (Some(s), Some(t0)) = (shared.sink, t0) {
@@ -284,12 +302,14 @@ fn rank_body(
                 stats.waits_hit += 1;
             }
             PlanOp::Issue(d) => {
+                crate::obs::flight::op_issue(rank, op_index);
                 if local.seen.all_set(shared.board(), &d.dep_signals) {
                     let bytes = shared.apply_busy(d, store, &mut local.copy)?;
                     stats.transfers += 1;
                     stats.bytes_moved += bytes;
                     shared.board().set(d.signal);
                     local.seen.mark(d.signal);
+                    crate::obs::flight::op_apply(rank, op_index, d.signal);
                 } else {
                     // asynchronous issue: park it in the DESTINATION
                     // rank's queue and move on
@@ -377,6 +397,7 @@ fn drain_ready(
     }
     let n = ready.len();
     crate::obs::hot::queue_drained(n);
+    crate::obs::flight::queue_drain(rank, n);
     for it in ready.drain(..) {
         let d = shared.queued_desc(it)?;
         let bytes = shared.apply_busy(d, store, copy)?;
@@ -384,6 +405,7 @@ fn drain_ready(
         stats.bytes_moved += bytes;
         shared.board().set(d.signal);
         seen.mark(d.signal);
+        crate::obs::flight::op_apply(it.rank as usize, it.op as usize, d.signal);
     }
     Ok(n)
 }

@@ -113,10 +113,15 @@ pub(crate) fn run_parallel_condvar(
         sink,
     };
 
+    // rank threads inherit the spawning thread's request scope so their
+    // flight events carry the request ID being served
+    let req = crate::obs::flight::current_request();
     std::thread::scope(|scope| {
         for rank in 0..world {
             let shared = &shared;
             scope.spawn(move || {
+                crate::obs::flight::set_request(req);
+                crate::obs::flight::enter_rank(rank);
                 match rank_body(shared, rank, store, runtime, opts) {
                     Ok(local) => {
                         shared.rank_pc[rank].store(RANK_DONE, Ordering::Relaxed);
@@ -158,6 +163,7 @@ fn rank_body(
         match op {
             PlanOp::Overhead { .. } => {}
             PlanOp::Wait(sig) => {
+                crate::obs::flight::signal_wait(rank, op_index, *sig);
                 let t0 = shared.sink.map(|s| s.now_us());
                 shared.board.wait_all(&[*sig], opts.wait_timeout, || {
                     format!("rank {rank} at op {op_index} (Wait(sig {sig}))")
@@ -172,11 +178,13 @@ fn rank_body(
                 local.waits_hit += 1;
             }
             PlanOp::Issue(d) => {
+                crate::obs::flight::op_issue(rank, op_index);
                 if shared.board.all_set(&d.dep_signals) {
                     let bytes = shared.apply_busy(d, store)?;
                     local.transfers += 1;
                     local.bytes_moved += bytes;
                     shared.board.set(d.signal);
+                    crate::obs::flight::op_apply(rank, op_index, d.signal);
                 } else {
                     // asynchronous issue: park it and move on
                     shared.pending.lock().unwrap().push(d.clone());
@@ -288,13 +296,25 @@ fn servicer(shared: &Shared<'_>, store: &BufferStore, opts: &ExecOptions) {
                     })
                     .collect();
                 let stuck = shared.stuck_ranks();
+                let stuck_idx: Vec<usize> = (0..shared.prep.plan.world)
+                    .filter(|&r| shared.rank_pc[r].load(Ordering::Relaxed) != RANK_DONE)
+                    .collect();
+                let ctx_ranks: Vec<usize> = if stuck_idx.is_empty() {
+                    (0..shared.prep.plan.world).collect()
+                } else {
+                    stuck_idx
+                };
+                // last-K flight events per stuck rank ride on the verdict;
+                // error_total{kind=deadlock} is counted once on the shared
+                // path in engine::note_deadlock
+                let ctx = crate::obs::flight::verdict_context(&ctx_ranks, 8);
                 let stuck = if stuck.is_empty() {
                     "none (all rank programs completed)".to_string()
                 } else {
                     stuck.join("; ")
                 };
                 shared.record_fail(Error::Exec(format!(
-                    "{e}; stuck ranks: {stuck}; parked transfers: [{}]",
+                    "{e}; stuck ranks: {stuck}; parked transfers: [{}]{ctx}",
                     parked.join(", ")
                 )));
                 return;

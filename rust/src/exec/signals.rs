@@ -133,6 +133,7 @@ impl SignalBoard {
     pub fn set(&self, id: usize) {
         self.words[id].store(1, SeqCst);
         self.epoch.fetch_add(1, SeqCst);
+        crate::obs::flight::signal_set(id);
         self.wake(Some(id));
     }
 
@@ -226,6 +227,7 @@ impl SignalBoard {
             };
             if hit {
                 crate::obs::hot::unpark();
+                crate::obs::flight::unpark(sig);
                 p.thread.unpark();
             }
         }
@@ -263,6 +265,10 @@ impl SignalBoard {
             let left = deadline.saturating_duration_since(Instant::now());
             if !left.is_zero() {
                 crate::obs::hot::park();
+                crate::obs::flight::park(match interest {
+                    Interest::Signal(id) => Some(id),
+                    Interest::Any => None,
+                });
                 std::thread::park_timeout(left);
             }
         }

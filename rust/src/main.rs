@@ -14,7 +14,7 @@
 //!                [--topo <name|FILE.topo>] [--trace FILE.json] [--cache FILE]
 //!                [--exec-mode <parallel|sequential>] [--timeout-ms N]
 //!                [--sync <atomic|condvar>] [--pin-ranks] [--pin-from FILE.json]
-//!                [--repeat N] [--stats FILE.json]
+//!                [--repeat N] [--stats FILE.json] [--flight FILE.json]
 //!                (--nodes splits SINGLE-node --topo descriptions for the
 //!                 hierarchical case; a multinode description's own node
 //!                 structure wins; --trace captures a Chrome trace and
@@ -26,10 +26,21 @@
 //!                 --repeat N warm-replays the prepared plan N times on the
 //!                 atomic engine, feeding per-iteration makespans into the
 //!                 exec.iter_us histogram; --stats dumps the process
-//!                 telemetry snapshot as syncopate.stats.v1 JSON on exit)
+//!                 telemetry snapshot as syncopate.stats.v1 JSON on exit;
+//!                 --flight arms the post-mortem dump path: a deadlock
+//!                 verdict snapshots the flight rings to the file)
 //! syncopate trace show <FILE.json>
 //! syncopate trace overlap <FILE.json>
 //! syncopate trace diff <A.json> <B.json>
+//! syncopate flight dump [--deadlock-demo] [--world N] [--sync <atomic|condvar>]
+//!                       [--timeout-ms N] [--out FILE.json] [--chrome FILE.json]
+//! syncopate flight show <FILE.json>
+//!                    (the flight recorder's post-mortem surface, DESIGN.md
+//!                     §18: dump snapshots this process's per-rank event
+//!                     rings as syncopate.flight.v1 JSON — with
+//!                     --deadlock-demo after running a known-deadlocking
+//!                     plan whose verdict carries the stuck ranks' recent
+//!                     events; show summarizes a previously written dump)
 //! syncopate stats show [FILE.json] [--prom]
 //! syncopate stats check <FILE.json>
 //! syncopate stats watch <FILE.json> [--interval-ms N] [--count N]
@@ -52,6 +63,11 @@
 //! syncopate topo show <name|FILE.topo>
 //! syncopate topo lint <FILE.topo>...
 //! syncopate serve-demo [--workers N] [--topo <name|FILE.topo>] [--stats FILE.json]
+//!                      [--flight FILE.json] [--trace-sample N] [--requests N]
+//!                    (--trace-sample N serves a batch of user-plan requests
+//!                     with every Nth routed through the traced path; each
+//!                     sample feeds sim.divergence and the trace.sample.*
+//!                     gauges — production-shaped sampled live tracing)
 //! ```
 //!
 //! Every `--topo` accepts a built-in catalog name (`syncopate topo list`)
@@ -325,6 +341,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                 sync: get_sync(&flags)?,
                 pin_cores: get_pin_layout(&flags, params.world)?,
             };
+            if let Some(path) = flags.get("flight") {
+                // post-mortem capture: a runtime deadlock verdict snapshots
+                // the flight rings to this file (DESIGN.md §18)
+                syncopate::obs::flight::set_dump_path(Some(path));
+            }
             let rt = Runtime::open_default()?;
             let backend = rt.backend_name();
             let stats = match flags.get("trace") {
@@ -413,6 +434,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "trace" => trace_cmd(&bare),
+        "flight" => flight_cmd(&bare, &flags),
         "stats" => stats_cmd(&bare, &flags),
         "calibrate" => calibrate_cmd(&flags),
         "plan" => match bare.first().map(String::as_str) {
@@ -449,6 +471,11 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve-demo" => {
             let world = get_usize(&flags, "world", 8)?;
             let workers = get_usize(&flags, "workers", 2)?;
+            if let Some(path) = flags.get("flight") {
+                // any served error (or deadlock verdict) snapshots the
+                // flight rings to this file for post-mortem inspection
+                syncopate::obs::flight::set_dump_path(Some(path));
+            }
             let coord = Coordinator::spawn_pool(resolve_topo(&flags, world)?, workers);
             println!(
                 "coordinator up (world {world}, {} workers); submitting demo batch...",
@@ -492,6 +519,40 @@ fn dispatch(args: &[String]) -> Result<()> {
                     r.cache_hit
                 );
             }
+            // --trace-sample N: serve a batch of user-plan requests with
+            // every Nth routed through the traced path — production-shaped
+            // sampled live tracing. Each sample feeds sim.divergence and
+            // the trace.sample.* gauges (inspect with `stats show`).
+            if let Some(v) = flags.get("trace-sample") {
+                let n: usize = v.parse().map_err(|_| {
+                    Error::Coordinator(format!("--trace-sample expects an integer, got `{v}`"))
+                })?;
+                let n = n.max(1);
+                let batch = get_usize(&flags, "requests", 8)?.max(1);
+                let mut sampled = 0usize;
+                for i in 0..batch {
+                    if (i + 1) % n == 0 {
+                        let r = coord.run_user_plan_traced(&text, ExecOptions::parallel())?;
+                        let t = r.trace.as_ref().expect("traced request carries stats");
+                        sampled += 1;
+                        syncopate::obs::counter("trace.sampled_total").inc();
+                        syncopate::obs::gauge("trace.sample.events").set(t.events as f64);
+                        syncopate::obs::gauge("trace.sample.comm_us").set(t.comm_us);
+                        syncopate::obs::gauge("trace.sample.wait_us").set(t.wait_us);
+                        syncopate::obs::gauge("trace.sample.busy_makespan_us")
+                            .set(t.busy_makespan_us);
+                        if !t.hidden_frac.is_nan() {
+                            syncopate::obs::gauge("trace.sample.hidden_frac").set(t.hidden_frac);
+                        }
+                    } else {
+                        coord.run_user_plan(&text, ExecOptions::parallel())?;
+                    }
+                }
+                println!(
+                    "  sampled {sampled}/{batch} user-plan requests (1 in {n}) through the \
+                     traced path"
+                );
+            }
             // live telemetry on exit: everything the demo batch recorded
             // (per-phase serving latencies, cache traffic, the divergence
             // gauge the traced requests fed)
@@ -508,6 +569,69 @@ fn dispatch(args: &[String]) -> Result<()> {
             print_usage();
             Err(Error::Coordinator(format!("unknown subcommand `{other}`")))
         }
+    }
+}
+
+/// `flight dump|show`: the flight recorder's post-mortem surface
+/// (DESIGN.md §18). `dump` snapshots this process's rings; with
+/// `--deadlock-demo` it first runs a known-deadlocking plan so the whole
+/// capture path can be exercised without authoring a broken `.sched`.
+/// `show FILE` re-reads a previously written dump and summarizes it.
+fn flight_cmd(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    match bare.first().map(String::as_str) {
+        Some("dump") => {
+            let demo = flags.contains_key("deadlock-demo");
+            if demo {
+                let world = get_usize(flags, "world", 2)?;
+                // short bound: the verdict is the point, not the wait
+                let timeout_ms = get_usize(flags, "timeout-ms", 250)?.max(1) as u64;
+                let case = execases::deadlock_demo(world)?;
+                let opts = ExecOptions {
+                    wait_timeout: std::time::Duration::from_millis(timeout_ms),
+                    sync: get_sync(flags)?,
+                    ..ExecOptions::parallel()
+                };
+                let rt = Runtime::open_default()?;
+                match syncopate::exec::run_with(
+                    &case.plan,
+                    &case.sched.tensors,
+                    &case.store,
+                    &rt,
+                    &opts,
+                ) {
+                    Ok(_) => {
+                        return Err(Error::Coordinator(
+                            "deadlock demo unexpectedly ran to completion".into(),
+                        ))
+                    }
+                    Err(e) => println!("verdict: {e}"),
+                }
+            }
+            let dump =
+                syncopate::obs::flight::snapshot(if demo { "deadlock-demo" } else { "manual" });
+            let out = flags.get("out").map(String::as_str).unwrap_or("flight.json");
+            std::fs::write(out, syncopate::obs::flight::to_json(&dump))?;
+            println!("flight dump -> {out} ({} events)", dump.events.len());
+            if let Some(path) = flags.get("chrome") {
+                std::fs::write(path, syncopate::obs::flight::to_chrome_json(&dump))?;
+                println!("chrome trace -> {path}");
+            }
+            Ok(())
+        }
+        Some("show") => {
+            let Some(path) = bare.get(1) else {
+                return Err(Error::Coordinator(
+                    "flight show needs a flight dump file (write one with `flight dump`)".into(),
+                ));
+            };
+            let dump = syncopate::obs::flight::from_json(&std::fs::read_to_string(path)?)?;
+            println!("{}", syncopate::obs::flight::render(&dump));
+            Ok(())
+        }
+        other => Err(Error::Coordinator(format!(
+            "unknown flight verb `{}` (dump|show)",
+            other.unwrap_or("")
+        ))),
     }
 }
 
@@ -1172,8 +1296,8 @@ fn print_ratios(t: &syncopate::metrics::Table) {
 fn print_usage() {
     println!(
         "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
-         usage: syncopate <report|simulate|tune|exec|trace|stats|calibrate|plan|topo|serve-demo> \
-         [flags]\n\
+         usage: syncopate <report|simulate|tune|exec|trace|flight|stats|calibrate|plan|topo|\
+         serve-demo> [flags]\n\
          plan verbs: plan import --from <src>, plan show|lint|run <file.sched>\n\
          topo verbs: topo list, topo show|lint <name|file.topo>\n\
          exec cases: syncopate exec --case list   (add --trace FILE to capture, \
@@ -1182,6 +1306,8 @@ fn print_usage() {
          calibrate --from <file.json> --topo <name> -o <file.topo>\n\
          telemetry : stats show [file.json] [--prom], stats check|watch <file.json>, \
          stats reset\n\
+         post-mortem: flight dump [--deadlock-demo] [--out file.json] [--chrome file.json], \
+         flight show <file.json>; exec/serve-demo take --flight FILE\n\
          hardware  : every sim/tune/exec/plan-run takes --topo <name|file.topo>\n\
          see rust/src/main.rs header for the full flag list"
     );

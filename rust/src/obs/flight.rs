@@ -1,0 +1,953 @@
+//! Flight recorder: always-on, per-rank lock-free event rings for
+//! post-mortem debugging and request-scoped causal tracing (DESIGN.md §18).
+//!
+//! The metrics registry ([`super`]) answers "how much / how often"; the
+//! [`crate::trace`] subsystem answers "exactly when", but only for runs
+//! that opted into capture. This module fills the gap between them: a
+//! cheap, *always-on* record of the last ~[`RING_CAPACITY`] causal events
+//! per rank (op issue/apply, signal set/wait, park/unpark, queue drains,
+//! request phases), so that when a run deadlocks or a served request
+//! errors, the post-mortem question — *what was each rank doing just
+//! before it stopped?* — has an answer without re-running under a tracer.
+//!
+//! Design:
+//!
+//! * **Rings** — one fixed power-of-two ring per rank lane (plus one
+//!   control lane for coordinator threads). Events are two packed `u64`
+//!   words in per-slot seqlocks. Writers claim a slot with one Relaxed
+//!   `fetch_add` on the lane head and publish with one Release store;
+//!   overwrite-oldest means recording never blocks and never allocates.
+//! * **Snapshot** — a reader drains the published window `[head-cap, head)`
+//!   and validates each slot's sequence word around the data reads
+//!   (crossbeam-style seqlock: odd = write in progress). Slots caught
+//!   mid-overwrite are skipped and counted, never torn.
+//! * **Gating** — like [`super::hot`]: a Relaxed runtime toggle
+//!   ([`set_enabled`]) plus the `no-obs` cargo feature compiling every
+//!   record fn to an empty inline body.
+//! * **Request scope** — coordinator workers stamp a monotonic request ID
+//!   into a thread-local ([`set_request`]); every event records the ID of
+//!   the request it happened under, so one ring holds interleaved events
+//!   from many requests and a dump can still reconstruct each lifecycle.
+//!
+//! Dumps render as `syncopate.flight.v1` JSON ([`to_json`] /
+//! [`from_json`], exact round trip) and as Chrome `trace_event` JSON
+//! ([`to_chrome_json`], same viewer as `exec --trace` captures).
+
+use std::cell::Cell;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering::Acquire, Ordering::Relaxed,
+    Ordering::Release};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{Counter, Key, Value};
+use crate::error::{Error, Result};
+
+/// Events kept per lane (power of two; the seqlock mask depends on it).
+pub const RING_CAPACITY: usize = 512;
+const MASK: u64 = RING_CAPACITY as u64 - 1;
+
+/// Rank lanes 0..16 plus one control lane for coordinator threads.
+pub const LANES: usize = 17;
+
+/// Sentinel rank for control-plane (coordinator worker) events.
+pub const CTRL_RANK: u8 = 0xFF;
+
+// --- event codes (u8 in the packed word) --------------------------------
+
+pub const OP_ISSUE: u8 = 0;
+pub const OP_APPLY: u8 = 1;
+pub const SIGNAL_SET: u8 = 2;
+pub const SIGNAL_WAIT: u8 = 3;
+pub const PARK: u8 = 4;
+pub const UNPARK: u8 = 5;
+pub const QUEUE_DRAIN: u8 = 6;
+pub const REQ_BEGIN: u8 = 7;
+pub const REQ_END: u8 = 8;
+pub const REQ_ERROR: u8 = 9;
+pub const PHASE_BEGIN: u8 = 10;
+pub const PHASE_END: u8 = 11;
+
+/// `a` value meaning "no specific signal" for park/unpark events.
+pub const ANY_SIGNAL: u32 = u32::MAX;
+
+/// Stable wire name of an event code (`syncopate.flight.v1` `kind` field).
+pub fn code_name(code: u8) -> &'static str {
+    match code {
+        OP_ISSUE => "op-issue",
+        OP_APPLY => "op-apply",
+        SIGNAL_SET => "sig-set",
+        SIGNAL_WAIT => "sig-wait",
+        PARK => "park",
+        UNPARK => "unpark",
+        QUEUE_DRAIN => "queue-drain",
+        REQ_BEGIN => "req-begin",
+        REQ_END => "req-end",
+        REQ_ERROR => "req-error",
+        PHASE_BEGIN => "phase-begin",
+        PHASE_END => "phase-end",
+        _ => "unknown",
+    }
+}
+
+fn code_from_name(name: &str) -> Option<u8> {
+    (0..=PHASE_END).find(|&c| code_name(c) == name)
+}
+
+// --- serving phases (the `a` arg of PHASE_* events) ---------------------
+
+/// Serving-phase codes carried in `a` by `phase-begin`/`phase-end`.
+pub fn phase_code(name: &str) -> u32 {
+    match name {
+        "parse" => 0,
+        "validate" => 1,
+        "analyze" => 2,
+        "tune" => 3,
+        "compile" => 4,
+        "exec" => 5,
+        _ => 6,
+    }
+}
+
+pub fn phase_name(code: u32) -> &'static str {
+    match code {
+        0 => "parse",
+        1 => "validate",
+        2 => "analyze",
+        3 => "tune",
+        4 => "compile",
+        5 => "exec",
+        _ => "other",
+    }
+}
+
+// --- the decoded event --------------------------------------------------
+
+/// One decoded flight event. The packed form is two `u64` words:
+/// `w0 = t_us | code<<32 | rank<<40 | b<<48`, `w1 = a | req<<32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Microseconds since the process flight epoch (wraps every ~71 min;
+    /// ordering within a lane comes from the ring, not the clock).
+    pub t_us: u32,
+    /// Event code (`OP_ISSUE` ... `PHASE_END`).
+    pub code: u8,
+    /// Rank the event happened on (`CTRL_RANK` for coordinator threads).
+    pub rank: u8,
+    /// Secondary argument (signal for `op-apply`/`sig-wait`; saturated to
+    /// 16 bits).
+    pub b: u16,
+    /// Primary argument (op index, signal id, drained count, phase code;
+    /// `ANY_SIGNAL` for untargeted park/unpark).
+    pub a: u32,
+    /// Request ID the event happened under (0 = outside any request).
+    pub req: u32,
+}
+
+impl FlightEvent {
+    fn pack(&self) -> (u64, u64) {
+        let w0 = self.t_us as u64
+            | (self.code as u64) << 32
+            | (self.rank as u64) << 40
+            | (self.b as u64) << 48;
+        let w1 = self.a as u64 | (self.req as u64) << 32;
+        (w0, w1)
+    }
+
+    fn unpack(w0: u64, w1: u64) -> Self {
+        FlightEvent {
+            t_us: w0 as u32,
+            code: (w0 >> 32) as u8,
+            rank: (w0 >> 40) as u8,
+            b: (w0 >> 48) as u16,
+            a: w1 as u32,
+            req: (w1 >> 32) as u32,
+        }
+    }
+
+    /// Compact one-line rendering for verdict messages and `flight show`.
+    pub fn brief(&self) -> String {
+        let sig = |a: u32| {
+            if a == ANY_SIGNAL { "any".to_string() } else { format!("sig{a}") }
+        };
+        let body = match self.code {
+            OP_ISSUE => format!("op-issue op{}", self.a),
+            OP_APPLY => format!("op-apply op{} sig{}", self.a, self.b),
+            SIGNAL_SET => format!("sig-set sig{}", self.a),
+            SIGNAL_WAIT => format!("sig-wait op{} sig{}", self.a, self.b),
+            PARK => format!("park {}", sig(self.a)),
+            UNPARK => format!("unpark {}", sig(self.a)),
+            QUEUE_DRAIN => format!("queue-drain n{}", self.a),
+            REQ_BEGIN => "req-begin".to_string(),
+            REQ_END => "req-end".to_string(),
+            REQ_ERROR => "req-error".to_string(),
+            PHASE_BEGIN => format!("phase-begin {}", phase_name(self.a)),
+            PHASE_END => format!("phase-end {}", phase_name(self.a)),
+            other => format!("code{other} a{}", self.a),
+        };
+        if self.req != 0 {
+            format!("{body} @{}us req{}", self.t_us, self.req)
+        } else {
+            format!("{body} @{}us", self.t_us)
+        }
+    }
+}
+
+// --- the rings ----------------------------------------------------------
+
+/// One seqlocked slot: `seq` is `(claim << 1) | dirty`; a reader accepts
+/// the slot for window index `i` only when `seq == (i + 1) << 1` both
+/// before and after the data reads.
+struct Slot {
+    seq: AtomicU64,
+    w0: AtomicU64,
+    w1: AtomicU64,
+}
+
+struct Ring {
+    /// Claim counter: each writer takes one index with a Relaxed
+    /// `fetch_add`; index `i` maps to slot `i & MASK`.
+    head: AtomicU64,
+    slots: [Slot; RING_CAPACITY],
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_SLOT: Slot = Slot {
+    seq: AtomicU64::new(0),
+    w0: AtomicU64::new(0),
+    w1: AtomicU64::new(0),
+};
+
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_RING: Ring = Ring { head: AtomicU64::new(0), slots: [ZERO_SLOT; RING_CAPACITY] };
+
+static RINGS: [Ring; LANES] = [EMPTY_RING; LANES];
+
+fn lane_of(rank: u8) -> usize {
+    if rank == CTRL_RANK {
+        LANES - 1
+    } else {
+        (rank & 0xF) as usize
+    }
+}
+
+fn clamp_rank(rank: usize) -> u8 {
+    rank.min(0xFE) as u8
+}
+
+// --- counters merged into registry snapshots ----------------------------
+
+pub static EVENTS: Counter = Counter::new();
+pub static SNAPSHOT_SKIPS: Counter = Counter::new();
+pub static DUMPS: Counter = Counter::new();
+
+pub(super) fn entries() -> Vec<(Key, Value)> {
+    [
+        ("flight.events_total", &EVENTS),
+        ("flight.snapshot_skips_total", &SNAPSHOT_SKIPS),
+        ("flight.dumps_total", &DUMPS),
+    ]
+    .into_iter()
+    .map(|(name, c)| (Key::new(name, &[]), Value::Counter(c.get())))
+    .collect()
+}
+
+pub(super) fn reset_counters() {
+    for c in [&EVENTS, &SNAPSHOT_SKIPS, &DUMPS] {
+        c.reset();
+    }
+}
+
+// --- gating + thread context --------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Runtime toggle for the recorder (benchmark A/B switch, `no-obs`-free
+/// opt-out).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+fn on() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+thread_local! {
+    /// The rank whose events this thread records ([`enter_rank`]).
+    static CUR_RANK: Cell<u8> = const { Cell::new(CTRL_RANK) };
+    /// The request ID this thread's events belong to ([`set_request`]).
+    static CUR_REQ: Cell<u32> = const { Cell::new(0) };
+    /// Per-thread copy of the process flight epoch (first event on a
+    /// thread pays one cold mutex lock; every later event is one TLS read
+    /// plus `Instant::elapsed`).
+    static TLS_EPOCH: Cell<Option<Instant>> = const { Cell::new(None) };
+}
+
+static EPOCH: Mutex<Option<Instant>> = Mutex::new(None);
+
+fn now_us() -> u32 {
+    let epoch = TLS_EPOCH.with(|c| match c.get() {
+        Some(e) => e,
+        None => {
+            let e = *EPOCH.lock().unwrap().get_or_insert_with(Instant::now);
+            c.set(Some(e));
+            e
+        }
+    });
+    epoch.elapsed().as_micros() as u32
+}
+
+/// Declare the rank whose events this thread records (rank threads call
+/// it on entry; the sequential engine calls it per round-robin turn).
+/// A TLS store — negligible, so not feature-gated.
+pub fn enter_rank(rank: usize) {
+    CUR_RANK.with(|c| c.set(clamp_rank(rank)));
+}
+
+/// Return this thread to the control lane (after a sequential run on a
+/// worker thread, say).
+pub fn exit_rank() {
+    CUR_RANK.with(|c| c.set(CTRL_RANK));
+}
+
+/// Stamp the request ID subsequent events on this thread belong to
+/// (0 clears it). IDs are truncated to 32 bits in the packed event.
+pub fn set_request(id: u64) {
+    CUR_REQ.with(|c| c.set(id as u32));
+}
+
+/// The request ID currently stamped on this thread (0 = none). Engines
+/// read it before spawning rank threads so the scope inherits it.
+pub fn current_request() -> u64 {
+    CUR_REQ.with(|c| c.get()) as u64
+}
+
+// --- recording (the hot path) -------------------------------------------
+
+#[cfg(not(feature = "no-obs"))]
+#[inline]
+fn record(code: u8, rank: u8, a: u32, b: u16) {
+    let ev = FlightEvent {
+        t_us: now_us(),
+        code,
+        rank,
+        b,
+        a,
+        req: CUR_REQ.with(|c| c.get()),
+    };
+    let ring = &RINGS[lane_of(rank)];
+    let i = ring.head.fetch_add(1, Relaxed);
+    let slot = &ring.slots[(i & MASK) as usize];
+    let (w0, w1) = ev.pack();
+    // Seqlock write protocol (crossbeam discipline): mark dirty, fence,
+    // write data Relaxed, publish with Release. A snapshot validating the
+    // sequence word around its data reads can skip but never tear.
+    slot.seq.store((i << 1) | 1, Relaxed);
+    fence(Release);
+    slot.w0.store(w0, Relaxed);
+    slot.w1.store(w1, Relaxed);
+    slot.seq.store((i + 1) << 1, Release);
+    EVENTS.inc();
+}
+
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+fn rank_of_thread() -> u8 {
+    CUR_RANK.with(|c| c.get())
+}
+
+fn sat16(v: usize) -> u16 {
+    v.min(u16::MAX as usize) as u16
+}
+
+/// An `Issue` op examined by `rank` (applied immediately or parked).
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn op_issue(rank: usize, op: usize) {
+    if on() {
+        record(OP_ISSUE, clamp_rank(rank), op as u32, 0);
+    }
+}
+
+/// A transfer applied (immediately or drained), completing `signal`.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn op_apply(rank: usize, op: usize, signal: usize) {
+    if on() {
+        record(OP_APPLY, clamp_rank(rank), op as u32, sat16(signal));
+    }
+}
+
+/// A signal published on the board (rank from thread context).
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn signal_set(signal: usize) {
+    if on() {
+        record(SIGNAL_SET, rank_of_thread(), signal as u32, 0);
+    }
+}
+
+/// A rank entering a `Wait` op on `signal`.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn signal_wait(rank: usize, op: usize, signal: usize) {
+    if on() {
+        record(SIGNAL_WAIT, clamp_rank(rank), op as u32, sat16(signal));
+    }
+}
+
+/// A thread actually entering `park_timeout` (`None` = any-activity wait).
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn park(signal: Option<usize>) {
+    if on() {
+        record(PARK, rank_of_thread(), signal.map_or(ANY_SIGNAL, |s| s as u32), 0);
+    }
+}
+
+/// A producer issuing a targeted unpark (`None` = any-interest wake).
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn unpark(signal: Option<usize>) {
+    if on() {
+        record(UNPARK, rank_of_thread(), signal.map_or(ANY_SIGNAL, |s| s as u32), 0);
+    }
+}
+
+/// `n` parked transfers drained from `rank`'s queue.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn queue_drain(rank: usize, n: usize) {
+    if n > 0 && on() {
+        record(QUEUE_DRAIN, clamp_rank(rank), n as u32, 0);
+    }
+}
+
+/// A coordinator request starting on this thread (control lane).
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn req_begin() {
+    if on() {
+        record(REQ_BEGIN, rank_of_thread(), 0, 0);
+    }
+}
+
+/// The request completing successfully.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn req_end() {
+    if on() {
+        record(REQ_END, rank_of_thread(), 0, 0);
+    }
+}
+
+/// The request completing with an error.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn req_error() {
+    if on() {
+        record(REQ_ERROR, rank_of_thread(), 0, 0);
+    }
+}
+
+/// A serving phase (`phase_code` name) starting under the current request.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn phase_begin(phase: &str) {
+    if on() {
+        record(PHASE_BEGIN, rank_of_thread(), phase_code(phase), 0);
+    }
+}
+
+/// The serving phase ending.
+#[cfg(not(feature = "no-obs"))]
+#[inline(always)]
+pub fn phase_end(phase: &str) {
+    if on() {
+        record(PHASE_END, rank_of_thread(), phase_code(phase), 0);
+    }
+}
+
+// `no-obs`: every record fn is an empty inline body (same discipline as
+// `super::hot`); the query/dump surface below stays available and simply
+// sees empty rings.
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn op_issue(_rank: usize, _op: usize) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn op_apply(_rank: usize, _op: usize, _signal: usize) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn signal_set(_signal: usize) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn signal_wait(_rank: usize, _op: usize, _signal: usize) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn park(_signal: Option<usize>) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn unpark(_signal: Option<usize>) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn queue_drain(_rank: usize, _n: usize) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn req_begin() {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn req_end() {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn req_error() {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn phase_begin(_phase: &str) {}
+
+#[cfg(feature = "no-obs")]
+#[inline(always)]
+pub fn phase_end(_phase: &str) {}
+
+// --- snapshots ----------------------------------------------------------
+
+/// One consistent drain of every ring: the post-mortem artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightDump {
+    /// Why the dump was taken (`"deadlock"`, `"served-error"`, `"cli"`).
+    pub reason: String,
+    /// All published events, lane-major, oldest-first within each lane.
+    pub events: Vec<FlightEvent>,
+}
+
+/// Drain one lane's published window (oldest-first). Slots caught
+/// mid-write (in-flight claims, overwrites racing the read) are skipped
+/// and counted in `flight.snapshot_skips_total` — a snapshot may be
+/// incomplete, never torn.
+fn drain_lane(lane: usize) -> Vec<FlightEvent> {
+    let ring = &RINGS[lane];
+    let head = ring.head.load(Acquire);
+    let start = head.saturating_sub(RING_CAPACITY as u64);
+    let mut out = Vec::with_capacity((head - start) as usize);
+    for i in start..head {
+        let slot = &ring.slots[(i & MASK) as usize];
+        let want = (i + 1) << 1;
+        let s1 = slot.seq.load(Acquire);
+        if s1 != want {
+            SNAPSHOT_SKIPS.inc();
+            continue;
+        }
+        let w0 = slot.w0.load(Relaxed);
+        let w1 = slot.w1.load(Relaxed);
+        fence(Acquire);
+        if slot.seq.load(Relaxed) != want {
+            SNAPSHOT_SKIPS.inc();
+            continue;
+        }
+        out.push(FlightEvent::unpack(w0, w1));
+    }
+    out
+}
+
+/// Snapshot every lane into a [`FlightDump`].
+pub fn snapshot(reason: &str) -> FlightDump {
+    let mut events = Vec::new();
+    for lane in 0..LANES {
+        events.extend(drain_lane(lane));
+    }
+    FlightDump { reason: reason.to_string(), events }
+}
+
+/// The last `k` published events recorded *by* `rank` (oldest-first).
+/// Other ranks sharing the lane modulo 16 are filtered out by the event's
+/// own rank byte.
+pub fn last_events(rank: usize, k: usize) -> Vec<FlightEvent> {
+    let r = clamp_rank(rank);
+    let evs = drain_lane(lane_of(r));
+    let mut mine: Vec<FlightEvent> = evs.into_iter().filter(|e| e.rank == r).collect();
+    if mine.len() > k {
+        mine.drain(..mine.len() - k);
+    }
+    mine
+}
+
+/// Per-stuck-rank last-K context appended to deadlock verdicts: empty
+/// when the recorder is off (or `no-obs`), else
+/// `"; recent flight events: rank R [ev | ev | ...], ..."`.
+pub fn verdict_context(ranks: &[usize], k: usize) -> String {
+    let mut parts = Vec::new();
+    for &r in ranks {
+        let evs = last_events(r, k);
+        if evs.is_empty() {
+            continue;
+        }
+        let briefs: Vec<String> = evs.iter().map(FlightEvent::brief).collect();
+        parts.push(format!("rank {r} [{}]", briefs.join(" | ")));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("; recent flight events: {}", parts.join(", "))
+    }
+}
+
+// --- post-mortem dump path ----------------------------------------------
+
+static DUMP_PATH: Mutex<Option<String>> = Mutex::new(None);
+
+/// Configure a file the process dumps flight JSON to on deadlock verdicts
+/// and served errors (`--flight FILE` on `exec` / `serve-demo`). `None`
+/// (the default) disables automatic dumps — no silent file writes.
+pub fn set_dump_path(path: Option<&str>) {
+    *DUMP_PATH.lock().unwrap() = path.map(str::to_string);
+}
+
+/// Snapshot all rings and write `syncopate.flight.v1` JSON to the
+/// configured dump path, if any. Returns the path written. IO failures
+/// are reported on stderr, never propagated into the failing run's error.
+pub fn dump_to_configured(reason: &str) -> Option<String> {
+    let path = DUMP_PATH.lock().unwrap().clone()?;
+    let dump = snapshot(reason);
+    match std::fs::write(&path, to_json(&dump)) {
+        Ok(()) => {
+            DUMPS.inc();
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("flight: could not write dump to {path}: {e}");
+            None
+        }
+    }
+}
+
+// --- syncopate.flight.v1 JSON -------------------------------------------
+
+/// Schema tag of the flight dump JSON.
+pub const FLIGHT_SCHEMA: &str = "syncopate.flight.v1";
+
+/// Render a dump as `syncopate.flight.v1` JSON. Exact round trip:
+/// `from_json(to_json(d)) == d`.
+pub fn to_json(dump: &FlightDump) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"schema\": \"{FLIGHT_SCHEMA}\",");
+    let _ = writeln!(out, "  \"reason\": \"{}\",", crate::util::json_escape(&dump.reason));
+    let _ = writeln!(out, "  \"events\": [");
+    for (i, e) in dump.events.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    {{\"t_us\": {}, \"kind\": \"{}\", \"rank\": {}, \"a\": {}, \"b\": {}, \
+             \"req\": {}}}{}",
+            e.t_us,
+            code_name(e.code),
+            e.rank,
+            e.a,
+            e.b,
+            e.req,
+            if i + 1 < dump.events.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(out, "  ]");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+/// Parse `syncopate.flight.v1` JSON back into a [`FlightDump`].
+pub fn from_json(text: &str) -> Result<FlightDump> {
+    let bad = |msg: &str| Error::Io(format!("flight dump: {msg}"));
+    let v = crate::trace::json::parse(text)?;
+    match v.get("schema").and_then(|s| s.as_str()) {
+        Some(s) if s == FLIGHT_SCHEMA => {}
+        Some(s) => return Err(bad(&format!("schema `{s}`, expected `{FLIGHT_SCHEMA}`"))),
+        None => return Err(bad("missing `schema` tag")),
+    }
+    let reason = v
+        .get("reason")
+        .and_then(|r| r.as_str())
+        .ok_or_else(|| bad("missing `reason`"))?
+        .to_string();
+    let evs = v.get("events").and_then(|e| e.as_arr()).ok_or_else(|| bad("missing `events`"))?;
+    let mut events = Vec::with_capacity(evs.len());
+    for (i, e) in evs.iter().enumerate() {
+        let num = |field: &str| {
+            e.get(field)
+                .and_then(|n| n.as_usize())
+                .ok_or_else(|| bad(&format!("event {i}: missing numeric `{field}`")))
+        };
+        let kind = e
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| bad(&format!("event {i}: missing `kind`")))?;
+        let code = code_from_name(kind)
+            .ok_or_else(|| bad(&format!("event {i}: unknown kind `{kind}`")))?;
+        let rank = num("rank")?;
+        if rank > 0xFF {
+            return Err(bad(&format!("event {i}: rank {rank} out of range")));
+        }
+        let b = num("b")?;
+        if b > u16::MAX as usize {
+            return Err(bad(&format!("event {i}: b {b} out of range")));
+        }
+        let a = num("a")?;
+        if a > u32::MAX as usize {
+            return Err(bad(&format!("event {i}: a {a} out of range")));
+        }
+        let (t_us, req) = (num("t_us")?, num("req")?);
+        if t_us > u32::MAX as usize || req > u32::MAX as usize {
+            return Err(bad(&format!("event {i}: t_us/req out of range")));
+        }
+        events.push(FlightEvent {
+            t_us: t_us as u32,
+            code,
+            rank: rank as u8,
+            b: b as u16,
+            a: a as u32,
+            req: req as u32,
+        });
+    }
+    Ok(FlightDump { reason, events })
+}
+
+/// Validate a flight dump document; returns its event count.
+pub fn check_schema(text: &str) -> Result<usize> {
+    from_json(text).map(|d| d.events.len())
+}
+
+// --- Chrome trace_event export ------------------------------------------
+
+/// Render a dump in Chrome `trace_event` JSON (the same viewer surface as
+/// `exec --trace` captures): one named thread per rank lane, phase
+/// begin/end as `B`/`E` spans, everything else as instant events carrying
+/// `a`/`b`/`req` args.
+pub fn to_chrome_json(dump: &FlightDump) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"displayTimeUnit\": \"ms\",");
+    let _ = writeln!(
+        out,
+        "  \"syncopate\": {{\"version\": 1, \"flight\": true, \"reason\": \"{}\"}},",
+        crate::util::json_escape(&dump.reason)
+    );
+    let _ = writeln!(out, "  \"traceEvents\": [");
+    let mut lines = Vec::new();
+    // thread-name metadata for every rank that appears
+    let mut ranks: Vec<u8> = dump.events.iter().map(|e| e.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in &ranks {
+        let name = if *r == CTRL_RANK { "coordinator".to_string() } else { format!("rank {r}") };
+        lines.push(format!(
+            "    {{\"ph\": \"M\", \"pid\": 0, \"tid\": {r}, \"name\": \"thread_name\", \
+             \"args\": {{\"name\": \"{name}\"}}}}"
+        ));
+    }
+    for e in &dump.events {
+        let (ph, name) = match e.code {
+            PHASE_BEGIN => ("B", phase_name(e.a).to_string()),
+            PHASE_END => ("E", phase_name(e.a).to_string()),
+            c => ("i", code_name(c).to_string()),
+        };
+        let scope = if ph == "i" { ", \"s\": \"t\"" } else { "" };
+        lines.push(format!(
+            "    {{\"ph\": \"{ph}\", \"pid\": 0, \"tid\": {}, \"name\": \"{name}\", \
+             \"cat\": \"flight\", \"ts\": {}{scope}, \
+             \"args\": {{\"a\": {}, \"b\": {}, \"req\": {}}}}}",
+            e.rank, e.t_us, e.a, e.b, e.req
+        ));
+    }
+    let _ = writeln!(out, "{}", lines.join(",\n"));
+    let _ = writeln!(out, "  ]");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+/// Text summary for `flight show`: per-rank event counts plus the tail.
+pub fn render(dump: &FlightDump) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "flight dump: reason `{}`, {} events", dump.reason, dump.events.len());
+    let mut ranks: Vec<u8> = dump.events.iter().map(|e| e.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in ranks {
+        let evs: Vec<&FlightEvent> = dump.events.iter().filter(|e| e.rank == r).collect();
+        let label =
+            if r == CTRL_RANK { "coordinator".to_string() } else { format!("rank {r}") };
+        let tail: Vec<String> =
+            evs.iter().rev().take(8).rev().map(|e| e.brief()).collect();
+        let _ = writeln!(out, "  {label}: {} events; last: {}", evs.len(), tail.join(" | "));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_round_trips() {
+        let e = FlightEvent {
+            t_us: 123_456,
+            code: SIGNAL_WAIT,
+            rank: 7,
+            b: 65_535,
+            a: u32::MAX - 1,
+            req: 42,
+        };
+        let (w0, w1) = e.pack();
+        assert_eq!(FlightEvent::unpack(w0, w1), e);
+        let z = FlightEvent { t_us: 0, code: 0, rank: 0, b: 0, a: 0, req: 0 };
+        let (w0, w1) = z.pack();
+        assert_eq!(FlightEvent::unpack(w0, w1), z);
+    }
+
+    #[test]
+    fn code_names_round_trip() {
+        for code in 0..=PHASE_END {
+            assert_eq!(code_from_name(code_name(code)), Some(code), "code {code}");
+        }
+        assert_eq!(code_from_name("nope"), None);
+    }
+
+    #[test]
+    fn phase_codes_cover_serving_phases() {
+        for p in ["parse", "validate", "analyze", "tune", "compile", "exec"] {
+            assert_eq!(phase_name(phase_code(p)), p);
+        }
+        assert_eq!(phase_name(phase_code("mystery")), "other");
+    }
+
+    #[cfg(not(feature = "no-obs"))]
+    #[test]
+    fn recorded_events_come_back_in_order() {
+        // Rank 13: a lane no engine test touches (worlds stop at 8).
+        let before = last_events(13, RING_CAPACITY).len();
+        op_issue(13, 3);
+        op_apply(13, 3, 9);
+        signal_wait(13, 4, 9);
+        let evs = last_events(13, RING_CAPACITY);
+        assert!(evs.len() >= before + 3);
+        let tail = &evs[evs.len() - 3..];
+        assert_eq!(tail[0].code, OP_ISSUE);
+        assert_eq!(tail[0].a, 3);
+        assert_eq!(tail[1].code, OP_APPLY);
+        assert_eq!((tail[1].a, tail[1].b), (3, 9));
+        assert_eq!(tail[2].code, SIGNAL_WAIT);
+        assert_eq!((tail[2].a, tail[2].b), (4, 9));
+        // timestamps are monotone within one thread's writes
+        assert!(tail[0].t_us <= tail[2].t_us);
+    }
+
+    #[cfg(not(feature = "no-obs"))]
+    #[test]
+    fn verdict_context_names_ranks_and_events() {
+        op_issue(14, 1);
+        signal_wait(14, 2, 5);
+        let ctx = verdict_context(&[14], 4);
+        assert!(ctx.contains("recent flight events"), "{ctx}");
+        assert!(ctx.contains("rank 14"), "{ctx}");
+        assert!(ctx.contains("sig-wait op2 sig5"), "{ctx}");
+        // a rank with no events contributes nothing
+        assert_eq!(verdict_context(&[11], 4), "");
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let dump = FlightDump {
+            reason: "unit \"quoted\"".to_string(),
+            events: vec![
+                FlightEvent { t_us: 5, code: OP_ISSUE, rank: 0, b: 0, a: 7, req: 0 },
+                FlightEvent { t_us: 9, code: PARK, rank: 3, b: 0, a: ANY_SIGNAL, req: 12 },
+                FlightEvent {
+                    t_us: u32::MAX,
+                    code: PHASE_END,
+                    rank: CTRL_RANK,
+                    b: u16::MAX,
+                    a: 5,
+                    req: u32::MAX,
+                },
+            ],
+        };
+        let json = to_json(&dump);
+        assert_eq!(check_schema(&json).unwrap(), 3);
+        assert_eq!(from_json(&json).unwrap(), dump);
+        // the document parses under the crate's own JSON reader
+        crate::trace::json::parse(&json).unwrap();
+    }
+
+    #[test]
+    fn schema_check_rejects_malformed() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("{\"schema\": \"syncopate.stats.v1\"}").is_err());
+        let bad_kind = "{\"schema\": \"syncopate.flight.v1\", \"reason\": \"x\", \
+             \"events\": [{\"t_us\": 1, \"kind\": \"nope\", \"rank\": 0, \"a\": 0, \
+             \"b\": 0, \"req\": 0}]}";
+        assert!(from_json(bad_kind).is_err());
+        let bad_rank = "{\"schema\": \"syncopate.flight.v1\", \"reason\": \"x\", \
+             \"events\": [{\"t_us\": 1, \"kind\": \"park\", \"rank\": 900, \"a\": 0, \
+             \"b\": 0, \"req\": 0}]}";
+        assert!(from_json(bad_rank).is_err());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_thread_names() {
+        let dump = FlightDump {
+            reason: "unit".to_string(),
+            events: vec![
+                FlightEvent { t_us: 1, code: PHASE_BEGIN, rank: CTRL_RANK, b: 0, a: 0, req: 3 },
+                FlightEvent { t_us: 2, code: SIGNAL_SET, rank: 2, b: 0, a: 4, req: 3 },
+                FlightEvent { t_us: 6, code: PHASE_END, rank: CTRL_RANK, b: 0, a: 0, req: 3 },
+            ],
+        };
+        let chrome = to_chrome_json(&dump);
+        let v = crate::trace::json::parse(&chrome).unwrap();
+        let evs = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 2 thread-name metadata + 3 events
+        assert_eq!(evs.len(), 5);
+        assert!(chrome.contains("\"coordinator\""));
+        assert!(chrome.contains("\"rank 2\""));
+        assert!(chrome.contains("\"ph\": \"B\""));
+        assert!(chrome.contains("\"ph\": \"E\""));
+        assert!(chrome.contains("\"ph\": \"i\""));
+    }
+
+    #[test]
+    fn render_summarizes_per_rank() {
+        let dump = FlightDump {
+            reason: "unit".to_string(),
+            events: vec![
+                FlightEvent { t_us: 1, code: OP_ISSUE, rank: 1, b: 0, a: 0, req: 0 },
+                FlightEvent { t_us: 2, code: OP_APPLY, rank: 1, b: 3, a: 0, req: 0 },
+            ],
+        };
+        let text = render(&dump);
+        assert!(text.contains("2 events"), "{text}");
+        assert!(text.contains("rank 1"), "{text}");
+        assert!(text.contains("op-apply op0 sig3"), "{text}");
+    }
+
+    #[test]
+    fn dump_path_roundtrip_and_unset_is_silent() {
+        // default: no configured path -> no write attempted
+        set_dump_path(None);
+        assert_eq!(dump_to_configured("unit"), None);
+    }
+}

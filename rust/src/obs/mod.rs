@@ -38,6 +38,7 @@
 //! [`crate::metrics::Table`] renderings for the `stats show` CLI.
 
 pub mod export;
+pub mod flight;
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
@@ -375,6 +376,7 @@ impl Registry {
             inner.iter().map(|(k, m)| (k.clone(), m.read())).collect()
         };
         entries.extend(hot::entries());
+        entries.extend(flight::entries());
         entries.sort_by(|a, b| a.0.cmp(&b.0));
         Snapshot { entries }
     }
@@ -385,6 +387,7 @@ impl Registry {
             m.reset();
         }
         hot::reset_counters();
+        flight::reset_counters();
     }
 
     fn counter_entry(&self, name: &str, labels: &[(&str, &str)]) -> &'static Counter {
