@@ -1,6 +1,6 @@
 # Build-time artifact pipeline + convenience wrappers.
 
-.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke obs-smoke flight-smoke
+.PHONY: artifacts build test bench fmt clippy clean examples lint-plans lint-topos trace-smoke obs-smoke flight-smoke perf-smoke
 
 # AOT-lower every L2 entry point to HLO text + manifest (needs jax).
 artifacts:
@@ -57,6 +57,18 @@ flight-smoke:
 	cd rust && cargo run --release -- flight show /tmp/syncopate_flight.json
 	cd rust && cargo run --release -- serve-demo --workers 4 --trace-sample 4 --stats /tmp/syncopate_flight_serve.json
 	cd rust && cargo run --release -- stats check /tmp/syncopate_flight_serve.json
+
+# The perf toolchain end to end (§19): profile a captured trace's
+# critical path (table + JSON + painted Chrome overlay + what-if bound),
+# record a noise-aware baseline, and gate a re-run against it — a self-gate
+# at an advisory threshold must pass. Baselines/trajectory land at the
+# repo root (BENCH_baseline.json / BENCH_results.json).
+perf-smoke:
+	cd rust && cargo run --release -- exec --case tp-block --world 2 --trace /tmp/syncopate_perf_trace.json
+	cd rust && cargo run --release -- perf critical /tmp/syncopate_perf_trace.json --chrome /tmp/syncopate_perf_overlay.json --what-if-comm-x 0.5
+	cd rust && cargo run --release -- perf critical /tmp/syncopate_perf_trace.json --json > /tmp/syncopate_perf_critical.json
+	cd rust && cargo run --release -- perf record --cases tp-block,ag-gemm --world 2 --repeat 5 --out ../BENCH_baseline.json --bench ../BENCH_results.json
+	cd rust && cargo run --release -- perf gate --baseline ../BENCH_baseline.json --cases tp-block,ag-gemm --world 2 --repeat 5 --max-regress 25
 
 fmt:
 	cd rust && cargo fmt --check

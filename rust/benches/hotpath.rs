@@ -7,10 +7,12 @@
 //!
 //! Run: `cargo bench --bench hotpath` (or `make bench`).
 //!
-//! Besides the human-readable stdout table, every measurement is written
-//! as machine-readable JSON to `BENCH_results.json` at the repository root
-//! (override the path with the `BENCH_RESULTS` env var) so the perf
-//! trajectory can be tracked across commits without scraping logs.
+//! Besides the human-readable stdout table, every measurement is APPENDED
+//! as one `syncopate.bench.v1` row to `BENCH_results.json` at the
+//! repository root (override the path with the `BENCH_RESULTS` env var) —
+//! the same append-only trajectory `perf record` and `exec --repeat
+//! --bench` feed, so the perf history accumulates across commits instead
+//! of being overwritten per run.
 
 use std::time::Instant;
 
@@ -47,33 +49,23 @@ impl Results {
         per
     }
 
-    /// Hand-rolled JSON (the offline build carries no serde): one object
-    /// per measurement, floats via `{}` (shortest round-trip repr).
-    fn to_json(&self) -> String {
-        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
-        let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"results\": [\n");
-        for (i, (label, per)) in self.0.iter().enumerate() {
-            out.push_str(&format!(
-                "    {{\"label\": \"{}\", \"ms_per_iter\": {}, \"iters_per_s\": {}}}{}\n",
-                esc(label),
-                per * 1e3,
-                1.0 / per,
-                if i + 1 < self.0.len() { "," } else { "" }
-            ));
-        }
-        out.push_str("  ]\n}\n");
-        out
-    }
-
     fn write(&self) {
         // cargo bench runs with cwd = rust/; the default lands the file at
         // the repository root next to ROADMAP.md
         let path = std::env::var("BENCH_RESULTS")
             .unwrap_or_else(|_| "../BENCH_results.json".to_string());
-        match std::fs::write(&path, self.to_json()) {
-            Ok(()) => println!("\nmachine-readable results -> {path}"),
-            Err(e) => eprintln!("\ncould not write {path}: {e}"),
+        for (label, per) in &self.0 {
+            let row = syncopate::perf::bench_row(
+                "hotpath",
+                &[("label", label.as_str())],
+                &[("ms_per_iter", per * 1e3), ("iters_per_s", 1.0 / per)],
+            );
+            if let Err(e) = syncopate::perf::append_bench_row(&path, &row) {
+                eprintln!("\ncould not append to {path}: {e}");
+                return;
+            }
         }
+        println!("\n{} trajectory rows -> {path}", self.0.len());
     }
 }
 

@@ -480,6 +480,11 @@ fn serve_user_plan(
         let report = crate::trace::analyze(&trace);
         // every traced request feeds the standing sim-vs-trace gauge
         report.record_divergence(sim_makespan_us);
+        // ... and the critical-path blame gauges (perf.critical_*_us):
+        // a live view of where sampled requests spend their makespan
+        if let Ok(path) = crate::perf::critical_path(&trace) {
+            crate::perf::record_gauges(&path);
+        }
         (stats, Some(report.stats()))
     } else {
         (crate::exec::run_with(&plan, &sched.tensors, &store, rt, opts)?, None)

@@ -225,6 +225,19 @@ pub(crate) fn apply_transfer_scratch(
     )
 }
 
+/// Plan op index of the `Issue` for `d` on its source rank, resolved by
+/// completion signal (plan-unique, so the scan is unambiguous). Anchors
+/// the transfer's trace event into the source rank's program order for
+/// the critical-path profiler. Only called on the traced path — the
+/// untraced hot path never pays the scan.
+fn issue_op_index(prep: &PreparedPlan, d: &TransferDesc) -> usize {
+    prep.plan.per_rank[d.src_rank]
+        .ops
+        .iter()
+        .position(|op| matches!(op, crate::codegen::PlanOp::Issue(t) if t.signal == d.signal))
+        .unwrap_or(usize::MAX)
+}
+
 /// [`apply_transfer_scratch`] with the span recorded on the source rank's
 /// comm lane (same event shape as [`apply_transfer_sunk`], so traces are
 /// engine-agnostic). `sink == None` is the untraced hot path: one dead
@@ -247,6 +260,7 @@ pub(crate) fn apply_transfer_scratch_sunk(
         kind: TraceKind::Transfer {
             src: d.src_rank,
             dst: d.dst_rank,
+            op: issue_op_index(prep, d),
             bytes: d.bytes,
             pieces: d.pieces,
             backend: d.backend,
@@ -278,6 +292,7 @@ pub(crate) fn apply_transfer_sunk(
         kind: TraceKind::Transfer {
             src: d.src_rank,
             dst: d.dst_rank,
+            op: issue_op_index(prep, d),
             bytes: d.bytes,
             pieces: d.pieces,
             backend: d.backend,

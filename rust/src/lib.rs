@@ -66,6 +66,7 @@ pub mod lowering;
 pub mod exec;
 pub mod metrics;
 pub mod obs;
+pub mod perf;
 pub mod pipeline;
 pub mod plan_io;
 pub mod reports;

@@ -25,9 +25,11 @@
 //!                 run's per-rank slack — stragglers get dedicated cores;
 //!                 --repeat N warm-replays the prepared plan N times on the
 //!                 atomic engine, feeding per-iteration makespans into the
-//!                 exec.iter_us histogram; --stats dumps the process
-//!                 telemetry snapshot as syncopate.stats.v1 JSON on exit;
-//!                 --flight arms the post-mortem dump path: a deadlock
+//!                 exec.iter_us histogram and the exec.repeat.* gauges;
+//!                 --bench [FILE] appends the repeat percentiles as a row to
+//!                 the BENCH_results.json trajectory; --stats dumps the
+//!                 process telemetry snapshot as syncopate.stats.v1 JSON on
+//!                 exit; --flight arms the post-mortem dump path: a deadlock
 //!                 verdict snapshots the flight rings to the file)
 //! syncopate trace show <FILE.json>
 //! syncopate trace overlap <FILE.json>
@@ -46,6 +48,32 @@
 //! syncopate stats watch <FILE.json> [--interval-ms N] [--count N]
 //! syncopate stats reset
 //! syncopate calibrate --from <FILE.json> --topo <name|FILE.topo> [-o FILE.topo]
+//! syncopate calibrate sweep --topo <name|FILE.topo> [--backend <name>] [--world N]
+//!                           [--repeat N] [-o FILE.topo]
+//!                    (microbench a size x SM grid of single transfers so the
+//!                     fitted curve's half_size becomes identifiable — the
+//!                     one parameter `calibrate --from` must keep from the
+//!                     prior; emits the updated .topo like calibrate does)
+//! syncopate perf critical <FILE.json> [--json] [--chrome FILE.json]
+//!                         [--what-if <name|FILE.topo>] [--what-if-comm-x F]
+//! syncopate perf record [--out FILE] [--cases a,b|all] [--world N] [--split K]
+//!                       [--nodes N] [--topo <name|FILE.topo>] [--repeat N]
+//!                       [--bench FILE]
+//! syncopate perf diff <A.json> <B.json> [--max-regress PCT]
+//! syncopate perf gate --baseline <FILE> [--max-regress PCT] [--repeat N]
+//!                     [--cases a,b|all] [--world N] [--topo <name|FILE.topo>]
+//!                    (the critical-path profiler + continuous perf tracking,
+//!                     DESIGN.md §19: `critical` reconstructs the dependency
+//!                     DAG of a captured trace, extracts the longest
+//!                     model-weighted path, and blames every microsecond of
+//!                     the wall makespan on compute / a comm backend / an
+//!                     exposed wait / scheduling gaps — --chrome re-exports
+//!                     the trace with critical spans painted red, --what-if
+//!                     bounds the speedup of a hypothetical comm curve;
+//!                     `record` times registry cases on the arena hot path
+//!                     and writes a noise-aware median+MAD baseline keyed by
+//!                     machine fingerprint; `diff`/`gate` flag significant
+//!                     regressions and exit non-zero when they find any)
 //! syncopate plan import --from <SOURCE> [--world N] [--out FILE.sched]
 //! syncopate plan show <FILE.sched>
 //! syncopate plan lint <FILE.sched>...
@@ -346,6 +374,13 @@ fn dispatch(args: &[String]) -> Result<()> {
                 // the flight rings to this file (DESIGN.md §18)
                 syncopate::obs::flight::set_dump_path(Some(path));
             }
+            // stamp run provenance into the flight recorder so a post-mortem
+            // dump names the same (world, fingerprint, case) as a trace would
+            syncopate::obs::flight::set_context(
+                params.world,
+                &hw::fingerprint(&case.topo),
+                &case_name,
+            );
             let rt = Runtime::open_default()?;
             let backend = rt.backend_name();
             let stats = match flags.get("trace") {
@@ -416,15 +451,49 @@ fn dispatch(args: &[String]) -> Result<()> {
                     hist.record_us(syncopate::obs::us_since(t0));
                 }
                 let s = hist.snap();
+                let (p50, p90, p99) =
+                    (s.percentile(0.50), s.percentile(0.90), s.percentile(0.99));
                 println!(
                     "repeat {repeat}x [atomic, arena-reused]: p50 {} p90 {} p99 {} max {} \
                      (n={})",
-                    syncopate::util::fmt_us(s.percentile(0.50)),
-                    syncopate::util::fmt_us(s.percentile(0.90)),
-                    syncopate::util::fmt_us(s.percentile(0.99)),
+                    syncopate::util::fmt_us(p50),
+                    syncopate::util::fmt_us(p90),
+                    syncopate::util::fmt_us(p99),
                     syncopate::util::fmt_us(s.max_us),
                     s.count
                 );
+                // the percentile row is data, not just console text: gauges
+                // land in the --stats snapshot, --bench in the trajectory
+                let labels = [("case", name.as_str())];
+                for (g, v) in [
+                    ("exec.repeat.p50_us", p50),
+                    ("exec.repeat.p90_us", p90),
+                    ("exec.repeat.p99_us", p99),
+                    ("exec.repeat.max_us", s.max_us),
+                    ("exec.repeat.count", s.count as f64),
+                ] {
+                    syncopate::obs::gauge_with(g, &labels).set(v);
+                }
+                if let Some(v) = flags.get("bench") {
+                    let path = if v == "true" { "BENCH_results.json" } else { v.as_str() };
+                    let row = syncopate::perf::bench_row(
+                        "exec-repeat",
+                        &[
+                            ("case", name.as_str()),
+                            ("topo", params.topo.as_str()),
+                            ("world", &params.world.to_string()),
+                        ],
+                        &[
+                            ("repeat", repeat as f64),
+                            ("p50_us", p50),
+                            ("p90_us", p90),
+                            ("p99_us", p99),
+                            ("max_us", s.max_us),
+                        ],
+                    );
+                    syncopate::perf::append_bench_row(path, &row)?;
+                    println!("bench row -> {path}");
+                }
             }
             if let Some(path) = flags.get("stats") {
                 let snap = syncopate::obs::registry().snapshot();
@@ -436,7 +505,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "trace" => trace_cmd(&bare),
         "flight" => flight_cmd(&bare, &flags),
         "stats" => stats_cmd(&bare, &flags),
-        "calibrate" => calibrate_cmd(&flags),
+        "calibrate" => calibrate_cmd(&bare, &flags),
+        "perf" => perf_cmd(&bare, &flags),
         "plan" => match bare.first().map(String::as_str) {
             Some("import") => plan_import(&flags),
             Some("show") => plan_show(&bare[1..]),
@@ -476,7 +546,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                 // flight rings to this file for post-mortem inspection
                 syncopate::obs::flight::set_dump_path(Some(path));
             }
-            let coord = Coordinator::spawn_pool(resolve_topo(&flags, world)?, workers);
+            let topo = resolve_topo(&flags, world)?;
+            syncopate::obs::flight::set_context(world, &hw::fingerprint(&topo), "serve-demo");
+            let coord = Coordinator::spawn_pool(topo, workers);
             println!(
                 "coordinator up (world {world}, {} workers); submitting demo batch...",
                 coord.workers()
@@ -932,7 +1004,13 @@ fn stats_cmd(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
 
 /// `calibrate --from TRACE --topo NAME -o FILE.topo`: fit measured curve
 /// rows from a trace into an updated `.topo` description (DESIGN.md §14).
-fn calibrate_cmd(flags: &HashMap<String, String>) -> Result<()> {
+/// `calibrate sweep` instead runs a dedicated size x SM microbenchmark so
+/// the curve's `half_size` becomes identifiable (see
+/// [`syncopate::trace::fit_curve_sweep`]).
+fn calibrate_cmd(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    if bare.first().map(String::as_str) == Some("sweep") {
+        return calibrate_sweep(flags);
+    }
     let Some(from) = flags.get("from") else {
         return Err(Error::Coordinator(
             "calibrate needs --from <trace.json> (captured by `exec --trace`)".into(),
@@ -985,6 +1063,406 @@ fn calibrate_cmd(flags: &HashMap<String, String>) -> Result<()> {
         }
         None => print!("{text}"),
     }
+    Ok(())
+}
+
+/// `calibrate sweep --topo SPEC [--backend B] [--world N] [--repeat N]
+/// [-o FILE]`: drive single-transfer microbenchmarks over a
+/// (bytes x comm-SMs) grid and fit the FULL bandwidth curve. A normal
+/// `calibrate --from` run keeps `half_size` from the prior — within one
+/// trace the ramp constant is confounded with issue overhead — but a grid
+/// that varies both transfer size and the SM allotment makes all three
+/// curve constants separately identifiable (`trace::fit_curve_sweep`).
+fn calibrate_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    use syncopate::chunk::{DType, Region, TensorTable};
+    use syncopate::codegen::{ExecutablePlan, PlanOp, RankProgram};
+    use syncopate::exec::BufferStore;
+    use syncopate::trace::{SweepSample, TraceKind};
+
+    let Some(spec) = flags.get("topo") else {
+        return Err(Error::Coordinator(
+            "calibrate sweep needs --topo <name|file.topo> (the shape to calibrate)".into(),
+        ));
+    };
+    let world = get_usize(flags, "world", 2)?;
+    if world < 2 {
+        return Err(Error::Coordinator("calibrate sweep needs --world >= 2".into()));
+    }
+    let repeat = get_usize(flags, "repeat", 5)?.max(1);
+    let backend = match flags.get("backend") {
+        Some(name) => backend_by_name(name)?,
+        None => BackendKind::TmaSpecialized,
+    };
+    let mut desc = hw::catalog::load_desc(spec)?;
+    let topo = desc.instantiate(world)?;
+    let prior = desc.arch.curve(backend);
+    let caps = desc.arch.caps(backend);
+    if caps.host_launched {
+        println!(
+            "note: {} is host-launched — per-launch cost and ramp are confounded, \
+             the sweep keeps half_size at its prior",
+            backend.name()
+        );
+    }
+    // measure rank 0 -> rank 1 (the link the fitted latency must match)
+    let lat_us = topo.link(0, 1)?.lat_us;
+
+    let rt = Runtime::open_default()?;
+    let opts = ExecOptions {
+        mode: ExecMode::Parallel,
+        wait_timeout: std::time::Duration::from_millis(
+            get_usize(flags, "timeout-ms", 10_000)?.max(1) as u64,
+        ),
+        sync: get_sync(flags)?,
+        pin_cores: None,
+    };
+
+    // grid: transfer sizes 64 KiB .. 4 MiB (rows of a [2048, 1024] f32
+    // tensor) x SM allotments up to the prior's saturation point
+    const COLS: usize = 1024;
+    const ROWS: usize = 2048;
+    let sizes = [16usize, 64, 256, 1024];
+    let mut sms_grid = if prior.sms_for_peak == 0 {
+        vec![0]
+    } else {
+        vec![
+            (prior.sms_for_peak / 4).max(1),
+            (prior.sms_for_peak / 2).max(1),
+            prior.sms_for_peak,
+        ]
+    };
+    sms_grid.dedup();
+
+    let mut samples = Vec::new();
+    for &rows in &sizes {
+        for &sms in &sms_grid {
+            // minimal two-rank plan: rank 0 issues the transfer, rank 1
+            // waits on its completion signal
+            let mut table = TensorTable::new();
+            let x = table.declare("x", &[ROWS, COLS], DType::F32)?;
+            let mut desc_op =
+                syncopate::testutil::transfer_desc(x, Region::rows(0, rows, COLS), 0, 0, 1, vec![], false);
+            desc_op.backend = backend;
+            desc_op.comm_sms = sms;
+            let bytes = desc_op.bytes;
+            let pieces = desc_op.pieces;
+            let mut per_rank = vec![RankProgram::default(); world];
+            per_rank[0].ops = vec![PlanOp::Issue(desc_op)];
+            per_rank[1].ops = vec![PlanOp::Wait(0)];
+            let plan = ExecutablePlan {
+                world,
+                per_rank,
+                num_signals: 1,
+                reserved_comm_sms: if caps.dedicated_sms { sms } else { 0 },
+            };
+            let mut store = BufferStore::new(world);
+            store.declare("x", &[ROWS, COLS])?;
+
+            let mut durs = Vec::with_capacity(repeat);
+            for i in 0..=repeat {
+                let (_, trace) =
+                    syncopate::exec::run_with_traced(&plan, &table, &store, &rt, &opts)?;
+                let dur = trace
+                    .events
+                    .iter()
+                    .find(|e| matches!(e.kind, TraceKind::Transfer { .. }))
+                    .map(syncopate::trace::TraceEvent::dur_us)
+                    .ok_or_else(|| {
+                        Error::Trace("sweep run produced no transfer event".into())
+                    })?;
+                if i > 0 {
+                    // run 0 is warm-up: first-touch page faults and thread
+                    // spin-up would otherwise skew the smallest sizes
+                    durs.push(dur);
+                }
+            }
+            let (median, _) = syncopate::perf::median_mad(&durs);
+            samples.push(SweepSample { bytes, pieces, comm_sms: sms, dur_us: median });
+        }
+    }
+
+    let (fitted, sse) = syncopate::trace::fit_curve_sweep(prior, caps, lat_us, &samples)?;
+    let mut t = syncopate::metrics::Table::new(
+        &format!("sweep calibration: {} ({} samples)", backend.name(), samples.len()),
+        &["peak GB/s", "half KiB", "issue us", "SMs@peak"],
+        "",
+    );
+    for (label, c) in [("prior", prior), ("fitted", fitted)] {
+        t.push_row(
+            label,
+            vec![c.peak_gbps, c.half_size / 1024.0, c.issue_us, c.sms_for_peak as f64],
+        );
+    }
+    println!("{}", t.render());
+    println!("fit residual: {sse:.3e} (sum of squared us over {} grid points)", samples.len());
+
+    desc.arch.set(backend, caps, fitted);
+    if !desc.name.ends_with("-cal") {
+        desc.name.push_str("-cal");
+    }
+    let text = hw::print_desc(&desc);
+    match flags.get("o").or_else(|| flags.get("out")) {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("swept topology `{}` -> {path}", desc.name);
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+/// `perf <critical|record|diff|gate>`: the critical-path profiler and the
+/// continuous perf-regression harness (DESIGN.md §19).
+fn perf_cmd(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    match bare.first().map(String::as_str) {
+        Some("critical") => perf_critical(&bare[1..], flags),
+        Some("record") => perf_record(flags),
+        Some("diff") => perf_diff(&bare[1..], flags),
+        Some("gate") => perf_gate(flags),
+        _ => Err(Error::Coordinator(
+            "perf needs a verb: critical <trace.json> | record | diff <a> <b> | gate \
+             --baseline <file> (see --help)"
+                .into(),
+        )),
+    }
+}
+
+fn get_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| Error::Coordinator(format!("--{key} needs a number, got `{v}`"))),
+    }
+}
+
+/// `perf critical <trace.json>`: reconstruct the trace's dependency DAG,
+/// extract the model-weighted longest path, blame the wall makespan.
+fn perf_critical(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let Some(path) = bare.first() else {
+        return Err(Error::Coordinator(
+            "perf critical needs a trace file (captured by `exec --trace`)".into(),
+        ));
+    };
+    let trace = load_trace(path)?;
+    let cp = syncopate::perf::critical_path(&trace)?;
+    if flags.contains_key("json") {
+        println!("{}", cp.to_json());
+    } else {
+        println!("{}", cp.table().render());
+        println!(
+            "path: {} ops, model-weighted length {} (wall {})",
+            cp.nodes.len(),
+            syncopate::util::fmt_us(cp.model_path_us),
+            syncopate::util::fmt_us(cp.wall_makespan_us)
+        );
+    }
+    if let Some(out) = flags.get("chrome") {
+        // re-export the trace with the critical spans painted for
+        // chrome://tracing (the `critical: true` arg + color override)
+        std::fs::write(out, syncopate::trace::to_chrome_json_overlay(&trace, &cp.keys()))?;
+        println!("critical-path overlay -> {out} ({} highlighted spans)", cp.nodes.len());
+    }
+    if let Some(spec) = flags.get("what-if") {
+        let (_, topo) = hw::catalog::resolve(spec, trace.world)?;
+        let w = cp.what_if_topo(&trace, &topo)?;
+        println!(
+            "what-if [{spec}]: critical comm repriced saves {}, makespan bound {} \
+             (speedup <= {:.3}x)",
+            syncopate::util::fmt_us(w.saved_us),
+            syncopate::util::fmt_us(w.bound_us),
+            w.speedup_bound
+        );
+    }
+    if let Some(v) = flags.get("what-if-comm-x") {
+        let scale = get_f64(flags, "what-if-comm-x", 1.0)?;
+        if scale < 0.0 {
+            return Err(Error::Coordinator(format!(
+                "--what-if-comm-x needs a scale >= 0, got `{v}`"
+            )));
+        }
+        let w = cp.what_if_scale(scale);
+        println!(
+            "what-if [comm x{scale}]: saves {}, makespan bound {} (speedup <= {:.3}x)",
+            syncopate::util::fmt_us(w.saved_us),
+            syncopate::util::fmt_us(w.bound_us),
+            w.speedup_bound
+        );
+    }
+    Ok(())
+}
+
+/// Time registry cases on the arena-reusing hot path and summarize each as
+/// a noise-aware baseline cell. Shared by `perf record` and `perf gate`.
+fn perf_measure(flags: &HashMap<String, String>) -> Result<syncopate::perf::Baseline> {
+    let repeat = get_usize(flags, "repeat", 7)?.max(2);
+    let cases_flag = flags.get("cases").map(String::as_str);
+    // an explicit case list fails loudly; the default "all" sweep skips
+    // cases the requested (world, topo) cannot build
+    let explicit = matches!(cases_flag, Some(v) if v != "all" && v != "true");
+    let names: Vec<String> = match cases_flag {
+        Some(v) if explicit => {
+            v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        _ => execases::CASES.iter().map(|s| s.name.to_string()).collect(),
+    };
+    let params = CaseParams {
+        world: get_usize(flags, "world", 4)?,
+        split: get_usize(flags, "split", 1)?,
+        seed: get_usize(flags, "seed", 42)? as u64,
+        nodes: get_usize(flags, "nodes", 2)?,
+        topo: flags.get("topo").cloned().unwrap_or_else(|| hw::catalog::DEFAULT.to_string()),
+    };
+    let opts = ExecOptions {
+        mode: ExecMode::Parallel,
+        wait_timeout: std::time::Duration::from_millis(
+            get_usize(flags, "timeout-ms", 10_000)?.max(1) as u64,
+        ),
+        sync: get_sync(flags)?,
+        pin_cores: None,
+    };
+    let rt = Runtime::open_default()?;
+    let mut base = syncopate::perf::Baseline::default();
+    for name in &names {
+        let case = match execases::build_case(name, &params) {
+            Ok(c) => c,
+            Err(e) if !explicit => {
+                println!("skip {name}: {e}");
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        let fingerprint = hw::fingerprint(&case.topo);
+        let prep = syncopate::exec::prepare(&case.plan, &case.sched.tensors)?;
+        let mut arena = syncopate::exec::PlanArena::new(&prep);
+        let mut durs = Vec::with_capacity(repeat);
+        for i in 0..=repeat {
+            // fresh data every iteration (runs mutate the buffers); run 0
+            // is warm-up so first-touch costs stay out of the median
+            let store = case.store.clone();
+            let t0 = std::time::Instant::now();
+            syncopate::exec::run_prepared_reusing(&prep, &mut arena, &store, &rt, &opts)?;
+            if i > 0 {
+                durs.push(syncopate::obs::us_since(t0));
+            }
+        }
+        let (median_us, mad_us) = syncopate::perf::median_mad(&durs);
+        base.insert(syncopate::perf::PerfCase {
+            case: name.clone(),
+            world: params.world,
+            engine: "parallel".into(),
+            fingerprint,
+            samples: durs.len(),
+            median_us,
+            mad_us,
+        });
+    }
+    if base.cases.is_empty() {
+        return Err(Error::Coordinator(
+            "perf: no case could be built for the requested world/topo".into(),
+        ));
+    }
+    Ok(base)
+}
+
+fn perf_baseline_table(base: &syncopate::perf::Baseline) -> syncopate::metrics::Table {
+    let mut t = syncopate::metrics::Table::new(
+        "Perf baseline (median over N hot-path iterations)",
+        &["median us", "MAD us", "samples"],
+        "us",
+    );
+    for c in &base.cases {
+        t.push_row(
+            &format!("{} w{} [{}]", c.case, c.world, c.engine),
+            vec![c.median_us, c.mad_us, c.samples as f64],
+        );
+    }
+    t
+}
+
+/// `perf record`: measure a fresh baseline, write it, and append one
+/// trajectory row per cell to `BENCH_results.json`.
+fn perf_record(flags: &HashMap<String, String>) -> Result<()> {
+    let base = perf_measure(flags)?;
+    println!("{}", perf_baseline_table(&base).render());
+    let out = flags.get("out").map(String::as_str).unwrap_or("BENCH_baseline.json");
+    std::fs::write(out, base.to_json())?;
+    println!("baseline ({} cells) -> {out}", base.cases.len());
+    let bench = match flags.get("bench").map(String::as_str) {
+        Some("true") | None => "BENCH_results.json",
+        Some(p) => p,
+    };
+    for c in &base.cases {
+        let row = syncopate::perf::bench_row(
+            "perf-record",
+            &[
+                ("case", c.case.as_str()),
+                ("engine", c.engine.as_str()),
+                ("fingerprint", c.fingerprint.as_str()),
+            ],
+            &[
+                ("world", c.world as f64),
+                ("median_us", c.median_us),
+                ("mad_us", c.mad_us),
+                ("samples", c.samples as f64),
+            ],
+        );
+        syncopate::perf::append_bench_row(bench, &row)?;
+    }
+    println!("{} trajectory rows -> {bench}", base.cases.len());
+    Ok(())
+}
+
+/// `perf diff <A> <B>`: compare two recorded baselines; exit non-zero when
+/// any cell regresses significantly.
+fn perf_diff(bare: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let (Some(a), Some(b)) = (bare.first(), bare.get(1)) else {
+        return Err(Error::Coordinator(
+            "perf diff needs two baseline files: perf diff <base.json> <new.json>".into(),
+        ));
+    };
+    let base = syncopate::perf::Baseline::from_json(&std::fs::read_to_string(a)?)?;
+    let fresh = syncopate::perf::Baseline::from_json(&std::fs::read_to_string(b)?)?;
+    let max = get_f64(flags, "max-regress", 5.0)?;
+    perf_judge(&base, &fresh, max)
+}
+
+/// `perf gate --baseline <FILE>`: re-measure now and compare against a
+/// recorded baseline — the CI entry point.
+fn perf_gate(flags: &HashMap<String, String>) -> Result<()> {
+    let Some(path) = flags.get("baseline") else {
+        return Err(Error::Coordinator(
+            "perf gate needs --baseline <file> (written by `perf record`)".into(),
+        ));
+    };
+    let base = syncopate::perf::Baseline::from_json(&std::fs::read_to_string(path)?)?;
+    let fresh = perf_measure(flags)?;
+    let max = get_f64(flags, "max-regress", 5.0)?;
+    perf_judge(&base, &fresh, max)
+}
+
+fn perf_judge(
+    base: &syncopate::perf::Baseline,
+    fresh: &syncopate::perf::Baseline,
+    max_regress_pct: f64,
+) -> Result<()> {
+    let rows = syncopate::perf::diff(base, fresh, max_regress_pct);
+    if rows.is_empty() {
+        println!("perf: no overlapping (case, world, engine) cells to compare");
+        return Ok(());
+    }
+    println!("{}", syncopate::perf::diff_table(&rows).render());
+    if rows.iter().any(|r| !r.fingerprint_match) {
+        println!("note: some cells ran on a different machine fingerprint (never flagged)");
+    }
+    let n = syncopate::perf::regressions(&rows);
+    if n > 0 {
+        return Err(Error::Coordinator(format!(
+            "{n} significant perf regression(s) beyond {max_regress_pct}% \
+             (delta > noise band 3*(MAD_a + MAD_b))"
+        )));
+    }
+    println!("perf: no significant regressions (threshold {max_regress_pct}%)");
     Ok(())
 }
 
@@ -1296,14 +1774,18 @@ fn print_ratios(t: &syncopate::metrics::Table) {
 fn print_usage() {
     println!(
         "syncopate — chunk-centric compute/communication overlap (paper reproduction)\n\
-         usage: syncopate <report|simulate|tune|exec|trace|flight|stats|calibrate|plan|topo|\
-         serve-demo> [flags]\n\
+         usage: syncopate <report|simulate|tune|exec|trace|flight|stats|calibrate|perf|plan|\
+         topo|serve-demo> [flags]\n\
          plan verbs: plan import --from <src>, plan show|lint|run <file.sched>\n\
          topo verbs: topo list, topo show|lint <name|file.topo>\n\
          exec cases: syncopate exec --case list   (add --trace FILE to capture, \
          --repeat N --stats FILE for telemetry)\n\
          tracing   : trace show|overlap <file.json>, trace diff <a.json> <b.json>; \
-         calibrate --from <file.json> --topo <name> -o <file.topo>\n\
+         calibrate --from <file.json> --topo <name> -o <file.topo>; \
+         calibrate sweep --topo <name> (microbench grid, fits half_size)\n\
+         perf      : perf critical <trace.json> [--chrome out.json] [--what-if topo], \
+         perf record [--out file], perf diff <a> <b>, perf gate --baseline <file> \
+         [--max-regress PCT]\n\
          telemetry : stats show [file.json] [--prom], stats check|watch <file.json>, \
          stats reset\n\
          post-mortem: flight dump [--deadlock-demo] [--out file.json] [--chrome file.json], \

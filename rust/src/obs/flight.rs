@@ -532,6 +532,15 @@ pub fn phase_end(_phase: &str) {}
 pub struct FlightDump {
     /// Why the dump was taken (`"deadlock"`, `"served-error"`, `"cli"`).
     pub reason: String,
+    /// World size of the run that recorded, from [`set_context`] (0 when
+    /// the process never stamped one — e.g. a bare unit test).
+    pub world: usize,
+    /// [`crate::hw::fingerprint`] of the machine shape, from
+    /// [`set_context`] (empty when unstamped).
+    pub fingerprint: String,
+    /// Registry-case provenance, from [`set_context`] (empty when the run
+    /// was not a registry case).
+    pub case: String,
     /// All published events, lane-major, oldest-first within each lane.
     pub events: Vec<FlightEvent>,
 }
@@ -565,14 +574,27 @@ fn drain_lane(lane: usize) -> Vec<FlightEvent> {
     out
 }
 
-/// Snapshot every lane into a [`FlightDump`].
+/// Snapshot every lane into a [`FlightDump`], stamped with the process
+/// run context (see [`set_context`]).
 pub fn snapshot(reason: &str) -> FlightDump {
     let mut events = Vec::new();
     for lane in 0..LANES {
         events.extend(drain_lane(lane));
     }
-    FlightDump { reason: reason.to_string(), events }
+    let (world, fingerprint, case) = CONTEXT.lock().unwrap().clone();
+    FlightDump { reason: reason.to_string(), world, fingerprint, case, events }
 }
+
+/// Run provenance stamped into every subsequent [`snapshot`]: the same
+/// (world, fingerprint, case) triple the trace exporter carries in its
+/// `syncopate` Chrome header, so a flight dump of a crashed run and the
+/// trace of a good one are attributable to the same machine + workload.
+/// The CLI stamps this once per `exec`/`serve-demo` invocation.
+pub fn set_context(world: usize, fingerprint: &str, case: &str) {
+    *CONTEXT.lock().unwrap() = (world, fingerprint.to_string(), case.to_string());
+}
+
+static CONTEXT: Mutex<(usize, String, String)> = Mutex::new((0, String::new(), String::new()));
 
 /// The last `k` published events recorded *by* `rank` (oldest-first).
 /// Other ranks sharing the lane modulo 16 are filtered out by the event's
@@ -649,6 +671,9 @@ pub fn to_json(dump: &FlightDump) -> String {
     let _ = writeln!(out, "{{");
     let _ = writeln!(out, "  \"schema\": \"{FLIGHT_SCHEMA}\",");
     let _ = writeln!(out, "  \"reason\": \"{}\",", crate::util::json_escape(&dump.reason));
+    let _ = writeln!(out, "  \"world\": {},", dump.world);
+    let _ = writeln!(out, "  \"fingerprint\": \"{}\",", crate::util::json_escape(&dump.fingerprint));
+    let _ = writeln!(out, "  \"case\": \"{}\",", crate::util::json_escape(&dump.case));
     let _ = writeln!(out, "  \"events\": [");
     for (i, e) in dump.events.iter().enumerate() {
         let _ = writeln!(
@@ -683,6 +708,12 @@ pub fn from_json(text: &str) -> Result<FlightDump> {
         .and_then(|r| r.as_str())
         .ok_or_else(|| bad("missing `reason`"))?
         .to_string();
+    // provenance fields are lenient: dumps written before they existed
+    // must stay readable
+    let world = v.get("world").and_then(|w| w.as_usize()).unwrap_or(0);
+    let fingerprint =
+        v.get("fingerprint").and_then(|f| f.as_str()).unwrap_or_default().to_string();
+    let case = v.get("case").and_then(|c| c.as_str()).unwrap_or_default().to_string();
     let evs = v.get("events").and_then(|e| e.as_arr()).ok_or_else(|| bad("missing `events`"))?;
     let mut events = Vec::with_capacity(evs.len());
     for (i, e) in evs.iter().enumerate() {
@@ -722,7 +753,7 @@ pub fn from_json(text: &str) -> Result<FlightDump> {
             req: req as u32,
         });
     }
-    Ok(FlightDump { reason, events })
+    Ok(FlightDump { reason, world, fingerprint, case, events })
 }
 
 /// Validate a flight dump document; returns its event count.
@@ -741,10 +772,21 @@ pub fn to_chrome_json(dump: &FlightDump) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "{{");
     let _ = writeln!(out, "  \"displayTimeUnit\": \"ms\",");
+    // the same header block as `exec --trace` Chrome exports (one shared
+    // helper), so downstream tooling finds world/fingerprint/case in one
+    // place regardless of which recorder wrote the file
+    let mut meta = Vec::new();
+    if !dump.case.is_empty() {
+        meta.push(("registry-case".to_string(), dump.case.clone()));
+    }
+    let extra = [
+        ("flight", "true".to_string()),
+        ("reason", format!("\"{}\"", crate::util::json_escape(&dump.reason))),
+    ];
     let _ = writeln!(
         out,
-        "  \"syncopate\": {{\"version\": 1, \"flight\": true, \"reason\": \"{}\"}},",
-        crate::util::json_escape(&dump.reason)
+        "{},",
+        crate::trace::syncopate_header(dump.world, &dump.fingerprint, &meta, &extra)
     );
     let _ = writeln!(out, "  \"traceEvents\": [");
     let mut lines = Vec::new();
@@ -873,6 +915,9 @@ mod tests {
     fn json_round_trip_is_exact() {
         let dump = FlightDump {
             reason: "unit \"quoted\"".to_string(),
+            world: 4,
+            fingerprint: "deadbeefdeadbeef".to_string(),
+            case: "tp-block".to_string(),
             events: vec![
                 FlightEvent { t_us: 5, code: OP_ISSUE, rank: 0, b: 0, a: 7, req: 0 },
                 FlightEvent { t_us: 9, code: PARK, rank: 3, b: 0, a: ANY_SIGNAL, req: 12 },
@@ -891,6 +936,11 @@ mod tests {
         assert_eq!(from_json(&json).unwrap(), dump);
         // the document parses under the crate's own JSON reader
         crate::trace::json::parse(&json).unwrap();
+        // dumps written before the provenance fields existed stay readable
+        let legacy = "{\"schema\": \"syncopate.flight.v1\", \"reason\": \"old\", \
+             \"events\": []}";
+        let d = from_json(legacy).unwrap();
+        assert_eq!((d.world, d.fingerprint.as_str(), d.case.as_str()), (0, "", ""));
     }
 
     #[test]
@@ -911,6 +961,9 @@ mod tests {
     fn chrome_export_is_valid_json_with_thread_names() {
         let dump = FlightDump {
             reason: "unit".to_string(),
+            world: 2,
+            fingerprint: "deadbeefdeadbeef".to_string(),
+            case: "tp-block".to_string(),
             events: vec![
                 FlightEvent { t_us: 1, code: PHASE_BEGIN, rank: CTRL_RANK, b: 0, a: 0, req: 3 },
                 FlightEvent { t_us: 2, code: SIGNAL_SET, rank: 2, b: 0, a: 4, req: 3 },
@@ -922,6 +975,12 @@ mod tests {
         let evs = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
         // 2 thread-name metadata + 3 events
         assert_eq!(evs.len(), 5);
+        // the shared syncopate header passes the trace exporter's own
+        // header check and carries the stamped provenance
+        let (world, fp) = crate::trace::check_chrome_header(&chrome).unwrap();
+        assert_eq!((world, fp.as_str()), (2, "deadbeefdeadbeef"));
+        assert!(chrome.contains("\"flight\": true"), "{chrome}");
+        assert!(chrome.contains("\"registry-case\": \"tp-block\""), "{chrome}");
         assert!(chrome.contains("\"coordinator\""));
         assert!(chrome.contains("\"rank 2\""));
         assert!(chrome.contains("\"ph\": \"B\""));
@@ -933,6 +992,9 @@ mod tests {
     fn render_summarizes_per_rank() {
         let dump = FlightDump {
             reason: "unit".to_string(),
+            world: 0,
+            fingerprint: String::new(),
+            case: String::new(),
             events: vec![
                 FlightEvent { t_us: 1, code: OP_ISSUE, rank: 1, b: 0, a: 0, req: 0 },
                 FlightEvent { t_us: 2, code: OP_APPLY, rank: 1, b: 3, a: 0, req: 0 },

@@ -1,0 +1,408 @@
+//! Noise-aware perf baselines and the regression gate.
+//!
+//! `perf record` runs every registry case N times per engine through the
+//! reusable hot path and summarizes each (case, world, engine) cell as
+//! **median + MAD** — robust statistics, because wall-clock samples on a
+//! shared machine are contaminated by one-sided outliers that would drag
+//! a mean/stddev summary around. Baselines are `syncopate.perf.v1` JSON
+//! keyed by [`crate::hw::fingerprint`].
+//!
+//! The gate rule (`perf diff` / `perf gate`) flags a cell as a regression
+//! only when ALL of:
+//! 1. the hardware fingerprints match (comparing across machines is a
+//!    topology question, not a regression),
+//! 2. the relative slowdown exceeds the threshold (`--max-regress`), and
+//! 3. the absolute delta clears the noise band `3·(MAD_base + MAD_new)` —
+//!    a change smaller than the run-to-run scatter is not evidence.
+//!
+//! Every recording also appends one row to the repo-root
+//! `BENCH_results.json` trajectory (`syncopate.bench.v1`, append-only):
+//! the long-term history CI artifacts accumulate, with `perf record`,
+//! `exec --repeat --bench`, and the hotpath bench all feeding the same
+//! file through [`append_bench_row`].
+
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+use crate::trace::json::{self, Json};
+use crate::util::json_escape as esc;
+
+pub const PERF_SCHEMA: &str = "syncopate.perf.v1";
+pub const BENCH_SCHEMA: &str = "syncopate.bench.v1";
+
+/// One baseline cell: robust summary of N samples of one case on one
+/// engine at one world size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfCase {
+    pub case: String,
+    pub world: usize,
+    pub engine: String,
+    /// [`crate::hw::fingerprint`] of the topology the samples ran on.
+    pub fingerprint: String,
+    pub samples: usize,
+    pub median_us: f64,
+    pub mad_us: f64,
+}
+
+/// A recorded baseline: one cell per (case, world, engine).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Baseline {
+    pub cases: Vec<PerfCase>,
+}
+
+/// Median and median-absolute-deviation of a sample set (`(0, 0)` for an
+/// empty set).
+pub fn median_mad(samples: &[f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let med = median_of(samples.to_vec());
+    let dev: Vec<f64> = samples.iter().map(|s| (s - med).abs()).collect();
+    (med, median_of(dev))
+}
+
+fn median_of(mut v: Vec<f64>) -> f64 {
+    v.sort_by(f64::total_cmp);
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+impl Baseline {
+    /// Insert a cell, replacing any existing (case, world, engine) entry;
+    /// kept sorted so serialized baselines diff cleanly.
+    pub fn insert(&mut self, c: PerfCase) {
+        match self
+            .cases
+            .iter_mut()
+            .find(|e| e.case == c.case && e.world == c.world && e.engine == c.engine)
+        {
+            Some(e) => *e = c,
+            None => self.cases.push(c),
+        }
+        self.cases
+            .sort_by(|a, b| (&a.case, a.world, &a.engine).cmp(&(&b.case, b.world, &b.engine)));
+    }
+
+    pub fn find(&self, case: &str, world: usize, engine: &str) -> Option<&PerfCase> {
+        self.cases
+            .iter()
+            .find(|e| e.case == case && e.world == world && e.engine == engine)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = format!("{{\n  \"schema\": \"{PERF_SCHEMA}\",\n  \"cases\": [\n");
+        let rows: Vec<String> = self
+            .cases
+            .iter()
+            .map(|c| {
+                format!(
+                    "    {{\"case\": \"{}\", \"world\": {}, \"engine\": \"{}\", \
+                     \"fingerprint\": \"{}\", \"samples\": {}, \"median_us\": {}, \
+                     \"mad_us\": {}}}",
+                    esc(&c.case),
+                    c.world,
+                    esc(&c.engine),
+                    esc(&c.fingerprint),
+                    c.samples,
+                    c.median_us,
+                    c.mad_us
+                )
+            })
+            .collect();
+        out.push_str(&rows.join(",\n"));
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    pub fn from_json(text: &str) -> Result<Baseline> {
+        let doc = json::parse(text)?;
+        let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != PERF_SCHEMA {
+            return Err(Error::Trace(format!(
+                "not a {PERF_SCHEMA} baseline (schema `{schema}`)"
+            )));
+        }
+        let cells = doc
+            .get("cases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Trace("baseline: missing `cases` array".into()))?;
+        let mut out = Baseline::default();
+        for (i, c) in cells.iter().enumerate() {
+            let field = |k: &str| {
+                c.get(k)
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: missing `{k}`")))
+            };
+            out.insert(PerfCase {
+                case: field("case")?
+                    .as_str()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `case`")))?
+                    .to_string(),
+                world: field("world")?
+                    .as_usize()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `world`")))?,
+                engine: field("engine")?
+                    .as_str()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `engine`")))?
+                    .to_string(),
+                fingerprint: field("fingerprint")?
+                    .as_str()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `fingerprint`")))?
+                    .to_string(),
+                samples: field("samples")?
+                    .as_usize()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `samples`")))?,
+                median_us: field("median_us")?
+                    .as_f64()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `median_us`")))?,
+                mad_us: field("mad_us")?
+                    .as_f64()
+                    .ok_or_else(|| Error::Trace(format!("baseline case {i}: bad `mad_us`")))?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// One compared cell of `perf diff`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    pub case: String,
+    pub world: usize,
+    pub engine: String,
+    pub base_us: f64,
+    pub new_us: f64,
+    /// Relative change in percent (positive = slower).
+    pub delta_pct: f64,
+    /// Noise band `3·(MAD_base + MAD_new)` in µs.
+    pub noise_us: f64,
+    pub fingerprint_match: bool,
+    pub significant: bool,
+}
+
+/// Compare baseline `b` (new) against `a` (base); cells present in only
+/// one baseline are skipped (nothing to compare).
+pub fn diff(a: &Baseline, b: &Baseline, max_regress_pct: f64) -> Vec<DiffRow> {
+    let mut rows = Vec::new();
+    for n in &b.cases {
+        let Some(base) = a.find(&n.case, n.world, &n.engine) else {
+            continue;
+        };
+        let delta = n.median_us - base.median_us;
+        let delta_pct = if base.median_us > 0.0 { 100.0 * delta / base.median_us } else { 0.0 };
+        let noise_us = 3.0 * (base.mad_us + n.mad_us);
+        let fingerprint_match = base.fingerprint == n.fingerprint;
+        rows.push(DiffRow {
+            case: n.case.clone(),
+            world: n.world,
+            engine: n.engine.clone(),
+            base_us: base.median_us,
+            new_us: n.median_us,
+            delta_pct,
+            noise_us,
+            fingerprint_match,
+            significant: fingerprint_match && delta_pct > max_regress_pct && delta > noise_us,
+        });
+    }
+    rows
+}
+
+/// Number of significant regressions — the gate's exit code driver.
+pub fn regressions(rows: &[DiffRow]) -> usize {
+    rows.iter().filter(|r| r.significant).count()
+}
+
+/// Render a diff as a table (`regress` column: 1 = significant).
+pub fn diff_table(rows: &[DiffRow]) -> Table {
+    let mut t = Table::new(
+        "Perf diff (median us; noise band = 3*(MAD_a + MAD_b))",
+        &["base us", "new us", "delta %", "noise us", "regress"],
+        "us | %",
+    );
+    for r in rows {
+        t.push_row(
+            &format!("{} w{} [{}]", r.case, r.world, r.engine),
+            vec![r.base_us, r.new_us, r.delta_pct, r.noise_us, r.significant as usize as f64],
+        );
+    }
+    t
+}
+
+/// Render one `BENCH_results.json` row: a flat object of the tool name,
+/// string labels, and numeric fields (non-finite values become `null`).
+pub fn bench_row(tool: &str, labels: &[(&str, &str)], fields: &[(&str, f64)]) -> String {
+    let mut parts = vec![format!("\"tool\": \"{}\"", esc(tool))];
+    for (k, v) in labels {
+        parts.push(format!("\"{}\": \"{}\"", esc(k), esc(v)));
+    }
+    for (k, v) in fields {
+        if v.is_finite() {
+            parts.push(format!("\"{}\": {v}", esc(k)));
+        } else {
+            parts.push(format!("\"{}\": null", esc(k)));
+        }
+    }
+    format!("{{{}}}", parts.join(", "))
+}
+
+/// Append one row to the `syncopate.bench.v1` trajectory at `path`,
+/// creating the file when missing. A file in any other format (including
+/// the pre-v1 overwrite-style hotpath dump) is replaced by a fresh
+/// trajectory — the old content was a snapshot, not a history.
+pub fn append_bench_row(path: &str, row: &str) -> Result<()> {
+    let fresh = |row: &str| {
+        format!(
+            "{{\n  \"bench\": \"syncopate\",\n  \"schema\": \"{BENCH_SCHEMA}\",\n  \"runs\": [\n    {row}\n  ]\n}}\n"
+        )
+    };
+    let spliced = match std::fs::read_to_string(path) {
+        Ok(old) if old.contains(BENCH_SCHEMA) => match old.rfind("\n  ]\n}") {
+            Some(at) => {
+                let mut text = old;
+                text.insert_str(at, &format!(",\n    {row}"));
+                // a malformed hand-edited file must not poison the splice
+                if json::parse(&text).is_ok() {
+                    text
+                } else {
+                    fresh(row)
+                }
+            }
+            None => fresh(row),
+        },
+        _ => fresh(row),
+    };
+    if let Err(e) = json::parse(&spliced) {
+        return Err(Error::Io(format!("bench row is not valid JSON: {e} — row: {row}")));
+    }
+    std::fs::write(path, &spliced).map_err(|e| Error::Io(format!("write {path}: {e}")))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(case: &str, median: f64, mad: f64) -> PerfCase {
+        PerfCase {
+            case: case.into(),
+            world: 4,
+            engine: "parallel".into(),
+            fingerprint: "fp0".into(),
+            samples: 9,
+            median_us: median,
+            mad_us: mad,
+        }
+    }
+
+    #[test]
+    fn median_and_mad() {
+        assert_eq!(median_mad(&[]), (0.0, 0.0));
+        assert_eq!(median_mad(&[5.0]), (5.0, 0.0));
+        // odd: median 3; deviations [2,1,0,1,2] -> MAD 1
+        assert_eq!(median_mad(&[1.0, 2.0, 3.0, 4.0, 5.0]), (3.0, 1.0));
+        // even: median 2.5; deviations [1.5,0.5,0.5,1.5] -> MAD 1
+        assert_eq!(median_mad(&[4.0, 1.0, 3.0, 2.0]), (2.5, 1.0));
+        // a single huge outlier barely moves either statistic
+        let (m, d) = median_mad(&[10.0, 10.0, 10.0, 10.0, 1e6]);
+        assert_eq!(m, 10.0);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn baseline_round_trips_and_replaces() {
+        let mut b = Baseline::default();
+        b.insert(cell("tp-block", 100.0, 2.0));
+        b.insert(cell("ag-gemm", 50.0, 1.0));
+        b.insert(cell("tp-block", 90.0, 2.0)); // replaces, not duplicates
+        assert_eq!(b.cases.len(), 2);
+        assert_eq!(b.cases[0].case, "ag-gemm", "kept sorted");
+        assert_eq!(b.find("tp-block", 4, "parallel").unwrap().median_us, 90.0);
+        assert!(b.find("tp-block", 8, "parallel").is_none());
+
+        let back = Baseline::from_json(&b.to_json()).unwrap();
+        assert_eq!(back, b);
+        assert!(Baseline::from_json("{\"schema\": \"bogus\", \"cases\": []}").is_err());
+        assert!(Baseline::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn doubled_median_is_flagged() {
+        let mut a = Baseline::default();
+        a.insert(cell("tp-block", 100.0, 2.0));
+        let mut b = Baseline::default();
+        b.insert(cell("tp-block", 200.0, 2.0)); // injected 2x slowdown
+        let rows = diff(&a, &b, 10.0);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].significant, "{rows:?}");
+        assert_eq!(rows[0].delta_pct, 100.0);
+        assert_eq!(regressions(&rows), 1);
+        let t = diff_table(&rows).render();
+        assert!(t.contains("tp-block w4 [parallel]"), "{t}");
+    }
+
+    #[test]
+    fn identical_baselines_report_nothing() {
+        let mut a = Baseline::default();
+        a.insert(cell("tp-block", 100.0, 2.0));
+        a.insert(cell("ag-gemm", 50.0, 1.0));
+        let rows = diff(&a, &a.clone(), 5.0);
+        assert_eq!(regressions(&rows), 0, "{rows:?}");
+    }
+
+    #[test]
+    fn noise_band_and_fingerprint_guard() {
+        let mut a = Baseline::default();
+        a.insert(cell("tp-block", 100.0, 10.0));
+        // +20% but within 3*(10+10)=60us of noise: not significant
+        let mut b = Baseline::default();
+        b.insert(cell("tp-block", 120.0, 10.0));
+        assert_eq!(regressions(&diff(&a, &b, 5.0)), 0);
+        // same delta with tight MADs: significant
+        let mut a2 = Baseline::default();
+        a2.insert(cell("tp-block", 100.0, 1.0));
+        let mut b2 = Baseline::default();
+        b2.insert(cell("tp-block", 120.0, 1.0));
+        assert_eq!(regressions(&diff(&a2, &b2, 5.0)), 1);
+        // different machine: never significant
+        let mut b3 = Baseline::default();
+        let mut moved = cell("tp-block", 300.0, 1.0);
+        moved.fingerprint = "fp-other".into();
+        b3.insert(moved);
+        let rows = diff(&a2, &b3, 5.0);
+        assert!(!rows[0].fingerprint_match);
+        assert_eq!(regressions(&rows), 0);
+        // faster is never a regression
+        let mut b4 = Baseline::default();
+        b4.insert(cell("tp-block", 50.0, 1.0));
+        assert_eq!(regressions(&diff(&a2, &b4, 5.0)), 0);
+    }
+
+    #[test]
+    fn bench_rows_append_and_survive_garbage() {
+        let path = std::env::temp_dir().join(format!("syncopate-bench-{}.json", std::process::id()));
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+
+        let row1 = bench_row("perf-record", &[("case", "tp-block")], &[("median_us", 12.5)]);
+        append_bench_row(path, &row1).unwrap();
+        let row2 = bench_row("exec-repeat", &[("case", "ag-gemm")], &[("p99_us", f64::NAN)]);
+        append_bench_row(path, &row2).unwrap();
+
+        let doc = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("tool").and_then(Json::as_str), Some("perf-record"));
+        assert_eq!(runs[0].get("median_us").and_then(Json::as_f64), Some(12.5));
+        assert_eq!(runs[1].get("p99_us"), Some(&Json::Null), "non-finite -> null");
+
+        // a legacy overwrite-format file is replaced, not corrupted
+        std::fs::write(path, "{\"bench\": \"hotpath\", \"results\": []}").unwrap();
+        append_bench_row(path, &row1).unwrap();
+        let doc = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(doc.get("runs").and_then(Json::as_arr).unwrap().len(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+}

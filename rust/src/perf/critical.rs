@@ -1,0 +1,659 @@
+//! Critical-path extraction over captured traces.
+//!
+//! The dependency DAG is rebuilt *structurally* from timestamp-free event
+//! identity: every non-kernel event is a node (kernel spans nest inside
+//! their compute segment and would double-bill), consecutive plan ops on
+//! one rank are program-order edges, and the transfer that raises a
+//! signal precedes every wait on that signal. Node weights for the
+//! longest-path extraction come from event CONTENT only — the reference
+//! [`crate::backend::curve`] for transfers, a nominal compute rate for
+//! segments, zero for waits — so both exec engines extract the *same*
+//! critical op sequence from their traces of one prepared plan. Measured
+//! timestamps of a path chosen from measured timestamps could never be
+//! engine-stable: the sequential engine serializes everything, so its
+//! measured critical path is the whole program.
+//!
+//! Blame then projects THIS run's measured timestamps onto the structural
+//! path with a cursor sweep: walking the path in order, time between the
+//! cursor and a node's start is a *scheduling gap*, the node's span beyond
+//! the cursor is *work* blamed to its kind (compute / comm backend /
+//! wait), and the tail after the last node is scheduling again. The three
+//! buckets plus gaps sum to the wall makespan exactly (up to f64
+//! rounding) — sequential traces honestly show most of the makespan as
+//! scheduling gap, because nothing in a serialized run is on the modeled
+//! dependency-critical chain for its full duration.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::backend::{self, BackendKind};
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+use crate::topo::Topology;
+use crate::trace::{Trace, TraceKind};
+use crate::util::json_escape as esc;
+
+/// Nominal device compute rate (TFLOPS) for the model weights. Only
+/// *relative* weights matter for path extraction; this constant just puts
+/// compute on the same µs axis as the reference transfer curves.
+pub const NOMINAL_TFLOPS: f64 = 100.0;
+
+/// What a critical node's measured span is blamed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlameKind {
+    Compute,
+    Comm,
+    Wait,
+}
+
+impl BlameKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BlameKind::Compute => "compute",
+            BlameKind::Comm => "comm",
+            BlameKind::Wait => "wait",
+        }
+    }
+}
+
+/// One node of the extracted critical path, in path order.
+#[derive(Debug, Clone)]
+pub struct CriticalNode {
+    /// Index into the source trace's `events`.
+    pub event: usize,
+    /// Timestamp-free identity ([`crate::trace::TraceEvent::key`]) — the
+    /// engine-stable sequence tests compare, and the overlay export's
+    /// highlight set.
+    pub key: String,
+    pub rank: usize,
+    pub op: usize,
+    pub kind: BlameKind,
+    /// Comm backend for transfer nodes.
+    pub backend: Option<BackendKind>,
+    /// Model weight used for extraction (µs, deterministic).
+    pub weight_us: f64,
+    /// Measured span (µs, this trace).
+    pub start_us: f64,
+    pub end_us: f64,
+    /// Cursor-sweep scheduling gap blamed immediately before this node.
+    pub sched_us: f64,
+    /// Cursor-sweep span blamed to the node itself.
+    pub work_us: f64,
+}
+
+/// Blame decomposition of the wall makespan (all µs; sums to the
+/// makespan by construction).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Blame {
+    pub compute_us: f64,
+    pub comm_us: f64,
+    pub wait_us: f64,
+    /// Scheduling gaps: makespan time when the modeled critical chain was
+    /// not running (engine noise, serialization, off-path stragglers).
+    pub sched_us: f64,
+    /// `comm_us` split by backend, in [`BackendKind::index`] order.
+    pub per_backend: Vec<(BackendKind, f64)>,
+}
+
+impl Blame {
+    pub fn total_us(&self) -> f64 {
+        self.compute_us + self.comm_us + self.wait_us + self.sched_us
+    }
+}
+
+/// A completed critical-path extraction.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    /// Measured wall makespan (latest end − earliest start), the quantity
+    /// blame decomposes.
+    pub wall_makespan_us: f64,
+    /// Total model weight of the extracted path (µs on the model axis —
+    /// comparable between traces of one plan, not to the measured wall).
+    pub model_path_us: f64,
+    pub nodes: Vec<CriticalNode>,
+    pub blame: Blame,
+}
+
+/// Deterministic model weight (µs) for one event — content only, no
+/// timestamps (see module doc).
+fn model_weight(kind: &TraceKind) -> f64 {
+    match kind {
+        TraceKind::Transfer { bytes, pieces, backend, comm_sms, .. } => {
+            let c = backend::curve(*backend);
+            let host = backend::caps(*backend).host_launched;
+            let launches = if host { (*pieces).max(1) } else { 1 } as f64;
+            let x = (*bytes as f64 / launches).max(1.0);
+            let r = if c.sms_for_peak == 0 {
+                1.0
+            } else {
+                (*comm_sms as f64 / c.sms_for_peak as f64).clamp(1e-3, 1.0)
+            };
+            // unclamped reference curve: no link is available (or needed —
+            // only relative weights steer the extraction)
+            let bw = c.peak_gbps * (x / (x + c.half_size)) * r;
+            launches * c.issue_us + *bytes as f64 / (bw * 1e3)
+        }
+        TraceKind::Compute { flops, .. } => flops / (NOMINAL_TFLOPS * 1e6),
+        TraceKind::Wait { .. } | TraceKind::Kernel { .. } => 0.0,
+    }
+}
+
+/// Extract the critical path of a captured trace (see module doc).
+///
+/// Errors only when the reconstructed dependency graph has a cycle — a
+/// trace no execution could have produced.
+pub fn critical_path(trace: &Trace) -> Result<CriticalPath> {
+    // -- nodes: non-kernel events, keyed by (rank, plan-op index) --------
+    let mut ev_idx: Vec<usize> = Vec::new();
+    let mut order: Vec<(usize, usize)> = Vec::new();
+    for (i, ev) in trace.events.iter().enumerate() {
+        let (rank, op) = match &ev.kind {
+            TraceKind::Kernel { .. } => continue,
+            TraceKind::Transfer { src, op, .. } => (*src, *op),
+            TraceKind::Wait { rank, op, .. } => (*rank, *op),
+            TraceKind::Compute { rank, op, .. } => (*rank, *op),
+        };
+        ev_idx.push(i);
+        order.push((rank, op));
+    }
+    let n = ev_idx.len();
+
+    // -- edges -----------------------------------------------------------
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut by_rank: HashMap<usize, Vec<usize>> = HashMap::new();
+    for v in 0..n {
+        by_rank.entry(order[v].0).or_default().push(v);
+    }
+    for chain in by_rank.values_mut() {
+        chain.sort_by_key(|&v| (order[v].1, ev_idx[v]));
+        for w in chain.windows(2) {
+            preds[w[1]].push(w[0]);
+        }
+    }
+    let mut producer: HashMap<usize, usize> = HashMap::new();
+    for v in 0..n {
+        if let TraceKind::Transfer { signal, .. } = &trace.events[ev_idx[v]].kind {
+            producer.insert(*signal, v);
+        }
+    }
+    for v in 0..n {
+        if let TraceKind::Wait { signal, .. } = &trace.events[ev_idx[v]].kind {
+            // waits on internal call signals have no transfer producer —
+            // those are gated by program order alone
+            if let Some(&p) = producer.get(signal) {
+                if p != v {
+                    preds[v].push(p);
+                }
+            }
+        }
+    }
+
+    // -- deterministic topological order (Kahn, min-(rank,op) heap) ------
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for v in 0..n {
+        for &p in &preds[v] {
+            succs[p].push(v);
+            indeg[v] += 1;
+        }
+    }
+    let mut heap = BinaryHeap::new();
+    for v in 0..n {
+        if indeg[v] == 0 {
+            heap.push(Reverse((order[v], v)));
+        }
+    }
+    let mut topo_order = Vec::with_capacity(n);
+    while let Some(Reverse((_, v))) = heap.pop() {
+        topo_order.push(v);
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                heap.push(Reverse((order[s], s)));
+            }
+        }
+    }
+    if topo_order.len() < n {
+        return Err(Error::Trace(format!(
+            "trace dependency graph has a cycle ({} of {n} events orderable) — \
+             no execution can have produced this trace",
+            topo_order.len()
+        )));
+    }
+
+    // -- longest model-weighted path (deterministic tie-breaks) ----------
+    let weight: Vec<f64> = ev_idx.iter().map(|&i| model_weight(&trace.events[i].kind)).collect();
+    let mut best = vec![0.0f64; n];
+    let mut choice: Vec<Option<usize>> = vec![None; n];
+    for &v in &topo_order {
+        let mut c: Option<usize> = None;
+        for &p in &preds[v] {
+            let replace = match c {
+                None => true,
+                Some(cur) => {
+                    best[p] > best[cur]
+                        || (best[p] == best[cur] && (order[p], p) < (order[cur], cur))
+                }
+            };
+            if replace {
+                c = Some(p);
+            }
+        }
+        best[v] = weight[v] + c.map_or(0.0, |p| best[p]);
+        choice[v] = c;
+    }
+    let end = (0..n).max_by(|&a, &b| {
+        best[a]
+            .total_cmp(&best[b])
+            // ties: prefer the smaller (rank, op) — Reverse flips it so
+            // max_by still lands there
+            .then_with(|| (Reverse(order[a]), Reverse(a)).cmp(&(Reverse(order[b]), Reverse(b))))
+    });
+    let mut path = Vec::new();
+    let mut cur = end;
+    while let Some(v) = cur {
+        path.push(v);
+        cur = choice[v];
+    }
+    path.reverse();
+
+    // -- blame: project measured time onto the structural path -----------
+    let (t0, t_end) = if trace.events.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (
+            trace.events.iter().map(|e| e.start_us).fold(f64::INFINITY, f64::min),
+            trace.events.iter().map(|e| e.end_us).fold(f64::NEG_INFINITY, f64::max),
+        )
+    };
+    let wall = (t_end - t0).max(0.0);
+    let mut cursor = t0;
+    let mut blame = Blame::default();
+    let mut nodes = Vec::with_capacity(path.len());
+    for &v in &path {
+        let ev = &trace.events[ev_idx[v]];
+        let gap = (ev.start_us - cursor).max(0.0);
+        let work = (ev.end_us - ev.start_us.max(cursor)).max(0.0);
+        cursor = cursor.max(ev.end_us);
+        blame.sched_us += gap;
+        let (kind, backend) = match &ev.kind {
+            TraceKind::Transfer { backend, .. } => (BlameKind::Comm, Some(*backend)),
+            TraceKind::Wait { .. } => (BlameKind::Wait, None),
+            TraceKind::Compute { .. } => (BlameKind::Compute, None),
+            TraceKind::Kernel { .. } => unreachable!("kernels are not DAG nodes"),
+        };
+        match kind {
+            BlameKind::Compute => blame.compute_us += work,
+            BlameKind::Wait => blame.wait_us += work,
+            BlameKind::Comm => {
+                blame.comm_us += work;
+                let b = backend.expect("comm nodes carry a backend");
+                match blame.per_backend.iter_mut().find(|(k, _)| *k == b) {
+                    Some((_, t)) => *t += work,
+                    None => blame.per_backend.push((b, work)),
+                }
+            }
+        }
+        nodes.push(CriticalNode {
+            event: ev_idx[v],
+            key: ev.key(),
+            rank: order[v].0,
+            op: order[v].1,
+            kind,
+            backend,
+            weight_us: weight[v],
+            start_us: ev.start_us,
+            end_us: ev.end_us,
+            sched_us: gap,
+            work_us: work,
+        });
+    }
+    blame.sched_us += (t_end - cursor).max(0.0);
+    blame.per_backend.sort_by_key(|(b, _)| b.index());
+
+    Ok(CriticalPath {
+        wall_makespan_us: wall,
+        model_path_us: end.map_or(0.0, |v| best[v]),
+        nodes,
+        blame,
+    })
+}
+
+/// A what-if verdict: the bound on makespan if every critical comm edge
+/// ran under a hypothetical curve (the measured analogue of `analysis`
+/// rule SY-W203). An *upper* bound on achievable speedup — a different
+/// path may become critical once these edges shrink.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WhatIf {
+    pub makespan_us: f64,
+    /// Lower bound on the hypothetical makespan.
+    pub bound_us: f64,
+    pub saved_us: f64,
+    /// `makespan / bound` (∞ when comm was the entire makespan).
+    pub speedup_bound: f64,
+}
+
+impl CriticalPath {
+    /// Timestamp-free keys of the path nodes, in path order — the
+    /// engine-stable critical op sequence.
+    pub fn keys(&self) -> Vec<String> {
+        self.nodes.iter().map(|n| n.key.clone()).collect()
+    }
+
+    /// Blame summary table (paper-style).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Critical path: blame decomposition (sums to wall makespan)",
+            &["blame us", "share %"],
+            "us | %",
+        );
+        let wall = self.wall_makespan_us.max(f64::MIN_POSITIVE);
+        for (label, v) in [
+            ("compute", self.blame.compute_us),
+            ("comm", self.blame.comm_us),
+            ("wait", self.blame.wait_us),
+            ("sched gap", self.blame.sched_us),
+        ] {
+            t.push_row(label, vec![v, 100.0 * v / wall]);
+        }
+        for (b, v) in &self.blame.per_backend {
+            t.push_row(&format!("comm[{}]", b.name()), vec![*v, 100.0 * *v / wall]);
+        }
+        t.push_row(
+            "wall makespan",
+            vec![self.wall_makespan_us, 100.0 * self.blame.total_us() / wall],
+        );
+        t
+    }
+
+    /// `syncopate.critical.v1` JSON: the blame decomposition plus the full
+    /// path with per-node measured spans and blame.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"syncopate.critical.v1\",\n");
+        out.push_str(&format!("  \"wall_makespan_us\": {},\n", self.wall_makespan_us));
+        out.push_str(&format!("  \"model_path_us\": {},\n", self.model_path_us));
+        out.push_str(&format!(
+            "  \"blame\": {{\"compute_us\": {}, \"comm_us\": {}, \"wait_us\": {}, \
+             \"sched_us\": {}, \"per_backend\": {{",
+            self.blame.compute_us, self.blame.comm_us, self.blame.wait_us, self.blame.sched_us
+        ));
+        for (i, (b, v)) in self.blame.per_backend.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {v}", b.name()));
+        }
+        out.push_str("}},\n  \"path\": [\n");
+        let rows: Vec<String> = self
+            .nodes
+            .iter()
+            .map(|nd| {
+                format!(
+                    "    {{\"key\": \"{}\", \"kind\": \"{}\", \"rank\": {}, \"op\": {}, \
+                     \"start_us\": {}, \"end_us\": {}, \"weight_us\": {}, \"sched_us\": {}, \
+                     \"work_us\": {}}}",
+                    esc(&nd.key),
+                    nd.kind.name(),
+                    nd.rank,
+                    nd.op,
+                    nd.start_us,
+                    nd.end_us,
+                    nd.weight_us,
+                    nd.sched_us,
+                    nd.work_us
+                )
+            })
+            .collect();
+        out.push_str(&rows.join(",\n"));
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// What-if under a concrete topology: every critical transfer is
+    /// re-priced by the target arch's curve over the actual link, and the
+    /// saving against its measured blame (never negative — a slower
+    /// hypothesis cannot stretch a bound) is credited to the makespan.
+    pub fn what_if_topo(&self, trace: &Trace, topo: &Topology) -> Result<WhatIf> {
+        let mut saved = 0.0;
+        for nd in &self.nodes {
+            let TraceKind::Transfer { src, dst, bytes, pieces, backend, comm_sms, .. } =
+                &trace.events[nd.event].kind
+            else {
+                continue;
+            };
+            let link = topo.link(*src, *dst)?;
+            let c = topo.arch.curve(*backend);
+            let caps = topo.arch.caps(*backend);
+            let h = backend::transfer_time_with(
+                c,
+                caps.host_launched,
+                *bytes,
+                *pieces,
+                *comm_sms,
+                link,
+            );
+            saved += (nd.work_us - h).max(0.0);
+        }
+        Ok(self.bound(saved))
+    }
+
+    /// What-if under a uniform comm scale factor (`0.5` = "comm twice as
+    /// fast").
+    pub fn what_if_scale(&self, comm_scale: f64) -> WhatIf {
+        let scale = comm_scale.max(0.0);
+        let saved = self
+            .nodes
+            .iter()
+            .filter(|nd| nd.kind == BlameKind::Comm)
+            .map(|nd| (nd.work_us - nd.work_us * scale).max(0.0))
+            .sum();
+        self.bound(saved)
+    }
+
+    fn bound(&self, saved_us: f64) -> WhatIf {
+        let saved = saved_us.min(self.wall_makespan_us);
+        let bound = (self.wall_makespan_us - saved).max(0.0);
+        WhatIf {
+            makespan_us: self.wall_makespan_us,
+            bound_us: bound,
+            saved_us: saved,
+            speedup_bound: if bound > 0.0 { self.wall_makespan_us / bound } else { f64::INFINITY },
+        }
+    }
+}
+
+/// Export the blame decomposition as process gauges
+/// (`perf.critical_{compute,comm,wait,sched}_us`) — the serving tier
+/// feeds these from sampled traced requests.
+pub fn record_gauges(path: &CriticalPath) {
+    crate::obs::gauge("perf.critical_compute_us").set(path.blame.compute_us);
+    crate::obs::gauge("perf.critical_comm_us").set(path.blame.comm_us);
+    crate::obs::gauge("perf.critical_wait_us").set(path.blame.wait_us);
+    crate::obs::gauge("perf.critical_sched_us").set(path.blame.sched_us);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    fn seg(rank: usize, op: usize, flops: f64, start: f64, end: f64) -> TraceEvent {
+        TraceEvent {
+            start_us: start,
+            end_us: end,
+            kind: TraceKind::Compute { rank, op, calls: 1, tiles: 1, flops, quantized: false },
+        }
+    }
+
+    fn xfer(src: usize, dst: usize, op: usize, signal: usize, bytes: usize, s: f64, e: f64) -> TraceEvent {
+        TraceEvent {
+            start_us: s,
+            end_us: e,
+            kind: TraceKind::Transfer {
+                src,
+                dst,
+                op,
+                bytes,
+                pieces: 1,
+                backend: BackendKind::CopyEngine,
+                comm_sms: 0,
+                reduce: false,
+                signal,
+            },
+        }
+    }
+
+    fn wait(rank: usize, op: usize, signal: usize, s: f64, e: f64) -> TraceEvent {
+        TraceEvent { start_us: s, end_us: e, kind: TraceKind::Wait { rank, op, signal } }
+    }
+
+    fn trace(world: usize, events: Vec<TraceEvent>) -> Trace {
+        Trace { world, fingerprint: String::new(), meta: vec![], events }
+    }
+
+    // rank 0: big compute (op 0), transfer sig0 (op 1);
+    // rank 1: wait sig0 (op 0), small compute (op 1)
+    fn cross_rank() -> Trace {
+        trace(
+            2,
+            vec![
+                seg(0, 0, 1e9, 0.0, 10.0),
+                xfer(0, 1, 1, 0, 1 << 20, 10.0, 14.0),
+                wait(1, 0, 0, 0.0, 14.0),
+                seg(1, 1, 1e6, 14.0, 15.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn path_follows_the_dependency_chain() {
+        let p = critical_path(&cross_rank()).unwrap();
+        let keys = p.keys();
+        assert_eq!(keys.len(), 4, "{keys:?}");
+        assert!(keys[0].starts_with("seg r0"), "{keys:?}");
+        assert!(keys[1].starts_with("xfer sig0"), "{keys:?}");
+        assert!(keys[2].starts_with("wait r1"), "{keys:?}");
+        assert!(keys[3].starts_with("seg r1"), "{keys:?}");
+        assert!(p.model_path_us > 0.0);
+    }
+
+    #[test]
+    fn blame_sums_to_wall_makespan() {
+        let p = critical_path(&cross_rank()).unwrap();
+        assert_eq!(p.wall_makespan_us, 15.0);
+        assert!((p.blame.total_us() - 15.0).abs() < 1e-9, "{:?}", p.blame);
+        // big segment 10, transfer 4, small segment 1; wait fully
+        // overlapped by upstream work -> zero wait blame
+        assert!((p.blame.compute_us - 11.0).abs() < 1e-9, "{:?}", p.blame);
+        assert!((p.blame.comm_us - 4.0).abs() < 1e-9, "{:?}", p.blame);
+        assert_eq!(p.blame.wait_us, 0.0);
+        assert_eq!(p.blame.per_backend.len(), 1);
+        assert_eq!(p.blame.per_backend[0].0, BackendKind::CopyEngine);
+    }
+
+    #[test]
+    fn extraction_ignores_timestamps() {
+        // same structure, wildly different (serialized) timestamps:
+        // identical key sequence
+        let a = critical_path(&cross_rank()).unwrap();
+        let serialized = trace(
+            2,
+            vec![
+                seg(0, 0, 1e9, 0.0, 10.0),
+                xfer(0, 1, 1, 0, 1 << 20, 10.0, 14.0),
+                wait(1, 0, 0, 14.0, 14.5),
+                seg(1, 1, 1e6, 20.0, 21.0),
+            ],
+        );
+        let b = critical_path(&serialized).unwrap();
+        assert_eq!(a.keys(), b.keys());
+        // the late straggler start shows up as scheduling gap, and blame
+        // still sums to the (longer) wall
+        assert!(b.blame.sched_us > 0.0);
+        assert!((b.blame.total_us() - b.wall_makespan_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heavier_branch_wins() {
+        // two independent chains on one rank pair; the heavier-flops chain
+        // must be chosen even though the light one runs longer (measured)
+        let t = trace(
+            2,
+            vec![
+                seg(0, 0, 1e9, 0.0, 2.0),
+                seg(1, 0, 1e3, 0.0, 50.0),
+            ],
+        );
+        let p = critical_path(&t).unwrap();
+        assert_eq!(p.nodes.len(), 1);
+        assert_eq!(p.nodes[0].rank, 0, "model weight, not measured span, picks the path");
+        // ...while blame still accounts for the full wall (rank 1's slow
+        // span off the path lands in sched)
+        assert!((p.blame.total_us() - 50.0).abs() < 1e-9);
+        assert!(p.blame.sched_us > 0.0);
+    }
+
+    #[test]
+    fn cycle_is_an_error_and_empty_trace_is_not() {
+        // rank 0 waits on a signal its OWN later op produces
+        let t = trace(
+            1,
+            vec![wait(0, 0, 7, 0.0, 1.0), xfer(0, 0, 1, 7, 64, 1.0, 2.0)],
+        );
+        // wait(op 0) precedes issue(op 1) in program order, but the signal
+        // edge points issue -> wait: a cycle
+        let e = critical_path(&t).unwrap_err();
+        assert!(e.to_string().contains("cycle"), "{e}");
+
+        let p = critical_path(&trace(2, vec![])).unwrap();
+        assert_eq!(p.wall_makespan_us, 0.0);
+        assert!(p.nodes.is_empty());
+        assert_eq!(p.blame.total_us(), 0.0);
+    }
+
+    #[test]
+    fn what_if_scale_bounds_speedup() {
+        let p = critical_path(&cross_rank()).unwrap();
+        let w = p.what_if_scale(0.5);
+        // 4us comm blame, half saved -> bound 13us
+        assert!((w.saved_us - 2.0).abs() < 1e-9, "{w:?}");
+        assert!((w.bound_us - 13.0).abs() < 1e-9);
+        assert!((w.speedup_bound - 15.0 / 13.0).abs() < 1e-9);
+        // free comm cannot save more than the comm blame
+        let all = p.what_if_scale(0.0);
+        assert!((all.saved_us - 4.0).abs() < 1e-9);
+        // slower comm saves nothing
+        let none = p.what_if_scale(2.0);
+        assert_eq!(none.saved_us, 0.0);
+        assert_eq!(none.speedup_bound, 1.0);
+    }
+
+    #[test]
+    fn what_if_topo_prices_critical_transfers() {
+        let t = cross_rank();
+        let p = critical_path(&t).unwrap();
+        let topo = crate::hw::catalog::topology("h100_node", 2).unwrap();
+        let w = p.what_if_topo(&t, &topo).unwrap();
+        // saving is clamped to [0, comm blame] whatever the target curve
+        // prices the critical transfer at
+        assert!(w.saved_us >= 0.0 && w.saved_us <= p.blame.comm_us + 1e-9, "{w:?}");
+        assert!(w.bound_us <= w.makespan_us);
+    }
+
+    #[test]
+    fn json_and_table_render() {
+        let p = critical_path(&cross_rank()).unwrap();
+        let j = p.to_json();
+        assert!(j.contains("syncopate.critical.v1"), "{j}");
+        assert!(j.contains("\"path\": ["));
+        assert!(j.contains("copy-engine"));
+        // machine-parseable (hand-rolled JSON stays valid)
+        crate::trace::check_chrome_header(&j).unwrap_err(); // not a chrome trace...
+        let t = p.table().render();
+        assert!(t.contains("sched gap"), "{t}");
+        assert!(t.contains("wall makespan"));
+        record_gauges(&p);
+        let snap = crate::obs::registry().snapshot();
+        assert_eq!(snap.gauge("perf.critical_comm_us", &[]), Some(p.blame.comm_us));
+    }
+}

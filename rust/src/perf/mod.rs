@@ -1,0 +1,33 @@
+//! Critical-path profiling + continuous perf regression tracking
+//! (DESIGN.md §19).
+//!
+//! Everything before this module measured *aggregates*: per-rank
+//! comm/wait/busy totals ([`crate::trace::analyze`]), serving histograms
+//! ([`crate::obs`]). None of it answers the two questions a perf
+//! investigation actually starts with:
+//!
+//! * **Which chain of chunks set the makespan?** — [`critical`]
+//!   reconstructs the dependency DAG from a captured [`crate::trace::Trace`]
+//!   (per-rank program order + transfer→wait signal edges), extracts the
+//!   longest model-weighted path, and projects the run's measured
+//!   timestamps onto it so every microsecond of the wall makespan is
+//!   blamed on compute, a comm backend, an exposed wait, or a scheduling
+//!   gap. Blame sums to the makespan by construction; the extraction
+//!   itself is engine-stable because the path is chosen on weights
+//!   derived from event *content*, never timestamps.
+//! * **Did this change regress?** — [`baseline`] holds noise-aware
+//!   baselines (median + MAD per case/world/engine, keyed by
+//!   [`crate::hw::fingerprint`]), the `perf diff`/`perf gate` significance
+//!   rule, and the append-only `BENCH_results.json` trajectory every
+//!   `perf record`, `exec --repeat --bench`, and hotpath bench run feeds.
+
+pub mod baseline;
+pub mod critical;
+
+pub use baseline::{
+    append_bench_row, bench_row, diff, diff_table, median_mad, regressions, Baseline, DiffRow,
+    PerfCase, BENCH_SCHEMA, PERF_SCHEMA,
+};
+pub use critical::{
+    critical_path, record_gauges, Blame, BlameKind, CriticalNode, CriticalPath, WhatIf,
+};

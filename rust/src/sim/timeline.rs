@@ -143,8 +143,17 @@ impl Timeline {
                 s.dur_us().max(0.0)
             ));
         }
+        // simulated timelines carry no machine fingerprint (nothing ran);
+        // the shared header keeps the file discoverable by the same
+        // tooling as measured exports, with `sim: true` marking the origin
+        let header = crate::trace::syncopate_header(
+            world.max(1),
+            "",
+            &[],
+            &[("sim", "true".to_string())],
+        );
         format!(
-            "{{\n  \"displayTimeUnit\": \"ms\",\n  \"traceEvents\": [\n{}\n  ]\n}}\n",
+            "{{\n  \"displayTimeUnit\": \"ms\",\n{header},\n  \"traceEvents\": [\n{}\n  ]\n}}\n",
             lines.join(",\n")
         )
     }
@@ -222,6 +231,10 @@ mod tests {
     fn chrome_export_has_tracks_and_spans() {
         let j = tl().to_chrome_json(2);
         assert!(j.contains("\"traceEvents\""), "{j}");
+        // shared syncopate header, marked as simulated
+        let (w, fp) = crate::trace::check_chrome_header(&j).unwrap();
+        assert_eq!((w, fp.as_str()), (2, ""));
+        assert!(j.contains("\"sim\": true"), "{j}");
         assert!(j.contains("rank 0 (sim)"));
         assert!(j.contains("\"cat\": \"sim-compute\""));
         // transfers land on the comm track (tid 2r+1 = 3 for rank 1)

@@ -298,6 +298,7 @@ mod tests {
                     TraceKind::Transfer {
                         src: 0,
                         dst: 1,
+                        op: 1,
                         bytes: 1024,
                         pieces: 1,
                         backend: BackendKind::CopyEngine,
@@ -414,6 +415,7 @@ mod tests {
                 TraceKind::Transfer {
                     src: 0,
                     dst: 1,
+                    op: 0,
                     bytes: 64,
                     pieces: 1,
                     backend: BackendKind::CopyEngine,

@@ -115,6 +115,124 @@ fn fit_curve(prior: Curve, caps: Caps, samples: &[XferSample]) -> Curve {
     c
 }
 
+/// One microbenchmark point of a `calibrate sweep` run (a transfer of
+/// `bytes` in `pieces` spans on `comm_sms` SMs took `dur_us`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepSample {
+    pub bytes: usize,
+    pub pieces: usize,
+    pub comm_sms: usize,
+    pub dur_us: f64,
+}
+
+/// Fit a full curve — including `half_size` — from a dedicated size × SM
+/// sweep. Returns the fitted curve and its residual SSE (µs²).
+///
+/// [`fit_curve`] must keep `half` from the prior because a single run's
+/// samples cannot separate it from `issue`: with fixed SM count the model
+/// is affine in the sample size, and intercept + slope absorb any `half`
+/// hypothesis identically. Varying `comm_sms` breaks the degeneracy for
+/// SM-driven backends — `bytes/ramp` and `1/ramp` become independent
+/// regressors, and only the true `half` zeroes the residual. So: grid
+/// search `half` candidates (√2 steps, 1 KiB → 64 MiB) and solve the
+/// remaining 2-parameter least squares `t - lat ≈ issue·launches + w/peak`
+/// in closed form per candidate, keeping the minimum-SSE fit.
+///
+/// The sweep must stay below the link clamp (`bandwidth_with` flattens
+/// clamped samples and nothing is identifiable there) — the driver keeps
+/// sizes/SM counts in the ramp region. For host-launched backends
+/// (`sms_for_peak == 0`) every candidate fits equally well and the prior
+/// `half` wins the tie; callers get the same behavior as [`fit_curve`].
+pub fn fit_curve_sweep(
+    prior: Curve,
+    caps: Caps,
+    lat_us: f64,
+    samples: &[SweepSample],
+) -> Result<(Curve, f64)> {
+    if samples.len() < 3 {
+        return Err(Error::Trace(format!(
+            "curve sweep needs at least 3 samples, got {} (sweep a size x sm grid)",
+            samples.len()
+        )));
+    }
+    // (launches L, ramp bytes x, sm ramp r, measured wire+issue time t)
+    let pts: Vec<(f64, f64, f64, f64)> = samples
+        .iter()
+        .map(|s| {
+            let l = if caps.host_launched { s.pieces.max(1) } else { 1 } as f64;
+            let x = if caps.host_launched {
+                (s.bytes as f64 / s.pieces.max(1) as f64).max(1.0)
+            } else {
+                (s.bytes as f64).max(1.0)
+            };
+            let r = if prior.sms_for_peak == 0 {
+                1.0
+            } else {
+                (s.comm_sms as f64 / prior.sms_for_peak as f64).clamp(1e-3, 1.0)
+            };
+            (l, x, r, (s.dur_us - lat_us).max(0.0))
+        })
+        .collect();
+
+    // closed-form LS for (issue, a = 1/peak) on regressors (L, w) at one
+    // half candidate; returns (issue, a, sse)
+    let fit_at_half = |half: f64| -> Option<(f64, f64, f64)> {
+        let (mut s_ll, mut s_lw, mut s_ww, mut s_lt, mut s_wt) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        let rows: Vec<(f64, f64, f64)> = pts
+            .iter()
+            .map(|&(l, x, r, t)| {
+                // bytes/(bw·1e3) with bw = peak·x/(x+half)·r, factored so the
+                // unknown peak divides out into `a`
+                let bytes = x * l;
+                (l, bytes * (x + half) / (x * r * 1e3), t)
+            })
+            .collect();
+        for &(l, w, t) in &rows {
+            s_ll += l * l;
+            s_lw += l * w;
+            s_ww += w * w;
+            s_lt += l * t;
+            s_wt += w * t;
+        }
+        let det = s_ll * s_ww - s_lw * s_lw;
+        if det.abs() < 1e-12 {
+            return None;
+        }
+        let issue = (s_lt * s_ww - s_wt * s_lw) / det;
+        let a = (s_ll * s_wt - s_lw * s_lt) / det;
+        if !a.is_finite() || a <= 0.0 || !issue.is_finite() {
+            return None;
+        }
+        let issue = issue.max(0.01);
+        let sse: f64 = rows.iter().map(|&(l, w, t)| (issue * l + a * w - t).powi(2)).sum();
+        Some((issue, a, sse))
+    };
+
+    let mut best: Option<(Curve, f64)> = None;
+    let mut half = 1024.0;
+    while half <= 64.0 * 1024.0 * 1024.0 {
+        if let Some((issue, a, sse)) = fit_at_half(half) {
+            let c = Curve {
+                peak_gbps: (1.0 / a).clamp(1e-3, 1e9),
+                half_size: half,
+                issue_us: issue,
+                sms_for_peak: prior.sms_for_peak,
+            };
+            if best.as_ref().map_or(true, |(_, b)| sse < *b) {
+                best = Some((c, sse));
+            }
+        }
+        half *= std::f64::consts::SQRT_2;
+    }
+    best.ok_or_else(|| {
+        Error::Trace(
+            "curve sweep: no half candidate produced a positive-bandwidth fit \
+             (are the samples all latency-dominated?)"
+                .into(),
+        )
+    })
+}
+
 /// Fit the device compute rate from traced segments: each segment's
 /// simulated duration is `K_i / r` with `K_i` the wave-model duration at
 /// `sm_tflops = 1` ([`crate::sim::waves`]), so least squares over
@@ -327,6 +445,7 @@ mod tests {
             kind: TraceKind::Transfer {
                 src: 0,
                 dst: 1,
+                op: 0,
                 bytes,
                 pieces: 1,
                 backend: BackendKind::CopyEngine,
@@ -473,6 +592,7 @@ mod tests {
             kind: TraceKind::Transfer {
                 src: 0,
                 dst: 1,
+                op: 1,
                 bytes: 4096,
                 pieces: 1,
                 backend: BackendKind::LdStSpecialized, // dedicated-SM row
@@ -506,6 +626,61 @@ mod tests {
         let cal = calibrate(&t, &d).unwrap();
         assert!(cal.link_floors.is_empty());
         assert_eq!(cal.desc.intra.bw_gbps, d.intra.bw_gbps);
+    }
+
+    #[test]
+    fn sweep_fit_identifies_half_size() {
+        // truth: a Tma-like SM-driven curve with half on the sweep's √2
+        // grid; samples span sizes AND comm SMs, which is exactly what
+        // makes `half` identifiable (see fit_curve_sweep doc)
+        let truth = Curve {
+            peak_gbps: 300.0,
+            half_size: 512.0 * 1024.0,
+            issue_us: 0.5,
+            sms_for_peak: 16,
+        };
+        let caps = backend::caps(BackendKind::TmaSpecialized);
+        // huge link so the clamp never flattens a sample
+        let link = crate::topo::LinkSpec {
+            level: crate::topo::LinkLevel::IntraNode,
+            bw_gbps: 1e6,
+            lat_us: 1.0,
+        };
+        let mut samples = Vec::new();
+        for &bytes in &[64usize << 10, 256 << 10, 1 << 20, 4 << 20] {
+            for &sms in &[4usize, 8, 16] {
+                samples.push(SweepSample {
+                    bytes,
+                    pieces: 1,
+                    comm_sms: sms,
+                    dur_us: backend::transfer_time_with(truth, caps.host_launched, bytes, 1, sms, link),
+                });
+            }
+        }
+        let prior = backend::curve(BackendKind::TmaSpecialized);
+        let (fit, sse) = fit_curve_sweep(prior, caps, link.lat_us, &samples).unwrap();
+        assert!(
+            (fit.half_size / truth.half_size).ln().abs() < 0.5f64.ln().abs(),
+            "half {} vs {} (sse {sse})",
+            fit.half_size,
+            truth.half_size
+        );
+        assert!(
+            (fit.peak_gbps - truth.peak_gbps).abs() / truth.peak_gbps < 0.05,
+            "peak {} vs {}",
+            fit.peak_gbps,
+            truth.peak_gbps
+        );
+        assert!((fit.issue_us - truth.issue_us).abs() < 0.1, "issue {}", fit.issue_us);
+        assert_eq!(fit.sms_for_peak, truth.sms_for_peak);
+        // near-exact generator recovery: residual is numerically tiny
+        assert!(sse < 1e-6, "sse {sse}");
+
+        // degenerate input is refused, not mis-fit
+        assert!(fit_curve_sweep(prior, caps, 1.0, &samples[..2]).is_err());
+        let flat: Vec<SweepSample> =
+            samples.iter().map(|s| SweepSample { dur_us: 0.0, ..*s }).collect();
+        assert!(fit_curve_sweep(prior, caps, 1.0, &flat).is_err());
     }
 
     #[test]

@@ -31,18 +31,23 @@ fn tid(ev: &TraceEvent) -> usize {
     }
 }
 
-fn event_json(ev: &TraceEvent) -> String {
+/// Render one span, with an optional critical-path highlight: `cname`
+/// paints the span red in the viewer, `args.critical` marks it for
+/// downstream tooling (extra args keys are schema-transparent).
+fn event_json_with(ev: &TraceEvent, critical: bool) -> String {
     let (name, cat, args) = match &ev.kind {
-        TraceKind::Transfer { src, dst, bytes, pieces, backend, comm_sms, reduce, signal } => (
-            format!("{src}->{dst} {}", backend.name()),
-            "transfer",
-            format!(
-                "{{\"src\": {src}, \"dst\": {dst}, \"bytes\": {bytes}, \"pieces\": {pieces}, \
-                 \"backend\": \"{}\", \"sms\": {comm_sms}, \"reduce\": {reduce}, \
-                 \"signal\": {signal}}}",
-                backend.name()
-            ),
-        ),
+        TraceKind::Transfer { src, dst, op, bytes, pieces, backend, comm_sms, reduce, signal } => {
+            (
+                format!("{src}->{dst} {}", backend.name()),
+                "transfer",
+                format!(
+                    "{{\"src\": {src}, \"dst\": {dst}, \"op\": {op}, \"bytes\": {bytes}, \
+                     \"pieces\": {pieces}, \"backend\": \"{}\", \"sms\": {comm_sms}, \
+                     \"reduce\": {reduce}, \"signal\": {signal}}}",
+                    backend.name()
+                ),
+            )
+        }
         TraceKind::Wait { rank, op, signal } => (
             format!("wait sig{signal}"),
             "wait",
@@ -62,11 +67,16 @@ fn event_json(ev: &TraceEvent) -> String {
             ),
         ),
     };
+    let (mark, args) = if critical {
+        ("\"cname\": \"terrible\", ", args.replacen('{', "{\"critical\": true, ", 1))
+    } else {
+        ("", args)
+    };
     // `end` is ours, not Chrome's (viewers ignore unknown keys): `ts + dur`
     // does not always reproduce `end_us` bit-exactly in f64, and the
     // importer promises an exact round trip
     format!(
-        "    {{\"ph\": \"X\", \"pid\": 0, \"tid\": {}, \"name\": \"{name}\", \
+        "    {{\"ph\": \"X\", {mark}\"pid\": 0, \"tid\": {}, \"name\": \"{name}\", \
          \"cat\": \"{cat}\", \"ts\": {}, \"dur\": {}, \"end\": {}, \"args\": {args}}}",
         tid(ev),
         ev.start_us,
@@ -75,22 +85,52 @@ fn event_json(ev: &TraceEvent) -> String {
     )
 }
 
-/// Render a trace as Chrome `trace_event` JSON.
-pub fn to_chrome_json(trace: &Trace) -> String {
-    let mut out = String::from("{\n  \"displayTimeUnit\": \"ms\",\n");
-    out.push_str(&format!(
-        "  \"syncopate\": {{\"version\": 1, \"world\": {}, \"fingerprint\": \"{}\", \
-         \"meta\": {{",
-        trace.world,
-        esc(&trace.fingerprint)
-    ));
-    for (i, (k, v)) in trace.meta.iter().enumerate() {
+/// Render the `"syncopate"` top-level header object every Chrome export
+/// in the repo shares (execution trace, flight recorder, sim timeline):
+/// schema version, world size, machine fingerprint, sorted provenance
+/// meta, plus producer-specific `extra` pairs whose values arrive
+/// pre-rendered as JSON (`"true"`, `"\"text\""`, ...). Returns the
+/// complete `  "syncopate": {...}` fragment, no trailing comma.
+pub fn syncopate_header(
+    world: usize,
+    fingerprint: &str,
+    meta: &[(String, String)],
+    extra: &[(&str, String)],
+) -> String {
+    let mut out = format!(
+        "  \"syncopate\": {{\"version\": 1, \"world\": {world}, \"fingerprint\": \"{}\"",
+        esc(fingerprint)
+    );
+    for (k, v) in extra {
+        out.push_str(&format!(", \"{k}\": {v}"));
+    }
+    out.push_str(", \"meta\": {");
+    for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push_str(", ");
         }
         out.push_str(&format!("\"{}\": \"{}\"", esc(k), esc(v)));
     }
-    out.push_str("}},\n  \"traceEvents\": [\n");
+    out.push_str("}}");
+    out
+}
+
+/// Render a trace as Chrome `trace_event` JSON.
+pub fn to_chrome_json(trace: &Trace) -> String {
+    to_chrome_json_overlay(trace, &[])
+}
+
+/// [`to_chrome_json`] with a critical-path overlay: events whose
+/// timestamp-free [`TraceEvent::key`] appears in `critical_keys` are
+/// painted red (`cname`) and tagged `args.critical` — the rendering of
+/// [`crate::perf::critical_path`]'s verdict. An empty slice degenerates
+/// to the plain export.
+pub fn to_chrome_json_overlay(trace: &Trace, critical_keys: &[String]) -> String {
+    let crit: std::collections::HashSet<&str> =
+        critical_keys.iter().map(String::as_str).collect();
+    let mut out = String::from("{\n  \"displayTimeUnit\": \"ms\",\n");
+    out.push_str(&syncopate_header(trace.world, &trace.fingerprint, &trace.meta, &[]));
+    out.push_str(",\n  \"traceEvents\": [\n");
     let mut lines = Vec::new();
     // thread-name metadata: label every rank's compute + comm track
     for r in 0..trace.world {
@@ -102,7 +142,9 @@ pub fn to_chrome_json(trace: &Trace) -> String {
             ));
         }
     }
-    lines.extend(trace.events.iter().map(event_json));
+    lines.extend(
+        trace.events.iter().map(|ev| event_json_with(ev, crit.contains(ev.key().as_str()))),
+    );
     out.push_str(&lines.join(",\n"));
     out.push_str("\n  ]\n}\n");
     out
@@ -110,7 +152,7 @@ pub fn to_chrome_json(trace: &Trace) -> String {
 
 /// Per-category required `args` keys (the schema contract).
 const REQUIRED_ARGS: [(&str, &[&str]); 4] = [
-    ("transfer", &["src", "dst", "bytes", "pieces", "backend", "sms", "reduce", "signal"]),
+    ("transfer", &["src", "dst", "op", "bytes", "pieces", "backend", "sms", "reduce", "signal"]),
     ("wait", &["rank", "op", "signal"]),
     ("kernel", &["rank", "op", "call"]),
     ("compute", &["rank", "op", "calls", "tiles", "flops", "quantized"]),
@@ -124,9 +166,21 @@ pub fn check_chrome_schema(text: &str) -> Result<usize> {
     check_parsed(&json::parse(text)?)
 }
 
-/// [`check_chrome_schema`] over an already-parsed document, so the
-/// importer pays the parse exactly once.
-fn check_parsed(doc: &Json) -> Result<usize> {
+/// Validate just the shared `syncopate` header contract of any Chrome
+/// export in the repo — execution traces, flight-recorder dumps, and sim
+/// timelines all carry it, while their *event* schemas differ (only the
+/// trace export satisfies [`check_chrome_schema`]'s category table).
+/// Returns `(world, fingerprint)`.
+pub fn check_chrome_header(text: &str) -> Result<(usize, String)> {
+    let doc = json::parse(text)?;
+    let out = check_header_parsed(&doc)?;
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Trace("missing `traceEvents` array".into()))?;
+    Ok(out)
+}
+
+fn check_header_parsed(doc: &Json) -> Result<(usize, String)> {
     let sync = doc
         .get("syncopate")
         .ok_or_else(|| Error::Trace("missing `syncopate` header object".into()))?;
@@ -137,9 +191,17 @@ fn check_parsed(doc: &Json) -> Result<usize> {
     if world == 0 {
         return Err(Error::Trace("syncopate.world must be >= 1".into()));
     }
-    if sync.get("fingerprint").and_then(Json::as_str).is_none() {
-        return Err(Error::Trace("syncopate.fingerprint missing or not a string".into()));
-    }
+    let fp = sync
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Trace("syncopate.fingerprint missing or not a string".into()))?;
+    Ok((world, fp.to_string()))
+}
+
+/// [`check_chrome_schema`] over an already-parsed document, so the
+/// importer pays the parse exactly once.
+fn check_parsed(doc: &Json) -> Result<usize> {
+    check_header_parsed(doc)?;
     let events = doc
         .get("traceEvents")
         .and_then(Json::as_arr)
@@ -244,6 +306,7 @@ pub fn from_chrome_json(text: &str) -> Result<Trace> {
                 TraceKind::Transfer {
                     src: arg_usize(args, "src", i)?,
                     dst: arg_usize(args, "dst", i)?,
+                    op: arg_usize(args, "op", i)?,
                     bytes: arg_usize(args, "bytes", i)?,
                     pieces: arg_usize(args, "pieces", i)?,
                     backend: BackendKind::by_name(b).ok_or_else(|| {
@@ -332,6 +395,7 @@ mod tests {
                     kind: TraceKind::Transfer {
                         src: 0,
                         dst: 1,
+                        op: 2,
                         bytes: 16384,
                         pieces: 4,
                         backend: BackendKind::LdStSpecialized,
@@ -391,6 +455,26 @@ mod tests {
         assert!(e.to_string().contains("signal"), "{e}");
         let bad_cat = bad_args.replace("\"wait\"", "\"warp\"");
         assert!(check_chrome_schema(&bad_cat).unwrap_err().to_string().contains("warp"));
+    }
+
+    #[test]
+    fn header_check_accepts_all_exports_and_overlay_marks_critical() {
+        let t = sample_trace();
+        let txt = to_chrome_json(&t);
+        let (world, fp) = check_chrome_header(&txt).unwrap();
+        assert_eq!(world, 2);
+        assert_eq!(fp, "deadbeefdeadbeef");
+        assert!(check_chrome_header("{\"traceEvents\": []}").is_err());
+
+        // overlay: exactly the named keys get painted, schema still holds
+        let crit = vec![t.events[2].key()]; // the transfer
+        let overlaid = to_chrome_json_overlay(&t, &crit);
+        assert_eq!(check_chrome_schema(&overlaid).unwrap(), t.events.len());
+        assert_eq!(overlaid.matches("\"cname\": \"terrible\"").count(), 1);
+        assert_eq!(overlaid.matches("\"critical\": true").count(), 1);
+        // the overlay stays importable and equal to the plain trace
+        let back = from_chrome_json(&overlaid).unwrap();
+        assert_eq!(back.events.len(), t.events.len());
     }
 
     #[test]

@@ -41,18 +41,24 @@ use std::time::Instant;
 use crate::backend::BackendKind;
 
 pub use analyze::{analyze, OverlapReport, TraceStats};
-pub use calibrate::{calibrate, Calibration};
-pub use export::{check_chrome_schema, from_chrome_json, to_chrome_json};
+pub use calibrate::{calibrate, fit_curve_sweep, Calibration, SweepSample};
+pub use export::{
+    check_chrome_header, check_chrome_schema, from_chrome_json, syncopate_header, to_chrome_json,
+    to_chrome_json_overlay,
+};
 
 /// What one traced span was doing.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TraceKind {
     /// One applied chunk transfer (attributed to the source rank's comm
     /// lane). `signal` is the plan-unique completion signal — the event's
-    /// identity across engines.
+    /// identity across engines. `op` is the plan op index of the `Issue`
+    /// on the source rank, anchoring the transfer into that rank's program
+    /// order (how `perf::critical` interleaves it with waits/computes).
     Transfer {
         src: usize,
         dst: usize,
+        op: usize,
         bytes: usize,
         pieces: usize,
         backend: BackendKind,
@@ -226,6 +232,7 @@ mod tests {
             kind: TraceKind::Transfer {
                 src: 0,
                 dst: 1,
+                op: 0,
                 bytes: 4096,
                 pieces: 1,
                 backend: BackendKind::CopyEngine,

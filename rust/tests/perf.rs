@@ -1,0 +1,184 @@
+//! Integration: critical-path profiler + perf-regression harness
+//! (DESIGN.md §19).
+//!
+//! Three claims:
+//!
+//! 1. **Engine stability** — the critical-path extraction is structural:
+//!    for every registry exec case at worlds 2/4/8, the sequential and
+//!    parallel engines' traces yield the SAME timestamp-free critical op
+//!    sequence (the DAG and the model weights depend only on the prepared
+//!    plan, never on measured timestamps).
+//! 2. **Blame completeness** — the blame decomposition
+//!    (compute + comm + wait + sched) sums to the traced wall makespan
+//!    within 1e-6 relative, for every case/world/engine.
+//! 3. **The gate flags real regressions and nothing else** — an injected
+//!    2x slowdown of a measured baseline is flagged as significant, while
+//!    two identical back-to-back recordings of the same case report no
+//!    regression.
+
+use syncopate::coordinator::execases::{self, CaseParams};
+use syncopate::exec::{ExecMode, ExecOptions};
+use syncopate::perf::{self, Baseline, PerfCase};
+use syncopate::runtime::Runtime;
+use syncopate::trace;
+
+fn rt() -> Runtime {
+    Runtime::open_default().expect("open_default falls back to host-ref; cannot fail")
+}
+
+fn opts(mode: ExecMode) -> ExecOptions {
+    ExecOptions {
+        mode,
+        wait_timeout: std::time::Duration::from_secs(30),
+        ..ExecOptions::parallel()
+    }
+}
+
+#[test]
+fn critical_path_is_engine_stable_and_blame_sums_to_makespan() {
+    let rt = rt();
+    for world in [2usize, 4, 8] {
+        for spec in execases::CASES {
+            let params = CaseParams { world, ..Default::default() };
+            let mut key_seqs = Vec::new();
+            for mode in [ExecMode::Sequential, ExecMode::Parallel] {
+                let case = spec
+                    .build(&params)
+                    .unwrap_or_else(|e| panic!("{} w{world}: {e}", spec.name));
+                let (_, trace) = execases::run_and_verify_traced(case, &rt, &opts(mode))
+                    .unwrap_or_else(|e| panic!("{} w{world} {mode:?}: {e}", spec.name));
+                let ctx = format!("{} w{world} {mode:?}", spec.name);
+                let cp = perf::critical_path(&trace)
+                    .unwrap_or_else(|e| panic!("{ctx}: critical_path: {e}"));
+                assert!(!cp.nodes.is_empty(), "{ctx}: empty critical path");
+                assert!(cp.wall_makespan_us > 0.0, "{ctx}: nothing measured");
+                // blame is a complete partition of the wall makespan
+                let total = cp.blame.total_us();
+                assert!(
+                    (total - cp.wall_makespan_us).abs()
+                        <= 1e-6 * cp.wall_makespan_us.max(1.0),
+                    "{ctx}: blame {total} != wall {}",
+                    cp.wall_makespan_us
+                );
+                // the path is a real chain: node spans only move forward
+                // in per-rank program order along equal ranks
+                for w in cp.nodes.windows(2) {
+                    if w[0].rank == w[1].rank {
+                        assert!(
+                            w[0].op <= w[1].op,
+                            "{ctx}: path goes backwards: {:?} -> {:?}",
+                            (w[0].rank, w[0].op),
+                            (w[1].rank, w[1].op)
+                        );
+                    }
+                }
+                key_seqs.push(cp.keys());
+            }
+            assert_eq!(
+                key_seqs[0], key_seqs[1],
+                "{} w{world}: engines must agree on the critical op sequence",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn critical_overlay_passes_the_chrome_schema_check() {
+    let rt = rt();
+    let case = execases::build_case("ag-gemm", &CaseParams { world: 2, ..Default::default() })
+        .unwrap();
+    let (_, trace) =
+        execases::run_and_verify_traced(case, &rt, &opts(ExecMode::Sequential)).unwrap();
+    let cp = perf::critical_path(&trace).unwrap();
+    let text = trace::to_chrome_json_overlay(&trace, &cp.keys());
+    // overlay is still a schema-valid export of every span...
+    assert_eq!(trace::check_chrome_schema(&text).unwrap(), trace.events.len());
+    // ...with the critical spans marked for the viewer
+    assert!(text.contains("\"critical\": true"), "no span marked critical");
+}
+
+#[test]
+fn what_if_bounds_are_sane_on_a_measured_trace() {
+    let rt = rt();
+    let case = execases::build_case("ag-gemm", &CaseParams { world: 2, ..Default::default() })
+        .unwrap();
+    let (_, trace) =
+        execases::run_and_verify_traced(case, &rt, &opts(ExecMode::Sequential)).unwrap();
+    let cp = perf::critical_path(&trace).unwrap();
+    // perfect comm (scale 0) can save at most the comm blame; the bound
+    // never goes below wall - comm and speedup is >= 1
+    let w = cp.what_if_scale(0.0);
+    assert!(w.saved_us <= cp.blame.comm_us + 1e-9, "{w:?}");
+    assert!(w.bound_us + w.saved_us >= cp.wall_makespan_us - 1e-9, "{w:?}");
+    assert!(w.speedup_bound >= 1.0, "{w:?}");
+    // no change -> no saving
+    let same = cp.what_if_scale(1.0);
+    assert_eq!(same.saved_us, 0.0, "{same:?}");
+    assert_eq!(same.bound_us, cp.wall_makespan_us, "{same:?}");
+}
+
+/// Measure one registry case the way `perf record` does: N hot-path
+/// iterations on the arena-reusing entry point, summarized as median+MAD.
+fn measure(case_name: &str, repeat: usize, rt: &Runtime) -> PerfCase {
+    let params = CaseParams { world: 2, ..Default::default() };
+    let case = execases::build_case(case_name, &params).unwrap();
+    let fingerprint = syncopate::hw::fingerprint(&case.topo);
+    let prep = syncopate::exec::prepare(&case.plan, &case.sched.tensors).unwrap();
+    let mut arena = syncopate::exec::PlanArena::new(&prep);
+    let opts = opts(ExecMode::Parallel);
+    let mut durs = Vec::with_capacity(repeat);
+    for i in 0..=repeat {
+        let store = case.store.clone();
+        let t0 = std::time::Instant::now();
+        syncopate::exec::run_prepared_reusing(&prep, &mut arena, &store, rt, &opts).unwrap();
+        if i > 0 {
+            durs.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let (median_us, mad_us) = perf::median_mad(&durs);
+    PerfCase {
+        case: case_name.into(),
+        world: 2,
+        engine: "parallel".into(),
+        fingerprint,
+        samples: durs.len(),
+        median_us,
+        mad_us,
+    }
+}
+
+#[test]
+fn gate_flags_injected_slowdown_but_not_back_to_back_reruns() {
+    let rt = rt();
+    let mut base = Baseline::default();
+    base.insert(measure("ag-gemm", 9, &rt));
+
+    // a genuinely identical re-recording never regresses (same medians)
+    let rows = perf::diff(&base, &base.clone(), 5.0);
+    assert_eq!(perf::regressions(&rows), 0, "{rows:?}");
+
+    // two real back-to-back recordings: no significant regression at the
+    // advisory threshold (the noise band absorbs scheduler jitter)
+    let mut rerun = Baseline::default();
+    rerun.insert(measure("ag-gemm", 9, &rt));
+    let rows = perf::diff(&base, &rerun, 50.0);
+    assert_eq!(
+        perf::regressions(&rows),
+        0,
+        "back-to-back identical runs must not gate: {rows:?}"
+    );
+
+    // an injected 2x slowdown of the same measurement IS flagged
+    let mut slowed = base.clone();
+    for c in &mut slowed.cases {
+        c.median_us *= 2.0;
+    }
+    let rows = perf::diff(&base, &slowed, 5.0);
+    assert_eq!(perf::regressions(&rows), 1, "{rows:?}");
+    assert!((rows[0].delta_pct - 100.0).abs() < 1e-9, "{rows:?}");
+
+    // and the baseline file format round-trips the measured cells
+    let back = Baseline::from_json(&base.to_json()).unwrap();
+    assert_eq!(back, base);
+}
